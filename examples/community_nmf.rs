@@ -1,0 +1,132 @@
+//! **End-to-end driver** (DESIGN.md): community detection with SEM-NMF on
+//! a real small workload, exercising every layer of the stack:
+//!
+//! 1. generate an SBM graph with planted communities (the workload the
+//!    paper's intro motivates: community detection on social graphs);
+//! 2. store it through the catalog: CSR image → streaming CSR→SCSR
+//!    conversion → tiled images of A and Aᵀ on the throttled store (L3
+//!    substrate + format layer);
+//! 3. run SEM-NMF (k = 16) with the factors vertically partitioned so
+//!    only 4 of 16 columns are memory-resident — every sparse product is
+//!    a semi-external SpMM, every fused update runs through the AOT PJRT
+//!    artifact (L1 Pallas kernel) when artifacts are built;
+//! 4. extract communities from the factor and score recovery against the
+//!    planted partition; log the residual curve.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example community_nmf
+//! ```
+
+use anyhow::Result;
+use sem_spmm::apps::nmf::{nmf, NmfConfig};
+use sem_spmm::format::convert;
+use sem_spmm::format::{Csr, TileFormat};
+use sem_spmm::graph::sbm;
+use sem_spmm::io::{ExtMemStore, StoreConfig};
+use sem_spmm::runtime::{XlaDenseBackend, XlaRuntime};
+use sem_spmm::spmm::{SemSource, Source, SpmmOpts};
+
+fn main() -> Result<()> {
+    let k = 16usize;
+    let n = 1usize << 15;
+    let clusters = k;
+    println!("== SEM-NMF community detection (end-to-end driver) ==");
+
+    // --- 1. Workload: SBM with k planted communities.
+    let el = sbm::generate(
+        sbm::SbmParams {
+            num_verts: n,
+            num_edges: n * 24,
+            num_clusters: clusters,
+            in_out: 8.0,
+            clustered_order: true,
+        },
+        0xC0FFEE,
+    );
+    let m = Csr::from_edgelist(&el);
+    println!("graph: {} vertices, {} edges, {clusters} planted communities", n, m.nnz());
+
+    // --- 2. Store + images (simulated SSD array).
+    let dir = std::env::temp_dir().join("sem-spmm-community");
+    let store = ExtMemStore::open(StoreConfig::paper_ssd_array(&dir))?;
+    convert::put_csr_image(&store, "a.csr", &m)?;
+    let rep = convert::convert(&store, "a.csr", "a.semm", 4096, TileFormat::Scsr)?;
+    let mt = m.transpose();
+    convert::put_csr_image(&store, "at.csr", &mt)?;
+    convert::convert(&store, "at.csr", "at.semm", 4096, TileFormat::Scsr)?;
+    println!(
+        "images on store: SCSR {} (conversion {:.2} GB/s)",
+        sem_spmm::util::human_bytes(rep.tiled_bytes),
+        rep.io_gbps
+    );
+
+    // --- 3. SEM-NMF, factors vertically partitioned (4 of 16 columns in
+    //        memory), fused updates through PJRT when available.
+    let xla = XlaRuntime::from_env().map(XlaDenseBackend::new);
+    println!(
+        "fused NMF updates: {}",
+        if xla.is_some() {
+            "AOT PJRT artifacts (L1 Pallas kernels)"
+        } else {
+            "native fallback (run `make artifacts` for the PJRT path)"
+        }
+    );
+    let a = Source::Sem(SemSource::open(&store, "a.semm")?);
+    let at = Source::Sem(SemSource::open(&store, "at.semm")?);
+    let cfg = NmfConfig {
+        k,
+        iterations: 12,
+        cols_in_mem: 4,
+        spmm: SpmmOpts::default(),
+        xla,
+        ..Default::default()
+    };
+    let res = nmf(&a, &at, &store, &cfg)?;
+    println!("residual curve ‖A − WH‖:");
+    for (i, r) in res.residuals.iter().enumerate() {
+        println!("  iter {i:>2}: {r:.2}");
+    }
+    assert!(
+        res.residuals.last().unwrap() < &res.residuals[0],
+        "NMF must reduce the residual"
+    );
+
+    // --- 4. Communities from argmax over Hᵀ rows; score recovery.
+    let ht = res.ht.load(0).and_then(|_| {
+        // Reassemble the full Hᵀ from panels.
+        let mut full = sem_spmm::matrix::DenseMatrix::zeros(n, k);
+        for q in 0..res.ht.num_panels() {
+            let p = res.ht.load(q)?;
+            full.set_col_slice(q * res.ht.panel_cols(), &p);
+        }
+        Ok(full)
+    })?;
+    let assign: Vec<usize> = (0..n)
+        .map(|v| {
+            let row = ht.row(v);
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect();
+    // Majority-label purity against the planted contiguous communities.
+    let csize = n / clusters;
+    let mut correct = 0usize;
+    for c in 0..clusters {
+        let mut counts = vec![0usize; k];
+        for v in c * csize..(c + 1) * csize {
+            counts[assign[v]] += 1;
+        }
+        correct += counts.iter().max().unwrap();
+    }
+    let purity = correct as f64 / n as f64;
+    println!("community recovery purity: {purity:.3} (chance ≈ {:.3})", 1.0 / k as f64);
+    assert!(purity > 2.0 / k as f64, "recovery must beat chance");
+    println!("end-to-end driver complete ✓");
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! PageRank on a web-graph stand-in (the paper's flagship SpMV workload,
+//! §4.1 / Fig 14): a clustered SBM "page graph", 30 iterations of
+//! SpMM-PageRank in semi-external memory keeping only one vector in
+//! memory, with the combine step offloaded to the AOT PJRT artifact when
+//! the artifacts have been built (`make artifacts`).
+//!
+//! ```sh
+//! cargo run --release --example pagerank_webgraph
+//! ```
+
+use anyhow::Result;
+use sem_spmm::apps::pagerank::{pagerank, PageRankConfig};
+use sem_spmm::coordinator::Catalog;
+use sem_spmm::graph::registry;
+use sem_spmm::io::{ExtMemStore, StoreConfig};
+use sem_spmm::runtime::{XlaDenseBackend, XlaRuntime};
+use sem_spmm::spmm::{Source, SpmmOpts};
+
+fn main() -> Result<()> {
+    let dir = std::env::temp_dir().join("sem-spmm-pagerank");
+    let store = ExtMemStore::open(StoreConfig::paper_ssd_array(&dir))?;
+    let catalog = Catalog::new(store.clone(), 4096);
+
+    // The page-graph stand-in (clustered web structure, Table 1).
+    let spec = registry::by_name("page").unwrap().shrunk(15);
+    println!("preparing {} (2^{} vertices)...", spec.name, spec.scale);
+    let imgs = catalog.ensure(&spec)?;
+    println!("  {} vertices, {} edges", imgs.num_verts, imgs.nnz);
+
+    let xla = XlaRuntime::from_env().map(XlaDenseBackend::new);
+    println!(
+        "combine step: {}",
+        if xla.is_some() {
+            "AOT PJRT artifact (pagerank_combine)"
+        } else {
+            "native (run `make artifacts` for the PJRT path)"
+        }
+    );
+
+    for vecs in [1usize, 3] {
+        let cfg = PageRankConfig {
+            iterations: 30,
+            vecs_in_mem: vecs,
+            spmm: SpmmOpts::default(),
+            xla_combine: xla.clone(),
+            ..Default::default()
+        };
+        let src = Source::Sem(catalog.open_adj(&imgs)?);
+        let (pr, stats) = pagerank(&src, &imgs.degrees, &store, &cfg)?;
+        let mut top: Vec<(usize, f32)> = pr.iter().copied().enumerate().collect();
+        top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        println!(
+            "SEM-{vecs}vec: 30 iters in {:.3}s (read {}, wrote {}, vec mem {})",
+            stats.secs,
+            sem_spmm::util::human_bytes(stats.bytes_read),
+            sem_spmm::util::human_bytes(stats.bytes_written),
+            sem_spmm::util::human_bytes(stats.vec_mem_bytes),
+        );
+        if vecs == 3 {
+            println!("top pages:");
+            for (v, score) in top.iter().take(10) {
+                println!("  v{v:<8} {score:.6}");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

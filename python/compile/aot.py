@@ -1,0 +1,109 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for Rust.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Shapes are baked into each artifact; the block contract is documented in
+`model.py` and mirrored by `rust/src/runtime/`. Running this module is
+`make artifacts`; it is a no-op when artifacts are newer than the python
+sources.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Block sizes shared with rust/src/runtime/mod.rs — keep in sync.
+GRAM_B = 4096
+NMF_B = 4096
+COO_B = 2048
+COO_T = 1024
+PR_B = 65536
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def artifact_specs():
+    """name → (function, example-arg specs)."""
+    specs = {}
+    for k in (4, 8, 16):
+        specs[f"gram_b{GRAM_B}_k{k}"] = (model.gram, [f32(GRAM_B, k)])
+        specs[f"xty_b{GRAM_B}_k{k}"] = (
+            model.xty,
+            [f32(GRAM_B, k), f32(GRAM_B, k)],
+        )
+        specs[f"nmf_h_k{k}_b{NMF_B}"] = (
+            model.nmf_update_h,
+            [f32(k, NMF_B), f32(k, NMF_B), f32(k, k)],
+        )
+        specs[f"nmf_w_k{k}_b{NMF_B}"] = (
+            model.nmf_update_w,
+            [f32(NMF_B, k), f32(NMF_B, k), f32(k, k)],
+        )
+    for p in (1, 4, 8):
+        specs[f"coo_spmm_b{COO_B}_t{COO_T}_p{p}"] = (
+            model.coo_spmm,
+            [i32(COO_B), i32(COO_B), f32(COO_B), f32(COO_T, p)],
+        )
+    specs[f"pagerank_combine_b{PR_B}"] = (
+        model.pagerank_combine,
+        [f32(PR_B, 1), f32(1, 1), f32(1, 1)],
+    )
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="emit a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, arg_specs) in artifact_specs().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in arg_specs
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {man_path} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

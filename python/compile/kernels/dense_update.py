@@ -1,0 +1,85 @@
+"""L1 Pallas kernels for the dense-algebra hot spots the applications
+offload: the fused NMF multiplicative updates and blocked Gram matrices.
+
+Fusion rationale (the L2 graph calls these instead of separate jnp ops):
+the NMF denominator `W^T W @ H` is a small-K matmul (MXU) immediately
+consumed by an elementwise multiply/divide (VPU); fusing them in one
+kernel keeps the [K, B] block resident in VMEM instead of round-tripping
+HBM three times per update.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-9
+
+
+def _nmf_h_kernel(h_ref, wta_ref, wtw_ref, o_ref):
+    h = h_ref[...]
+    wta = wta_ref[...]
+    wtw = wtw_ref[...]
+    denom = jnp.dot(wtw, h, preferred_element_type=jnp.float32) + EPS
+    o_ref[...] = h * wta / denom
+
+
+@jax.jit
+def nmf_update_h(h, wta, wtw):
+    """Fused H-update on a column block: h, wta = [K, B]; wtw = [K, K]."""
+    return pl.pallas_call(
+        _nmf_h_kernel,
+        out_shape=jax.ShapeDtypeStruct(h.shape, jnp.float32),
+        interpret=True,
+    )(h, wta, wtw)
+
+
+def _nmf_w_kernel(w_ref, aht_ref, hht_ref, o_ref):
+    w = w_ref[...]
+    aht = aht_ref[...]
+    hht = hht_ref[...]
+    denom = jnp.dot(w, hht, preferred_element_type=jnp.float32) + EPS
+    o_ref[...] = w * aht / denom
+
+
+@jax.jit
+def nmf_update_w(w, aht, hht):
+    """Fused W-update on a row block: w, aht = [B, K]; hht = [K, K]."""
+    return pl.pallas_call(
+        _nmf_w_kernel,
+        out_shape=jax.ShapeDtypeStruct(w.shape, jnp.float32),
+        interpret=True,
+    )(w, aht, hht)
+
+
+def _gram_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def gram_block(x):
+    """X^T X of one row block [B, K] → [K, K] (additive over blocks, so
+    the Rust coordinator folds arbitrarily tall X through this)."""
+    return pl.pallas_call(
+        _gram_kernel,
+        out_shape=jax.ShapeDtypeStruct((x.shape[1], x.shape[1]), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _xty_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...].T, y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit)
+def xty_block(x, y):
+    """X^T Y of row blocks [B, K], [B, M] → [K, M] (additive)."""
+    return pl.pallas_call(
+        _xty_kernel,
+        out_shape=jax.ShapeDtypeStruct((x.shape[1], y.shape[1]), jnp.float32),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+Every Pallas kernel in this package has an exact functional twin here;
+pytest (plus hypothesis sweeps) asserts they agree, and the Rust side's
+native implementations are in turn validated against the AOT artifacts
+lowered from the kernels — closing the three-layer correctness loop.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def coo_spmm_ref(rows, cols, vals, x):
+    """Reference COO-block SpMM: out[r] += v * x[c] per entry.
+
+    rows/cols: int32[B] local indices into a T-row tile (padding entries
+    carry val == 0 so they contribute nothing wherever they point).
+    vals: f32[B]; x: f32[T, P]. Returns f32[T, P].
+    """
+    t = x.shape[0]
+    gathered = vals[:, None] * x[cols]          # [B, P]
+    out = jnp.zeros((t, x.shape[1]), x.dtype)
+    return out.at[rows].add(gathered)
+
+
+def gram_ref(x):
+    """X^T X for a row block (additive over blocks)."""
+    return x.T @ x
+
+
+def xty_ref(x, y):
+    """X^T Y for row blocks with equal row counts."""
+    return x.T @ y
+
+
+def nmf_update_h_ref(h, wta, wtw):
+    """Multiplicative NMF H-update on a column block.
+
+    H' = H * (W^T A) / (W^T W H + eps); shapes: h, wta = [K, B];
+    wtw = [K, K].
+    """
+    denom = wtw @ h + EPS
+    return h * wta / denom
+
+
+def nmf_update_w_ref(w, aht, hht):
+    """Multiplicative NMF W-update on a row block.
+
+    W' = W * (A H^T) / (W H H^T + eps); shapes: w, aht = [B, K];
+    hht = [K, K].
+    """
+    denom = w @ hht + EPS
+    return w * aht / denom
+
+
+def pagerank_step_ref(contrib, damping, n):
+    """One PageRank combine: pr = (1 - d)/n + d * contrib (contrib is the
+    SpMV result of A_norm^T x). Shapes: contrib = [B, 1]."""
+    return (1.0 - damping) / n + damping * contrib

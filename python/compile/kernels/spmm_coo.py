@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: COO-block sparse × dense-block multiply.
+
+This is the compute hot spot of the paper's tile multiply, rethought for
+the TPU instead of mechanically ported (DESIGN.md §Hardware-Adaptation):
+
+* The paper's CPU kernel scatters `val · in_row(col)` into `out_row(row)`
+  per non-zero — fine on a cache-blocked CPU, terrible on a TPU, which has
+  no efficient scatter and wants MXU (systolic matmul) work.
+* Here a block of B non-zeros is expressed as **two one-hot matmuls**:
+  `G = C @ X` gathers the input rows (`C[b, t] = 1` iff `cols[b] == t`),
+  then `O = Rᵀ @ (vals ⊙ G)` scatter-accumulates (`R[b, t] = 1` iff
+  `rows[b] == t`). Both are dense [B,T]×[T,P] matmuls — pure MXU work.
+* VMEM plan for a real TPU: T is tiled into 128-column panels so each
+  one-hot panel is [B, 128] (B = 2048 → 1 MiB f32 per panel) and X/O
+  panels are [128, P]; the B dimension streams through the MXU. Under
+  `interpret=True` (the only mode the CPU PJRT plugin can execute) the
+  whole block lives in one ref; the BlockSpec below is the degenerate
+  single-panel case of that plan.
+
+Padding entries must carry `val == 0` (they then contribute nothing
+wherever their indices point).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _coo_kernel(rows_ref, cols_ref, vals_ref, x_ref, o_ref):
+    rows = rows_ref[...]
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    x = x_ref[...]
+    b = rows.shape[0]
+    t = x.shape[0]
+    # One-hot gather/scatter matrices built from iota comparisons — no
+    # dynamic indexing, so everything lowers to VPU compares + MXU matmuls.
+    ids = jax.lax.broadcasted_iota(jnp.int32, (b, t), 1)
+    c_onehot = (ids == cols[:, None]).astype(x.dtype)          # [B, T]
+    r_onehot = (ids == rows[:, None]).astype(x.dtype)          # [B, T]
+    gathered = jnp.dot(c_onehot, x, preferred_element_type=jnp.float32)
+    weighted = vals[:, None] * gathered                         # [B, P]
+    o_ref[...] = jnp.dot(
+        r_onehot.T, weighted, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("t", "p"))
+def coo_spmm(rows, cols, vals, x, *, t=None, p=None):
+    """Multiply a COO block against a dense tile.
+
+    rows/cols: int32[B] (padding rows/cols point anywhere, vals 0),
+    vals: f32[B], x: f32[T, P] → f32[T, P].
+    """
+    t = x.shape[0] if t is None else t
+    p = x.shape[1] if p is None else p
+    return pl.pallas_call(
+        _coo_kernel,
+        out_shape=jax.ShapeDtypeStruct((t, p), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(rows, cols, vals, x)
+
+
+def vmem_bytes(b: int, t: int, p: int, panel: int = 128) -> int:
+    """Estimated VMEM footprint of one panel step of the real-TPU plan:
+    two [B, panel] one-hots + [panel, P] x/o panels + [B, P] gathered."""
+    return 4 * (2 * b * panel + 2 * panel * p + b * p)
+
+
+def mxu_flops(b: int, t: int, p: int) -> int:
+    """MXU FLOPs per block under the one-hot formulation (2 matmuls)."""
+    return 2 * 2 * b * t * p

@@ -1,0 +1,67 @@
+"""L2: the JAX compute graphs the Rust coordinator offloads via PJRT.
+
+Each function here is a jit-able graph over fixed shapes that calls the
+L1 Pallas kernels; `aot.py` lowers them once to HLO text and the Rust
+runtime (`rust/src/runtime/`) loads and executes the artifacts on the
+request path — Python never runs at serve time.
+
+Blocking contract with the coordinator (shapes are baked into each
+artifact; the Rust side pads the tail block with zeros):
+
+* `gram` / `xty`      — additive over row blocks of height B.
+* `nmf_update_h`      — independent per column block of width B.
+* `nmf_update_w`      — independent per row block of height B.
+* `coo_spmm`          — one sparse tile (T rows) × B-entry COO block.
+* `pagerank_combine`  — elementwise over row blocks.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import dense_update, spmm_coo
+
+
+def gram(x):
+    """X^T X over one row block (calls the L1 gram kernel)."""
+    return (dense_update.gram_block(x),)
+
+
+def xty(x, y):
+    """X^T Y over one row block."""
+    return (dense_update.xty_block(x, y),)
+
+
+def nmf_update_h(h, wta, wtw):
+    """One fused multiplicative H-update block."""
+    return (dense_update.nmf_update_h(h, wta, wtw),)
+
+
+def nmf_update_w(w, aht, hht):
+    """One fused multiplicative W-update block."""
+    return (dense_update.nmf_update_w(w, aht, hht),)
+
+
+def coo_spmm(rows, cols, vals, x):
+    """One sparse-tile COO block multiply (calls the L1 Pallas kernel)."""
+    return (spmm_coo.coo_spmm(rows, cols, vals, x),)
+
+
+def pagerank_combine(contrib, damping, inv_n):
+    """PageRank combine step: pr = (1 - d) / n + d * contrib.
+
+    damping and inv_n are passed as [1,1] arrays so the artifact stays
+    shape-generic in the scalar parameters.
+    """
+    return ((1.0 - damping) * inv_n + damping * contrib,)
+
+
+def nmf_residual_terms(wta_blk, wtw, hht_blk):
+    """Per-block terms of ||A - WH||_F^2 = ||A||^2 - 2<W^T A, H> + <W^T W, H H^T>.
+
+    Given blocks of W^T A (= wta_blk [K,B]) and H (= hht_blk [K,B]) this
+    returns the block's contributions (<wta, h>, partial H H^T) so the
+    coordinator can fold the residual without materializing WH.
+    """
+    inner = jnp.sum(wta_blk * hht_blk)
+    hht = jnp.dot(hht_blk, hht_blk.T, preferred_element_type=jnp.float32)
+    frob_term = jnp.sum(wtw * hht)
+    return (inner, frob_term)

@@ -1,0 +1,162 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; fixed cases pin the block shapes that
+are baked into the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense_update, ref, spmm_coo
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def random_coo(rng, b, t, frac_pad=0.2):
+    rows = rng.integers(0, t, size=b).astype(np.int32)
+    cols = rng.integers(0, t, size=b).astype(np.int32)
+    vals = rng.standard_normal(b).astype(np.float32)
+    pad = rng.random(b) < frac_pad
+    vals[pad] = 0.0
+    return rows, cols, vals
+
+
+class TestCooSpmm:
+    @pytest.mark.parametrize("p", [1, 4, 8])
+    def test_matches_ref_fixed_block(self, p):
+        rng = np.random.default_rng(p)
+        rows, cols, vals = random_coo(rng, 2048, 1024)
+        x = rng.standard_normal((1024, p)).astype(np.float32)
+        got = spmm_coo.coo_spmm(rows, cols, vals, x)
+        want = ref.coo_spmm_ref(rows, cols, vals, x)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 256),
+        t=st.sampled_from([8, 32, 128]),
+        p=st.sampled_from([1, 2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_swept(self, b, t, p, seed):
+        rng = np.random.default_rng(seed)
+        rows, cols, vals = random_coo(rng, b, t)
+        x = rng.standard_normal((t, p)).astype(np.float32)
+        got = spmm_coo.coo_spmm(rows, cols, vals, x)
+        want = ref.coo_spmm_ref(rows, cols, vals, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_all_padding_gives_zero(self):
+        rows = np.zeros(64, np.int32)
+        cols = np.zeros(64, np.int32)
+        vals = np.zeros(64, np.float32)
+        x = np.ones((16, 4), np.float32)
+        got = spmm_coo.coo_spmm(rows, cols, vals, x)
+        assert np.all(np.asarray(got) == 0.0)
+
+    def test_duplicate_entries_accumulate(self):
+        rows = np.array([3, 3, 3], np.int32)
+        cols = np.array([1, 1, 2], np.int32)
+        vals = np.array([2.0, 0.5, 1.0], np.float32)
+        x = np.arange(8, dtype=np.float32).reshape(4, 2)
+        got = np.asarray(spmm_coo.coo_spmm(rows, cols, vals, x))
+        want = np.zeros((4, 2), np.float32)
+        want[3] = 2.5 * x[1] + 1.0 * x[2]
+        np.testing.assert_allclose(got, want, rtol=RTOL)
+
+    def test_vmem_estimate_scales_with_block(self):
+        small = spmm_coo.vmem_bytes(512, 1024, 4)
+        big = spmm_coo.vmem_bytes(2048, 1024, 4)
+        assert big > small
+        # Real-TPU panel plan must fit a 16 MiB VMEM comfortably.
+        assert spmm_coo.vmem_bytes(2048, 16384, 8) < 16 << 20
+
+
+class TestNmfUpdates:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.sampled_from([2, 4, 16]),
+        b=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_h_update_matches_ref(self, k, b, seed):
+        rng = np.random.default_rng(seed)
+        h = rng.random((k, b)).astype(np.float32) + 0.1
+        wta = rng.random((k, b)).astype(np.float32)
+        wtw = (rng.random((k, k)) + 0.5).astype(np.float32)
+        got = dense_update.nmf_update_h(h, wta, wtw)
+        want = ref.nmf_update_h_ref(h, wta, wtw)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.sampled_from([2, 4, 16]),
+        b=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_w_update_matches_ref(self, k, b, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.random((b, k)).astype(np.float32) + 0.1
+        aht = rng.random((b, k)).astype(np.float32)
+        hht = (rng.random((k, k)) + 0.5).astype(np.float32)
+        got = dense_update.nmf_update_w(w, aht, hht)
+        want = ref.nmf_update_w_ref(w, aht, hht)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_updates_preserve_nonnegativity(self):
+        rng = np.random.default_rng(0)
+        h = rng.random((16, 128)).astype(np.float32)
+        wta = rng.random((16, 128)).astype(np.float32)
+        wtw = rng.random((16, 16)).astype(np.float32)
+        out = np.asarray(dense_update.nmf_update_h(h, wta, wtw))
+        assert np.all(out >= 0.0)
+
+    def test_fixed_point_when_wta_equals_denominator(self):
+        # If W^T A == (W^T W) H + eps exactly, H is unchanged.
+        k, b = 4, 32
+        rng = np.random.default_rng(1)
+        h = rng.random((k, b)).astype(np.float32) + 0.5
+        wtw = np.eye(k, dtype=np.float32)
+        wta = wtw @ h + dense_update.EPS
+        out = np.asarray(dense_update.nmf_update_h(h, wta, wtw))
+        np.testing.assert_allclose(out, h, rtol=1e-5)
+
+
+class TestGramXty:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 500),
+        k=st.sampled_from([1, 3, 4, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_gram_matches_ref(self, b, k, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((b, k)).astype(np.float32)
+        got = dense_update.gram_block(x)
+        want = ref.gram_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_gram_is_additive_over_blocks(self):
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((256, 8)).astype(np.float32)
+        whole = np.asarray(dense_update.gram_block(x))
+        parts = np.asarray(dense_update.gram_block(x[:100])) + np.asarray(
+            dense_update.gram_block(x[100:])
+        )
+        np.testing.assert_allclose(whole, parts, rtol=1e-4, atol=1e-4)
+
+    def test_xty_matches_ref(self):
+        rng = np.random.default_rng(4)
+        x = rng.standard_normal((128, 4)).astype(np.float32)
+        y = rng.standard_normal((128, 6)).astype(np.float32)
+        got = dense_update.xty_block(x, y)
+        np.testing.assert_allclose(got, ref.xty_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_gram_symmetry(self):
+        rng = np.random.default_rng(5)
+        x = rng.standard_normal((64, 16)).astype(np.float32)
+        g = np.asarray(dense_update.gram_block(x))
+        np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-5)

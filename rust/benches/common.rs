@@ -1,0 +1,28 @@
+//! Shared scaffolding for the `cargo bench` targets. Each bench target is
+//! a thin front end over `sem_spmm::bench` (the paper-figure harness) at
+//! a bench-friendly scale: `cargo bench` must finish in minutes, so these
+//! run at scale 13 by default; `SEM_BENCH_SCALE` overrides.
+
+use sem_spmm::bench::Bench;
+
+pub fn bench_ctx(name: &str) -> (sem_spmm::util::TempDir, Bench) {
+    let scale: u32 = std::env::var("SEM_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(13);
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(8);
+    let dir = sem_spmm::util::tempdir();
+    let bench = Bench::new(
+        dir.path().join("store"),
+        std::path::PathBuf::from("results").join("bench"),
+        threads,
+        12.0,
+        Some(scale),
+        4096,
+    )
+    .expect("bench context");
+    eprintln!("[{name}] scale={scale} threads={threads} gbps=12");
+    (dir, bench)
+}

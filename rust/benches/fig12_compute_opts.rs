@@ -1,0 +1,7 @@
+//! `cargo bench` target for Fig 12: compute-optimization ablation.
+mod common;
+
+fn main() {
+    let (_dir, bench) = common::bench_ctx("fig12");
+    sem_spmm::bench::run(&bench, "fig12").expect("fig12");
+}

@@ -1,0 +1,7 @@
+//! `cargo bench` target for Fig 13: I/O-optimization ablation.
+mod common;
+
+fn main() {
+    let (_dir, bench) = common::bench_ctx("fig13");
+    sem_spmm::bench::run(&bench, "fig13").expect("fig13");
+}

@@ -1,0 +1,7 @@
+//! `cargo bench` target for Fig 5: SEM vs IM SpMM across dense widths.
+mod common;
+
+fn main() {
+    let (_dir, bench) = common::bench_ctx("fig5");
+    sem_spmm::bench::run(&bench, "fig5a").expect("fig5");
+}

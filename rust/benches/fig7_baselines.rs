@@ -1,0 +1,7 @@
+//! `cargo bench` target for Fig 7: IM/SEM vs MKL-like vs Tpetra-like.
+mod common;
+
+fn main() {
+    let (_dir, bench) = common::bench_ctx("fig7");
+    sem_spmm::bench::run(&bench, "fig7").expect("fig7");
+}

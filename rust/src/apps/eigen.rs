@@ -1,0 +1,382 @@
+//! Block Krylov–Schur (thick-restarted block Lanczos) eigensolver over
+//! SEM-SpMM (§4.2, Fig 15).
+//!
+//! For a symmetric adjacency matrix the Krylov–Schur method reduces to
+//! thick-restarted Lanczos. Each restart cycle:
+//!
+//! 1. **Expand** the subspace V (n×m, stored as b-column panels either in
+//!    memory — SEM-max — or on the store — SEM-min) by repeatedly
+//!    multiplying the last block with A (SEM-SpMM with p = b) and fully
+//!    reorthogonalizing against all panels (power-law spectra make
+//!    selective reorthogonalization unreliable).
+//! 2. **Rayleigh–Ritz**: T = Vᵀ A V (m×m, via one more pass of SpMM) is
+//!    diagonalized with the dense Jacobi solver; Ritz vectors U = V·Y.
+//! 3. **Thick restart**: keep the best `nev + pad` Ritz vectors as the new
+//!    basis and iterate until the wanted residuals ‖A u − θ u‖ converge.
+//!
+//! All tall algebra streams panel-by-panel through [`super::TallPanels`],
+//! so SEM-min holds only O(n·b) floats in memory while the subspace and
+//! its image under A live on the store — the paper's "both the sparse
+//! matrix and the vector subspace on SSDs".
+
+use super::TallPanels;
+use crate::io::ExtMemStore;
+use crate::matrix::{ops, DenseMatrix};
+use crate::metrics::Stopwatch;
+use crate::spmm::{engine, Source, SpmmOpts};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Subspace placement (Fig 15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubspaceMem {
+    /// Entire subspace in memory (SEM-max / IM).
+    Mem,
+    /// Subspace panels on the store (SEM-min).
+    Sem,
+}
+
+/// Eigensolver configuration.
+#[derive(Debug, Clone)]
+pub struct EigenConfig {
+    /// Wanted eigenpairs (largest algebraic).
+    pub nev: usize,
+    /// Block size (the paper's KrylovSchur updates 1–4 vectors at a time).
+    pub block: usize,
+    /// Max subspace dimension (multiple of `block`; default 4·nev).
+    pub subspace: usize,
+    pub tol: f64,
+    pub max_restarts: usize,
+    pub placement: SubspaceMem,
+    pub spmm: SpmmOpts,
+    pub seed: u64,
+}
+
+impl Default for EigenConfig {
+    fn default() -> Self {
+        EigenConfig {
+            nev: 8,
+            block: 4,
+            subspace: 32,
+            tol: 1e-6,
+            max_restarts: 60,
+            placement: SubspaceMem::Mem,
+            spmm: SpmmOpts::default(),
+            seed: 0xE16E,
+        }
+    }
+}
+
+/// Result: eigenvalues (descending), residuals, and run stats.
+#[derive(Debug, Clone)]
+pub struct EigenResult {
+    pub eigenvalues: Vec<f64>,
+    pub residuals: Vec<f64>,
+    pub restarts: usize,
+    pub secs: f64,
+    pub spmm_calls: usize,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+/// Compute the `nev` largest-algebraic eigenpairs of a symmetric sparse
+/// matrix. Returns eigenvalues; eigenvectors stay in `v_out` panels when
+/// provided.
+pub fn eigensolve(
+    src: &Source,
+    store: &Arc<ExtMemStore>,
+    cfg: &EigenConfig,
+) -> Result<EigenResult> {
+    let meta = src.meta().clone();
+    let n = meta.nrows;
+    if meta.ncols != n {
+        bail!("eigensolver needs a square (symmetric) matrix");
+    }
+    let b = cfg.block.max(1);
+    let m = cfg.subspace.max(2 * b);
+    if m % b != 0 {
+        bail!("subspace ({m}) must be a multiple of block ({b})");
+    }
+    let np = m / b;
+    let keep_panels = (cfg.nev.div_ceil(b) + 1).min(np - 1);
+    let in_mem = cfg.placement == SubspaceMem::Mem;
+
+    let read0 = store.stats.bytes_read.get();
+    let written0 = store.stats.bytes_written.get();
+    let sw = Stopwatch::start();
+    let mut spmm_calls = 0usize;
+
+    let mut v = TallPanels::create(store, "eigen.V", n, b, np, in_mem)?;
+    let mut av = TallPanels::create(store, "eigen.AV", n, b, np, in_mem)?;
+
+    // Initial block: random, orthonormalized.
+    {
+        let mut p0 = DenseMatrix::random(n, b, cfg.seed);
+        for val in &mut p0.data {
+            *val -= 0.5;
+        }
+        ops::orthonormalize(&mut p0, None);
+        v.store(0, &p0)?;
+    }
+    let mut active = 1usize; // panels currently valid
+
+    let mut eigenvalues = Vec::new();
+    let mut residuals = Vec::new();
+    let mut restarts = 0usize;
+    let mut converged = false;
+
+    while restarts < cfg.max_restarts && !converged {
+        restarts += 1;
+        // --- 1. Expansion: grow to the full subspace.
+        while active < np {
+            let last = v.load(active - 1)?;
+            let (mut w, _) = engine::spmm_out(src, &last, &cfg.spmm)?;
+            spmm_calls += 1;
+            // Full reorthogonalization against all existing panels, twice.
+            for _pass in 0..2 {
+                for i in 0..active {
+                    let pi = v.load(i)?;
+                    let c = ops::xty(&pi, &w);
+                    let corr = ops::mul_small(&pi, &c);
+                    ops::axpy(&mut w, -1.0, &corr);
+                }
+            }
+            let norms = ops::orthonormalize(&mut w, None);
+            // Rank collapse → reseed the dead directions randomly.
+            if norms.iter().any(|&x| x < 1e-10) {
+                let mut r = DenseMatrix::random(n, b, cfg.seed ^ (active as u64) << 8);
+                for val in &mut r.data {
+                    *val -= 0.5;
+                }
+                for (j, &x) in norms.iter().enumerate() {
+                    if x < 1e-10 {
+                        for row in 0..n {
+                            w.set(row, j, r.get(row, j));
+                        }
+                    }
+                }
+                for _pass in 0..2 {
+                    for i in 0..active {
+                        let pi = v.load(i)?;
+                        let c = ops::xty(&pi, &w);
+                        let corr = ops::mul_small(&pi, &c);
+                        ops::axpy(&mut w, -1.0, &corr);
+                    }
+                }
+                ops::orthonormalize(&mut w, None);
+            }
+            v.store(active, &w)?;
+            active += 1;
+        }
+
+        // --- 2. Rayleigh–Ritz: T = Vᵀ (A V).
+        let mut t = DenseMatrix::zeros(m, m);
+        for j in 0..np {
+            let pj = v.load(j)?;
+            let (apj, _) = engine::spmm_out(src, &pj, &cfg.spmm)?;
+            spmm_calls += 1;
+            av.store(j, &apj)?;
+            for i in 0..np {
+                let pi = v.load(i)?;
+                let blk = ops::xty(&pi, &apj); // b×b
+                for bi in 0..b {
+                    for bj in 0..b {
+                        t.set(i * b + bi, j * b + bj, blk.get(bi, bj));
+                    }
+                }
+            }
+        }
+        // Symmetrize (A is symmetric; numerical noise breaks it slightly).
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let s = 0.5 * (t.get(i, j) + t.get(j, i));
+                t.set(i, j, s);
+                t.set(j, i, s);
+            }
+        }
+        let (theta, y) = ops::jacobi_eig(&t); // ascending
+        // Order of interest: largest algebraic first.
+        let order: Vec<usize> = (0..m).rev().collect();
+
+        // --- 3. Ritz vectors for the kept window + residuals.
+        let keep = keep_panels * b;
+        let mut y_keep = DenseMatrix::zeros(m, keep);
+        for (col, &src_col) in order.iter().take(keep).enumerate() {
+            for row in 0..m {
+                y_keep.set(row, col, y.get(row, src_col));
+            }
+        }
+        // U = V · Y_keep, AU = AV · Y_keep, streamed panel-by-panel.
+        let mut u = TallPanels::create(store, "eigen.U", n, b, keep_panels, in_mem)?;
+        let mut au_res: Vec<f64> = vec![0.0; keep];
+        for q in 0..keep_panels {
+            let yq = y_keep.col_slice(q * b, (q + 1) * b);
+            let mut acc_u = DenseMatrix::zeros(n, b);
+            let mut acc_au = DenseMatrix::zeros(n, b);
+            for j in 0..np {
+                let yblk = {
+                    // rows j*b..(j+1)*b of yq
+                    let mut blk = DenseMatrix::zeros(b, b);
+                    for bi in 0..b {
+                        for bj in 0..b {
+                            blk.set(bi, bj, yq.get(j * b + bi, bj));
+                        }
+                    }
+                    blk
+                };
+                let pj = v.load(j)?;
+                ops::axpy(&mut acc_u, 1.0, &ops::mul_small(&pj, &yblk));
+                let apj = av.load(j)?;
+                ops::axpy(&mut acc_au, 1.0, &ops::mul_small(&apj, &yblk));
+            }
+            // Residual per kept column: ‖AU_i − θ_i U_i‖.
+            for bj in 0..b {
+                let col = q * b + bj;
+                let th = theta[order[col]];
+                let mut s = 0f64;
+                for row in 0..n {
+                    let d = acc_au.get(row, bj) as f64 - th * acc_u.get(row, bj) as f64;
+                    s += d * d;
+                }
+                au_res[col] = s.sqrt();
+            }
+            u.store(q, &acc_u)?;
+        }
+
+        eigenvalues = order
+            .iter()
+            .take(cfg.nev)
+            .map(|&i| theta[i])
+            .collect();
+        residuals = au_res[..cfg.nev.min(keep)].to_vec();
+        let scale = eigenvalues
+            .iter()
+            .fold(1f64, |a, &x| a.max(x.abs()));
+        converged = residuals.iter().all(|&r| r < cfg.tol * scale);
+
+        // --- Thick restart: new basis = kept Ritz vectors.
+        for q in 0..keep_panels {
+            let mut pq = u.load(q)?;
+            // Re-orthonormalize defensively.
+            if q > 0 {
+                for i in 0..q {
+                    let pi = v.load(i)?;
+                    let c = ops::xty(&pi, &pq);
+                    let corr = ops::mul_small(&pi, &c);
+                    ops::axpy(&mut pq, -1.0, &corr);
+                }
+            }
+            ops::orthonormalize(&mut pq, None);
+            v.store(q, &pq)?;
+        }
+        active = keep_panels;
+    }
+
+    Ok(EigenResult {
+        eigenvalues,
+        residuals,
+        restarts,
+        secs: sw.secs(),
+        spmm_calls,
+        bytes_read: store.stats.bytes_read.get() - read0,
+        bytes_written: store.stats.bytes_written.get() - written0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::tiled::TiledImage;
+    use crate::format::{Csr, TileFormat};
+    use crate::graph::rmat;
+    use crate::io::StoreConfig;
+
+    /// Dense oracle: eigenvalues via Jacobi on the dense adjacency.
+    fn dense_eigs(m: &Csr) -> Vec<f64> {
+        let n = m.nrows;
+        let mut a = DenseMatrix::zeros(n, n);
+        for r in 0..n {
+            for &c in m.row(r) {
+                a.set(r, c as usize, 1.0);
+            }
+        }
+        let (mut ev, _) = ops::jacobi_eig(&a);
+        ev.reverse(); // descending
+        ev
+    }
+
+    fn sym_graph(scale: u32, edges: usize, seed: u64) -> Csr {
+        let mut el = rmat::generate(scale, edges, rmat::RmatParams::default(), seed);
+        el.symmetrize();
+        Csr::from_edgelist(&el)
+    }
+
+    #[test]
+    fn matches_dense_oracle_both_placements() {
+        let m = sym_graph(8, 1500, 3); // 256 vertices
+        let want = dense_eigs(&m);
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        for placement in [SubspaceMem::Mem, SubspaceMem::Sem] {
+            let cfg = EigenConfig {
+                nev: 4,
+                block: 2,
+                subspace: 16,
+                tol: 1e-7,
+                placement,
+                spmm: SpmmOpts {
+                    threads: 2,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let res = eigensolve(&Source::Mem(img.clone()), &store, &cfg).unwrap();
+            for (i, ev) in res.eigenvalues.iter().enumerate() {
+                assert!(
+                    (ev - want[i]).abs() < 1e-3 * want[0].abs(),
+                    "{placement:?} λ{i}: {ev} vs {}",
+                    want[i]
+                );
+            }
+            if placement == SubspaceMem::Sem {
+                assert!(res.bytes_written > 0, "SEM-min must write the subspace");
+            }
+        }
+    }
+
+    #[test]
+    fn residuals_converge() {
+        let m = sym_graph(9, 3000, 7);
+        let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let cfg = EigenConfig {
+            nev: 3,
+            block: 1,
+            subspace: 12,
+            tol: 1e-6,
+            ..Default::default()
+        };
+        let res = eigensolve(&Source::Mem(img), &store, &cfg).unwrap();
+        let scale = res.eigenvalues[0].abs();
+        for r in &res.residuals {
+            assert!(r / scale < 1e-5, "residual {r}");
+        }
+        // Eigenvalues descending.
+        for w in res.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn rejects_rectangular() {
+        let mut pairs = vec![(0u32, 1u32), (1, 2)];
+        pairs.sort_unstable();
+        let m = Csr::from_sorted_pairs(3, 5, &pairs);
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        assert!(eigensolve(&Source::Mem(img), &store, &EigenConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! The paper's three applications (§4): PageRank, a Krylov–Schur
+//! eigensolver, and non-negative matrix factorization. Each demonstrates a
+//! different memory-placement strategy for SEM-SpMM:
+//!
+//! * [`pagerank`] — dense matrices are single vectors; the input vector
+//!   must be in memory, the output and degree vectors may live on the
+//!   store (Fig 14's SEM-1vec/2vec/3vec).
+//! * [`eigen`] — the vector subspace is a tall n×m matrix updated in
+//!   blocks of 1–4 columns; it can live entirely on the store (SEM-min)
+//!   or entirely in memory (SEM-max) (Fig 15).
+//! * [`nmf`] — the factors W, H are as large as the sparse matrix and are
+//!   vertically partitioned; the number of factor columns kept in memory
+//!   is the Fig 16 knob.
+//!
+//! [`TallPanels`] is the shared abstraction: a tall dense matrix stored as
+//! fixed-width column panels either in memory or on the store, so the
+//! apps' streaming algebra is written once against both placements.
+
+pub mod eigen;
+pub mod nmf;
+pub mod pagerank;
+
+use crate::io::ExtMemStore;
+use crate::matrix::{DenseMatrix, SemDense};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A tall n×(panels·b) matrix stored as n×b column panels, either in
+/// memory or on the store. Apps stream panels through memory one (or a
+/// few) at a time, which is exactly the paper's memory model.
+#[derive(Debug, Clone)]
+pub enum TallPanels {
+    Mem(Vec<DenseMatrix>),
+    Sem(SemDense),
+}
+
+impl TallPanels {
+    /// Create with `num_panels` panels of shape n×b.
+    pub fn create(
+        store: &Arc<ExtMemStore>,
+        name: &str,
+        n: usize,
+        b: usize,
+        num_panels: usize,
+        in_mem: bool,
+    ) -> Result<TallPanels> {
+        if in_mem {
+            Ok(TallPanels::Mem(
+                (0..num_panels).map(|_| DenseMatrix::zeros(n, b)).collect(),
+            ))
+        } else {
+            Ok(TallPanels::Sem(SemDense::create(
+                store,
+                name,
+                n,
+                b * num_panels,
+                b,
+            )?))
+        }
+    }
+
+    pub fn num_panels(&self) -> usize {
+        match self {
+            TallPanels::Mem(v) => v.len(),
+            TallPanels::Sem(sd) => sd.num_panels(),
+        }
+    }
+
+    pub fn panel_cols(&self) -> usize {
+        match self {
+            TallPanels::Mem(v) => v.first().map(|m| m.ncols).unwrap_or(0),
+            TallPanels::Sem(sd) => sd.panel_cols,
+        }
+    }
+
+    pub fn nrows(&self) -> usize {
+        match self {
+            TallPanels::Mem(v) => v.first().map(|m| m.nrows).unwrap_or(0),
+            TallPanels::Sem(sd) => sd.nrows,
+        }
+    }
+
+    /// Load panel `i` into memory (In-EM traffic in SEM placement).
+    pub fn load(&self, i: usize) -> Result<DenseMatrix> {
+        match self {
+            TallPanels::Mem(v) => Ok(v[i].clone()),
+            TallPanels::Sem(sd) => sd.load_panel(i),
+        }
+    }
+
+    /// Store panel `i` (Out-EM traffic in SEM placement).
+    pub fn store(&mut self, i: usize, m: &DenseMatrix) -> Result<()> {
+        match self {
+            TallPanels::Mem(v) => {
+                v[i] = m.clone();
+                Ok(())
+            }
+            TallPanels::Sem(sd) => sd.store_panel(i, m),
+        }
+    }
+
+    /// Logical bytes held in memory by this placement (Fig 8/15 metering).
+    pub fn mem_bytes(&self) -> u64 {
+        match self {
+            TallPanels::Mem(v) => v.iter().map(|m| m.footprint_bytes()).sum(),
+            TallPanels::Sem(_) => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::StoreConfig;
+
+    #[test]
+    fn mem_and_sem_placements_agree() {
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        for in_mem in [true, false] {
+            let mut tp =
+                TallPanels::create(&store, "v", 50, 2, 3, in_mem).unwrap();
+            assert_eq!(tp.num_panels(), 3);
+            assert_eq!(tp.panel_cols(), 2);
+            let p = DenseMatrix::random(50, 2, 7);
+            tp.store(1, &p).unwrap();
+            assert_eq!(tp.load(1).unwrap(), p);
+            // Untouched panels are zero.
+            assert!(tp.load(0).unwrap().data.iter().all(|&v| v == 0.0));
+            assert_eq!(tp.mem_bytes() > 0, in_mem);
+        }
+    }
+}

@@ -1,0 +1,390 @@
+//! Non-negative matrix factorization over SEM-SpMM (§4.3, Fig 16).
+//!
+//! Lee–Seung multiplicative updates for `A ≈ W H` with A an n×n sparse
+//! adjacency matrix, W (n×k) and H (k×n). H is held transposed (Hᵀ, n×k)
+//! so both factors are tall-skinny and both updates take the same form:
+//!
+//! ```text
+//! P  = Aᵀ W            (SEM-SpMM)        Hᵀ ← Hᵀ ∘ P ⊘ (Hᵀ·WᵀW + ε)
+//! Q  = A Hᵀ            (SEM-SpMM)        W  ← W  ∘ Q ⊘ (W·HHᵀ + ε)
+//! ```
+//!
+//! The factors can be as large as the sparse matrix, so W and Hᵀ are
+//! stored as column panels of `cols_in_mem` columns ([`super::TallPanels`];
+//! Fig 16's memory knob). With panels narrower than k, the denominator
+//! `W·HHᵀ` needs every panel of W per output panel — the vertical-
+//! partitioning locality loss the paper measures (Fig 11 Vert-part).
+//!
+//! The fused elementwise update runs natively or through the AOT PJRT
+//! artifact (`nmf_w_k*` — the L1 Pallas kernel) when the full factor is
+//! memory-resident and k is a supported artifact shape.
+
+use super::TallPanels;
+use crate::io::ExtMemStore;
+use crate::matrix::{ops, DenseMatrix};
+use crate::metrics::Stopwatch;
+use crate::runtime::XlaDenseBackend;
+use crate::spmm::{engine, Source, SpmmOpts};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+const EPS: f32 = 1e-9;
+
+/// NMF configuration.
+#[derive(Debug, Clone)]
+pub struct NmfConfig {
+    /// Factorization rank.
+    pub k: usize,
+    pub iterations: usize,
+    /// Factor columns kept in memory (panel width; must divide k).
+    /// `cols_in_mem == k` keeps the factors fully in memory.
+    pub cols_in_mem: usize,
+    pub spmm: SpmmOpts,
+    /// Offload the fused update to the PJRT artifact when possible.
+    pub xla: Option<XlaDenseBackend>,
+    pub seed: u64,
+}
+
+impl Default for NmfConfig {
+    fn default() -> Self {
+        NmfConfig {
+            k: 16,
+            iterations: 10,
+            cols_in_mem: 16,
+            spmm: SpmmOpts::default(),
+            xla: None,
+            seed: 0x17F,
+        }
+    }
+}
+
+/// Per-run result.
+#[derive(Debug)]
+pub struct NmfResult {
+    /// ‖A − WH‖_F after each iteration.
+    pub residuals: Vec<f64>,
+    pub secs_per_iter: Vec<f64>,
+    pub secs: f64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub w: TallPanels,
+    pub ht: TallPanels,
+}
+
+/// Run NMF. `src_a` is the adjacency image, `src_at` its transpose image,
+/// `nnz` the number of non-zeros (for the residual).
+pub fn nmf(
+    src_a: &Source,
+    src_at: &Source,
+    store: &Arc<ExtMemStore>,
+    cfg: &NmfConfig,
+) -> Result<NmfResult> {
+    let n = src_a.meta().nrows;
+    if src_a.meta().ncols != n || src_at.meta().nrows != n || src_at.meta().ncols != n {
+        bail!("nmf needs square A and Aᵀ images of equal size");
+    }
+    let k = cfg.k;
+    let w_cols = cfg.cols_in_mem;
+    if w_cols == 0 || k % w_cols != 0 {
+        bail!("cols_in_mem ({w_cols}) must divide k ({k})");
+    }
+    let np = k / w_cols;
+    let in_mem = np == 1;
+    let nnz = src_a.meta().nnz as f64;
+
+    let read0 = store.stats.bytes_read.get();
+    let written0 = store.stats.bytes_written.get();
+    let sw = Stopwatch::start();
+
+    let mut w = TallPanels::create(store, "nmf.W", n, w_cols, np, in_mem)?;
+    let mut ht = TallPanels::create(store, "nmf.Ht", n, w_cols, np, in_mem)?;
+    {
+        // Initialize from a full-width random factor sliced into panels so
+        // the starting point (and hence the whole trajectory) is identical
+        // for every `cols_in_mem` setting.
+        let w0 = DenseMatrix::random(n, k, cfg.seed);
+        let h0 = DenseMatrix::random(n, k, cfg.seed ^ 0x8000);
+        for q in 0..np {
+            w.store(q, &w0.col_slice(q * w_cols, (q + 1) * w_cols))?;
+            ht.store(q, &h0.col_slice(q * w_cols, (q + 1) * w_cols))?;
+        }
+    }
+
+    let mut residuals = Vec::with_capacity(cfg.iterations);
+    let mut secs_per_iter = Vec::with_capacity(cfg.iterations);
+    for _it in 0..cfg.iterations {
+        let isw = Stopwatch::start();
+        // --- H-side update: P = Aᵀ W; Hᵀ ← Hᵀ ∘ P ⊘ (Hᵀ WᵀW + ε).
+        let wtw = panels_gram(&w)?;
+        update_factor(src_at, &w, &mut ht, &wtw, cfg)?;
+
+        // --- W-side update: Q = A Hᵀ; W ← W ∘ Q ⊘ (W HHᵀ + ε).
+        let hht = panels_gram(&ht)?;
+        update_factor(src_a, &ht, &mut w, &hht, cfg)?;
+
+        // --- Residual: ‖A − WH‖² = nnz − 2⟨AᵀW, Hᵀ⟩ + ⟨WᵀW, HHᵀ⟩.
+        let wtw = panels_gram(&w)?;
+        let hht = panels_gram(&ht)?;
+        let mut inner = 0f64; // ⟨Aᵀ W, Hᵀ⟩
+        for q in 0..np {
+            let wq = w.load(q)?;
+            let (pq, _) = engine::spmm_out(src_at, &wq, &cfg.spmm)?;
+            let hq = ht.load(q)?;
+            inner += ops::dot(&pq, &hq);
+        }
+        let frob_term: f64 = wtw
+            .data
+            .iter()
+            .zip(&hht.data)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        let sq = (nnz - 2.0 * inner + frob_term).max(0.0);
+        residuals.push(sq.sqrt());
+        secs_per_iter.push(isw.secs());
+    }
+
+    Ok(NmfResult {
+        residuals,
+        secs_per_iter,
+        secs: sw.secs(),
+        bytes_read: store.stats.bytes_read.get() - read0,
+        bytes_written: store.stats.bytes_written.get() - written0,
+        w,
+        ht,
+    })
+}
+
+/// Gram matrix of a panel-stored tall factor (k×k), accumulating panel
+/// cross-terms two panels at a time.
+fn panels_gram(x: &TallPanels) -> Result<DenseMatrix> {
+    let b = x.panel_cols();
+    let k = b * x.num_panels();
+    let mut g = DenseMatrix::zeros(k, k);
+    for q in 0..x.num_panels() {
+        let xq = x.load(q)?;
+        for r in q..x.num_panels() {
+            let blk = if r == q {
+                ops::gram(&xq)
+            } else {
+                let xr = x.load(r)?;
+                ops::xty(&xq, &xr)
+            };
+            for i in 0..b {
+                for j in 0..b {
+                    g.set(q * b + i, r * b + j, blk.get(i, j));
+                    g.set(r * b + j, q * b + i, blk.get(i, j));
+                }
+            }
+        }
+    }
+    Ok(g)
+}
+
+/// One multiplicative update of `target` (tall n×k in panels):
+/// `target ← target ∘ (M · other) ⊘ (target · G + ε)` where `M` is the
+/// sparse image, `other` the opposite factor, and `G` its Gram matrix.
+fn update_factor(
+    msrc: &Source,
+    other: &TallPanels,
+    target: &mut TallPanels,
+    g: &DenseMatrix,
+    cfg: &NmfConfig,
+) -> Result<()> {
+    let b = target.panel_cols();
+    let np = target.num_panels();
+    let k = b * np;
+
+    // Fast path: fully in memory, supported k → fused (PJRT or native).
+    if np == 1 {
+        let t = target.load(0)?;
+        let o = other.load(0)?;
+        let (num, _) = engine::spmm_out(msrc, &o, &cfg.spmm)?;
+        let updated = match &cfg.xla {
+            Some(be) if XlaDenseBackend::supports_k(k) => be.nmf_update_w(&t, &num, g)?,
+            _ => fused_update_native(&t, &num, g),
+        };
+        target.store(0, &updated)?;
+        return Ok(());
+    }
+
+    // Panelized path: numerator per panel is independent; the denominator
+    // needs every panel of `target` (vertical-partitioning locality loss).
+    let mut new_panels = Vec::with_capacity(np);
+    for q in 0..np {
+        let oq = other.load(q)?;
+        let (num_q, _) = engine::spmm_out(msrc, &oq, &cfg.spmm)?;
+        // D_q = Σ_r target_r · G[rb.., qb..]
+        let mut denom = DenseMatrix::zeros(target.nrows(), b);
+        for r in 0..np {
+            let tr = target.load(r)?;
+            let mut gblk = DenseMatrix::zeros(b, b);
+            for i in 0..b {
+                for j in 0..b {
+                    gblk.set(i, j, g.get(r * b + i, q * b + j));
+                }
+            }
+            ops::axpy(&mut denom, 1.0, &ops::mul_small(&tr, &gblk));
+        }
+        let tq = target.load(q)?;
+        let mut out = DenseMatrix::zeros(target.nrows(), b);
+        for i in 0..out.data.len() {
+            out.data[i] = tq.data[i] * num_q.data[i] / (denom.data[i] + EPS);
+        }
+        new_panels.push(out);
+    }
+    for (q, p) in new_panels.into_iter().enumerate() {
+        target.store(q, &p)?;
+    }
+    Ok(())
+}
+
+/// Native fused update: `t ∘ num ⊘ (t · G + ε)`.
+fn fused_update_native(t: &DenseMatrix, num: &DenseMatrix, g: &DenseMatrix) -> DenseMatrix {
+    let denom = ops::mul_small(t, g);
+    let mut out = DenseMatrix::zeros(t.nrows, t.ncols);
+    for i in 0..out.data.len() {
+        out.data[i] = t.data[i] * num.data[i] / (denom.data[i] + EPS);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::tiled::TiledImage;
+    use crate::format::{Csr, TileFormat};
+    use crate::graph::rmat;
+    use crate::io::StoreConfig;
+
+    fn setup(scale: u32, edges: usize) -> (Arc<TiledImage>, Arc<TiledImage>, usize) {
+        let el = rmat::generate(scale, edges, rmat::RmatParams::default(), 31);
+        let m = Csr::from_edgelist(&el);
+        let mt = m.transpose();
+        (
+            Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr)),
+            Arc::new(TiledImage::build(&mt, 128, TileFormat::Scsr)),
+            m.nnz(),
+        )
+    }
+
+    #[test]
+    fn residual_decreases() {
+        let (a, at, _) = setup(8, 2000);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let cfg = NmfConfig {
+            k: 8,
+            iterations: 6,
+            cols_in_mem: 8,
+            spmm: SpmmOpts {
+                threads: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let res = nmf(&Source::Mem(a), &Source::Mem(at), &store, &cfg).unwrap();
+        assert_eq!(res.residuals.len(), 6);
+        for w in res.residuals.windows(2) {
+            assert!(
+                w[1] <= w[0] * 1.001,
+                "residual must not increase: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn panelized_matches_full_memory() {
+        let (a, at, _) = setup(7, 900);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let run = |cols: usize| {
+            let cfg = NmfConfig {
+                k: 4,
+                iterations: 4,
+                cols_in_mem: cols,
+                spmm: SpmmOpts::sequential(),
+                ..Default::default()
+            };
+            nmf(&Source::Mem(a.clone()), &Source::Mem(at.clone()), &store, &cfg)
+                .unwrap()
+                .residuals
+        };
+        let full = run(4);
+        let panel2 = run(2);
+        let panel1 = run(1);
+        for i in 0..full.len() {
+            assert!(
+                (full[i] - panel2[i]).abs() < 1e-2 * full[i].max(1.0),
+                "iter {i}: {} vs {}",
+                full[i],
+                panel2[i]
+            );
+            assert!((full[i] - panel1[i]).abs() < 1e-2 * full[i].max(1.0));
+        }
+    }
+
+    #[test]
+    fn panelized_run_touches_store() {
+        let (a, at, _) = setup(7, 800);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let cfg = NmfConfig {
+            k: 4,
+            iterations: 2,
+            cols_in_mem: 2,
+            spmm: SpmmOpts::sequential(),
+            ..Default::default()
+        };
+        let res = nmf(&Source::Mem(a), &Source::Mem(at), &store, &cfg).unwrap();
+        assert!(res.bytes_read > 0 && res.bytes_written > 0);
+    }
+
+    #[test]
+    fn xla_fused_update_matches_native() {
+        let Some(rt) = crate::runtime::XlaRuntime::from_env() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (a, at, _) = setup(7, 900);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let base = NmfConfig {
+            k: 16,
+            iterations: 3,
+            cols_in_mem: 16,
+            spmm: SpmmOpts::sequential(),
+            ..Default::default()
+        };
+        let native = nmf(&Source::Mem(a.clone()), &Source::Mem(at.clone()), &store, &base)
+            .unwrap()
+            .residuals;
+        let xla_cfg = NmfConfig {
+            xla: Some(XlaDenseBackend::new(rt)),
+            ..base
+        };
+        let xla = nmf(&Source::Mem(a), &Source::Mem(at), &store, &xla_cfg)
+            .unwrap()
+            .residuals;
+        for (n, x) in native.iter().zip(&xla) {
+            assert!(
+                (n - x).abs() < 1e-2 * n.max(1.0),
+                "native {n} vs xla {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_panel_width_rejected() {
+        let (a, at, _) = setup(6, 300);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let cfg = NmfConfig {
+            k: 16,
+            cols_in_mem: 3,
+            ..Default::default()
+        };
+        assert!(nmf(&Source::Mem(a), &Source::Mem(at), &store, &cfg).is_err());
+    }
+}

@@ -1,0 +1,316 @@
+//! SpMM-based PageRank (§4.1, Fig 14).
+//!
+//! `pr' = (1−d)/N + d · A (pr ⊘ L)` where `A[dst][src] = 1` for an edge
+//! `src → dst` and `L` is the out-degree vector. Each iteration is one
+//! SEM-SpMV plus elementwise work.
+//!
+//! The Fig 14 memory knob (`vecs_in_mem`):
+//! * **3** — input, output and degree vectors in memory.
+//! * **2** — degree vector streamed from the store every iteration.
+//! * **1** — only the input vector in memory: the output is streamed to
+//!   the store and read back as the next iteration's input, and the
+//!   degree vector is streamed too.
+//!
+//! All three modes compute identical values; they differ only in I/O
+//! traffic — which is what the figure shows.
+
+use crate::io::{ExtMemStore, MergedWriter};
+use crate::matrix::NumaDense;
+use crate::metrics::Stopwatch;
+use crate::runtime::XlaDenseBackend;
+use crate::spmm::{engine, OutputSink, Source, SpmmOpts};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// PageRank configuration.
+#[derive(Debug, Clone)]
+pub struct PageRankConfig {
+    pub iterations: usize,
+    pub damping: f32,
+    /// 1, 2 or 3 — vectors kept in memory (see module docs).
+    pub vecs_in_mem: usize,
+    pub spmm: SpmmOpts,
+    /// Offload the combine step to the AOT PJRT artifact when available.
+    pub xla_combine: Option<XlaDenseBackend>,
+}
+
+impl Default for PageRankConfig {
+    fn default() -> Self {
+        PageRankConfig {
+            iterations: 30,
+            damping: 0.85,
+            vecs_in_mem: 3,
+            spmm: SpmmOpts::default(),
+            xla_combine: None,
+        }
+    }
+}
+
+/// Run statistics.
+#[derive(Debug, Clone, Default)]
+pub struct PageRankStats {
+    pub secs: f64,
+    pub iters: usize,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Logical memory held for vectors (the Fig 14 memory story).
+    pub vec_mem_bytes: u64,
+}
+
+/// Degree-vector store object name used by the SEM modes.
+const DEG_OBJ: &str = "pagerank.deg";
+const OUT_OBJ: &str = "pagerank.out";
+
+/// Run PageRank over an adjacency image (`row = dst`, `col = src`).
+/// `out_degrees[v]` is the out-degree of `v`.
+pub fn pagerank(
+    src: &Source,
+    out_degrees: &[u32],
+    store: &Arc<ExtMemStore>,
+    cfg: &PageRankConfig,
+) -> Result<(Vec<f32>, PageRankStats)> {
+    let meta = src.meta().clone();
+    let n = meta.nrows;
+    if meta.ncols != n || out_degrees.len() != n {
+        bail!("pagerank needs a square adjacency matrix and n degrees");
+    }
+    if !(1..=3).contains(&cfg.vecs_in_mem) {
+        bail!("vecs_in_mem must be 1..=3");
+    }
+    let read0 = store.stats.bytes_read.get();
+    let written0 = store.stats.bytes_written.get();
+    let sw = Stopwatch::start();
+
+    // Inverse degrees; dangling vertices contribute nothing.
+    let inv_deg: Vec<f32> = out_degrees
+        .iter()
+        .map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 })
+        .collect();
+    // SEM modes keep the degree vector on the store.
+    if cfg.vecs_in_mem < 3 {
+        let mut bytes = Vec::with_capacity(n * 4);
+        for &v in &inv_deg {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        store.put(DEG_OBJ, &bytes)?;
+    }
+
+    let ncfg = engine::numa_config(meta.tile, n, &cfg.spmm);
+    let mut x = NumaDense::zeros(n, 1, ncfg);
+    let pr0 = 1.0 / n as f32;
+    x.fill(pr0);
+
+    let mut vec_mem = x.footprint_bytes();
+    match cfg.vecs_in_mem {
+        3 => vec_mem += 2 * (n as u64) * 4, // output + degree in memory
+        2 => vec_mem += (n as u64) * 4,     // output in memory
+        _ => {}
+    }
+
+    const BLK: usize = 1 << 16;
+    let mut deg_blk = vec![0u8; BLK * 4];
+    for _iter in 0..cfg.iterations {
+        // Normalize the input vector by out-degree, streaming the degree
+        // vector from the store when it is not memory-resident.
+        if cfg.vecs_in_mem < 3 {
+            let degf = store.open_file(DEG_OBJ)?;
+            let mut r = 0;
+            while r < n {
+                let hi = (r + BLK).min(n);
+                let nb = (hi - r) * 4;
+                degf.read_at((r * 4) as u64, &mut deg_blk[..nb])?;
+                for i in r..hi {
+                    let d = f32::from_le_bytes(
+                        deg_blk[(i - r) * 4..(i - r) * 4 + 4].try_into().unwrap(),
+                    );
+                    x.row_mut(i)[0] *= d;
+                }
+                r = hi;
+            }
+        } else {
+            for i in 0..n {
+                x.row_mut(i)[0] *= inv_deg[i];
+            }
+        }
+
+        // contrib = A · x̂
+        let contrib: Vec<f32> = if cfg.vecs_in_mem == 1 {
+            // Output streamed to the store, then read back.
+            let outf = store.create_file(OUT_OBJ)?;
+            let w = MergedWriter::new(outf, 4 << 20);
+            crate::spmm::spmm(src, &x, &cfg.spmm, &OutputSink::Sem(&w))?;
+            w.finish()?;
+            let bytes = store.get(OUT_OBJ)?;
+            bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect()
+        } else {
+            let out = NumaDense::zeros(n, 1, ncfg);
+            crate::spmm::spmm(src, &x, &cfg.spmm, &OutputSink::Mem(&out))?;
+            out.to_dense().data
+        };
+
+        // pr' = (1 - d)/N + d · contrib — natively or via the AOT artifact.
+        let pr: Vec<f32> = match &cfg.xla_combine {
+            Some(be) => be.pagerank_combine(&contrib, cfg.damping, n)?,
+            None => contrib
+                .iter()
+                .map(|&c| (1.0 - cfg.damping) / n as f32 + cfg.damping * c)
+                .collect(),
+        };
+        for (i, &v) in pr.iter().enumerate() {
+            x.row_mut(i)[0] = v;
+        }
+    }
+
+    let pr: Vec<f32> = (0..n).map(|i| x.row(i)[0]).collect();
+    Ok((
+        pr,
+        PageRankStats {
+            secs: sw.secs(),
+            iters: cfg.iterations,
+            bytes_read: store.stats.bytes_read.get() - read0,
+            bytes_written: store.stats.bytes_written.get() - written0,
+            vec_mem_bytes: vec_mem,
+        },
+    ))
+}
+
+/// Dense reference PageRank over an edge list (test oracle).
+pub fn pagerank_ref(
+    num_verts: usize,
+    edges: &[(u32, u32)],
+    iterations: usize,
+    damping: f32,
+) -> Vec<f32> {
+    let n = num_verts;
+    let mut deg = vec![0u32; n];
+    for &(_, s) in edges {
+        deg[s as usize] += 1;
+    }
+    let mut pr = vec![1.0 / n as f32; n];
+    for _ in 0..iterations {
+        let mut contrib = vec![0f32; n];
+        for &(d, s) in edges {
+            let l = deg[s as usize];
+            if l > 0 {
+                contrib[d as usize] += pr[s as usize] / l as f32;
+            }
+        }
+        for i in 0..n {
+            pr[i] = (1.0 - damping) / n as f32 + damping * contrib[i];
+        }
+    }
+    pr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::tiled::TiledImage;
+    use crate::format::{Csr, TileFormat};
+    use crate::graph::rmat;
+    use crate::io::StoreConfig;
+
+    fn setup(scale: u32, edges: usize) -> (crate::graph::EdgeList, Arc<TiledImage>, Vec<u32>) {
+        let el = rmat::generate(scale, edges, rmat::RmatParams::default(), 21);
+        let m = Csr::from_edgelist(&el);
+        let img = Arc::new(TiledImage::build(&m, 256, TileFormat::Scsr));
+        let deg = el.col_degrees();
+        (el, img, deg)
+    }
+
+    #[test]
+    fn matches_reference_all_memory_modes() {
+        let (el, img, deg) = setup(9, 4000);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let want = pagerank_ref(el.num_verts, &el.edges, 10, 0.85);
+        for vecs in [1, 2, 3] {
+            let cfg = PageRankConfig {
+                iterations: 10,
+                vecs_in_mem: vecs,
+                spmm: SpmmOpts {
+                    threads: 3,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (pr, stats) = pagerank(&Source::Mem(img.clone()), &deg, &store, &cfg).unwrap();
+            assert_eq!(stats.iters, 10);
+            for (i, (a, b)) in pr.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "mode {vecs}, vertex {i}: {a} vs {b}"
+                );
+            }
+            if vecs == 1 {
+                assert!(stats.bytes_written > 0, "mode 1 must stream output");
+            }
+        }
+    }
+
+    #[test]
+    fn probability_mass_conserved_without_dangling() {
+        // Symmetrized graph plus a ring so every vertex has an out-edge
+        // (isolated vertices would otherwise leak probability mass, as in
+        // any PageRank without dangling-node redistribution).
+        let mut el = rmat::generate(9, 6000, rmat::RmatParams::default(), 5);
+        let n = el.num_verts as u32;
+        for v in 0..n {
+            el.edges.push((v, (v + 1) % n));
+        }
+        el.symmetrize();
+        let m = Csr::from_edgelist(&el);
+        let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
+        let deg = el.col_degrees();
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let cfg = PageRankConfig {
+            iterations: 20,
+            ..Default::default()
+        };
+        let (pr, _) = pagerank(&Source::Mem(img), &deg, &store, &cfg).unwrap();
+        let sum: f64 = pr.iter().map(|&v| v as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-3, "mass {sum}");
+    }
+
+    #[test]
+    fn xla_combine_matches_native() {
+        let Some(rt) = crate::runtime::XlaRuntime::from_env() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (el, img, deg) = setup(8, 2000);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let native = pagerank(
+            &Source::Mem(img.clone()),
+            &deg,
+            &store,
+            &PageRankConfig {
+                iterations: 5,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .0;
+        let xla = pagerank(
+            &Source::Mem(img),
+            &deg,
+            &store,
+            &PageRankConfig {
+                iterations: 5,
+                xla_combine: Some(XlaDenseBackend::new(rt)),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .0;
+        let _ = el;
+        for (a, b) in native.iter().zip(&xla) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Distributed Tpetra simulation (Fig 9).
+//!
+//! The paper runs Tpetra SpMV/SpMM on 2–16 `r3.8xlarge` EC2 instances
+//! (16 physical cores, 10 Gb/s network, same placement group) and shows
+//! that even 16 nodes barely match one SEM node. The two effects that
+//! produce that result are (a) the **allgather of the input dense matrix**
+//! every multiply — Tpetra's 1D row decomposition needs every node to hold
+//! the full input vector — and (b) **load imbalance** of the 1D row map on
+//! power-law graphs. This simulator reproduces exactly those two terms:
+//!
+//! * compute: per-node time = `node_nnz · cost_per_nnz / cores`, with
+//!   `cost_per_nnz` **calibrated by really running** the Tpetra-like CSR
+//!   kernel on this machine; the slowest node gates the step;
+//! * communication: ring allgather of `n·p·4` bytes across the 10 Gb/s
+//!   links plus per-message latency.
+
+use super::csr_spmm::{self, CsrSpmmOpts};
+use crate::format::Csr;
+use crate::matrix::{DenseMatrix, NumaConfig, NumaDense};
+use crate::metrics::Stopwatch;
+
+/// Cluster model.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    pub nodes: usize,
+    /// Physical cores per node (r3.8xlarge: 16).
+    pub cores_per_node: usize,
+    /// Network bandwidth per link in Gb/s (EC2 placement group: 10).
+    pub net_gbps: f64,
+    /// Per-message latency in microseconds.
+    pub latency_us: f64,
+}
+
+impl DistConfig {
+    /// The paper's EC2 setup with `nodes` instances.
+    pub fn ec2(nodes: usize) -> DistConfig {
+        DistConfig {
+            nodes,
+            cores_per_node: 16,
+            net_gbps: 10.0,
+            latency_us: 50.0,
+        }
+    }
+}
+
+/// Simulated per-multiply timing.
+#[derive(Debug, Clone)]
+pub struct DistReport {
+    /// Slowest node's compute time (s).
+    pub compute_secs: f64,
+    /// Allgather time (s).
+    pub comm_secs: f64,
+    /// Load imbalance: max node nnz / mean node nnz.
+    pub imbalance: f64,
+    pub total_secs: f64,
+}
+
+/// Calibrate `cost_per_nnz · cores` by timing the Tpetra-like kernel on a
+/// sample of this matrix with a known thread count. Returns seconds per
+/// (nnz / core).
+pub fn calibrate_cost(m: &Csr, p: usize, threads: usize) -> f64 {
+    let x = DenseMatrix::random(m.ncols, p, 99);
+    let nd = NumaDense::from_dense(&x, NumaConfig::single(m.ncols));
+    let opts = CsrSpmmOpts {
+        threads,
+        ..csr_spmm::tpetra_like(threads)
+    };
+    // Warm + measure.
+    let _ = csr_spmm::csr_spmm(m, &nd, &opts);
+    let sw = Stopwatch::start();
+    let _ = csr_spmm::csr_spmm(m, &nd, &opts);
+    let secs = sw.secs();
+    secs * threads as f64 / m.nnz() as f64
+}
+
+/// Simulate one distributed SpMM of width `p` under a 1D row
+/// decomposition into `cfg.nodes` equal row blocks.
+pub fn dist_spmm_sim(m: &Csr, p: usize, cfg: &DistConfig, cost_per_nnz_core: f64) -> DistReport {
+    let nodes = cfg.nodes.max(1);
+    let rows_per = m.nrows.div_ceil(nodes);
+    let mut node_nnz = vec![0u64; nodes];
+    for node in 0..nodes {
+        let lo = (node * rows_per).min(m.nrows);
+        let hi = ((node + 1) * rows_per).min(m.nrows);
+        node_nnz[node] = m.indptr[hi] - m.indptr[lo];
+    }
+    let max_nnz = *node_nnz.iter().max().unwrap() as f64;
+    let mean_nnz = m.nnz() as f64 / nodes as f64;
+
+    let compute_secs = max_nnz * cost_per_nnz_core / cfg.cores_per_node as f64;
+
+    // Ring allgather: each node receives (nodes-1)/nodes of the n×p input
+    // over its 10 Gb/s link in (nodes-1) steps.
+    let total_bytes = (m.ncols * p * 4) as f64;
+    let per_node_recv = total_bytes * (nodes as f64 - 1.0) / nodes as f64;
+    let bw_bytes = cfg.net_gbps * 1e9 / 8.0;
+    let comm_secs = if nodes > 1 {
+        per_node_recv / bw_bytes + (nodes as f64 - 1.0) * cfg.latency_us * 1e-6
+    } else {
+        0.0
+    };
+
+    DistReport {
+        compute_secs,
+        comm_secs,
+        imbalance: max_nnz / mean_nnz.max(1.0),
+        total_secs: compute_secs + comm_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{erdos, rmat};
+
+    #[test]
+    fn powerlaw_imbalance_exceeds_uniform() {
+        let pl = Csr::from_edgelist(&rmat::generate(
+            12,
+            60_000,
+            rmat::RmatParams::default(),
+            1,
+        ));
+        let uni = Csr::from_edgelist(&erdos::generate(4096, 60_000, 1));
+        let cfg = DistConfig::ec2(8);
+        let rp = dist_spmm_sim(&pl, 1, &cfg, 1e-9);
+        let ru = dist_spmm_sim(&uni, 1, &cfg, 1e-9);
+        assert!(
+            rp.imbalance > 1.3 * ru.imbalance,
+            "powerlaw {} vs uniform {}",
+            rp.imbalance,
+            ru.imbalance
+        );
+    }
+
+    #[test]
+    fn comm_grows_with_nodes_then_saturates_scaling() {
+        let m = Csr::from_edgelist(&rmat::generate(
+            12,
+            50_000,
+            rmat::RmatParams::default(),
+            2,
+        ));
+        let cost = 2e-9;
+        let t2 = dist_spmm_sim(&m, 1, &DistConfig::ec2(2), cost).total_secs;
+        let t16 = dist_spmm_sim(&m, 1, &DistConfig::ec2(16), cost).total_secs;
+        // More nodes reduce compute but the allgather term does not shrink
+        // proportionally — scaling efficiency must be well below linear.
+        let speedup = t2 / t16;
+        assert!(speedup < 8.0, "2→16 nodes speedup {speedup} too ideal");
+    }
+
+    #[test]
+    fn single_node_has_no_comm() {
+        let m = Csr::from_edgelist(&erdos::generate(1000, 5000, 3));
+        let r = dist_spmm_sim(&m, 4, &DistConfig::ec2(1), 1e-9);
+        assert_eq!(r.comm_secs, 0.0);
+        assert!((r.imbalance - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn calibration_is_positive_and_sane() {
+        let m = Csr::from_edgelist(&rmat::generate(
+            11,
+            30_000,
+            rmat::RmatParams::default(),
+            4,
+        ));
+        let c = calibrate_cost(&m, 1, 2);
+        assert!(c > 0.0 && c < 1e-5, "cost per nnz·core = {c}");
+    }
+}

@@ -1,0 +1,255 @@
+//! Vertex-centric PageRank engines (the FlashGraph / GraphLab Create
+//! stand-ins of Fig 14).
+//!
+//! Both comparators run PageRank as a **vertex program**: every vertex
+//! pushes `pr/deg` along its out-edges into its neighbours' accumulators.
+//! Structurally that differs from the SpMM formulation in exactly the
+//! ways the paper credits for its win: scattered random writes instead of
+//! cache-blocked accumulation, per-vertex scheduling overhead, and (for
+//! the FlashGraph-like engine) streaming a CSR edge image whose per-edge
+//! footprint is larger than the SCSR tiles.
+//!
+//! * [`VertexMode::InMemory`] — GraphLab-Create-like: edges in memory,
+//!   atomic scatter into shared accumulators.
+//! * [`VertexMode::SemiExternal`] — FlashGraph-like: vertex state in
+//!   memory, the CSR edge image streamed from the store each iteration.
+
+use crate::format::convert::{read_csr_header, CSR_HEADER};
+use crate::format::Csr;
+use crate::io::ExtMemStore;
+use crate::metrics::Stopwatch;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// Engine placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VertexMode {
+    InMemory,
+    SemiExternal,
+}
+
+/// Run report.
+#[derive(Debug, Clone)]
+pub struct VertexStats {
+    pub secs: f64,
+    pub bytes_read: u64,
+    pub mem_bytes: u64,
+}
+
+/// Atomic f32 add via compare-exchange on the bit pattern.
+#[inline]
+fn atomic_add_f32(slot: &AtomicU32, v: f32) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    loop {
+        let new = f32::from_bits(cur) + v;
+        match slot.compare_exchange_weak(
+            cur,
+            new.to_bits(),
+            Ordering::AcqRel,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// In-memory vertex-centric PageRank (GraphLab-Create-like). `m` is the
+/// out-edge CSR: `m.row(v)` lists the destinations of `v`'s out-edges.
+pub fn pagerank_inmem(
+    m: &Csr,
+    iterations: usize,
+    damping: f32,
+    threads: usize,
+) -> (Vec<f32>, VertexStats) {
+    let n = m.nrows;
+    let sw = Stopwatch::start();
+    let mut pr = vec![1.0 / n as f32; n];
+    let acc: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    for _ in 0..iterations {
+        for a in &acc {
+            a.store(0, Ordering::Relaxed);
+        }
+        // Scatter phase: each vertex pushes along its out-edges.
+        let chunk = n.div_ceil(threads.max(1));
+        std::thread::scope(|s| {
+            for t in 0..threads.max(1) {
+                let pr = &pr;
+                let acc = &acc;
+                s.spawn(move || {
+                    let lo = (t * chunk).min(n);
+                    let hi = ((t + 1) * chunk).min(n);
+                    for v in lo..hi {
+                        let out = m.row(v);
+                        if out.is_empty() {
+                            continue;
+                        }
+                        let share = pr[v] / out.len() as f32;
+                        for &d in out {
+                            atomic_add_f32(&acc[d as usize], share);
+                        }
+                    }
+                });
+            }
+        });
+        for (i, a) in acc.iter().enumerate() {
+            pr[i] = (1.0 - damping) / n as f32
+                + damping * f32::from_bits(a.load(Ordering::Relaxed));
+        }
+    }
+    let mem = (m.footprint_bytes() + (n * 8) as u64) as u64;
+    (
+        pr,
+        VertexStats {
+            secs: sw.secs(),
+            bytes_read: 0,
+            mem_bytes: mem,
+        },
+    )
+}
+
+/// Semi-external vertex-centric PageRank (FlashGraph-like): vertex state
+/// (pr + accumulator + degrees) in memory, the out-edge CSR image
+/// streamed from the store every iteration.
+pub fn pagerank_sem(
+    store: &Arc<ExtMemStore>,
+    csr_obj: &str,
+    iterations: usize,
+    damping: f32,
+    threads: usize,
+) -> Result<(Vec<f32>, VertexStats)> {
+    let f = store.open_file(csr_obj)?;
+    let hdr = read_csr_header(&f)?;
+    let n = hdr.nrows;
+    let read0 = store.stats.bytes_read.get();
+    let sw = Stopwatch::start();
+
+    // Vertex state in memory: indptr (degrees), pr, accumulator.
+    let mut indptr = vec![0u64; n + 1];
+    {
+        let mut buf = vec![0u8; (n + 1) * 8];
+        f.read_at(CSR_HEADER as u64, &mut buf)?;
+        for (i, p) in indptr.iter_mut().enumerate() {
+            *p = u64::from_le_bytes(buf[i * 8..i * 8 + 8].try_into().unwrap());
+        }
+    }
+    let indices_off = CSR_HEADER as u64 + (n as u64 + 1) * 8;
+    let mut pr = vec![1.0 / n as f32; n];
+    let acc: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+
+    // Stream the edge image in vertex bands; one band per task.
+    const BAND: usize = 8192;
+    let n_bands = n.div_ceil(BAND);
+    for _ in 0..iterations {
+        for a in &acc {
+            a.store(0, Ordering::Relaxed);
+        }
+        let cursor = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for _ in 0..threads.max(1) {
+                let pr = &pr;
+                let acc = &acc;
+                let indptr = &indptr;
+                let cursor = &cursor;
+                let f = f.clone();
+                handles.push(s.spawn(move || -> Result<()> {
+                    loop {
+                        let band = cursor.fetch_add(1, Ordering::AcqRel);
+                        if band >= n_bands {
+                            return Ok(());
+                        }
+                        let lo = band * BAND;
+                        let hi = ((band + 1) * BAND).min(n);
+                        let (k0, k1) = (indptr[lo], indptr[hi]);
+                        if k0 == k1 {
+                            continue;
+                        }
+                        let mut buf = vec![0u8; ((k1 - k0) * 4) as usize];
+                        f.read_at(indices_off + k0 * 4, &mut buf)?;
+                        for v in lo..hi {
+                            let (s0, e0) = (indptr[v], indptr[v + 1]);
+                            let deg = (e0 - s0) as f32;
+                            if deg == 0.0 {
+                                continue;
+                            }
+                            let share = pr[v] / deg;
+                            for k in s0..e0 {
+                                let o = ((k - k0) * 4) as usize;
+                                let d = u32::from_le_bytes(
+                                    buf[o..o + 4].try_into().unwrap(),
+                                ) as usize;
+                                atomic_add_f32(&acc[d], share);
+                            }
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("vertex worker panicked")?;
+            }
+            Ok(())
+        })?;
+        for (i, a) in acc.iter().enumerate() {
+            pr[i] = (1.0 - damping) / n as f32
+                + damping * f32::from_bits(a.load(Ordering::Relaxed));
+        }
+    }
+    let mem = ((n + 1) * 8 + n * 8) as u64;
+    Ok((
+        pr,
+        VertexStats {
+            secs: sw.secs(),
+            bytes_read: store.stats.bytes_read.get() - read0,
+            mem_bytes: mem,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::pagerank::pagerank_ref;
+    use crate::format::convert::put_csr_image;
+    use crate::graph::rmat;
+    use crate::io::StoreConfig;
+
+    fn setup(scale: u32, edges: usize) -> (crate::graph::EdgeList, Csr) {
+        let el = rmat::generate(scale, edges, rmat::RmatParams::default(), 51);
+        // Out-edge CSR: row = src, col = dst. The SpMM formulation stores
+        // the transpose, so build from swapped pairs here.
+        let m = Csr::from_edgelist(&el);
+        (el, m)
+    }
+
+    #[test]
+    fn inmem_matches_reference() {
+        let (el, m) = setup(9, 5000);
+        // Reference expects (dst, src) edges; m.row(v) = out-edges of v
+        // means our edge list must be interpreted as (src, dst).
+        let edges_ds: Vec<(u32, u32)> =
+            el.edges.iter().map(|&(s, d)| (d, s)).collect();
+        let want = pagerank_ref(el.num_verts, &edges_ds, 8, 0.85);
+        let (got, _) = pagerank_inmem(&m, 8, 0.85, 4);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sem_matches_inmem() {
+        let (_, m) = setup(9, 6000);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        put_csr_image(&store, "g.csr", &m).unwrap();
+        let (want, _) = pagerank_inmem(&m, 6, 0.85, 2);
+        let (got, stats) = pagerank_sem(&store, "g.csr", 6, 0.85, 2).unwrap();
+        assert!(stats.bytes_read > 0);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // FlashGraph-like memory: vertex state only, far below the edges.
+        assert!(stats.mem_bytes < m.footprint_bytes());
+    }
+}

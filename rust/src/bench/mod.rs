@@ -1,0 +1,160 @@
+//! The paper-experiment harness: one function per table/figure of the
+//! evaluation (§5), each printing the figure's series as TSV rows and
+//! returning them for tests. `bench-paper <exp>` is the CLI front end;
+//! DESIGN.md's experiment index maps every figure to its function here.
+//!
+//! Scale: datasets come from [`crate::graph::registry`] (scaled stand-ins
+//! of Table 1; `scale` shrinks them further for smoke runs). SEM runs go
+//! through a store throttled to the paper's SSD-array bandwidth unless
+//! overridden — on this container the images largely sit in page cache,
+//! so the throttle is what stands in for the device.
+
+pub mod experiments;
+
+pub use experiments::*;
+
+use crate::coordinator::Catalog;
+use crate::graph::registry::{self, DatasetSpec};
+use crate::io::{ExtMemStore, StoreConfig};
+use crate::spmm::SpmmOpts;
+use anyhow::Result;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Shared context for all experiments.
+pub struct Bench {
+    pub store: Arc<ExtMemStore>,
+    pub catalog: Catalog,
+    pub opts: SpmmOpts,
+    /// Override of the registry scale (`None` = registry defaults).
+    pub scale: Option<u32>,
+    /// Where TSV outputs go (`results/` by default).
+    pub out_dir: PathBuf,
+    /// Tile side for images.
+    pub tile: usize,
+}
+
+impl Bench {
+    /// Build a bench context. `gbps = 0` disables throttling.
+    pub fn new(
+        store_dir: PathBuf,
+        out_dir: PathBuf,
+        threads: usize,
+        gbps: f64,
+        scale: Option<u32>,
+        tile: usize,
+    ) -> Result<Bench> {
+        let cfg = if gbps > 0.0 {
+            StoreConfig {
+                dir: store_dir,
+                read_gbps: Some(gbps),
+                write_gbps: Some(gbps * 10.0 / 12.0),
+                latency_us: 30,
+            }
+        } else {
+            StoreConfig::unthrottled(store_dir)
+        };
+        let store = ExtMemStore::open(cfg)?;
+        std::fs::create_dir_all(&out_dir)?;
+        let catalog = Catalog::new(store.clone(), tile);
+        Ok(Bench {
+            store,
+            catalog,
+            opts: SpmmOpts {
+                threads,
+                ..Default::default()
+            },
+            scale,
+            out_dir,
+            tile,
+        })
+    }
+
+    /// A quick context for tests: tiny graphs, temp store, 2 threads.
+    pub fn smoke(dir: &std::path::Path, scale: u32) -> Result<Bench> {
+        Bench::new(
+            dir.join("store"),
+            dir.join("results"),
+            2,
+            0.0,
+            Some(scale),
+            256,
+        )
+    }
+
+    /// The dataset list at the configured scale.
+    pub fn datasets(&self) -> Vec<DatasetSpec> {
+        registry::registry()
+            .into_iter()
+            .map(|d| match self.scale {
+                Some(s) => d.shrunk(s),
+                None => d,
+            })
+            .collect()
+    }
+
+    pub fn dataset(&self, name: &str) -> Option<DatasetSpec> {
+        self.datasets().into_iter().find(|d| d.name == name)
+    }
+
+    /// Emit one experiment's rows: header + rows to stdout and to
+    /// `out_dir/<exp>.tsv`.
+    pub fn emit(&self, exp: &str, header: &str, rows: &[String]) -> Result<()> {
+        let path = self.out_dir.join(format!("{exp}.tsv"));
+        let mut f = std::fs::File::create(&path)?;
+        println!("== {exp} ==");
+        println!("{header}");
+        writeln!(f, "{header}")?;
+        for r in rows {
+            println!("{r}");
+            writeln!(f, "{r}")?;
+        }
+        println!("-> {}", path.display());
+        Ok(())
+    }
+
+    /// Median-of-3 timing helper (first run warms the page cache).
+    pub fn time3(&self, mut f: impl FnMut() -> Result<f64>) -> Result<f64> {
+        let mut v = [f()?, f()?, f()?];
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(v[1])
+    }
+}
+
+/// All experiment names, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig2", "fig5a", "fig5b", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig13", "tab2", "fig14", "fig15", "fig16",
+];
+
+/// Run one experiment by name.
+pub fn run(bench: &Bench, exp: &str) -> Result<()> {
+    match exp {
+        "fig2" => fig2(bench),
+        "fig5a" | "fig5b" => fig5(bench),
+        "fig6" => fig6(bench),
+        "fig7" => fig7(bench),
+        "fig8" => fig8(bench),
+        "fig9" => fig9(bench),
+        "fig10" => fig10(bench),
+        "fig11" => fig11(bench),
+        "fig12" => fig12(bench),
+        "fig13" => fig13(bench),
+        "tab2" => tab2(bench),
+        "perf" => perf(bench),
+        "fig14" => fig14(bench),
+        "fig15" => fig15(bench),
+        "fig16" => fig16(bench),
+        "all" => {
+            for e in ALL_EXPERIMENTS {
+                if *e == "fig5b" {
+                    continue; // fig5 emits both
+                }
+                run(bench, e)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+}

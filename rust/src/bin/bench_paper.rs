@@ -1,0 +1,90 @@
+//! `bench-paper` — regenerate the paper's tables and figures.
+//!
+//! ```text
+//! bench-paper [--scale N] [--threads N] [--gbps F] [--tile N]
+//!             [--store DIR] [--out DIR] <experiment>|all
+//! ```
+//!
+//! Experiments: fig2 fig5a fig5b fig6 fig7 fig8 fig9 fig10 fig11 fig12
+//! fig13 tab2 fig14 fig15 fig16 (DESIGN.md maps each to the paper).
+//!
+//! Defaults: registry scale (2^17–2^18 vertices), all cores, store
+//! throttled to the paper's 12 GB/s SSD array, tile 4096. `--gbps 0`
+//! disables throttling.
+
+use anyhow::{bail, Context, Result};
+use sem_spmm::bench::{Bench, ALL_EXPERIMENTS};
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale: Option<u32> = None;
+    let mut threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(8);
+    let mut gbps = 12.0;
+    let mut tile = 4096usize;
+    let mut store_dir = PathBuf::from("sem-store");
+    let mut out_dir = PathBuf::from("results");
+    let mut cache_bytes = 2usize << 20;
+
+    let mut i = 0;
+    while i < args.len() {
+        let take = |args: &[String], i: usize| -> Result<String> {
+            args.get(i + 1)
+                .cloned()
+                .with_context(|| format!("{} needs a value", args[i]))
+        };
+        match args[i].as_str() {
+            "--scale" => {
+                scale = Some(take(&args, i)?.parse()?);
+                args.drain(i..=i + 1);
+            }
+            "--threads" => {
+                threads = take(&args, i)?.parse()?;
+                args.drain(i..=i + 1);
+            }
+            "--gbps" => {
+                gbps = take(&args, i)?.parse()?;
+                args.drain(i..=i + 1);
+            }
+            "--tile" => {
+                tile = take(&args, i)?.parse()?;
+                args.drain(i..=i + 1);
+            }
+            "--store" => {
+                store_dir = PathBuf::from(take(&args, i)?);
+                args.drain(i..=i + 1);
+            }
+            "--out" => {
+                out_dir = PathBuf::from(take(&args, i)?);
+                args.drain(i..=i + 1);
+            }
+            "--cache-bytes" => {
+                cache_bytes = take(&args, i)?.parse()?;
+                args.drain(i..=i + 1);
+            }
+            _ => i += 1,
+        }
+    }
+    let Some(exp) = args.first() else {
+        bail!(
+            "usage: bench-paper [flags] <experiment>|all\nexperiments: {}",
+            ALL_EXPERIMENTS.join(" ")
+        );
+    };
+
+    eprintln!(
+        "bench-paper: exp={exp} scale={scale:?} threads={threads} gbps={gbps} tile={tile}"
+    );
+    let mut bench = Bench::new(store_dir, out_dir, threads, gbps, scale, tile)?;
+    bench.opts.cache_bytes = cache_bytes;
+    sem_spmm::bench::run(&bench, exp)
+}

@@ -1,0 +1,179 @@
+//! Configuration system: a layered key=value format (file → environment →
+//! CLI overrides) plus a tiny JSON emitter for machine-readable results.
+//!
+//! The format is deliberately simple (the build is offline; no serde):
+//!
+//! ```text
+//! # sem-spmm config
+//! store.dir        = /mnt/ssd/sem
+//! store.read_gbps  = 12.0
+//! store.write_gbps = 10.0
+//! spmm.threads     = 48
+//! spmm.cache_bytes = 2097152
+//! mem.budget_gb    = 8
+//! ```
+//!
+//! Sections map onto [`crate::io::StoreConfig`], [`crate::spmm::SpmmOpts`]
+//! and the coordinator's memory budget.
+
+pub mod json;
+
+use crate::io::StoreConfig;
+use crate::spmm::SpmmOpts;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A parsed, layered configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse `key = value` lines; `#` starts a comment.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected 'key = value'", lineno + 1);
+            };
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Apply `key=value` override strings (CLI `--set`).
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for o in overrides {
+            let Some((k, v)) = o.split_once('=') else {
+                bail!("override '{o}': expected key=value");
+            };
+            self.values
+                .insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("off") => Ok(false),
+            Some(v) => bail!("config {key}={v}: expected bool"),
+        }
+    }
+
+    /// Build the store configuration (`store.*` keys).
+    pub fn store_config(&self) -> Result<StoreConfig> {
+        let dir = PathBuf::from(self.get_or("store.dir", "sem-store"));
+        let read = self.get_f64("store.read_gbps", 0.0)?;
+        let write = self.get_f64("store.write_gbps", 0.0)?;
+        Ok(StoreConfig {
+            dir,
+            read_gbps: (read > 0.0).then_some(read),
+            write_gbps: (write > 0.0).then_some(write),
+            latency_us: self.get_usize("store.latency_us", 0)? as u64,
+        })
+    }
+
+    /// Build the engine options (`spmm.*` keys).
+    pub fn spmm_opts(&self) -> Result<SpmmOpts> {
+        let d = SpmmOpts::default();
+        Ok(SpmmOpts {
+            threads: self.get_usize("spmm.threads", d.threads)?,
+            load_balance: self.get_bool("spmm.load_balance", d.load_balance)?,
+            cache_blocking: self.get_bool("spmm.cache_blocking", d.cache_blocking)?,
+            vectorize: self.get_bool("spmm.vectorize", d.vectorize)?,
+            io_polling: self.get_bool("spmm.io_polling", d.io_polling)?,
+            buf_pool: self.get_bool("spmm.buf_pool", d.buf_pool)?,
+            io_workers: self.get_usize("spmm.io_workers", d.io_workers)?,
+            cache_bytes: self.get_usize("spmm.cache_bytes", d.cache_bytes)?,
+        })
+    }
+
+    /// Memory budget in bytes (`mem.budget_gb`, 0 = unlimited).
+    pub fn mem_budget(&self) -> Result<u64> {
+        Ok((self.get_f64("mem.budget_gb", 0.0)? * 1e9) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_lookup() {
+        let c = Config::parse(
+            "# comment\nstore.dir = /tmp/x # trailing\nspmm.threads = 7\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("store.dir"), Some("/tmp/x"));
+        assert_eq!(c.get_usize("spmm.threads", 1).unwrap(), 7);
+        assert!(c.get_bool("flag", false).unwrap());
+        assert_eq!(c.get_usize("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("a = 1\n").unwrap();
+        c.apply_overrides(&["a=2".into(), "b=3".into()]).unwrap();
+        assert_eq!(c.get("a"), Some("2"));
+        assert_eq!(c.get("b"), Some("3"));
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Config::parse("not a kv line\n").is_err());
+        let c = Config::parse("x = nope\n").unwrap();
+        assert!(c.get_bool("x", true).is_err());
+        assert!(c.get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn store_and_spmm_configs() {
+        let c = Config::parse(
+            "store.dir = /tmp/s\nstore.read_gbps = 2.5\nspmm.threads = 3\nspmm.vectorize = off\n",
+        )
+        .unwrap();
+        let sc = c.store_config().unwrap();
+        assert_eq!(sc.read_gbps, Some(2.5));
+        assert_eq!(sc.write_gbps, None);
+        let so = c.spmm_opts().unwrap();
+        assert_eq!(so.threads, 3);
+        assert!(!so.vectorize);
+    }
+}

@@ -1,0 +1,189 @@
+//! Dataset catalog: materializes registry graphs as store objects.
+//!
+//! For a dataset `name` the catalog manages four objects:
+//!
+//! * `name.csr` — the CSR image (conversion input, FlashGraph-like input),
+//! * `name.semm` — the tiled SCSR image of A (row = dst, col = src),
+//! * `name.t.semm` — the tiled image of Aᵀ,
+//! * `name.deg` — out-degrees (u32 per vertex).
+//!
+//! `ensure` is idempotent: it generates + converts only missing objects,
+//! so `make`-style reruns are cheap (format conversion is the one-time
+//! cost Table 2 measures).
+
+use crate::format::convert::{self, put_csr_image};
+use crate::format::{Csr, TileFormat};
+use crate::graph::registry::DatasetSpec;
+use crate::io::ExtMemStore;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Handles to the prepared images of one dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetImages {
+    pub name: String,
+    /// Tiled image of A (row = dst, col = src).
+    pub adj: String,
+    /// Tiled image of Aᵀ.
+    pub adj_t: String,
+    /// CSR image object (baseline input; row = dst).
+    pub csr: String,
+    /// Transposed CSR image object (row = src; out-edge lists).
+    pub csr_t: String,
+    pub num_verts: usize,
+    pub nnz: u64,
+    /// Out-degree per vertex.
+    pub degrees: Vec<u32>,
+}
+
+/// The catalog over one store.
+#[derive(Debug, Clone)]
+pub struct Catalog {
+    store: Arc<ExtMemStore>,
+    pub tile: usize,
+    pub format: TileFormat,
+}
+
+impl Catalog {
+    pub fn new(store: Arc<ExtMemStore>, tile: usize) -> Catalog {
+        Catalog {
+            store,
+            tile,
+            format: TileFormat::Scsr,
+        }
+    }
+
+    pub fn store(&self) -> &Arc<ExtMemStore> {
+        &self.store
+    }
+
+    fn obj(&self, name: &str, suffix: &str) -> String {
+        format!("{name}.{suffix}")
+    }
+
+    /// Build (if missing) every object for `spec` and return the handles.
+    /// Object names are prefixed by direction (`-d` / `-u`) so directed
+    /// and symmetrized variants of the same dataset coexist (the paper
+    /// keeps both versions of the R-MAT graphs, Table 1).
+    pub fn ensure(&self, spec: &DatasetSpec) -> Result<DatasetImages> {
+        let name = format!(
+            "{}-{}.s{}.t{}",
+            spec.name,
+            if spec.directed { "d" } else { "u" },
+            spec.scale,
+            self.tile
+        );
+        let name = name.as_str();
+        let csr_obj = self.obj(name, "csr");
+        let csr_t_obj = self.obj(name, "t.csr");
+        let adj_obj = self.obj(name, "semm");
+        let adj_t_obj = self.obj(name, "t.semm");
+        let deg_obj = self.obj(name, "deg");
+
+        let have_all = self.store.exists(&csr_obj)
+            && self.store.exists(&csr_t_obj)
+            && self.store.exists(&adj_obj)
+            && self.store.exists(&adj_t_obj)
+            && self.store.exists(&deg_obj);
+        if !have_all {
+            let el = spec.build();
+            let m = Csr::from_edgelist(&el);
+            // CSR image + conversions (Table 2's pipeline).
+            put_csr_image(&self.store, &csr_obj, &m)?;
+            convert::convert(&self.store, &csr_obj, &adj_obj, self.tile, self.format)?;
+            let mt = m.transpose();
+            put_csr_image(&self.store, &csr_t_obj, &mt)?;
+            convert::convert(&self.store, &csr_t_obj, &adj_t_obj, self.tile, self.format)?;
+            // Out-degrees: convention (row, col) = (dst, src) → column
+            // degree = out-degree.
+            let deg = el.col_degrees();
+            let mut bytes = Vec::with_capacity(deg.len() * 4);
+            for &d in &deg {
+                bytes.extend_from_slice(&d.to_le_bytes());
+            }
+            self.store.put(&deg_obj, &bytes)?;
+        }
+
+        // Read back metadata from the images (source of truth).
+        let sem = crate::spmm::SemSource::open(&self.store, &adj_obj)?;
+        let deg_bytes = self.store.get(&deg_obj)?;
+        let degrees: Vec<u32> = deg_bytes
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(DatasetImages {
+            name: name.to_string(),
+            adj: adj_obj,
+            adj_t: adj_t_obj,
+            csr: csr_obj,
+            csr_t: csr_t_obj,
+            num_verts: sem.meta.nrows,
+            nnz: sem.meta.nnz,
+            degrees,
+        })
+    }
+
+    /// Open the tiled image of A as a SEM source.
+    pub fn open_adj(&self, imgs: &DatasetImages) -> Result<crate::spmm::SemSource> {
+        crate::spmm::SemSource::open(&self.store, &imgs.adj)
+    }
+
+    /// Open the tiled image of Aᵀ as a SEM source.
+    pub fn open_adj_t(&self, imgs: &DatasetImages) -> Result<crate::spmm::SemSource> {
+        crate::spmm::SemSource::open(&self.store, &imgs.adj_t)
+    }
+
+    /// Load the tiled image of A fully into memory (IM mode).
+    pub fn load_adj(&self, imgs: &DatasetImages) -> Result<crate::format::tiled::TiledImage> {
+        crate::format::tiled::TiledImage::load(&self.store.path(&imgs.adj))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::registry;
+    use crate::io::StoreConfig;
+    use crate::spmm::{engine, Source, SpmmOpts};
+
+    #[test]
+    fn ensure_is_idempotent_and_consistent() {
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let cat = Catalog::new(store.clone(), 256);
+        let spec = registry::by_name("twitter").unwrap().shrunk(10);
+        let a = cat.ensure(&spec).unwrap();
+        let written = store.stats.bytes_written.get();
+        let b = cat.ensure(&spec).unwrap();
+        // Second ensure writes nothing new.
+        assert_eq!(store.stats.bytes_written.get(), written);
+        assert_eq!(a.nnz, b.nnz);
+        assert_eq!(a.num_verts, 1024);
+        assert_eq!(a.degrees.len(), 1024);
+    }
+
+    #[test]
+    fn adjacency_and_transpose_agree() {
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let cat = Catalog::new(store, 128);
+        let spec = registry::by_name("rmat-40").unwrap().shrunk(9);
+        let imgs = cat.ensure(&spec).unwrap();
+        let a = cat.open_adj(&imgs).unwrap();
+        let at = cat.open_adj_t(&imgs).unwrap();
+        assert_eq!(a.meta.nnz, at.meta.nnz);
+        // x' A' == (Aᵀ x')' sanity: spmv with ones equals row/col degrees.
+        let ones = vec![1f32; imgs.num_verts];
+        let opts = SpmmOpts::sequential();
+        let (row_deg, _) = engine::spmv(&Source::Sem(a), &ones, &opts).unwrap();
+        let (col_deg, _) = engine::spmv(&Source::Sem(at), &ones, &opts).unwrap();
+        let sum_r: f64 = row_deg.iter().map(|&v| v as f64).sum();
+        let sum_c: f64 = col_deg.iter().map(|&v| v as f64).sum();
+        assert_eq!(sum_r, sum_c);
+        assert_eq!(sum_r as u64, imgs.nnz);
+        // col degrees of A == degrees vector (out-degrees).
+        for (i, &d) in imgs.degrees.iter().enumerate() {
+            assert_eq!(col_deg[i] as u32, d, "vertex {i}");
+        }
+    }
+}

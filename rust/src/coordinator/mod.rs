@@ -1,0 +1,170 @@
+//! The coordinator: memory budgeting, dataset catalog, pass planning for
+//! dense matrices larger than memory, and the request-service loop.
+//!
+//! This layer owns the decisions the paper frames as "how to use the
+//! memory you have" (§3.6, §4): how many dense-matrix columns fit, how
+//! many passes over the sparse matrix a multiply needs, and which
+//! placement each application should use.
+
+pub mod catalog;
+pub mod service;
+pub mod vert;
+
+pub use catalog::{Catalog, DatasetImages};
+pub use vert::{spmm_vert, VertReport};
+
+use crate::metrics::MemStats;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// A logical memory budget (the paper's machine-capacity knob — see
+/// DESIGN.md: capacity effects are policy decisions driven by sizes, so
+/// they are enforced by accounting rather than physical allocation).
+#[derive(Debug)]
+pub struct MemBudget {
+    limit: u64,
+    stats: Arc<MemStats>,
+}
+
+/// A granted allocation; freed on drop.
+#[derive(Debug)]
+pub struct Grant {
+    bytes: u64,
+    stats: Arc<MemStats>,
+}
+
+impl Drop for Grant {
+    fn drop(&mut self) {
+        self.stats.free(self.bytes);
+    }
+}
+
+impl MemBudget {
+    /// `limit = 0` means unlimited.
+    pub fn new(limit: u64) -> MemBudget {
+        MemBudget {
+            limit,
+            stats: Arc::new(MemStats::new()),
+        }
+    }
+
+    pub fn limit(&self) -> u64 {
+        self.limit
+    }
+
+    pub fn used(&self) -> u64 {
+        self.stats.current()
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.stats.peak()
+    }
+
+    /// Whether an additional allocation would fit.
+    pub fn fits(&self, bytes: u64) -> bool {
+        self.limit == 0 || self.used() + bytes <= self.limit
+    }
+
+    /// Admit an allocation or fail (the "OOM" of Figs 7/8/14/15).
+    pub fn alloc(&self, bytes: u64) -> Result<Grant> {
+        if !self.fits(bytes) {
+            bail!(
+                "memory budget exceeded: want {} on top of {} (limit {})",
+                crate::util::human_bytes(bytes),
+                crate::util::human_bytes(self.used()),
+                crate::util::human_bytes(self.limit)
+            );
+        }
+        self.stats.alloc(bytes);
+        Ok(Grant {
+            bytes,
+            stats: self.stats.clone(),
+        })
+    }
+
+    /// Maximum number of f32 dense-matrix columns of height `n` that fit
+    /// in the remaining budget (at least 1 — SEM requires one column,
+    /// §3.6's minimum `n·c`).
+    pub fn max_cols(&self, n: usize) -> usize {
+        if self.limit == 0 {
+            return usize::MAX / 2;
+        }
+        let free = self.limit.saturating_sub(self.used());
+        ((free / (n as u64 * 4)) as usize).max(1)
+    }
+}
+
+/// Plans multi-pass SpMM for dense matrices wider than memory (§3.1,
+/// §3.6): given `p` total columns and a budget, choose the per-pass panel
+/// width and enumerate passes.
+#[derive(Debug, Clone)]
+pub struct PassPlan {
+    /// Columns per pass (the vertical-partition width).
+    pub panel_cols: usize,
+    /// Number of passes over the sparse matrix.
+    pub passes: usize,
+}
+
+impl PassPlan {
+    /// `IO_in = (ncp / M') · [E − (M − M')]` is minimized by maximizing
+    /// M' (§3.6) — so the planner gives the dense panel all the memory it
+    /// can and caches none of the sparse matrix.
+    pub fn plan(n: usize, p: usize, budget: &MemBudget) -> PassPlan {
+        let max_cols = budget.max_cols(n).min(p).max(1);
+        let passes = p.div_ceil(max_cols);
+        // Even panels: round cols down so passes are balanced.
+        let panel_cols = p.div_ceil(passes);
+        PassPlan { panel_cols, passes }
+    }
+
+    /// Predicted sparse-matrix bytes read for this plan (§3.6 formula
+    /// with no sparse caching).
+    pub fn predicted_sparse_reads(&self, sparse_bytes: u64) -> u64 {
+        sparse_bytes * self.passes as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_admits_and_frees() {
+        let b = MemBudget::new(1000);
+        let g1 = b.alloc(600).unwrap();
+        assert!(b.alloc(500).is_err());
+        drop(g1);
+        assert!(b.alloc(500).is_ok());
+    }
+
+    #[test]
+    fn unlimited_budget() {
+        let b = MemBudget::new(0);
+        assert!(b.fits(u64::MAX / 2));
+        assert!(b.max_cols(1000) > 1_000_000);
+    }
+
+    #[test]
+    fn pass_plan_shrinks_with_budget() {
+        let n = 1000usize;
+        // 32-column matrix; budget fits 8 columns.
+        let b = MemBudget::new((n * 4 * 8) as u64);
+        let plan = PassPlan::plan(n, 32, &b);
+        assert_eq!(plan.passes, 4);
+        assert_eq!(plan.panel_cols, 8);
+        // Full-fit budget: one pass.
+        let b = MemBudget::new((n * 4 * 64) as u64);
+        let plan = PassPlan::plan(n, 32, &b);
+        assert_eq!(plan.passes, 1);
+        assert_eq!(plan.panel_cols, 32);
+    }
+
+    #[test]
+    fn pass_plan_minimum_one_column() {
+        let b = MemBudget::new(16); // tiny
+        let plan = PassPlan::plan(1000, 4, &b);
+        assert_eq!(plan.panel_cols, 1);
+        assert_eq!(plan.passes, 4);
+        assert_eq!(plan.predicted_sparse_reads(100), 400);
+    }
+}

@@ -1,0 +1,241 @@
+//! Doubly-compressed sparse column (DCSC) tile encoding — the baseline
+//! format the paper compares SCSR against (Buluç & Gilbert, IPDPS 2008;
+//! paper Fig 2 and the Fig 13 `SCSR` ablation run tiles in DCSC).
+//!
+//! Per the paper's cost model a DCSC tile with `nnc` non-empty columns
+//! costs `(2 + 2 + 4)·nnc + (2 + c)·nnz`: per non-empty column a 2-byte
+//! column id, a 2-byte AUX entry and a 4-byte pointer into the row-index
+//! array, then 2 bytes of row index per non-zero (+ values).
+//!
+//! On-disk layout of one encoded tile:
+//!
+//! ```text
+//! u32  tile_col
+//! u32  nnz
+//! u32  nnc                    non-empty columns
+//! nnc × { u16 col_id, u16 aux, u32 ptr }   column directory
+//! u16 × nnz                   row indices, grouped by column
+//! f32 × nnz                   values (omitted for binary matrices)
+//! ```
+
+use super::{TileEntries, ValueType};
+
+/// Fixed per-tile header size in bytes.
+pub const TILE_HEADER: usize = 12;
+
+/// Bytes of column directory per non-empty column.
+pub const PER_COL: usize = 8;
+
+/// Analytic storage size: paper's `(2+2+4)·nnc + (2+c)·nnz` + header.
+pub fn analytic_size(nnc: usize, nnz: usize, vt: ValueType) -> usize {
+    TILE_HEADER + PER_COL * nnc + (2 + vt.bytes()) * nnz
+}
+
+/// Encode one tile. Entries must be sorted by (row, col) as produced by
+/// the tiler; we regroup by column internally.
+pub fn encode(tile_col: u32, entries: &TileEntries, vt: ValueType, out: &mut Vec<u8>) -> usize {
+    let start = out.len();
+    let nnz = entries.nnz();
+    assert!(nnz > 0, "empty tiles are not stored");
+
+    // Group by column: collect (col, row, val-index) sorted by (col, row).
+    let mut by_col: Vec<(u16, u16, usize)> = entries
+        .coords
+        .iter()
+        .enumerate()
+        .map(|(i, &(r, c))| (c, r, i))
+        .collect();
+    by_col.sort_unstable();
+
+    let mut cols: Vec<(u16, u32)> = Vec::new(); // (col_id, start ptr)
+    for (k, &(c, _, _)) in by_col.iter().enumerate() {
+        if cols.last().map(|&(lc, _)| lc) != Some(c) {
+            cols.push((c, k as u32));
+        }
+    }
+    let nnc = cols.len();
+
+    out.extend_from_slice(&tile_col.to_le_bytes());
+    out.extend_from_slice(&(nnz as u32).to_le_bytes());
+    out.extend_from_slice(&(nnc as u32).to_le_bytes());
+    for &(c, ptr) in &cols {
+        out.extend_from_slice(&c.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // AUX (unused here)
+        out.extend_from_slice(&ptr.to_le_bytes());
+    }
+    for &(_, r, _) in &by_col {
+        out.extend_from_slice(&r.to_le_bytes());
+    }
+    if vt == ValueType::F32 {
+        for &(_, _, i) in &by_col {
+            out.extend_from_slice(&entries.vals[i].to_le_bytes());
+        }
+    }
+    out.len() - start
+}
+
+/// A zero-copy view over one encoded DCSC tile.
+#[derive(Debug, Clone, Copy)]
+pub struct TileView<'a> {
+    pub tile_col: u32,
+    pub nnz: usize,
+    pub nnc: usize,
+    /// Column directory bytes (`8 * nnc`).
+    pub coldir: &'a [u8],
+    /// Row-index bytes (`2 * nnz`).
+    pub rows: &'a [u8],
+    /// Value bytes (`4 * nnz`, empty for binary).
+    pub vals: &'a [u8],
+}
+
+impl<'a> TileView<'a> {
+    /// Column id and row-range of directory entry `k`.
+    #[inline]
+    pub fn col(&self, k: usize) -> (u16, usize, usize) {
+        let base = k * PER_COL;
+        let cid = u16::from_le_bytes([self.coldir[base], self.coldir[base + 1]]);
+        let ptr =
+            u32::from_le_bytes(self.coldir[base + 4..base + 8].try_into().unwrap()) as usize;
+        let end = if k + 1 < self.nnc {
+            u32::from_le_bytes(
+                self.coldir[base + PER_COL + 4..base + PER_COL + 8]
+                    .try_into()
+                    .unwrap(),
+            ) as usize
+        } else {
+            self.nnz
+        };
+        (cid, ptr, end)
+    }
+
+    /// Row index of entry `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> u16 {
+        u16::from_le_bytes([self.rows[2 * i], self.rows[2 * i + 1]])
+    }
+
+    /// Value of entry `i` (binary tiles return 1.0).
+    #[inline]
+    pub fn val(&self, i: usize) -> f32 {
+        if self.vals.is_empty() {
+            1.0
+        } else {
+            f32::from_le_bytes(self.vals[4 * i..4 * i + 4].try_into().unwrap())
+        }
+    }
+}
+
+/// Parse one tile at `buf[off..]`; returns the view and the next offset.
+pub fn parse(buf: &[u8], off: usize, vt: ValueType) -> (TileView<'_>, usize) {
+    let tile_col = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+    let nnz = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap()) as usize;
+    let nnc = u32::from_le_bytes(buf[off + 8..off + 12].try_into().unwrap()) as usize;
+    let dir_start = off + TILE_HEADER;
+    let rows_start = dir_start + nnc * PER_COL;
+    let vals_start = rows_start + nnz * 2;
+    let end = vals_start + nnz * vt.bytes();
+    (
+        TileView {
+            tile_col,
+            nnz,
+            nnc,
+            coldir: &buf[dir_start..rows_start],
+            rows: &buf[rows_start..vals_start],
+            vals: &buf[vals_start..end],
+        },
+        end,
+    )
+}
+
+/// Decode back to sorted [`TileEntries`] (tests / verification).
+pub fn decode(view: &TileView<'_>, vt: ValueType) -> TileEntries {
+    let mut tmp: Vec<((u16, u16), f32)> = Vec::with_capacity(view.nnz);
+    for k in 0..view.nnc {
+        let (c, s, e) = view.col(k);
+        for i in s..e {
+            tmp.push(((view.row(i), c), view.val(i)));
+        }
+    }
+    tmp.sort_unstable_by_key(|&(rc, _)| rc);
+    let mut out = TileEntries::default();
+    for (rc, v) in tmp {
+        out.coords.push(rc);
+        if vt == ValueType::F32 {
+            out.vals.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn random_tile(t: u16, n: usize, seed: u64, weighted: bool) -> TileEntries {
+        let mut rng = Xoshiro256::new(seed);
+        let mut coords: Vec<(u16, u16)> = (0..n)
+            .map(|_| (rng.below(t as u64) as u16, rng.below(t as u64) as u16))
+            .collect();
+        coords.sort_unstable();
+        coords.dedup();
+        let vals = if weighted {
+            coords.iter().map(|_| rng.next_f32() + 0.1).collect()
+        } else {
+            Vec::new()
+        };
+        TileEntries { coords, vals }
+    }
+
+    #[test]
+    fn roundtrip_binary() {
+        let e = random_tile(1024, 4000, 1, false);
+        let mut buf = Vec::new();
+        encode(9, &e, ValueType::Binary, &mut buf);
+        let (v, end) = parse(&buf, 0, ValueType::Binary);
+        assert_eq!(end, buf.len());
+        assert_eq!(v.tile_col, 9);
+        assert_eq!(decode(&v, ValueType::Binary).coords, e.coords);
+    }
+
+    #[test]
+    fn roundtrip_weighted() {
+        let e = random_tile(300, 900, 2, true);
+        let mut buf = Vec::new();
+        encode(1, &e, ValueType::F32, &mut buf);
+        let (v, _) = parse(&buf, 0, ValueType::F32);
+        let d = decode(&v, ValueType::F32);
+        assert_eq!(d.coords, e.coords);
+        assert_eq!(d.vals, e.vals);
+    }
+
+    #[test]
+    fn size_matches_analytic() {
+        let e = random_tile(2048, 3000, 3, false);
+        let nnc = {
+            let mut cols: Vec<u16> = e.coords.iter().map(|&(_, c)| c).collect();
+            cols.sort_unstable();
+            cols.dedup();
+            cols.len()
+        };
+        let mut buf = Vec::new();
+        let sz = encode(0, &e, ValueType::Binary, &mut buf);
+        assert_eq!(sz, analytic_size(nnc, e.nnz(), ValueType::Binary));
+    }
+
+    #[test]
+    fn scsr_smaller_than_dcsc_on_sparse_tiles() {
+        // The paper's headline format claim (Fig 2): for sparse power-law
+        // tiles SCSR ≈ 45-70% of DCSC. A uniformly sparse tile where most
+        // rows/cols have ~1 entry shows the effect strongly.
+        let e = random_tile(8192, 6000, 4, false);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let s = super::super::scsr::encode(0, &e, ValueType::Binary, &mut a);
+        let d = encode(0, &e, ValueType::Binary, &mut b);
+        assert!(
+            (s as f64) < 0.8 * d as f64,
+            "SCSR {s} should be well below DCSC {d}"
+        );
+    }
+}

@@ -1,0 +1,315 @@
+//! Sparse matrix formats.
+//!
+//! * [`Csr`] — classic compressed sparse row, the interchange/baseline
+//!   format (what MKL/Tpetra use; also the *input* of the paper's Table 2
+//!   conversion experiment).
+//! * [`scsr`] — the paper's contribution: tiles in **SCSR + COO** encoding
+//!   (§3.2, Fig 1): per-tile row headers with the MSB tag, 2-byte local
+//!   indices, single-entry rows in a trailing COO section.
+//! * [`dcsc`] — doubly-compressed sparse column tiles (Buluç & Gilbert),
+//!   the format the paper compares SCSR against (Fig 2, Fig 13).
+//! * [`tiled`] — the tiled on-disk/in-memory image: a matrix cut into
+//!   `t × t` cache tiles grouped in tile rows, with a tile-row index so the
+//!   SEM engine can stream tile rows sequentially.
+//! * [`convert`] — CSR → tiled-image conversion (Table 2).
+
+pub mod convert;
+pub mod dcsc;
+pub mod scsr;
+pub mod tiled;
+
+use crate::graph::EdgeList;
+use crate::VertexId;
+
+/// Compressed sparse row. `indptr` has `nrows + 1` entries; column indices
+/// within a row are sorted. `vals == None` encodes a binary matrix (graph
+/// adjacency), matching the paper's graph workloads where no values are
+/// stored at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Vec<u64>,
+    pub indices: Vec<VertexId>,
+    pub vals: Option<Vec<f32>>,
+}
+
+impl Csr {
+    /// Build from an edge list (entries are deduplicated/sorted first if
+    /// needed). Binary values.
+    pub fn from_edgelist(el: &EdgeList) -> Csr {
+        let mut edges = el.edges.clone();
+        edges.sort_unstable();
+        edges.dedup();
+        Self::from_sorted_pairs(el.num_verts, el.num_verts, &edges)
+    }
+
+    /// Build from sorted, deduplicated (row, col) pairs.
+    pub fn from_sorted_pairs(
+        nrows: usize,
+        ncols: usize,
+        pairs: &[(VertexId, VertexId)],
+    ) -> Csr {
+        debug_assert!(pairs.windows(2).all(|w| w[0] < w[1]));
+        let mut indptr = vec![0u64; nrows + 1];
+        for &(r, _) in pairs {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..nrows {
+            indptr[i + 1] += indptr[i];
+        }
+        let indices: Vec<VertexId> = pairs.iter().map(|&(_, c)| c).collect();
+        Csr {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            vals: None,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[VertexId] {
+        &self.indices[self.indptr[r] as usize..self.indptr[r + 1] as usize]
+    }
+
+    /// Values of row `r` (only when the matrix is weighted).
+    #[inline]
+    pub fn row_vals(&self, r: usize) -> Option<&[f32]> {
+        self.vals
+            .as_ref()
+            .map(|v| &v[self.indptr[r] as usize..self.indptr[r + 1] as usize])
+    }
+
+    /// Nominal in-memory footprint in bytes (for Fig 8): 8-byte indptr +
+    /// 4-byte indices (+ 4-byte values when present). This is what a
+    /// CSR-based library (MKL/Tpetra) must hold.
+    pub fn footprint_bytes(&self) -> u64 {
+        let v = if self.vals.is_some() { 4 } else { 0 };
+        (self.indptr.len() * 8 + self.indices.len() * (4 + v)) as u64
+    }
+
+    /// Transpose (yields CSR of Aᵀ).
+    pub fn transpose(&self) -> Csr {
+        let mut pairs: Vec<(VertexId, VertexId)> = Vec::with_capacity(self.nnz());
+        for r in 0..self.nrows {
+            for &c in self.row(r) {
+                pairs.push((c, r as VertexId));
+            }
+        }
+        pairs.sort_unstable();
+        let mut t = Csr::from_sorted_pairs(self.ncols, self.nrows, &pairs);
+        // carry values if present
+        if let Some(vals) = &self.vals {
+            let mut tv = vec![0f32; self.nnz()];
+            let mut cursor: Vec<u64> = t.indptr.clone();
+            for r in 0..self.nrows {
+                let (s, e) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+                for k in s..e {
+                    let c = self.indices[k] as usize;
+                    tv[cursor[c] as usize] = vals[k];
+                    cursor[c] += 1;
+                }
+            }
+            t.vals = Some(tv);
+        }
+        t
+    }
+
+    /// Dense reference multiply: `out = A * x` for one vector (test oracle).
+    pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.ncols);
+        let mut out = vec![0f32; self.nrows];
+        for r in 0..self.nrows {
+            let mut acc = 0f32;
+            match self.row_vals(r) {
+                Some(vals) => {
+                    for (i, &c) in self.row(r).iter().enumerate() {
+                        acc += vals[i] * x[c as usize];
+                    }
+                }
+                None => {
+                    for &c in self.row(r) {
+                        acc += x[c as usize];
+                    }
+                }
+            }
+            out[r] = acc;
+        }
+        out
+    }
+
+    /// Dense reference multiply for a row-major dense matrix with `p`
+    /// columns: `out = A * X` (test oracle; also the innermost loop of the
+    /// CSR baselines).
+    pub fn spmm_ref(&self, x: &[f32], p: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.ncols * p);
+        let mut out = vec![0f32; self.nrows * p];
+        for r in 0..self.nrows {
+            let orow = &mut out[r * p..(r + 1) * p];
+            match self.row_vals(r) {
+                Some(vals) => {
+                    for (i, &c) in self.row(r).iter().enumerate() {
+                        let xr = &x[c as usize * p..c as usize * p + p];
+                        let v = vals[i];
+                        for j in 0..p {
+                            orow[j] += v * xr[j];
+                        }
+                    }
+                }
+                None => {
+                    for &c in self.row(r) {
+                        let xr = &x[c as usize * p..c as usize * p + p];
+                        for j in 0..p {
+                            orow[j] += xr[j];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Value payload carried by a tile encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValueType {
+    /// Binary matrix (graph adjacency): implicit value 1.0, zero bytes.
+    Binary,
+    /// One little-endian f32 per non-zero.
+    F32,
+}
+
+impl ValueType {
+    pub fn bytes(&self) -> usize {
+        match self {
+            ValueType::Binary => 0,
+            ValueType::F32 => 4,
+        }
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            ValueType::Binary => 0,
+            ValueType::F32 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<ValueType> {
+        match c {
+            0 => Some(ValueType::Binary),
+            1 => Some(ValueType::F32),
+            _ => None,
+        }
+    }
+}
+
+/// Tile encoding selector (the Fig 13 `SCSR` ablation toggles this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileFormat {
+    Scsr,
+    Dcsc,
+}
+
+impl TileFormat {
+    pub fn code(&self) -> u8 {
+        match self {
+            TileFormat::Scsr => 0,
+            TileFormat::Dcsc => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<TileFormat> {
+        match c {
+            0 => Some(TileFormat::Scsr),
+            1 => Some(TileFormat::Dcsc),
+            _ => None,
+        }
+    }
+}
+
+/// The entries of one `t × t` tile in decoded (local-index) form — the
+/// unit handed to tile encoders and produced by test decoders.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TileEntries {
+    /// (local_row, local_col), sorted by (row, col); both `< t <= 32768`.
+    pub coords: Vec<(u16, u16)>,
+    /// Parallel values (empty for binary matrices).
+    pub vals: Vec<f32>,
+}
+
+impl TileEntries {
+    pub fn nnz(&self) -> usize {
+        self.coords.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::erdos;
+
+    #[test]
+    fn csr_from_edgelist_roundtrip() {
+        let el = EdgeList {
+            num_verts: 4,
+            edges: vec![(0, 1), (0, 3), (2, 0), (3, 3)],
+        };
+        let m = Csr::from_edgelist(&el);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(0), &[1, 3]);
+        assert_eq!(m.row(1), &[] as &[u32]);
+        assert_eq!(m.row(2), &[0]);
+        assert_eq!(m.row(3), &[3]);
+    }
+
+    #[test]
+    fn spmv_ref_matches_manual() {
+        let el = EdgeList {
+            num_verts: 3,
+            edges: vec![(0, 1), (1, 0), (1, 2), (2, 2)],
+        };
+        let m = Csr::from_edgelist(&el);
+        let y = m.spmv_ref(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![2.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn spmm_ref_p2() {
+        let el = EdgeList {
+            num_verts: 2,
+            edges: vec![(0, 0), (0, 1), (1, 1)],
+        };
+        let m = Csr::from_edgelist(&el);
+        let x = vec![1.0, 10.0, 2.0, 20.0]; // rows [1,10], [2,20]
+        let y = m.spmm_ref(&x, 2);
+        assert_eq!(y, vec![3.0, 30.0, 2.0, 20.0]);
+    }
+
+    #[test]
+    fn transpose_involution_and_values() {
+        let el = erdos::generate(64, 300, 5);
+        let mut m = Csr::from_edgelist(&el);
+        // attach distinguishable values
+        m.vals = Some((0..m.nnz()).map(|i| i as f32 + 0.5).collect());
+        let tt = m.transpose().transpose();
+        assert_eq!(tt.indptr, m.indptr);
+        assert_eq!(tt.indices, m.indices);
+        assert_eq!(tt.vals, m.vals);
+    }
+
+    #[test]
+    fn transpose_spmv_consistent() {
+        let el = erdos::generate(50, 400, 9);
+        let m = Csr::from_edgelist(&el);
+        let t = m.transpose();
+        let x: Vec<f32> = (0..50).map(|i| (i % 7) as f32).collect();
+        // (A x)_i == (Aᵀ)ᵀ x — compare A*x with manual via transpose twice
+        assert_eq!(m.spmv_ref(&x), t.transpose().spmv_ref(&x));
+    }
+}

@@ -1,0 +1,313 @@
+//! SCSR + COO tile encoding (paper §3.2, Fig 1).
+//!
+//! A tile is a `t × t` submatrix with `t <= 32768` so local row/column
+//! indices fit in 15 bits. Rows with **two or more** non-zeros are stored
+//! as SCSR: a 2-byte row header whose most-significant bit is 1 (low 15
+//! bits = local row id) followed by the row's 2-byte column indices (MSB
+//! 0). Rows with exactly **one** non-zero are stored behind the SCSR
+//! stream as COO (row, col) pairs — same 4 bytes per entry but with no
+//! end-of-row test in the inner loop (the paper's conditional-jump
+//! optimization). Values, when present, trail the index data: SCSR-part
+//! values in stream order, then COO-part values.
+//!
+//! On-disk layout of one encoded tile:
+//!
+//! ```text
+//! u32  tile_col     column-block index of this tile inside its tile row
+//! u32  nnz
+//! u16  n_multi      number of rows with >= 2 entries (SCSR part)
+//! u16  n_single     number of single-entry rows (COO part)
+//! u16 × (n_multi + nnz_multi)   SCSR stream (headers MSB=1, cols MSB=0)
+//! u16 × 2 × n_single            COO pairs (row, col)
+//! f32 × nnz                      values (omitted for binary matrices)
+//! ```
+
+use super::{TileEntries, ValueType};
+
+/// MSB tag marking a row header in the SCSR stream.
+pub const ROW_TAG: u16 = 0x8000;
+
+/// Fixed per-tile header size in bytes.
+pub const TILE_HEADER: usize = 12;
+
+/// Analytic storage size (paper's formula): `2·nnr + (2+c)·nnz` plus our
+/// fixed tile header. `nnr` = non-empty rows.
+pub fn analytic_size(nnr: usize, nnz: usize, vt: ValueType) -> usize {
+    TILE_HEADER + 2 * nnr + (2 + vt.bytes()) * nnz
+}
+
+/// Encode one tile. `entries.coords` must be sorted by (row, col) and the
+/// tile must be non-empty. Appends to `out` and returns the encoded size.
+pub fn encode(tile_col: u32, entries: &TileEntries, vt: ValueType, out: &mut Vec<u8>) -> usize {
+    let start = out.len();
+    let nnz = entries.nnz();
+    assert!(nnz > 0, "empty tiles are not stored");
+    debug_assert!(entries.coords.windows(2).all(|w| w[0] < w[1]));
+    if vt == ValueType::F32 {
+        assert_eq!(entries.vals.len(), nnz);
+    }
+
+    // First pass: classify rows.
+    let mut n_multi = 0u32;
+    let mut n_single = 0u32;
+    {
+        let mut i = 0;
+        while i < nnz {
+            let r = entries.coords[i].0;
+            let mut j = i + 1;
+            while j < nnz && entries.coords[j].0 == r {
+                j += 1;
+            }
+            if j - i == 1 {
+                n_single += 1;
+            } else {
+                n_multi += 1;
+            }
+            i = j;
+        }
+    }
+
+    out.extend_from_slice(&tile_col.to_le_bytes());
+    out.extend_from_slice(&(nnz as u32).to_le_bytes());
+    out.extend_from_slice(&(n_multi as u16).to_le_bytes());
+    out.extend_from_slice(&(n_single as u16).to_le_bytes());
+
+    // SCSR stream for multi-entry rows; collect value order on the side.
+    let mut val_order: Vec<usize> = Vec::with_capacity(if vt == ValueType::F32 { nnz } else { 0 });
+    let mut i = 0;
+    while i < nnz {
+        let r = entries.coords[i].0;
+        let mut j = i + 1;
+        while j < nnz && entries.coords[j].0 == r {
+            j += 1;
+        }
+        if j - i >= 2 {
+            debug_assert!(r < ROW_TAG);
+            out.extend_from_slice(&(ROW_TAG | r).to_le_bytes());
+            for k in i..j {
+                let c = entries.coords[k].1;
+                debug_assert!(c < ROW_TAG);
+                out.extend_from_slice(&c.to_le_bytes());
+                if vt == ValueType::F32 {
+                    val_order.push(k);
+                }
+            }
+        }
+        i = j;
+    }
+    // COO section for single-entry rows.
+    let mut i = 0;
+    while i < nnz {
+        let r = entries.coords[i].0;
+        let mut j = i + 1;
+        while j < nnz && entries.coords[j].0 == r {
+            j += 1;
+        }
+        if j - i == 1 {
+            out.extend_from_slice(&r.to_le_bytes());
+            out.extend_from_slice(&entries.coords[i].1.to_le_bytes());
+            if vt == ValueType::F32 {
+                val_order.push(i);
+            }
+        }
+        i = j;
+    }
+    if vt == ValueType::F32 {
+        for &k in &val_order {
+            out.extend_from_slice(&entries.vals[k].to_le_bytes());
+        }
+    }
+    out.len() - start
+}
+
+/// A zero-copy view over one encoded tile.
+#[derive(Debug, Clone, Copy)]
+pub struct TileView<'a> {
+    pub tile_col: u32,
+    pub nnz: usize,
+    pub n_multi: usize,
+    pub n_single: usize,
+    /// SCSR stream bytes: `(n_multi + nnz_multi)` u16 little-endian words.
+    pub scsr: &'a [u8],
+    /// COO pair bytes: `2 * n_single` u16 words.
+    pub coo: &'a [u8],
+    /// Value bytes (`4 * nnz`, empty for binary).
+    pub vals: &'a [u8],
+}
+
+/// Parse one tile at `buf[off..]`; returns the view and the offset just
+/// past the tile. Panics on malformed input (images are trusted; the store
+/// checksums them at a higher level).
+pub fn parse(buf: &[u8], off: usize, vt: ValueType) -> (TileView<'_>, usize) {
+    let tile_col = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+    let nnz = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap()) as usize;
+    let n_multi = u16::from_le_bytes(buf[off + 8..off + 10].try_into().unwrap()) as usize;
+    let n_single = u16::from_le_bytes(buf[off + 10..off + 12].try_into().unwrap()) as usize;
+    let nnz_multi = nnz - n_single;
+    let scsr_words = n_multi + nnz_multi;
+    let scsr_start = off + TILE_HEADER;
+    let coo_start = scsr_start + scsr_words * 2;
+    let vals_start = coo_start + n_single * 4;
+    let end = vals_start + nnz * vt.bytes();
+    (
+        TileView {
+            tile_col,
+            nnz,
+            n_multi,
+            n_single,
+            scsr: &buf[scsr_start..coo_start],
+            coo: &buf[coo_start..vals_start],
+            vals: &buf[vals_start..end],
+        },
+        end,
+    )
+}
+
+/// Decode a tile view back to sorted [`TileEntries`] (test/verification
+/// path; the SpMM kernels consume [`TileView`] directly).
+pub fn decode(view: &TileView<'_>, vt: ValueType) -> TileEntries {
+    let mut e = TileEntries::default();
+    let mut vals_scsr: Vec<f32> = Vec::new();
+    let read_u16 = |b: &[u8], i: usize| u16::from_le_bytes([b[2 * i], b[2 * i + 1]]);
+    let words = view.scsr.len() / 2;
+    let mut i = 0;
+    let mut vi = 0usize;
+    let mut pending: Vec<((u16, u16), usize)> = Vec::new();
+    let mut cur_row = 0u16;
+    while i < words {
+        let w = read_u16(view.scsr, i);
+        if w & ROW_TAG != 0 {
+            cur_row = w & !ROW_TAG;
+        } else {
+            pending.push(((cur_row, w), vi));
+            vi += 1;
+        }
+        i += 1;
+    }
+    for k in 0..view.n_single {
+        let r = read_u16(view.coo, 2 * k);
+        let c = read_u16(view.coo, 2 * k + 1);
+        pending.push(((r, c), vi));
+        vi += 1;
+    }
+    if vt == ValueType::F32 {
+        for k in 0..view.nnz {
+            vals_scsr.push(f32::from_le_bytes(
+                view.vals[4 * k..4 * k + 4].try_into().unwrap(),
+            ));
+        }
+    }
+    pending.sort_unstable_by_key(|&(rc, _)| rc);
+    for (rc, orig) in pending {
+        e.coords.push(rc);
+        if vt == ValueType::F32 {
+            e.vals.push(vals_scsr[orig]);
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn random_tile(t: u16, n: usize, seed: u64, weighted: bool) -> TileEntries {
+        let mut rng = Xoshiro256::new(seed);
+        let mut coords: Vec<(u16, u16)> = (0..n)
+            .map(|_| {
+                (
+                    rng.below(t as u64) as u16,
+                    rng.below(t as u64) as u16,
+                )
+            })
+            .collect();
+        coords.sort_unstable();
+        coords.dedup();
+        let vals = if weighted {
+            coords.iter().map(|_| rng.next_f32() + 0.1).collect()
+        } else {
+            Vec::new()
+        };
+        TileEntries { coords, vals }
+    }
+
+    #[test]
+    fn roundtrip_binary() {
+        let e = random_tile(1024, 5000, 1, false);
+        let mut buf = Vec::new();
+        encode(7, &e, ValueType::Binary, &mut buf);
+        let (view, end) = parse(&buf, 0, ValueType::Binary);
+        assert_eq!(end, buf.len());
+        assert_eq!(view.tile_col, 7);
+        assert_eq!(view.nnz, e.nnz());
+        let d = decode(&view, ValueType::Binary);
+        assert_eq!(d.coords, e.coords);
+    }
+
+    #[test]
+    fn roundtrip_weighted() {
+        let e = random_tile(512, 2000, 2, true);
+        let mut buf = Vec::new();
+        encode(3, &e, ValueType::F32, &mut buf);
+        let (view, _) = parse(&buf, 0, ValueType::F32);
+        let d = decode(&view, ValueType::F32);
+        assert_eq!(d.coords, e.coords);
+        assert_eq!(d.vals, e.vals);
+    }
+
+    #[test]
+    fn single_entry_rows_go_to_coo() {
+        // 3 single-entry rows, 1 row with 3 entries.
+        let e = TileEntries {
+            coords: vec![(0, 5), (2, 1), (2, 3), (2, 9), (4, 0), (9, 9)],
+            vals: vec![],
+        };
+        let mut buf = Vec::new();
+        encode(0, &e, ValueType::Binary, &mut buf);
+        let (view, _) = parse(&buf, 0, ValueType::Binary);
+        assert_eq!(view.n_multi, 1);
+        assert_eq!(view.n_single, 3);
+        // SCSR stream = 1 header + 3 cols = 4 words.
+        assert_eq!(view.scsr.len(), 8);
+        assert_eq!(decode(&view, ValueType::Binary).coords, e.coords);
+    }
+
+    #[test]
+    fn size_matches_analytic_formula() {
+        let e = random_tile(2048, 4000, 3, false);
+        let nnr = {
+            let mut rows: Vec<u16> = e.coords.iter().map(|&(r, _)| r).collect();
+            rows.dedup();
+            rows.len()
+        };
+        let mut buf = Vec::new();
+        let sz = encode(0, &e, ValueType::Binary, &mut buf);
+        // Our stream stores 2 bytes per non-empty *multi* row header plus
+        // 2 bytes per COO row id — exactly 2·nnr — plus 2 bytes per col.
+        assert_eq!(sz, analytic_size(nnr, e.nnz(), ValueType::Binary));
+    }
+
+    #[test]
+    fn back_to_back_tiles_parse() {
+        let e1 = random_tile(256, 300, 4, false);
+        let e2 = random_tile(256, 200, 5, false);
+        let mut buf = Vec::new();
+        encode(0, &e1, ValueType::Binary, &mut buf);
+        encode(1, &e2, ValueType::Binary, &mut buf);
+        let (v1, next) = parse(&buf, 0, ValueType::Binary);
+        let (v2, end) = parse(&buf, next, ValueType::Binary);
+        assert_eq!(v1.tile_col, 0);
+        assert_eq!(v2.tile_col, 1);
+        assert_eq!(end, buf.len());
+        assert_eq!(decode(&v2, ValueType::Binary).coords, e2.coords);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_tile_rejected() {
+        let e = TileEntries::default();
+        let mut buf = Vec::new();
+        encode(0, &e, ValueType::Binary, &mut buf);
+    }
+}

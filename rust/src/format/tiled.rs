@@ -1,0 +1,414 @@
+//! The tiled sparse-matrix image: a matrix cut into `t × t` cache tiles,
+//! tiles grouped into **tile rows** (a band of `t` matrix rows), tile rows
+//! stored back to back with an index so the SEM engine can stream any
+//! contiguous range of tile rows with one sequential read (§3.2, Fig 1).
+//!
+//! Image layout (little-endian):
+//!
+//! ```text
+//! [header: 64 bytes]
+//!   magic "SEMM", version u32, nrows u64, ncols u64, tile u32,
+//!   format u8 (SCSR/DCSC), valtype u8 (binary/f32), pad u16,
+//!   nnz u64, n_tile_rows u32, reserved
+//! [index: n_tile_rows × (offset u64, len u64)]   offsets into data area
+//! [data:  encoded tile rows, each a sequence of non-empty tiles]
+//! ```
+//!
+//! The same bytes serve both execution modes: in-memory SpMM keeps `data`
+//! in RAM; semi-external SpMM leaves it on the store and streams tile rows.
+
+use super::{dcsc, scsr, Csr, TileEntries, TileFormat, ValueType};
+use crate::util::div_ceil;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// Magic bytes of an image file.
+pub const MAGIC: [u8; 4] = *b"SEMM";
+/// Image format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size.
+pub const HEADER_LEN: usize = 64;
+
+/// Image metadata (everything except the tile data itself).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TiledMeta {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub tile: usize,
+    pub format: TileFormat,
+    pub valtype: ValueType,
+    pub nnz: u64,
+}
+
+impl TiledMeta {
+    pub fn n_tile_rows(&self) -> usize {
+        div_ceil(self.nrows, self.tile)
+    }
+
+    pub fn n_tile_cols(&self) -> usize {
+        div_ceil(self.ncols, self.tile)
+    }
+
+    /// Serialize the header to its fixed 64-byte form.
+    pub fn to_bytes(&self) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..4].copy_from_slice(&MAGIC);
+        h[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        h[8..16].copy_from_slice(&(self.nrows as u64).to_le_bytes());
+        h[16..24].copy_from_slice(&(self.ncols as u64).to_le_bytes());
+        h[24..28].copy_from_slice(&(self.tile as u32).to_le_bytes());
+        h[28] = self.format.code();
+        h[29] = self.valtype.code();
+        h[32..40].copy_from_slice(&self.nnz.to_le_bytes());
+        h[40..44].copy_from_slice(&(self.n_tile_rows() as u32).to_le_bytes());
+        h
+    }
+
+    /// Parse a header from its fixed 64-byte form.
+    pub fn from_bytes(h: &[u8]) -> Result<TiledMeta> {
+        if h.len() < HEADER_LEN || h[0..4] != MAGIC {
+            bail!("bad image magic");
+        }
+        let version = u32::from_le_bytes(h[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported image version {version}");
+        }
+        let meta = TiledMeta {
+            nrows: u64::from_le_bytes(h[8..16].try_into().unwrap()) as usize,
+            ncols: u64::from_le_bytes(h[16..24].try_into().unwrap()) as usize,
+            tile: u32::from_le_bytes(h[24..28].try_into().unwrap()) as usize,
+            format: TileFormat::from_code(h[28]).context("bad tile format code")?,
+            valtype: ValueType::from_code(h[29]).context("bad value type code")?,
+            nnz: u64::from_le_bytes(h[32..40].try_into().unwrap()),
+        };
+        let ntr = u32::from_le_bytes(h[40..44].try_into().unwrap()) as usize;
+        if ntr != meta.n_tile_rows() {
+            bail!("inconsistent tile-row count");
+        }
+        Ok(meta)
+    }
+}
+
+/// A fully in-memory tiled image.
+#[derive(Debug, Clone)]
+pub struct TiledImage {
+    pub meta: TiledMeta,
+    /// Per tile row: (offset into `data`, byte length).
+    pub index: Vec<(u64, u64)>,
+    pub data: Vec<u8>,
+}
+
+impl TiledImage {
+    /// Build an image from CSR. `tile` must be `<= MAX_TILE` and a power of
+    /// two is recommended (the engine's row intervals assume it divides
+    /// evenly into NUMA row intervals).
+    pub fn build(m: &Csr, tile: usize, format: TileFormat) -> TiledImage {
+        assert!(tile >= 1 && tile <= crate::MAX_TILE);
+        let vt = if m.vals.is_some() {
+            ValueType::F32
+        } else {
+            ValueType::Binary
+        };
+        let meta = TiledMeta {
+            nrows: m.nrows,
+            ncols: m.ncols,
+            tile,
+            format,
+            valtype: vt,
+            nnz: m.nnz() as u64,
+        };
+        let ntr = meta.n_tile_rows();
+        let ntc = meta.n_tile_cols();
+        let mut index = Vec::with_capacity(ntr);
+        let mut data = Vec::new();
+
+        // Per-band tile buckets, reused across bands.
+        let mut buckets: Vec<TileEntries> = vec![TileEntries::default(); ntc];
+        let mut dirty: Vec<usize> = Vec::new();
+        for tr in 0..ntr {
+            let row_lo = tr * tile;
+            let row_hi = (row_lo + tile).min(m.nrows);
+            for r in row_lo..row_hi {
+                let lr = (r - row_lo) as u16;
+                let (s, e) = (m.indptr[r] as usize, m.indptr[r + 1] as usize);
+                for k in s..e {
+                    let c = m.indices[k] as usize;
+                    let tc = c / tile;
+                    let b = &mut buckets[tc];
+                    if b.coords.is_empty() {
+                        dirty.push(tc);
+                    }
+                    b.coords.push((lr, (c - tc * tile) as u16));
+                    if let Some(vals) = &m.vals {
+                        b.vals.push(vals[k]);
+                    }
+                }
+            }
+            dirty.sort_unstable();
+            let start = data.len() as u64;
+            for &tc in &dirty {
+                let b = &mut buckets[tc];
+                // Rows were visited in order and columns are sorted within
+                // a CSR row, so coords are already (row, col)-sorted.
+                match format {
+                    TileFormat::Scsr => {
+                        scsr::encode(tc as u32, b, vt, &mut data);
+                    }
+                    TileFormat::Dcsc => {
+                        dcsc::encode(tc as u32, b, vt, &mut data);
+                    }
+                }
+                b.coords.clear();
+                b.vals.clear();
+            }
+            dirty.clear();
+            index.push((start, data.len() as u64 - start));
+        }
+        TiledImage { meta, index, data }
+    }
+
+    /// Bytes of tile row `tr`.
+    pub fn tile_row(&self, tr: usize) -> &[u8] {
+        let (off, len) = self.index[tr];
+        &self.data[off as usize..(off + len) as usize]
+    }
+
+    /// Bytes of the contiguous range of tile rows `[lo, hi)`.
+    pub fn tile_rows(&self, lo: usize, hi: usize) -> &[u8] {
+        let start = self.index[lo].0 as usize;
+        let end = (self.index[hi - 1].0 + self.index[hi - 1].1) as usize;
+        &self.data[start..end]
+    }
+
+    /// Total size of the tile data (the quantity Fig 2 compares).
+    pub fn data_bytes(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    /// Full serialized image size (header + index + data).
+    pub fn image_bytes(&self) -> u64 {
+        (HEADER_LEN + self.index.len() * 16 + self.data.len()) as u64
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&self.meta.to_bytes())?;
+        for &(off, len) in &self.index {
+            w.write_all(&off.to_le_bytes())?;
+            w.write_all(&len.to_le_bytes())?;
+        }
+        w.write_all(&self.data)?;
+        Ok(())
+    }
+
+    /// Serialize to a file path.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Load an image fully into memory.
+    pub fn load(path: &Path) -> Result<TiledImage> {
+        let mut f = std::fs::File::open(path)?;
+        let (meta, index, data_start) = read_header(&mut f)?;
+        let mut data = Vec::new();
+        f.seek(SeekFrom::Start(data_start))?;
+        f.read_to_end(&mut data)?;
+        Ok(TiledImage { meta, index, data })
+    }
+}
+
+/// Read header + index from an image file; returns `(meta, index,
+/// data_start_offset)`. The SEM engine uses this to stream tile rows
+/// without loading the data area.
+pub fn read_header(f: &mut std::fs::File) -> Result<(TiledMeta, Vec<(u64, u64)>, u64)> {
+    let mut h = [0u8; HEADER_LEN];
+    f.seek(SeekFrom::Start(0))?;
+    f.read_exact(&mut h)?;
+    let meta = TiledMeta::from_bytes(&h)?;
+    let ntr = meta.n_tile_rows();
+    let mut idx_bytes = vec![0u8; ntr * 16];
+    f.read_exact(&mut idx_bytes)?;
+    let index: Vec<(u64, u64)> = (0..ntr)
+        .map(|i| {
+            (
+                u64::from_le_bytes(idx_bytes[i * 16..i * 16 + 8].try_into().unwrap()),
+                u64::from_le_bytes(idx_bytes[i * 16 + 8..i * 16 + 16].try_into().unwrap()),
+            )
+        })
+        .collect();
+    Ok((meta, index, (HEADER_LEN + ntr * 16) as u64))
+}
+
+/// Decode an entire image back to sorted global (row, col, val) triples —
+/// the verification path used by tests and `convert` checks.
+pub fn decode_all(img: &TiledImage) -> (Vec<(u32, u32)>, Vec<f32>) {
+    let mut coords = Vec::with_capacity(img.meta.nnz as usize);
+    let mut vals = Vec::new();
+    let t = img.meta.tile;
+    for tr in 0..img.meta.n_tile_rows() {
+        let buf = img.tile_row(tr);
+        let mut off = 0usize;
+        while off < buf.len() {
+            match img.meta.format {
+                TileFormat::Scsr => {
+                    let (view, next) = scsr::parse(buf, off, img.meta.valtype);
+                    let e = scsr::decode(&view, img.meta.valtype);
+                    for (i, &(lr, lc)) in e.coords.iter().enumerate() {
+                        coords.push((
+                            (tr * t + lr as usize) as u32,
+                            (view.tile_col as usize * t + lc as usize) as u32,
+                        ));
+                        if img.meta.valtype == ValueType::F32 {
+                            vals.push(e.vals[i]);
+                        }
+                    }
+                    off = next;
+                }
+                TileFormat::Dcsc => {
+                    let (view, next) = dcsc::parse(buf, off, img.meta.valtype);
+                    let e = dcsc::decode(&view, img.meta.valtype);
+                    for (i, &(lr, lc)) in e.coords.iter().enumerate() {
+                        coords.push((
+                            (tr * t + lr as usize) as u32,
+                            (view.tile_col as usize * t + lc as usize) as u32,
+                        ));
+                        if img.meta.valtype == ValueType::F32 {
+                            vals.push(e.vals[i]);
+                        }
+                    }
+                    off = next;
+                }
+            }
+        }
+    }
+    // Global order: tiles are row-major but entries inside a tile row span
+    // column blocks; sort for canonical comparison.
+    let mut perm: Vec<usize> = (0..coords.len()).collect();
+    perm.sort_unstable_by_key(|&i| coords[i]);
+    let coords_sorted: Vec<_> = perm.iter().map(|&i| coords[i]).collect();
+    let vals_sorted: Vec<_> = if vals.is_empty() {
+        vals
+    } else {
+        perm.iter().map(|&i| vals[i]).collect()
+    };
+    (coords_sorted, vals_sorted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{erdos, rmat};
+
+    fn sample_csr() -> Csr {
+        let el = rmat::generate(10, 6_000, rmat::RmatParams::default(), 42);
+        Csr::from_edgelist(&el)
+    }
+
+    #[test]
+    fn build_and_decode_scsr() {
+        let m = sample_csr();
+        let img = TiledImage::build(&m, 256, TileFormat::Scsr);
+        assert_eq!(img.meta.nnz as usize, m.nnz());
+        let (coords, _) = decode_all(&img);
+        let expect: Vec<(u32, u32)> = (0..m.nrows)
+            .flat_map(|r| m.row(r).iter().map(move |&c| (r as u32, c)))
+            .collect();
+        assert_eq!(coords, expect);
+    }
+
+    #[test]
+    fn build_and_decode_dcsc() {
+        let m = sample_csr();
+        let img = TiledImage::build(&m, 256, TileFormat::Dcsc);
+        let (coords, _) = decode_all(&img);
+        assert_eq!(coords.len(), m.nnz());
+    }
+
+    #[test]
+    fn weighted_roundtrip() {
+        let el = erdos::generate(500, 3_000, 3);
+        let mut m = Csr::from_edgelist(&el);
+        m.vals = Some((0..m.nnz()).map(|i| (i as f32).sin() + 2.0).collect());
+        let img = TiledImage::build(&m, 128, TileFormat::Scsr);
+        assert_eq!(img.meta.valtype, ValueType::F32);
+        let (coords, vals) = decode_all(&img);
+        assert_eq!(coords.len(), m.nnz());
+        let expect_vals: Vec<f32> = (0..m.nrows)
+            .flat_map(|r| m.row_vals(r).unwrap().iter().copied())
+            .collect();
+        assert_eq!(vals, expect_vals);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = sample_csr();
+        let img = TiledImage::build(&m, 512, TileFormat::Scsr);
+        let dir = crate::util::tempdir();
+        let p = dir.path().join("m.semm");
+        img.save(&p).unwrap();
+        let img2 = TiledImage::load(&p).unwrap();
+        assert_eq!(img2.meta, img.meta);
+        assert_eq!(img2.index, img.index);
+        assert_eq!(img2.data, img.data);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), img.image_bytes());
+    }
+
+    #[test]
+    fn header_only_read() {
+        let m = sample_csr();
+        let img = TiledImage::build(&m, 512, TileFormat::Scsr);
+        let dir = crate::util::tempdir();
+        let p = dir.path().join("m.semm");
+        img.save(&p).unwrap();
+        let mut f = std::fs::File::open(&p).unwrap();
+        let (meta, index, data_start) = read_header(&mut f).unwrap();
+        assert_eq!(meta, img.meta);
+        assert_eq!(index, img.index);
+        assert_eq!(data_start, HEADER_LEN as u64 + index.len() as u64 * 16);
+    }
+
+    #[test]
+    fn tile_rows_contiguous() {
+        let m = sample_csr();
+        let img = TiledImage::build(&m, 128, TileFormat::Scsr);
+        let ntr = img.meta.n_tile_rows();
+        // Index must tile the data area exactly, in order, no gaps.
+        let mut expect_off = 0u64;
+        for tr in 0..ntr {
+            let (off, len) = img.index[tr];
+            assert_eq!(off, expect_off);
+            expect_off += len;
+        }
+        assert_eq!(expect_off, img.data.len() as u64);
+        // Range read equals concatenation of single reads.
+        if ntr >= 3 {
+            let range = img.tile_rows(1, 3);
+            let mut cat = img.tile_row(1).to_vec();
+            cat.extend_from_slice(img.tile_row(2));
+            assert_eq!(range, &cat[..]);
+        }
+    }
+
+    #[test]
+    fn scsr_beats_dcsc_on_powerlaw() {
+        // Fig 2: SCSR should use 45–70% of DCSC on power-law graphs.
+        let m = sample_csr();
+        let s = TiledImage::build(&m, 256, TileFormat::Scsr).data_bytes() as f64;
+        let d = TiledImage::build(&m, 256, TileFormat::Dcsc).data_bytes() as f64;
+        let ratio = s / d;
+        assert!(ratio < 0.85, "SCSR/DCSC ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = crate::util::tempdir();
+        let p = dir.path().join("junk");
+        std::fs::write(&p, vec![0u8; 128]).unwrap();
+        let mut f = std::fs::File::open(&p).unwrap();
+        assert!(read_header(&mut f).is_err());
+    }
+}

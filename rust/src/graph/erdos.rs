@@ -1,0 +1,47 @@
+//! Erdős–Rényi G(n, m) generator — a no-structure control used by tests
+//! and micro-benchmarks (uniform degrees, no clustering, no skew).
+
+use super::EdgeList;
+use crate::util::Xoshiro256;
+use crate::VertexId;
+
+/// Generate a G(n, m)-style graph by sampling `num_edges` endpoint pairs
+/// uniformly (duplicates/self-loops removed afterwards).
+pub fn generate(num_verts: usize, num_edges: usize, seed: u64) -> EdgeList {
+    let mut rng = Xoshiro256::new(seed);
+    let mut el = EdgeList::new(num_verts);
+    el.edges.reserve(num_edges);
+    for _ in 0..num_edges {
+        let r = rng.below_usize(num_verts) as VertexId;
+        let c = rng.below_usize(num_verts) as VertexId;
+        el.edges.push((r, c));
+    }
+    el.dedup();
+    el
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic() {
+        let g = generate(1000, 10_000, 1);
+        assert_eq!(g.num_verts, 1000);
+        assert!(g.num_edges() > 9_000);
+        for &(r, c) in &g.edges {
+            assert!((r as usize) < 1000 && (c as usize) < 1000);
+            assert_ne!(r, c);
+        }
+    }
+
+    #[test]
+    fn degrees_are_balanced() {
+        let g = generate(1000, 50_000, 2);
+        let deg = g.row_degrees();
+        let mean = g.num_edges() as f64 / 1000.0;
+        let max = *deg.iter().max().unwrap() as f64;
+        // Uniform sampling: max degree within ~3x of mean at this density.
+        assert!(max < 3.0 * mean, "max={max} mean={mean}");
+    }
+}

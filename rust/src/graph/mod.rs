@@ -1,0 +1,152 @@
+//! Graph generation and edge-list handling.
+//!
+//! The paper evaluates on Twitter, Friendster, the Web Data Commons page
+//! graph and two R-MAT graphs (Table 1), plus stochastic-block-model graphs
+//! for the Fig 6 clustering study. We cannot ship those datasets, so this
+//! module provides generators whose *structural* properties match them
+//! (power-law degrees, near-random connectivity, tunable cluster structure)
+//! plus a [`registry`] of scaled-down stand-ins (see DESIGN.md).
+
+pub mod erdos;
+pub mod registry;
+pub mod rmat;
+pub mod sbm;
+
+use crate::util::Xoshiro256;
+use crate::VertexId;
+
+/// An unweighted directed edge list. The adjacency matrix of the graph is
+/// `A[dst][src] = 1` when interpreting SpMV as pull-style propagation; the
+/// format layer is orientation-agnostic (it just stores (row, col) pairs).
+#[derive(Debug, Clone, Default)]
+pub struct EdgeList {
+    /// Number of vertices (matrix dimension).
+    pub num_verts: usize,
+    /// (row, col) pairs; may contain duplicates until [`Self::dedup`].
+    pub edges: Vec<(VertexId, VertexId)>,
+}
+
+impl EdgeList {
+    pub fn new(num_verts: usize) -> Self {
+        Self {
+            num_verts,
+            edges: Vec::new(),
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Sort by (row, col) and remove duplicate edges and self-loops.
+    pub fn dedup(&mut self) {
+        self.edges.retain(|&(r, c)| r != c);
+        self.edges.sort_unstable();
+        self.edges.dedup();
+    }
+
+    /// Make the graph undirected by mirroring every edge, then dedup.
+    pub fn symmetrize(&mut self) {
+        let mirrored: Vec<_> = self.edges.iter().map(|&(r, c)| (c, r)).collect();
+        self.edges.extend(mirrored);
+        self.dedup();
+    }
+
+    /// Transpose (swap row/col on every edge).
+    pub fn transpose(&self) -> EdgeList {
+        EdgeList {
+            num_verts: self.num_verts,
+            edges: self.edges.iter().map(|&(r, c)| (c, r)).collect(),
+        }
+    }
+
+    /// Out-degree of every vertex, interpreting `(row, col)` as `col → row`
+    /// (i.e. column = source). This matches `A x` propagating values from
+    /// sources (columns) to destinations (rows), the PageRank convention.
+    pub fn col_degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.num_verts];
+        for &(_, c) in &self.edges {
+            d[c as usize] += 1;
+        }
+        d
+    }
+
+    /// In-degree per row.
+    pub fn row_degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.num_verts];
+        for &(r, _) in &self.edges {
+            d[r as usize] += 1;
+        }
+        d
+    }
+
+    /// Relabel vertices with a random permutation — destroys any clustered
+    /// ordering (the "unclustered" configuration of Fig 6).
+    pub fn scramble_order(&mut self, seed: u64) {
+        let mut perm: Vec<VertexId> = (0..self.num_verts as VertexId).collect();
+        let mut rng = Xoshiro256::new(seed);
+        rng.shuffle(&mut perm);
+        for e in &mut self.edges {
+            e.0 = perm[e.0 as usize];
+            e.1 = perm[e.1 as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> EdgeList {
+        EdgeList {
+            num_verts: 4,
+            edges: vec![(0, 1), (1, 2), (1, 2), (2, 2), (3, 0)],
+        }
+    }
+
+    #[test]
+    fn dedup_removes_dupes_and_loops() {
+        let mut e = small();
+        e.dedup();
+        assert_eq!(e.edges, vec![(0, 1), (1, 2), (3, 0)]);
+    }
+
+    #[test]
+    fn symmetrize_mirrors() {
+        let mut e = small();
+        e.symmetrize();
+        for &(r, c) in e.edges.clone().iter() {
+            assert!(e.edges.contains(&(c, r)));
+        }
+    }
+
+    #[test]
+    fn degrees() {
+        let mut e = small();
+        e.dedup();
+        assert_eq!(e.col_degrees(), vec![1, 1, 1, 0]);
+        assert_eq!(e.row_degrees(), vec![1, 1, 0, 1]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut e = small();
+        e.dedup();
+        let tt = e.transpose().transpose();
+        assert_eq!(tt.edges, e.edges);
+    }
+
+    #[test]
+    fn scramble_preserves_edge_count_and_degree_multiset() {
+        let mut e = small();
+        e.dedup();
+        let before = e.num_edges();
+        let mut deg_before = e.col_degrees();
+        deg_before.sort_unstable();
+        e.scramble_order(99);
+        assert_eq!(e.num_edges(), before);
+        let mut deg_after = e.col_degrees();
+        deg_after.sort_unstable();
+        assert_eq!(deg_before, deg_after);
+    }
+}

@@ -1,0 +1,196 @@
+//! Dataset registry: scaled-down stand-ins for the paper's Table 1.
+//!
+//! | Paper dataset | Vertices | Edges | Stand-in here |
+//! |---|---|---|---|
+//! | Twitter      | 42M   | 1.5B  | R-MAT, edge factor 36, scrambled order |
+//! | Friendster   | 65M   | 1.7B  | R-MAT, factor 26, undirected, scrambled |
+//! | Page graph   | 3.4B  | 129B  | SBM (1K clusters, IN/OUT=16), clustered order, power-law overlay |
+//! | RMAT-40      | 100M  | 3.7B  | R-MAT, factor 37 |
+//! | RMAT-160     | 100M  | 14B   | R-MAT, factor 140 |
+//!
+//! Each stand-in preserves the property the paper's experiments depend on:
+//! power-law degree skew (load imbalance), near-random connectivity (cache
+//! misses) and — for the page graph — a clustered vertex ordering, which is
+//! what makes SpMV on it less memory-bound and hence more I/O-bound in SEM
+//! (§5.1). Absolute sizes are scaled by `scale` (log2 #vertices); the
+//! default bench profile uses scale 17–18 so every figure regenerates in
+//! minutes on one machine.
+
+use super::{rmat, sbm, EdgeList};
+
+/// How vertices of a dataset are connected/ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Structure {
+    /// R-MAT power-law, vertices randomly relabelled (social networks).
+    PowerLawScrambled,
+    /// R-MAT power-law, natural recursive ordering.
+    PowerLawNatural,
+    /// SBM with a clustered vertex ordering (web page graph).
+    ClusteredWeb,
+}
+
+/// A named dataset configuration.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    /// Registry name (paper dataset it stands in for).
+    pub name: &'static str,
+    /// log2 of the vertex count.
+    pub scale: u32,
+    /// Edges per vertex (paper's ratio preserved).
+    pub edge_factor: usize,
+    /// Whether the paper's dataset is directed.
+    pub directed: bool,
+    pub structure: Structure,
+    /// Generator seed (fixed for reproducibility).
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// Number of vertices.
+    pub fn num_verts(&self) -> usize {
+        1usize << self.scale
+    }
+
+    /// Target number of generated edges (pre-dedup).
+    pub fn target_edges(&self) -> usize {
+        self.num_verts() * self.edge_factor
+    }
+
+    /// Materialize the edge list.
+    pub fn build(&self) -> EdgeList {
+        let mut el = match self.structure {
+            Structure::PowerLawScrambled | Structure::PowerLawNatural => rmat::generate(
+                self.scale,
+                self.target_edges(),
+                rmat::RmatParams::default(),
+                self.seed,
+            ),
+            Structure::ClusteredWeb => sbm::generate(
+                sbm::SbmParams {
+                    num_verts: self.num_verts(),
+                    num_edges: self.target_edges(),
+                    num_clusters: (self.num_verts() / 256).max(1),
+                    in_out: 16.0,
+                    clustered_order: true,
+                },
+                self.seed,
+            ),
+        };
+        if matches!(self.structure, Structure::PowerLawScrambled) {
+            el.scramble_order(self.seed ^ 0x5C5C_5C5C);
+            el.dedup();
+        }
+        if !self.directed {
+            el.symmetrize();
+        }
+        el
+    }
+
+    /// A reduced copy for fast tests (shrinks both scale and edge factor).
+    pub fn shrunk(&self, scale: u32) -> DatasetSpec {
+        DatasetSpec {
+            scale,
+            ..self.clone()
+        }
+    }
+}
+
+/// The bench-profile registry (scale 17–18 ≈ 131–262K vertices).
+pub fn registry() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "twitter",
+            scale: 17,
+            edge_factor: 36,
+            directed: true,
+            structure: Structure::PowerLawScrambled,
+            seed: 0x7717_7E01,
+        },
+        DatasetSpec {
+            name: "friendster",
+            scale: 17,
+            edge_factor: 26,
+            directed: false,
+            structure: Structure::PowerLawScrambled,
+            seed: 0xF21E_4D02,
+        },
+        DatasetSpec {
+            name: "page",
+            scale: 18,
+            edge_factor: 38,
+            directed: true,
+            structure: Structure::ClusteredWeb,
+            seed: 0x9A6E_0003,
+        },
+        DatasetSpec {
+            name: "rmat-40",
+            scale: 17,
+            edge_factor: 37,
+            directed: true,
+            structure: Structure::PowerLawNatural,
+            seed: 0x2A40_0004,
+        },
+        DatasetSpec {
+            name: "rmat-160",
+            scale: 17,
+            edge_factor: 140,
+            directed: true,
+            structure: Structure::PowerLawNatural,
+            seed: 0x2A16_0005,
+        },
+    ]
+}
+
+/// Look a dataset up by name; `None` if unknown.
+pub fn by_name(name: &str) -> Option<DatasetSpec> {
+    registry().into_iter().find(|d| d.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique() {
+        let r = registry();
+        let mut names: Vec<_> = r.iter().map(|d| d.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), r.len());
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_name("twitter").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn shrunk_builds_quickly_and_correctly() {
+        for spec in registry() {
+            let small = spec.shrunk(10);
+            let el = small.build();
+            assert_eq!(el.num_verts, 1024);
+            assert!(el.num_edges() > 0);
+            for &(r, c) in &el.edges {
+                assert!((r as usize) < 1024 && (c as usize) < 1024);
+            }
+            if !small.directed {
+                // undirected stand-ins are symmetric
+                use std::collections::HashSet;
+                let s: HashSet<_> = el.edges.iter().copied().collect();
+                for &(r, c) in &el.edges {
+                    assert!(s.contains(&(c, r)), "{}: missing mirror", small.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn page_standin_is_clustered() {
+        let spec = by_name("page").unwrap().shrunk(12);
+        let el = spec.build();
+        let f = super::super::sbm::in_cluster_fraction(&el, (el.num_verts / 256).max(1));
+        assert!(f > 0.5, "page stand-in should be clustered, got {f}");
+    }
+}

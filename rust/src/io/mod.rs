@@ -1,0 +1,32 @@
+//! External-memory substrate — the simulated SSD array.
+//!
+//! The paper's testbed is a 24-SSD array behind three HBAs (12 GB/s read,
+//! 10 GB/s write) accessed with direct, asynchronous I/O. This module
+//! reproduces the *behavioural* contract the SEM engine depends on:
+//!
+//! * [`store`] — a file-backed store whose reads/writes pass through an
+//!   asymmetric **token-bucket throughput throttle** plus a fixed
+//!   per-request latency, and are fully metered ([`crate::metrics::IoStats`]).
+//!   With the throttle configured to the paper's 12/10 GB/s the engine
+//!   reproduces the I/O-bound ↔ CPU-bound crossover of Fig 5; tighter
+//!   settings emulate slower SSDs.
+//! * [`pool`] — reusable I/O buffer pools (§3.5: large buffer allocation
+//!   via `mmap` is expensive; the paper keeps previously allocated buffers
+//!   and resizes when too small). Toggleable for the Fig 13 ablation.
+//! * [`engine`] — asynchronous read engine with **I/O polling**: worker
+//!   threads issue reads; consumers either spin-poll the completion flag
+//!   (the paper's approach, no thread reschedule latency) or block on a
+//!   condvar (the ablation baseline).
+//! * [`writer`] — merged, sequential, asynchronous writes of the output
+//!   matrix (§3.4: results from many threads are merged into large
+//!   sequential writes; the output is written at most once).
+
+pub mod engine;
+pub mod pool;
+pub mod store;
+pub mod writer;
+
+pub use engine::{IoEngine, IoTicket};
+pub use pool::BufferPool;
+pub use store::{ExtMemStore, StoreConfig, StoreFile};
+pub use writer::MergedWriter;

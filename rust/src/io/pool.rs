@@ -1,0 +1,129 @@
+//! Reusable I/O buffer pools (§3.5).
+//!
+//! Large buffer allocation is expensive (the OS services it with `mmap`
+//! and page faults on first touch), so the paper keeps a set of previously
+//! allocated buffers and resizes one when it is too small for a new
+//! request. `enabled = false` reproduces the Fig 13 `buf-pool` ablation
+//! baseline: every request allocates (and first-touches) a fresh buffer.
+
+use crate::metrics::IoStats;
+use std::sync::{Arc, Mutex};
+
+/// A pool of reusable byte buffers.
+#[derive(Debug)]
+pub struct BufferPool {
+    enabled: bool,
+    free: Mutex<Vec<Vec<u8>>>,
+    /// Maximum number of buffers retained (excess is dropped on `put`).
+    max_buffers: usize,
+    stats: Option<Arc<IoStatsRef>>,
+}
+
+/// Indirection so the pool can report hits/misses into a store's stats.
+#[derive(Debug)]
+pub struct IoStatsRef(pub Arc<crate::io::ExtMemStore>);
+
+impl BufferPool {
+    pub fn new(enabled: bool, max_buffers: usize) -> Arc<BufferPool> {
+        Arc::new(BufferPool {
+            enabled,
+            free: Mutex::new(Vec::new()),
+            max_buffers,
+            stats: None,
+        })
+    }
+
+    /// Pool wired to a store's `IoStats` (pool_hits / pool_misses).
+    pub fn with_store(
+        enabled: bool,
+        max_buffers: usize,
+        store: Arc<crate::io::ExtMemStore>,
+    ) -> Arc<BufferPool> {
+        Arc::new(BufferPool {
+            enabled,
+            free: Mutex::new(Vec::new()),
+            max_buffers,
+            stats: Some(Arc::new(IoStatsRef(store))),
+        })
+    }
+
+    fn io_stats(&self) -> Option<&IoStats> {
+        self.stats.as_ref().map(|s| &s.0.stats)
+    }
+
+    /// Get a zero-length buffer with capacity at least `len`, then resize
+    /// it to `len`. Contents are unspecified (callers overwrite via I/O).
+    pub fn get(&self, len: usize) -> Vec<u8> {
+        if self.enabled {
+            let reused = {
+                let mut free = self.free.lock().unwrap();
+                free.pop()
+            };
+            if let Some(mut buf) = reused {
+                if let Some(s) = self.io_stats() {
+                    s.pool_hits.inc();
+                }
+                // Resize if too small for the new request (paper §3.5).
+                buf.resize(len, 0);
+                return buf;
+            }
+        }
+        if let Some(s) = self.io_stats() {
+            s.pool_misses.inc();
+        }
+        // Fresh allocation — zeroing forces the first-touch page faults the
+        // ablation is meant to expose.
+        vec![0u8; len]
+    }
+
+    /// Return a buffer to the pool.
+    pub fn put(&self, buf: Vec<u8>) {
+        if !self.enabled {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_buffers {
+            free.push(buf);
+        }
+    }
+
+    /// Number of buffers currently retained.
+    pub fn retained(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_grows_capacity() {
+        let pool = BufferPool::new(true, 8);
+        let b = pool.get(100);
+        assert_eq!(b.len(), 100);
+        pool.put(b);
+        let b2 = pool.get(200);
+        assert_eq!(b2.len(), 200);
+        assert_eq!(pool.retained(), 0);
+        pool.put(b2);
+        assert_eq!(pool.retained(), 1);
+    }
+
+    #[test]
+    fn disabled_pool_never_retains() {
+        let pool = BufferPool::new(false, 8);
+        let b = pool.get(64);
+        pool.put(b);
+        assert_eq!(pool.retained(), 0);
+    }
+
+    #[test]
+    fn bounded_retention() {
+        let pool = BufferPool::new(true, 2);
+        for _ in 0..5 {
+            pool.put(vec![0u8; 16]);
+        }
+        assert_eq!(pool.retained(), 2);
+    }
+}

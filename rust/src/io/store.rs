@@ -1,0 +1,357 @@
+//! The throttled, metered file store standing in for the paper's SSD array.
+//!
+//! Throughput throttling uses a shared virtual-time token bucket: each
+//! request reserves a time window proportional to its size on the store's
+//! read (or write) channel, then sleeps until the window has passed. This
+//! makes aggregate throughput across all threads converge to the
+//! configured bandwidth — the property the SEM experiments need — while
+//! remaining exact under concurrency. A fixed per-request latency models
+//! submission overhead; large sequential requests therefore achieve higher
+//! effective throughput than small ones, matching SSD behaviour (§2 of
+//! DESIGN.md lists this substitution).
+
+use crate::metrics::IoStats;
+use anyhow::{Context, Result};
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Store configuration.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Directory holding store objects.
+    pub dir: PathBuf,
+    /// Read bandwidth cap in GB/s (`None` = unthrottled: run at disk speed).
+    pub read_gbps: Option<f64>,
+    /// Write bandwidth cap in GB/s.
+    pub write_gbps: Option<f64>,
+    /// Fixed per-request latency in microseconds (submission overhead).
+    pub latency_us: u64,
+}
+
+impl StoreConfig {
+    /// Unthrottled store in `dir` (tests, format conversion timing).
+    pub fn unthrottled(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            read_gbps: None,
+            write_gbps: None,
+            latency_us: 0,
+        }
+    }
+
+    /// The paper's SSD array: 12 GB/s read, 10 GB/s write, ~30 us latency.
+    pub fn paper_ssd_array(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            read_gbps: Some(12.0),
+            write_gbps: Some(10.0),
+            latency_us: 30,
+        }
+    }
+
+    /// A deliberately slow device for tests/experiments that must be
+    /// I/O-bound (e.g. a single SATA SSD: 0.5 GB/s).
+    pub fn slow_ssd(dir: impl Into<PathBuf>, gbps: f64) -> Self {
+        Self {
+            dir: dir.into(),
+            read_gbps: Some(gbps),
+            write_gbps: Some(gbps * 0.8),
+            latency_us: 60,
+        }
+    }
+}
+
+/// Shared virtual-time bucket for one direction (read or write).
+#[derive(Debug)]
+struct Channel {
+    bps: f64,
+    next_free: Mutex<Instant>,
+}
+
+impl Channel {
+    fn new(gbps: f64) -> Self {
+        Self {
+            bps: gbps * 1e9,
+            next_free: Mutex::new(Instant::now()),
+        }
+    }
+
+    /// Reserve a window for `bytes` and sleep until it has elapsed.
+    fn charge(&self, bytes: usize) {
+        let dur = Duration::from_secs_f64(bytes as f64 / self.bps);
+        let end = {
+            let mut nf = self.next_free.lock().unwrap();
+            let now = Instant::now();
+            let start = if *nf > now { *nf } else { now };
+            *nf = start + dur;
+            *nf
+        };
+        let now = Instant::now();
+        if end > now {
+            std::thread::sleep(end - now);
+        }
+    }
+}
+
+/// The store. Cheap to clone via `Arc`.
+#[derive(Debug)]
+pub struct ExtMemStore {
+    cfg: StoreConfig,
+    read_ch: Option<Channel>,
+    write_ch: Option<Channel>,
+    /// All I/O through this store is accounted here.
+    pub stats: IoStats,
+}
+
+impl ExtMemStore {
+    /// Open (creating the directory if needed).
+    pub fn open(cfg: StoreConfig) -> Result<Arc<ExtMemStore>> {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating store dir {}", cfg.dir.display()))?;
+        Ok(Arc::new(ExtMemStore {
+            read_ch: cfg.read_gbps.map(Channel::new),
+            write_ch: cfg.write_gbps.map(Channel::new),
+            cfg,
+            stats: IoStats::new(),
+        }))
+    }
+
+    /// Absolute path of a named object.
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.cfg.dir.join(name)
+    }
+
+    pub fn config(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    /// Whether a named object exists.
+    pub fn exists(&self, name: &str) -> bool {
+        self.path(name).exists()
+    }
+
+    /// Size of a named object in bytes.
+    pub fn size_of(&self, name: &str) -> Result<u64> {
+        Ok(std::fs::metadata(self.path(name))?.len())
+    }
+
+    /// Remove a named object (ignores missing).
+    pub fn remove(&self, name: &str) -> Result<()> {
+        match std::fs::remove_file(self.path(name)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn latency(&self) {
+        if self.cfg.latency_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.cfg.latency_us));
+        }
+    }
+
+    /// Throttled positional read into `buf` (exact length).
+    pub fn read_at(&self, file: &File, off: u64, buf: &mut [u8]) -> Result<()> {
+        self.stats.read_reqs.inc();
+        self.stats.bytes_read.add(buf.len() as u64);
+        self.stats.read_time.time(|| -> Result<()> {
+            self.latency();
+            if let Some(ch) = &self.read_ch {
+                ch.charge(buf.len());
+            }
+            file.read_exact_at(buf, off)?;
+            Ok(())
+        })
+    }
+
+    /// Throttled positional write.
+    pub fn write_at(&self, file: &File, off: u64, buf: &[u8]) -> Result<()> {
+        self.stats.write_reqs.inc();
+        self.stats.bytes_written.add(buf.len() as u64);
+        self.stats.write_time.time(|| -> Result<()> {
+            self.latency();
+            if let Some(ch) = &self.write_ch {
+                ch.charge(buf.len());
+            }
+            file.write_all_at(buf, off)?;
+            Ok(())
+        })
+    }
+
+    /// Open a named object for reading.
+    pub fn open_file(self: &Arc<Self>, name: &str) -> Result<StoreFile> {
+        let f = File::open(self.path(name))
+            .with_context(|| format!("opening store object {name}"))?;
+        Ok(StoreFile {
+            store: self.clone(),
+            file: Arc::new(f),
+            name: name.to_string(),
+        })
+    }
+
+    /// Create (truncate) a named object, returning a read/write handle.
+    pub fn create_file(self: &Arc<Self>, name: &str) -> Result<StoreFile> {
+        let f = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(self.path(name))
+            .with_context(|| format!("creating store object {name}"))?;
+        Ok(StoreFile {
+            store: self.clone(),
+            file: Arc::new(f),
+            name: name.to_string(),
+        })
+    }
+
+    /// Write an entire object in one (metered) shot.
+    pub fn put(self: &Arc<Self>, name: &str, bytes: &[u8]) -> Result<()> {
+        let f = self.create_file(name)?;
+        f.write_at(0, bytes)?;
+        Ok(())
+    }
+
+    /// Read an entire object (metered).
+    pub fn get(self: &Arc<Self>, name: &str) -> Result<Vec<u8>> {
+        let f = self.open_file(name)?;
+        let len = f.len()? as usize;
+        let mut buf = vec![0u8; len];
+        f.read_at(0, &mut buf)?;
+        Ok(buf)
+    }
+}
+
+/// A handle to one object in the store; all access is throttled + metered.
+#[derive(Debug, Clone)]
+pub struct StoreFile {
+    store: Arc<ExtMemStore>,
+    file: Arc<File>,
+    name: String,
+}
+
+impl StoreFile {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn len(&self) -> Result<u64> {
+        Ok(self.file.metadata()?.len())
+    }
+
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    pub fn store(&self) -> &Arc<ExtMemStore> {
+        &self.store
+    }
+
+    /// Raw file handle (used by [`super::engine`] worker threads).
+    pub fn raw(&self) -> &Arc<File> {
+        &self.file
+    }
+
+    pub fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        self.store.read_at(&self.file, off, buf)
+    }
+
+    pub fn write_at(&self, off: u64, buf: &[u8]) -> Result<()> {
+        self.store.write_at(&self.file, off, buf)
+    }
+
+    pub fn sync(&self) -> Result<()> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let data: Vec<u8> = (0..10_000).map(|i| (i % 251) as u8).collect();
+        store.put("obj", &data).unwrap();
+        assert_eq!(store.get("obj").unwrap(), data);
+        assert!(store.exists("obj"));
+        assert_eq!(store.size_of("obj").unwrap(), 10_000);
+        assert_eq!(store.stats.bytes_written.get(), 10_000);
+        assert_eq!(store.stats.bytes_read.get(), 10_000);
+    }
+
+    #[test]
+    fn positional_reads() {
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        store.put("obj", b"0123456789").unwrap();
+        let f = store.open_file("obj").unwrap();
+        let mut buf = [0u8; 4];
+        f.read_at(3, &mut buf).unwrap();
+        assert_eq!(&buf, b"3456");
+    }
+
+    #[test]
+    fn throttle_caps_throughput() {
+        let dir = crate::util::tempdir();
+        // 100 MB/s read cap; read 20 MB → must take >= ~0.18 s.
+        let store = ExtMemStore::open(StoreConfig {
+            dir: dir.path().to_path_buf(),
+            read_gbps: Some(0.1),
+            write_gbps: None,
+            latency_us: 0,
+        })
+        .unwrap();
+        let data = vec![7u8; 20 << 20];
+        store.put("big", &data).unwrap();
+        let t0 = Instant::now();
+        let _ = store.get("big").unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(secs >= 0.18, "throttled read took only {secs:.3}s");
+    }
+
+    #[test]
+    fn throttle_shared_across_threads() {
+        let dir = crate::util::tempdir();
+        // 200 MB/s; 4 threads × 10 MB = 40 MB → >= ~0.18 s wall.
+        let store = ExtMemStore::open(StoreConfig {
+            dir: dir.path().to_path_buf(),
+            read_gbps: Some(0.2),
+            write_gbps: None,
+            latency_us: 0,
+        })
+        .unwrap();
+        let data = vec![1u8; 10 << 20];
+        store.put("x", &data).unwrap();
+        let t0 = Instant::now();
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let store = store.clone();
+                std::thread::spawn(move || {
+                    let f = store.open_file("x").unwrap();
+                    let mut buf = vec![0u8; 10 << 20];
+                    f.read_at(0, &mut buf).unwrap();
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(secs >= 0.18, "aggregate throttle violated: {secs:.3}s");
+        assert_eq!(store.stats.bytes_read.get(), 40 << 20);
+    }
+
+    #[test]
+    fn remove_missing_ok() {
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        store.remove("nope").unwrap();
+    }
+}

@@ -1,0 +1,216 @@
+//! Merged asynchronous writes of the output dense matrix (§3.4–3.5).
+//!
+//! SSDs want large sequential writes (throughput *and* endurance), so the
+//! engine never lets compute threads write directly: they hand completed
+//! output row-intervals to this writer, which coalesces adjacent extents
+//! into large sequential writes. The scheduler's global execution order
+//! (contiguous tile rows across threads) guarantees extents arrive nearly
+//! in order, so merging is effective — the same `write_rows_async` +
+//! `get_tile_rows` interplay Algorithm 1 describes.
+
+use super::store::StoreFile;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+enum Cmd {
+    Write { off: u64, data: Vec<u8> },
+    Flush(Sender<()>),
+    Stop,
+}
+
+/// Asynchronous merging writer over one store object.
+pub struct MergedWriter {
+    tx: Sender<Cmd>,
+    handle: Option<JoinHandle<Result<WriterReport>>>,
+}
+
+/// What the writer did, for assertions and experiment logs.
+#[derive(Debug, Clone, Default)]
+pub struct WriterReport {
+    /// Extents received from compute threads.
+    pub extents_in: u64,
+    /// Physical writes issued after merging.
+    pub writes_out: u64,
+    /// Total bytes written.
+    pub bytes: u64,
+}
+
+impl MergedWriter {
+    /// Create a writer over `file`. `merge_window` is the number of bytes
+    /// buffered before a forced flush; pending adjacent extents are always
+    /// merged into single writes.
+    pub fn new(file: StoreFile, merge_window: usize) -> MergedWriter {
+        let (tx, rx) = channel::<Cmd>();
+        let handle = std::thread::Builder::new()
+            .name("merged-writer".into())
+            .spawn(move || -> Result<WriterReport> {
+                let mut pending: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+                let mut pending_bytes = 0usize;
+                let mut report = WriterReport::default();
+
+                let flush =
+                    |pending: &mut BTreeMap<u64, Vec<u8>>,
+                     pending_bytes: &mut usize,
+                     report: &mut WriterReport|
+                     -> Result<()> {
+                        // Coalesce adjacent extents.
+                        let mut runs: Vec<(u64, Vec<u8>)> = Vec::new();
+                        for (off, data) in std::mem::take(pending) {
+                            match runs.last_mut() {
+                                Some((roff, rdata))
+                                    if *roff + rdata.len() as u64 == off =>
+                                {
+                                    rdata.extend_from_slice(&data);
+                                }
+                                _ => runs.push((off, data)),
+                            }
+                        }
+                        for (off, data) in runs {
+                            report.writes_out += 1;
+                            report.bytes += data.len() as u64;
+                            file.write_at(off, &data)?;
+                        }
+                        *pending_bytes = 0;
+                        Ok(())
+                    };
+
+                loop {
+                    match rx.recv() {
+                        Ok(Cmd::Write { off, data }) => {
+                            report.extents_in += 1;
+                            pending_bytes += data.len();
+                            pending.insert(off, data);
+                            if pending_bytes >= merge_window {
+                                flush(&mut pending, &mut pending_bytes, &mut report)?;
+                            }
+                        }
+                        Ok(Cmd::Flush(ack)) => {
+                            flush(&mut pending, &mut pending_bytes, &mut report)?;
+                            let _ = ack.send(());
+                        }
+                        Ok(Cmd::Stop) | Err(_) => {
+                            flush(&mut pending, &mut pending_bytes, &mut report)?;
+                            return Ok(report);
+                        }
+                    }
+                }
+            })
+            .expect("spawn merged writer");
+        MergedWriter {
+            tx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Queue an extent for writing (non-blocking).
+    pub fn write(&self, off: u64, data: Vec<u8>) {
+        self.tx
+            .send(Cmd::Write { off, data })
+            .expect("writer stopped");
+    }
+
+    /// Block until everything queued so far is on the store.
+    pub fn flush(&self) {
+        let (ack_tx, ack_rx) = channel();
+        if self.tx.send(Cmd::Flush(ack_tx)).is_ok() {
+            let _ = ack_rx.recv();
+        }
+    }
+
+    /// Stop the writer and return its report.
+    pub fn finish(mut self) -> Result<WriterReport> {
+        let _ = self.tx.send(Cmd::Stop);
+        self.handle
+            .take()
+            .expect("finish called twice")
+            .join()
+            .expect("writer thread panicked")
+    }
+}
+
+impl Drop for MergedWriter {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::store::{ExtMemStore, StoreConfig};
+    use std::sync::Arc;
+
+    fn setup() -> (crate::util::TempDir, Arc<ExtMemStore>) {
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn adjacent_extents_merge_into_one_write() {
+        let (_d, store) = setup();
+        let f = store.create_file("out").unwrap();
+        let w = MergedWriter::new(f, usize::MAX);
+        // Out-of-order adjacent extents.
+        w.write(100, vec![2u8; 100]);
+        w.write(0, vec![1u8; 100]);
+        w.write(200, vec![3u8; 100]);
+        let report = w.finish().unwrap();
+        assert_eq!(report.extents_in, 3);
+        assert_eq!(report.writes_out, 1, "adjacent extents must merge");
+        assert_eq!(report.bytes, 300);
+        let got = store.get("out").unwrap();
+        assert_eq!(&got[0..100], &[1u8; 100][..]);
+        assert_eq!(&got[100..200], &[2u8; 100][..]);
+        assert_eq!(&got[200..300], &[3u8; 100][..]);
+    }
+
+    #[test]
+    fn gap_forces_separate_writes() {
+        let (_d, store) = setup();
+        let f = store.create_file("out").unwrap();
+        let w = MergedWriter::new(f, usize::MAX);
+        w.write(0, vec![1u8; 10]);
+        w.write(100, vec![2u8; 10]);
+        let report = w.finish().unwrap();
+        assert_eq!(report.writes_out, 2);
+        // Bytes in the gap are undefined (sparse file); check the extents.
+        let f2 = store.open_file("out").unwrap();
+        let mut b = [0u8; 10];
+        f2.read_at(100, &mut b).unwrap();
+        assert_eq!(b, [2u8; 10]);
+    }
+
+    #[test]
+    fn flush_makes_data_visible() {
+        let (_d, store) = setup();
+        let f = store.create_file("out").unwrap();
+        let w = MergedWriter::new(f, usize::MAX);
+        w.write(0, b"hello".to_vec());
+        w.flush();
+        let got = store.get("out").unwrap();
+        assert_eq!(&got, b"hello");
+        drop(w);
+    }
+
+    #[test]
+    fn window_triggers_incremental_flush() {
+        let (_d, store) = setup();
+        let f = store.create_file("out").unwrap();
+        let w = MergedWriter::new(f, 1000);
+        for i in 0..10u64 {
+            w.write(i * 500, vec![i as u8; 500]);
+        }
+        let report = w.finish().unwrap();
+        assert_eq!(report.bytes, 5000);
+        // All extents are adjacent; merging within each window still
+        // produces far fewer writes than extents.
+        assert!(report.writes_out <= 5, "writes_out={}", report.writes_out);
+        assert_eq!(store.size_of("out").unwrap(), 5000);
+    }
+}

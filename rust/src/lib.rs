@@ -1,0 +1,59 @@
+//! # SEM-SpMM
+//!
+//! A reproduction of *"Semi-External Memory Sparse Matrix Multiplication for
+//! Billion-Node Graphs"* (Zheng et al., TPDS 2016) as a Rust coordinator over
+//! AOT-compiled JAX/Pallas dense-algebra kernels (loaded via PJRT).
+//!
+//! The library keeps the sparse matrix on a (simulated) SSD array and the
+//! dense matrices — or a vertical partition of them — in memory. The sparse
+//! matrix is stored in the paper's tiled SCSR+COO format and streamed
+//! sequentially; the output dense matrix is written at most once.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`io`] — external-memory substrate: throttled store, buffer pools,
+//!   asynchronous streaming reads with I/O polling, write merging.
+//! * [`format`] — COO/CSR/DCSC and the paper's SCSR+COO tile format.
+//! * [`graph`] — R-MAT / SBM / Erdős–Rényi generators and dataset registry.
+//! * [`matrix`] — NUMA-striped in-memory dense matrices and SSD-resident
+//!   dense matrices with vertical partitioning.
+//! * [`spmm`] — the SpMM engine: dynamic tile-row scheduling, super-block
+//!   cache blocking, width-specialized kernels, IM and SEM drivers.
+//! * [`runtime`] — PJRT client wrapper loading AOT HLO-text artifacts.
+//! * [`coordinator`] — memory budgeting, pass planning, orchestration and
+//!   the request-service loop.
+//! * [`apps`] — PageRank, Krylov–Schur eigensolver, NMF.
+//! * [`baselines`] — MKL-like CSR SpMM, Tpetra-like (incl. simulated
+//!   distributed), FlashGraph-like vertex engine, dense NMF.
+//! * [`bench`] — harness regenerating every figure/table of the paper.
+
+pub mod apps;
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod format;
+pub mod graph;
+pub mod io;
+pub mod matrix;
+pub mod metrics;
+pub mod runtime;
+pub mod spmm;
+pub mod util;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Vertex identifier. Scaled-down graphs in this reproduction stay below
+/// 2^32 vertices; the on-disk formats use explicit widths so this can be
+/// widened without changing images.
+pub type VertexId = u32;
+
+/// Default tile side (paper §3.2: 16K×16K balances storage size and
+/// adaptability to different dense-matrix widths).
+pub const DEFAULT_TILE: usize = 16 * 1024;
+
+/// Maximum tile side supported by the SCSR encoding (15-bit local indices;
+/// the MSB of a `u16` tags row headers).
+pub const MAX_TILE: usize = 32 * 1024;

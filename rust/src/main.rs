@@ -1,0 +1,286 @@
+//! `sem-spmm` — the coordinator CLI.
+//!
+//! ```text
+//! sem-spmm [--config FILE] [--set k=v]... <command> [args]
+//!
+//! commands:
+//!   info    <dataset>                 dataset stats (builds images if needed)
+//!   spmv    <dataset>                 one SEM SpMV
+//!   spmm    <dataset> <cols>          one SEM SpMM
+//!   pagerank <dataset> <iters> [vecs] SpMM-PageRank (vecs in memory: 1-3)
+//!   eigen   <dataset> <nev> [min|max] SEM Krylov-Schur eigensolver
+//!   nmf     <dataset> <k> <iters> [cols_in_mem]
+//!   convert <dataset>                 CSR→SCSR conversion timing (Table 2)
+//!   serve   <addr>                    request-service loop (TCP)
+//!   datasets                          list registry datasets
+//! ```
+//!
+//! Datasets are the scaled Table 1 stand-ins from the registry; add
+//! `--set dataset.scale=N` to resize. The store location and throttling
+//! come from the config (`store.*` keys).
+
+use anyhow::{bail, Context, Result};
+use sem_spmm::apps::{eigen, nmf, pagerank};
+use sem_spmm::config::Config;
+use sem_spmm::coordinator::{service::Service, Catalog};
+use sem_spmm::graph::registry;
+use sem_spmm::io::ExtMemStore;
+use sem_spmm::runtime::{XlaDenseBackend, XlaRuntime};
+use sem_spmm::spmm::{engine, Source};
+use std::path::Path;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Ctx {
+    cfg: Config,
+    catalog: Catalog,
+    store: std::sync::Arc<ExtMemStore>,
+}
+
+fn run() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = Config::default();
+    let mut overrides = Vec::new();
+    // Global flags.
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                let path = args.get(i + 1).context("--config needs a path")?.clone();
+                cfg = Config::load(Path::new(&path))?;
+                args.drain(i..=i + 1);
+            }
+            "--set" => {
+                overrides.push(args.get(i + 1).context("--set needs k=v")?.clone());
+                args.drain(i..=i + 1);
+            }
+            "--version" => {
+                println!("sem-spmm {}", sem_spmm::version());
+                return Ok(());
+            }
+            _ => i += 1,
+        }
+    }
+    cfg.apply_overrides(&overrides)?;
+
+    let Some(cmd) = args.first().cloned() else {
+        bail!("no command; try `sem-spmm help`");
+    };
+    if cmd == "--help" || cmd == "help" {
+        println!("commands: info spmv spmm pagerank eigen nmf convert serve datasets");
+        return Ok(());
+    }
+    if cmd == "datasets" {
+        for d in registry::registry() {
+            println!(
+                "{}\t2^{} vertices\tedge_factor={}\tdirected={}",
+                d.name, d.scale, d.edge_factor, d.directed
+            );
+        }
+        return Ok(());
+    }
+
+    let store = ExtMemStore::open(cfg.store_config()?)?;
+    let tile = cfg.get_usize("format.tile", 4096)?;
+    let ctx = Ctx {
+        catalog: Catalog::new(store.clone(), tile),
+        store,
+        cfg,
+    };
+
+    match cmd.as_str() {
+        "info" => cmd_info(&ctx, &args[1..]),
+        "spmv" => cmd_spmv(&ctx, &args[1..]),
+        "spmm" => cmd_spmm(&ctx, &args[1..]),
+        "pagerank" => cmd_pagerank(&ctx, &args[1..]),
+        "eigen" => cmd_eigen(&ctx, &args[1..]),
+        "nmf" => cmd_nmf(&ctx, &args[1..]),
+        "convert" => cmd_convert(&ctx, &args[1..]),
+        "serve" => cmd_serve(&ctx, &args[1..]),
+        other => bail!("unknown command '{other}'"),
+    }
+}
+
+fn dataset_spec(ctx: &Ctx, name: &str) -> Result<registry::DatasetSpec> {
+    let mut spec =
+        registry::by_name(name).with_context(|| format!("unknown dataset '{name}'"))?;
+    if let Some(s) = ctx.cfg.get("dataset.scale") {
+        spec = spec.shrunk(s.parse().context("dataset.scale")?);
+    }
+    Ok(spec)
+}
+
+fn cmd_info(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("info <dataset>")?;
+    let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    let sem = ctx.catalog.open_adj(&imgs)?;
+    println!("dataset     {}", imgs.name);
+    println!("vertices    {}", imgs.num_verts);
+    println!("edges (nnz) {}", imgs.nnz);
+    println!("tile        {}", sem.meta.tile);
+    println!(
+        "image bytes {}",
+        sem_spmm::util::human_bytes(sem.data_bytes())
+    );
+    Ok(())
+}
+
+fn cmd_spmv(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("spmv <dataset>")?;
+    let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let x = vec![1f32; imgs.num_verts];
+    let opts = ctx.cfg.spmm_opts()?;
+    let (y, stats) = engine::spmv(&src, &x, &opts)?;
+    let sum: f64 = y.iter().map(|&v| v as f64).sum();
+    println!(
+        "spmv {name}: {} in {} ({:.2} GB/s read), checksum {sum}",
+        sem_spmm::util::human_bytes(stats.bytes_read),
+        sem_spmm::util::human_secs(stats.secs),
+        stats.read_gbps
+    );
+    Ok(())
+}
+
+fn cmd_spmm(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("spmm <dataset> <cols>")?;
+    let p: usize = args.get(1).context("spmm <dataset> <cols>")?.parse()?;
+    let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let x = sem_spmm::matrix::DenseMatrix::random(imgs.num_verts, p, 1);
+    let opts = ctx.cfg.spmm_opts()?;
+    let (_, stats) = engine::spmm_out(&src, &x, &opts)?;
+    println!(
+        "spmm {name} p={p}: {} tasks in {} ({:.2} GB/s read)",
+        stats.tasks,
+        sem_spmm::util::human_secs(stats.secs),
+        stats.read_gbps
+    );
+    Ok(())
+}
+
+fn cmd_pagerank(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("pagerank <dataset> <iters> [vecs]")?;
+    let iters: usize = args.get(1).map(|s| s.parse()).unwrap_or(Ok(30))?;
+    let vecs: usize = args.get(2).map(|s| s.parse()).unwrap_or(Ok(3))?;
+    let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let xla = XlaRuntime::from_env().map(XlaDenseBackend::new);
+    let cfg = pagerank::PageRankConfig {
+        iterations: iters,
+        vecs_in_mem: vecs,
+        spmm: ctx.cfg.spmm_opts()?,
+        xla_combine: xla,
+        ..Default::default()
+    };
+    let (pr, stats) = pagerank::pagerank(&src, &imgs.degrees, &ctx.store, &cfg)?;
+    let mut top: Vec<(usize, f32)> = pr.iter().copied().enumerate().collect();
+    top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!(
+        "pagerank {name}: {iters} iters in {} (read {}, wrote {})",
+        sem_spmm::util::human_secs(stats.secs),
+        sem_spmm::util::human_bytes(stats.bytes_read),
+        sem_spmm::util::human_bytes(stats.bytes_written)
+    );
+    for (v, score) in top.iter().take(5) {
+        println!("  v{v}\t{score:.6}");
+    }
+    Ok(())
+}
+
+fn cmd_eigen(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("eigen <dataset> <nev> [min|max]")?;
+    let nev: usize = args.get(1).map(|s| s.parse()).unwrap_or(Ok(8))?;
+    let placement = match args.get(2).map(|s| s.as_str()) {
+        Some("min") => eigen::SubspaceMem::Sem,
+        _ => eigen::SubspaceMem::Mem,
+    };
+    let mut spec = dataset_spec(ctx, name)?;
+    spec.directed = false; // eigensolver needs a symmetric matrix
+    let imgs = ctx.catalog.ensure(&spec)?;
+    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let cfg = eigen::EigenConfig {
+        nev,
+        block: 4,
+        subspace: (4 * nev).next_multiple_of(4).max(16),
+        placement,
+        spmm: ctx.cfg.spmm_opts()?,
+        ..Default::default()
+    };
+    let res = eigen::eigensolve(&src, &ctx.store, &cfg)?;
+    println!(
+        "eigen {name}: {} restarts, {} spmm calls, {}",
+        res.restarts,
+        res.spmm_calls,
+        sem_spmm::util::human_secs(res.secs)
+    );
+    for (i, (ev, r)) in res.eigenvalues.iter().zip(&res.residuals).enumerate() {
+        println!("  λ{i} = {ev:.6} (residual {r:.2e})");
+    }
+    Ok(())
+}
+
+fn cmd_nmf(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("nmf <dataset> <k> <iters> [cols]")?;
+    let k: usize = args.get(1).map(|s| s.parse()).unwrap_or(Ok(16))?;
+    let iters: usize = args.get(2).map(|s| s.parse()).unwrap_or(Ok(5))?;
+    let cols: usize = args.get(3).map(|s| s.parse()).unwrap_or(Ok(k))?;
+    let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    let a = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let at = Source::Sem(ctx.catalog.open_adj_t(&imgs)?);
+    let xla = XlaRuntime::from_env().map(XlaDenseBackend::new);
+    let cfg = nmf::NmfConfig {
+        k,
+        iterations: iters,
+        cols_in_mem: cols,
+        spmm: ctx.cfg.spmm_opts()?,
+        xla,
+        ..Default::default()
+    };
+    let res = nmf::nmf(&a, &at, &ctx.store, &cfg)?;
+    println!(
+        "nmf {name} k={k}: {iters} iters in {}",
+        sem_spmm::util::human_secs(res.secs)
+    );
+    for (i, r) in res.residuals.iter().enumerate() {
+        println!("  iter {i}: ‖A−WH‖ = {r:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_convert(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("convert <dataset>")?;
+    let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    let out = format!("{}.reconv.semm", imgs.name);
+    ctx.store.remove(&out)?;
+    let report = sem_spmm::format::convert::convert(
+        &ctx.store,
+        &imgs.csr,
+        &out,
+        ctx.catalog.tile,
+        sem_spmm::format::TileFormat::Scsr,
+    )?;
+    println!(
+        "convert {name}: {} in {} ({:.2} GB/s), SCSR {}",
+        sem_spmm::util::human_bytes(report.bytes_read + report.bytes_written),
+        sem_spmm::util::human_secs(report.secs),
+        report.io_gbps,
+        sem_spmm::util::human_bytes(report.tiled_bytes)
+    );
+    ctx.store.remove(&out)?;
+    Ok(())
+}
+
+fn cmd_serve(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let addr = args
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("127.0.0.1:7878");
+    let svc = Service::new(ctx.catalog.clone(), ctx.cfg.spmm_opts()?);
+    svc.serve(addr)
+}

@@ -1,0 +1,205 @@
+//! Dense matrices (§3.3).
+//!
+//! SpMM's dense operands are tall-and-skinny: millions/billions of rows, a
+//! handful of columns. Three representations:
+//!
+//! * [`DenseMatrix`] — a plain row-major matrix (the interchange type and
+//!   the unit of a vertical partition once in memory).
+//! * [`numa::NumaDense`] — the engine's in-memory operand: horizontally
+//!   partitioned into power-of-two row intervals striped across (simulated)
+//!   NUMA nodes, with the interval size a multiple of the sparse tile size
+//!   so a tile's rows never straddle intervals (§3.3, Fig 3b).
+//! * [`sem_dense::SemDense`] — an SSD-resident dense matrix stored as
+//!   vertical partitions (column panels), each panel row-major (§3.3,
+//!   Fig 3a); the coordinator streams panels in and out for workloads whose
+//!   dense matrices exceed memory (NMF, Fig 10/11).
+//!
+//! [`ops`] holds the small dense-algebra kernels the applications need
+//! (Gram matrices, small GEMMs, orthonormalization); each has a native
+//! implementation and — where offload pays — an AOT/PJRT twin in
+//! [`crate::runtime`].
+
+pub mod numa;
+pub mod ops;
+pub mod sem_dense;
+
+pub use numa::{NumaConfig, NumaDense};
+pub use sem_dense::SemDense;
+
+use crate::util::Xoshiro256;
+
+/// A row-major dense matrix of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(nrows: usize, ncols: usize) -> DenseMatrix {
+        DenseMatrix {
+            nrows,
+            ncols,
+            data: vec![0.0; nrows * ncols],
+        }
+    }
+
+    /// Constant-filled matrix.
+    pub fn full(nrows: usize, ncols: usize, v: f32) -> DenseMatrix {
+        DenseMatrix {
+            nrows,
+            ncols,
+            data: vec![v; nrows * ncols],
+        }
+    }
+
+    /// Uniform random entries in `[0, 1)` (deterministic per seed).
+    pub fn random(nrows: usize, ncols: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        DenseMatrix {
+            nrows,
+            ncols,
+            data: (0..nrows * ncols).map(|_| rng.next_f32()).collect(),
+        }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(nrows: usize, ncols: usize, data: Vec<f32>) -> DenseMatrix {
+        assert_eq!(data.len(), nrows * ncols);
+        DenseMatrix { nrows, ncols, data }
+    }
+
+    /// Build from a single column vector.
+    pub fn from_col(v: &[f32]) -> DenseMatrix {
+        DenseMatrix {
+            nrows: v.len(),
+            ncols: 1,
+            data: v.to_vec(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.ncols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.ncols + c] = v;
+    }
+
+    /// Extract columns `[c0, c1)` as a new matrix (a vertical partition).
+    pub fn col_slice(&self, c0: usize, c1: usize) -> DenseMatrix {
+        assert!(c0 < c1 && c1 <= self.ncols);
+        let w = c1 - c0;
+        let mut out = DenseMatrix::zeros(self.nrows, w);
+        for r in 0..self.nrows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Paste `panel` into columns `[c0, c0 + panel.ncols)`.
+    pub fn set_col_slice(&mut self, c0: usize, panel: &DenseMatrix) {
+        assert_eq!(panel.nrows, self.nrows);
+        assert!(c0 + panel.ncols <= self.ncols);
+        let w = panel.ncols;
+        for r in 0..self.nrows {
+            self.row_mut(r)[c0..c0 + w].copy_from_slice(panel.row(r));
+        }
+    }
+
+    /// Column `c` as a vector (tests / single-vector apps).
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.nrows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// In-memory footprint in bytes.
+    pub fn footprint_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Serialize the raw row-major f32 data (little-endian).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for &v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize raw row-major f32 data.
+    pub fn from_le_bytes(nrows: usize, ncols: usize, bytes: &[u8]) -> DenseMatrix {
+        assert_eq!(bytes.len(), nrows * ncols * 4);
+        let data = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        DenseMatrix { nrows, ncols, data }
+    }
+
+    /// Max absolute elementwise difference (test helper).
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f32 {
+        assert_eq!(self.nrows, other.nrows);
+        assert_eq!(self.ncols, other.ncols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn col_slice_roundtrip() {
+        let m = DenseMatrix::random(10, 8, 1);
+        let p = m.col_slice(2, 5);
+        assert_eq!(p.ncols, 3);
+        let mut m2 = DenseMatrix::zeros(10, 8);
+        m2.set_col_slice(2, &p);
+        for r in 0..10 {
+            for c in 2..5 {
+                assert_eq!(m2.get(r, c), m.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let m = DenseMatrix::random(7, 3, 2);
+        let b = m.to_le_bytes();
+        let m2 = DenseMatrix::from_le_bytes(7, 3, &b);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn random_deterministic() {
+        assert_eq!(DenseMatrix::random(5, 5, 9), DenseMatrix::random(5, 5, 9));
+        assert_ne!(DenseMatrix::random(5, 5, 9), DenseMatrix::random(5, 5, 10));
+    }
+
+    #[test]
+    fn row_access() {
+        let mut m = DenseMatrix::zeros(3, 2);
+        m.set(1, 0, 5.0);
+        m.set(1, 1, 6.0);
+        assert_eq!(m.row(1), &[5.0, 6.0]);
+        assert_eq!(m.col(1), vec![0.0, 6.0, 0.0]);
+    }
+}

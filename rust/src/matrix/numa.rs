@@ -1,0 +1,267 @@
+//! NUMA-striped in-memory dense matrices (§3.3, Fig 3b).
+//!
+//! The engine's in-memory dense operand is horizontally partitioned into
+//! **row intervals** of `2^i` rows, striped round-robin across NUMA nodes
+//! so every node's memory bandwidth is used evenly. The interval size is a
+//! multiple of the sparse-matrix tile size, so multiplication on a tile
+//! touches rows from a single interval only (one base pointer per tile, no
+//! interval-boundary checks in the inner loop).
+//!
+//! Inside this container each "node" is a separate allocation. On the
+//! paper's 4-socket machine the allocations would be bound to physical
+//! nodes (`mbind`); in this reproduction the striping and the access
+//! pattern are identical but the physical placement is whatever the host
+//! gives us — the Fig 12 `NUMA` ablation therefore measures structural
+//! effects only (see EXPERIMENTS.md).
+
+use super::DenseMatrix;
+use crate::util::next_pow2;
+
+/// Striping configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NumaConfig {
+    /// Number of (simulated) NUMA nodes.
+    pub nodes: usize,
+    /// Rows per interval; a power of two and a multiple of the tile size.
+    pub interval_rows: usize,
+}
+
+impl NumaConfig {
+    /// Interval size for a given tile size: the smallest power of two
+    /// `>= 4 × tile` (several tiles per interval keeps striping coarse
+    /// enough to amortize the per-interval bookkeeping).
+    pub fn for_tile(nodes: usize, tile: usize) -> NumaConfig {
+        NumaConfig {
+            nodes: nodes.max(1),
+            interval_rows: next_pow2(tile.max(1)) * 4,
+        }
+    }
+
+    /// Single-node config (the `numa = off` ablation): one interval holds
+    /// everything, a single allocation.
+    pub fn single(nrows: usize) -> NumaConfig {
+        NumaConfig {
+            nodes: 1,
+            interval_rows: next_pow2(nrows.max(1)),
+        }
+    }
+}
+
+/// A dense matrix split into row intervals striped across NUMA nodes.
+#[derive(Debug, Clone)]
+pub struct NumaDense {
+    pub nrows: usize,
+    pub ncols: usize,
+    cfg: NumaConfig,
+    /// Interval `i` covers rows `[i * interval_rows, ...)` and lives on
+    /// node `i % nodes`. Each buffer is `interval_rows * ncols` long
+    /// (the last one sized to the remaining rows).
+    intervals: Vec<Vec<f32>>,
+}
+
+impl NumaDense {
+    /// All-zeros striped matrix.
+    pub fn zeros(nrows: usize, ncols: usize, cfg: NumaConfig) -> NumaDense {
+        assert!(cfg.interval_rows.is_power_of_two());
+        let n_iv = nrows.div_ceil(cfg.interval_rows).max(1);
+        let intervals = (0..n_iv)
+            .map(|i| {
+                let lo = i * cfg.interval_rows;
+                let hi = ((i + 1) * cfg.interval_rows).min(nrows);
+                vec![0.0f32; (hi - lo) * ncols]
+            })
+            .collect();
+        NumaDense {
+            nrows,
+            ncols,
+            cfg,
+            intervals,
+        }
+    }
+
+    /// Copy a plain matrix into striped form.
+    pub fn from_dense(m: &DenseMatrix, cfg: NumaConfig) -> NumaDense {
+        let mut out = NumaDense::zeros(m.nrows, m.ncols, cfg);
+        for r in 0..m.nrows {
+            out.row_mut(r).copy_from_slice(m.row(r));
+        }
+        out
+    }
+
+    /// Copy back to a plain matrix.
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            m.row_mut(r).copy_from_slice(self.row(r));
+        }
+        m
+    }
+
+    pub fn config(&self) -> NumaConfig {
+        self.cfg
+    }
+
+    pub fn num_intervals(&self) -> usize {
+        self.intervals.len()
+    }
+
+    /// NUMA node an interval is (logically) placed on.
+    pub fn node_of_interval(&self, iv: usize) -> usize {
+        iv % self.cfg.nodes
+    }
+
+    #[inline]
+    fn locate(&self, r: usize) -> (usize, usize) {
+        // interval_rows is a power of two → shift/mask.
+        let shift = self.cfg.interval_rows.trailing_zeros();
+        (r >> shift, r & (self.cfg.interval_rows - 1))
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        let (iv, lr) = self.locate(r);
+        &self.intervals[iv][lr * self.ncols..(lr + 1) * self.ncols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let (iv, lr) = self.locate(r);
+        &mut self.intervals[iv][lr * self.ncols..(lr + 1) * self.ncols]
+    }
+
+    /// Contiguous slice of rows `[lo, hi)` — all within one interval
+    /// (callers pass tile-aligned ranges; the interval size is a multiple
+    /// of the tile size so this always holds for tile-row accesses).
+    #[inline]
+    pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
+        let (iv, lr) = self.locate(lo);
+        let (iv2, _) = self.locate(hi - 1);
+        debug_assert_eq!(iv, iv2, "row range straddles NUMA intervals");
+        &self.intervals[iv][lr * self.ncols..(lr + hi - lo) * self.ncols]
+    }
+
+    /// Raw pointer to the start of row `lo`; the caller guarantees the
+    /// `[lo, hi)` range stays in one interval and synchronizes writes.
+    /// Used by the parallel engine to write disjoint tile-row outputs
+    /// without locking.
+    pub fn rows_ptr(&self, lo: usize, hi: usize) -> *mut f32 {
+        let (iv, lr) = self.locate(lo);
+        let (iv2, _) = self.locate(hi.saturating_sub(1).max(lo));
+        debug_assert_eq!(iv, iv2, "row range straddles NUMA intervals");
+        self.intervals[iv][lr * self.ncols..].as_ptr() as *mut f32
+    }
+
+
+    /// Copy `src` (row-major, `ncols` wide) into rows `[lo, hi)`, chunked
+    /// at interval boundaries.
+    ///
+    /// # Safety
+    /// Callers must guarantee that concurrent calls target disjoint row
+    /// ranges and that no reads of `[lo, hi)` race with this write. The
+    /// SpMM engine satisfies this: the scheduler hands out disjoint tile
+    /// rows and the output matrix is not read until the run completes.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn write_rows_unsync(&self, lo: usize, hi: usize, src: &[f32]) {
+        debug_assert_eq!(src.len(), (hi - lo) * self.ncols);
+        let mut r = lo;
+        let mut s = 0usize;
+        while r < hi {
+            let iv_end = ((r / self.cfg.interval_rows) + 1) * self.cfg.interval_rows;
+            let chunk_hi = hi.min(iv_end);
+            let n = (chunk_hi - r) * self.ncols;
+            let dst = self.rows_ptr(r, chunk_hi);
+            unsafe {
+                std::ptr::copy_nonoverlapping(src.as_ptr().add(s), dst, n);
+            }
+            s += n;
+            r = chunk_hi;
+        }
+    }
+
+    /// Logical footprint in bytes.
+    pub fn footprint_bytes(&self) -> u64 {
+        self.intervals.iter().map(|v| v.len() as u64 * 4).sum()
+    }
+
+    /// Fill every entry (test helper).
+    pub fn fill(&mut self, v: f32) {
+        for iv in &mut self.intervals {
+            iv.fill(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_data() {
+        let m = DenseMatrix::random(1000, 3, 7);
+        let cfg = NumaConfig {
+            nodes: 4,
+            interval_rows: 64,
+        };
+        let nd = NumaDense::from_dense(&m, cfg);
+        assert_eq!(nd.num_intervals(), 16);
+        assert_eq!(nd.to_dense(), m);
+    }
+
+    #[test]
+    fn striping_round_robin() {
+        let cfg = NumaConfig {
+            nodes: 3,
+            interval_rows: 8,
+        };
+        let nd = NumaDense::zeros(64, 1, cfg);
+        let nodes: Vec<usize> = (0..nd.num_intervals())
+            .map(|i| nd.node_of_interval(i))
+            .collect();
+        assert_eq!(nodes, vec![0, 1, 2, 0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn rows_slice_within_interval() {
+        let m = DenseMatrix::random(128, 2, 3);
+        let cfg = NumaConfig {
+            nodes: 2,
+            interval_rows: 32,
+        };
+        let nd = NumaDense::from_dense(&m, cfg);
+        let s = nd.rows(32, 64);
+        assert_eq!(s.len(), 32 * 2);
+        assert_eq!(&s[0..2], m.row(32));
+        assert_eq!(&s[62..64], m.row(63));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)] // the check is a debug_assert
+    #[should_panic(expected = "straddles")]
+    fn straddling_range_panics_in_debug() {
+        let nd = NumaDense::zeros(64, 1, NumaConfig {
+            nodes: 2,
+            interval_rows: 16,
+        });
+        let _ = nd.rows(8, 24);
+    }
+
+    #[test]
+    fn partial_last_interval() {
+        let m = DenseMatrix::random(100, 2, 5);
+        let cfg = NumaConfig {
+            nodes: 2,
+            interval_rows: 64,
+        };
+        let nd = NumaDense::from_dense(&m, cfg);
+        assert_eq!(nd.num_intervals(), 2);
+        assert_eq!(nd.row(99), m.row(99));
+        assert_eq!(nd.footprint_bytes(), 100 * 2 * 4);
+    }
+
+    #[test]
+    fn for_tile_alignment() {
+        let cfg = NumaConfig::for_tile(4, 100);
+        assert!(cfg.interval_rows.is_power_of_two());
+        assert!(cfg.interval_rows >= 4 * 100);
+    }
+}

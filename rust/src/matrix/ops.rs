@@ -1,0 +1,416 @@
+//! Dense-algebra kernels used by the applications (native backend).
+//!
+//! Everything here operates on tall-skinny matrices (n × k with small k)
+//! or on small k × k matrices, which is exactly the dense work PageRank,
+//! the eigensolver and NMF generate around SpMM. Tall operations are
+//! parallelized over row chunks with scoped threads; small ones are
+//! sequential. The [`crate::runtime`] XLA backend mirrors a subset of
+//! these (Gram, NMF updates, Rayleigh–Ritz) — tests assert both agree.
+
+use super::DenseMatrix;
+
+/// Number of worker threads for tall operations.
+fn par_threads(n: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    hw.min(n / 4096).max(1)
+}
+
+/// Run `f(chunk_index, row_lo, row_hi)` over row chunks in parallel.
+fn par_rows(nrows: usize, f: impl Fn(usize, usize, usize) + Sync) {
+    let t = par_threads(nrows);
+    if t <= 1 {
+        f(0, 0, nrows);
+        return;
+    }
+    let chunk = nrows.div_ceil(t);
+    std::thread::scope(|s| {
+        for i in 0..t {
+            let f = &f;
+            let lo = i * chunk;
+            let hi = ((i + 1) * chunk).min(nrows);
+            if lo < hi {
+                s.spawn(move || f(i, lo, hi));
+            }
+        }
+    });
+}
+
+/// Gram matrix `Xᵀ X` (k × k) of a tall-skinny X (n × k).
+pub fn gram(x: &DenseMatrix) -> DenseMatrix {
+    xtx_partialed(x, x)
+}
+
+/// `Xᵀ Y` for two tall-skinny matrices with the same row count.
+pub fn xty(x: &DenseMatrix, y: &DenseMatrix) -> DenseMatrix {
+    xtx_partialed(x, y)
+}
+
+fn xtx_partialed(x: &DenseMatrix, y: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(x.nrows, y.nrows);
+    let (k, m) = (x.ncols, y.ncols);
+    let t = par_threads(x.nrows);
+    let chunk = x.nrows.div_ceil(t);
+    let mut partials = vec![vec![0f64; k * m]; t];
+    std::thread::scope(|s| {
+        for (i, p) in partials.iter_mut().enumerate() {
+            let lo = i * chunk;
+            let hi = ((i + 1) * chunk).min(x.nrows);
+            s.spawn(move || {
+                for r in lo..hi {
+                    let xr = x.row(r);
+                    let yr = y.row(r);
+                    for a in 0..k {
+                        let xa = xr[a] as f64;
+                        if xa != 0.0 {
+                            for b in 0..m {
+                                p[a * m + b] += xa * yr[b] as f64;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let mut out = DenseMatrix::zeros(k, m);
+    for p in &partials {
+        for (o, v) in out.data.iter_mut().zip(p) {
+            *o += *v as f32;
+        }
+    }
+    out
+}
+
+/// Tall-skinny times small: `X (n×k) · B (k×m) → n×m`, parallel over rows.
+pub fn mul_small(x: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(x.ncols, b.nrows);
+    let out = DenseMatrix::zeros(x.nrows, b.ncols);
+    let optr = SendPtr(out.data.as_ptr() as *mut f32);
+    par_rows(x.nrows, |_, lo, hi| {
+        let optr = &optr;
+        for r in lo..hi {
+            let xr = x.row(r);
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add(r * b.ncols), b.ncols)
+            };
+            for a in 0..x.ncols {
+                let xa = xr[a];
+                if xa != 0.0 {
+                    let brow = b.row(a);
+                    for c in 0..b.ncols {
+                        orow[c] += xa * brow[c];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Wrapper making a raw pointer Sync for disjoint parallel writes.
+struct SendPtr(*mut f32);
+unsafe impl Sync for SendPtr {}
+unsafe impl Send for SendPtr {}
+
+/// Small dense GEMM `A (p×q) · B (q×r)` — sequential, for k×k work.
+pub fn gemm_small(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.ncols, b.nrows);
+    let mut out = DenseMatrix::zeros(a.nrows, b.ncols);
+    for i in 0..a.nrows {
+        for l in 0..a.ncols {
+            let av = a.get(i, l);
+            if av != 0.0 {
+                for j in 0..b.ncols {
+                    out.data[i * b.ncols + j] += av * b.get(l, j);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Transpose a small matrix.
+pub fn transpose(a: &DenseMatrix) -> DenseMatrix {
+    let mut out = DenseMatrix::zeros(a.ncols, a.nrows);
+    for i in 0..a.nrows {
+        for j in 0..a.ncols {
+            out.set(j, i, a.get(i, j));
+        }
+    }
+    out
+}
+
+/// `y += alpha * x` elementwise over whole matrices.
+pub fn axpy(y: &mut DenseMatrix, alpha: f32, x: &DenseMatrix) {
+    assert_eq!(y.data.len(), x.data.len());
+    for (yv, xv) in y.data.iter_mut().zip(&x.data) {
+        *yv += alpha * xv;
+    }
+}
+
+/// Scale in place.
+pub fn scale(x: &mut DenseMatrix, alpha: f32) {
+    for v in &mut x.data {
+        *v *= alpha;
+    }
+}
+
+/// Frobenius norm.
+pub fn fro_norm(x: &DenseMatrix) -> f64 {
+    x.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Dot product of two equal-shape matrices viewed as vectors.
+pub fn dot(a: &DenseMatrix, b: &DenseMatrix) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| x as f64 * y as f64)
+        .sum()
+}
+
+/// Column 2-norms of a tall-skinny matrix.
+pub fn col_norms(x: &DenseMatrix) -> Vec<f64> {
+    let mut acc = vec![0f64; x.ncols];
+    for r in 0..x.nrows {
+        for (c, &v) in x.row(r).iter().enumerate() {
+            acc[c] += v as f64 * v as f64;
+        }
+    }
+    acc.into_iter().map(f64::sqrt).collect()
+}
+
+/// In-place modified Gram–Schmidt: orthonormalize the columns of X
+/// against `against` (optional) and each other. Returns the column norms
+/// seen during normalization (near-zero indicates rank deficiency).
+pub fn orthonormalize(x: &mut DenseMatrix, against: Option<&DenseMatrix>) -> Vec<f64> {
+    if let Some(q) = against {
+        assert_eq!(q.nrows, x.nrows);
+        // x -= Q (Qᵀ x): one pass of classical GS against the basis, twice
+        // for stability.
+        for _ in 0..2 {
+            let qtx = xty(q, x);
+            let corr = mul_small(q, &qtx);
+            axpy(x, -1.0, &corr);
+        }
+    }
+    let k = x.ncols;
+    let mut norms = vec![0f64; k];
+    for j in 0..k {
+        // Orthogonalize column j against previous columns (MGS).
+        for i in 0..j {
+            let mut d = 0f64;
+            for r in 0..x.nrows {
+                d += x.get(r, i) as f64 * x.get(r, j) as f64;
+            }
+            for r in 0..x.nrows {
+                let v = x.get(r, j) - d as f32 * x.get(r, i);
+                x.set(r, j, v);
+            }
+        }
+        let mut n = 0f64;
+        for r in 0..x.nrows {
+            n += (x.get(r, j) as f64).powi(2);
+        }
+        let n = n.sqrt();
+        norms[j] = n;
+        let inv = if n > 1e-12 { (1.0 / n) as f32 } else { 0.0 };
+        for r in 0..x.nrows {
+            x.set(r, j, x.get(r, j) * inv);
+        }
+    }
+    norms
+}
+
+/// Symmetric eigendecomposition of a small k × k matrix via cyclic Jacobi.
+/// Returns `(eigenvalues, eigenvectors)` with eigenvalues ascending and
+/// eigenvectors as columns.
+pub fn jacobi_eig(a: &DenseMatrix) -> (Vec<f64>, DenseMatrix) {
+    assert_eq!(a.nrows, a.ncols);
+    let n = a.nrows;
+    let mut m: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let off = |m: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    s += m[i * n + j] * m[i * n + j];
+                }
+            }
+        }
+        s
+    };
+    let mut sweeps = 0;
+    while off(&m) > 1e-18 && sweeps < 100 {
+        sweeps += 1;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for i in 0..n {
+                    let mip = m[i * n + p];
+                    let miq = m[i * n + q];
+                    m[i * n + p] = c * mip - s * miq;
+                    m[i * n + q] = s * mip + c * miq;
+                }
+                for j in 0..n {
+                    let mpj = m[p * n + j];
+                    let mqj = m[q * n + j];
+                    m[p * n + j] = c * mpj - s * mqj;
+                    m[q * n + j] = s * mpj + c * mqj;
+                }
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| m[a * n + a].partial_cmp(&m[b * n + b]).unwrap());
+    let evals: Vec<f64> = order.iter().map(|&i| m[i * n + i]).collect();
+    let mut evecs = DenseMatrix::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            evecs.set(i, new_j, v[i * n + old_j] as f32);
+        }
+    }
+    (evals, evecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_matches_manual() {
+        let x = DenseMatrix::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let g = gram(&x);
+        // XᵀX = [[35, 44], [44, 56]]
+        assert_eq!(g.data, vec![35.0, 44.0, 44.0, 56.0]);
+    }
+
+    #[test]
+    fn mul_small_matches_manual() {
+        let x = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = DenseMatrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let y = mul_small(&x, &b);
+        assert_eq!(y.data, vec![2.0, 1.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn gemm_transpose_consistency() {
+        let a = DenseMatrix::random(4, 3, 1);
+        let b = DenseMatrix::random(3, 5, 2);
+        let ab = gemm_small(&a, &b);
+        let btat = gemm_small(&transpose(&b), &transpose(&a));
+        assert!(ab.max_abs_diff(&transpose(&btat)) < 1e-5);
+    }
+
+    #[test]
+    fn large_parallel_gram_matches_sequential() {
+        let x = DenseMatrix::random(50_000, 4, 3);
+        let g = gram(&x);
+        let mut expect = vec![0f64; 16];
+        for r in 0..x.nrows {
+            let row = x.row(r);
+            for a in 0..4 {
+                for b in 0..4 {
+                    expect[a * 4 + b] += row[a] as f64 * row[b] as f64;
+                }
+            }
+        }
+        for i in 0..16 {
+            assert!((g.data[i] as f64 - expect[i]).abs() / expect[i].abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn orthonormalize_produces_orthonormal_columns() {
+        let mut x = DenseMatrix::random(200, 5, 7);
+        orthonormalize(&mut x, None);
+        let g = gram(&x);
+        for i in 0..5 {
+            for j in 0..5 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (g.get(i, j) - expect).abs() < 1e-4,
+                    "G[{i},{j}] = {}",
+                    g.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormalize_against_basis() {
+        let mut q = DenseMatrix::random(100, 3, 1);
+        orthonormalize(&mut q, None);
+        let mut x = DenseMatrix::random(100, 2, 2);
+        orthonormalize(&mut x, Some(&q));
+        let cross = xty(&q, &x);
+        for v in &cross.data {
+            assert!(v.abs() < 1e-4, "QᵀX entry {v}");
+        }
+    }
+
+    #[test]
+    fn jacobi_known_eigenvalues() {
+        // [[2, 1], [1, 2]] has eigenvalues 1 and 3.
+        let a = DenseMatrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (ev, vecs) = jacobi_eig(&a);
+        assert!((ev[0] - 1.0).abs() < 1e-8);
+        assert!((ev[1] - 3.0).abs() < 1e-8);
+        // A v = λ v for the top eigenvector.
+        let v1 = vecs.col(1);
+        let av = [
+            2.0 * v1[0] + v1[1],
+            v1[0] + 2.0 * v1[1],
+        ];
+        assert!((av[0] - 3.0 * v1[0]).abs() < 1e-5);
+        assert!((av[1] - 3.0 * v1[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn jacobi_random_symmetric_reconstruction() {
+        let n = 6;
+        let b = DenseMatrix::random(n, n, 5);
+        // A = B + Bᵀ (symmetric)
+        let mut a = b.clone();
+        let bt = transpose(&b);
+        axpy(&mut a, 1.0, &bt);
+        let (ev, vecs) = jacobi_eig(&a);
+        // Reconstruct A = V diag(ev) Vᵀ.
+        let mut d = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            d.set(i, i, ev[i] as f32);
+        }
+        let recon = gemm_small(&gemm_small(&vecs, &d), &transpose(&vecs));
+        assert!(a.max_abs_diff(&recon) < 1e-3, "diff {}", a.max_abs_diff(&recon));
+    }
+
+    #[test]
+    fn norms_and_dot() {
+        let a = DenseMatrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((fro_norm(&a) - 5.0).abs() < 1e-9);
+        let b = DenseMatrix::full(2, 2, 1.0);
+        assert!((dot(&a, &b) - 7.0).abs() < 1e-9);
+        assert_eq!(col_norms(&a), vec![3.0, 4.0]);
+    }
+}

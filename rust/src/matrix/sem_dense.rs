@@ -1,0 +1,234 @@
+//! SSD-resident dense matrices stored as vertical partitions (§3.3,
+//! Fig 3a).
+//!
+//! A dense matrix too large for memory is cut into column panels of a
+//! fixed width chosen at creation; each panel is stored row-major in its
+//! own store object (`<name>.p<k>`), so loading a vertical partition is
+//! one long sequential read and storing one is one sequential write —
+//! exactly the In-EM / Out-EM traffic Fig 11 meters.
+
+use super::DenseMatrix;
+use crate::io::ExtMemStore;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Handle to a dense matrix on the store.
+#[derive(Debug, Clone)]
+pub struct SemDense {
+    store: Arc<ExtMemStore>,
+    name: String,
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Column-panel width (last panel may be narrower).
+    pub panel_cols: usize,
+}
+
+impl SemDense {
+    /// Create a new (uninitialized) matrix with the given panel width.
+    pub fn create(
+        store: &Arc<ExtMemStore>,
+        name: &str,
+        nrows: usize,
+        ncols: usize,
+        panel_cols: usize,
+    ) -> Result<SemDense> {
+        if panel_cols == 0 || panel_cols > ncols {
+            bail!("panel width {panel_cols} out of range (ncols = {ncols})");
+        }
+        let m = SemDense {
+            store: store.clone(),
+            name: name.to_string(),
+            nrows,
+            ncols,
+            panel_cols,
+        };
+        // Materialize every panel object (zero-filled lazily by writes;
+        // create now so readers of untouched panels see zeros).
+        for k in 0..m.num_panels() {
+            let f = store.create_file(&m.panel_name(k))?;
+            let (c0, c1) = m.panel_range(k);
+            let bytes = (nrows * (c1 - c0) * 4) as u64;
+            // Extend to full size with a 1-byte tail write (sparse file).
+            if bytes > 0 {
+                f.write_at(bytes - 1, &[0u8])?;
+            }
+        }
+        Ok(m)
+    }
+
+    /// Open an existing matrix (metadata supplied by the coordinator's
+    /// catalog; panels must exist).
+    pub fn open(
+        store: &Arc<ExtMemStore>,
+        name: &str,
+        nrows: usize,
+        ncols: usize,
+        panel_cols: usize,
+    ) -> Result<SemDense> {
+        let m = SemDense {
+            store: store.clone(),
+            name: name.to_string(),
+            nrows,
+            ncols,
+            panel_cols,
+        };
+        for k in 0..m.num_panels() {
+            if !store.exists(&m.panel_name(k)) {
+                bail!("missing panel {} of {}", k, name);
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The underlying store (used by the coordinator's streaming writers).
+    pub fn store_handle(&self) -> Arc<ExtMemStore> {
+        self.store.clone()
+    }
+
+    pub fn num_panels(&self) -> usize {
+        self.ncols.div_ceil(self.panel_cols)
+    }
+
+    fn panel_name(&self, k: usize) -> String {
+        format!("{}.p{}", self.name, k)
+    }
+
+    /// Column range `[c0, c1)` of panel `k`.
+    pub fn panel_range(&self, k: usize) -> (usize, usize) {
+        let c0 = k * self.panel_cols;
+        (c0, (c0 + self.panel_cols).min(self.ncols))
+    }
+
+    /// Load panel `k` into memory (one sequential read — In-EM traffic).
+    pub fn load_panel(&self, k: usize) -> Result<DenseMatrix> {
+        let (c0, c1) = self.panel_range(k);
+        let w = c1 - c0;
+        let f = self.store.open_file(&self.panel_name(k))?;
+        let mut buf = vec![0u8; self.nrows * w * 4];
+        f.read_at(0, &mut buf)?;
+        Ok(DenseMatrix::from_le_bytes(self.nrows, w, &buf))
+    }
+
+    /// Store panel `k` from memory (one sequential write — Out-EM traffic).
+    pub fn store_panel(&self, k: usize, panel: &DenseMatrix) -> Result<()> {
+        let (c0, c1) = self.panel_range(k);
+        if panel.nrows != self.nrows || panel.ncols != c1 - c0 {
+            bail!(
+                "panel shape {}x{} does not match slot {}x{}",
+                panel.nrows,
+                panel.ncols,
+                self.nrows,
+                c1 - c0
+            );
+        }
+        let f = self.store.create_file(&self.panel_name(k))?;
+        f.write_at(0, &panel.to_le_bytes())?;
+        Ok(())
+    }
+
+    /// Load the whole matrix (only for matrices known to fit in memory —
+    /// tests and small workloads).
+    pub fn load_all(&self) -> Result<DenseMatrix> {
+        let mut out = DenseMatrix::zeros(self.nrows, self.ncols);
+        for k in 0..self.num_panels() {
+            let (c0, _) = self.panel_range(k);
+            out.set_col_slice(c0, &self.load_panel(k)?);
+        }
+        Ok(out)
+    }
+
+    /// Write the whole matrix from memory, panel by panel.
+    pub fn store_all(&self, m: &DenseMatrix) -> Result<()> {
+        if m.nrows != self.nrows || m.ncols != self.ncols {
+            bail!("shape mismatch");
+        }
+        for k in 0..self.num_panels() {
+            let (c0, c1) = self.panel_range(k);
+            self.store_panel(k, &m.col_slice(c0, c1))?;
+        }
+        Ok(())
+    }
+
+    /// Total bytes on the store.
+    pub fn storage_bytes(&self) -> u64 {
+        (self.nrows * self.ncols * 4) as u64
+    }
+
+    /// Delete all panels.
+    pub fn delete(&self) -> Result<()> {
+        for k in 0..self.num_panels() {
+            self.store.remove(&self.panel_name(k))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::StoreConfig;
+
+    fn setup() -> (crate::util::TempDir, Arc<ExtMemStore>) {
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn store_load_roundtrip() {
+        let (_d, store) = setup();
+        let m = DenseMatrix::random(100, 10, 1);
+        let sd = SemDense::create(&store, "X", 100, 10, 4).unwrap();
+        assert_eq!(sd.num_panels(), 3);
+        sd.store_all(&m).unwrap();
+        assert_eq!(sd.load_all().unwrap(), m);
+    }
+
+    #[test]
+    fn panel_ranges() {
+        let (_d, store) = setup();
+        let sd = SemDense::create(&store, "X", 10, 10, 4).unwrap();
+        assert_eq!(sd.panel_range(0), (0, 4));
+        assert_eq!(sd.panel_range(1), (4, 8));
+        assert_eq!(sd.panel_range(2), (8, 10));
+    }
+
+    #[test]
+    fn individual_panel_io() {
+        let (_d, store) = setup();
+        let sd = SemDense::create(&store, "X", 50, 6, 3).unwrap();
+        let p1 = DenseMatrix::random(50, 3, 2);
+        sd.store_panel(1, &p1).unwrap();
+        assert_eq!(sd.load_panel(1).unwrap(), p1);
+        // Untouched panel reads back zeros.
+        let p0 = sd.load_panel(0).unwrap();
+        assert!(p0.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let (_d, store) = setup();
+        let sd = SemDense::create(&store, "X", 50, 6, 3).unwrap();
+        let bad = DenseMatrix::zeros(50, 2);
+        assert!(sd.store_panel(0, &bad).is_err());
+    }
+
+    #[test]
+    fn open_missing_fails() {
+        let (_d, store) = setup();
+        assert!(SemDense::open(&store, "nope", 10, 4, 2).is_err());
+    }
+
+    #[test]
+    fn io_is_metered() {
+        let (_d, store) = setup();
+        let sd = SemDense::create(&store, "X", 64, 4, 4).unwrap();
+        let before = store.stats.bytes_read.get();
+        let _ = sd.load_panel(0).unwrap();
+        assert_eq!(store.stats.bytes_read.get() - before, 64 * 4 * 4);
+    }
+}

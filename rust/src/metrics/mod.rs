@@ -1,0 +1,287 @@
+//! Lightweight metrics: atomic counters, scoped timers and the I/O
+//! accounting used by every experiment harness.
+//!
+//! Everything here is lock-free; the SpMM hot path only touches relaxed
+//! atomics (and only when metering is enabled for a run).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotonically increasing counter (bytes, requests, tasks…).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Accumulated wall-clock time in nanoseconds, safe to update from many
+/// threads.
+#[derive(Debug, Default)]
+pub struct TimeAccum {
+    nanos: AtomicU64,
+}
+
+impl TimeAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, adding its elapsed time to the accumulator.
+    #[inline]
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(t0.elapsed().as_nanos() as u64);
+        r
+    }
+
+    #[inline]
+    pub fn add(&self, nanos: u64) {
+        self.nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn reset(&self) {
+        self.nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+/// I/O accounting for one store (or one run): byte counts, request counts
+/// and busy time, split by direction. The paper reports average throughput
+/// (Fig 5b) and total data read (Fig 13 discussion); both derive from this.
+#[derive(Debug, Default)]
+pub struct IoStats {
+    pub bytes_read: Counter,
+    pub bytes_written: Counter,
+    pub read_reqs: Counter,
+    pub write_reqs: Counter,
+    /// Wall time spent inside read calls (including throttle sleeps).
+    pub read_time: TimeAccum,
+    /// Wall time spent inside write calls (including throttle sleeps).
+    pub write_time: TimeAccum,
+    /// Buffer-pool hits / misses (Fig 13 `buf-pool` ablation).
+    pub pool_hits: Counter,
+    pub pool_misses: Counter,
+}
+
+impl IoStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Average read throughput in GB/s over a measured wall-clock window.
+    pub fn read_gbps_over(&self, wall_secs: f64) -> f64 {
+        if wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.bytes_read.get() as f64 / 1e9 / wall_secs
+    }
+
+    /// Average write throughput in GB/s over a measured wall-clock window.
+    pub fn write_gbps_over(&self, wall_secs: f64) -> f64 {
+        if wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.bytes_written.get() as f64 / 1e9 / wall_secs
+    }
+
+    pub fn reset(&self) {
+        self.bytes_read.reset();
+        self.bytes_written.reset();
+        self.read_reqs.reset();
+        self.write_reqs.reset();
+        self.read_time.reset();
+        self.write_time.reset();
+        self.pool_hits.reset();
+        self.pool_misses.reset();
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self, wall_secs: f64) -> String {
+        format!(
+            "read {} in {} reqs ({:.2} GB/s), wrote {} in {} reqs ({:.2} GB/s), pool {}/{} hit",
+            crate::util::human_bytes(self.bytes_read.get()),
+            self.read_reqs.get(),
+            self.read_gbps_over(wall_secs),
+            crate::util::human_bytes(self.bytes_written.get()),
+            self.write_reqs.get(),
+            self.write_gbps_over(wall_secs),
+            self.pool_hits.get(),
+            self.pool_hits.get() + self.pool_misses.get(),
+        )
+    }
+}
+
+/// A simple stopwatch for benchmark harnesses.
+#[derive(Debug)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { t0: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let s = self.secs();
+        self.t0 = Instant::now();
+        s
+    }
+}
+
+/// Peak/current memory accounting used by the `MemBudget` coordinator and
+/// the Fig 8 memory-consumption experiment. Tracks logical allocations the
+/// engine *admits*, not RSS: the paper's memory-capacity effects are policy
+/// decisions driven by sizes (see DESIGN.md substitutions).
+#[derive(Debug, Default)]
+pub struct MemStats {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl MemStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an allocation of `bytes`; updates the peak watermark.
+    pub fn alloc(&self, bytes: u64) {
+        let cur = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        // Lock-free peak update.
+        let mut peak = self.peak.load(Ordering::Relaxed);
+        while cur > peak {
+            match self.peak.compare_exchange_weak(
+                peak,
+                cur,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(p) => peak = p,
+            }
+        }
+    }
+
+    /// Record a free of `bytes`.
+    pub fn free(&self, bytes: u64) {
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.current.store(0, Ordering::Relaxed);
+        self.peak.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = Arc::new(Counter::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn time_accum_runs_closure() {
+        let t = TimeAccum::new();
+        let x = t.time(|| 2 + 2);
+        assert_eq!(x, 4);
+        assert!(t.secs() >= 0.0);
+    }
+
+    #[test]
+    fn mem_peak_tracks_watermark() {
+        let m = MemStats::new();
+        m.alloc(100);
+        m.alloc(50);
+        m.free(120);
+        m.alloc(10);
+        assert_eq!(m.current(), 40);
+        assert_eq!(m.peak(), 150);
+    }
+
+    #[test]
+    fn io_stats_throughput() {
+        let s = IoStats::new();
+        s.bytes_read.add(2_000_000_000);
+        assert!((s.read_gbps_over(1.0) - 2.0).abs() < 1e-9);
+        assert_eq!(s.read_gbps_over(0.0), 0.0);
+    }
+
+    #[test]
+    fn mem_peak_concurrent() {
+        let m = Arc::new(MemStats::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.alloc(10);
+                        m.free(10);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.current(), 0);
+        assert!(m.peak() >= 10);
+    }
+}

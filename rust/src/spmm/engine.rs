@@ -1,0 +1,659 @@
+//! The parallel IM/SEM SpMM drivers (Algorithm 1).
+//!
+//! Both execution modes share the per-task compute path; they differ only
+//! in where tile-row bytes come from (a memory slice vs. an asynchronous
+//! store read) and where the output row interval goes (the in-memory
+//! NUMA-striped matrix, the merging writer, or nowhere for read-only
+//! benchmarks). Each worker keeps **one prefetch in flight**: it claims
+//! task *B* and submits its read before computing task *A*, so streaming
+//! I/O overlaps compute — with I/O polling the worker never blocks in the
+//! kernel, matching §3.5.
+
+use super::kernel::{mul_tile_dcsc, mul_tile_scsr};
+use super::scheduler::{Scheduler, Task};
+use super::SpmmOpts;
+use crate::format::tiled::{TiledImage, TiledMeta, HEADER_LEN};
+use crate::format::{dcsc, scsr, TileFormat};
+use crate::io::{BufferPool, ExtMemStore, IoEngine, IoTicket, MergedWriter, StoreFile};
+use crate::matrix::{DenseMatrix, NumaConfig, NumaDense};
+use crate::metrics::Stopwatch;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A tiled sparse matrix resident on the store (header + index cached in
+/// memory, data streamed on demand).
+#[derive(Debug, Clone)]
+pub struct SemSource {
+    pub file: StoreFile,
+    pub meta: TiledMeta,
+    pub index: Arc<Vec<(u64, u64)>>,
+    pub data_start: u64,
+}
+
+impl SemSource {
+    /// Open a tiled image object on the store, reading only header+index.
+    pub fn open(store: &Arc<ExtMemStore>, name: &str) -> Result<SemSource> {
+        let file = store.open_file(name)?;
+        let mut hdr = [0u8; HEADER_LEN];
+        file.read_at(0, &mut hdr)?;
+        let meta = TiledMeta::from_bytes(&hdr)?;
+        let ntr = meta.n_tile_rows();
+        let mut idx_bytes = vec![0u8; ntr * 16];
+        file.read_at(HEADER_LEN as u64, &mut idx_bytes)?;
+        let index: Vec<(u64, u64)> = (0..ntr)
+            .map(|i| {
+                (
+                    u64::from_le_bytes(idx_bytes[i * 16..i * 16 + 8].try_into().unwrap()),
+                    u64::from_le_bytes(idx_bytes[i * 16 + 8..i * 16 + 16].try_into().unwrap()),
+                )
+            })
+            .collect();
+        Ok(SemSource {
+            file,
+            meta,
+            index: Arc::new(index),
+            data_start: (HEADER_LEN + ntr * 16) as u64,
+        })
+    }
+
+    /// Bytes of tile data on the store.
+    pub fn data_bytes(&self) -> u64 {
+        self.index.last().map(|&(o, l)| o + l).unwrap_or(0)
+    }
+}
+
+/// Where tile-row bytes come from.
+pub enum Source {
+    /// In-memory execution (IM-SpMM).
+    Mem(Arc<TiledImage>),
+    /// Semi-external execution (SEM-SpMM): stream from the store.
+    Sem(SemSource),
+}
+
+impl Source {
+    pub fn meta(&self) -> &TiledMeta {
+        match self {
+            Source::Mem(img) => &img.meta,
+            Source::Sem(s) => &s.meta,
+        }
+    }
+
+    /// Logical in-memory footprint of the sparse matrix for this mode
+    /// (Fig 8): the full image for IM, only header+index for SEM.
+    pub fn sparse_footprint_bytes(&self) -> u64 {
+        match self {
+            Source::Mem(img) => img.image_bytes(),
+            Source::Sem(s) => (HEADER_LEN + s.index.len() * 16) as u64,
+        }
+    }
+}
+
+/// Where finished output row intervals go.
+pub enum OutputSink<'a> {
+    /// Into an in-memory NUMA-striped matrix (written once, disjointly).
+    Mem(&'a NumaDense),
+    /// Streamed to the store through the merging writer (offset = row·p·4).
+    Sem(&'a MergedWriter),
+    /// Dropped — for I/O-only measurements.
+    Discard,
+}
+
+/// Run statistics.
+#[derive(Debug, Clone, Default)]
+pub struct SpmmStats {
+    pub secs: f64,
+    pub tasks: u64,
+    /// Bytes of sparse-matrix data read from the store (SEM mode).
+    pub bytes_read: u64,
+    pub tile_rows: usize,
+    /// Effective read throughput while the run lasted (GB/s).
+    pub read_gbps: f64,
+}
+
+/// Pointer wrapper for disjoint cross-thread output writes.
+struct SyncPtr<T>(*const T);
+unsafe impl<T> Sync for SyncPtr<T> {}
+unsafe impl<T> Send for SyncPtr<T> {}
+
+/// Sparse × dense multiply: `out = A · X` with `A` from `src` (n×m tiled
+/// image) and `X` the in-memory (striped) dense operand (m×p).
+///
+/// This is Algorithm 1. The scheduler hands out contiguous tile-row
+/// groups; each is multiplied into a thread-local buffer and emitted once.
+pub fn spmm(
+    src: &Source,
+    input: &NumaDense,
+    opts: &SpmmOpts,
+    sink: &OutputSink<'_>,
+) -> Result<SpmmStats> {
+    let meta = src.meta().clone();
+    if input.nrows != meta.ncols {
+        bail!(
+            "input dense matrix has {} rows but sparse matrix has {} cols",
+            input.nrows,
+            meta.ncols
+        );
+    }
+    if let OutputSink::Mem(out) = sink {
+        if out.nrows != meta.nrows || out.ncols != input.ncols {
+            bail!("output matrix shape mismatch");
+        }
+    }
+    let p = input.ncols;
+    let t = meta.tile;
+    let ntr = meta.n_tile_rows();
+    let grain = opts.grain_tile_rows(p, t);
+    let sched = Scheduler::new(ntr, grain, opts.threads, opts.load_balance);
+    let tasks_done = AtomicU64::new(0);
+
+    // SEM plumbing: async read engine + pooled buffers.
+    let io: Option<Arc<IoEngine>> = match src {
+        Source::Mem(_) => None,
+        Source::Sem(s) => {
+            let pool = BufferPool::with_store(
+                opts.buf_pool,
+                opts.threads * 4,
+                s.file.store().clone(),
+            );
+            Some(Arc::new(IoEngine::new(opts.io_workers, pool)))
+        }
+    };
+    let read0 = match src {
+        Source::Sem(s) => s.file.store().stats.bytes_read.get(),
+        Source::Mem(_) => 0,
+    };
+
+    let sw = Stopwatch::start();
+    let result: Result<()> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(opts.threads);
+        for ti in 0..opts.threads {
+            let sched = &sched;
+            let meta = &meta;
+            let tasks_done = &tasks_done;
+            let io = io.clone();
+            handles.push(scope.spawn(move || -> Result<()> {
+                worker(
+                    ti, src, input, opts, sink, sched, meta, io.as_deref(), tasks_done,
+                )
+            }));
+        }
+        for h in handles {
+            h.join().expect("spmm worker panicked")?;
+        }
+        Ok(())
+    });
+    result?;
+    if let OutputSink::Sem(w) = sink {
+        w.flush();
+    }
+
+    let secs = sw.secs();
+    let bytes_read = match src {
+        Source::Sem(s) => s.file.store().stats.bytes_read.get() - read0,
+        Source::Mem(_) => 0,
+    };
+    Ok(SpmmStats {
+        secs,
+        tasks: tasks_done.load(Ordering::Relaxed),
+        bytes_read,
+        tile_rows: ntr,
+        read_gbps: bytes_read as f64 / 1e9 / secs.max(1e-12),
+    })
+}
+
+/// One worker thread: claim → (prefetch next) → compute → emit.
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    ti: usize,
+    src: &Source,
+    input: &NumaDense,
+    opts: &SpmmOpts,
+    sink: &OutputSink<'_>,
+    sched: &Scheduler,
+    meta: &TiledMeta,
+    io: Option<&IoEngine>,
+    tasks_done: &AtomicU64,
+) -> Result<()> {
+    enum Fetch<'b> {
+        Mem(&'b [u8]),
+        Ticket(IoTicket),
+        Empty,
+    }
+    let fetch = |task: Task| -> Fetch<'_> {
+        match src {
+            Source::Mem(img) => Fetch::Mem(img.tile_rows(task.lo, task.hi)),
+            Source::Sem(s) => {
+                let off0 = s.index[task.lo].0;
+                let (oe, le) = s.index[task.hi - 1];
+                let len = (oe + le - off0) as usize;
+                if len == 0 {
+                    Fetch::Empty
+                } else {
+                    Fetch::Ticket(io.unwrap().submit(
+                        &s.file,
+                        s.data_start + off0,
+                        len,
+                    ))
+                }
+            }
+        }
+    };
+
+    let p = input.ncols;
+    let t = meta.tile;
+    let mut outbuf: Vec<f32> = Vec::new();
+    let mut cur = sched.claim(ti).map(|task| (task, fetch(task)));
+    while let Some((task, f)) = cur {
+        // Prefetch the next group before computing this one.
+        cur = sched.claim(ti).map(|task| (task, fetch(task)));
+
+        let rows_lo = task.lo * t;
+        let rows_hi = (task.hi * t).min(meta.nrows);
+        outbuf.clear();
+        outbuf.resize((rows_hi - rows_lo) * p, 0.0);
+
+        match f {
+            Fetch::Mem(bytes) => {
+                process_group(task, bytes, src, input, opts, meta, &mut outbuf)?
+            }
+            Fetch::Ticket(tk) => {
+                let buf = tk.wait(opts.io_polling)?;
+                process_group(task, &buf, src, input, opts, meta, &mut outbuf)?;
+                if let Some(io) = io {
+                    io.recycle(buf);
+                }
+            }
+            Fetch::Empty => {}
+        }
+
+        match sink {
+            OutputSink::Mem(out) => unsafe {
+                out.write_rows_unsync(rows_lo, rows_hi, &outbuf);
+            },
+            OutputSink::Sem(w) => {
+                let mut bytes = Vec::with_capacity(outbuf.len() * 4);
+                for &v in &outbuf {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                w.write((rows_lo * p * 4) as u64, bytes);
+            }
+            OutputSink::Discard => {
+                // Keep the compiler from eliding the compute.
+                std::hint::black_box(&outbuf);
+            }
+        }
+        tasks_done.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+/// Multiply all tiles of the group `[task.lo, task.hi)` into `outbuf`.
+fn process_group(
+    task: Task,
+    bytes: &[u8],
+    src: &Source,
+    input: &NumaDense,
+    opts: &SpmmOpts,
+    meta: &TiledMeta,
+    outbuf: &mut [f32],
+) -> Result<()> {
+    let p = input.ncols;
+    let t = meta.tile;
+    let vt = meta.valtype;
+    let rows_lo = task.lo * t;
+    let base_off = tile_row_base(src, task.lo);
+
+    // Per-tile-row byte ranges relative to `bytes`.
+    let n_rows = task.hi - task.lo;
+    let mut row_span = Vec::with_capacity(n_rows);
+    for tr in task.lo..task.hi {
+        let (off, len) = tile_row_extent(src, tr);
+        let s = (off - base_off) as usize;
+        row_span.push((tr, s, s + len as usize));
+    }
+
+    // in/out row slices for one tile at (tr, tc).
+    let mul_one = |off: usize, outbuf: &mut [f32]| -> usize {
+        match meta.format {
+            TileFormat::Scsr => {
+                let (view, next) = scsr::parse(bytes, off, vt);
+                let tc = view.tile_col as usize;
+                let c_hi = ((tc + 1) * t).min(meta.ncols);
+                let in_rows = input.rows(tc * t, c_hi);
+                // Output rows of this tile: local to its tile row.
+                mul_tile_scsr(&view, vt, in_rows, outbuf, p, opts.vectorize);
+                next
+            }
+            TileFormat::Dcsc => {
+                let (view, next) = dcsc::parse(bytes, off, vt);
+                let tc = view.tile_col as usize;
+                let c_hi = ((tc + 1) * t).min(meta.ncols);
+                let in_rows = input.rows(tc * t, c_hi);
+                mul_tile_dcsc(&view, vt, in_rows, outbuf, p, opts.vectorize);
+                next
+            }
+        }
+    };
+
+    if opts.cache_blocking && n_rows > 1 {
+        // Super-block execution (Fig 4): regroup the tiles of the whole
+        // group into s×s blocks of tiles and process block by block, so
+        // the input rows touched by a block stay cached across the
+        // group's tile rows.
+        // Build a per-tile-row directory of (tile_col, byte offset).
+        let mut dirs: Vec<Vec<(u32, usize)>> = Vec::with_capacity(n_rows);
+        for &(_, s, e) in &row_span {
+            let mut dir = Vec::new();
+            let mut off = s;
+            while off < e {
+                let (tc, next) = peek_tile(bytes, off, meta);
+                dir.push((tc, off));
+                off = next;
+            }
+            dirs.push(dir);
+        }
+        let block_tcs = sched_block_tcs(opts, p, t);
+        let ntc = meta.n_tile_cols();
+        let mut cursors = vec![0usize; n_rows];
+        let mut k = 0usize;
+        while k < ntc {
+            let block_end = (k + block_tcs) as u32;
+            for (i, &(tr, _, _)) in row_span.iter().enumerate() {
+                let r0 = tr * t - rows_lo;
+                let r1 = ((tr + 1) * t).min(meta.nrows) - rows_lo;
+                let orow = &mut outbuf[r0 * p..r1 * p];
+                let dir = &dirs[i];
+                while cursors[i] < dir.len() && dir[cursors[i]].0 < block_end {
+                    mul_one(dir[cursors[i]].1, orow);
+                    cursors[i] += 1;
+                }
+            }
+            k += block_tcs;
+        }
+    } else {
+        // Plain order: each tile row's tiles in storage order.
+        for &(tr, s, e) in &row_span {
+            let r0 = tr * t - rows_lo;
+            let r1 = ((tr + 1) * t).min(meta.nrows) - rows_lo;
+            let orow = &mut outbuf[r0 * p..r1 * p];
+            let mut off = s;
+            while off < e {
+                off = mul_one(off, orow);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Tiles per super-block side: `s / t` where `s = cache / (2·p·4)` rows.
+fn sched_block_tcs(opts: &SpmmOpts, p: usize, t: usize) -> usize {
+    (opts.cache_bytes / (2 * p.max(1) * 4 * t)).max(1)
+}
+
+fn tile_row_base(src: &Source, tr: usize) -> u64 {
+    match src {
+        Source::Mem(img) => img.index[tr].0,
+        Source::Sem(s) => s.index[tr].0,
+    }
+}
+
+fn tile_row_extent(src: &Source, tr: usize) -> (u64, u64) {
+    match src {
+        Source::Mem(img) => img.index[tr],
+        Source::Sem(s) => s.index[tr],
+    }
+}
+
+/// Read a tile's column id and its end offset without decoding entries.
+fn peek_tile(bytes: &[u8], off: usize, meta: &TiledMeta) -> (u32, usize) {
+    match meta.format {
+        TileFormat::Scsr => {
+            let (v, next) = scsr::parse(bytes, off, meta.valtype);
+            (v.tile_col, next)
+        }
+        TileFormat::Dcsc => {
+            let (v, next) = dcsc::parse(bytes, off, meta.valtype);
+            (v.tile_col, next)
+        }
+    }
+}
+
+/// Convenience wrapper: multiply into a fresh dense matrix (IM output).
+pub fn spmm_out(
+    src: &Source,
+    input: &DenseMatrix,
+    opts: &SpmmOpts,
+) -> Result<(DenseMatrix, SpmmStats)> {
+    let meta = src.meta();
+    let ncfg = numa_config(meta.tile, input.nrows.max(meta.nrows), opts);
+    let x = NumaDense::from_dense(input, ncfg);
+    let out = NumaDense::zeros(meta.nrows, input.ncols, ncfg);
+    let stats = spmm(src, &x, opts, &OutputSink::Mem(&out))?;
+    Ok((out.to_dense(), stats))
+}
+
+/// Sparse × vector convenience (p = 1).
+pub fn spmv(src: &Source, x: &[f32], opts: &SpmmOpts) -> Result<(Vec<f32>, SpmmStats)> {
+    let (m, stats) = spmm_out(src, &DenseMatrix::from_col(x), opts)?;
+    Ok((m.data, stats))
+}
+
+/// Striping config for a given tile size: tile-aligned power-of-two
+/// intervals when the tile is a power of two, otherwise one interval.
+pub fn numa_config(tile: usize, nrows: usize, opts: &SpmmOpts) -> NumaConfig {
+    let nodes = (opts.threads / 12).max(1); // ~12 cores per socket
+    if tile.is_power_of_two() {
+        NumaConfig::for_tile(nodes, tile)
+    } else {
+        NumaConfig::single(nrows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::Csr;
+    use crate::graph::{erdos, rmat};
+    use crate::io::StoreConfig;
+
+    fn sample_csr(scale: u32, edges: usize, seed: u64) -> Csr {
+        let el = rmat::generate(scale, edges, rmat::RmatParams::default(), seed);
+        Csr::from_edgelist(&el)
+    }
+
+    fn check_against_ref(m: &Csr, tile: usize, p: usize, opts: &SpmmOpts, fmt: TileFormat) {
+        let img = Arc::new(TiledImage::build(m, tile, fmt));
+        let x = DenseMatrix::random(m.ncols, p, 42);
+        let expect = m.spmm_ref(&x.data, p);
+        let (got, stats) = spmm_out(&Source::Mem(img), &x, opts).unwrap();
+        assert!(stats.tasks > 0);
+        for (i, (a, b)) in got.data.iter().zip(&expect).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                "mismatch at {i}: {a} vs {b} (p={p}, tile={tile})"
+            );
+        }
+    }
+
+    #[test]
+    fn im_spmm_matches_reference_all_widths() {
+        let m = sample_csr(10, 8000, 3);
+        for p in [1, 2, 4, 8, 16, 3] {
+            check_against_ref(&m, 256, p, &SpmmOpts::default(), TileFormat::Scsr);
+        }
+    }
+
+    #[test]
+    fn im_spmm_dcsc_matches() {
+        let m = sample_csr(10, 8000, 4);
+        check_against_ref(&m, 256, 4, &SpmmOpts::default(), TileFormat::Dcsc);
+    }
+
+    #[test]
+    fn ablation_toggles_all_give_same_numbers() {
+        let m = sample_csr(9, 6000, 5);
+        for lb in [true, false] {
+            for cb in [true, false] {
+                for vec in [true, false] {
+                    let opts = SpmmOpts {
+                        load_balance: lb,
+                        cache_blocking: cb,
+                        vectorize: vec,
+                        threads: 3,
+                        ..Default::default()
+                    };
+                    check_against_ref(&m, 128, 4, &opts, TileFormat::Scsr);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_matches_parallel() {
+        let m = sample_csr(10, 9000, 6);
+        check_against_ref(&m, 256, 8, &SpmmOpts::sequential(), TileFormat::Scsr);
+        check_against_ref(
+            &m,
+            256,
+            8,
+            &SpmmOpts {
+                threads: 8,
+                ..Default::default()
+            },
+            TileFormat::Scsr,
+        );
+    }
+
+    #[test]
+    fn sem_spmm_matches_im() {
+        let m = sample_csr(10, 10_000, 7);
+        let img = TiledImage::build(&m, 256, TileFormat::Scsr);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("m.semm", &buf).unwrap();
+
+        let sem = SemSource::open(&store, "m.semm").unwrap();
+        assert_eq!(sem.meta, img.meta);
+        let x = DenseMatrix::random(m.ncols, 4, 9);
+        let opts = SpmmOpts {
+            threads: 4,
+            ..Default::default()
+        };
+        let (im_out, _) = spmm_out(&Source::Mem(Arc::new(img)), &x, &opts).unwrap();
+        let (sem_out, stats) = spmm_out(&Source::Sem(sem), &x, &opts).unwrap();
+        assert!(stats.bytes_read > 0, "SEM must read from the store");
+        assert_eq!(im_out.data.len(), sem_out.data.len());
+        let diff = im_out.max_abs_diff(&sem_out);
+        assert!(diff < 1e-4, "IM vs SEM diff {diff}");
+    }
+
+    #[test]
+    fn sem_spmm_polling_and_blocking_agree() {
+        let m = sample_csr(9, 5000, 8);
+        let img = TiledImage::build(&m, 128, TileFormat::Scsr);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("m.semm", &buf).unwrap();
+        let x = DenseMatrix::random(m.ncols, 2, 10);
+        let mut outs = Vec::new();
+        for polling in [true, false] {
+            for pool in [true, false] {
+                let sem = SemSource::open(&store, "m.semm").unwrap();
+                let opts = SpmmOpts {
+                    threads: 2,
+                    io_polling: polling,
+                    buf_pool: pool,
+                    ..Default::default()
+                };
+                let (out, _) = spmm_out(&Source::Sem(sem), &x, &opts).unwrap();
+                outs.push(out);
+            }
+        }
+        for o in &outs[1..] {
+            assert_eq!(o.data, outs[0].data);
+        }
+    }
+
+    #[test]
+    fn sem_output_streams_to_store() {
+        let m = sample_csr(9, 5000, 11);
+        let img = TiledImage::build(&m, 128, TileFormat::Scsr);
+        let dir = crate::util::tempdir();
+        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("m.semm", &buf).unwrap();
+
+        let sem = SemSource::open(&store, "m.semm").unwrap();
+        let p = 2;
+        let x = DenseMatrix::random(m.ncols, p, 12);
+        let opts = SpmmOpts {
+            threads: 3,
+            ..Default::default()
+        };
+        let ncfg = numa_config(128, m.ncols, &opts);
+        let xs = NumaDense::from_dense(&x, ncfg);
+        let outf = store.create_file("out.dense").unwrap();
+        let w = MergedWriter::new(outf, 1 << 20);
+        let stats = spmm(&Source::Sem(sem), &xs, &opts, &OutputSink::Sem(&w)).unwrap();
+        let report = w.finish().unwrap();
+        assert!(stats.secs >= 0.0);
+        assert_eq!(report.bytes, (m.nrows * p * 4) as u64);
+        // Writer merging must produce far fewer writes than tasks.
+        assert!(report.writes_out <= report.extents_in);
+
+        let got_bytes = store.get("out.dense").unwrap();
+        let got = DenseMatrix::from_le_bytes(m.nrows, p, &got_bytes);
+        let expect = m.spmm_ref(&x.data, p);
+        for (a, b) in got.data.iter().zip(&expect) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn weighted_matrix_spmm() {
+        let el = erdos::generate(600, 4000, 13);
+        let mut m = Csr::from_edgelist(&el);
+        m.vals = Some((0..m.nnz()).map(|i| ((i % 7) as f32) * 0.5 + 0.25).collect());
+        let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
+        let x = DenseMatrix::random(600, 4, 14);
+        let expect = m.spmm_ref(&x.data, 4);
+        let (got, _) = spmm_out(&Source::Mem(img), &x, &SpmmOpts::default()).unwrap();
+        for (a, b) in got.data.iter().zip(&expect) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let m = sample_csr(8, 1000, 15);
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let x = DenseMatrix::random(m.ncols + 5, 2, 16);
+        assert!(spmm_out(&Source::Mem(img), &x, &SpmmOpts::default()).is_err());
+    }
+
+    #[test]
+    fn rectangular_matrix() {
+        // 300 × 500 sparse matrix (nrows != ncols).
+        let mut pairs = Vec::new();
+        let mut rng = crate::util::Xoshiro256::new(17);
+        for _ in 0..3000 {
+            pairs.push((rng.below(300) as u32, rng.below(500) as u32));
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let m = Csr::from_sorted_pairs(300, 500, &pairs);
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let x = DenseMatrix::random(500, 3, 18);
+        let expect = m.spmm_ref(&x.data, 3);
+        let (got, _) = spmm_out(&Source::Mem(img), &x, &SpmmOpts::default()).unwrap();
+        for (a, b) in got.data.iter().zip(&expect) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! Per-tile multiply kernels.
+//!
+//! A tile multiply adds `val · in_row(col)` into `out_row(row)` for every
+//! non-zero. Rows of the dense matrices involved in one tile stay inside
+//! the CPU cache by construction (that is what the tile size guarantees),
+//! so these loops are the pure compute hot spot of the whole system.
+//!
+//! The inner loop over the `p` columns of a dense row is width-specialized
+//! through a const generic: for `p ∈ {1, 2, 4, 8, 16}` the compiler sees a
+//! fixed-trip-count loop and emits vector FMAs (the paper's AVX
+//! optimization, §3.4). `vectorize = false` forces the generic
+//! variable-length loop — the Fig 12 `Vec` ablation baseline.
+
+use crate::format::{dcsc, scsr, ValueType};
+
+/// Multiply one SCSR+COO tile: `out[lr] += val · inm[lc]` over all entries.
+///
+/// `in_rows` starts at dense row `tile_col · t`; `out_rows` starts at the
+/// tile row's first row. Both are row-major with `p` columns.
+#[inline]
+pub fn mul_tile_scsr(
+    view: &scsr::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+    vectorize: bool,
+) {
+    if vectorize {
+        match p {
+            1 => mul_scsr_w::<1>(view, vt, in_rows, out_rows),
+            2 => mul_scsr_w::<2>(view, vt, in_rows, out_rows),
+            4 => mul_scsr_w::<4>(view, vt, in_rows, out_rows),
+            8 => mul_scsr_w::<8>(view, vt, in_rows, out_rows),
+            16 => mul_scsr_w::<16>(view, vt, in_rows, out_rows),
+            _ => mul_scsr_generic(view, vt, in_rows, out_rows, p),
+        }
+    } else {
+        mul_scsr_generic(view, vt, in_rows, out_rows, p);
+    }
+}
+
+#[inline(always)]
+fn read_u16(b: &[u8], i: usize) -> u16 {
+    u16::from_le_bytes([b[2 * i], b[2 * i + 1]])
+}
+
+#[inline(always)]
+fn read_f32(b: &[u8], i: usize) -> f32 {
+    f32::from_le_bytes([b[4 * i], b[4 * i + 1], b[4 * i + 2], b[4 * i + 3]])
+}
+
+/// Width-specialized SCSR multiply: the `P`-length loops compile to
+/// straight-line vector code.
+///
+/// §Perf: the stream walk uses `chunks_exact(2)` so the word loads carry
+/// no per-iteration bounds checks, and the dense-row accesses go through
+/// `get_unchecked` — safe because every local index in a well-formed tile
+/// is `< t` and both slices span `t` rows (debug builds assert it). This
+/// removed the last branchy bounds checks from the hot loop
+/// (EXPERIMENTS.md §Perf, opt A).
+fn mul_scsr_w<const P: usize>(
+    view: &scsr::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+) {
+    let weighted = vt == ValueType::F32;
+    let mut vi = 0usize;
+    let mut out_base = 0usize;
+    // SCSR part: rows with >= 2 entries.
+    for wbytes in view.scsr.chunks_exact(2) {
+        let w = u16::from_le_bytes([wbytes[0], wbytes[1]]);
+        if w & scsr::ROW_TAG != 0 {
+            out_base = ((w & !scsr::ROW_TAG) as usize) * P;
+        } else {
+            let in_base = (w as usize) * P;
+            let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
+            vi += 1;
+            debug_assert!(in_base + P <= in_rows.len() && out_base + P <= out_rows.len());
+            unsafe {
+                for j in 0..P {
+                    *out_rows.get_unchecked_mut(out_base + j) +=
+                        v * in_rows.get_unchecked(in_base + j);
+                }
+            }
+        }
+    }
+    // COO part: single-entry rows — no end-of-row test per entry.
+    for (k, pair) in view.coo.chunks_exact(4).enumerate() {
+        let r = u16::from_le_bytes([pair[0], pair[1]]) as usize;
+        let c = u16::from_le_bytes([pair[2], pair[3]]) as usize;
+        let v = if weighted { read_f32(view.vals, vi + k) } else { 1.0 };
+        debug_assert!(c * P + P <= in_rows.len() && r * P + P <= out_rows.len());
+        unsafe {
+            for j in 0..P {
+                *out_rows.get_unchecked_mut(r * P + j) +=
+                    v * in_rows.get_unchecked(c * P + j);
+            }
+        }
+    }
+}
+
+/// Generic-width scalar fallback (also the `Vec = off` ablation).
+fn mul_scsr_generic(
+    view: &scsr::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+) {
+    let weighted = vt == ValueType::F32;
+    let words = view.scsr.len() / 2;
+    let mut vi = 0usize;
+    let mut out_base = 0usize;
+    let mut i = 0usize;
+    while i < words {
+        let w = read_u16(view.scsr, i);
+        if w & scsr::ROW_TAG != 0 {
+            out_base = ((w & !scsr::ROW_TAG) as usize) * p;
+        } else {
+            let in_base = (w as usize) * p;
+            let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
+            vi += 1;
+            for j in 0..p {
+                out_rows[out_base + j] += v * in_rows[in_base + j];
+            }
+        }
+        i += 1;
+    }
+    for k in 0..view.n_single {
+        let r = read_u16(view.coo, 2 * k) as usize;
+        let c = read_u16(view.coo, 2 * k + 1) as usize;
+        let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
+        vi += 1;
+        for j in 0..p {
+            out_rows[r * p + j] += v * in_rows[c * p + j];
+        }
+    }
+}
+
+/// Multiply one DCSC tile (the format-ablation path, Fig 13).
+pub fn mul_tile_dcsc(
+    view: &dcsc::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+    vectorize: bool,
+) {
+    if vectorize {
+        match p {
+            1 => mul_dcsc_w::<1>(view, vt, in_rows, out_rows),
+            2 => mul_dcsc_w::<2>(view, vt, in_rows, out_rows),
+            4 => mul_dcsc_w::<4>(view, vt, in_rows, out_rows),
+            8 => mul_dcsc_w::<8>(view, vt, in_rows, out_rows),
+            16 => mul_dcsc_w::<16>(view, vt, in_rows, out_rows),
+            _ => mul_dcsc_generic(view, vt, in_rows, out_rows, p),
+        }
+    } else {
+        mul_dcsc_generic(view, vt, in_rows, out_rows, p);
+    }
+}
+
+fn mul_dcsc_w<const P: usize>(
+    view: &dcsc::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+) {
+    let weighted = vt == ValueType::F32;
+    for k in 0..view.nnc {
+        let (c, s, e) = view.col(k);
+        let in_base = (c as usize) * P;
+        let src: [f32; P] = in_rows[in_base..in_base + P].try_into().unwrap();
+        for i in s..e {
+            let r = view.row(i) as usize;
+            let v = if weighted { view.val(i) } else { 1.0 };
+            let dst = &mut out_rows[r * P..r * P + P];
+            for j in 0..P {
+                dst[j] += v * src[j];
+            }
+        }
+    }
+}
+
+fn mul_dcsc_generic(
+    view: &dcsc::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+) {
+    let weighted = vt == ValueType::F32;
+    for k in 0..view.nnc {
+        let (c, s, e) = view.col(k);
+        let in_base = (c as usize) * p;
+        for i in s..e {
+            let r = view.row(i) as usize;
+            let v = if weighted { view.val(i) } else { 1.0 };
+            for j in 0..p {
+                out_rows[r * p + j] += v * in_rows[in_base + j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::{dcsc, scsr, TileEntries, ValueType};
+    use crate::util::Xoshiro256;
+
+    fn random_tile(t: u16, n: usize, seed: u64, weighted: bool) -> TileEntries {
+        let mut rng = Xoshiro256::new(seed);
+        let mut coords: Vec<(u16, u16)> = (0..n)
+            .map(|_| (rng.below(t as u64) as u16, rng.below(t as u64) as u16))
+            .collect();
+        coords.sort_unstable();
+        coords.dedup();
+        let vals = if weighted {
+            coords.iter().map(|_| rng.next_f32() + 0.5).collect()
+        } else {
+            Vec::new()
+        };
+        TileEntries { coords, vals }
+    }
+
+    fn reference(e: &TileEntries, t: usize, x: &[f32], p: usize) -> Vec<f32> {
+        let mut out = vec![0f32; t * p];
+        for (i, &(r, c)) in e.coords.iter().enumerate() {
+            let v = if e.vals.is_empty() { 1.0 } else { e.vals[i] };
+            for j in 0..p {
+                out[r as usize * p + j] += v * x[c as usize * p + j];
+            }
+        }
+        out
+    }
+
+    fn check_kernels(t: u16, n: usize, p: usize, weighted: bool, seed: u64) {
+        let e = random_tile(t, n, seed, weighted);
+        let vt = if weighted {
+            ValueType::F32
+        } else {
+            ValueType::Binary
+        };
+        let mut rng = Xoshiro256::new(seed ^ 1);
+        let x: Vec<f32> = (0..t as usize * p).map(|_| rng.next_f32()).collect();
+        let expect = reference(&e, t as usize, &x, p);
+
+        let mut sbuf = Vec::new();
+        scsr::encode(0, &e, vt, &mut sbuf);
+        let (sv, _) = scsr::parse(&sbuf, 0, vt);
+        for vec in [true, false] {
+            let mut out = vec![0f32; t as usize * p];
+            mul_tile_scsr(&sv, vt, &x, &mut out, p, vec);
+            for (a, b) in out.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "scsr p={p} vec={vec}");
+            }
+        }
+
+        let mut dbuf = Vec::new();
+        dcsc::encode(0, &e, vt, &mut dbuf);
+        let (dv, _) = dcsc::parse(&dbuf, 0, vt);
+        for vec in [true, false] {
+            let mut out = vec![0f32; t as usize * p];
+            mul_tile_dcsc(&dv, vt, &x, &mut out, p, vec);
+            for (a, b) in out.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "dcsc p={p} vec={vec}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_widths_binary() {
+        for p in [1, 2, 3, 4, 5, 8, 16, 32] {
+            check_kernels(128, 700, p, false, p as u64);
+        }
+    }
+
+    #[test]
+    fn all_widths_weighted() {
+        for p in [1, 2, 4, 8, 16, 7] {
+            check_kernels(64, 300, p, true, 100 + p as u64);
+        }
+    }
+
+    #[test]
+    fn dense_tile() {
+        // Every row multi-entry (no COO part).
+        let mut coords = Vec::new();
+        for r in 0..16u16 {
+            for c in 0..16u16 {
+                coords.push((r, c));
+            }
+        }
+        let e = TileEntries {
+            coords,
+            vals: Vec::new(),
+        };
+        let mut buf = Vec::new();
+        scsr::encode(0, &e, ValueType::Binary, &mut buf);
+        let (v, _) = scsr::parse(&buf, 0, ValueType::Binary);
+        assert_eq!(v.n_single, 0);
+        let x = vec![1f32; 16];
+        let mut out = vec![0f32; 16];
+        mul_tile_scsr(&v, ValueType::Binary, &x, &mut out, 1, true);
+        assert!(out.iter().all(|&o| o == 16.0));
+    }
+
+    #[test]
+    fn all_single_entry_rows() {
+        // Diagonal: everything lands in the COO part.
+        let coords: Vec<(u16, u16)> = (0..64u16).map(|i| (i, 63 - i)).collect();
+        let e = TileEntries {
+            coords,
+            vals: Vec::new(),
+        };
+        let mut buf = Vec::new();
+        scsr::encode(0, &e, ValueType::Binary, &mut buf);
+        let (v, _) = scsr::parse(&buf, 0, ValueType::Binary);
+        assert_eq!(v.n_multi, 0);
+        assert_eq!(v.n_single, 64);
+        let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut out = vec![0f32; 64];
+        mul_tile_scsr(&v, ValueType::Binary, &x, &mut out, 1, true);
+        for i in 0..64 {
+            assert_eq!(out[i], (63 - i) as f32);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! The SpMM engine (§3.4, Algorithm 1, Fig 4).
+//!
+//! One code path serves both execution modes: **IM-SpMM** keeps the tiled
+//! image in memory; **SEM-SpMM** streams tile rows from the store through
+//! the asynchronous read engine. Each worker thread repeatedly claims a
+//! group of contiguous tile rows from the dynamic scheduler, multiplies
+//! them against the in-memory (NUMA-striped) input dense matrix into a
+//! thread-local output buffer, and hands the finished row interval either
+//! to the in-memory output matrix or to the merging writer — so the output
+//! is written at most once and never to remote memory.
+//!
+//! * [`scheduler`] — fine-grain dynamic load balancing over tile rows with
+//!   shrinking task sizes (Algorithm 1 lines 10–13).
+//! * [`kernel`] — per-tile multiply kernels over the SCSR+COO / DCSC views
+//!   with width-specialized (vectorizable) inner loops.
+//! * [`engine`] — the parallel IM/SEM drivers, super-block cache blocking,
+//!   double-buffered prefetch, and the ablation toggles of Figs 12–13.
+
+pub mod engine;
+pub mod kernel;
+pub mod scheduler;
+
+pub use engine::{spmm, spmm_out, OutputSink, SemSource, SpmmStats, Source};
+
+use crate::DEFAULT_TILE;
+
+/// Engine options — every paper optimization is a toggle so the Fig 12/13
+/// ablations can switch them individually.
+#[derive(Debug, Clone)]
+pub struct SpmmOpts {
+    /// Worker threads (the paper uses 48).
+    pub threads: usize,
+    /// Fine-grain dynamic load balancing (off = static partitioning).
+    pub load_balance: bool,
+    /// Super-block cache blocking across tile rows (off = process each
+    /// tile row's tiles in storage order, no s×s regrouping).
+    pub cache_blocking: bool,
+    /// Width-specialized vectorizable inner loops (off = generic scalar).
+    pub vectorize: bool,
+    /// Poll for async I/O completion instead of blocking (SEM only).
+    pub io_polling: bool,
+    /// Reuse I/O buffers from a pool (SEM only).
+    pub buf_pool: bool,
+    /// I/O worker threads for the async read engine (SEM only).
+    pub io_workers: usize,
+    /// CPU cache bytes per thread used to size super-blocks and task
+    /// grain (the paper's `CPU_cache` in `s = CPU_cache / (2p)`).
+    pub cache_bytes: usize,
+}
+
+impl Default for SpmmOpts {
+    fn default() -> Self {
+        let hw = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(8);
+        SpmmOpts {
+            threads: hw,
+            load_balance: true,
+            cache_blocking: true,
+            vectorize: true,
+            io_polling: true,
+            buf_pool: true,
+            io_workers: 4,
+            cache_bytes: 2 << 20,
+        }
+    }
+}
+
+impl SpmmOpts {
+    /// Tile rows per task at width `p` and tile size `t`:
+    /// `numTRs = cache / (2 · p · t · sizeof(f32))`, at least 1.
+    pub fn grain_tile_rows(&self, p: usize, tile: usize) -> usize {
+        (self.cache_bytes / (2 * p.max(1) * tile * 4)).max(1)
+    }
+
+    /// Single-threaded deterministic configuration (tests).
+    pub fn sequential() -> Self {
+        SpmmOpts {
+            threads: 1,
+            io_workers: 1,
+            ..Default::default()
+        }
+    }
+}
+
+/// Options helper: the default tile used across the crate.
+pub fn default_tile() -> usize {
+    DEFAULT_TILE
+}

@@ -1,0 +1,208 @@
+//! Fine-grain dynamic load balancing over tile rows (§3.4, Algorithm 1).
+//!
+//! A single global cursor orders all tile rows; threads claim the next
+//! contiguous group atomically. Early in the computation a claim takes
+//! `grain` tile rows (sized so the group's dense rows fill the CPU cache);
+//! once fewer than `threads × grain` tile rows remain, claims shrink to a
+//! single tile row so stragglers on power-law rows cannot unbalance the
+//! tail. Claiming in global order also keeps all threads on *contiguous*
+//! tile rows, which is what lets the merged writer coalesce output extents
+//! (§3.4 "global execution order").
+//!
+//! `dynamic = false` reproduces the static partitioning baseline of the
+//! Fig 12 `Load balance` ablation: tile rows are pre-split into one
+//! contiguous range per thread.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A claimed group of contiguous tile rows `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Task {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+/// The scheduler. One instance is shared by all worker threads of a run.
+#[derive(Debug)]
+pub struct Scheduler {
+    total: usize,
+    grain: usize,
+    threads: usize,
+    dynamic: bool,
+    /// Dynamic mode: global cursor.
+    next: AtomicUsize,
+    /// Static mode: per-thread cursors.
+    static_next: Vec<AtomicUsize>,
+}
+
+impl Scheduler {
+    pub fn new(total_tile_rows: usize, grain: usize, threads: usize, dynamic: bool) -> Scheduler {
+        let threads = threads.max(1);
+        let chunk = total_tile_rows.div_ceil(threads);
+        Scheduler {
+            total: total_tile_rows,
+            grain: grain.max(1),
+            threads,
+            dynamic,
+            next: AtomicUsize::new(0),
+            static_next: (0..threads)
+                .map(|i| AtomicUsize::new((i * chunk).min(total_tile_rows)))
+                .collect(),
+        }
+    }
+
+    /// Upper bound of thread `i`'s static range.
+    fn static_hi(&self, i: usize) -> usize {
+        let chunk = self.total.div_ceil(self.threads);
+        ((i + 1) * chunk).min(self.total)
+    }
+
+    /// Claim the next task for worker `thread`; `None` when exhausted.
+    pub fn claim(&self, thread: usize) -> Option<Task> {
+        if self.dynamic {
+            loop {
+                let cur = self.next.load(Ordering::Relaxed);
+                if cur >= self.total {
+                    return None;
+                }
+                let remaining = self.total - cur;
+                // Algorithm 1 lines 11–13: shrink to single tile rows when
+                // the tail is near, so no thread is left holding a big
+                // task while others idle.
+                let take = if remaining <= self.threads * self.grain {
+                    1
+                } else {
+                    self.grain
+                };
+                let take = take.min(remaining);
+                if self
+                    .next
+                    .compare_exchange_weak(cur, cur + take, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    return Some(Task {
+                        lo: cur,
+                        hi: cur + take,
+                    });
+                }
+            }
+        } else {
+            let hi = self.static_hi(thread);
+            let cur = self.static_next[thread].load(Ordering::Relaxed);
+            if cur >= hi {
+                return None;
+            }
+            let take = self.grain.min(hi - cur);
+            // Static ranges are private per thread; a simple store works,
+            // but use fetch_add for defensive correctness.
+            let got = self.static_next[thread].fetch_add(take, Ordering::AcqRel);
+            if got >= hi {
+                return None;
+            }
+            Some(Task {
+                lo: got,
+                hi: (got + take).min(hi),
+            })
+        }
+    }
+
+    /// Total tile rows scheduled.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn grain(&self) -> usize {
+        self.grain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    fn collect_all(s: &Scheduler, thread: usize) -> Vec<Task> {
+        let mut v = Vec::new();
+        while let Some(t) = s.claim(thread) {
+            v.push(t);
+        }
+        v
+    }
+
+    #[test]
+    fn dynamic_covers_exactly_once() {
+        let s = Scheduler::new(100, 8, 4, true);
+        let tasks = collect_all(&s, 0);
+        let mut seen = HashSet::new();
+        for t in &tasks {
+            for r in t.lo..t.hi {
+                assert!(seen.insert(r), "tile row {r} claimed twice");
+            }
+        }
+        assert_eq!(seen.len(), 100);
+    }
+
+    #[test]
+    fn dynamic_shrinks_near_tail() {
+        let s = Scheduler::new(40, 8, 4, true);
+        let tasks = collect_all(&s, 0);
+        // With 4 threads × grain 8 = 32: the first task takes 8, then
+        // remaining = 32 → shrink to singles.
+        assert_eq!(tasks[0].hi - tasks[0].lo, 8);
+        for t in &tasks[1..] {
+            assert_eq!(t.hi - t.lo, 1, "tail tasks must be single tile rows");
+        }
+    }
+
+    #[test]
+    fn static_partitions_are_contiguous_and_disjoint() {
+        let s = Scheduler::new(103, 4, 4, false);
+        let mut all = Vec::new();
+        for th in 0..4 {
+            let tasks = collect_all(&s, th);
+            for t in tasks {
+                all.extend(t.lo..t.hi);
+            }
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_dynamic_claims_disjoint() {
+        let s = Arc::new(Scheduler::new(1000, 4, 8, true));
+        let hs: Vec<_> = (0..8)
+            .map(|i| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    while let Some(t) = s.claim(i) {
+                        mine.extend(t.lo..t.hi);
+                    }
+                    mine
+                })
+            })
+            .collect();
+        let mut all: Vec<usize> = hs.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_schedule() {
+        let s = Scheduler::new(0, 4, 2, true);
+        assert_eq!(s.claim(0), None);
+        let s = Scheduler::new(0, 4, 2, false);
+        assert_eq!(s.claim(0), None);
+    }
+
+    #[test]
+    fn dynamic_claims_are_globally_ordered() {
+        let s = Scheduler::new(64, 4, 2, true);
+        let tasks = collect_all(&s, 0);
+        for w in tasks.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo, "claims must be contiguous in order");
+        }
+    }
+}

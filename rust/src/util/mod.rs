@@ -1,0 +1,91 @@
+//! Small shared utilities: deterministic PRNG, bit manipulation, human-
+//! readable sizes, and wall-clock helpers.
+
+pub mod prng;
+pub mod proptest;
+pub mod tempdir;
+
+pub use prng::SplitMix64;
+pub use tempdir::{tempdir, TempDir};
+pub use prng::Xoshiro256;
+
+/// Round `x` up to the next multiple of `m` (`m > 0`).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Integer ceil division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Smallest power of two `>= x` (for `x >= 1`).
+#[inline]
+pub fn next_pow2(x: usize) -> usize {
+    x.next_power_of_two()
+}
+
+/// Format a byte count as a human-readable string (KiB/MiB/GiB).
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", b, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with adaptive precision.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_multiples() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn pow2() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(16), 16);
+        assert_eq!(next_pow2(17), 32);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert!(human_bytes(3 * 1024 * 1024).starts_with("3.00 MiB"));
+    }
+
+    #[test]
+    fn humanize_secs() {
+        assert!(human_secs(0.0000005).ends_with("us"));
+        assert!(human_secs(0.005).ends_with("ms"));
+        assert!(human_secs(2.5).ends_with("s"));
+    }
+}

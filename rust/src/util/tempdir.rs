@@ -1,0 +1,63 @@
+//! Self-cleaning temporary directories (offline replacement for the
+//! `tempfile` crate, used by tests and short-lived stores).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT: AtomicU64 = AtomicU64::new(0);
+
+/// A directory under the system temp root, removed (recursively) on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+/// Create a fresh unique temporary directory.
+pub fn tempdir() -> TempDir {
+    let base = std::env::temp_dir();
+    loop {
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .subsec_nanos();
+        let path = base.join(format!("semspmm-{pid}-{t}-{n}"));
+        match std::fs::create_dir(&path) {
+            Ok(()) => return TempDir { path },
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => continue,
+            Err(e) => panic!("cannot create temp dir: {e}"),
+        }
+    }
+}
+
+impl TempDir {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_and_cleaned() {
+        let p1;
+        {
+            let d1 = tempdir();
+            let d2 = tempdir();
+            assert_ne!(d1.path(), d2.path());
+            assert!(d1.path().is_dir());
+            std::fs::write(d1.path().join("f"), b"x").unwrap();
+            p1 = d1.path().to_path_buf();
+        }
+        assert!(!p1.exists());
+    }
+}

@@ -1,0 +1,188 @@
+//! Failure injection: corrupted images, truncated objects, missing
+//! artifacts, bad requests — the coordinator must fail loudly and
+//! cleanly, never hang, never return wrong numbers silently.
+
+use sem_spmm::coordinator::Catalog;
+use sem_spmm::format::tiled::TiledImage;
+use sem_spmm::format::{convert, Csr, TileFormat};
+use sem_spmm::graph::{registry, rmat};
+use sem_spmm::io::{BufferPool, ExtMemStore, IoEngine, StoreConfig};
+use sem_spmm::matrix::DenseMatrix;
+use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
+use std::sync::Arc;
+
+fn store(dir: &std::path::Path) -> Arc<ExtMemStore> {
+    ExtMemStore::open(StoreConfig::unthrottled(dir)).unwrap()
+}
+
+fn sample_image(store: &Arc<ExtMemStore>, name: &str) -> Csr {
+    let el = rmat::generate(10, 8000, rmat::RmatParams::default(), 3);
+    let m = Csr::from_edgelist(&el);
+    let img = TiledImage::build(&m, 256, TileFormat::Scsr);
+    let mut buf = Vec::new();
+    img.write_to(&mut buf).unwrap();
+    store.put(name, &buf).unwrap();
+    m
+}
+
+#[test]
+fn corrupted_magic_is_rejected() {
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    sample_image(&s, "m.semm");
+    // Flip the magic.
+    let mut bytes = s.get("m.semm").unwrap();
+    bytes[0] ^= 0xFF;
+    s.put("m.semm", &bytes).unwrap();
+    assert!(SemSource::open(&s, "m.semm").is_err());
+}
+
+#[test]
+fn bad_version_is_rejected() {
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    sample_image(&s, "m.semm");
+    let mut bytes = s.get("m.semm").unwrap();
+    bytes[4] = 99; // version
+    s.put("m.semm", &bytes).unwrap();
+    assert!(SemSource::open(&s, "m.semm").is_err());
+}
+
+#[test]
+fn truncated_data_area_errors_not_hangs() {
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    let m = sample_image(&s, "m.semm");
+    // Chop the tail off the data area: header/index parse fine, reads of
+    // late tile rows must error.
+    let bytes = s.get("m.semm").unwrap();
+    s.put("m.semm", &bytes[..bytes.len() - (bytes.len() / 3)]).unwrap();
+    let sem = SemSource::open(&s, "m.semm").unwrap();
+    let x = DenseMatrix::random(m.ncols, 2, 1);
+    let r = engine::spmm_out(
+        &Source::Sem(sem),
+        &x,
+        &SpmmOpts {
+            threads: 2,
+            ..Default::default()
+        },
+    );
+    assert!(r.is_err(), "truncated image must surface an I/O error");
+}
+
+#[test]
+fn missing_object_errors() {
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    assert!(SemSource::open(&s, "absent.semm").is_err());
+    assert!(s.open_file("absent").is_err());
+}
+
+#[test]
+fn corrupted_csr_image_rejected_by_converter() {
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    s.put("bad.csr", &vec![7u8; 256]).unwrap();
+    assert!(convert::convert(&s, "bad.csr", "out.semm", 256, TileFormat::Scsr).is_err());
+}
+
+#[test]
+fn io_engine_survives_error_storm() {
+    // A mix of valid and past-EOF reads: every ticket resolves, no hangs,
+    // valid reads stay correct.
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    let data = vec![5u8; 10_000];
+    s.put("obj", &data).unwrap();
+    let f = s.open_file("obj").unwrap();
+    let eng = IoEngine::new(3, BufferPool::new(true, 16));
+    let tickets: Vec<_> = (0..60)
+        .map(|i| {
+            if i % 3 == 0 {
+                eng.submit(&f, 9_000, 5_000) // past EOF
+            } else {
+                eng.submit(&f, (i * 100) as u64, 100)
+            }
+        })
+        .collect();
+    let mut errs = 0;
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait(i % 2 == 0) {
+            Ok(buf) => {
+                assert!(buf.iter().all(|&b| b == 5));
+                eng.recycle(buf);
+            }
+            Err(_) => errs += 1,
+        }
+    }
+    assert_eq!(errs, 20);
+}
+
+#[test]
+fn runtime_missing_artifact_errors_cleanly() {
+    let dir = sem_spmm::util::tempdir();
+    let rt = sem_spmm::runtime::XlaRuntime::new(dir.path()).unwrap();
+    assert!(!rt.has("nope"));
+    assert!(rt.get("nope").is_err());
+    assert!(rt.run1_f32("nope", &[]).is_err());
+}
+
+#[test]
+fn garbage_artifact_fails_to_parse() {
+    let dir = sem_spmm::util::tempdir();
+    std::fs::write(dir.path().join("junk.hlo.txt"), "this is not hlo").unwrap();
+    let rt = sem_spmm::runtime::XlaRuntime::new(dir.path()).unwrap();
+    assert!(rt.get("junk").is_err());
+}
+
+#[test]
+fn service_rejects_malformed_requests_without_dying() {
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    let catalog = Catalog::new(s, 256);
+    let svc = sem_spmm::coordinator::service::Service::new(
+        catalog,
+        SpmmOpts {
+            threads: 1,
+            ..Default::default()
+        },
+    );
+    for req in ["", "SPMM", "SPMM twitter notanumber", "PAGERANK x y z w"] {
+        match svc.dispatch(req) {
+            Ok(Some(j)) => assert!(j.get("error").is_some(), "req '{req}'"),
+            Ok(None) => panic!("malformed '{req}' closed the connection"),
+            Err(_) => {} // surfaced as error — also fine
+        }
+    }
+    // Still serves valid requests afterwards.
+    let r = svc.dispatch("PING").unwrap().unwrap();
+    assert!(r.get("pong").is_some());
+}
+
+#[test]
+fn zero_row_and_empty_matrices() {
+    // Degenerate shapes must not panic anywhere in the pipeline.
+    let m = Csr::from_sorted_pairs(0, 0, &[]);
+    let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+    assert_eq!(img.meta.n_tile_rows(), 0);
+    // A matrix with rows but no entries.
+    let m = Csr::from_sorted_pairs(100, 100, &[]);
+    let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+    let x = DenseMatrix::random(100, 2, 1);
+    let (y, _) = engine::spmm_out(&Source::Mem(img), &x, &SpmmOpts::sequential()).unwrap();
+    assert!(y.data.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn catalog_recovers_from_partially_deleted_dataset() {
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    let catalog = Catalog::new(s.clone(), 256);
+    let spec = registry::by_name("twitter").unwrap().shrunk(9);
+    let imgs = catalog.ensure(&spec).unwrap();
+    // Delete one object; ensure() must rebuild the set.
+    s.remove(&imgs.adj_t).unwrap();
+    let imgs2 = catalog.ensure(&spec).unwrap();
+    assert_eq!(imgs2.nnz, imgs.nnz);
+    assert!(s.exists(&imgs2.adj_t));
+}

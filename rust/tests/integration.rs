@@ -1,0 +1,216 @@
+//! Cross-module integration tests: the full pipelines a user actually
+//! runs, wired through the real store, real conversion, real engine —
+//! including the PJRT runtime when artifacts are built.
+
+use sem_spmm::apps::{eigen, nmf, pagerank};
+use sem_spmm::coordinator::{Catalog, MemBudget, PassPlan};
+use sem_spmm::format::{convert, Csr, TileFormat};
+use sem_spmm::graph::{registry, rmat};
+use sem_spmm::io::{ExtMemStore, StoreConfig};
+use sem_spmm::matrix::{DenseMatrix, SemDense};
+use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
+use std::sync::Arc;
+
+fn throttled_store(dir: &std::path::Path) -> Arc<ExtMemStore> {
+    // A deliberately slow store so SEM paths are really I/O-bound.
+    ExtMemStore::open(StoreConfig::slow_ssd(dir.join("store"), 0.8)).unwrap()
+}
+
+#[test]
+fn pipeline_generate_convert_multiply_verify() {
+    // Graph → CSR image → streamed conversion → SEM SpMM → exact check.
+    let dir = sem_spmm::util::tempdir();
+    let store = throttled_store(dir.path());
+    let el = rmat::generate(11, 30_000, rmat::RmatParams::default(), 5);
+    let m = Csr::from_edgelist(&el);
+    convert::put_csr_image(&store, "g.csr", &m).unwrap();
+    let report = convert::convert(&store, "g.csr", "g.semm", 512, TileFormat::Scsr).unwrap();
+    assert!(report.io_gbps > 0.0);
+
+    let sem = SemSource::open(&store, "g.semm").unwrap();
+    let x = DenseMatrix::random(m.ncols, 4, 9);
+    let expect = m.spmm_ref(&x.data, 4);
+    let (got, stats) =
+        engine::spmm_out(&Source::Sem(sem), &x, &SpmmOpts::default()).unwrap();
+    assert!(stats.bytes_read > 0);
+    for (a, b) in got.data.iter().zip(&expect) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+    }
+}
+
+#[test]
+fn catalog_to_all_three_applications() {
+    // One catalog feeds PageRank, the eigensolver and NMF.
+    let dir = sem_spmm::util::tempdir();
+    let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+    let catalog = Catalog::new(store.clone(), 512);
+    let opts = SpmmOpts {
+        threads: 3,
+        ..Default::default()
+    };
+
+    // PageRank on the directed twitter stand-in.
+    let spec = registry::by_name("twitter").unwrap().shrunk(11);
+    let imgs = catalog.ensure(&spec).unwrap();
+    let src = Source::Sem(catalog.open_adj(&imgs).unwrap());
+    let (pr, _) = pagerank::pagerank(
+        &src,
+        &imgs.degrees,
+        &store,
+        &pagerank::PageRankConfig {
+            iterations: 8,
+            spmm: opts.clone(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(pr.len(), imgs.num_verts);
+    assert!(pr.iter().all(|&v| v > 0.0));
+
+    // Eigensolver on the undirected friendster stand-in.
+    let spec = registry::by_name("friendster").unwrap().shrunk(10);
+    let imgs = catalog.ensure(&spec).unwrap();
+    let src = Source::Sem(catalog.open_adj(&imgs).unwrap());
+    let res = eigen::eigensolve(
+        &src,
+        &store,
+        &eigen::EigenConfig {
+            nev: 3,
+            block: 1,
+            subspace: 12,
+            tol: 1e-4,
+            spmm: opts.clone(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(res.eigenvalues.len(), 3);
+    assert!(res.eigenvalues[0] >= res.eigenvalues[1]);
+
+    // NMF on the directed rmat-40 stand-in, panelized.
+    let spec = registry::by_name("rmat-40").unwrap().shrunk(10);
+    let imgs = catalog.ensure(&spec).unwrap();
+    let a = Source::Sem(catalog.open_adj(&imgs).unwrap());
+    let at = Source::Sem(catalog.open_adj_t(&imgs).unwrap());
+    let res = nmf::nmf(
+        &a,
+        &at,
+        &store,
+        &nmf::NmfConfig {
+            k: 8,
+            iterations: 3,
+            cols_in_mem: 2,
+            spmm: opts,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(res.residuals.windows(2).all(|w| w[1] <= w[0] * 1.001));
+}
+
+#[test]
+fn vertical_partitioning_under_budget_is_exact() {
+    let dir = sem_spmm::util::tempdir();
+    let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+    let el = rmat::generate(10, 12_000, rmat::RmatParams::default(), 8);
+    let m = Csr::from_edgelist(&el);
+    let img = sem_spmm::format::tiled::TiledImage::build(&m, 256, TileFormat::Scsr);
+    let mut buf = Vec::new();
+    img.write_to(&mut buf).unwrap();
+    store.put("m.semm", &buf).unwrap();
+
+    let n = m.nrows;
+    let p = 16usize;
+    let x = DenseMatrix::random(n, p, 3);
+    let expect = m.spmm_ref(&x.data, p);
+    // Budget: 3 columns fit → 6 passes of 3 (last narrower).
+    let budget = MemBudget::new((n * 4 * 3) as u64 + 512);
+    let plan = PassPlan::plan(n, p, &budget);
+    let input = SemDense::create(&store, "vx", n, p, plan.panel_cols).unwrap();
+    input.store_all(&x).unwrap();
+    let mut output = SemDense::create(&store, "vy", n, p, plan.panel_cols).unwrap();
+    let sem = SemSource::open(&store, "m.semm").unwrap();
+    let report = sem_spmm::coordinator::spmm_vert(
+        &Source::Sem(sem),
+        &input,
+        &mut output,
+        &budget,
+        &SpmmOpts {
+            threads: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(report.passes > 1);
+    let got = output.load_all().unwrap();
+    for (a, b) in got.data.iter().zip(&expect) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+    }
+}
+
+#[test]
+fn pjrt_runtime_composes_with_engine() {
+    // SEM SpMM feeding the AOT gram artifact — L3 + PJRT in one flow.
+    let Some(rt) = sem_spmm::runtime::XlaRuntime::from_env() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let be = sem_spmm::runtime::XlaDenseBackend::new(rt);
+    let dir = sem_spmm::util::tempdir();
+    let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+    let catalog = Catalog::new(store, 512);
+    let spec = registry::by_name("rmat-40").unwrap().shrunk(10);
+    let imgs = catalog.ensure(&spec).unwrap();
+    let src = Source::Sem(catalog.open_adj(&imgs).unwrap());
+    let x = DenseMatrix::random(imgs.num_verts, 8, 4);
+    let (y, _) = engine::spmm_out(&src, &x, &SpmmOpts::default()).unwrap();
+    // Gram of the SpMM result via the PJRT artifact vs native.
+    let g_xla = be.gram(&y).unwrap();
+    let g_native = sem_spmm::matrix::ops::gram(&y);
+    let scale = g_native.data.iter().fold(1f32, |a, &v| a.max(v.abs()));
+    assert!(g_xla.max_abs_diff(&g_native) < 1e-3 * scale);
+}
+
+#[test]
+fn sem_is_io_bound_on_slow_store_and_spmm_amortizes() {
+    // The paper's crossover: on a slow store SpMV is I/O bound; widening
+    // the dense matrix amortizes the same bytes over more compute, so
+    // wall time grows far slower than the compute width.
+    let dir = sem_spmm::util::tempdir();
+    let store = throttled_store(dir.path());
+    let catalog = Catalog::new(store.clone(), 512);
+    let spec = registry::by_name("rmat-160").unwrap().shrunk(11);
+    let imgs = catalog.ensure(&spec).unwrap();
+    let opts = SpmmOpts::default();
+    let t = |p: usize| {
+        let src = Source::Sem(catalog.open_adj(&imgs).unwrap());
+        let x = DenseMatrix::random(imgs.num_verts, p, 1);
+        let (_, stats) = engine::spmm_out(&src, &x, &opts).unwrap();
+        stats.secs
+    };
+    let t1 = t(1).min(t(1));
+    let t8 = t(8).min(t(8));
+    assert!(
+        t8 < 4.0 * t1,
+        "8x compute should cost <4x wall when I/O bound: t1={t1:.3} t8={t8:.3}"
+    );
+}
+
+#[test]
+fn throttle_is_enforced_end_to_end() {
+    // SpMV over a 0.2 GB/s store cannot exceed the configured bandwidth.
+    let dir = sem_spmm::util::tempdir();
+    let store =
+        ExtMemStore::open(StoreConfig::slow_ssd(dir.path().join("s"), 0.2)).unwrap();
+    let catalog = Catalog::new(store.clone(), 512);
+    let spec = registry::by_name("rmat-40").unwrap().shrunk(11);
+    let imgs = catalog.ensure(&spec).unwrap();
+    let src = Source::Sem(catalog.open_adj(&imgs).unwrap());
+    let x = vec![1f32; imgs.num_verts];
+    let (_, stats) = engine::spmv(&src, &x, &SpmmOpts::default()).unwrap();
+    assert!(
+        stats.read_gbps <= 0.25,
+        "throttle violated: {:.3} GB/s",
+        stats.read_gbps
+    );
+}

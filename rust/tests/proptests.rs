@@ -1,0 +1,267 @@
+//! Property-based tests over the coordinator's invariants: format
+//! round-trips, scheduler coverage, engine-vs-reference equality, pass
+//! planning and budget arithmetic — all under randomly generated inputs
+//! (see `sem_spmm::util::proptest` for the harness; failures print a
+//! replayable seed).
+
+use sem_spmm::coordinator::{MemBudget, PassPlan};
+use sem_spmm::format::tiled::{decode_all, TiledImage};
+use sem_spmm::format::{dcsc, scsr, Csr, TileEntries, TileFormat, ValueType};
+use sem_spmm::matrix::DenseMatrix;
+use sem_spmm::spmm::scheduler::Scheduler;
+use sem_spmm::spmm::{engine, Source, SpmmOpts};
+use sem_spmm::util::proptest::{check, Gen};
+use sem_spmm::VertexId;
+use std::sync::Arc;
+
+fn random_pairs(g: &mut Gen, nrows: usize, ncols: usize, n: usize) -> Vec<(VertexId, VertexId)> {
+    let mut pairs: Vec<(VertexId, VertexId)> = (0..n)
+        .map(|_| {
+            (
+                g.usize_in(0, nrows - 1) as VertexId,
+                g.usize_in(0, ncols - 1) as VertexId,
+            )
+        })
+        .collect();
+    pairs.sort_unstable();
+    pairs.dedup();
+    pairs
+}
+
+fn random_tile(g: &mut Gen, t: usize, weighted: bool) -> TileEntries {
+    let n = g.usize_in(1, 400);
+    let mut coords: Vec<(u16, u16)> = (0..n)
+        .map(|_| (g.usize_in(0, t - 1) as u16, g.usize_in(0, t - 1) as u16))
+        .collect();
+    coords.sort_unstable();
+    coords.dedup();
+    let vals = if weighted {
+        coords.iter().map(|_| g.f32_in(0.1, 2.0)).collect()
+    } else {
+        Vec::new()
+    };
+    TileEntries { coords, vals }
+}
+
+#[test]
+fn prop_scsr_roundtrip() {
+    check("scsr-roundtrip", 60, |g| {
+        let weighted = g.bool();
+        let t = [64usize, 256, 1024][g.usize_in(0, 2)];
+        let e = random_tile(g, t, weighted);
+        let vt = if weighted { ValueType::F32 } else { ValueType::Binary };
+        let mut buf = Vec::new();
+        scsr::encode(3, &e, vt, &mut buf);
+        let (view, end) = scsr::parse(&buf, 0, vt);
+        if end != buf.len() {
+            return Err(format!("parse end {end} != len {}", buf.len()));
+        }
+        let d = scsr::decode(&view, vt);
+        if d.coords != e.coords {
+            return Err("coords mismatch".into());
+        }
+        if weighted && d.vals != e.vals {
+            return Err("vals mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dcsc_roundtrip_and_scsr_never_larger_when_sparse() {
+    check("dcsc-roundtrip", 60, |g| {
+        let t = 2048usize;
+        let e = random_tile(g, t, false);
+        let mut sb = Vec::new();
+        let mut db = Vec::new();
+        let s = scsr::encode(0, &e, ValueType::Binary, &mut sb);
+        let d = dcsc::encode(0, &e, ValueType::Binary, &mut db);
+        let (view, _) = dcsc::parse(&db, 0, ValueType::Binary);
+        if dcsc::decode(&view, ValueType::Binary).coords != e.coords {
+            return Err("dcsc decode mismatch".into());
+        }
+        // Paper's bound: 0.4 <= S_SCSR/S_DCSC < ~1 for binary matrices
+        // at this sparsity (most rows hold <= a few entries).
+        let ratio = s as f64 / d as f64;
+        if !(0.3..=1.1).contains(&ratio) {
+            return Err(format!("ratio {ratio} out of the paper's range"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_image_preserves_every_entry() {
+    check("tiled-image-roundtrip", 25, |g| {
+        let nrows = g.usize_in(10, 1500);
+        let ncols = g.usize_in(10, 1500);
+        let n_pairs = g.usize_in(1, 4000);
+        let pairs = random_pairs(g, nrows, ncols, n_pairs);
+        if pairs.is_empty() {
+            return Ok(());
+        }
+        let m = Csr::from_sorted_pairs(nrows, ncols, &pairs);
+        let tile = [64usize, 128, 512][g.usize_in(0, 2)];
+        let fmt = if g.bool() { TileFormat::Scsr } else { TileFormat::Dcsc };
+        let img = TiledImage::build(&m, tile, fmt);
+        let (coords, _) = decode_all(&img);
+        let expect: Vec<(u32, u32)> = pairs.iter().map(|&(r, c)| (r, c)).collect();
+        if coords != expect {
+            return Err(format!(
+                "decode mismatch: {} vs {} entries",
+                coords.len(),
+                expect.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_partitions_exactly() {
+    check("scheduler-coverage", 80, |g| {
+        let total = g.usize_in(0, 500);
+        let grain = g.usize_in(1, 32);
+        let threads = g.usize_in(1, 9);
+        let dynamic = g.bool();
+        let s = Scheduler::new(total, grain, threads, dynamic);
+        let mut seen = vec![false; total];
+        for th in 0..threads {
+            while let Some(t) = s.claim(th) {
+                for r in t.lo..t.hi {
+                    if seen[r] {
+                        return Err(format!("tile row {r} claimed twice"));
+                    }
+                    seen[r] = true;
+                }
+            }
+        }
+        if seen.iter().any(|&x| !x) {
+            return Err("missed tile rows".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_matches_reference() {
+    check("engine-vs-reference", 12, |g| {
+        let nrows = g.usize_in(50, 900);
+        let ncols = g.usize_in(50, 900);
+        let n_pairs = g.usize_in(10, 5000);
+        let pairs = random_pairs(g, nrows, ncols, n_pairs);
+        if pairs.is_empty() {
+            return Ok(());
+        }
+        let mut m = Csr::from_sorted_pairs(nrows, ncols, &pairs);
+        if g.bool() {
+            m.vals = Some((0..m.nnz()).map(|_| g.f32_in(-1.0, 1.0)).collect());
+        }
+        let p = [1usize, 2, 3, 4, 8][g.usize_in(0, 4)];
+        let tile = [64usize, 128][g.usize_in(0, 1)];
+        let img = Arc::new(TiledImage::build(&m, tile, TileFormat::Scsr));
+        let x = DenseMatrix::random(ncols, p, g.u64());
+        let expect = m.spmm_ref(&x.data, p);
+        let opts = SpmmOpts {
+            threads: g.usize_in(1, 4),
+            load_balance: g.bool(),
+            cache_blocking: g.bool(),
+            vectorize: g.bool(),
+            ..Default::default()
+        };
+        let (got, _) = engine::spmm_out(&Source::Mem(img), &x, &opts)
+            .map_err(|e| format!("engine: {e:#}"))?;
+        for (i, (a, b)) in got.data.iter().zip(&expect).enumerate() {
+            if (a - b).abs() > 1e-3 * b.abs().max(1.0) {
+                return Err(format!("idx {i}: {a} vs {b} (p={p}, tile={tile})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pass_plan_covers_all_columns_within_budget() {
+    check("pass-plan", 100, |g| {
+        let n = g.usize_in(100, 1_000_000);
+        let p = g.usize_in(1, 64);
+        let cols_fit = g.usize_in(1, 64);
+        let budget = MemBudget::new((n as u64) * 4 * cols_fit as u64);
+        let plan = PassPlan::plan(n, p, &budget);
+        if plan.panel_cols == 0 || plan.passes == 0 {
+            return Err("degenerate plan".into());
+        }
+        // Passes cover p.
+        if plan.panel_cols * plan.passes < p {
+            return Err(format!(
+                "plan {}x{} does not cover {p}",
+                plan.panel_cols, plan.passes
+            ));
+        }
+        // A panel fits the budget (except the mandatory single column).
+        if plan.panel_cols > 1 && !budget.fits((n * 4 * plan.panel_cols) as u64) {
+            return Err("panel exceeds budget".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_budget_accounting_never_goes_negative() {
+    check("budget-accounting", 60, |g| {
+        let budget = MemBudget::new(g.usize_in(1000, 100_000) as u64);
+        let mut grants = Vec::new();
+        for _ in 0..g.usize_in(1, 40) {
+            if g.bool() {
+                if let Ok(gr) = budget.alloc(g.usize_in(1, 5000) as u64) {
+                    grants.push(gr);
+                }
+            } else if !grants.is_empty() {
+                grants.remove(g.usize_in(0, grants.len() - 1));
+            }
+            if budget.used() > budget.limit() {
+                return Err("over-committed".into());
+            }
+        }
+        drop(grants);
+        if budget.used() != 0 {
+            return Err(format!("leak: {} bytes", budget.used()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmv_linearity() {
+    // A(αx + βy) == αAx + βAy — exercised through the full engine.
+    check("spmv-linearity", 15, |g| {
+        let n = g.usize_in(100, 800);
+        let n_pairs = g.usize_in(10, 3000);
+        let pairs = random_pairs(g, n, n, n_pairs);
+        if pairs.is_empty() {
+            return Ok(());
+        }
+        let m = Csr::from_sorted_pairs(n, n, &pairs);
+        let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
+        let src = Source::Mem(img);
+        let opts = SpmmOpts::sequential();
+        let x: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let y: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let (alpha, beta) = (g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0));
+        let combo: Vec<f32> = x
+            .iter()
+            .zip(&y)
+            .map(|(&a, &b)| alpha * a + beta * b)
+            .collect();
+        let (ax, _) = engine::spmv(&src, &x, &opts).map_err(|e| e.to_string())?;
+        let (ay, _) = engine::spmv(&src, &y, &opts).map_err(|e| e.to_string())?;
+        let (ac, _) = engine::spmv(&src, &combo, &opts).map_err(|e| e.to_string())?;
+        for i in 0..n {
+            let expect = alpha * ax[i] + beta * ay[i];
+            if (ac[i] - expect).abs() > 1e-2 * expect.abs().max(1.0) {
+                return Err(format!("linearity broke at {i}: {} vs {expect}", ac[i]));
+            }
+        }
+        Ok(())
+    });
+}
