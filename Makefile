@@ -1,0 +1,40 @@
+# SEM-SpMM build entry points. Everything except `artifacts` is offline.
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: build test verify clippy bench python-test artifacts clean
+
+## Release build of the library + `sem-spmm` / `bench_paper` binaries.
+build:
+	$(CARGO) build --release
+
+## Tier-1 verify: exactly what CI and the driver run.
+verify:
+	$(CARGO) build --release && $(CARGO) test -q
+
+test:
+	$(CARGO) test -q
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+## Paper-figure benches (scale 13 by default; SEM_BENCH_SCALE overrides).
+bench:
+	$(CARGO) bench --bench fig5_sem_vs_im
+	$(CARGO) bench --bench fig7_baselines
+	$(CARGO) bench --bench fig12_compute_opts
+	$(CARGO) bench --bench fig13_io_opts
+
+python-test:
+	$(PYTHON) -m pytest python/tests -q
+
+## AOT-lower the JAX/Pallas kernels to HLO-text artifacts for the PJRT
+## backend (requires JAX; the native backend needs none of this).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+clean:
+	$(CARGO) clean
+	rm -rf $(ARTIFACTS_DIR) results sem-store

@@ -25,7 +25,7 @@ use sem_spmm::format::convert;
 use sem_spmm::format::{Csr, TileFormat};
 use sem_spmm::graph::sbm;
 use sem_spmm::io::{ExtMemStore, StoreConfig};
-use sem_spmm::runtime::{XlaDenseBackend, XlaRuntime};
+use sem_spmm::runtime;
 use sem_spmm::spmm::{SemSource, Source, SpmmOpts};
 
 fn main() -> Result<()> {
@@ -64,13 +64,13 @@ fn main() -> Result<()> {
 
     // --- 3. SEM-NMF, factors vertically partitioned (4 of 16 columns in
     //        memory), fused updates through PJRT when available.
-    let xla = XlaRuntime::from_env().map(XlaDenseBackend::new);
+    let backend = runtime::backend_from_env();
     println!(
         "fused NMF updates: {}",
-        if xla.is_some() {
+        if backend.is_some() {
             "AOT PJRT artifacts (L1 Pallas kernels)"
         } else {
-            "native fallback (run `make artifacts` for the PJRT path)"
+            "native fallback (build with --features pjrt + `make artifacts` for the PJRT path)"
         }
     );
     let a = Source::Sem(SemSource::open(&store, "a.semm")?);
@@ -80,7 +80,7 @@ fn main() -> Result<()> {
         iterations: 12,
         cols_in_mem: 4,
         spmm: SpmmOpts::default(),
-        xla,
+        backend,
         ..Default::default()
     };
     let res = nmf(&a, &at, &store, &cfg)?;

@@ -13,7 +13,7 @@ use sem_spmm::apps::pagerank::{pagerank, PageRankConfig};
 use sem_spmm::coordinator::Catalog;
 use sem_spmm::graph::registry;
 use sem_spmm::io::{ExtMemStore, StoreConfig};
-use sem_spmm::runtime::{XlaDenseBackend, XlaRuntime};
+use sem_spmm::runtime;
 use sem_spmm::spmm::{Source, SpmmOpts};
 
 fn main() -> Result<()> {
@@ -27,13 +27,13 @@ fn main() -> Result<()> {
     let imgs = catalog.ensure(&spec)?;
     println!("  {} vertices, {} edges", imgs.num_verts, imgs.nnz);
 
-    let xla = XlaRuntime::from_env().map(XlaDenseBackend::new);
+    let backend = runtime::backend_from_env();
     println!(
         "combine step: {}",
-        if xla.is_some() {
+        if backend.is_some() {
             "AOT PJRT artifact (pagerank_combine)"
         } else {
-            "native (run `make artifacts` for the PJRT path)"
+            "native (build with --features pjrt and run `make artifacts` for the PJRT path)"
         }
     );
 
@@ -42,7 +42,7 @@ fn main() -> Result<()> {
             iterations: 30,
             vecs_in_mem: vecs,
             spmm: SpmmOpts::default(),
-            xla_combine: xla.clone(),
+            combine_backend: backend.clone(),
             ..Default::default()
         };
         let src = Source::Sem(catalog.open_adj(&imgs)?);

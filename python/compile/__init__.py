@@ -1,0 +1,3 @@
+# The `compile` package: L1 Pallas kernels, L2 JAX graphs and the AOT
+# lowering pipeline. (An explicit package so imports work without
+# relying on namespace-package resolution.)

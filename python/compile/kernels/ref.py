@@ -1,12 +1,18 @@
-"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+"""Pure reference oracles for the Pallas kernels (L1 correctness).
 
 Every Pallas kernel in this package has an exact functional twin here;
 pytest (plus hypothesis sweeps) asserts they agree, and the Rust side's
 native implementations are in turn validated against the AOT artifacts
 lowered from the kernels — closing the three-layer correctness loop.
+
+These oracles deliberately avoid importing JAX at module load: they run
+on plain numpy arrays too, so the reference suite (`tests/test_ref.py`)
+still executes when JAX/Pallas is unavailable (the Python mirror of the
+Rust `pjrt` feature gate). When called with jax arrays from the kernel
+tests they operate on those transparently.
 """
 
-import jax.numpy as jnp
+import numpy as np
 
 EPS = 1e-9
 
@@ -16,12 +22,21 @@ def coo_spmm_ref(rows, cols, vals, x):
 
     rows/cols: int32[B] local indices into a T-row tile (padding entries
     carry val == 0 so they contribute nothing wherever they point).
-    vals: f32[B]; x: f32[T, P]. Returns f32[T, P].
+    vals: f32[B]; x: f32[T, P]. Returns f32[T, P] (numpy).
     """
-    t = x.shape[0]
-    gathered = vals[:, None] * x[cols]          # [B, P]
-    out = jnp.zeros((t, x.shape[1]), x.dtype)
-    return out.at[rows].add(gathered)
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    x = np.asarray(x)
+    # Padding entries (val == 0) are inert *wherever* they point — drop
+    # them before indexing so out-of-tile padding indices cannot raise
+    # (the jnp original tolerated them via clamp/drop semantics).
+    live = vals != 0
+    rows, cols, vals = rows[live], cols[live], vals[live]
+    gathered = vals[:, None] * x[cols]  # [B', P]
+    out = np.zeros((x.shape[0], x.shape[1]), x.dtype)
+    np.add.at(out, rows, gathered)
+    return out
 
 
 def gram_ref(x):

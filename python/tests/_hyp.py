@@ -1,0 +1,79 @@
+"""Hypothesis, or a deterministic stand-in when it is not installed.
+
+The container this repo tests in has no network access, so `hypothesis`
+may be absent. Importing `given`, `settings` and `strategies` from this
+module yields either the real library or a small deterministic sweep
+runner with the same call surface used by our tests:
+
+* ``strategies.integers(lo, hi)`` — inclusive integer range;
+* ``strategies.sampled_from(seq)`` — choice from a sequence;
+* ``@settings(max_examples=N, deadline=...)`` — records ``max_examples``
+  (capped at 12 in fallback mode to keep runs quick), ignores the rest;
+* ``@given(**kwargs)`` — runs the test once per example with kwargs
+  drawn from a seeded PRNG, so failures are reproducible.
+
+The fallback explores far fewer cases than hypothesis and does not
+shrink; it exists so the suite still *verifies* rather than silently
+skipping when the dependency is missing.
+"""
+
+try:  # pragma: no cover - trivial import probe
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rnd):
+            return self._sample(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rnd: rnd.randint(lo, hi))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rnd: rnd.choice(items))
+
+    strategies = _Strategies()
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._fallback_max_examples = min(max_examples, 12)
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args):
+                # `settings` may have been applied outside `given`; it
+                # then stamped the attribute on this wrapper.
+                n = getattr(wrapper, "_fallback_max_examples", 10)
+                rnd = random.Random(0xC0FFEE)
+                for case in range(n):
+                    kwargs = {k: s.sample(rnd) for k, s in strats.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"fallback-hypothesis case {case} {kwargs!r}: {e}"
+                        ) from e
+
+            # functools.wraps exposes the original signature through
+            # __wrapped__, which would make pytest treat the strategy
+            # kwargs as fixtures — hide it.
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

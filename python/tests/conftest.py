@@ -1,0 +1,22 @@
+"""Test wiring: make `pytest python/tests -q` work from any cwd and
+degrade gracefully on missing optional dependencies.
+
+* Puts `python/` on sys.path so `compile.*` imports resolve whether
+  pytest runs from the repo root or from `python/`.
+* Puts `python/tests/` on sys.path so the `_hyp` hypothesis-fallback
+  shim is importable.
+
+Dependency policy (mirrors the Rust `pjrt` feature gate): JAX/Pallas
+tests skip themselves via `pytest.importorskip("jax")` at module import;
+the numpy-only reference tests (`test_ref.py`) always run.
+"""
+
+import os
+import sys
+
+_TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+_PYTHON_DIR = os.path.dirname(_TESTS_DIR)
+
+for p in (_PYTHON_DIR, _TESTS_DIR):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,13 +1,17 @@
 """L2 graph tests: model functions compose the kernels correctly, lower to
 HLO cleanly, and the AOT block contract holds (padding + additivity)."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from compile import aot, model
-from compile.kernels import ref
+# Mirror of the Rust `pjrt` feature gate: the L2 graphs and AOT lowering
+# need JAX; skip the module when it is unavailable.
+jax = pytest.importorskip(
+    "jax", reason="JAX unavailable — L2/AOT tests skipped", exc_type=ImportError
+)
+
+from compile import aot, model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
 
 
 class TestModelFunctions:

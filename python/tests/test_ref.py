@@ -1,0 +1,100 @@
+"""Reference-kernel tests that run without JAX/Pallas.
+
+These exercise the pure oracles in `compile.kernels.ref` on plain numpy
+inputs, so `pytest python/tests -q` still verifies the kernel contracts
+on a box with no JAX (the Python mirror of building the Rust crate
+without the `pjrt` feature)."""
+
+import numpy as np
+
+from compile.kernels import ref
+
+
+def test_coo_spmm_ref_manual_case():
+    rows = np.array([0, 2, 2, 3], np.int32)
+    cols = np.array([1, 0, 1, 3], np.int32)
+    vals = np.array([2.0, 1.0, 0.5, -1.0], np.float32)
+    x = np.arange(8, dtype=np.float32).reshape(4, 2)
+    out = ref.coo_spmm_ref(rows, cols, vals, x)
+    want = np.zeros((4, 2), np.float32)
+    want[0] = 2.0 * x[1]
+    want[2] = 1.0 * x[0] + 0.5 * x[1]
+    want[3] = -1.0 * x[3]
+    np.testing.assert_allclose(out, want)
+
+
+def test_coo_spmm_ref_padding_is_inert():
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 16, 64).astype(np.int32)
+    cols = rng.integers(0, 16, 64).astype(np.int32)
+    vals = rng.standard_normal(64).astype(np.float32)
+    x = rng.standard_normal((16, 4)).astype(np.float32)
+    base = ref.coo_spmm_ref(rows, cols, vals, x)
+    # Append padding entries (val == 0) pointing anywhere — including
+    # outside the 16-row tile, which the contract says must stay inert.
+    rows_p = np.concatenate([rows, np.zeros(16, np.int32), np.full(16, 16, np.int32)])
+    cols_p = np.concatenate([cols, np.full(16, 7, np.int32), np.full(16, 99, np.int32)])
+    vals_p = np.concatenate([vals, np.zeros(32, np.float32)])
+    padded = ref.coo_spmm_ref(rows_p, cols_p, vals_p, x)
+    np.testing.assert_allclose(padded, base)
+
+
+def test_coo_spmm_ref_duplicates_accumulate():
+    rows = np.array([1, 1], np.int32)
+    cols = np.array([0, 0], np.int32)
+    vals = np.array([1.5, 2.5], np.float32)
+    x = np.ones((2, 3), np.float32)
+    out = ref.coo_spmm_ref(rows, cols, vals, x)
+    np.testing.assert_allclose(out[1], np.full(3, 4.0, np.float32))
+    np.testing.assert_allclose(out[0], np.zeros(3, np.float32))
+
+
+def test_gram_ref_additive_over_blocks():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((200, 6)).astype(np.float32)
+    whole = ref.gram_ref(x)
+    parts = ref.gram_ref(x[:77]) + ref.gram_ref(x[77:])
+    np.testing.assert_allclose(whole, parts, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(whole, whole.T, rtol=1e-5, atol=1e-5)
+
+
+def test_xty_ref_matches_matmul():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((64, 3)).astype(np.float32)
+    y = rng.standard_normal((64, 5)).astype(np.float32)
+    np.testing.assert_allclose(ref.xty_ref(x, y), x.T @ y, rtol=1e-5, atol=1e-5)
+
+
+def test_nmf_updates_reduce_residual():
+    # Lee–Seung: alternating reference updates must not increase
+    # ||A - WH||_F (tiny rounding slack).
+    rng = np.random.default_rng(3)
+    n, k = 20, 3
+    a = rng.random((n, n)).astype(np.float32)
+    w = rng.random((n, k)).astype(np.float32) + 0.1
+    h = rng.random((k, n)).astype(np.float32) + 0.1
+    prev = np.linalg.norm(a - w @ h)
+    for _ in range(8):
+        h = ref.nmf_update_h_ref(h, w.T @ a, w.T @ w)
+        w = ref.nmf_update_w_ref(w, a @ h.T, h @ h.T)
+        cur = np.linalg.norm(a - w @ h)
+        assert cur <= prev * 1.001, f"residual rose: {prev} -> {cur}"
+        prev = cur
+
+
+def test_nmf_update_fixed_point():
+    k, b = 4, 16
+    rng = np.random.default_rng(4)
+    h = rng.random((k, b)).astype(np.float32) + 0.5
+    wtw = np.eye(k, dtype=np.float32)
+    wta = wtw @ h + ref.EPS
+    out = ref.nmf_update_h_ref(h, wta, wtw)
+    np.testing.assert_allclose(out, h, rtol=1e-5)
+
+
+def test_pagerank_step_ref_mass():
+    contrib = np.full((10, 1), 0.1, np.float32)
+    out = ref.pagerank_step_ref(contrib, 0.85, 10)
+    # Uniform input stays uniform and sums to 1.
+    np.testing.assert_allclose(out, np.full((10, 1), 0.1, np.float32), rtol=1e-6)
+    np.testing.assert_allclose(float(out.sum()), 1.0, rtol=1e-6)

@@ -144,7 +144,7 @@ pub fn eigensolve(
             let norms = ops::orthonormalize(&mut w, None);
             // Rank collapse → reseed the dead directions randomly.
             if norms.iter().any(|&x| x < 1e-10) {
-                let mut r = DenseMatrix::random(n, b, cfg.seed ^ (active as u64) << 8);
+                let mut r = DenseMatrix::random(n, b, cfg.seed ^ ((active as u64) << 8));
                 for val in &mut r.data {
                     *val -= 0.5;
                 }

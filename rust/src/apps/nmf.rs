@@ -23,7 +23,7 @@ use super::TallPanels;
 use crate::io::ExtMemStore;
 use crate::matrix::{ops, DenseMatrix};
 use crate::metrics::Stopwatch;
-use crate::runtime::XlaDenseBackend;
+use crate::runtime::DenseBackend;
 use crate::spmm::{engine, Source, SpmmOpts};
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -40,8 +40,10 @@ pub struct NmfConfig {
     /// `cols_in_mem == k` keeps the factors fully in memory.
     pub cols_in_mem: usize,
     pub spmm: SpmmOpts,
-    /// Offload the fused update to the PJRT artifact when possible.
-    pub xla: Option<XlaDenseBackend>,
+    /// Offload the fused update to a dense backend (the PJRT artifacts
+    /// when built with `--features pjrt` + `make artifacts`, or the
+    /// native backend) when possible.
+    pub backend: Option<Arc<dyn DenseBackend>>,
     pub seed: u64,
 }
 
@@ -52,7 +54,7 @@ impl Default for NmfConfig {
             iterations: 10,
             cols_in_mem: 16,
             spmm: SpmmOpts::default(),
-            xla: None,
+            backend: None,
             seed: 0x17F,
         }
     }
@@ -194,13 +196,14 @@ fn update_factor(
     let np = target.num_panels();
     let k = b * np;
 
-    // Fast path: fully in memory, supported k → fused (PJRT or native).
+    // Fast path: fully in memory, supported k → fused (backend or the
+    // open-coded native update).
     if np == 1 {
         let t = target.load(0)?;
         let o = other.load(0)?;
         let (num, _) = engine::spmm_out(msrc, &o, &cfg.spmm)?;
-        let updated = match &cfg.xla {
-            Some(be) if XlaDenseBackend::supports_k(k) => be.nmf_update_w(&t, &num, g)?,
+        let updated = match &cfg.backend {
+            Some(be) if be.supports_k(k) => be.nmf_update_w(&t, &num, g)?,
             _ => fused_update_native(&t, &num, g),
         };
         target.store(0, &updated)?;
@@ -342,11 +345,11 @@ mod tests {
     }
 
     #[test]
-    fn xla_fused_update_matches_native() {
-        let Some(rt) = crate::runtime::XlaRuntime::from_env() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+    fn backend_fused_update_matches_native() {
+        // The PJRT backend when artifacts are built, the native backend
+        // otherwise — either must reproduce the open-coded update.
+        let be = crate::runtime::backend_from_env()
+            .unwrap_or_else(crate::runtime::default_backend);
         let (a, at, _) = setup(7, 900);
         let dir = crate::util::tempdir();
         let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
@@ -357,20 +360,20 @@ mod tests {
             spmm: SpmmOpts::sequential(),
             ..Default::default()
         };
-        let native = nmf(&Source::Mem(a.clone()), &Source::Mem(at.clone()), &store, &base)
+        let plain = nmf(&Source::Mem(a.clone()), &Source::Mem(at.clone()), &store, &base)
             .unwrap()
             .residuals;
-        let xla_cfg = NmfConfig {
-            xla: Some(XlaDenseBackend::new(rt)),
+        let be_cfg = NmfConfig {
+            backend: Some(be),
             ..base
         };
-        let xla = nmf(&Source::Mem(a), &Source::Mem(at), &store, &xla_cfg)
+        let offloaded = nmf(&Source::Mem(a), &Source::Mem(at), &store, &be_cfg)
             .unwrap()
             .residuals;
-        for (n, x) in native.iter().zip(&xla) {
+        for (n, x) in plain.iter().zip(&offloaded) {
             assert!(
                 (n - x).abs() < 1e-2 * n.max(1.0),
-                "native {n} vs xla {x}"
+                "plain {n} vs backend {x}"
             );
         }
     }

@@ -18,13 +18,19 @@
 //!   dense matrices with vertical partitioning.
 //! * [`spmm`] — the SpMM engine: dynamic tile-row scheduling, super-block
 //!   cache blocking, width-specialized kernels, IM and SEM drivers.
-//! * [`runtime`] — PJRT client wrapper loading AOT HLO-text artifacts.
+//! * [`runtime`] — the [`runtime::DenseBackend`] abstraction: a pure-Rust
+//!   native backend (always on) and, behind the `pjrt` cargo feature, a
+//!   PJRT client executing AOT HLO-text artifacts.
 //! * [`coordinator`] — memory budgeting, pass planning, orchestration and
 //!   the request-service loop.
 //! * [`apps`] — PageRank, Krylov–Schur eigensolver, NMF.
 //! * [`baselines`] — MKL-like CSR SpMM, Tpetra-like (incl. simulated
 //!   distributed), FlashGraph-like vertex engine, dense NMF.
 //! * [`bench`] — harness regenerating every figure/table of the paper.
+
+// Index-based loops are the house style of the numeric kernels in this
+// crate; rewriting them as iterator zips would not make them clearer.
+#![allow(clippy::needless_range_loop)]
 
 pub mod apps;
 pub mod baselines;

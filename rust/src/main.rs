@@ -25,7 +25,7 @@ use sem_spmm::config::Config;
 use sem_spmm::coordinator::{service::Service, Catalog};
 use sem_spmm::graph::registry;
 use sem_spmm::io::ExtMemStore;
-use sem_spmm::runtime::{XlaDenseBackend, XlaRuntime};
+use sem_spmm::runtime;
 use sem_spmm::spmm::{engine, Source};
 use std::path::Path;
 
@@ -170,12 +170,11 @@ fn cmd_pagerank(ctx: &Ctx, args: &[String]) -> Result<()> {
     let vecs: usize = args.get(2).map(|s| s.parse()).unwrap_or(Ok(3))?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
     let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
-    let xla = XlaRuntime::from_env().map(XlaDenseBackend::new);
     let cfg = pagerank::PageRankConfig {
         iterations: iters,
         vecs_in_mem: vecs,
         spmm: ctx.cfg.spmm_opts()?,
-        xla_combine: xla,
+        combine_backend: runtime::backend_from_env(),
         ..Default::default()
     };
     let (pr, stats) = pagerank::pagerank(&src, &imgs.degrees, &ctx.store, &cfg)?;
@@ -233,13 +232,12 @@ fn cmd_nmf(ctx: &Ctx, args: &[String]) -> Result<()> {
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
     let a = Source::Sem(ctx.catalog.open_adj(&imgs)?);
     let at = Source::Sem(ctx.catalog.open_adj_t(&imgs)?);
-    let xla = XlaRuntime::from_env().map(XlaDenseBackend::new);
     let cfg = nmf::NmfConfig {
         k,
         iterations: iters,
         cols_in_mem: cols,
         spmm: ctx.cfg.spmm_opts()?,
-        xla,
+        backend: runtime::backend_from_env(),
         ..Default::default()
     };
     let res = nmf::nmf(&a, &at, &ctx.store, &cfg)?;

@@ -1,0 +1,194 @@
+//! The pure-Rust [`DenseBackend`]: the offline twin of the AOT/PJRT
+//! artifacts.
+//!
+//! Every operation follows the block contract of
+//! `python/compile/model.py` — Gram/XᵀY fold additively over `GRAM_B`-row
+//! blocks, the NMF updates are fused elementwise kernels, `coo_spmm_tile`
+//! consumes one `<= COO_T`-row tile of `<= COO_B` entries and returns a
+//! `COO_T × p` block — so the native and PJRT backends are
+//! interchangeable and tests can diff them directly.
+
+use super::{DenseBackend, COO_B, COO_T, GRAM_B};
+use crate::matrix::{ops, DenseMatrix};
+use anyhow::{bail, Result};
+
+/// Epsilon of the fused NMF updates — matches `python/compile/kernels`.
+const EPS: f32 = 1e-9;
+
+/// The native dense backend. Stateless and freely cloneable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeDenseBackend;
+
+impl NativeDenseBackend {
+    pub fn new() -> NativeDenseBackend {
+        NativeDenseBackend
+    }
+}
+
+/// One `XᵀY` block product over row-major slices (`rows × k` and
+/// `rows × m`), accumulated in f64 and folded into `acc` in f32 — the
+/// same per-block precision structure as the artifact path, with no
+/// operand copies.
+fn xty_block_into(x: &[f32], y: &[f32], k: usize, m: usize, acc: &mut [f32]) {
+    let rows = x.len() / k.max(1);
+    let mut part = vec![0f64; k * m];
+    for r in 0..rows {
+        let xr = &x[r * k..(r + 1) * k];
+        let yr = &y[r * m..(r + 1) * m];
+        for a in 0..k {
+            let xa = xr[a] as f64;
+            if xa != 0.0 {
+                for b in 0..m {
+                    part[a * m + b] += xa * yr[b] as f64;
+                }
+            }
+        }
+    }
+    for (o, v) in acc.iter_mut().zip(&part) {
+        *o += *v as f32;
+    }
+}
+
+/// Fold `XᵀY` over `GRAM_B`-row blocks (additive block contract).
+fn fold_xty_blocks(x: &DenseMatrix, y: &DenseMatrix) -> DenseMatrix {
+    let (k, m) = (x.ncols, y.ncols);
+    let mut acc = DenseMatrix::zeros(k, m);
+    let mut r = 0;
+    while r < x.nrows {
+        let hi = (r + GRAM_B).min(x.nrows);
+        xty_block_into(
+            &x.data[r * k..hi * k],
+            &y.data[r * m..hi * m],
+            k,
+            m,
+            &mut acc.data,
+        );
+        r = hi;
+    }
+    acc
+}
+
+impl DenseBackend for NativeDenseBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports_k(&self, k: usize) -> bool {
+        k > 0
+    }
+
+    fn gram(&self, x: &DenseMatrix) -> Result<DenseMatrix> {
+        if x.ncols == 0 {
+            bail!("gram of a zero-column matrix");
+        }
+        Ok(fold_xty_blocks(x, x))
+    }
+
+    fn xty(&self, x: &DenseMatrix, y: &DenseMatrix) -> Result<DenseMatrix> {
+        // Equal shapes, matching the trait contract and the artifact
+        // backend (which only bakes square k×k xty shapes).
+        if x.nrows != y.nrows || x.ncols != y.ncols {
+            bail!(
+                "xty requires equal shapes ({}x{} vs {}x{})",
+                x.nrows,
+                x.ncols,
+                y.nrows,
+                y.ncols
+            );
+        }
+        Ok(fold_xty_blocks(x, y))
+    }
+
+    fn nmf_update_h(
+        &self,
+        h: &DenseMatrix,
+        wta: &DenseMatrix,
+        wtw: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        let (k, n) = (h.nrows, h.ncols);
+        if wta.nrows != k || wta.ncols != n || wtw.nrows != k || wtw.ncols != k {
+            bail!("nmf_update_h shape mismatch");
+        }
+        // denom = wtw @ h, then the fused elementwise multiply/divide.
+        let denom = ops::gemm_small(wtw, h);
+        let mut out = DenseMatrix::zeros(k, n);
+        for ((o, (&hv, &wv)), &dv) in out
+            .data
+            .iter_mut()
+            .zip(h.data.iter().zip(&wta.data))
+            .zip(&denom.data)
+        {
+            *o = hv * wv / (dv + EPS);
+        }
+        Ok(out)
+    }
+
+    fn nmf_update_w(
+        &self,
+        w: &DenseMatrix,
+        aht: &DenseMatrix,
+        hht: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        let (n, k) = (w.nrows, w.ncols);
+        if aht.nrows != n || aht.ncols != k || hht.nrows != k || hht.ncols != k {
+            bail!("nmf_update_w shape mismatch");
+        }
+        let denom = ops::mul_small(w, hht);
+        let mut out = DenseMatrix::zeros(n, k);
+        for ((o, (&wv, &av)), &dv) in out
+            .data
+            .iter_mut()
+            .zip(w.data.iter().zip(&aht.data))
+            .zip(&denom.data)
+        {
+            *o = wv * av / (dv + EPS);
+        }
+        Ok(out)
+    }
+
+    fn pagerank_combine(&self, contrib: &[f32], damping: f32, n: usize) -> Result<Vec<f32>> {
+        if n == 0 {
+            bail!("pagerank_combine over zero vertices");
+        }
+        let base = (1.0 - damping) / n as f32;
+        Ok(contrib.iter().map(|&c| base + damping * c).collect())
+    }
+
+    fn coo_spmm_tile(
+        &self,
+        rows: &[i32],
+        cols: &[i32],
+        vals: &[f32],
+        x: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        let p = x.ncols;
+        if rows.len() != cols.len() || rows.len() != vals.len() {
+            bail!("coo_spmm_tile: rows/cols/vals length mismatch");
+        }
+        if x.nrows > COO_T || rows.len() > COO_B {
+            bail!("tile exceeds artifact block (t <= {COO_T}, b <= {COO_B})");
+        }
+        let mut out = DenseMatrix::zeros(COO_T, p);
+        for ((&r, &c), &v) in rows.iter().zip(cols).zip(vals) {
+            if v == 0.0 {
+                // Padding entries are inert wherever they point (the
+                // same contract the artifact kernel honours).
+                continue;
+            }
+            let (r, c) = (r as usize, c as usize);
+            if r >= COO_T || c >= COO_T {
+                bail!("coo_spmm_tile: index ({r},{c}) out of tile bounds");
+            }
+            if c >= x.nrows {
+                // `x` is implicitly zero-padded to COO_T rows.
+                continue;
+            }
+            let xr = x.row(c);
+            let orow = out.row_mut(r);
+            for j in 0..p {
+                orow[j] += v * xr[j];
+            }
+        }
+        Ok(out)
+    }
+}

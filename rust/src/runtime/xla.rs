@@ -1,0 +1,465 @@
+//! PJRT runtime (behind the `pjrt` cargo feature): load AOT HLO-text
+//! artifacts and execute them from Rust.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once; everything here is
+//! pure Rust + the PJRT C API (`xla` crate) — Python never runs on the
+//! request path. Artifacts are HLO *text* (see aot.py for why not
+//! serialized protos); each is compiled on first use and cached.
+//!
+//! [`XlaDenseBackend`] adapts the fixed-shape block artifacts to
+//! arbitrary-size dense operands by chunking + zero-padding, per the
+//! block contract in `python/compile/model.py`:
+//! Gram/XᵀY fold additively over row blocks; the NMF updates map
+//! independently over blocks; `coo_spmm` runs one sparse tile per call.
+//!
+//! Without a real libxla the `xla` dependency resolves to the vendored
+//! compile-only stub (`vendor/xla`), which keeps this module building and
+//! its error paths testable; executions then fail with a clear message
+//! and callers fall back to [`super::NativeDenseBackend`].
+
+use super::{default_artifacts_dir, DenseBackend, COO_B, COO_T, GRAM_B, NMF_B, PR_B};
+use crate::matrix::DenseMatrix;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// A PJRT CPU client plus a cache of compiled artifact executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime").field("dir", &self.dir).finish()
+    }
+}
+
+impl XlaRuntime {
+    /// Create a runtime over an artifact directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Arc<XlaRuntime>> {
+        let dir = dir.into();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Arc::new(XlaRuntime {
+            client,
+            dir,
+            exes: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    /// Runtime over the default artifact directory, or `None` when the
+    /// artifacts have not been built (callers fall back to native ops).
+    pub fn from_env() -> Option<Arc<XlaRuntime>> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        XlaRuntime::new(dir).ok()
+    }
+
+    /// Whether a named artifact exists on disk.
+    pub fn has(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Whether this runtime can compile at least one artifact on disk —
+    /// distinguishes a working PJRT install from the vendored
+    /// compile-only stub (or a broken libxla) without depending on any
+    /// specific artifact being present. The compiled probe is cached, so
+    /// it is reused if the workload later calls it.
+    pub fn usable(&self) -> bool {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return false;
+        };
+        for e in entries.flatten() {
+            let p = e.path();
+            if let Some(stem) = p
+                .file_name()
+                .and_then(|s| s.to_str())
+                .and_then(|n| n.strip_suffix(".hlo.txt"))
+            {
+                if self.get(stem).is_ok() {
+                    return true;
+                }
+                // A single corrupt artifact must not mask a working
+                // install — keep probing the rest.
+            }
+        }
+        false
+    }
+
+    fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Get (compiling + caching on first use) an artifact executable.
+    pub fn get(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let exes = self.exes.lock().unwrap();
+            if let Some(e) = exes.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let path = self.artifact_path(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        self.exes
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact whose lowered module returns a 1-tuple, and
+    /// return the f32 payload of that single output.
+    pub fn run1_f32(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let exe = self.get(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → a 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling {name} output: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("converting {name} output: {e:?}"))
+    }
+}
+
+/// Build an f32 literal with the given dims from row-major data.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape {:?} != data len {}", dims, data.len());
+    }
+    let v = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    v.reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Build an i32 literal (1-D).
+pub fn literal_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Dense-algebra backend running on AOT artifacts (the PJRT twin of
+/// [`super::NativeDenseBackend`]).
+#[derive(Debug, Clone)]
+pub struct XlaDenseBackend {
+    rt: Arc<XlaRuntime>,
+}
+
+impl XlaDenseBackend {
+    pub fn new(rt: Arc<XlaRuntime>) -> XlaDenseBackend {
+        XlaDenseBackend { rt }
+    }
+
+    /// Small dimensions with baked artifact shapes.
+    pub fn artifact_k(k: usize) -> bool {
+        matches!(k, 4 | 8 | 16)
+    }
+}
+
+impl DenseBackend for XlaDenseBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supports_k(&self, k: usize) -> bool {
+        Self::artifact_k(k)
+    }
+
+    /// `XᵀX` via the `gram_b{B}_k{k}` artifact, folded over row blocks.
+    fn gram(&self, x: &DenseMatrix) -> Result<DenseMatrix> {
+        let k = x.ncols;
+        if !Self::artifact_k(k) {
+            bail!("no gram artifact for k={k}");
+        }
+        let name = format!("gram_b{GRAM_B}_k{k}");
+        let mut acc = vec![0f32; k * k];
+        let mut block = vec![0f32; GRAM_B * k];
+        let mut r = 0;
+        while r < x.nrows {
+            let hi = (r + GRAM_B).min(x.nrows);
+            let n = (hi - r) * k;
+            block[..n].copy_from_slice(&x.data[r * k..hi * k]);
+            block[n..].fill(0.0); // zero-pad the tail block
+            let lit = literal_f32(&block, &[GRAM_B, k])?;
+            let out = self.rt.run1_f32(&name, &[lit])?;
+            for (a, o) in acc.iter_mut().zip(&out) {
+                *a += o;
+            }
+            r = hi;
+        }
+        Ok(DenseMatrix::from_vec(k, k, acc))
+    }
+
+    /// `XᵀY` via the `xty` artifact (requires `x.ncols == y.ncols`,
+    /// both a supported k).
+    fn xty(&self, x: &DenseMatrix, y: &DenseMatrix) -> Result<DenseMatrix> {
+        let k = x.ncols;
+        if x.nrows != y.nrows || y.ncols != k {
+            bail!("xty artifact requires equal shapes");
+        }
+        if !Self::artifact_k(k) {
+            bail!("no xty artifact for k={k}");
+        }
+        let name = format!("xty_b{GRAM_B}_k{k}");
+        let mut acc = vec![0f32; k * k];
+        let mut bx = vec![0f32; GRAM_B * k];
+        let mut by = vec![0f32; GRAM_B * k];
+        let mut r = 0;
+        while r < x.nrows {
+            let hi = (r + GRAM_B).min(x.nrows);
+            let n = (hi - r) * k;
+            bx[..n].copy_from_slice(&x.data[r * k..hi * k]);
+            bx[n..].fill(0.0);
+            by[..n].copy_from_slice(&y.data[r * k..hi * k]);
+            by[n..].fill(0.0);
+            let out = self.rt.run1_f32(
+                &name,
+                &[literal_f32(&bx, &[GRAM_B, k])?, literal_f32(&by, &[GRAM_B, k])?],
+            )?;
+            for (a, o) in acc.iter_mut().zip(&out) {
+                *a += o;
+            }
+            r = hi;
+        }
+        Ok(DenseMatrix::from_vec(k, k, acc))
+    }
+
+    /// Fused NMF H-update (`h`, `wta` are k×n; `wtw` is k×k), mapped over
+    /// column blocks of width `NMF_B`.
+    fn nmf_update_h(
+        &self,
+        h: &DenseMatrix,
+        wta: &DenseMatrix,
+        wtw: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        let k = h.nrows;
+        let n = h.ncols;
+        if !Self::artifact_k(k) {
+            bail!("no nmf_h artifact for k={k}");
+        }
+        if wta.nrows != k || wta.ncols != n || wtw.nrows != k || wtw.ncols != k {
+            bail!("nmf_update_h shape mismatch");
+        }
+        let name = format!("nmf_h_k{k}_b{NMF_B}");
+        let wtw_lit = literal_f32(&wtw.data, &[k, k])?;
+        let mut out = DenseMatrix::zeros(k, n);
+        let mut hb = vec![0f32; k * NMF_B];
+        let mut wb = vec![0f32; k * NMF_B];
+        let mut c = 0;
+        while c < n {
+            let hi = (c + NMF_B).min(n);
+            let w = hi - c;
+            for row in 0..k {
+                hb[row * NMF_B..row * NMF_B + w]
+                    .copy_from_slice(&h.data[row * n + c..row * n + hi]);
+                hb[row * NMF_B + w..(row + 1) * NMF_B].fill(1.0); // pad: avoid 0/0
+                wb[row * NMF_B..row * NMF_B + w]
+                    .copy_from_slice(&wta.data[row * n + c..row * n + hi]);
+                wb[row * NMF_B + w..(row + 1) * NMF_B].fill(0.0);
+            }
+            let res = self.rt.run1_f32(
+                &name,
+                &[
+                    literal_f32(&hb, &[k, NMF_B])?,
+                    literal_f32(&wb, &[k, NMF_B])?,
+                    wtw_lit.clone(),
+                ],
+            )?;
+            for row in 0..k {
+                out.data[row * n + c..row * n + hi]
+                    .copy_from_slice(&res[row * NMF_B..row * NMF_B + w]);
+            }
+            c = hi;
+        }
+        Ok(out)
+    }
+
+    /// Fused NMF W-update (`w`, `aht` are n×k; `hht` is k×k), mapped over
+    /// row blocks of height `NMF_B`.
+    fn nmf_update_w(
+        &self,
+        w: &DenseMatrix,
+        aht: &DenseMatrix,
+        hht: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        let k = w.ncols;
+        let n = w.nrows;
+        if !Self::artifact_k(k) {
+            bail!("no nmf_w artifact for k={k}");
+        }
+        if aht.nrows != n || aht.ncols != k || hht.nrows != k || hht.ncols != k {
+            bail!("nmf_update_w shape mismatch");
+        }
+        let name = format!("nmf_w_k{k}_b{NMF_B}");
+        let hht_lit = literal_f32(&hht.data, &[k, k])?;
+        let mut out = DenseMatrix::zeros(n, k);
+        let mut wb = vec![0f32; NMF_B * k];
+        let mut ab = vec![0f32; NMF_B * k];
+        let mut r = 0;
+        while r < n {
+            let hi = (r + NMF_B).min(n);
+            let rows = hi - r;
+            wb[..rows * k].copy_from_slice(&w.data[r * k..hi * k]);
+            wb[rows * k..].fill(1.0); // pad: avoid 0/0
+            ab[..rows * k].copy_from_slice(&aht.data[r * k..hi * k]);
+            ab[rows * k..].fill(0.0);
+            let res = self.rt.run1_f32(
+                &name,
+                &[
+                    literal_f32(&wb, &[NMF_B, k])?,
+                    literal_f32(&ab, &[NMF_B, k])?,
+                    hht_lit.clone(),
+                ],
+            )?;
+            out.data[r * k..hi * k].copy_from_slice(&res[..rows * k]);
+            r = hi;
+        }
+        Ok(out)
+    }
+
+    /// PageRank combine over the full vector, mapped over `PR_B` blocks.
+    fn pagerank_combine(&self, contrib: &[f32], damping: f32, n: usize) -> Result<Vec<f32>> {
+        let name = format!("pagerank_combine_b{PR_B}");
+        let d = literal_f32(&[damping], &[1, 1])?;
+        let inv_n = literal_f32(&[1.0 / n as f32], &[1, 1])?;
+        let mut out = vec![0f32; contrib.len()];
+        let mut blk = vec![0f32; PR_B];
+        let mut r = 0;
+        while r < contrib.len() {
+            let hi = (r + PR_B).min(contrib.len());
+            blk[..hi - r].copy_from_slice(&contrib[r..hi]);
+            blk[hi - r..].fill(0.0);
+            let res = self.rt.run1_f32(
+                &name,
+                &[literal_f32(&blk, &[PR_B, 1])?, d.clone(), inv_n.clone()],
+            )?;
+            out[r..hi].copy_from_slice(&res[..hi - r]);
+            r = hi;
+        }
+        Ok(out)
+    }
+
+    /// One sparse-tile COO-block multiply through the L1 Pallas artifact
+    /// (`p ∈ {1, 4, 8}`, tile rows `<= COO_T`, `<= COO_B` entries per
+    /// call; used by tests and the pjrt-backend demo path).
+    fn coo_spmm_tile(
+        &self,
+        rows: &[i32],
+        cols: &[i32],
+        vals: &[f32],
+        x: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        let p = x.ncols;
+        if !matches!(p, 1 | 4 | 8) {
+            bail!("no coo_spmm artifact for p={p}");
+        }
+        if rows.len() != cols.len() || rows.len() != vals.len() {
+            bail!("coo_spmm_tile: rows/cols/vals length mismatch");
+        }
+        if x.nrows > COO_T || rows.len() > COO_B {
+            bail!("tile exceeds artifact block (t <= {COO_T}, b <= {COO_B})");
+        }
+        let name = format!("coo_spmm_b{COO_B}_t{COO_T}_p{p}");
+        let mut rb = vec![0i32; COO_B];
+        let mut cb = vec![0i32; COO_B];
+        let mut vb = vec![0f32; COO_B];
+        rb[..rows.len()].copy_from_slice(rows);
+        cb[..cols.len()].copy_from_slice(cols);
+        vb[..vals.len()].copy_from_slice(vals);
+        let mut xb = vec![0f32; COO_T * p];
+        xb[..x.data.len()].copy_from_slice(&x.data);
+        let out = self.rt.run1_f32(
+            &name,
+            &[
+                literal_i32(&rb),
+                literal_i32(&cb),
+                literal_f32(&vb, &[COO_B])?,
+                literal_f32(&xb, &[COO_T, p])?,
+            ],
+        )?;
+        Ok(DenseMatrix::from_vec(COO_T, p, out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::ops;
+
+    fn runtime() -> Option<Arc<XlaRuntime>> {
+        // Artifacts are built by `make artifacts`; these tests skip when
+        // they are absent (and when the xla stub is linked, `from_env`
+        // still gates on the manifest existing).
+        XlaRuntime::from_env()
+    }
+
+    #[test]
+    fn gram_matches_native() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let be = XlaDenseBackend::new(rt);
+        let x = DenseMatrix::random(10_000, 8, 1);
+        let got = be.gram(&x).unwrap();
+        let want = ops::gram(&x);
+        assert!(got.max_abs_diff(&want) < 1e-2 * (want.data[0].abs().max(1.0)));
+    }
+
+    #[test]
+    fn xty_matches_native() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let be = XlaDenseBackend::new(rt);
+        let x = DenseMatrix::random(5000, 4, 2);
+        let y = DenseMatrix::random(5000, 4, 3);
+        let got = be.xty(&x, &y).unwrap();
+        let want = ops::xty(&x, &y);
+        assert!(got.max_abs_diff(&want) < 0.05, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn pagerank_combine_matches() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let be = XlaDenseBackend::new(rt);
+        let contrib: Vec<f32> = (0..100_000).map(|i| (i % 97) as f32 / 97.0).collect();
+        let got = be.pagerank_combine(&contrib, 0.85, 1000).unwrap();
+        for (i, g) in got.iter().enumerate() {
+            let want = 0.15 / 1000.0 + 0.85 * contrib[i];
+            assert!((g - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn unsupported_k_is_rejected() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let be = XlaDenseBackend::new(rt);
+        let x = DenseMatrix::random(100, 5, 9);
+        assert!(be.gram(&x).is_err());
+    }
+}

@@ -111,11 +111,6 @@ pub struct SpmmStats {
     pub read_gbps: f64,
 }
 
-/// Pointer wrapper for disjoint cross-thread output writes.
-struct SyncPtr<T>(*const T);
-unsafe impl<T> Sync for SyncPtr<T> {}
-unsafe impl<T> Send for SyncPtr<T> {}
-
 /// Sparse × dense multiply: `out = A · X` with `A` from `src` (n×m tiled
 /// image) and `X` the in-memory (striped) dense operand (m×p).
 ///
@@ -220,7 +215,7 @@ fn worker(
         Ticket(IoTicket),
         Empty,
     }
-    let fetch = |task: Task| -> Fetch<'_> {
+    fn do_fetch<'b>(src: &'b Source, io: Option<&IoEngine>, task: Task) -> Fetch<'b> {
         match src {
             Source::Mem(img) => Fetch::Mem(img.tile_rows(task.lo, task.hi)),
             Source::Sem(s) => {
@@ -230,15 +225,13 @@ fn worker(
                 if len == 0 {
                     Fetch::Empty
                 } else {
-                    Fetch::Ticket(io.unwrap().submit(
-                        &s.file,
-                        s.data_start + off0,
-                        len,
-                    ))
+                    let io = io.expect("SEM source requires an I/O engine");
+                    Fetch::Ticket(io.submit(&s.file, s.data_start + off0, len))
                 }
             }
         }
-    };
+    }
+    let fetch = |task: Task| do_fetch(src, io, task);
 
     let p = input.ncols;
     let t = meta.tile;

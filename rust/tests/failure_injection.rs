@@ -82,7 +82,7 @@ fn missing_object_errors() {
 fn corrupted_csr_image_rejected_by_converter() {
     let dir = sem_spmm::util::tempdir();
     let s = store(dir.path());
-    s.put("bad.csr", &vec![7u8; 256]).unwrap();
+    s.put("bad.csr", &[7u8; 256]).unwrap();
     assert!(convert::convert(&s, "bad.csr", "out.semm", 256, TileFormat::Scsr).is_err());
 }
 
@@ -118,6 +118,7 @@ fn io_engine_survives_error_storm() {
     assert_eq!(errs, 20);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn runtime_missing_artifact_errors_cleanly() {
     let dir = sem_spmm::util::tempdir();
@@ -127,12 +128,39 @@ fn runtime_missing_artifact_errors_cleanly() {
     assert!(rt.run1_f32("nope", &[]).is_err());
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn garbage_artifact_fails_to_parse() {
     let dir = sem_spmm::util::tempdir();
     std::fs::write(dir.path().join("junk.hlo.txt"), "this is not hlo").unwrap();
     let rt = sem_spmm::runtime::XlaRuntime::new(dir.path()).unwrap();
     assert!(rt.get("junk").is_err());
+}
+
+#[test]
+fn native_backend_rejects_bad_shapes_cleanly() {
+    // The always-available backend must error (not panic) on contract
+    // violations, mirroring the artifact runtime's failure behaviour.
+    let be = sem_spmm::runtime::default_backend();
+    let x = DenseMatrix::random(100, 4, 1);
+    let y = DenseMatrix::random(90, 4, 2);
+    assert!(be.xty(&x, &y).is_err());
+    let h = DenseMatrix::random(4, 50, 3);
+    let wtw = DenseMatrix::random(3, 3, 4);
+    assert!(be.nmf_update_h(&h, &h, &wtw).is_err());
+    let w = DenseMatrix::random(50, 4, 5);
+    let hht = DenseMatrix::random(5, 5, 6);
+    assert!(be.nmf_update_w(&w, &w, &hht).is_err());
+}
+
+#[test]
+fn native_backend_rejects_oversized_coo_tile() {
+    let be = sem_spmm::runtime::default_backend();
+    let too_tall = DenseMatrix::random(sem_spmm::runtime::COO_T + 1, 4, 7);
+    assert!(be.coo_spmm_tile(&[0], &[0], &[1.0], &too_tall).is_err());
+    // Mismatched index/value lengths are rejected too.
+    let x = DenseMatrix::random(16, 4, 8);
+    assert!(be.coo_spmm_tile(&[0, 1], &[0], &[1.0, 2.0], &x).is_err());
 }
 
 #[test]

@@ -149,13 +149,13 @@ fn vertical_partitioning_under_budget_is_exact() {
 }
 
 #[test]
-fn pjrt_runtime_composes_with_engine() {
-    // SEM SpMM feeding the AOT gram artifact — L3 + PJRT in one flow.
-    let Some(rt) = sem_spmm::runtime::XlaRuntime::from_env() else {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return;
-    };
-    let be = sem_spmm::runtime::XlaDenseBackend::new(rt);
+fn dense_backend_composes_with_engine() {
+    // SEM SpMM feeding the backend's blocked gram — L3 + backend in one
+    // flow. Uses the AOT/PJRT backend when built with `--features pjrt`
+    // and artifacts exist; the native backend (same block contract)
+    // otherwise.
+    let be = sem_spmm::runtime::backend_from_env()
+        .unwrap_or_else(sem_spmm::runtime::default_backend);
     let dir = sem_spmm::util::tempdir();
     let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
     let catalog = Catalog::new(store, 512);

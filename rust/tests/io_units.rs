@@ -1,0 +1,139 @@
+//! Satellite unit tests for `io/`: write-merging boundary behaviour of
+//! [`MergedWriter`], [`BufferPool`] reuse under thread contention, and
+//! the `StoreConfig::slow_ssd` throttle actually bounding observed
+//! throughput.
+
+use sem_spmm::io::{BufferPool, ExtMemStore, MergedWriter, StoreConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn unthrottled(dir: &std::path::Path) -> Arc<ExtMemStore> {
+    ExtMemStore::open(StoreConfig::unthrottled(dir)).unwrap()
+}
+
+#[test]
+fn merged_writer_merges_across_window_boundary_only_within_batches() {
+    // Extents 0..100, 100..200 arrive in the first window, 200..300 in
+    // the second: the writer must issue exactly one write per flushed
+    // batch, and the final bytes must be the in-order concatenation.
+    let dir = sem_spmm::util::tempdir();
+    let store = unthrottled(dir.path());
+    let f = store.create_file("out").unwrap();
+    let w = MergedWriter::new(f, 200); // window = 200 bytes
+    w.write(100, vec![2u8; 100]);
+    w.write(0, vec![1u8; 100]); // hits the window → flush of [0,200)
+    w.flush();
+    w.write(200, vec![3u8; 100]);
+    let report = w.finish().unwrap();
+    assert_eq!(report.extents_in, 3);
+    assert_eq!(report.bytes, 300);
+    assert_eq!(report.writes_out, 2, "one merged write per batch");
+    let got = store.get("out").unwrap();
+    assert_eq!(&got[0..100], &[1u8; 100][..]);
+    assert_eq!(&got[100..200], &[2u8; 100][..]);
+    assert_eq!(&got[200..300], &[3u8; 100][..]);
+}
+
+#[test]
+fn merged_writer_zero_length_and_touching_extents() {
+    let dir = sem_spmm::util::tempdir();
+    let store = unthrottled(dir.path());
+    let f = store.create_file("out").unwrap();
+    let w = MergedWriter::new(f, usize::MAX);
+    // Zero-length extent must neither merge-break nor write bytes.
+    w.write(0, Vec::new());
+    w.write(0, vec![9u8; 8]);
+    w.write(8, vec![8u8; 8]);
+    let report = w.finish().unwrap();
+    assert_eq!(report.bytes, 16);
+    assert_eq!(report.writes_out, 1);
+    assert_eq!(store.size_of("out").unwrap(), 16);
+}
+
+#[test]
+fn buffer_pool_reuse_under_contention() {
+    // 8 threads × many get/put cycles against a small pool: retention
+    // stays bounded, hit counting is monotone, and every buffer comes
+    // back with the requested length.
+    let dir = sem_spmm::util::tempdir();
+    let store = unthrottled(dir.path());
+    let pool = BufferPool::with_store(true, 4, store.clone());
+    let hs: Vec<_> = (0..8usize)
+        .map(|t| {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                for i in 0..500usize {
+                    let len = 64 + ((t * 131 + i * 17) % 512);
+                    let buf = pool.get(len);
+                    assert_eq!(buf.len(), len);
+                    pool.put(buf);
+                }
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    assert!(pool.retained() <= 4, "retention bound violated");
+    let hits = store.stats.pool_hits.get();
+    let misses = store.stats.pool_misses.get();
+    assert_eq!(hits + misses, 8 * 500);
+    // Buffers must actually be reused under contention (the exact ratio
+    // depends on scheduling, but zero reuse would mean a broken pool).
+    assert!(hits > 0, "no pool reuse under contention");
+}
+
+#[test]
+fn disabled_buffer_pool_counts_only_misses() {
+    let dir = sem_spmm::util::tempdir();
+    let store = unthrottled(dir.path());
+    let pool = BufferPool::with_store(false, 16, store.clone());
+    for _ in 0..50 {
+        let b = pool.get(128);
+        pool.put(b);
+    }
+    assert_eq!(pool.retained(), 0);
+    assert_eq!(store.stats.pool_hits.get(), 0);
+    assert_eq!(store.stats.pool_misses.get(), 50);
+}
+
+#[test]
+fn slow_ssd_throttle_bounds_observed_read_gbps() {
+    // slow_ssd(0.1): 100 MB/s read cap. Reading 8 MiB must take at least
+    // ~80 ms, i.e. observed throughput <= ~1.3x the configured cap (the
+    // slack covers timer granularity).
+    let dir = sem_spmm::util::tempdir();
+    let store = ExtMemStore::open(StoreConfig::slow_ssd(dir.path(), 0.1)).unwrap();
+    let data = vec![3u8; 8 << 20];
+    store.put("obj", &data).unwrap();
+    let read0 = store.stats.bytes_read.get();
+    let t0 = Instant::now();
+    let back = store.get("obj").unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(back.len(), data.len());
+    let gbps = (store.stats.bytes_read.get() - read0) as f64 / 1e9 / secs;
+    assert!(gbps <= 0.13, "observed {gbps:.3} GB/s exceeds the 0.1 GB/s cap");
+}
+
+#[test]
+fn slow_ssd_throttle_bounds_aggregate_write_gbps_across_threads() {
+    // slow_ssd(0.25) → write cap 0.2 GB/s shared across threads.
+    let dir = sem_spmm::util::tempdir();
+    let store = ExtMemStore::open(StoreConfig::slow_ssd(dir.path(), 0.25)).unwrap();
+    let t0 = Instant::now();
+    let hs: Vec<_> = (0..4)
+        .map(|i| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let data = vec![i as u8; 2 << 20];
+                store.put(&format!("w{i}"), &data).unwrap()
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let gbps = store.stats.bytes_written.get() as f64 / 1e9 / secs;
+    assert!(gbps <= 0.26, "aggregate write {gbps:.3} GB/s exceeds the cap");
+}
