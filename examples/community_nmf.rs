@@ -24,7 +24,7 @@ use sem_spmm::apps::nmf::{nmf, NmfConfig};
 use sem_spmm::format::convert;
 use sem_spmm::format::{Csr, TileFormat};
 use sem_spmm::graph::sbm;
-use sem_spmm::io::{ExtMemStore, StoreConfig};
+use sem_spmm::io::{ShardedStore, StoreSpec};
 use sem_spmm::runtime;
 use sem_spmm::spmm::{SemSource, Source, SpmmOpts};
 
@@ -50,7 +50,7 @@ fn main() -> Result<()> {
 
     // --- 2. Store + images (simulated SSD array).
     let dir = std::env::temp_dir().join("sem-spmm-community");
-    let store = ExtMemStore::open(StoreConfig::paper_ssd_array(&dir))?;
+    let store = ShardedStore::open(StoreSpec::paper_ssd_array(&dir))?;
     convert::put_csr_image(&store, "a.csr", &m)?;
     let rep = convert::convert(&store, "a.csr", "a.semm", 4096, TileFormat::Scsr)?;
     let mt = m.transpose();

@@ -12,13 +12,13 @@ use anyhow::Result;
 use sem_spmm::apps::pagerank::{pagerank, PageRankConfig};
 use sem_spmm::coordinator::Catalog;
 use sem_spmm::graph::registry;
-use sem_spmm::io::{ExtMemStore, StoreConfig};
+use sem_spmm::io::{ShardedStore, StoreSpec};
 use sem_spmm::runtime;
 use sem_spmm::spmm::{Source, SpmmOpts};
 
 fn main() -> Result<()> {
     let dir = std::env::temp_dir().join("sem-spmm-pagerank");
-    let store = ExtMemStore::open(StoreConfig::paper_ssd_array(&dir))?;
+    let store = ShardedStore::open(StoreSpec::paper_ssd_array(&dir))?;
     let catalog = Catalog::new(store.clone(), 4096);
 
     // The page-graph stand-in (clustered web structure, Table 1).

@@ -10,7 +10,7 @@ use anyhow::Result;
 use sem_spmm::format::convert;
 use sem_spmm::format::{Csr, TileFormat};
 use sem_spmm::graph::rmat;
-use sem_spmm::io::{ExtMemStore, StoreConfig};
+use sem_spmm::io::{ShardedStore, StoreSpec};
 use sem_spmm::matrix::DenseMatrix;
 use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
 
@@ -23,7 +23,7 @@ fn main() -> Result<()> {
 
     // 2. A store standing in for the paper's SSD array (12 GB/s read).
     let dir = std::env::temp_dir().join("sem-spmm-quickstart");
-    let store = ExtMemStore::open(StoreConfig::paper_ssd_array(&dir))?;
+    let store = ShardedStore::open(StoreSpec::paper_ssd_array(&dir))?;
 
     // 3. One-time CSR → SCSR conversion (Table 2's pipeline).
     convert::put_csr_image(&store, "g.csr", &m)?;

@@ -13,16 +13,24 @@ pub fn bench_ctx(name: &str) -> (sem_spmm::util::TempDir, Bench) {
     let threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(8);
+    let shards: usize = std::env::var("SEM_BENCH_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
     let dir = sem_spmm::util::tempdir();
     let bench = Bench::new(
-        dir.path().join("store"),
+        Bench::array_spec(
+            dir.path().join("store"),
+            12.0,
+            shards,
+            sem_spmm::io::DEFAULT_STRIPE_BYTES,
+        ),
         std::path::PathBuf::from("results").join("bench"),
         threads,
-        12.0,
         Some(scale),
         4096,
     )
     .expect("bench context");
-    eprintln!("[{name}] scale={scale} threads={threads} gbps=12");
+    eprintln!("[{name}] scale={scale} threads={threads} gbps=12 shards={shards}");
     (dir, bench)
 }

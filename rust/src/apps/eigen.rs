@@ -20,7 +20,7 @@
 //! matrix and the vector subspace on SSDs".
 
 use super::TallPanels;
-use crate::io::ExtMemStore;
+use crate::io::ShardedStore;
 use crate::matrix::{ops, DenseMatrix};
 use crate::metrics::Stopwatch;
 use crate::spmm::{engine, Source, SpmmOpts};
@@ -84,7 +84,7 @@ pub struct EigenResult {
 /// provided.
 pub fn eigensolve(
     src: &Source,
-    store: &Arc<ExtMemStore>,
+    store: &Arc<ShardedStore>,
     cfg: &EigenConfig,
 ) -> Result<EigenResult> {
     let meta = src.meta().clone();
@@ -289,7 +289,7 @@ mod tests {
     use crate::format::tiled::TiledImage;
     use crate::format::{Csr, TileFormat};
     use crate::graph::rmat;
-    use crate::io::StoreConfig;
+    use crate::io::StoreSpec;
 
     /// Dense oracle: eigenvalues via Jacobi on the dense adjacency.
     fn dense_eigs(m: &Csr) -> Vec<f64> {
@@ -317,7 +317,7 @@ mod tests {
         let want = dense_eigs(&m);
         let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         for placement in [SubspaceMem::Mem, SubspaceMem::Sem] {
             let cfg = EigenConfig {
                 nev: 4,
@@ -350,7 +350,7 @@ mod tests {
         let m = sym_graph(9, 3000, 7);
         let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let cfg = EigenConfig {
             nev: 3,
             block: 1,
@@ -376,7 +376,7 @@ mod tests {
         let m = Csr::from_sorted_pairs(3, 5, &pairs);
         let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         assert!(eigensolve(&Source::Mem(img), &store, &EigenConfig::default()).is_err());
     }
 }

@@ -20,7 +20,7 @@ pub mod eigen;
 pub mod nmf;
 pub mod pagerank;
 
-use crate::io::ExtMemStore;
+use crate::io::ShardedStore;
 use crate::matrix::{DenseMatrix, SemDense};
 use anyhow::Result;
 use std::sync::Arc;
@@ -37,7 +37,7 @@ pub enum TallPanels {
 impl TallPanels {
     /// Create with `num_panels` panels of shape n×b.
     pub fn create(
-        store: &Arc<ExtMemStore>,
+        store: &Arc<ShardedStore>,
         name: &str,
         n: usize,
         b: usize,
@@ -111,12 +111,12 @@ impl TallPanels {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::io::StoreConfig;
+    use crate::io::StoreSpec;
 
     #[test]
     fn mem_and_sem_placements_agree() {
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         for in_mem in [true, false] {
             let mut tp =
                 TallPanels::create(&store, "v", 50, 2, 3, in_mem).unwrap();

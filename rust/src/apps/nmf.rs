@@ -20,7 +20,7 @@
 //! memory-resident and k is a supported artifact shape.
 
 use super::TallPanels;
-use crate::io::ExtMemStore;
+use crate::io::ShardedStore;
 use crate::matrix::{ops, DenseMatrix};
 use crate::metrics::Stopwatch;
 use crate::runtime::DenseBackend;
@@ -78,7 +78,7 @@ pub struct NmfResult {
 pub fn nmf(
     src_a: &Source,
     src_at: &Source,
-    store: &Arc<ExtMemStore>,
+    store: &Arc<ShardedStore>,
     cfg: &NmfConfig,
 ) -> Result<NmfResult> {
     let n = src_a.meta().nrows;
@@ -257,7 +257,7 @@ mod tests {
     use crate::format::tiled::TiledImage;
     use crate::format::{Csr, TileFormat};
     use crate::graph::rmat;
-    use crate::io::StoreConfig;
+    use crate::io::StoreSpec;
 
     fn setup(scale: u32, edges: usize) -> (Arc<TiledImage>, Arc<TiledImage>, usize) {
         let el = rmat::generate(scale, edges, rmat::RmatParams::default(), 31);
@@ -274,7 +274,7 @@ mod tests {
     fn residual_decreases() {
         let (a, at, _) = setup(8, 2000);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let cfg = NmfConfig {
             k: 8,
             iterations: 6,
@@ -301,7 +301,7 @@ mod tests {
     fn panelized_matches_full_memory() {
         let (a, at, _) = setup(7, 900);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let run = |cols: usize| {
             let cfg = NmfConfig {
                 k: 4,
@@ -332,7 +332,7 @@ mod tests {
     fn panelized_run_touches_store() {
         let (a, at, _) = setup(7, 800);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let cfg = NmfConfig {
             k: 4,
             iterations: 2,
@@ -352,7 +352,7 @@ mod tests {
             .unwrap_or_else(crate::runtime::default_backend);
         let (a, at, _) = setup(7, 900);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let base = NmfConfig {
             k: 16,
             iterations: 3,
@@ -382,7 +382,7 @@ mod tests {
     fn invalid_panel_width_rejected() {
         let (a, at, _) = setup(6, 300);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let cfg = NmfConfig {
             k: 16,
             cols_in_mem: 3,

@@ -14,7 +14,7 @@
 //! All three modes compute identical values; they differ only in I/O
 //! traffic — which is what the figure shows.
 
-use crate::io::{ExtMemStore, MergedWriter};
+use crate::io::{MergedWriter, ShardedStore};
 use crate::matrix::NumaDense;
 use crate::metrics::Stopwatch;
 use crate::runtime::DenseBackend;
@@ -67,7 +67,7 @@ const OUT_OBJ: &str = "pagerank.out";
 pub fn pagerank(
     src: &Source,
     out_degrees: &[u32],
-    store: &Arc<ExtMemStore>,
+    store: &Arc<ShardedStore>,
     cfg: &PageRankConfig,
 ) -> Result<(Vec<f32>, PageRankStats)> {
     let meta = src.meta().clone();
@@ -212,7 +212,7 @@ mod tests {
     use crate::format::tiled::TiledImage;
     use crate::format::{Csr, TileFormat};
     use crate::graph::rmat;
-    use crate::io::StoreConfig;
+    use crate::io::StoreSpec;
 
     fn setup(scale: u32, edges: usize) -> (crate::graph::EdgeList, Arc<TiledImage>, Vec<u32>) {
         let el = rmat::generate(scale, edges, rmat::RmatParams::default(), 21);
@@ -226,7 +226,7 @@ mod tests {
     fn matches_reference_all_memory_modes() {
         let (el, img, deg) = setup(9, 4000);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let want = pagerank_ref(el.num_verts, &el.edges, 10, 0.85);
         for vecs in [1, 2, 3] {
             let cfg = PageRankConfig {
@@ -267,7 +267,7 @@ mod tests {
         let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
         let deg = el.col_degrees();
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let cfg = PageRankConfig {
             iterations: 20,
             ..Default::default()
@@ -285,7 +285,7 @@ mod tests {
             .unwrap_or_else(crate::runtime::default_backend);
         let (el, img, deg) = setup(8, 2000);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let plain = pagerank(
             &Source::Mem(img.clone()),
             &deg,

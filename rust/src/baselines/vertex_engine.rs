@@ -16,7 +16,7 @@
 
 use crate::format::convert::{read_csr_header, CSR_HEADER};
 use crate::format::Csr;
-use crate::io::ExtMemStore;
+use crate::io::ShardedStore;
 use crate::metrics::Stopwatch;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -113,7 +113,7 @@ pub fn pagerank_inmem(
 /// (pr + accumulator + degrees) in memory, the out-edge CSR image
 /// streamed from the store every iteration.
 pub fn pagerank_sem(
-    store: &Arc<ExtMemStore>,
+    store: &Arc<ShardedStore>,
     csr_obj: &str,
     iterations: usize,
     damping: f32,
@@ -213,7 +213,7 @@ mod tests {
     use crate::apps::pagerank::pagerank_ref;
     use crate::format::convert::put_csr_image;
     use crate::graph::rmat;
-    use crate::io::StoreConfig;
+    use crate::io::StoreSpec;
 
     fn setup(scale: u32, edges: usize) -> (crate::graph::EdgeList, Csr) {
         let el = rmat::generate(scale, edges, rmat::RmatParams::default(), 51);
@@ -241,7 +241,7 @@ mod tests {
     fn sem_matches_inmem() {
         let (_, m) = setup(9, 6000);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         put_csr_image(&store, "g.csr", &m).unwrap();
         let (want, _) = pagerank_inmem(&m, 6, 0.85, 2);
         let (got, stats) = pagerank_sem(&store, "g.csr", 6, 0.85, 2).unwrap();

@@ -453,15 +453,15 @@ pub fn fig12(b: &Bench) -> Result<()> {
 pub fn fig13(b: &Bench) -> Result<()> {
     let mut rows = Vec::new();
     // The I/O ablation only expresses itself when SpMV is I/O-bound, so
-    // this experiment runs against a deliberately slow device (a single
-    // SATA-class SSD, 0.4 GB/s) over the same objects — the same reason
-    // the paper runs it on the graphs that saturate its array.
-    let slow = crate::io::ExtMemStore::open(crate::io::StoreConfig {
-        dir: b.store.config().dir.clone(),
-        read_gbps: Some(0.4),
-        write_gbps: Some(0.35),
-        latency_us: 60,
-    })?;
+    // this experiment runs against a deliberately slow array (0.4 GB/s
+    // aggregate) over the same objects — same shard layout so the striped
+    // images read back identically, tighter per-shard throttles.
+    let n = b.store.num_shards() as f64;
+    let mut slow_spec = b.store.spec().clone();
+    slow_spec.read_gbps = Some(0.4 / n);
+    slow_spec.write_gbps = Some(0.35 / n);
+    slow_spec.latency_us = 60;
+    let slow = crate::io::ShardedStore::open(slow_spec)?;
     for name in ["friendster", "page"] {
         let spec = b.dataset(name).unwrap();
         let imgs = b.catalog.ensure(&spec)?;
@@ -690,6 +690,50 @@ pub fn fig16(b: &Bench) -> Result<()> {
 }
 
 
+
+/// --------------------------------------------------------- scale_shards
+/// Read throughput vs. simulated device count at fixed per-shard
+/// bandwidth — the SSD-array scaling lever behind the paper's Fig 5b/13
+/// numbers (and BigSparse/SAGE's storage-parallelism argument). Each row
+/// runs the same SEM SpMV against a store of `n` shards throttled to
+/// 0.2 GB/s apiece.
+pub fn scale_shards(b: &Bench) -> Result<()> {
+    let spec = b.dataset("rmat-160").unwrap();
+    let m = Csr::from_edgelist(&spec.build());
+    let img = TiledImage::build(&m, b.tile, TileFormat::Scsr);
+    let mut buf = Vec::new();
+    img.write_to(&mut buf)?;
+    let x = DenseMatrix::random(m.ncols, 1, 7);
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let store = crate::io::ShardedStore::open(crate::io::StoreSpec {
+            dir: b.store.spec().dir.join(format!("scale-{shards}")),
+            shards,
+            stripe_bytes: 256 << 10,
+            read_gbps: Some(0.2),
+            write_gbps: Some(0.2),
+            latency_us: 30,
+        })?;
+        store.put("scale.semm", &buf)?;
+        let sem = Source::Sem(SemSource::open(&store, "scale.semm")?);
+        let ncfg = engine::numa_config(b.tile, m.ncols, &b.opts);
+        let xs = NumaDense::from_dense(&x, ncfg);
+        let out = NumaDense::zeros(m.nrows, 1, ncfg);
+        let read0 = store.stats.bytes_read.get();
+        let secs = b.time3(|| {
+            let stats =
+                crate::spmm::spmm(&sem, &xs, &b.opts, &crate::spmm::OutputSink::Mem(&out))?;
+            Ok(stats.secs)
+        })?;
+        let gbps = (store.stats.bytes_read.get() - read0) as f64 / 3.0 / 1e9 / secs;
+        rows.push(format!("{shards}\t{secs:.4}\t{gbps:.3}"));
+    }
+    b.emit(
+        "scale_shards",
+        "shards\tsem_spmv_secs\tread_gbps (0.2 GB/s per shard)",
+        &rows,
+    )
+}
 
 /// ----------------------------------------------------------------- perf
 /// §Perf hot-path micro-harness: absolute engine timings used by the

@@ -15,7 +15,7 @@ pub use experiments::*;
 
 use crate::coordinator::Catalog;
 use crate::graph::registry::{self, DatasetSpec};
-use crate::io::{ExtMemStore, StoreConfig};
+use crate::io::{ShardedStore, StoreSpec};
 use crate::spmm::SpmmOpts;
 use anyhow::Result;
 use std::io::Write;
@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 /// Shared context for all experiments.
 pub struct Bench {
-    pub store: Arc<ExtMemStore>,
+    pub store: Arc<ShardedStore>,
     pub catalog: Catalog,
     pub opts: SpmmOpts,
     /// Override of the registry scale (`None` = registry defaults).
@@ -36,26 +36,15 @@ pub struct Bench {
 }
 
 impl Bench {
-    /// Build a bench context. `gbps = 0` disables throttling.
+    /// Build a bench context over an explicit store spec.
     pub fn new(
-        store_dir: PathBuf,
+        spec: StoreSpec,
         out_dir: PathBuf,
         threads: usize,
-        gbps: f64,
         scale: Option<u32>,
         tile: usize,
     ) -> Result<Bench> {
-        let cfg = if gbps > 0.0 {
-            StoreConfig {
-                dir: store_dir,
-                read_gbps: Some(gbps),
-                write_gbps: Some(gbps * 10.0 / 12.0),
-                latency_us: 30,
-            }
-        } else {
-            StoreConfig::unthrottled(store_dir)
-        };
-        let store = ExtMemStore::open(cfg)?;
+        let store = ShardedStore::open(spec)?;
         std::fs::create_dir_all(&out_dir)?;
         let catalog = Catalog::new(store.clone(), tile);
         Ok(Bench {
@@ -71,13 +60,26 @@ impl Bench {
         })
     }
 
+    /// Spec helper: `gbps` is **total array** bandwidth split evenly over
+    /// `shards` devices; `gbps = 0` disables throttling.
+    pub fn array_spec(store_dir: PathBuf, gbps: f64, shards: usize, stripe_bytes: usize) -> StoreSpec {
+        let shards = shards.max(1);
+        StoreSpec {
+            dir: store_dir,
+            shards,
+            stripe_bytes,
+            read_gbps: (gbps > 0.0).then_some(gbps / shards as f64),
+            write_gbps: (gbps > 0.0).then_some(gbps * 10.0 / 12.0 / shards as f64),
+            latency_us: if gbps > 0.0 { 30 } else { 0 },
+        }
+    }
+
     /// A quick context for tests: tiny graphs, temp store, 2 threads.
     pub fn smoke(dir: &std::path::Path, scale: u32) -> Result<Bench> {
         Bench::new(
-            dir.join("store"),
+            StoreSpec::unthrottled(dir.join("store")),
             dir.join("results"),
             2,
-            0.0,
             Some(scale),
             256,
         )
@@ -122,10 +124,11 @@ impl Bench {
     }
 }
 
-/// All experiment names, in paper order.
+/// All experiment names, in paper order. `scale_shards` is this
+/// reproduction's extension: read throughput vs. simulated device count.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig5a", "fig5b", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "tab2", "fig14", "fig15", "fig16",
+    "fig13", "tab2", "fig14", "fig15", "fig16", "scale_shards",
 ];
 
 /// Run one experiment by name.
@@ -146,6 +149,7 @@ pub fn run(bench: &Bench, exp: &str) -> Result<()> {
         "fig14" => fig14(bench),
         "fig15" => fig15(bench),
         "fig16" => fig16(bench),
+        "scale_shards" => scale_shards(bench),
         "all" => {
             for e in ALL_EXPERIMENTS {
                 if *e == "fig5b" {

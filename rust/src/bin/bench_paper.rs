@@ -2,18 +2,24 @@
 //!
 //! ```text
 //! bench-paper [--scale N] [--threads N] [--gbps F] [--tile N]
+//!             [--shards N] [--stripe-kb N] [--store-json FILE]
 //!             [--store DIR] [--out DIR] <experiment>|all
 //! ```
 //!
 //! Experiments: fig2 fig5a fig5b fig6 fig7 fig8 fig9 fig10 fig11 fig12
-//! fig13 tab2 fig14 fig15 fig16 (DESIGN.md maps each to the paper).
+//! fig13 tab2 fig14 fig15 fig16 scale_shards (DESIGN.md maps each to the
+//! paper).
 //!
 //! Defaults: registry scale (2^17–2^18 vertices), all cores, store
-//! throttled to the paper's 12 GB/s SSD array, tile 4096. `--gbps 0`
-//! disables throttling.
+//! throttled to the paper's 12 GB/s SSD array as one device, tile 4096.
+//! `--gbps 0` disables throttling; `--gbps` is **total** array bandwidth,
+//! split evenly over `--shards` simulated devices. `--store-json` loads a
+//! full `StoreSpec` (dir/shards/stripe_bytes/per-shard gbps) and
+//! overrides the individual store flags.
 
 use anyhow::{bail, Context, Result};
 use sem_spmm::bench::{Bench, ALL_EXPERIMENTS};
+use sem_spmm::io::StoreSpec;
 use std::path::PathBuf;
 
 fn main() {
@@ -34,6 +40,9 @@ fn run() -> Result<()> {
     let mut store_dir = PathBuf::from("sem-store");
     let mut out_dir = PathBuf::from("results");
     let mut cache_bytes = 2usize << 20;
+    let mut shards = 1usize;
+    let mut stripe_kb = (sem_spmm::io::DEFAULT_STRIPE_BYTES >> 10) as u64;
+    let mut store_json: Option<PathBuf> = None;
 
     let mut i = 0;
     while i < args.len() {
@@ -71,6 +80,18 @@ fn run() -> Result<()> {
                 cache_bytes = take(&args, i)?.parse()?;
                 args.drain(i..=i + 1);
             }
+            "--shards" => {
+                shards = take(&args, i)?.parse()?;
+                args.drain(i..=i + 1);
+            }
+            "--stripe-kb" => {
+                stripe_kb = take(&args, i)?.parse()?;
+                args.drain(i..=i + 1);
+            }
+            "--store-json" => {
+                store_json = Some(PathBuf::from(take(&args, i)?));
+                args.drain(i..=i + 1);
+            }
             _ => i += 1,
         }
     }
@@ -81,10 +102,20 @@ fn run() -> Result<()> {
         );
     };
 
+    let spec = match &store_json {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading store spec {}", path.display()))?;
+            StoreSpec::from_json_str(&text)?
+        }
+        None => Bench::array_spec(store_dir, gbps, shards, (stripe_kb as usize) << 10),
+    };
     eprintln!(
-        "bench-paper: exp={exp} scale={scale:?} threads={threads} gbps={gbps} tile={tile}"
+        "bench-paper: exp={exp} scale={scale:?} threads={threads} tile={tile} \
+         shards={} stripe={}B gbps/shard={:?}",
+        spec.shards, spec.stripe_bytes, spec.read_gbps
     );
-    let mut bench = Bench::new(store_dir, out_dir, threads, gbps, scale, tile)?;
+    let mut bench = Bench::new(spec, out_dir, threads, scale, tile)?;
     bench.opts.cache_bytes = cache_bytes;
     sem_spmm::bench::run(&bench, exp)
 }

@@ -1,7 +1,8 @@
-//! A minimal JSON value + emitter (and a small parser for the service
-//! protocol) — offline replacement for serde_json, covering exactly what
-//! the result logs and the request loop need.
+//! A minimal JSON value, emitter and parser — offline replacement for
+//! serde_json, covering exactly what the result logs, the request loop
+//! and the [`crate::io::StoreSpec`] config surface need.
 
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -51,6 +52,18 @@ impl Json {
             Json::Str(s) => Some(s),
             _ => None,
         }
+    }
+
+    /// Parse a JSON document (the whole input must be one value).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at byte {pos}");
+        }
+        Ok(v)
     }
 
     fn write(&self, out: &mut String) {
@@ -117,6 +130,153 @@ impl std::fmt::Display for Json {
     }
 }
 
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("expected '{}' at byte {}", c as char, *pos);
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of JSON input"),
+        Some(b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(b't') => parse_lit(b, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(b'[') => {
+            *pos += 1;
+            let mut arr = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(arr));
+            }
+            loop {
+                arr.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(arr));
+                    }
+                    _ => bail!("expected ',' or ']' at byte {}", *pos),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut map = BTreeMap::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, b':')?;
+                map.insert(key, parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(map));
+                    }
+                    _ => bail!("expected ',' or '}}' at byte {}", *pos),
+                }
+            }
+        }
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            if *pos == start {
+                bail!("unexpected character at byte {start}");
+            }
+            let s = std::str::from_utf8(&b[start..*pos]).expect("ascii number");
+            match s.parse::<f64>() {
+                Ok(n) => Ok(Json::Num(n)),
+                Err(_) => bail!("bad number '{s}' at byte {start}"),
+            }
+        }
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        bail!("bad literal at byte {}", *pos);
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        if *pos + 4 >= b.len() {
+                            bail!("truncated \\u escape");
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                            .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| anyhow::anyhow!("bad \\u escape '{hex}'"))?;
+                        // Surrogates are not paired (the emitter never
+                        // writes them); map them to the replacement char.
+                        out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        *pos += 4;
+                    }
+                    _ => bail!("bad escape at byte {}", *pos),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar.
+                let s = std::str::from_utf8(&b[*pos..])
+                    .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?;
+                let c = s.chars().next().expect("non-empty");
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
 impl From<f64> for Json {
     fn from(v: f64) -> Json {
         Json::Num(v)
@@ -180,5 +340,59 @@ mod tests {
     #[test]
     fn escapes_control_chars() {
         assert_eq!(Json::Str("a\nb".into()).to_string(), "\"a\\nb\"");
+    }
+
+    #[test]
+    fn parse_roundtrips_emitter_output() {
+        let j = Json::obj()
+            .set("num", 2.5f64)
+            .set("int", 42u64)
+            .set("neg", -3i64)
+            .set("s", "a\"b\\c\nd")
+            .set("t", true)
+            .set("nil", Json::Null)
+            .set("arr", vec![1.0f64, 2.0, 3.0]);
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_nesting() {
+        let j = Json::parse(
+            " { \"a\" : [ 1 , { \"b\" : \"x\" } , null ] , \"c\" : false } ",
+        )
+        .unwrap();
+        assert_eq!(j.get("c"), Some(&Json::Bool(false)));
+        match j.get("a") {
+            Some(Json::Arr(a)) => {
+                assert_eq!(a.len(), 3);
+                assert_eq!(a[0].as_f64(), Some(1.0));
+                assert_eq!(a[1].get("b").and_then(Json::as_str), Some("x"));
+                assert_eq!(a[2], Json::Null);
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\":}",
+            "\"unterminated",
+            "{\"a\":1} trailing",
+            "nul",
+            "1.2.3",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_unicode_escapes() {
+        let j = Json::parse("\"tab\\there \\u0041\"").unwrap();
+        assert_eq!(j.as_str(), Some("tab\there A"));
     }
 }

@@ -5,20 +5,22 @@
 //!
 //! ```text
 //! # sem-spmm config
-//! store.dir        = /mnt/ssd/sem
-//! store.read_gbps  = 12.0
-//! store.write_gbps = 10.0
-//! spmm.threads     = 48
-//! spmm.cache_bytes = 2097152
-//! mem.budget_gb    = 8
+//! store.dir          = /mnt/ssd/sem
+//! store.shards       = 8          # simulated devices in the array
+//! store.stripe_bytes = 1048576    # striping unit
+//! store.read_gbps    = 1.5        # per shard (8 x 1.5 = 12 GB/s array)
+//! store.write_gbps   = 1.25
+//! spmm.threads       = 48
+//! spmm.cache_bytes   = 2097152
+//! mem.budget_gb      = 8
 //! ```
 //!
-//! Sections map onto [`crate::io::StoreConfig`], [`crate::spmm::SpmmOpts`]
+//! Sections map onto [`crate::io::StoreSpec`], [`crate::spmm::SpmmOpts`]
 //! and the coordinator's memory budget.
 
 pub mod json;
 
-use crate::io::StoreConfig;
+use crate::io::{StoreSpec, DEFAULT_STRIPE_BYTES};
 use crate::spmm::SpmmOpts;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -97,13 +99,17 @@ impl Config {
         }
     }
 
-    /// Build the store configuration (`store.*` keys).
-    pub fn store_config(&self) -> Result<StoreConfig> {
+    /// Build the sharded-store spec (`store.*` keys). Bandwidth keys are
+    /// **per shard**; `store.shards = 1` (the default) reproduces the
+    /// single-device store.
+    pub fn store_spec(&self) -> Result<StoreSpec> {
         let dir = PathBuf::from(self.get_or("store.dir", "sem-store"));
         let read = self.get_f64("store.read_gbps", 0.0)?;
         let write = self.get_f64("store.write_gbps", 0.0)?;
-        Ok(StoreConfig {
+        Ok(StoreSpec {
             dir,
+            shards: self.get_usize("store.shards", 1)?.max(1),
+            stripe_bytes: self.get_usize("store.stripe_bytes", DEFAULT_STRIPE_BYTES)?,
             read_gbps: (read > 0.0).then_some(read),
             write_gbps: (write > 0.0).then_some(write),
             latency_us: self.get_usize("store.latency_us", 0)? as u64,
@@ -169,11 +175,26 @@ mod tests {
             "store.dir = /tmp/s\nstore.read_gbps = 2.5\nspmm.threads = 3\nspmm.vectorize = off\n",
         )
         .unwrap();
-        let sc = c.store_config().unwrap();
+        let sc = c.store_spec().unwrap();
         assert_eq!(sc.read_gbps, Some(2.5));
         assert_eq!(sc.write_gbps, None);
+        assert_eq!(sc.shards, 1);
+        assert_eq!(sc.stripe_bytes, DEFAULT_STRIPE_BYTES);
         let so = c.spmm_opts().unwrap();
         assert_eq!(so.threads, 3);
         assert!(!so.vectorize);
+    }
+
+    #[test]
+    fn sharded_store_keys() {
+        let c = Config::parse(
+            "store.dir = /tmp/a\nstore.shards = 8\nstore.stripe_bytes = 65536\nstore.read_gbps = 1.5\n",
+        )
+        .unwrap();
+        let sc = c.store_spec().unwrap();
+        assert_eq!(sc.shards, 8);
+        assert_eq!(sc.stripe_bytes, 65536);
+        assert_eq!(sc.read_gbps, Some(1.5));
+        assert_eq!(sc.total_read_gbps(), Some(12.0));
     }
 }

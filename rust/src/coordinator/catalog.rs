@@ -14,7 +14,7 @@
 use crate::format::convert::{self, put_csr_image};
 use crate::format::{Csr, TileFormat};
 use crate::graph::registry::DatasetSpec;
-use crate::io::ExtMemStore;
+use crate::io::ShardedStore;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -39,13 +39,13 @@ pub struct DatasetImages {
 /// The catalog over one store.
 #[derive(Debug, Clone)]
 pub struct Catalog {
-    store: Arc<ExtMemStore>,
+    store: Arc<ShardedStore>,
     pub tile: usize,
     pub format: TileFormat,
 }
 
 impl Catalog {
-    pub fn new(store: Arc<ExtMemStore>, tile: usize) -> Catalog {
+    pub fn new(store: Arc<ShardedStore>, tile: usize) -> Catalog {
         Catalog {
             store,
             tile,
@@ -53,7 +53,7 @@ impl Catalog {
         }
     }
 
-    pub fn store(&self) -> &Arc<ExtMemStore> {
+    pub fn store(&self) -> &Arc<ShardedStore> {
         &self.store
     }
 
@@ -133,9 +133,14 @@ impl Catalog {
         crate::spmm::SemSource::open(&self.store, &imgs.adj_t)
     }
 
-    /// Load the tiled image of A fully into memory (IM mode).
+    /// Load the tiled image of A fully into memory (IM mode). The load
+    /// bypasses throttling/metering — it models a one-time in-memory
+    /// load, not steady-state store traffic — and assembles stripes when
+    /// the store is sharded.
     pub fn load_adj(&self, imgs: &DatasetImages) -> Result<crate::format::tiled::TiledImage> {
-        crate::format::tiled::TiledImage::load(&self.store.path(&imgs.adj))
+        crate::format::tiled::TiledImage::from_bytes(
+            &self.store.read_object_unmetered(&imgs.adj)?,
+        )
     }
 }
 
@@ -143,13 +148,13 @@ impl Catalog {
 mod tests {
     use super::*;
     use crate::graph::registry;
-    use crate::io::StoreConfig;
+    use crate::io::StoreSpec;
     use crate::spmm::{engine, Source, SpmmOpts};
 
     #[test]
     fn ensure_is_idempotent_and_consistent() {
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let cat = Catalog::new(store.clone(), 256);
         let spec = registry::by_name("twitter").unwrap().shrunk(10);
         let a = cat.ensure(&spec).unwrap();
@@ -165,7 +170,7 @@ mod tests {
     #[test]
     fn adjacency_and_transpose_agree() {
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let cat = Catalog::new(store, 128);
         let spec = registry::by_name("rmat-40").unwrap().shrunk(9);
         let imgs = cat.ensure(&spec).unwrap();

@@ -201,11 +201,11 @@ impl Service {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::io::{ExtMemStore, StoreConfig};
+    use crate::io::{ShardedStore, StoreSpec};
 
     fn service() -> (crate::util::TempDir, Service) {
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let catalog = Catalog::new(store, 256);
         (
             dir,

@@ -100,7 +100,7 @@ fn panel_writer(output: &SemDense, pass: usize) -> Result<MergedWriter> {
     Ok(MergedWriter::new(f, 4 << 20))
 }
 
-fn output_store(output: &SemDense) -> std::sync::Arc<crate::io::ExtMemStore> {
+fn output_store(output: &SemDense) -> std::sync::Arc<crate::io::ShardedStore> {
     output.store_handle()
 }
 
@@ -110,7 +110,7 @@ mod tests {
     use crate::format::tiled::TiledImage;
     use crate::format::{Csr, TileFormat};
     use crate::graph::rmat;
-    use crate::io::{ExtMemStore, StoreConfig};
+    use crate::io::{ShardedStore, StoreSpec};
     use crate::matrix::DenseMatrix;
     use std::sync::Arc;
 
@@ -125,7 +125,7 @@ mod tests {
         let expect = m.spmm_ref(&x.data, p);
 
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         for cols_fit in [1usize, 2, 4, 8] {
             // Budget sized so exactly `cols_fit` columns fit.
             let budget = MemBudget::new((n * 4 * cols_fit) as u64 + 64);
@@ -164,7 +164,7 @@ mod tests {
         let m = Csr::from_edgelist(&el);
         let img = TiledImage::build(&m, 128, TileFormat::Scsr);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let mut buf = Vec::new();
         img.write_to(&mut buf).unwrap();
         store.put("m.semm", &buf).unwrap();

@@ -4,7 +4,7 @@
 //! conversion reads the CSR image sequentially, writes the SCSR image
 //! sequentially, is bottlenecked by the store, and its one-time cost is
 //! amortized over the many multiplications that follow. We reproduce the
-//! same pipeline: both images live on the [`crate::io::ExtMemStore`], the
+//! same pipeline: both images live on the [`crate::io::ShardedStore`], the
 //! converter streams row bands, and the report carries the Table 2 columns
 //! (wall time, average I/O throughput).
 //!
@@ -20,7 +20,7 @@
 
 use super::tiled::{TiledMeta, HEADER_LEN};
 use super::{dcsc, scsr, Csr, TileEntries, TileFormat, ValueType};
-use crate::io::{ExtMemStore, StoreFile};
+use crate::io::{ShardedFile, ShardedStore};
 use crate::metrics::Stopwatch;
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -62,7 +62,7 @@ pub fn csr_image_bytes(m: &Csr) -> Vec<u8> {
 }
 
 /// Store a CSR matrix as an image object.
-pub fn put_csr_image(store: &Arc<ExtMemStore>, name: &str, m: &Csr) -> Result<()> {
+pub fn put_csr_image(store: &Arc<ShardedStore>, name: &str, m: &Csr) -> Result<()> {
     store.put(name, &csr_image_bytes(m))
 }
 
@@ -90,7 +90,7 @@ impl CsrImageHeader {
 }
 
 /// Read and validate a CSR image header.
-pub fn read_csr_header(f: &StoreFile) -> Result<CsrImageHeader> {
+pub fn read_csr_header(f: &ShardedFile) -> Result<CsrImageHeader> {
     let mut h = [0u8; CSR_HEADER];
     f.read_at(0, &mut h)?;
     if h[0..4] != CSR_MAGIC {
@@ -109,7 +109,7 @@ pub fn read_csr_header(f: &StoreFile) -> Result<CsrImageHeader> {
 }
 
 /// Load a full CSR image object back into memory (baseline inputs).
-pub fn read_csr_image(store: &Arc<ExtMemStore>, name: &str) -> Result<Csr> {
+pub fn read_csr_image(store: &Arc<ShardedStore>, name: &str) -> Result<Csr> {
     let f = store.open_file(name)?;
     let hdr = read_csr_header(&f)?;
     let mut indptr = vec![0u64; hdr.nrows + 1];
@@ -164,7 +164,7 @@ pub struct ConversionReport {
 /// pass, the minimum I/O — Table 2). Peak memory is O(nrows) for the
 /// indptr plus one row band.
 pub fn convert(
-    store: &Arc<ExtMemStore>,
+    store: &Arc<ShardedStore>,
     csr_name: &str,
     out_name: &str,
     tile: usize,
@@ -302,7 +302,7 @@ mod tests {
     use super::*;
     use crate::format::tiled::TiledImage;
     use crate::graph::rmat;
-    use crate::io::StoreConfig;
+    use crate::io::StoreSpec;
 
     fn sample() -> Csr {
         let el = rmat::generate(11, 14_000, rmat::RmatParams::default(), 8);
@@ -313,7 +313,7 @@ mod tests {
     fn convert_matches_direct_build() {
         let m = sample();
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         put_csr_image(&store, "g.csr", &m).unwrap();
         let report = convert(&store, "g.csr", "g.semm", 256, TileFormat::Scsr).unwrap();
         assert!(report.bytes_read > 0 && report.bytes_written > 0);
@@ -330,7 +330,7 @@ mod tests {
         let mut m = sample();
         m.vals = Some((0..m.nnz()).map(|i| (i % 13) as f32 + 1.0).collect());
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         put_csr_image(&store, "g.csr", &m).unwrap();
         convert(&store, "g.csr", "g.semm", 128, TileFormat::Scsr).unwrap();
         let img = TiledImage::load(&store.path("g.semm")).unwrap();
@@ -346,7 +346,7 @@ mod tests {
     fn csr_header_roundtrip() {
         let m = sample();
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         put_csr_image(&store, "g.csr", &m).unwrap();
         let f = store.open_file("g.csr").unwrap();
         let h = read_csr_header(&f).unwrap();
@@ -359,7 +359,7 @@ mod tests {
     fn dcsc_target_also_converts() {
         let m = sample();
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         put_csr_image(&store, "g.csr", &m).unwrap();
         convert(&store, "g.csr", "g.dcsc", 256, TileFormat::Dcsc).unwrap();
         let img = TiledImage::load(&store.path("g.dcsc")).unwrap();

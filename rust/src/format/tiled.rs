@@ -219,6 +219,31 @@ impl TiledImage {
         f.read_to_end(&mut data)?;
         Ok(TiledImage { meta, index, data })
     }
+
+    /// Parse an image from its serialized bytes (e.g. assembled from a
+    /// sharded store, where no single backing file exists).
+    pub fn from_bytes(bytes: &[u8]) -> Result<TiledImage> {
+        let meta = TiledMeta::from_bytes(bytes)?;
+        let ntr = meta.n_tile_rows();
+        let data_start = HEADER_LEN + ntr * 16;
+        if bytes.len() < data_start {
+            bail!("image truncated inside the index");
+        }
+        let index: Vec<(u64, u64)> = (0..ntr)
+            .map(|i| {
+                let o = HEADER_LEN + i * 16;
+                (
+                    u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap()),
+                    u64::from_le_bytes(bytes[o + 8..o + 16].try_into().unwrap()),
+                )
+            })
+            .collect();
+        Ok(TiledImage {
+            meta,
+            index,
+            data: bytes[data_start..].to_vec(),
+        })
+    }
 }
 
 /// Read header + index from an image file; returns `(meta, index,
@@ -355,6 +380,12 @@ mod tests {
         assert_eq!(img2.index, img.index);
         assert_eq!(img2.data, img.data);
         assert_eq!(std::fs::metadata(&p).unwrap().len(), img.image_bytes());
+        // from_bytes agrees with the file loader.
+        let img3 = TiledImage::from_bytes(&std::fs::read(&p).unwrap()).unwrap();
+        assert_eq!(img3.meta, img.meta);
+        assert_eq!(img3.index, img.index);
+        assert_eq!(img3.data, img.data);
+        assert!(TiledImage::from_bytes(&std::fs::read(&p).unwrap()[..70]).is_err());
     }
 
     #[test]

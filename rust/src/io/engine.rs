@@ -1,45 +1,94 @@
-//! Asynchronous read engine with I/O polling (§3.5).
+//! Asynchronous read engine with I/O polling (§3.5), partitioned per
+//! shard.
 //!
-//! Compute threads submit read requests and keep working; dedicated I/O
-//! worker threads perform the (throttled) reads into pooled buffers. When
-//! a compute thread finally needs the data it either **polls** the
-//! completion flag (spin + `yield_now`, the paper's approach — the thread
-//! is never descheduled, avoiding the rescheduling latency the paper
-//! measures on fast SSD arrays) or **blocks** on a condvar (the Fig 13
-//! `IO-poll` ablation baseline, which incurs a context switch per I/O).
+//! Compute threads submit logical read requests and keep working; the
+//! engine splits each request into per-shard sub-reads and routes them to
+//! that shard's **own** queue of I/O worker threads, so a slow or stalled
+//! shard can never head-of-line-block the other devices. When a compute
+//! thread finally needs the data it either **polls** the completion flag
+//! (spin + `yield_now`, the paper's approach — the thread is never
+//! descheduled, avoiding the rescheduling latency the paper measures on
+//! fast SSD arrays) or **blocks** on a condvar (the Fig 13 `IO-poll`
+//! ablation baseline, which incurs a context switch per I/O).
 
 use super::pool::BufferPool;
+use super::sharded::ShardedFile;
 use super::store::StoreFile;
-use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::io::ShardedStore;
+use anyhow::{anyhow, Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-/// Completion state shared between a worker and the waiting thread.
+/// Payload slot shared between the sub-read workers and the waiter.
+#[derive(Debug, Default)]
+struct Slot {
+    /// The assembled logical buffer (present unless an error struck).
+    buf: Option<Vec<u8>>,
+    /// First error among the sub-reads, if any.
+    err: Option<Error>,
+}
+
+/// Completion state shared between workers and the waiting thread.
 #[derive(Debug)]
 struct TicketState {
     done: AtomicBool,
-    slot: Mutex<Option<Result<Vec<u8>>>>,
+    /// Sub-reads still in flight.
+    remaining: AtomicUsize,
+    slot: Mutex<Slot>,
     cv: Condvar,
 }
 
-/// A pending read. Obtain the data with [`IoTicket::wait`].
-#[derive(Debug, Clone)]
+impl TicketState {
+    fn new(remaining: usize) -> TicketState {
+        TicketState {
+            done: AtomicBool::new(false),
+            remaining: AtomicUsize::new(remaining),
+            slot: Mutex::new(Slot::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Mark one sub-read finished; the last one publishes completion.
+    fn complete_one(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Publish under the slot lock so a blocking waiter can't miss
+            // the wakeup between its check and its `cv.wait`.
+            let _slot = self.slot.lock().unwrap();
+            self.done.store(true, Ordering::Release);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// A pending logical read. Obtain the data with [`IoTicket::wait`].
+///
+/// Waiting consumes the ticket, and `IoTicket` is intentionally **not**
+/// `Clone`: a completed read cannot be waited on twice, checked at
+/// compile time —
+///
+/// ```compile_fail
+/// fn assert_clone<T: Clone>() {}
+/// assert_clone::<sem_spmm::io::IoTicket>();
+/// ```
+#[derive(Debug)]
 pub struct IoTicket {
     state: Arc<TicketState>,
 }
 
 impl IoTicket {
-    /// True once the read has completed (poll without blocking).
+    /// True once every sub-read has completed (poll without blocking).
     pub fn is_done(&self) -> bool {
         self.state.done.load(Ordering::Acquire)
     }
 
     /// Wait for completion. `polling = true` spins (+`yield_now`) on the
     /// completion flag; `false` parks on a condvar (one context switch).
+    /// Any failed sub-read surfaces as an `Err` — including when only one
+    /// of N shards failed.
     pub fn wait(self, polling: bool) -> Result<Vec<u8>> {
-        if polling {
+        let mut slot = if polling {
             let mut spins = 0u32;
             while !self.is_done() {
                 spins += 1;
@@ -50,32 +99,48 @@ impl IoTicket {
                     std::thread::yield_now();
                 }
             }
-            let mut slot = self.state.slot.lock().unwrap();
-            slot.take().expect("ticket consumed twice")
+            self.state.slot.lock().unwrap()
         } else {
             let mut slot = self.state.slot.lock().unwrap();
-            while slot.is_none() {
+            while !self.state.done.load(Ordering::Acquire) {
                 slot = self.state.cv.wait(slot).unwrap();
             }
-            slot.take().expect("ticket consumed twice")
+            slot
+        };
+        if let Some(e) = slot.err.take() {
+            return Err(e);
         }
+        slot.buf
+            .take()
+            .ok_or_else(|| anyhow!("I/O ticket payload missing (already consumed?)"))
     }
 }
 
-enum Job {
-    Read {
-        file: StoreFile,
-        off: u64,
-        len: usize,
-        state: Arc<TicketState>,
-    },
+/// One sub-read routed to a shard's queue.
+struct Job {
+    /// Shard-level file handle (throttled + metered by its shard).
+    file: StoreFile,
+    local_off: u64,
+    len: usize,
+    /// Scatter list: (offset within the logical buffer, piece length).
+    chunks: Vec<(usize, usize)>,
+    /// Fast path: this sub-read IS the whole logical buffer.
+    whole: bool,
+    state: Arc<TicketState>,
+}
+
+enum Msg {
+    Read(Job),
     Stop,
 }
 
-/// The asynchronous read engine: a small pool of I/O worker threads over
-/// one store, drawing buffers from a [`BufferPool`].
+/// The asynchronous read engine: per-shard pools of I/O worker threads
+/// over one sharded store, drawing buffers from a [`BufferPool`].
 pub struct IoEngine {
-    tx: Sender<Job>,
+    store: Arc<ShardedStore>,
+    /// One queue per shard.
+    senders: Vec<Sender<Msg>>,
+    workers_per_shard: usize,
     workers: Vec<JoinHandle<()>>,
     pool: Arc<BufferPool>,
 }
@@ -83,67 +148,96 @@ pub struct IoEngine {
 impl std::fmt::Debug for IoEngine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("IoEngine")
+            .field("shards", &self.senders.len())
             .field("workers", &self.workers.len())
             .finish()
     }
 }
 
 impl IoEngine {
-    /// Spawn `n_workers` I/O threads.
-    pub fn new(n_workers: usize, pool: Arc<BufferPool>) -> IoEngine {
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..n_workers.max(1))
-            .map(|i| {
+    /// Spawn `total_workers` I/O threads distributed over the store's
+    /// shards — at least one per shard, so every device has its own
+    /// queue and a slow shard cannot head-of-line-block the rest, while
+    /// the thread count stays close to the configured total rather than
+    /// multiplying by the shard count.
+    pub fn new(
+        store: &Arc<ShardedStore>,
+        total_workers: usize,
+        pool: Arc<BufferPool>,
+    ) -> IoEngine {
+        let wps = total_workers.max(1).div_ceil(store.num_shards()).max(1);
+        let mut senders = Vec::with_capacity(store.num_shards());
+        let mut workers = Vec::with_capacity(store.num_shards() * wps);
+        for s in 0..store.num_shards() {
+            let (tx, rx) = channel::<Msg>();
+            let rx = Arc::new(Mutex::new(rx));
+            senders.push(tx);
+            for i in 0..wps {
                 let rx = rx.clone();
                 let pool = pool.clone();
-                std::thread::Builder::new()
-                    .name(format!("io-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let rx = rx.lock().unwrap();
-                            rx.recv()
-                        };
-                        match job {
-                            Ok(Job::Read {
-                                file,
-                                off,
-                                len,
-                                state,
-                            }) => {
-                                let mut buf = pool.get(len);
-                                let res = file.read_at(off, &mut buf).map(|()| buf);
-                                {
-                                    let mut slot = state.slot.lock().unwrap();
-                                    *slot = Some(res);
-                                }
-                                state.done.store(true, Ordering::Release);
-                                state.cv.notify_all();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("io-worker-s{s}-{i}"))
+                        .spawn(move || loop {
+                            let msg = {
+                                let rx = rx.lock().unwrap();
+                                rx.recv()
+                            };
+                            match msg {
+                                Ok(Msg::Read(job)) => run_read(job, &pool),
+                                Ok(Msg::Stop) | Err(_) => break,
                             }
-                            Ok(Job::Stop) | Err(_) => break,
-                        }
-                    })
-                    .expect("spawn io worker")
-            })
-            .collect();
-        IoEngine { tx, workers, pool }
+                        })
+                        .expect("spawn io worker"),
+                );
+            }
+        }
+        IoEngine {
+            store: store.clone(),
+            senders,
+            workers_per_shard: wps,
+            workers,
+            pool,
+        }
     }
 
-    /// Submit an asynchronous read of `[off, off+len)` from `file`.
-    pub fn submit(&self, file: &StoreFile, off: u64, len: usize) -> IoTicket {
-        let state = Arc::new(TicketState {
-            done: AtomicBool::new(false),
-            slot: Mutex::new(None),
-            cv: Condvar::new(),
-        });
-        self.tx
-            .send(Job::Read {
-                file: file.clone(),
-                off,
-                len,
-                state: state.clone(),
-            })
-            .expect("io engine stopped");
+    /// Submit an asynchronous logical read of `[off, off+len)` from
+    /// `file`. The read fans out into one sub-read per shard touched.
+    pub fn submit(&self, file: &ShardedFile, off: u64, len: usize) -> IoTicket {
+        debug_assert!(
+            Arc::ptr_eq(file.store(), &self.store),
+            "file belongs to a different store than the engine"
+        );
+        // Logical accounting (per-shard physical accounting happens in
+        // the workers via the shard stores).
+        self.store.stats.read_reqs.inc();
+        self.store.stats.bytes_read.add(len as u64);
+
+        let subs = self.store.split_extent(off, len);
+        let state = Arc::new(TicketState::new(subs.len()));
+        {
+            let mut slot = state.slot.lock().unwrap();
+            slot.buf = Some(self.pool.get(len));
+        }
+        if subs.is_empty() {
+            let _slot = state.slot.lock().unwrap();
+            state.done.store(true, Ordering::Release);
+            state.cv.notify_all();
+        } else {
+            for sub in subs {
+                let whole = sub.is_whole(len);
+                self.senders[sub.shard]
+                    .send(Msg::Read(Job {
+                        file: file.shard_handle(sub.shard).clone(),
+                        local_off: sub.local_off,
+                        len: sub.len,
+                        chunks: sub.chunks,
+                        whole,
+                        state: state.clone(),
+                    }))
+                    .expect("io engine stopped");
+            }
+        }
         IoTicket { state }
     }
 
@@ -156,12 +250,75 @@ impl IoEngine {
     pub fn pool(&self) -> &Arc<BufferPool> {
         &self.pool
     }
+
+    /// The engine's store.
+    pub fn store(&self) -> &Arc<ShardedStore> {
+        &self.store
+    }
+}
+
+/// Execute one sub-read and publish its slice of the logical buffer.
+fn run_read(job: Job, pool: &BufferPool) {
+    if job.whole {
+        // Single-sub fast path (always taken on single-shard stores):
+        // read straight into the logical buffer, no scatter copy.
+        let taken = { job.state.slot.lock().unwrap().buf.take() };
+        match taken {
+            Some(mut buf) => {
+                let res = job.file.read_at(job.local_off, &mut buf);
+                let mut slot = job.state.slot.lock().unwrap();
+                match res {
+                    Ok(()) => slot.buf = Some(buf),
+                    Err(e) => {
+                        slot.err.get_or_insert(e);
+                        drop(slot);
+                        pool.put(buf);
+                    }
+                }
+            }
+            None => {
+                // Unreachable in practice; fail the ticket rather than
+                // hang or panic the worker.
+                let mut slot = job.state.slot.lock().unwrap();
+                slot.err
+                    .get_or_insert_with(|| anyhow!("ticket buffer missing"));
+            }
+        }
+    } else {
+        // Scatter path: one contiguous local read into a pooled scratch
+        // buffer, then copy the stripe pieces into place.
+        let mut scratch = pool.get(job.len);
+        let res = job.file.read_at(job.local_off, &mut scratch);
+        {
+            let mut slot = job.state.slot.lock().unwrap();
+            match res {
+                Ok(()) => {
+                    if slot.err.is_none() {
+                        if let Some(buf) = slot.buf.as_mut() {
+                            let mut o = 0usize;
+                            for &(rel, len) in &job.chunks {
+                                buf[rel..rel + len].copy_from_slice(&scratch[o..o + len]);
+                                o += len;
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    slot.err.get_or_insert(e);
+                }
+            }
+        }
+        pool.put(scratch);
+    }
+    job.state.complete_one();
 }
 
 impl Drop for IoEngine {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Job::Stop);
+        for tx in &self.senders {
+            for _ in 0..self.workers_per_shard {
+                let _ = tx.send(Msg::Stop);
+            }
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -172,11 +329,25 @@ impl Drop for IoEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::io::store::{ExtMemStore, StoreConfig};
+    use crate::io::{ShardedStore, StoreSpec};
 
-    fn setup() -> (crate::util::TempDir, Arc<ExtMemStore>) {
+    fn setup() -> (crate::util::TempDir, Arc<ShardedStore>) {
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        (dir, store)
+    }
+
+    fn setup_sharded(shards: usize, stripe: usize) -> (crate::util::TempDir, Arc<ShardedStore>) {
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec {
+            dir: dir.path().to_path_buf(),
+            shards,
+            stripe_bytes: stripe,
+            read_gbps: None,
+            write_gbps: None,
+            latency_us: 0,
+        })
+        .unwrap();
         (dir, store)
     }
 
@@ -187,7 +358,7 @@ mod tests {
         store.put("obj", &data).unwrap();
         let f = store.open_file("obj").unwrap();
         let pool = BufferPool::new(true, 16);
-        let eng = IoEngine::new(2, pool);
+        let eng = IoEngine::new(&store, 2, pool);
         for polling in [true, false] {
             let t1 = eng.submit(&f, 0, 1000);
             let t2 = eng.submit(&f, 50_000, 2000);
@@ -201,12 +372,36 @@ mod tests {
     }
 
     #[test]
+    fn async_reads_span_shards() {
+        let (_d, store) = setup_sharded(4, 1024);
+        let data: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        store.put("obj", &data).unwrap();
+        let f = store.open_file("obj").unwrap();
+        let eng = IoEngine::new(&store, 2, BufferPool::new(true, 32));
+        for polling in [true, false] {
+            // Reads crossing many stripes and odd boundaries.
+            let cases = [(0u64, 10_000usize), (1000, 4096), (123_455, 70_001), (199_999, 1)];
+            let tickets: Vec<_> =
+                cases.iter().map(|&(o, l)| eng.submit(&f, o, l)).collect();
+            for (t, &(o, l)) in tickets.into_iter().zip(&cases) {
+                let b = t.wait(polling).unwrap();
+                assert_eq!(&b[..], &data[o as usize..o as usize + l]);
+                eng.recycle(b);
+            }
+        }
+        // Every shard served physical sub-reads.
+        for k in 0..4 {
+            assert!(store.shard(k).stats.read_reqs.get() > 0, "shard {k} idle");
+        }
+    }
+
+    #[test]
     fn many_outstanding_requests() {
         let (_d, store) = setup();
         let data = vec![9u8; 1 << 20];
         store.put("obj", &data).unwrap();
         let f = store.open_file("obj").unwrap();
-        let eng = IoEngine::new(4, BufferPool::new(true, 64));
+        let eng = IoEngine::new(&store, 4, BufferPool::new(true, 64));
         let tickets: Vec<_> = (0..100)
             .map(|i| eng.submit(&f, (i * 1000) as u64, 1000))
             .collect();
@@ -215,6 +410,7 @@ mod tests {
             assert!(b.iter().all(|&x| x == 9));
             eng.recycle(b);
         }
+        // Aggregate stats count logical requests.
         assert_eq!(store.stats.read_reqs.get(), 100);
     }
 
@@ -223,9 +419,49 @@ mod tests {
         let (_d, store) = setup();
         store.put("obj", b"short").unwrap();
         let f = store.open_file("obj").unwrap();
-        let eng = IoEngine::new(1, BufferPool::new(false, 0));
+        let eng = IoEngine::new(&store, 1, BufferPool::new(false, 0));
         // Read past EOF must surface an error, not hang or panic.
         let t = eng.submit(&f, 0, 100);
         assert!(t.wait(true).is_err());
+    }
+
+    #[test]
+    fn single_failed_shard_fails_the_ticket_without_hanging() {
+        let (_d, store) = setup_sharded(4, 1024);
+        let data = vec![7u8; 64 * 1024];
+        store.put("obj", &data).unwrap();
+        // Truncate shard 2's backing file: its stripes vanish, the other
+        // three shards stay healthy.
+        let victim = store.spec().shard_dir(2).join("obj");
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&victim)
+            .unwrap()
+            .set_len(0)
+            .unwrap();
+        let f = store.open_file("obj").unwrap();
+        let eng = IoEngine::new(&store, 2, BufferPool::new(true, 16));
+        for polling in [true, false] {
+            // Spans all four shards → must fail, promptly, in both modes.
+            let t = eng.submit(&f, 0, 16 * 1024);
+            assert!(t.wait(polling).is_err(), "polling={polling}");
+            // A read served entirely by healthy shards still succeeds
+            // (stripe 0 lives on shard 0).
+            let t = eng.submit(&f, 0, 512);
+            let b = t.wait(polling).unwrap();
+            assert!(b.iter().all(|&x| x == 7));
+            eng.recycle(b);
+        }
+    }
+
+    #[test]
+    fn zero_length_read_completes_immediately() {
+        let (_d, store) = setup();
+        store.put("obj", b"x").unwrap();
+        let f = store.open_file("obj").unwrap();
+        let eng = IoEngine::new(&store, 1, BufferPool::new(true, 4));
+        let t = eng.submit(&f, 0, 0);
+        assert!(t.is_done());
+        assert_eq!(t.wait(true).unwrap().len(), 0);
     }
 }

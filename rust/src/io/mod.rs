@@ -4,29 +4,37 @@
 //! 10 GB/s write) accessed with direct, asynchronous I/O. This module
 //! reproduces the *behavioural* contract the SEM engine depends on:
 //!
-//! * [`store`] — a file-backed store whose reads/writes pass through an
-//!   asymmetric **token-bucket throughput throttle** plus a fixed
-//!   per-request latency, and are fully metered ([`crate::metrics::IoStats`]).
-//!   With the throttle configured to the paper's 12/10 GB/s the engine
-//!   reproduces the I/O-bound ↔ CPU-bound crossover of Fig 5; tighter
-//!   settings emulate slower SSDs.
-//! * [`pool`] — reusable I/O buffer pools (§3.5: large buffer allocation
-//!   via `mmap` is expensive; the paper keeps previously allocated buffers
-//!   and resizes when too small). Toggleable for the Fig 13 ablation.
-//! * [`engine`] — asynchronous read engine with **I/O polling**: worker
-//!   threads issue reads; consumers either spin-poll the completion flag
-//!   (the paper's approach, no thread reschedule latency) or block on a
-//!   condvar (the ablation baseline).
+//! * [`store`] — a file-backed **single-device** store whose reads and
+//!   writes pass through an asymmetric token-bucket throughput throttle
+//!   plus a fixed per-request latency, and are fully metered
+//!   ([`crate::metrics::IoStats`]).
+//! * [`sharded`] — the **array**: [`ShardedStore`] composes N
+//!   single-device shards (N directories ≈ N SSDs), each with its own
+//!   throttle channels and stats, and stripes every object across them
+//!   with a fixed stripe size. One logical read fans out into parallel
+//!   per-shard sub-reads, so aggregate bandwidth grows with the shard
+//!   count; `shards = 1` is byte-for-byte the single-device layout.
+//!   [`StoreSpec`] is the config surface (`shards`, `stripe_bytes`,
+//!   per-shard `gbps`), with a JSON round-trip for the CLI tools.
+//! * [`pool`] — reusable I/O buffer pools (§3.5) with bounded retained
+//!   capacity. Toggleable for the Fig 13 ablation.
+//! * [`engine`] — asynchronous read engine with **I/O polling**, its
+//!   worker threads partitioned per shard so a slow device cannot
+//!   head-of-line-block the rest; consumers either spin-poll the
+//!   completion flag (the paper's approach, no thread reschedule latency)
+//!   or block on a condvar (the ablation baseline).
 //! * [`writer`] — merged, sequential, asynchronous writes of the output
-//!   matrix (§3.4: results from many threads are merged into large
-//!   sequential writes; the output is written at most once).
+//!   matrix (§3.4), striped: one writer thread per shard merges locally
+//!   adjacent extents so every device sees large sequential writes.
 
 pub mod engine;
 pub mod pool;
+pub mod sharded;
 pub mod store;
 pub mod writer;
 
 pub use engine::{IoEngine, IoTicket};
 pub use pool::BufferPool;
+pub use sharded::{ShardedFile, ShardedStore, StoreSpec, DEFAULT_STRIPE_BYTES};
 pub use store::{ExtMemStore, StoreConfig, StoreFile};
 pub use writer::MergedWriter;

@@ -5,59 +5,116 @@
 //! allocated buffers and resizes one when it is too small for a new
 //! request. `enabled = false` reproduces the Fig 13 `buf-pool` ablation
 //! baseline: every request allocates (and first-touches) a fresh buffer.
+//!
+//! Retention is bounded in **capacity**, not just count: a buffer whose
+//! capacity exceeds [`BufferPool::max_buffer_bytes`] is dropped on `put`
+//! (one giant read must not pin a giant allocation forever), and the pool
+//! refuses buffers once its total retained capacity would exceed
+//! [`BufferPool::max_retained_bytes`].
 
 use crate::metrics::IoStats;
 use std::sync::{Arc, Mutex};
 
-/// A pool of reusable byte buffers.
+/// Default per-buffer retained-capacity cap (64 MiB).
+pub const DEFAULT_MAX_BUFFER_BYTES: usize = 64 << 20;
+/// Default whole-pool retained-capacity cap (512 MiB).
+pub const DEFAULT_MAX_RETAINED_BYTES: usize = 512 << 20;
+
+#[derive(Debug, Default)]
+struct PoolInner {
+    free: Vec<Vec<u8>>,
+    /// Total capacity of the buffers in `free`.
+    bytes: usize,
+}
+
+/// A pool of reusable byte buffers with bounded retained capacity.
 #[derive(Debug)]
 pub struct BufferPool {
     enabled: bool,
-    free: Mutex<Vec<Vec<u8>>>,
+    inner: Mutex<PoolInner>,
     /// Maximum number of buffers retained (excess is dropped on `put`).
     max_buffers: usize,
+    /// Per-buffer capacity cap: oversized buffers are not retained.
+    max_buffer_bytes: usize,
+    /// Whole-pool retained-capacity cap.
+    max_retained_bytes: usize,
     stats: Option<Arc<IoStatsRef>>,
 }
 
 /// Indirection so the pool can report hits/misses into a store's stats.
 #[derive(Debug)]
-pub struct IoStatsRef(pub Arc<crate::io::ExtMemStore>);
+pub struct IoStatsRef(pub Arc<crate::io::ShardedStore>);
 
 impl BufferPool {
     pub fn new(enabled: bool, max_buffers: usize) -> Arc<BufferPool> {
-        Arc::new(BufferPool {
+        Self::with_caps(
             enabled,
-            free: Mutex::new(Vec::new()),
             max_buffers,
-            stats: None,
-        })
+            DEFAULT_MAX_BUFFER_BYTES,
+            DEFAULT_MAX_RETAINED_BYTES,
+            None,
+        )
     }
 
     /// Pool wired to a store's `IoStats` (pool_hits / pool_misses).
     pub fn with_store(
         enabled: bool,
         max_buffers: usize,
-        store: Arc<crate::io::ExtMemStore>,
+        store: Arc<crate::io::ShardedStore>,
+    ) -> Arc<BufferPool> {
+        Self::with_caps(
+            enabled,
+            max_buffers,
+            DEFAULT_MAX_BUFFER_BYTES,
+            DEFAULT_MAX_RETAINED_BYTES,
+            Some(Arc::new(IoStatsRef(store))),
+        )
+    }
+
+    /// Fully parameterized constructor (tests, tuned deployments).
+    pub fn with_caps(
+        enabled: bool,
+        max_buffers: usize,
+        max_buffer_bytes: usize,
+        max_retained_bytes: usize,
+        stats: Option<Arc<IoStatsRef>>,
     ) -> Arc<BufferPool> {
         Arc::new(BufferPool {
             enabled,
-            free: Mutex::new(Vec::new()),
+            inner: Mutex::new(PoolInner::default()),
             max_buffers,
-            stats: Some(Arc::new(IoStatsRef(store))),
+            max_buffer_bytes,
+            max_retained_bytes,
+            stats,
         })
+    }
+
+    /// Per-buffer retained-capacity cap.
+    pub fn max_buffer_bytes(&self) -> usize {
+        self.max_buffer_bytes
+    }
+
+    /// Whole-pool retained-capacity cap.
+    pub fn max_retained_bytes(&self) -> usize {
+        self.max_retained_bytes
     }
 
     fn io_stats(&self) -> Option<&IoStats> {
         self.stats.as_ref().map(|s| &s.0.stats)
     }
 
-    /// Get a zero-length buffer with capacity at least `len`, then resize
-    /// it to `len`. Contents are unspecified (callers overwrite via I/O).
+    /// Get a buffer of length exactly `len` (reusing a pooled allocation
+    /// when possible). Contents are unspecified (callers overwrite via
+    /// I/O).
     pub fn get(&self, len: usize) -> Vec<u8> {
         if self.enabled {
             let reused = {
-                let mut free = self.free.lock().unwrap();
-                free.pop()
+                let mut inner = self.inner.lock().unwrap();
+                let buf = inner.free.pop();
+                if let Some(b) = &buf {
+                    inner.bytes -= b.capacity();
+                }
+                buf
             };
             if let Some(mut buf) = reused {
                 if let Some(s) = self.io_stats() {
@@ -76,20 +133,33 @@ impl BufferPool {
         vec![0u8; len]
     }
 
-    /// Return a buffer to the pool.
+    /// Return a buffer to the pool. Buffers that would blow the count or
+    /// capacity bounds are dropped instead of retained.
     pub fn put(&self, buf: Vec<u8>) {
         if !self.enabled {
             return;
         }
-        let mut free = self.free.lock().unwrap();
-        if free.len() < self.max_buffers {
-            free.push(buf);
+        let cap = buf.capacity();
+        if cap > self.max_buffer_bytes {
+            return; // one oversized request must not pin memory forever
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.free.len() < self.max_buffers
+            && inner.bytes + cap <= self.max_retained_bytes
+        {
+            inner.bytes += cap;
+            inner.free.push(buf);
         }
     }
 
     /// Number of buffers currently retained.
     pub fn retained(&self) -> usize {
-        self.free.lock().unwrap().len()
+        self.inner.lock().unwrap().free.len()
+    }
+
+    /// Total capacity currently retained, in bytes.
+    pub fn retained_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
     }
 }
 
@@ -106,8 +176,10 @@ mod tests {
         let b2 = pool.get(200);
         assert_eq!(b2.len(), 200);
         assert_eq!(pool.retained(), 0);
+        assert_eq!(pool.retained_bytes(), 0);
         pool.put(b2);
         assert_eq!(pool.retained(), 1);
+        assert!(pool.retained_bytes() >= 200);
     }
 
     #[test]
@@ -125,5 +197,48 @@ mod tests {
             pool.put(vec![0u8; 16]);
         }
         assert_eq!(pool.retained(), 2);
+    }
+
+    #[test]
+    fn oversized_buffers_are_dropped_not_pinned() {
+        // Per-buffer cap 1 KiB: a 1 MiB buffer must not be retained.
+        let pool = BufferPool::with_caps(true, 8, 1 << 10, 1 << 20, None);
+        pool.put(vec![0u8; 1 << 20]);
+        assert_eq!(pool.retained(), 0);
+        assert_eq!(pool.retained_bytes(), 0);
+        pool.put(vec![0u8; 512]);
+        assert_eq!(pool.retained(), 1);
+    }
+
+    #[test]
+    fn total_capacity_stays_bounded_across_mixed_sizes() {
+        // Count bound is loose (1024 buffers) so the byte bound is what
+        // constrains retention across a mixed-size request stream.
+        let max_total = 64 << 10;
+        let pool = BufferPool::with_caps(true, 1024, 16 << 10, max_total, None);
+        let mut rng = crate::util::Xoshiro256::new(11);
+        for _ in 0..2000 {
+            let len = 1 + rng.below(20 << 10) as usize;
+            let buf = pool.get(len);
+            assert_eq!(buf.len(), len);
+            pool.put(buf);
+            assert!(
+                pool.retained_bytes() <= max_total,
+                "retained {} bytes > bound {max_total}",
+                pool.retained_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn get_accounts_retained_bytes_symmetrically() {
+        let pool = BufferPool::with_caps(true, 8, 1 << 20, 1 << 20, None);
+        pool.put(Vec::with_capacity(1000));
+        let before = pool.retained_bytes();
+        assert!(before >= 1000);
+        let b = pool.get(10);
+        assert_eq!(pool.retained_bytes(), 0);
+        pool.put(b);
+        assert!(pool.retained_bytes() >= 1000, "capacity tracked on re-put");
     }
 }

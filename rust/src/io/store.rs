@@ -1,4 +1,6 @@
-//! The throttled, metered file store standing in for the paper's SSD array.
+//! The throttled, metered file store standing in for **one SSD** — the
+//! shard unit that [`super::sharded::ShardedStore`] composes into the
+//! paper's multi-device array.
 //!
 //! Throughput throttling uses a shared virtual-time token bucket: each
 //! request reserves a time window proportional to its size on the store's
@@ -42,7 +44,10 @@ impl StoreConfig {
         }
     }
 
-    /// The paper's SSD array: 12 GB/s read, 10 GB/s write, ~30 us latency.
+    /// The paper's SSD array collapsed into one device: 12 GB/s read,
+    /// 10 GB/s write, ~30 us latency. Prefer
+    /// [`super::sharded::StoreSpec::paper_ssd_array`], which models the
+    /// 24 devices individually.
     pub fn paper_ssd_array(dir: impl Into<PathBuf>) -> Self {
         Self {
             dir: dir.into(),

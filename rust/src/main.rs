@@ -24,7 +24,7 @@ use sem_spmm::apps::{eigen, nmf, pagerank};
 use sem_spmm::config::Config;
 use sem_spmm::coordinator::{service::Service, Catalog};
 use sem_spmm::graph::registry;
-use sem_spmm::io::ExtMemStore;
+use sem_spmm::io::ShardedStore;
 use sem_spmm::runtime;
 use sem_spmm::spmm::{engine, Source};
 use std::path::Path;
@@ -39,7 +39,7 @@ fn main() {
 struct Ctx {
     cfg: Config,
     catalog: Catalog,
-    store: std::sync::Arc<ExtMemStore>,
+    store: std::sync::Arc<ShardedStore>,
 }
 
 fn run() -> Result<()> {
@@ -85,7 +85,7 @@ fn run() -> Result<()> {
         return Ok(());
     }
 
-    let store = ExtMemStore::open(cfg.store_config()?)?;
+    let store = ShardedStore::open(cfg.store_spec()?)?;
     let tile = cfg.get_usize("format.tile", 4096)?;
     let ctx = Ctx {
         catalog: Catalog::new(store.clone(), tile),

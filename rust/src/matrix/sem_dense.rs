@@ -8,14 +8,14 @@
 //! exactly the In-EM / Out-EM traffic Fig 11 meters.
 
 use super::DenseMatrix;
-use crate::io::ExtMemStore;
+use crate::io::ShardedStore;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// Handle to a dense matrix on the store.
 #[derive(Debug, Clone)]
 pub struct SemDense {
-    store: Arc<ExtMemStore>,
+    store: Arc<ShardedStore>,
     name: String,
     pub nrows: usize,
     pub ncols: usize,
@@ -26,7 +26,7 @@ pub struct SemDense {
 impl SemDense {
     /// Create a new (uninitialized) matrix with the given panel width.
     pub fn create(
-        store: &Arc<ExtMemStore>,
+        store: &Arc<ShardedStore>,
         name: &str,
         nrows: usize,
         ncols: usize,
@@ -43,15 +43,13 @@ impl SemDense {
             panel_cols,
         };
         // Materialize every panel object (zero-filled lazily by writes;
-        // create now so readers of untouched panels see zeros).
+        // create now so readers of untouched panels see zeros). set_len
+        // extends every shard's stripe share, so striped panels read back
+        // zeros too.
         for k in 0..m.num_panels() {
             let f = store.create_file(&m.panel_name(k))?;
             let (c0, c1) = m.panel_range(k);
-            let bytes = (nrows * (c1 - c0) * 4) as u64;
-            // Extend to full size with a 1-byte tail write (sparse file).
-            if bytes > 0 {
-                f.write_at(bytes - 1, &[0u8])?;
-            }
+            f.set_len((nrows * (c1 - c0) * 4) as u64)?;
         }
         Ok(m)
     }
@@ -59,7 +57,7 @@ impl SemDense {
     /// Open an existing matrix (metadata supplied by the coordinator's
     /// catalog; panels must exist).
     pub fn open(
-        store: &Arc<ExtMemStore>,
+        store: &Arc<ShardedStore>,
         name: &str,
         nrows: usize,
         ncols: usize,
@@ -85,7 +83,7 @@ impl SemDense {
     }
 
     /// The underlying store (used by the coordinator's streaming writers).
-    pub fn store_handle(&self) -> Arc<ExtMemStore> {
+    pub fn store_handle(&self) -> Arc<ShardedStore> {
         self.store.clone()
     }
 
@@ -170,11 +168,11 @@ impl SemDense {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::io::StoreConfig;
+    use crate::io::StoreSpec;
 
-    fn setup() -> (crate::util::TempDir, Arc<ExtMemStore>) {
+    fn setup() -> (crate::util::TempDir, Arc<ShardedStore>) {
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         (dir, store)
     }
 

@@ -14,7 +14,7 @@ use super::scheduler::{Scheduler, Task};
 use super::SpmmOpts;
 use crate::format::tiled::{TiledImage, TiledMeta, HEADER_LEN};
 use crate::format::{dcsc, scsr, TileFormat};
-use crate::io::{BufferPool, ExtMemStore, IoEngine, IoTicket, MergedWriter, StoreFile};
+use crate::io::{BufferPool, IoEngine, IoTicket, MergedWriter, ShardedFile, ShardedStore};
 use crate::matrix::{DenseMatrix, NumaConfig, NumaDense};
 use crate::metrics::Stopwatch;
 use anyhow::{bail, Result};
@@ -25,15 +25,16 @@ use std::sync::Arc;
 /// memory, data streamed on demand).
 #[derive(Debug, Clone)]
 pub struct SemSource {
-    pub file: StoreFile,
+    pub file: ShardedFile,
     pub meta: TiledMeta,
     pub index: Arc<Vec<(u64, u64)>>,
     pub data_start: u64,
 }
 
 impl SemSource {
-    /// Open a tiled image object on the store, reading only header+index.
-    pub fn open(store: &Arc<ExtMemStore>, name: &str) -> Result<SemSource> {
+    /// Open a tiled image object on the (possibly sharded) store, reading
+    /// only header+index.
+    pub fn open(store: &Arc<ShardedStore>, name: &str) -> Result<SemSource> {
         let file = store.open_file(name)?;
         let mut hdr = [0u8; HEADER_LEN];
         file.read_at(0, &mut hdr)?;
@@ -142,16 +143,14 @@ pub fn spmm(
     let sched = Scheduler::new(ntr, grain, opts.threads, opts.load_balance);
     let tasks_done = AtomicU64::new(0);
 
-    // SEM plumbing: async read engine + pooled buffers.
+    // SEM plumbing: per-shard async read workers + pooled buffers.
     let io: Option<Arc<IoEngine>> = match src {
         Source::Mem(_) => None,
         Source::Sem(s) => {
-            let pool = BufferPool::with_store(
-                opts.buf_pool,
-                opts.threads * 4,
-                s.file.store().clone(),
-            );
-            Some(Arc::new(IoEngine::new(opts.io_workers, pool)))
+            let store = s.file.store();
+            let pool =
+                BufferPool::with_store(opts.buf_pool, opts.threads * 4, store.clone());
+            Some(Arc::new(IoEngine::new(store, opts.io_workers, pool)))
         }
     };
     let read0 = match src {
@@ -446,9 +445,10 @@ pub fn numa_config(tile: usize, nrows: usize, opts: &SpmmOpts) -> NumaConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::io::StoreSpec;
+
     use crate::format::Csr;
     use crate::graph::{erdos, rmat};
-    use crate::io::StoreConfig;
 
     fn sample_csr(scale: u32, edges: usize, seed: u64) -> Csr {
         let el = rmat::generate(scale, edges, rmat::RmatParams::default(), seed);
@@ -520,10 +520,12 @@ mod tests {
 
     #[test]
     fn sem_spmm_matches_im() {
+        // N = 1: a ShardedStore with one shard behaves exactly like the
+        // single-device store it replaced.
         let m = sample_csr(10, 10_000, 7);
         let img = TiledImage::build(&m, 256, TileFormat::Scsr);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let mut buf = Vec::new();
         img.write_to(&mut buf).unwrap();
         store.put("m.semm", &buf).unwrap();
@@ -544,11 +546,88 @@ mod tests {
     }
 
     #[test]
+    fn sem_spmm_matches_im_on_striped_store() {
+        // Same equivalence with the image striped across 3 shards at a
+        // stripe far smaller than a tile-row group, so every fetch fans
+        // out into multi-shard sub-reads.
+        let m = sample_csr(10, 10_000, 7);
+        let img = TiledImage::build(&m, 256, TileFormat::Scsr);
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec {
+            dir: dir.path().to_path_buf(),
+            shards: 3,
+            stripe_bytes: 4096,
+            read_gbps: None,
+            write_gbps: None,
+            latency_us: 0,
+        })
+        .unwrap();
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("m.semm", &buf).unwrap();
+
+        let sem = SemSource::open(&store, "m.semm").unwrap();
+        assert_eq!(sem.meta, img.meta);
+        let x = DenseMatrix::random(m.ncols, 4, 9);
+        let opts = SpmmOpts {
+            threads: 4,
+            io_workers: 2,
+            ..Default::default()
+        };
+        let (im_out, _) = spmm_out(&Source::Mem(Arc::new(img)), &x, &opts).unwrap();
+        let (sem_out, stats) = spmm_out(&Source::Sem(sem), &x, &opts).unwrap();
+        assert!(stats.bytes_read > 0);
+        let diff = im_out.max_abs_diff(&sem_out);
+        assert!(diff < 1e-4, "IM vs striped SEM diff {diff}");
+        // The data area really was striped: every shard served reads.
+        for k in 0..store.num_shards() {
+            assert!(store.shard(k).stats.read_reqs.get() > 0, "shard {k} idle");
+        }
+    }
+
+    #[test]
     fn sem_spmm_polling_and_blocking_agree() {
         let m = sample_csr(9, 5000, 8);
         let img = TiledImage::build(&m, 128, TileFormat::Scsr);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("m.semm", &buf).unwrap();
+        let x = DenseMatrix::random(m.ncols, 2, 10);
+        let mut outs = Vec::new();
+        for polling in [true, false] {
+            for pool in [true, false] {
+                let sem = SemSource::open(&store, "m.semm").unwrap();
+                let opts = SpmmOpts {
+                    threads: 2,
+                    io_polling: polling,
+                    buf_pool: pool,
+                    ..Default::default()
+                };
+                let (out, _) = spmm_out(&Source::Sem(sem), &x, &opts).unwrap();
+                outs.push(out);
+            }
+        }
+        for o in &outs[1..] {
+            assert_eq!(o.data, outs[0].data);
+        }
+    }
+
+    #[test]
+    fn sem_spmm_polling_and_blocking_agree_on_striped_store() {
+        let m = sample_csr(9, 5000, 8);
+        let img = TiledImage::build(&m, 128, TileFormat::Scsr);
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec {
+            dir: dir.path().to_path_buf(),
+            shards: 4,
+            stripe_bytes: 2048,
+            read_gbps: None,
+            write_gbps: None,
+            latency_us: 0,
+        })
+        .unwrap();
         let mut buf = Vec::new();
         img.write_to(&mut buf).unwrap();
         store.put("m.semm", &buf).unwrap();
@@ -577,7 +656,7 @@ mod tests {
         let m = sample_csr(9, 5000, 11);
         let img = TiledImage::build(&m, 128, TileFormat::Scsr);
         let dir = crate::util::tempdir();
-        let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
         let mut buf = Vec::new();
         img.write_to(&mut buf).unwrap();
         store.put("m.semm", &buf).unwrap();

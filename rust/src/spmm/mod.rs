@@ -41,7 +41,10 @@ pub struct SpmmOpts {
     pub io_polling: bool,
     /// Reuse I/O buffers from a pool (SEM only).
     pub buf_pool: bool,
-    /// I/O worker threads for the async read engine (SEM only).
+    /// Total I/O worker threads for the async read engine (SEM only),
+    /// distributed over the store's shards with at least one per shard —
+    /// each device gets its own queue, so a slow shard cannot
+    /// head-of-line-block the rest of the array.
     pub io_workers: usize,
     /// CPU cache bytes per thread used to size super-blocks and task
     /// grain (the paper's `CPU_cache` in `s = CPU_cache / (2p)`).

@@ -8,7 +8,7 @@ use sem_spmm::baselines::{csr_spmm, CsrSchedule, CsrSpmmOpts};
 use sem_spmm::format::tiled::TiledImage;
 use sem_spmm::format::{Csr, TileFormat};
 use sem_spmm::graph::rmat;
-use sem_spmm::io::{ExtMemStore, StoreConfig};
+use sem_spmm::io::{ShardedStore, StoreSpec};
 use sem_spmm::matrix::{DenseMatrix, NumaConfig, NumaDense};
 use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
 use std::sync::Arc;
@@ -58,7 +58,7 @@ fn sem_engine_matches_oracle_and_im() {
     let m = sample();
     let img = TiledImage::build(&m, 256, TileFormat::Scsr);
     let dir = sem_spmm::util::tempdir();
-    let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+    let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
     let mut buf = Vec::new();
     img.write_to(&mut buf).unwrap();
     store.put("m.semm", &buf).unwrap();

@@ -6,16 +6,16 @@ use sem_spmm::coordinator::Catalog;
 use sem_spmm::format::tiled::TiledImage;
 use sem_spmm::format::{convert, Csr, TileFormat};
 use sem_spmm::graph::{registry, rmat};
-use sem_spmm::io::{BufferPool, ExtMemStore, IoEngine, StoreConfig};
+use sem_spmm::io::{BufferPool, IoEngine, ShardedStore, StoreSpec};
 use sem_spmm::matrix::DenseMatrix;
 use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
 use std::sync::Arc;
 
-fn store(dir: &std::path::Path) -> Arc<ExtMemStore> {
-    ExtMemStore::open(StoreConfig::unthrottled(dir)).unwrap()
+fn store(dir: &std::path::Path) -> Arc<ShardedStore> {
+    ShardedStore::open(StoreSpec::unthrottled(dir)).unwrap()
 }
 
-fn sample_image(store: &Arc<ExtMemStore>, name: &str) -> Csr {
+fn sample_image(store: &Arc<ShardedStore>, name: &str) -> Csr {
     let el = rmat::generate(10, 8000, rmat::RmatParams::default(), 3);
     let m = Csr::from_edgelist(&el);
     let img = TiledImage::build(&m, 256, TileFormat::Scsr);
@@ -95,7 +95,7 @@ fn io_engine_survives_error_storm() {
     let data = vec![5u8; 10_000];
     s.put("obj", &data).unwrap();
     let f = s.open_file("obj").unwrap();
-    let eng = IoEngine::new(3, BufferPool::new(true, 16));
+    let eng = IoEngine::new(&s, 3, BufferPool::new(true, 16));
     let tickets: Vec<_> = (0..60)
         .map(|i| {
             if i % 3 == 0 {
@@ -199,6 +199,88 @@ fn zero_row_and_empty_matrices() {
     let x = DenseMatrix::random(100, 2, 1);
     let (y, _) = engine::spmm_out(&Source::Mem(img), &x, &SpmmOpts::sequential()).unwrap();
     assert!(y.data.iter().all(|&v| v == 0.0));
+}
+
+/// A 4-shard store with a small stripe plus an image big enough that
+/// every tile-row-group read spans several shards.
+fn sharded_store_with_image(
+    dir: &std::path::Path,
+) -> (Arc<ShardedStore>, Csr) {
+    let s = ShardedStore::open(StoreSpec {
+        dir: dir.to_path_buf(),
+        shards: 4,
+        stripe_bytes: 2048,
+        read_gbps: None,
+        write_gbps: None,
+        latency_us: 0,
+    })
+    .unwrap();
+    let m = sample_image(&s, "m.semm");
+    (s, m)
+}
+
+/// Chop one shard's backing file mid-object.
+fn maim_shard(s: &Arc<ShardedStore>, shard: usize, name: &str) {
+    let path = s.spec().shard_dir(shard).join(name);
+    let len = std::fs::metadata(&path).unwrap().len();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&path)
+        .unwrap()
+        .set_len(len / 4)
+        .unwrap();
+}
+
+#[test]
+fn sem_run_errors_when_one_of_n_shards_fails_polling_and_blocking() {
+    // A shard read error mid-SEM-run must propagate out of spmm() as an
+    // Err — no hang — in both wait modes, even though 3 of 4 shards stay
+    // perfectly healthy.
+    for polling in [true, false] {
+        let dir = sem_spmm::util::tempdir();
+        let (s, m) = sharded_store_with_image(dir.path());
+        maim_shard(&s, 2, "m.semm");
+        let sem = SemSource::open(&s, "m.semm").unwrap();
+        let x = DenseMatrix::random(m.ncols, 2, 5);
+        let r = engine::spmm_out(
+            &Source::Sem(sem),
+            &x,
+            &SpmmOpts {
+                threads: 2,
+                io_polling: polling,
+                ..Default::default()
+            },
+        );
+        assert!(
+            r.is_err(),
+            "polling={polling}: one dead shard must fail the run"
+        );
+    }
+}
+
+#[test]
+fn healthy_sharded_run_unaffected_by_failure_of_unused_object() {
+    // Sanity inverse: maiming an unrelated object leaves the run intact.
+    let dir = sem_spmm::util::tempdir();
+    let (s, m) = sharded_store_with_image(dir.path());
+    let junk = vec![1u8; 40_000];
+    s.put("other", &junk).unwrap();
+    maim_shard(&s, 1, "other");
+    let sem = SemSource::open(&s, "m.semm").unwrap();
+    let x = DenseMatrix::random(m.ncols, 2, 6);
+    let expect = m.spmm_ref(&x.data, 2);
+    let (got, _) = engine::spmm_out(
+        &Source::Sem(sem),
+        &x,
+        &SpmmOpts {
+            threads: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for (a, b) in got.data.iter().zip(&expect) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+    }
 }
 
 #[test]

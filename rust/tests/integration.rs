@@ -6,14 +6,14 @@ use sem_spmm::apps::{eigen, nmf, pagerank};
 use sem_spmm::coordinator::{Catalog, MemBudget, PassPlan};
 use sem_spmm::format::{convert, Csr, TileFormat};
 use sem_spmm::graph::{registry, rmat};
-use sem_spmm::io::{ExtMemStore, StoreConfig};
+use sem_spmm::io::{ShardedStore, StoreSpec};
 use sem_spmm::matrix::{DenseMatrix, SemDense};
 use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
 use std::sync::Arc;
 
-fn throttled_store(dir: &std::path::Path) -> Arc<ExtMemStore> {
+fn throttled_store(dir: &std::path::Path) -> Arc<ShardedStore> {
     // A deliberately slow store so SEM paths are really I/O-bound.
-    ExtMemStore::open(StoreConfig::slow_ssd(dir.join("store"), 0.8)).unwrap()
+    ShardedStore::open(StoreSpec::slow_ssd(dir.join("store"), 0.8)).unwrap()
 }
 
 #[test]
@@ -42,7 +42,7 @@ fn pipeline_generate_convert_multiply_verify() {
 fn catalog_to_all_three_applications() {
     // One catalog feeds PageRank, the eigensolver and NMF.
     let dir = sem_spmm::util::tempdir();
-    let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+    let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
     let catalog = Catalog::new(store.clone(), 512);
     let opts = SpmmOpts {
         threads: 3,
@@ -111,7 +111,7 @@ fn catalog_to_all_three_applications() {
 #[test]
 fn vertical_partitioning_under_budget_is_exact() {
     let dir = sem_spmm::util::tempdir();
-    let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+    let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
     let el = rmat::generate(10, 12_000, rmat::RmatParams::default(), 8);
     let m = Csr::from_edgelist(&el);
     let img = sem_spmm::format::tiled::TiledImage::build(&m, 256, TileFormat::Scsr);
@@ -157,7 +157,7 @@ fn dense_backend_composes_with_engine() {
     let be = sem_spmm::runtime::backend_from_env()
         .unwrap_or_else(sem_spmm::runtime::default_backend);
     let dir = sem_spmm::util::tempdir();
-    let store = ExtMemStore::open(StoreConfig::unthrottled(dir.path())).unwrap();
+    let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
     let catalog = Catalog::new(store, 512);
     let spec = registry::by_name("rmat-40").unwrap().shrunk(10);
     let imgs = catalog.ensure(&spec).unwrap();
@@ -201,7 +201,7 @@ fn throttle_is_enforced_end_to_end() {
     // SpMV over a 0.2 GB/s store cannot exceed the configured bandwidth.
     let dir = sem_spmm::util::tempdir();
     let store =
-        ExtMemStore::open(StoreConfig::slow_ssd(dir.path().join("s"), 0.2)).unwrap();
+        ShardedStore::open(StoreSpec::slow_ssd(dir.path().join("s"), 0.2)).unwrap();
     let catalog = Catalog::new(store.clone(), 512);
     let spec = registry::by_name("rmat-40").unwrap().shrunk(11);
     let imgs = catalog.ensure(&spec).unwrap();

@@ -1,14 +1,19 @@
 //! Satellite unit tests for `io/`: write-merging boundary behaviour of
-//! [`MergedWriter`], [`BufferPool`] reuse under thread contention, and
-//! the `StoreConfig::slow_ssd` throttle actually bounding observed
-//! throughput.
+//! [`MergedWriter`], [`BufferPool`] reuse under thread contention, the
+//! `StoreSpec::slow_ssd` throttle actually bounding observed throughput,
+//! and the sharded store scaling SEM read throughput with device count.
 
-use sem_spmm::io::{BufferPool, ExtMemStore, MergedWriter, StoreConfig};
+use sem_spmm::format::tiled::TiledImage;
+use sem_spmm::format::{Csr, TileFormat};
+use sem_spmm::graph::rmat;
+use sem_spmm::io::{BufferPool, MergedWriter, ShardedStore, StoreSpec};
+use sem_spmm::matrix::DenseMatrix;
+use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
 use std::sync::Arc;
 use std::time::Instant;
 
-fn unthrottled(dir: &std::path::Path) -> Arc<ExtMemStore> {
-    ExtMemStore::open(StoreConfig::unthrottled(dir)).unwrap()
+fn unthrottled(dir: &std::path::Path) -> Arc<ShardedStore> {
+    ShardedStore::open(StoreSpec::unthrottled(dir)).unwrap()
 }
 
 #[test]
@@ -103,7 +108,7 @@ fn slow_ssd_throttle_bounds_observed_read_gbps() {
     // ~80 ms, i.e. observed throughput <= ~1.3x the configured cap (the
     // slack covers timer granularity).
     let dir = sem_spmm::util::tempdir();
-    let store = ExtMemStore::open(StoreConfig::slow_ssd(dir.path(), 0.1)).unwrap();
+    let store = ShardedStore::open(StoreSpec::slow_ssd(dir.path(), 0.1)).unwrap();
     let data = vec![3u8; 8 << 20];
     store.put("obj", &data).unwrap();
     let read0 = store.stats.bytes_read.get();
@@ -119,7 +124,7 @@ fn slow_ssd_throttle_bounds_observed_read_gbps() {
 fn slow_ssd_throttle_bounds_aggregate_write_gbps_across_threads() {
     // slow_ssd(0.25) → write cap 0.2 GB/s shared across threads.
     let dir = sem_spmm::util::tempdir();
-    let store = ExtMemStore::open(StoreConfig::slow_ssd(dir.path(), 0.25)).unwrap();
+    let store = ShardedStore::open(StoreSpec::slow_ssd(dir.path(), 0.25)).unwrap();
     let t0 = Instant::now();
     let hs: Vec<_> = (0..4)
         .map(|i| {
@@ -136,4 +141,82 @@ fn slow_ssd_throttle_bounds_aggregate_write_gbps_across_threads() {
     let secs = t0.elapsed().as_secs_f64();
     let gbps = store.stats.bytes_written.get() as f64 / 1e9 / secs;
     assert!(gbps <= 0.26, "aggregate write {gbps:.3} GB/s exceeds the cap");
+}
+
+/// Build a weighted image large enough that a throttled SEM run is
+/// firmly I/O-bound (>~15 MiB of tile data).
+fn big_weighted_image() -> (Csr, Vec<u8>) {
+    let el = rmat::generate(16, 3_000_000, rmat::RmatParams::default(), 0x5CA1E);
+    let mut m = Csr::from_edgelist(&el);
+    m.vals = Some((0..m.nnz()).map(|i| ((i % 113) as f32) * 0.01 + 0.5).collect());
+    let img = TiledImage::build(&m, 512, TileFormat::Scsr);
+    let mut buf = Vec::new();
+    img.write_to(&mut buf).unwrap();
+    (m, buf)
+}
+
+#[test]
+fn sharded_store_scales_sem_read_throughput() {
+    // Acceptance: 4 shards at 0.2 GB/s each must sustain >= 3x the
+    // read_gbps of the identical single-shard run, and the striped SEM
+    // output must still match IM-SpMM within the 1e-4 differential bound.
+    let (m, buf) = big_weighted_image();
+    let opts = SpmmOpts {
+        threads: 4,
+        io_workers: 2,
+        ..Default::default()
+    };
+    let x = DenseMatrix::random(m.ncols, 1, 21);
+    let img = Arc::new(TiledImage::from_bytes(&buf).unwrap());
+    let (im_out, _) = engine::spmm_out(&Source::Mem(img), &x, &opts).unwrap();
+
+    let mut gbps = Vec::new();
+    for shards in [1usize, 4] {
+        let dir = sem_spmm::util::tempdir();
+        let store = ShardedStore::open(StoreSpec {
+            dir: dir.path().to_path_buf(),
+            shards,
+            stripe_bytes: 128 << 10,
+            read_gbps: Some(0.2),
+            write_gbps: None,
+            latency_us: 0,
+        })
+        .unwrap();
+        store.put("m.semm", &buf).unwrap();
+        let sem = SemSource::open(&store, "m.semm").unwrap();
+        let (sem_out, stats) = engine::spmm_out(&Source::Sem(sem), &x, &opts).unwrap();
+        let diff = im_out.max_abs_diff(&sem_out);
+        assert!(diff < 1e-4, "shards={shards}: IM vs SEM diff {diff}");
+        assert!(stats.bytes_read > 8 << 20, "image too small to measure");
+        gbps.push(stats.read_gbps);
+    }
+    assert!(
+        gbps[1] >= 3.0 * gbps[0],
+        "4-shard read throughput did not scale: 1 shard {:.3} GB/s, 4 shards {:.3} GB/s",
+        gbps[0],
+        gbps[1]
+    );
+}
+
+#[test]
+fn per_shard_stats_sum_to_logical_bytes() {
+    let dir = sem_spmm::util::tempdir();
+    let store = ShardedStore::open(StoreSpec {
+        dir: dir.path().to_path_buf(),
+        shards: 3,
+        stripe_bytes: 4096,
+        read_gbps: None,
+        write_gbps: None,
+        latency_us: 0,
+    })
+    .unwrap();
+    let data: Vec<u8> = (0..100_000).map(|i| (i % 239) as u8).collect();
+    store.put("obj", &data).unwrap();
+    assert_eq!(store.get("obj").unwrap(), data);
+    let physical: u64 = (0..3).map(|k| store.shard(k).stats.bytes_read.get()).sum();
+    assert_eq!(physical, store.stats.bytes_read.get());
+    let physical_w: u64 = (0..3)
+        .map(|k| store.shard(k).stats.bytes_written.get())
+        .sum();
+    assert_eq!(physical_w, store.stats.bytes_written.get());
 }
