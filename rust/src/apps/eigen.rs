@@ -20,7 +20,7 @@
 //! matrix and the vector subspace on SSDs".
 
 use super::TallPanels;
-use crate::io::ShardedStore;
+use crate::io::{CacheUsage, ShardedStore};
 use crate::matrix::{ops, DenseMatrix};
 use crate::metrics::Stopwatch;
 use crate::spmm::{engine, Source, SpmmOpts};
@@ -70,13 +70,24 @@ impl Default for EigenConfig {
 /// Result: eigenvalues (descending), residuals, and run stats.
 #[derive(Debug, Clone)]
 pub struct EigenResult {
+    /// Converged eigenvalues, largest first.
     pub eigenvalues: Vec<f64>,
+    /// Residual norms `‖A u − θ u‖` of the wanted pairs.
     pub residuals: Vec<f64>,
+    /// Restart cycles executed.
     pub restarts: usize,
+    /// Wall-clock seconds.
     pub secs: f64,
+    /// SEM-SpMM invocations (each a full pass over the matrix).
     pub spmm_calls: usize,
+    /// Logical bytes read at the array interface.
     pub bytes_read: u64,
+    /// Logical bytes written at the array interface.
     pub bytes_written: u64,
+    /// Tile-row cache activity (when the SpMM options carried a cache
+    /// budget and the matrix is SEM) — the repeated expansion/Rayleigh-
+    /// Ritz passes are exactly the traffic the cache absorbs.
+    pub cache: Option<CacheUsage>,
 }
 
 /// Compute the `nev` largest-algebraic eigenpairs of a symmetric sparse
@@ -103,6 +114,10 @@ pub fn eigensolve(
 
     let read0 = store.stats.bytes_read.get();
     let written0 = store.stats.bytes_written.get();
+    // Resolve the cache this run will use up front, so the baseline and
+    // the final reading come from the same cache across budget changes.
+    let cache = src.resolve_tile_cache(&cfg.spmm);
+    let cache0 = cache.as_ref().map(|c| c.usage()).unwrap_or_default();
     let sw = Stopwatch::start();
     let mut spmm_calls = 0usize;
 
@@ -280,6 +295,7 @@ pub fn eigensolve(
         spmm_calls,
         bytes_read: store.stats.bytes_read.get() - read0,
         bytes_written: store.stats.bytes_written.get() - written0,
+        cache: cache.map(|c| c.usage().since(&cache0)),
     })
 }
 
@@ -367,6 +383,51 @@ mod tests {
         for w in res.eigenvalues.windows(2) {
             assert!(w[0] >= w[1] - 1e-9);
         }
+    }
+
+    #[test]
+    fn cached_sem_solve_matches_uncached_with_one_physical_pass() {
+        // The eigensolver calls SEM-SpMM dozens of times per run; with a
+        // full-size cache the store is only read on the very first pass.
+        let m = sym_graph(8, 1500, 11);
+        let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        let run = |budget: u64| {
+            let dir = crate::util::tempdir();
+            let store =
+                ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+            store.put("eig.semm", &buf).unwrap();
+            let sem = crate::spmm::SemSource::open(&store, "eig.semm").unwrap();
+            let data_bytes = sem.data_bytes();
+            let cfg = EigenConfig {
+                nev: 3,
+                block: 2,
+                subspace: 12,
+                tol: 1e-6,
+                spmm: SpmmOpts {
+                    threads: 2,
+                    cache_budget_bytes: budget,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let res = eigensolve(&Source::Sem(sem), &store, &cfg).unwrap();
+            (res, store.physical_bytes_read(), data_bytes)
+        };
+        let (cold, cold_phys, data_bytes) = run(0);
+        let (warm, warm_phys, _) = run(u64::MAX);
+        assert_eq!(cold.eigenvalues, warm.eigenvalues, "must be bit-identical");
+        assert!(cold.spmm_calls > 1, "solver must multiply repeatedly");
+        // Uncached: every spmm pass re-reads the matrix. Cached: only the
+        // first pass touches the device (plus the header/index open).
+        assert!(cold_phys > 2 * data_bytes, "uncached run re-reads");
+        assert!(
+            warm_phys < data_bytes + 4096,
+            "cached run read {warm_phys} bytes for a {data_bytes}-byte matrix"
+        );
+        let usage = warm.cache.expect("cache attached");
+        assert!(usage.hits > usage.misses, "later passes must hit");
     }
 
     #[test]

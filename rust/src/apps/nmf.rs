@@ -20,7 +20,7 @@
 //! memory-resident and k is a supported artifact shape.
 
 use super::TallPanels;
-use crate::io::ShardedStore;
+use crate::io::{CacheUsage, ShardedStore};
 use crate::matrix::{ops, DenseMatrix};
 use crate::metrics::Stopwatch;
 use crate::runtime::DenseBackend;
@@ -65,11 +65,21 @@ impl Default for NmfConfig {
 pub struct NmfResult {
     /// ‖A − WH‖_F after each iteration.
     pub residuals: Vec<f64>,
+    /// Wall-clock seconds of each iteration.
     pub secs_per_iter: Vec<f64>,
+    /// Wall-clock seconds of the whole run.
     pub secs: f64,
+    /// Logical bytes read at the array interface.
     pub bytes_read: u64,
+    /// Logical bytes written at the array interface.
     pub bytes_written: u64,
+    /// Combined tile-row cache activity of the A and Aᵀ sources (each
+    /// iteration multiplies by both; with a cache budget covering both
+    /// images, iterations after the first read nothing from the store).
+    pub cache: Option<CacheUsage>,
+    /// The W factor, as stored panels.
     pub w: TallPanels,
+    /// The Hᵀ factor, as stored panels.
     pub ht: TallPanels,
 }
 
@@ -96,6 +106,16 @@ pub fn nmf(
 
     let read0 = store.stats.bytes_read.get();
     let written0 = store.stats.bytes_written.get();
+    // Resolve both sources' caches up front, so the baselines and the
+    // final readings come from the same caches across budget changes.
+    let caches: Vec<_> = [src_a, src_at]
+        .iter()
+        .filter_map(|s| s.resolve_tile_cache(&cfg.spmm))
+        .collect();
+    let cache0 = caches
+        .iter()
+        .map(|c| c.usage())
+        .fold(CacheUsage::default(), |acc, u| acc.plus(&u));
     let sw = Stopwatch::start();
 
     let mut w = TallPanels::create(store, "nmf.W", n, w_cols, np, in_mem)?;
@@ -145,12 +165,24 @@ pub fn nmf(
         secs_per_iter.push(isw.secs());
     }
 
+    let cache = if caches.is_empty() {
+        None
+    } else {
+        Some(
+            caches
+                .iter()
+                .map(|c| c.usage())
+                .fold(CacheUsage::default(), |acc, u| acc.plus(&u))
+                .since(&cache0),
+        )
+    };
     Ok(NmfResult {
         residuals,
         secs_per_iter,
         secs: sw.secs(),
         bytes_read: store.stats.bytes_read.get() - read0,
         bytes_written: store.stats.bytes_written.get() - written0,
+        cache,
         w,
         ht,
     })

@@ -14,7 +14,7 @@
 //! All three modes compute identical values; they differ only in I/O
 //! traffic — which is what the figure shows.
 
-use crate::io::{MergedWriter, ShardedStore};
+use crate::io::{CacheUsage, MergedWriter, ShardedStore};
 use crate::matrix::NumaDense;
 use crate::metrics::Stopwatch;
 use crate::runtime::DenseBackend;
@@ -50,12 +50,24 @@ impl Default for PageRankConfig {
 /// Run statistics.
 #[derive(Debug, Clone, Default)]
 pub struct PageRankStats {
+    /// Wall-clock seconds of the whole run.
     pub secs: f64,
+    /// Iterations executed.
     pub iters: usize,
+    /// Logical bytes read at the array interface during the run.
     pub bytes_read: u64,
+    /// Logical bytes written at the array interface during the run.
     pub bytes_written: u64,
     /// Logical memory held for vectors (the Fig 14 memory story).
     pub vec_mem_bytes: u64,
+    /// **Physical** store read requests per iteration (summed over
+    /// shards — the device level of the two-level stats). With a
+    /// tile-row cache at least the matrix size and `vecs_in_mem = 3`,
+    /// every entry after the first is zero.
+    pub phys_read_reqs_per_iter: Vec<u64>,
+    /// Tile-row cache activity during this run (when the SpMM options
+    /// carried a cache budget and the source is SEM).
+    pub cache: Option<CacheUsage>,
 }
 
 /// Degree-vector store object name used by the SEM modes.
@@ -107,6 +119,21 @@ pub fn pagerank(
         2 => vec_mem += (n as u64) * 4,     // output in memory
         _ => {}
     }
+
+    // Cache accounting baselines: resolve the cache this run will use
+    // up front (as the SEM driver would) so the snapshot and the final
+    // reading come from the same cache even across budget changes.
+    // Physical reads are metered on the store the matrix lives on (the
+    // param store also carries the streamed vectors; they coincide in
+    // every harness).
+    let cache = src.resolve_tile_cache(&cfg.spmm);
+    let cache_usage0 = cache.as_ref().map(|c| c.usage()).unwrap_or_default();
+    let phys_store: &Arc<ShardedStore> = match src {
+        Source::Sem(s) => s.file.store(),
+        Source::Mem(_) => store,
+    };
+    let mut phys_reads_per_iter = Vec::with_capacity(cfg.iterations);
+    let mut phys_reads_mark = phys_store.physical_read_reqs();
 
     const BLK: usize = 1 << 16;
     let mut deg_blk = vec![0u8; BLK * 4];
@@ -163,6 +190,10 @@ pub fn pagerank(
         for (i, &v) in pr.iter().enumerate() {
             x.row_mut(i)[0] = v;
         }
+
+        let now = phys_store.physical_read_reqs();
+        phys_reads_per_iter.push(now - phys_reads_mark);
+        phys_reads_mark = now;
     }
 
     let pr: Vec<f32> = (0..n).map(|i| x.row(i)[0]).collect();
@@ -174,6 +205,8 @@ pub fn pagerank(
             bytes_read: store.stats.bytes_read.get() - read0,
             bytes_written: store.stats.bytes_written.get() - written0,
             vec_mem_bytes: vec_mem,
+            phys_read_reqs_per_iter: phys_reads_per_iter,
+            cache: cache.map(|c| c.usage().since(&cache_usage0)),
         },
     ))
 }
@@ -275,6 +308,52 @@ mod tests {
         let (pr, _) = pagerank(&Source::Mem(img), &deg, &store, &cfg).unwrap();
         let sum: f64 = pr.iter().map(|&v| v as f64).sum();
         assert!((sum - 1.0).abs() < 1e-3, "mass {sum}");
+    }
+
+    #[test]
+    fn full_cache_makes_later_iterations_read_free_and_bit_identical() {
+        // The acceptance property of the tile-row cache: with a budget at
+        // least the matrix size, the second and later SpMM iterations of
+        // a PageRank run perform ZERO physical store reads, and the
+        // output is bit-identical to an uncached (budget-0) run.
+        let (el, img, deg) = setup(9, 5000);
+        let _ = el;
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        let run = |budget: u64| {
+            let dir = crate::util::tempdir();
+            let store =
+                ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+            store.put("pr.semm", &buf).unwrap();
+            let src = Source::Sem(
+                crate::spmm::SemSource::open(&store, "pr.semm").unwrap(),
+            );
+            let cfg = PageRankConfig {
+                iterations: 6,
+                vecs_in_mem: 3,
+                spmm: SpmmOpts {
+                    threads: 3,
+                    cache_budget_bytes: budget,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            pagerank(&src, &deg, &store, &cfg).unwrap()
+        };
+        let (pr_cold, cold) = run(0);
+        let (pr_warm, warm) = run(1 << 30); // far above the matrix size
+        assert_eq!(pr_cold, pr_warm, "cached run must be bit-identical");
+        assert!(cold.cache.is_none(), "budget 0 must not attach a cache");
+        // Uncached: every iteration hits the store.
+        assert!(cold.phys_read_reqs_per_iter.iter().all(|&r| r > 0));
+        // Cached: only the first iteration does.
+        assert!(warm.phys_read_reqs_per_iter[0] > 0);
+        for (i, &r) in warm.phys_read_reqs_per_iter[1..].iter().enumerate() {
+            assert_eq!(r, 0, "iteration {} did physical reads", i + 1);
+        }
+        let usage = warm.cache.expect("cache attached");
+        assert!(usage.hits > 0 && usage.bytes_from_cache > 0);
+        assert_eq!(usage.bypasses, 0, "full budget admits everything");
     }
 
     #[test]

@@ -735,6 +735,87 @@ pub fn scale_shards(b: &Bench) -> Result<()> {
     )
 }
 
+/// --------------------------------------------------------- cache_sweep
+/// Tile-row cache budget sweep: repeated SEM SpMM against the same
+/// matrix on a slow array, with the cache budget swept from 0 (stream
+/// every pass — today's behaviour) to 2× the matrix size (everything
+/// resident after the first pass). Reports first-iteration vs
+/// steady-state time, the per-tile-row hit rate, and physical bytes
+/// actually read — the SSD-eigensolver/SAGE "spare RAM closes the
+/// SEM-vs-IM gap" story for iterative apps.
+pub fn cache_sweep(b: &Bench) -> Result<()> {
+    let spec = b.dataset("rmat-160").unwrap();
+    let m = Csr::from_edgelist(&spec.build());
+    let img = TiledImage::build(&m, b.tile, TileFormat::Scsr);
+    let data_bytes = img.data_bytes();
+    let mut buf = Vec::new();
+    img.write_to(&mut buf)?;
+    // A deliberately slow 2-shard array (0.5 GB/s aggregate) so avoided
+    // reads show up in wall-clock time, not just in the counters.
+    let store = crate::io::ShardedStore::open(crate::io::StoreSpec {
+        dir: b.store.spec().dir.join("cache-sweep"),
+        shards: 2,
+        stripe_bytes: 256 << 10,
+        read_gbps: Some(0.25),
+        write_gbps: Some(0.25),
+        latency_us: 30,
+    })?;
+    store.put("cache.semm", &buf)?;
+
+    let p = 4usize;
+    let iters = 4usize;
+    let x = DenseMatrix::random(m.ncols, p, 7);
+    let mut rows = Vec::new();
+    for (label, budget) in [
+        ("0", 0u64),
+        ("1/4", data_bytes / 4),
+        ("1/2", data_bytes / 2),
+        ("1x", data_bytes),
+        ("2x", 2 * data_bytes),
+    ] {
+        let sem = Source::Sem(SemSource::open(&store, "cache.semm")?);
+        let opts = SpmmOpts {
+            cache_budget_bytes: budget,
+            ..b.opts.clone()
+        };
+        let ncfg = engine::numa_config(b.tile, m.ncols, &opts);
+        let xs = NumaDense::from_dense(&x, ncfg);
+        let out = NumaDense::zeros(m.nrows, p, ncfg);
+        let phys0 = store.physical_bytes_read();
+        let mut iter_secs = Vec::with_capacity(iters);
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        for _ in 0..iters {
+            let stats =
+                crate::spmm::spmm(&sem, &xs, &opts, &crate::spmm::OutputSink::Mem(&out))?;
+            iter_secs.push(stats.secs);
+            hits += stats.cache_hits;
+            misses += stats.cache_misses;
+        }
+        let steady =
+            iter_secs[1..].iter().sum::<f64>() / (iters - 1).max(1) as f64;
+        let hit_rate = if hits + misses > 0 {
+            hits as f64 / (hits + misses) as f64
+        } else {
+            0.0
+        };
+        let phys_gb = (store.physical_bytes_read() - phys0) as f64 / 1e9;
+        rows.push(format!(
+            "{label}\t{}\t{:.4}\t{:.4}\t{:.3}\t{:.4}",
+            budget >> 20,
+            iter_secs[0],
+            steady,
+            hit_rate,
+            phys_gb
+        ));
+    }
+    b.emit(
+        "cache_sweep",
+        "budget\tbudget_mb\titer1_secs\tsteady_secs\thit_rate\tphys_read_gb",
+        &rows,
+    )
+}
+
 /// ----------------------------------------------------------------- perf
 /// §Perf hot-path micro-harness: absolute engine timings used by the
 /// optimization log in EXPERIMENTS.md (IM/SEM SpMV and SpMM-8 on the

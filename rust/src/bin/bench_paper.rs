@@ -3,19 +3,24 @@
 //! ```text
 //! bench-paper [--scale N] [--threads N] [--gbps F] [--tile N]
 //!             [--shards N] [--stripe-kb N] [--store-json FILE]
-//!             [--store DIR] [--out DIR] <experiment>|all
+//!             [--cache-mb N] [--store DIR] [--out DIR] <experiment>|all
 //! ```
 //!
 //! Experiments: fig2 fig5a fig5b fig6 fig7 fig8 fig9 fig10 fig11 fig12
-//! fig13 tab2 fig14 fig15 fig16 scale_shards (DESIGN.md maps each to the
-//! paper).
+//! fig13 tab2 fig14 fig15 fig16 scale_shards cache_sweep (DESIGN.md maps
+//! each to the paper).
 //!
 //! Defaults: registry scale (2^17–2^18 vertices), all cores, store
 //! throttled to the paper's 12 GB/s SSD array as one device, tile 4096.
 //! `--gbps 0` disables throttling; `--gbps` is **total** array bandwidth,
 //! split evenly over `--shards` simulated devices. `--store-json` loads a
 //! full `StoreSpec` (dir/shards/stripe_bytes/per-shard gbps) and
-//! overrides the individual store flags.
+//! overrides the individual store flags. `--cache-mb` gives the SEM
+//! engine's tile-row cache that many MiB of RAM (0, the default, streams
+//! every tile row on every pass). Iterative experiments like fig14–16
+//! then keep their hottest tile rows resident between passes; with a
+//! budget at least the matrix size they stop reading the store entirely
+//! after the first pass. `cache_sweep` sweeps this budget.
 
 use anyhow::{bail, Context, Result};
 use sem_spmm::bench::{Bench, ALL_EXPERIMENTS};
@@ -40,6 +45,7 @@ fn run() -> Result<()> {
     let mut store_dir = PathBuf::from("sem-store");
     let mut out_dir = PathBuf::from("results");
     let mut cache_bytes = 2usize << 20;
+    let mut cache_mb = 0u64;
     let mut shards = 1usize;
     let mut stripe_kb = (sem_spmm::io::DEFAULT_STRIPE_BYTES >> 10) as u64;
     let mut store_json: Option<PathBuf> = None;
@@ -80,6 +86,10 @@ fn run() -> Result<()> {
                 cache_bytes = take(&args, i)?.parse()?;
                 args.drain(i..=i + 1);
             }
+            "--cache-mb" => {
+                cache_mb = take(&args, i)?.parse()?;
+                args.drain(i..=i + 1);
+            }
             "--shards" => {
                 shards = take(&args, i)?.parse()?;
                 args.drain(i..=i + 1);
@@ -117,5 +127,6 @@ fn run() -> Result<()> {
     );
     let mut bench = Bench::new(spec, out_dir, threads, scale, tile)?;
     bench.opts.cache_bytes = cache_bytes;
+    bench.opts.cache_budget_bytes = cache_mb << 20;
     sem_spmm::bench::run(&bench, exp)
 }

@@ -9,15 +9,22 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (all JSON numbers are `f64` here).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, for stable emission).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object (builder entry point for [`Json::set`]).
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -33,6 +40,7 @@ impl Json {
         self
     }
 
+    /// Object member lookup (`None` on non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -40,6 +48,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -47,6 +56,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),

@@ -12,6 +12,7 @@
 //! store.write_gbps   = 1.25
 //! spmm.threads       = 48
 //! spmm.cache_bytes   = 2097152
+//! spmm.cache_mb      = 2048       # tile-row cache budget (MiB, 0 = off)
 //! mem.budget_gb      = 8
 //! ```
 //!
@@ -68,14 +69,17 @@ impl Config {
         Ok(())
     }
 
+    /// Raw value of `key`, if set.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// Raw value of `key`, or `default` when unset.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Integer value of `key`; `default` when unset, error on a bad parse.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -83,6 +87,7 @@ impl Config {
         }
     }
 
+    /// Float value of `key`; `default` when unset, error on a bad parse.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -90,6 +95,7 @@ impl Config {
         }
     }
 
+    /// Boolean value of `key` (`true/false`, `1/0`, `on/off`).
     pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
         match self.get(key) {
             None => Ok(default),
@@ -116,7 +122,8 @@ impl Config {
         })
     }
 
-    /// Build the engine options (`spmm.*` keys).
+    /// Build the engine options (`spmm.*` keys). `spmm.cache_mb` is the
+    /// tile-row cache budget in MiB (0, the default, disables caching).
     pub fn spmm_opts(&self) -> Result<SpmmOpts> {
         let d = SpmmOpts::default();
         Ok(SpmmOpts {
@@ -128,6 +135,8 @@ impl Config {
             buf_pool: self.get_bool("spmm.buf_pool", d.buf_pool)?,
             io_workers: self.get_usize("spmm.io_workers", d.io_workers)?,
             cache_bytes: self.get_usize("spmm.cache_bytes", d.cache_bytes)?,
+            cache_budget_bytes: (self.get_f64("spmm.cache_mb", 0.0)? * (1u64 << 20) as f64)
+                as u64,
         })
     }
 
@@ -183,6 +192,16 @@ mod tests {
         let so = c.spmm_opts().unwrap();
         assert_eq!(so.threads, 3);
         assert!(!so.vectorize);
+        assert_eq!(so.cache_budget_bytes, 0, "cache defaults off");
+    }
+
+    #[test]
+    fn cache_budget_key() {
+        let c = Config::parse("spmm.cache_mb = 1.5\n").unwrap();
+        assert_eq!(
+            c.spmm_opts().unwrap().cache_budget_bytes,
+            (1.5 * (1u64 << 20) as f64) as u64
+        );
     }
 
     #[test]

@@ -69,21 +69,28 @@ pub fn put_csr_image(store: &Arc<ShardedStore>, name: &str, m: &Csr) -> Result<(
 /// Parsed CSR image header.
 #[derive(Debug, Clone)]
 pub struct CsrImageHeader {
+    /// Matrix rows.
     pub nrows: usize,
+    /// Matrix columns.
     pub ncols: usize,
+    /// Non-zeros in the matrix.
     pub nnz: u64,
+    /// Value payload per non-zero.
     pub valtype: ValueType,
 }
 
 impl CsrImageHeader {
+    /// Byte offset of the indptr array within the image.
     pub fn indptr_off(&self) -> u64 {
         CSR_HEADER as u64
     }
 
+    /// Byte offset of the column-index array within the image.
     pub fn indices_off(&self) -> u64 {
         self.indptr_off() + (self.nrows as u64 + 1) * 8
     }
 
+    /// Byte offset of the value array within the image.
     pub fn vals_off(&self) -> u64 {
         self.indices_off() + self.nnz * 4
     }
@@ -151,11 +158,15 @@ pub fn read_csr_image(store: &Arc<ShardedStore>, name: &str) -> Result<Csr> {
 /// Conversion report — the Table 2 columns.
 #[derive(Debug, Clone)]
 pub struct ConversionReport {
+    /// Wall-clock seconds of the conversion.
     pub secs: f64,
+    /// Bytes read from the CSR image.
     pub bytes_read: u64,
+    /// Bytes written to the tiled image.
     pub bytes_written: u64,
     /// Average combined I/O throughput in GB/s over the conversion.
     pub io_gbps: f64,
+    /// Size of the produced tile data area.
     pub tiled_bytes: u64,
 }
 

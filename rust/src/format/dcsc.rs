@@ -77,8 +77,11 @@ pub fn encode(tile_col: u32, entries: &TileEntries, vt: ValueType, out: &mut Vec
 /// A zero-copy view over one encoded DCSC tile.
 #[derive(Debug, Clone, Copy)]
 pub struct TileView<'a> {
+    /// Column-block index of this tile inside its tile row.
     pub tile_col: u32,
+    /// Non-zeros in the tile.
     pub nnz: usize,
+    /// Non-empty columns.
     pub nnc: usize,
     /// Column directory bytes (`8 * nnc`).
     pub coldir: &'a [u8],

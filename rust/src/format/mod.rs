@@ -27,10 +27,15 @@ use crate::VertexId;
 /// stored at all.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
+    /// Number of rows.
     pub nrows: usize,
+    /// Number of columns.
     pub ncols: usize,
+    /// Row pointers: row `r`'s entries are `indices[indptr[r]..indptr[r+1]]`.
     pub indptr: Vec<u64>,
+    /// Column indices, sorted within each row.
     pub indices: Vec<VertexId>,
+    /// Per-entry values; `None` encodes a binary matrix.
     pub vals: Option<Vec<f32>>,
 }
 
@@ -68,6 +73,7 @@ impl Csr {
         }
     }
 
+    /// Number of stored non-zeros.
     pub fn nnz(&self) -> usize {
         self.indices.len()
     }
@@ -186,6 +192,7 @@ pub enum ValueType {
 }
 
 impl ValueType {
+    /// Bytes each value occupies on disk (0 for binary matrices).
     pub fn bytes(&self) -> usize {
         match self {
             ValueType::Binary => 0,
@@ -193,6 +200,7 @@ impl ValueType {
         }
     }
 
+    /// On-disk code of this value type.
     pub fn code(&self) -> u8 {
         match self {
             ValueType::Binary => 0,
@@ -200,6 +208,7 @@ impl ValueType {
         }
     }
 
+    /// Decode an on-disk code (`None` for unknown codes).
     pub fn from_code(c: u8) -> Option<ValueType> {
         match c {
             0 => Some(ValueType::Binary),
@@ -212,11 +221,14 @@ impl ValueType {
 /// Tile encoding selector (the Fig 13 `SCSR` ablation toggles this).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TileFormat {
+    /// The paper's SCSR + COO encoding ([`scsr`]).
     Scsr,
+    /// Doubly-compressed sparse column ([`dcsc`]), the baseline format.
     Dcsc,
 }
 
 impl TileFormat {
+    /// On-disk code of this tile format.
     pub fn code(&self) -> u8 {
         match self {
             TileFormat::Scsr => 0,
@@ -224,6 +236,7 @@ impl TileFormat {
         }
     }
 
+    /// Decode an on-disk code (`None` for unknown codes).
     pub fn from_code(c: u8) -> Option<TileFormat> {
         match c {
             0 => Some(TileFormat::Scsr),
@@ -244,6 +257,7 @@ pub struct TileEntries {
 }
 
 impl TileEntries {
+    /// Number of entries in the tile.
     pub fn nnz(&self) -> usize {
         self.coords.len()
     }

@@ -123,9 +123,13 @@ pub fn encode(tile_col: u32, entries: &TileEntries, vt: ValueType, out: &mut Vec
 /// A zero-copy view over one encoded tile.
 #[derive(Debug, Clone, Copy)]
 pub struct TileView<'a> {
+    /// Column-block index of this tile inside its tile row.
     pub tile_col: u32,
+    /// Non-zeros in the tile.
     pub nnz: usize,
+    /// Rows with two or more entries (SCSR part).
     pub n_multi: usize,
+    /// Single-entry rows (COO part).
     pub n_single: usize,
     /// SCSR stream bytes: `(n_multi + nnz_multi)` u16 little-endian words.
     pub scsr: &'a [u8],

@@ -33,19 +33,27 @@ pub const HEADER_LEN: usize = 64;
 /// Image metadata (everything except the tile data itself).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TiledMeta {
+    /// Matrix rows.
     pub nrows: usize,
+    /// Matrix columns.
     pub ncols: usize,
+    /// Tile side length `t`.
     pub tile: usize,
+    /// Tile encoding (SCSR or DCSC).
     pub format: TileFormat,
+    /// Value payload per non-zero.
     pub valtype: ValueType,
+    /// Non-zeros in the matrix.
     pub nnz: u64,
 }
 
 impl TiledMeta {
+    /// Number of tile rows (bands of `tile` matrix rows).
     pub fn n_tile_rows(&self) -> usize {
         div_ceil(self.nrows, self.tile)
     }
 
+    /// Number of tile columns.
     pub fn n_tile_cols(&self) -> usize {
         div_ceil(self.ncols, self.tile)
     }
@@ -93,9 +101,11 @@ impl TiledMeta {
 /// A fully in-memory tiled image.
 #[derive(Debug, Clone)]
 pub struct TiledImage {
+    /// Image metadata.
     pub meta: TiledMeta,
     /// Per tile row: (offset into `data`, byte length).
     pub index: Vec<(u64, u64)>,
+    /// The encoded tile rows, back to back.
     pub data: Vec<u8>,
 }
 

@@ -1,0 +1,676 @@
+//! Memory-budgeted **tile-row cache** for iterative SEM-SpMM.
+//!
+//! The paper's iterative applications (PageRank, the eigensolver, NMF)
+//! multiply against the *same* sparse matrix dozens to hundreds of times,
+//! yet spare RAM beyond the dense matrices would otherwise sit idle while
+//! every iteration re-streams every tile row from the SSD array. The
+//! companion SSD eigensolver and SAGE both show that caching the hot part
+//! of the on-SSD matrix in leftover memory closes most of the SEM-vs-IM
+//! gap; this module is that layer, sitting between
+//! [`crate::spmm::SemSource`] and the [`super::ShardedStore`].
+//!
+//! Design (see DESIGN.md §7 for the full state machine):
+//!
+//! * **Unit**: one decoded tile-row byte extent per frame — exactly the
+//!   slice `[index[tr].0, index[tr].0 + index[tr].1)` of the image's data
+//!   area, so a cached frame can be handed to the SpMM kernels without
+//!   any re-read or re-decode.
+//! * **Hard byte budget**: the cache never retains more than
+//!   `budget` bytes of frame data. `budget = 0` disables caching
+//!   entirely — the engine's request stream is then byte-identical to an
+//!   uncached run.
+//! * **Degree-aware admission**: power-law graphs concentrate non-zeros
+//!   in few tile rows. Using the per-tile-row byte sizes already present
+//!   in the [`crate::spmm::SemSource`] index, construction greedily
+//!   "spends" the budget on the densest tile rows and derives a minimum
+//!   admissible size; smaller (cold) tile rows bypass the cache so they
+//!   can never evict the hot set.
+//! * **CLOCK eviction**: admitted frames sit on a second-chance ring;
+//!   hits set a referenced bit, eviction clears it once and reclaims the
+//!   frame the second time around. (Ties at the admission threshold can
+//!   overshoot the greedy plan, so eviction is what enforces the hard
+//!   budget.)
+//! * **Single-flight**: when several workers want an uncached tile row
+//!   concurrently, exactly one claims the fill and performs the physical
+//!   read; the others block until the frame is published (or the claim is
+//!   abandoned on error, in which case one of them takes over). The store
+//!   is never asked twice for the same in-flight tile row.
+//!
+//! Accounting is two-level, mirroring the store's logical/physical split:
+//! the cache's own [`CacheStats`] (hits / misses / bypasses / bytes
+//! served) sits above the [`crate::metrics::IoStats`] pair the
+//! [`super::ShardedStore`] already keeps (logical at the array interface,
+//! physical per shard). With a budget at least the matrix size, every
+//! iteration after the first performs **zero** physical store reads.
+
+use crate::metrics::CacheStats;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A point-in-time copy of a cache's counters, for run reports and app
+/// statistics (see [`TileRowCache::usage`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheUsage {
+    /// Tile rows served from a resident frame.
+    pub hits: u64,
+    /// Admissible tile rows that had to be read from the store.
+    pub misses: u64,
+    /// Requested tile rows below the admission threshold (never cached).
+    pub bypasses: u64,
+    /// Bytes served out of resident frames.
+    pub bytes_from_cache: u64,
+    /// Bytes currently resident.
+    pub resident_bytes: u64,
+    /// Frames currently resident.
+    pub resident_rows: u64,
+}
+
+impl CacheUsage {
+    /// Counter deltas since `start` (resident figures stay absolute).
+    /// Saturating: if the cache was replaced between the snapshots (a
+    /// budget change detaches and recreates it, resetting counters),
+    /// deltas clamp at zero instead of wrapping.
+    pub fn since(&self, start: &CacheUsage) -> CacheUsage {
+        CacheUsage {
+            hits: self.hits.saturating_sub(start.hits),
+            misses: self.misses.saturating_sub(start.misses),
+            bypasses: self.bypasses.saturating_sub(start.bypasses),
+            bytes_from_cache: self
+                .bytes_from_cache
+                .saturating_sub(start.bytes_from_cache),
+            resident_bytes: self.resident_bytes,
+            resident_rows: self.resident_rows,
+        }
+    }
+
+    /// Sum of two usages (apps running over several cached sources).
+    pub fn plus(&self, o: &CacheUsage) -> CacheUsage {
+        CacheUsage {
+            hits: self.hits + o.hits,
+            misses: self.misses + o.misses,
+            bypasses: self.bypasses + o.bypasses,
+            bytes_from_cache: self.bytes_from_cache + o.bytes_from_cache,
+            resident_bytes: self.resident_bytes + o.resident_bytes,
+            resident_rows: self.resident_rows + o.resident_rows,
+        }
+    }
+
+    /// Hit fraction over all cacheable (hit + miss) tile-row requests.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One resident tile row.
+#[derive(Debug)]
+struct Frame {
+    data: Arc<Vec<u8>>,
+    /// CLOCK referenced bit: set on hit, cleared by the first sweep pass.
+    referenced: bool,
+}
+
+/// Mutable cache state, all under one mutex (the cache is consulted once
+/// per tile-row *group*, not per tile, so the lock is far off the
+/// multiply hot path).
+#[derive(Debug, Default)]
+struct Inner {
+    /// Resident frames by tile-row id.
+    frames: HashMap<usize, Frame>,
+    /// CLOCK ring of resident tile-row ids (second-chance FIFO).
+    ring: VecDeque<usize>,
+    /// Total bytes of resident frame data.
+    bytes: u64,
+    /// Tile rows currently being filled by some [`FillGuard`].
+    inflight: HashSet<usize>,
+}
+
+/// The outcome of [`TileRowCache::acquire`] for a tile-row group.
+#[derive(Debug)]
+pub enum GroupFetch {
+    /// Every tile row of the group is resident: per-row frames, in group
+    /// order (empty tile rows yield empty frames). No store read needed.
+    Hit(Vec<Arc<Vec<u8>>>),
+    /// At least one tile row must come from the store: the plan names
+    /// the tile-row span to read and carries frames for resident rows
+    /// outside it, plus the single-flight guard for the claimed rows.
+    Fill(FillPlan),
+}
+
+/// What to read (and what not to) for a group that missed.
+///
+/// The read span `[read_lo, read_hi)` is the smallest contiguous
+/// tile-row range covering every missing row — resident rows *outside*
+/// it are served from `resident` frames and cost no I/O (the partial-hit
+/// payoff at sub-matrix budgets); resident rows *inside* it are re-read
+/// as a side effect of the one contiguous request (their frames stay
+/// valid, so correctness is unaffected either way).
+#[derive(Debug)]
+pub struct FillPlan {
+    /// Single-flight claim over the missing admissible rows; publish it
+    /// with the bytes of the **read span** (offsets relative to
+    /// `index[read_lo].0`).
+    pub guard: FillGuard,
+    /// First tile row of the span to read.
+    pub read_lo: usize,
+    /// One past the last tile row of the span to read.
+    pub read_hi: usize,
+    /// Frames for the group's resident rows outside the read span, in
+    /// ascending tile-row order: `(tile_row, frame)`.
+    pub resident: Vec<(usize, Arc<Vec<u8>>)>,
+}
+
+/// A claim over the in-flight tile rows of one group read (single-flight
+/// token). Dropping the guard without [`FillGuard::publish`] — e.g. on an
+/// I/O error — releases the claim so another worker can retry.
+#[derive(Debug)]
+pub struct FillGuard {
+    cache: Arc<TileRowCache>,
+    /// First tile row of the read span (byte offsets are span-relative).
+    group_lo: usize,
+    /// Tile rows this guard owns the fill for.
+    owned: Vec<usize>,
+    published: bool,
+}
+
+impl FillGuard {
+    /// Publish the read span's bytes (`[index[read_lo].0 ..)` of the
+    /// data area): every owned tile row's slice is copied into a frame,
+    /// subject to the byte budget, and waiting workers are woken.
+    pub fn publish(mut self, group_bytes: &[u8]) {
+        let cache = self.cache.clone();
+        let base = cache.index[self.group_lo].0;
+        {
+            let mut inner = cache.inner.lock().unwrap();
+            for &tr in &self.owned {
+                let (off, len) = cache.index[tr];
+                let s = (off - base) as usize;
+                let frame = group_bytes[s..s + len as usize].to_vec();
+                cache.insert_locked(&mut inner, tr, frame);
+                inner.inflight.remove(&tr);
+            }
+        }
+        self.published = true;
+        cache.cv.notify_all();
+    }
+}
+
+impl Drop for FillGuard {
+    fn drop(&mut self) {
+        if !self.published {
+            let mut inner = self.cache.inner.lock().unwrap();
+            for tr in &self.owned {
+                inner.inflight.remove(tr);
+            }
+            drop(inner);
+            self.cache.cv.notify_all();
+        }
+    }
+}
+
+/// The memory-budgeted tile-row cache. One instance per cached
+/// [`crate::spmm::SemSource`]; cheap to share via `Arc`.
+#[derive(Debug)]
+pub struct TileRowCache {
+    /// Hard byte budget for resident frame data.
+    budget: u64,
+    /// Minimum tile-row size admitted (degree-aware admission threshold).
+    admit_min_bytes: u64,
+    /// The source's tile-row index: per tile row `(offset, len)` into the
+    /// image's data area.
+    index: Arc<Vec<(u64, u64)>>,
+    inner: Mutex<Inner>,
+    /// Wakes workers waiting on another worker's in-flight fill.
+    cv: Condvar,
+    /// Hit/miss/byte accounting (the cache level of the two-level stats).
+    pub stats: CacheStats,
+}
+
+impl TileRowCache {
+    /// Create a cache with a hard byte `budget` over a source's tile-row
+    /// `index`. The admission threshold is chosen degree-aware: tile-row
+    /// sizes are walked densest-first and the budget is greedily spent;
+    /// rows smaller than the last admitted size always bypass the cache.
+    pub fn new(index: Arc<Vec<(u64, u64)>>, budget: u64) -> Arc<TileRowCache> {
+        let mut sizes: Vec<u64> = index.iter().map(|&(_, l)| l).filter(|&l| l > 0).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        let mut acc = 0u64;
+        let mut admit_min_bytes = u64::MAX;
+        for &len in &sizes {
+            if acc + len > budget {
+                break;
+            }
+            acc += len;
+            admit_min_bytes = len;
+        }
+        Arc::new(TileRowCache {
+            budget,
+            admit_min_bytes,
+            index,
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+            stats: CacheStats::new(),
+        })
+    }
+
+    /// The configured hard byte budget.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// The admission threshold: tile rows smaller than this many bytes
+    /// are never cached (`u64::MAX` when nothing fits the budget).
+    pub fn admit_min_bytes(&self) -> u64 {
+        self.admit_min_bytes
+    }
+
+    /// Bytes of frame data currently resident.
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Number of frames currently resident.
+    pub fn resident_rows(&self) -> usize {
+        self.inner.lock().unwrap().frames.len()
+    }
+
+    /// Point-in-time counters + residency, for run reports.
+    pub fn usage(&self) -> CacheUsage {
+        let (bytes, rows) = {
+            let inner = self.inner.lock().unwrap();
+            (inner.bytes, inner.frames.len() as u64)
+        };
+        CacheUsage {
+            hits: self.stats.hits.get(),
+            misses: self.stats.misses.get(),
+            bypasses: self.stats.bypasses.get(),
+            bytes_from_cache: self.stats.bytes_from_cache.get(),
+            resident_bytes: bytes,
+            resident_rows: rows,
+        }
+    }
+
+    /// Whether tile row `tr` may ever be cached.
+    fn admissible(&self, tr: usize) -> bool {
+        let len = self.index[tr].1;
+        len > 0 && len >= self.admit_min_bytes
+    }
+
+    /// Consult the cache for the tile-row group `[lo, hi)`.
+    ///
+    /// Returns [`GroupFetch::Hit`] with per-row frames when every row is
+    /// resident. Otherwise claims the missing admissible rows for this
+    /// caller and returns a [`FillPlan`] whose read span covers exactly
+    /// the missing rows — resident rows outside the span are served from
+    /// frames (counted as hits) and every resident row in the group gets
+    /// its CLOCK referenced bit set. If another worker already has any
+    /// of the missing rows in flight, this call **blocks** until that
+    /// fill resolves (single-flight — the store is never asked twice for
+    /// the same in-flight tile row), then re-evaluates.
+    pub fn acquire(self: &Arc<Self>, lo: usize, hi: usize) -> GroupFetch {
+        debug_assert!(lo < hi && hi <= self.index.len());
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let mut missing: Vec<usize> = Vec::new();
+            let mut wait = false;
+            for tr in lo..hi {
+                if self.index[tr].1 == 0 || inner.frames.contains_key(&tr) {
+                    continue;
+                }
+                if inner.inflight.contains(&tr) {
+                    wait = true;
+                    break;
+                }
+                missing.push(tr);
+            }
+            if wait {
+                // Another worker is filling one of our rows: block until
+                // it publishes or abandons, then look again.
+                inner = self.cv.wait(inner).unwrap();
+                continue;
+            }
+            if missing.is_empty() {
+                // Full hit: hand out the frames in group order.
+                let mut frames = Vec::with_capacity(hi - lo);
+                let mut served = 0u64;
+                for tr in lo..hi {
+                    let len = self.index[tr].1;
+                    if len == 0 {
+                        frames.push(Arc::new(Vec::new()));
+                        continue;
+                    }
+                    let f = inner.frames.get_mut(&tr).expect("frame present");
+                    f.referenced = true;
+                    frames.push(f.data.clone());
+                    served += len;
+                }
+                self.stats.hits.add(frames.iter().filter(|f| !f.is_empty()).count() as u64);
+                self.stats.bytes_from_cache.add(served);
+                return GroupFetch::Hit(frames);
+            }
+            // Claim the admissible missing rows; the rest bypass. The
+            // read span is the tightest range covering every miss.
+            let read_lo = *missing.first().expect("missing nonempty");
+            let read_hi = *missing.last().expect("missing nonempty") + 1;
+            let mut owned = Vec::new();
+            for &tr in &missing {
+                if self.admissible(tr) {
+                    inner.inflight.insert(tr);
+                    owned.push(tr);
+                    self.stats.misses.inc();
+                } else {
+                    self.stats.bypasses.inc();
+                }
+            }
+            // Serve resident rows outside the span from their frames
+            // (avoided I/O = a hit); touch every resident row so CLOCK
+            // cannot evict the group's hot frames first.
+            let mut resident = Vec::new();
+            let mut served = 0u64;
+            for tr in lo..hi {
+                if let Some(f) = inner.frames.get_mut(&tr) {
+                    f.referenced = true;
+                    if !(read_lo..read_hi).contains(&tr) {
+                        served += self.index[tr].1;
+                        resident.push((tr, f.data.clone()));
+                        self.stats.hits.inc();
+                    }
+                }
+            }
+            self.stats.bytes_from_cache.add(served);
+            return GroupFetch::Fill(FillPlan {
+                guard: FillGuard {
+                    cache: self.clone(),
+                    group_lo: read_lo,
+                    owned,
+                    published: false,
+                },
+                read_lo,
+                read_hi,
+                resident,
+            });
+        }
+    }
+
+    /// Insert one tile row's bytes, evicting via CLOCK as needed to stay
+    /// under the budget. Skips (never blocks) when the frame cannot fit.
+    fn insert_locked(&self, inner: &mut Inner, tr: usize, data: Vec<u8>) {
+        let need = data.len() as u64;
+        if need == 0 || need > self.budget || inner.frames.contains_key(&tr) {
+            return;
+        }
+        while inner.bytes + need > self.budget {
+            if !self.evict_one(inner) {
+                return; // everything evictable is gone and it still doesn't fit
+            }
+        }
+        inner.bytes += need;
+        inner.ring.push_back(tr);
+        inner.frames.insert(
+            tr,
+            Frame {
+                data: Arc::new(data),
+                referenced: false,
+            },
+        );
+        self.stats.insertions.inc();
+        self.stats.bytes_inserted.add(need);
+    }
+
+    /// One CLOCK sweep step: give recently-referenced frames a second
+    /// chance, evict the first unreferenced one. Returns false when the
+    /// ring is empty (nothing left to evict).
+    fn evict_one(&self, inner: &mut Inner) -> bool {
+        // Bounded: after one full pass every referenced bit is cleared,
+        // so the second pass must evict (2n + 1 covers both).
+        let limit = inner.ring.len() * 2 + 1;
+        for _ in 0..limit {
+            let Some(tr) = inner.ring.pop_front() else {
+                return false;
+            };
+            let referenced = match inner.frames.get(&tr) {
+                None => continue, // stale ring entry; drop it
+                Some(f) => f.referenced,
+            };
+            if referenced {
+                if let Some(f) = inner.frames.get_mut(&tr) {
+                    f.referenced = false;
+                }
+                inner.ring.push_back(tr);
+            } else {
+                let f = inner.frames.remove(&tr).expect("frame present");
+                inner.bytes -= f.data.len() as u64;
+                self.stats.evictions.inc();
+                self.stats.bytes_evicted.add(f.data.len() as u64);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    /// Index with the given per-row sizes laid out back to back.
+    fn index_of(sizes: &[u64]) -> Arc<Vec<(u64, u64)>> {
+        let mut off = 0u64;
+        Arc::new(
+            sizes
+                .iter()
+                .map(|&l| {
+                    let e = (off, l);
+                    off += l;
+                    e
+                })
+                .collect(),
+        )
+    }
+
+    /// Group bytes for `[lo, hi)` where row `tr`'s bytes are all `tr as u8`.
+    fn group_bytes(index: &[(u64, u64)], lo: usize, hi: usize) -> Vec<u8> {
+        let base = index[lo].0;
+        let end = index[hi - 1].0 + index[hi - 1].1;
+        let mut out = vec![0u8; (end - base) as usize];
+        for (tr, &(off, len)) in index.iter().enumerate().take(hi).skip(lo) {
+            let s = (off - base) as usize;
+            for b in &mut out[s..s + len as usize] {
+                *b = tr as u8;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn admission_spends_budget_on_densest_rows() {
+        // Sizes 100, 50, 10: a budget of 150 admits the top two.
+        let c = TileRowCache::new(index_of(&[50, 100, 10]), 150);
+        assert_eq!(c.admit_min_bytes(), 50);
+        // Budget below every row admits nothing.
+        let c = TileRowCache::new(index_of(&[50, 100, 10]), 5);
+        assert_eq!(c.admit_min_bytes(), u64::MAX);
+        // Budget >= total admits everything non-empty.
+        let c = TileRowCache::new(index_of(&[50, 100, 0, 10]), 160);
+        assert_eq!(c.admit_min_bytes(), 10);
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrip_with_accounting() {
+        let idx = index_of(&[8, 8, 8]);
+        let c = TileRowCache::new(idx.clone(), 1 << 20);
+        match c.acquire(0, 3) {
+            GroupFetch::Fill(p) => p.guard.publish(&group_bytes(&idx, 0, 3)),
+            GroupFetch::Hit(_) => panic!("cold cache cannot hit"),
+        }
+        assert_eq!(c.stats.misses.get(), 3);
+        assert_eq!(c.resident_rows(), 3);
+        assert_eq!(c.resident_bytes(), 24);
+        match c.acquire(0, 3) {
+            GroupFetch::Hit(frames) => {
+                assert_eq!(frames.len(), 3);
+                for (tr, f) in frames.iter().enumerate() {
+                    assert!(f.iter().all(|&b| b == tr as u8), "row {tr} bytes wrong");
+                }
+            }
+            GroupFetch::Fill(_) => panic!("warm cache must hit"),
+        }
+        assert_eq!(c.stats.hits.get(), 3);
+        assert_eq!(c.stats.bytes_from_cache.get(), 24);
+        assert!(c.usage().hit_rate() > 0.49);
+    }
+
+    #[test]
+    fn tiny_budget_evicts_and_stays_under_budget() {
+        // Four 10-byte rows, budget 20: at most two resident at a time.
+        let idx = index_of(&[10, 10, 10, 10]);
+        let c = TileRowCache::new(idx.clone(), 20);
+        for tr in 0..4 {
+            match c.acquire(tr, tr + 1) {
+                GroupFetch::Fill(p) => p.guard.publish(&group_bytes(&idx, tr, tr + 1)),
+                GroupFetch::Hit(_) => panic!("row {tr} cannot be resident yet"),
+            }
+            assert!(c.resident_bytes() <= 20, "budget violated");
+        }
+        assert_eq!(c.stats.insertions.get(), 4);
+        assert_eq!(c.stats.evictions.get(), 2);
+        assert_eq!(c.resident_rows(), 2);
+        assert_eq!(c.stats.bytes_evicted.get(), 20);
+    }
+
+    #[test]
+    fn clock_gives_recently_hit_frames_a_second_chance() {
+        let idx = index_of(&[10, 10, 10]);
+        let c = TileRowCache::new(idx.clone(), 20);
+        for tr in 0..2 {
+            match c.acquire(tr, tr + 1) {
+                GroupFetch::Fill(p) => p.guard.publish(&group_bytes(&idx, tr, tr + 1)),
+                _ => panic!(),
+            }
+        }
+        // Touch row 0 so its referenced bit is set...
+        assert!(matches!(c.acquire(0, 1), GroupFetch::Hit(_)));
+        // ...then inserting row 2 must evict row 1, not row 0.
+        match c.acquire(2, 3) {
+            GroupFetch::Fill(p) => p.guard.publish(&group_bytes(&idx, 2, 3)),
+            _ => panic!(),
+        }
+        assert!(matches!(c.acquire(0, 1), GroupFetch::Hit(_)), "row 0 survived");
+        assert!(matches!(c.acquire(1, 2), GroupFetch::Fill(_)), "row 1 evicted");
+    }
+
+    #[test]
+    fn sub_threshold_rows_bypass() {
+        // Budget fits only the 100-byte row; the 10-byte rows bypass.
+        let idx = index_of(&[100, 10, 10]);
+        let c = TileRowCache::new(idx.clone(), 110);
+        assert_eq!(c.admit_min_bytes(), 100);
+        match c.acquire(0, 3) {
+            GroupFetch::Fill(p) => {
+                assert_eq!((p.read_lo, p.read_hi), (0, 3), "cold: read everything");
+                p.guard.publish(&group_bytes(&idx, 0, 3));
+            }
+            _ => panic!(),
+        }
+        assert_eq!(c.stats.misses.get(), 1);
+        assert_eq!(c.stats.bypasses.get(), 2);
+        assert_eq!(c.resident_rows(), 1);
+        // The group can never fully hit (rows 1-2 are uncacheable), but
+        // the re-fill's read span now excludes the resident dense row —
+        // it is served from its frame instead of the store.
+        match c.acquire(0, 3) {
+            GroupFetch::Fill(p) => {
+                assert_eq!((p.read_lo, p.read_hi), (1, 3), "span skips row 0");
+                assert_eq!(p.resident.len(), 1);
+                assert_eq!(p.resident[0].0, 0);
+                assert!(p.resident[0].1.iter().all(|&b| b == 0));
+            }
+            _ => panic!(),
+        }
+        assert_eq!(c.stats.hits.get(), 1, "resident row outside span is a hit");
+        assert_eq!(c.stats.bytes_from_cache.get(), 100);
+        // ...and the dense row alone hits outright.
+        assert!(matches!(c.acquire(0, 1), GroupFetch::Hit(_)));
+    }
+
+    #[test]
+    fn partial_hit_serves_resident_rows_and_keeps_them_referenced() {
+        // Rows [40, 10, 40]: budget 80 admits the two 40-byte rows.
+        let idx = index_of(&[40, 10, 40]);
+        let c = TileRowCache::new(idx.clone(), 80);
+        assert_eq!(c.admit_min_bytes(), 40);
+        match c.acquire(0, 3) {
+            GroupFetch::Fill(p) => p.guard.publish(&group_bytes(&idx, 0, 3)),
+            _ => panic!(),
+        }
+        assert_eq!(c.resident_rows(), 2);
+        // Re-acquire: only the bypassing middle row needs the store; the
+        // trailing resident row is outside the span and served as a hit,
+        // the leading one too.
+        match c.acquire(0, 3) {
+            GroupFetch::Fill(p) => {
+                assert_eq!((p.read_lo, p.read_hi), (1, 2));
+                let trs: Vec<usize> = p.resident.iter().map(|r| r.0).collect();
+                assert_eq!(trs, vec![0, 2]);
+                for (tr, f) in &p.resident {
+                    assert!(f.iter().all(|&b| b == *tr as u8));
+                }
+            }
+            _ => panic!(),
+        }
+        assert_eq!(c.stats.hits.get(), 2);
+        assert_eq!(c.stats.bytes_from_cache.get(), 80);
+    }
+
+    #[test]
+    fn abandoned_fill_releases_the_claim() {
+        let idx = index_of(&[10]);
+        let c = TileRowCache::new(idx, 100);
+        match c.acquire(0, 1) {
+            GroupFetch::Fill(p) => drop(p), // simulated I/O error: no publish
+            _ => panic!(),
+        }
+        // The row must be claimable again, not deadlocked behind a stale
+        // in-flight entry.
+        assert!(matches!(c.acquire(0, 1), GroupFetch::Fill(_)));
+    }
+
+    #[test]
+    fn single_flight_dedups_concurrent_fills() {
+        // N workers race for the same tile row: exactly one performs the
+        // (slow) fill, the rest block in acquire and then hit.
+        let idx = index_of(&[64]);
+        let c = TileRowCache::new(idx.clone(), 1 << 20);
+        let fills = AtomicUsize::new(0);
+        let hits = AtomicUsize::new(0);
+        let barrier = Barrier::new(8);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    barrier.wait();
+                    match c.acquire(0, 1) {
+                        GroupFetch::Fill(p) => {
+                            fills.fetch_add(1, Ordering::SeqCst);
+                            // Slow "read" so the others pile up behind it.
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            p.guard.publish(&group_bytes(&idx, 0, 1));
+                        }
+                        GroupFetch::Hit(_) => {
+                            hits.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(fills.load(Ordering::SeqCst), 1, "store asked more than once");
+        assert_eq!(hits.load(Ordering::SeqCst), 7);
+        assert_eq!(c.stats.misses.get(), 1);
+        assert_eq!(c.stats.hits.get(), 7);
+    }
+}

@@ -11,6 +11,7 @@
 //! fast SSD arrays) or **blocks** on a condvar (the Fig 13 `IO-poll`
 //! ablation baseline, which incurs a context switch per I/O).
 
+use super::cache::FillGuard;
 use super::pool::BufferPool;
 use super::sharded::ShardedFile;
 use super::store::StoreFile;
@@ -28,6 +29,12 @@ struct Slot {
     buf: Option<Vec<u8>>,
     /// First error among the sub-reads, if any.
     err: Option<Error>,
+    /// Tile-row-cache fill to run when the last sub-read lands
+    /// ([`IoEngine::submit_filling`]). Publishing at completion — on the
+    /// I/O worker, not the compute thread — means a claimed fill always
+    /// resolves as soon as its bytes exist, so workers blocked on the
+    /// claim can never deadlock behind a busy compute thread.
+    fill: Option<FillGuard>,
 }
 
 /// Completion state shared between workers and the waiting thread.
@@ -50,12 +57,20 @@ impl TicketState {
         }
     }
 
-    /// Mark one sub-read finished; the last one publishes completion.
+    /// Mark one sub-read finished; the last one publishes completion
+    /// (running any attached cache fill first — or abandoning it on
+    /// error, which releases the single-flight claim for a retry).
     fn complete_one(&self) {
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             // Publish under the slot lock so a blocking waiter can't miss
             // the wakeup between its check and its `cv.wait`.
-            let _slot = self.slot.lock().unwrap();
+            let mut slot = self.slot.lock().unwrap();
+            if let Some(guard) = slot.fill.take() {
+                match (&slot.err, &slot.buf) {
+                    (None, Some(buf)) => guard.publish(buf),
+                    _ => drop(guard),
+                }
+            }
             self.done.store(true, Ordering::Release);
             self.cv.notify_all();
         }
@@ -204,6 +219,30 @@ impl IoEngine {
     /// Submit an asynchronous logical read of `[off, off+len)` from
     /// `file`. The read fans out into one sub-read per shard touched.
     pub fn submit(&self, file: &ShardedFile, off: u64, len: usize) -> IoTicket {
+        self.submit_impl(file, off, len, None)
+    }
+
+    /// [`Self::submit`] with a tile-row-cache [`FillGuard`] attached:
+    /// when the last sub-read lands, the guard publishes the buffer into
+    /// the cache (on the I/O worker — before any waiter wakes), or is
+    /// abandoned on error so another worker can reclaim the fill.
+    pub fn submit_filling(
+        &self,
+        file: &ShardedFile,
+        off: u64,
+        len: usize,
+        fill: FillGuard,
+    ) -> IoTicket {
+        self.submit_impl(file, off, len, Some(fill))
+    }
+
+    fn submit_impl(
+        &self,
+        file: &ShardedFile,
+        off: u64,
+        len: usize,
+        fill: Option<FillGuard>,
+    ) -> IoTicket {
         debug_assert!(
             Arc::ptr_eq(file.store(), &self.store),
             "file belongs to a different store than the engine"
@@ -218,9 +257,13 @@ impl IoEngine {
         {
             let mut slot = state.slot.lock().unwrap();
             slot.buf = Some(self.pool.get(len));
+            slot.fill = fill;
         }
         if subs.is_empty() {
-            let _slot = state.slot.lock().unwrap();
+            // A zero-length read: nothing to publish — an attached fill
+            // guard (never created for empty groups) would simply drop.
+            let mut slot = state.slot.lock().unwrap();
+            slot.fill = None;
             state.done.store(true, Ordering::Release);
             state.cv.notify_all();
         } else {
@@ -452,6 +495,53 @@ mod tests {
             assert!(b.iter().all(|&x| x == 7));
             eng.recycle(b);
         }
+    }
+
+    #[test]
+    fn filling_read_publishes_at_completion() {
+        use crate::io::cache::{GroupFetch, TileRowCache};
+        let (_d, store) = setup();
+        let data: Vec<u8> = (0..100u8).collect();
+        store.put("obj", &data).unwrap();
+        let f = store.open_file("obj").unwrap();
+        let eng = IoEngine::new(&store, 1, BufferPool::new(true, 4));
+        let cache = TileRowCache::new(Arc::new(vec![(0, 100)]), 1 << 20);
+        let GroupFetch::Fill(plan) = cache.acquire(0, 1) else {
+            panic!("cold cache must miss");
+        };
+        let t = eng.submit_filling(&f, 0, 100, plan.guard);
+        let b = t.wait(true).unwrap();
+        assert_eq!(&b[..], &data[..]);
+        // The completion path already published: the next acquire hits
+        // and the frame holds the read bytes.
+        match cache.acquire(0, 1) {
+            GroupFetch::Hit(frames) => assert_eq!(&frames[0][..], &data[..]),
+            GroupFetch::Fill(_) => panic!("fill must have published"),
+        }
+        assert_eq!(cache.resident_bytes(), 100);
+        eng.recycle(b);
+    }
+
+    #[test]
+    fn failed_filling_read_abandons_the_claim() {
+        use crate::io::cache::{GroupFetch, TileRowCache};
+        let (_d, store) = setup();
+        store.put("obj", b"short").unwrap();
+        let f = store.open_file("obj").unwrap();
+        let eng = IoEngine::new(&store, 1, BufferPool::new(false, 0));
+        let cache = TileRowCache::new(Arc::new(vec![(0, 100)]), 1 << 20);
+        let GroupFetch::Fill(plan) = cache.acquire(0, 1) else {
+            panic!("cold cache must miss");
+        };
+        // Read past EOF: the ticket errors and the completion path must
+        // abandon (not publish) the fill, releasing the claim.
+        let t = eng.submit_filling(&f, 0, 100, plan.guard);
+        assert!(t.wait(true).is_err());
+        assert_eq!(cache.resident_rows(), 0);
+        assert!(
+            matches!(cache.acquire(0, 1), GroupFetch::Fill(_)),
+            "claim must be reclaimable after the failed read"
+        );
     }
 
     #[test]

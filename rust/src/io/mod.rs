@@ -16,6 +16,13 @@
 //!   count; `shards = 1` is byte-for-byte the single-device layout.
 //!   [`StoreSpec`] is the config surface (`shards`, `stripe_bytes`,
 //!   per-shard `gbps`), with a JSON round-trip for the CLI tools.
+//! * [`cache`] — a memory-budgeted **tile-row cache** for iterative
+//!   SEM-SpMM: decoded tile-row extents held in RAM under a hard byte
+//!   budget with degree-aware admission and CLOCK eviction, so repeated
+//!   multiplications against the same matrix stop re-streaming the hot
+//!   tile rows from the array (single-flight fills dedup concurrent
+//!   workers). With a budget at least the matrix size, every pass after
+//!   the first does zero physical store reads.
 //! * [`pool`] — reusable I/O buffer pools (§3.5) with bounded retained
 //!   capacity. Toggleable for the Fig 13 ablation.
 //! * [`engine`] — asynchronous read engine with **I/O polling**, its
@@ -27,12 +34,14 @@
 //!   matrix (§3.4), striped: one writer thread per shard merges locally
 //!   adjacent extents so every device sees large sequential writes.
 
+pub mod cache;
 pub mod engine;
 pub mod pool;
 pub mod sharded;
 pub mod store;
 pub mod writer;
 
+pub use cache::{CacheUsage, FillGuard, FillPlan, GroupFetch, TileRowCache};
 pub use engine::{IoEngine, IoTicket};
 pub use pool::BufferPool;
 pub use sharded::{ShardedFile, ShardedStore, StoreSpec, DEFAULT_STRIPE_BYTES};

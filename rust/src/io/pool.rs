@@ -43,9 +43,15 @@ pub struct BufferPool {
 
 /// Indirection so the pool can report hits/misses into a store's stats.
 #[derive(Debug)]
-pub struct IoStatsRef(pub Arc<crate::io::ShardedStore>);
+pub struct IoStatsRef(
+    /// The store whose array-level stats receive pool hit/miss counts.
+    pub Arc<crate::io::ShardedStore>,
+);
 
 impl BufferPool {
+    /// Pool with the default capacity caps and no stats wiring.
+    /// `enabled = false` is the Fig 13 ablation baseline: every `get`
+    /// allocates fresh and `put` drops.
     pub fn new(enabled: bool, max_buffers: usize) -> Arc<BufferPool> {
         Self::with_caps(
             enabled,

@@ -269,10 +269,12 @@ impl ShardedStore {
         }))
     }
 
+    /// The configuration this store was opened with.
     pub fn spec(&self) -> &StoreSpec {
         &self.spec
     }
 
+    /// Number of simulated devices in the array.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
@@ -280,6 +282,24 @@ impl ShardedStore {
     /// Shard `k`'s single-device store (per-device stats, tests).
     pub fn shard(&self, k: usize) -> &Arc<ExtMemStore> {
         &self.shards[k]
+    }
+
+    /// **Physical** read requests, summed over every shard — the device
+    /// level of the two-level accounting (the array-level `stats` field
+    /// counts one request per logical call). A tile-row-cache hit
+    /// advances neither level.
+    pub fn physical_read_reqs(&self) -> u64 {
+        self.shards.iter().map(|s| s.stats.read_reqs.get()).sum()
+    }
+
+    /// **Physical** bytes read, summed over every shard.
+    pub fn physical_bytes_read(&self) -> u64 {
+        self.shards.iter().map(|s| s.stats.bytes_read.get()).sum()
+    }
+
+    /// **Physical** bytes written, summed over every shard.
+    pub fn physical_bytes_written(&self) -> u64 {
+        self.shards.iter().map(|s| s.stats.bytes_written.get()).sum()
     }
 
     /// Filesystem path of a named object — only meaningful on
@@ -490,10 +510,12 @@ pub struct ShardedFile {
 }
 
 impl ShardedFile {
+    /// The object's name on the store.
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// The sharded store this handle belongs to.
     pub fn store(&self) -> &Arc<ShardedStore> {
         &self.store
     }
@@ -516,6 +538,7 @@ impl ShardedFile {
         Ok(end)
     }
 
+    /// Whether the logical object is empty.
     pub fn is_empty(&self) -> Result<bool> {
         Ok(self.len()? == 0)
     }
@@ -634,6 +657,7 @@ impl ShardedFile {
         })
     }
 
+    /// Flush every shard file's data to its device.
     pub fn sync(&self) -> Result<()> {
         for f in &self.files {
             f.sync()?;

@@ -9,8 +9,8 @@
 //! configured bandwidth — the property the SEM experiments need — while
 //! remaining exact under concurrency. A fixed per-request latency models
 //! submission overhead; large sequential requests therefore achieve higher
-//! effective throughput than small ones, matching SSD behaviour (§2 of
-//! DESIGN.md lists this substitution).
+//! effective throughput than small ones, matching SSD behaviour (the
+//! substitutions section of DESIGN.md lists this).
 
 use crate::metrics::IoStats;
 use anyhow::{Context, Result};
@@ -129,6 +129,7 @@ impl ExtMemStore {
         self.cfg.dir.join(name)
     }
 
+    /// The configuration this store was opened with.
     pub fn config(&self) -> &StoreConfig {
         &self.cfg
     }
@@ -239,18 +240,22 @@ pub struct StoreFile {
 }
 
 impl StoreFile {
+    /// The object's name on the store.
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// Current length of the backing file in bytes.
     pub fn len(&self) -> Result<u64> {
         Ok(self.file.metadata()?.len())
     }
 
+    /// Whether the backing file is empty.
     pub fn is_empty(&self) -> Result<bool> {
         Ok(self.len()? == 0)
     }
 
+    /// The single-device store this handle belongs to.
     pub fn store(&self) -> &Arc<ExtMemStore> {
         &self.store
     }
@@ -260,14 +265,17 @@ impl StoreFile {
         &self.file
     }
 
+    /// Throttled positional read into `buf` (exact length).
     pub fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
         self.store.read_at(&self.file, off, buf)
     }
 
+    /// Throttled positional write of `buf`.
     pub fn write_at(&self, off: u64, buf: &[u8]) -> Result<()> {
         self.store.write_at(&self.file, off, buf)
     }
 
+    /// Flush file data to the device.
     pub fn sync(&self) -> Result<()> {
         self.file.sync_data()?;
         Ok(())

@@ -186,10 +186,26 @@ fn cmd_pagerank(ctx: &Ctx, args: &[String]) -> Result<()> {
         sem_spmm::util::human_bytes(stats.bytes_read),
         sem_spmm::util::human_bytes(stats.bytes_written)
     );
+    print_cache_line(&stats.cache);
     for (v, score) in top.iter().take(5) {
         println!("  v{v}\t{score:.6}");
     }
     Ok(())
+}
+
+/// One line of tile-row-cache accounting, when a cache was attached
+/// (`spmm.cache_mb` config key).
+fn print_cache_line(cache: &Option<sem_spmm::io::CacheUsage>) {
+    if let Some(c) = cache {
+        println!(
+            "  tile-row cache: {}/{} row hits ({:.0}%), {} served from RAM, {} resident",
+            c.hits,
+            c.hits + c.misses,
+            c.hit_rate() * 100.0,
+            sem_spmm::util::human_bytes(c.bytes_from_cache),
+            sem_spmm::util::human_bytes(c.resident_bytes),
+        );
+    }
 }
 
 fn cmd_eigen(ctx: &Ctx, args: &[String]) -> Result<()> {
@@ -218,6 +234,7 @@ fn cmd_eigen(ctx: &Ctx, args: &[String]) -> Result<()> {
         res.spmm_calls,
         sem_spmm::util::human_secs(res.secs)
     );
+    print_cache_line(&res.cache);
     for (i, (ev, r)) in res.eigenvalues.iter().zip(&res.residuals).enumerate() {
         println!("  λ{i} = {ev:.6} (residual {r:.2e})");
     }
@@ -245,6 +262,7 @@ fn cmd_nmf(ctx: &Ctx, args: &[String]) -> Result<()> {
         "nmf {name} k={k}: {iters} iters in {}",
         sem_spmm::util::human_secs(res.secs)
     );
+    print_cache_line(&res.cache);
     for (i, r) in res.residuals.iter().enumerate() {
         println!("  iter {i}: ‖A−WH‖ = {r:.3}");
     }

@@ -14,25 +14,30 @@ pub struct Counter {
 }
 
 impl Counter {
+    /// New counter at zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add `n` (relaxed; ordering is irrelevant for pure accounting).
     #[inline]
     pub fn add(&self, n: u64) {
         self.v.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Add one.
     #[inline]
     pub fn inc(&self) {
         self.add(1);
     }
 
+    /// Current value.
     #[inline]
     pub fn get(&self) -> u64 {
         self.v.load(Ordering::Relaxed)
     }
 
+    /// Reset to zero.
     pub fn reset(&self) {
         self.v.store(0, Ordering::Relaxed);
     }
@@ -46,6 +51,7 @@ pub struct TimeAccum {
 }
 
 impl TimeAccum {
+    /// New accumulator at zero.
     pub fn new() -> Self {
         Self::default()
     }
@@ -59,15 +65,18 @@ impl TimeAccum {
         r
     }
 
+    /// Add `nanos` nanoseconds.
     #[inline]
     pub fn add(&self, nanos: u64) {
         self.nanos.fetch_add(nanos, Ordering::Relaxed);
     }
 
+    /// Accumulated time in seconds.
     pub fn secs(&self) -> f64 {
         self.nanos.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// Reset to zero.
     pub fn reset(&self) {
         self.nanos.store(0, Ordering::Relaxed);
     }
@@ -78,20 +87,26 @@ impl TimeAccum {
 /// (Fig 5b) and total data read (Fig 13 discussion); both derive from this.
 #[derive(Debug, Default)]
 pub struct IoStats {
+    /// Bytes read through this store (or interface level).
     pub bytes_read: Counter,
+    /// Bytes written through this store (or interface level).
     pub bytes_written: Counter,
+    /// Read requests issued.
     pub read_reqs: Counter,
+    /// Write requests issued.
     pub write_reqs: Counter,
     /// Wall time spent inside read calls (including throttle sleeps).
     pub read_time: TimeAccum,
     /// Wall time spent inside write calls (including throttle sleeps).
     pub write_time: TimeAccum,
-    /// Buffer-pool hits / misses (Fig 13 `buf-pool` ablation).
+    /// Buffer-pool hits (Fig 13 `buf-pool` ablation).
     pub pool_hits: Counter,
+    /// Buffer-pool misses (fresh allocations).
     pub pool_misses: Counter,
 }
 
 impl IoStats {
+    /// New zeroed stats block.
     pub fn new() -> Self {
         Self::default()
     }
@@ -112,6 +127,7 @@ impl IoStats {
         self.bytes_written.get() as f64 / 1e9 / wall_secs
     }
 
+    /// Reset every counter and accumulator to zero.
     pub fn reset(&self) {
         self.bytes_read.reset();
         self.bytes_written.reset();
@@ -139,6 +155,62 @@ impl IoStats {
     }
 }
 
+/// Tile-row-cache accounting (the cache level of the two-level I/O
+/// stats): per-tile-row hit/miss/bypass counts plus byte flow in and out
+/// of the cache. See [`crate::io::TileRowCache`] — with a warm cache,
+/// `bytes_from_cache` is traffic the store never saw, which is exactly
+/// the quantity the iterative-app experiments report.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    /// Tile rows served from a resident frame.
+    pub hits: Counter,
+    /// Admissible tile rows that had to be read from the store.
+    pub misses: Counter,
+    /// Requested tile rows below the admission threshold (never cached).
+    pub bypasses: Counter,
+    /// Bytes served out of resident frames (store traffic avoided).
+    pub bytes_from_cache: Counter,
+    /// Frames inserted.
+    pub insertions: Counter,
+    /// Bytes inserted into frames.
+    pub bytes_inserted: Counter,
+    /// Frames evicted by the CLOCK sweep.
+    pub evictions: Counter,
+    /// Bytes reclaimed by eviction.
+    pub bytes_evicted: Counter,
+}
+
+impl CacheStats {
+    /// New zeroed stats block.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset every counter to zero.
+    pub fn reset(&self) {
+        self.hits.reset();
+        self.misses.reset();
+        self.bypasses.reset();
+        self.bytes_from_cache.reset();
+        self.insertions.reset();
+        self.bytes_inserted.reset();
+        self.evictions.reset();
+        self.bytes_evicted.reset();
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "cache {}/{} row hits ({} bypassed), {} served, {} evicted",
+            self.hits.get(),
+            self.hits.get() + self.misses.get(),
+            self.bypasses.get(),
+            crate::util::human_bytes(self.bytes_from_cache.get()),
+            crate::util::human_bytes(self.bytes_evicted.get()),
+        )
+    }
+}
+
 /// A simple stopwatch for benchmark harnesses.
 #[derive(Debug)]
 pub struct Stopwatch {
@@ -146,14 +218,17 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Self { t0: Instant::now() }
     }
 
+    /// Seconds elapsed since start (or the last restart).
     pub fn secs(&self) -> f64 {
         self.t0.elapsed().as_secs_f64()
     }
 
+    /// Return the elapsed seconds and start a new interval.
     pub fn restart(&mut self) -> f64 {
         let s = self.secs();
         self.t0 = Instant::now();
@@ -172,6 +247,7 @@ pub struct MemStats {
 }
 
 impl MemStats {
+    /// New zeroed accounting.
     pub fn new() -> Self {
         Self::default()
     }
@@ -199,14 +275,17 @@ impl MemStats {
         self.current.fetch_sub(bytes, Ordering::Relaxed);
     }
 
+    /// Bytes currently admitted.
     pub fn current(&self) -> u64 {
         self.current.load(Ordering::Relaxed)
     }
 
+    /// Peak watermark of admitted bytes.
     pub fn peak(&self) -> u64 {
         self.peak.load(Ordering::Relaxed)
     }
 
+    /// Reset both figures to zero.
     pub fn reset(&self) {
         self.current.store(0, Ordering::Relaxed);
         self.peak.store(0, Ordering::Relaxed);

@@ -14,7 +14,10 @@
 //! * [`kernel`] — per-tile multiply kernels over the SCSR+COO / DCSC views
 //!   with width-specialized (vectorizable) inner loops.
 //! * [`engine`] — the parallel IM/SEM drivers, super-block cache blocking,
-//!   double-buffered prefetch, and the ablation toggles of Figs 12–13.
+//!   double-buffered prefetch, the ablation toggles of Figs 12–13, and
+//!   the hookup to the memory-budgeted tile-row cache
+//!   ([`crate::io::cache`]) that lets iterative apps stop re-streaming
+//!   hot tile rows from the store.
 
 pub mod engine;
 pub mod kernel;
@@ -49,6 +52,14 @@ pub struct SpmmOpts {
     /// CPU cache bytes per thread used to size super-blocks and task
     /// grain (the paper's `CPU_cache` in `s = CPU_cache / (2p)`).
     pub cache_bytes: usize,
+    /// Byte budget of the per-source **tile-row cache** (SEM only;
+    /// `bench_paper --cache-mb`, config key `spmm.cache_mb`). `0`
+    /// disables caching — the request stream is then byte-identical to
+    /// an uncached build. With a budget at least the matrix's data size,
+    /// iterative apps perform zero physical store reads after their
+    /// first pass. Rule of thumb (paper §4): keep the dense matrices in
+    /// memory and give the leftover RAM to this cache.
+    pub cache_budget_bytes: u64,
 }
 
 impl Default for SpmmOpts {
@@ -65,6 +76,7 @@ impl Default for SpmmOpts {
             buf_pool: true,
             io_workers: 4,
             cache_bytes: 2 << 20,
+            cache_budget_bytes: 0,
         }
     }
 }

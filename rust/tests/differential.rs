@@ -104,6 +104,63 @@ fn all_csr_schedules_match_tiled_engine() {
     }
 }
 
+/// Tile-row cache differential: budget-0 (stream every pass) and
+/// budget-∞ (everything resident after the first pass) runs must produce
+/// **bit-identical** output across repeated iterations, and the cached
+/// run must stop touching the store after its first pass — the cache
+/// changes where bytes come from, never what they are.
+#[test]
+fn cached_sem_budget0_vs_infinite_bit_identical() {
+    let m = sample();
+    let img = TiledImage::build(&m, 256, TileFormat::Scsr);
+    let mut buf = Vec::new();
+    img.write_to(&mut buf).unwrap();
+    let p = 4;
+    let x = DenseMatrix::random(m.ncols, p, 21);
+    let iters = 3;
+
+    let run = |budget: u64| {
+        let dir = sem_spmm::util::tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        store.put("m.semm", &buf).unwrap();
+        let sem = Source::Sem(SemSource::open(&store, "m.semm").unwrap());
+        let opts = SpmmOpts {
+            threads: 3,
+            cache_budget_bytes: budget,
+            ..Default::default()
+        };
+        let mut outs = Vec::new();
+        let mut logical = Vec::new();
+        let mut physical = Vec::new();
+        for _ in 0..iters {
+            let (out, stats) = engine::spmm_out(&sem, &x, &opts).unwrap();
+            outs.push(out.data);
+            logical.push(stats.bytes_read);
+            physical.push(stats.physical_bytes_read);
+        }
+        (outs, logical, physical)
+    };
+
+    let (cold_outs, cold_logical, _) = run(0);
+    let (warm_outs, warm_logical, warm_physical) = run(u64::MAX);
+
+    for i in 0..iters {
+        assert_eq!(
+            cold_outs[i], warm_outs[i],
+            "iteration {i}: cached output differs from uncached"
+        );
+    }
+    // Uncached: every iteration streams the matrix.
+    assert!(cold_logical.iter().all(|&b| b > 0));
+    // Cached: the first iteration streams, the rest are entirely served
+    // from memory — zero logical requests, zero physical sub-reads.
+    assert!(warm_logical[0] > 0 && warm_physical[0] > 0);
+    for i in 1..iters {
+        assert_eq!(warm_logical[i], 0, "iteration {i} issued store reads");
+        assert_eq!(warm_physical[i], 0, "iteration {i} did physical reads");
+    }
+}
+
 /// Weighted matrices take the same differential path (width 4).
 #[test]
 fn weighted_differential_width4() {
