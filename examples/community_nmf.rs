@@ -4,12 +4,14 @@
 //! 1. generate an SBM graph with planted communities (the workload the
 //!    paper's intro motivates: community detection on social graphs);
 //! 2. store it through the catalog: CSR image → streaming CSR→SCSR
-//!    conversion → tiled images of A and Aᵀ on the throttled store (L3
-//!    substrate + format layer);
+//!    conversion → ONE tiled image of A on the throttled store (L3
+//!    substrate + format layer; the fused pass computes Aᵀ·W from the
+//!    same sweep, so no transpose image exists);
 //! 3. run SEM-NMF (k = 16) with the factors vertically partitioned so
-//!    only 4 of 16 columns are memory-resident — every sparse product is
-//!    a semi-external SpMM, every fused update runs through the AOT PJRT
-//!    artifact (L1 Pallas kernel) when artifacts are built;
+//!    only 4 of 16 columns are memory-resident — each iteration streams
+//!    A once per panel pair via a fused forward+transpose pass, every
+//!    fused update runs through the AOT PJRT artifact (L1 Pallas
+//!    kernel) when artifacts are built;
 //! 4. extract communities from the factor and score recovery against the
 //!    planted partition; log the residual curve.
 //!
@@ -52,10 +54,10 @@ fn main() -> Result<()> {
     let dir = std::env::temp_dir().join("sem-spmm-community");
     let store = ShardedStore::open(StoreSpec::paper_ssd_array(&dir))?;
     convert::put_csr_image(&store, "a.csr", &m)?;
+    // One tiled image only: the fused streaming pass computes Aᵀ·W from
+    // the same sweep of A, so no transpose image is materialized and the
+    // on-store sparse footprint is half of what it used to be.
     let rep = convert::convert(&store, "a.csr", "a.semm", 4096, TileFormat::Scsr)?;
-    let mt = m.transpose();
-    convert::put_csr_image(&store, "at.csr", &mt)?;
-    convert::convert(&store, "at.csr", "at.semm", 4096, TileFormat::Scsr)?;
     println!(
         "images on store: SCSR {} (conversion {:.2} GB/s)",
         sem_spmm::util::human_bytes(rep.tiled_bytes),
@@ -74,7 +76,6 @@ fn main() -> Result<()> {
         }
     );
     let a = Source::Sem(SemSource::open(&store, "a.semm")?);
-    let at = Source::Sem(SemSource::open(&store, "at.semm")?);
     let cfg = NmfConfig {
         k,
         iterations: 12,
@@ -83,7 +84,7 @@ fn main() -> Result<()> {
         backend,
         ..Default::default()
     };
-    let res = nmf(&a, &at, &store, &cfg)?;
+    let res = nmf(&a, &store, &cfg)?;
     println!("residual curve ‖A − WH‖:");
     for (i, r) in res.residuals.iter().enumerate() {
         println!("  iter {i:>2}: {r:.2}");

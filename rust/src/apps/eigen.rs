@@ -9,8 +9,12 @@
 //!    multiplying the last block with A (SEM-SpMM with p = b) and fully
 //!    reorthogonalizing against all panels (power-law spectra make
 //!    selective reorthogonalization unreliable).
-//! 2. **Rayleigh–Ritz**: T = Vᵀ A V (m×m, via one more pass of SpMM) is
-//!    diagonalized with the dense Jacobi solver; Ritz vectors U = V·Y.
+//! 2. **Rayleigh–Ritz**: T = Vᵀ A V (m×m) is diagonalized with the dense
+//!    Jacobi solver; Ritz vectors U = V·Y. With the subspace in memory
+//!    the projection dot-products Vᵢᵀ·(A pⱼ) are fused into the SpMM
+//!    streaming pass itself (a [`crate::spmm::StreamPass`] hook runs on
+//!    every finished output interval while the rows are hot), replacing
+//!    the old np² post-SpMM sweeps over the tall panels.
 //! 3. **Thick restart**: keep the best `nev + pad` Ritz vectors as the new
 //!    basis and iterate until the wanted residuals ‖A u − θ u‖ converge.
 //!
@@ -21,9 +25,9 @@
 
 use super::TallPanels;
 use crate::io::{CacheUsage, ShardedStore};
-use crate::matrix::{ops, DenseMatrix};
+use crate::matrix::{ops, DenseMatrix, NumaDense};
 use crate::metrics::Stopwatch;
-use crate::spmm::{engine, Source, SpmmOpts};
+use crate::spmm::{engine, exec, OutputSink, RowHook, Source, SpmmOpts, StreamPass};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -185,18 +189,72 @@ pub fn eigensolve(
         }
 
         // --- 2. Rayleigh–Ritz: T = Vᵀ (A V).
+        //
+        // With the subspace in memory (SEM-max / IM) every projection
+        // block Vᵢᵀ·(A pⱼ) is **fused into the SpMM pass**: a hook
+        // accumulates all np b×b blocks while each output row interval
+        // of A·pⱼ is still hot, so the old np² post-SpMM sweeps over the
+        // tall panels disappear. SEM-min keeps the explicit sweeps — its
+        // panels live on the store and cannot be read from a hook.
         let mut t = DenseMatrix::zeros(m, m);
         for j in 0..np {
             let pj = v.load(j)?;
-            let (apj, _) = engine::spmm_out(src, &pj, &cfg.spmm)?;
-            spmm_calls += 1;
-            av.store(j, &apj)?;
-            for i in 0..np {
-                let pi = v.load(i)?;
-                let blk = ops::xty(&pi, &apj); // b×b
-                for bi in 0..b {
-                    for bj in 0..b {
-                        t.set(i * b + bi, j * b + bj, blk.get(bi, bj));
+            if in_mem {
+                let ncfg = engine::numa_config(meta.tile, n, &cfg.spmm);
+                let xj = NumaDense::from_dense(&pj, ncfg);
+                let apj_nd = NumaDense::zeros(n, b, ncfg);
+                let v_ref = &v;
+                let hook: RowHook =
+                    Box::new(move |rows_lo: usize, rows: &mut [f32], acc: &mut [f64]| {
+                    let nloc = rows.len() / b;
+                    for i in 0..np {
+                        let pi = v_ref.panel_ref(i).expect("in-memory panel");
+                        let ablk = &mut acc[i * b * b..(i + 1) * b * b];
+                        for r in 0..nloc {
+                            let prow = pi.row(rows_lo + r);
+                            let orow = &rows[r * b..(r + 1) * b];
+                            for (bi, &x) in prow.iter().enumerate() {
+                                if x != 0.0 {
+                                    let arow = &mut ablk[bi * b..(bi + 1) * b];
+                                    for (a, &o) in arow.iter_mut().zip(orow) {
+                                        *a += x as f64 * o as f64;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                });
+                let pass = StreamPass::new().forward_with(
+                    &xj,
+                    OutputSink::Mem(&apj_nd),
+                    np * b * b,
+                    hook,
+                );
+                let r = exec::run_pass(src, &pass, &cfg.spmm)?;
+                spmm_calls += 1;
+                av.store(j, &apj_nd.to_dense())?;
+                for i in 0..np {
+                    for bi in 0..b {
+                        for bj in 0..b {
+                            t.set(
+                                i * b + bi,
+                                j * b + bj,
+                                r.accs[0][(i * b + bi) * b + bj] as f32,
+                            );
+                        }
+                    }
+                }
+            } else {
+                let (apj, _) = engine::spmm_out(src, &pj, &cfg.spmm)?;
+                spmm_calls += 1;
+                av.store(j, &apj)?;
+                for i in 0..np {
+                    let pi = v.load(i)?;
+                    let blk = ops::xty(&pi, &apj); // b×b
+                    for bi in 0..b {
+                        for bj in 0..b {
+                            t.set(i * b + bi, j * b + bj, blk.get(bi, bj));
+                        }
                     }
                 }
             }
@@ -417,7 +475,21 @@ mod tests {
         };
         let (cold, cold_phys, data_bytes) = run(0);
         let (warm, warm_phys, _) = run(u64::MAX);
-        assert_eq!(cold.eigenvalues, warm.eigenvalues, "must be bit-identical");
+        // The fused Rayleigh–Ritz reduction sums per-worker f64 partials
+        // whose grouping follows the dynamic schedule, so two runs agree
+        // to rounding (not bitwise) — the cache itself changes nothing.
+        let scale = cold.eigenvalues[0].abs().max(1.0);
+        for (i, (a, b)) in cold
+            .eigenvalues
+            .iter()
+            .zip(&warm.eigenvalues)
+            .enumerate()
+        {
+            assert!(
+                (a - b).abs() < 1e-7 * scale,
+                "λ{i}: cached {b} vs uncached {a}"
+            );
+        }
         assert!(cold.spmm_calls > 1, "solver must multiply repeatedly");
         // Uncached: every spmm pass re-reads the matrix. Cached: only the
         // first pass touches the device (plus the header/index open).

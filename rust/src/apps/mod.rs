@@ -88,6 +88,18 @@ impl TallPanels {
         }
     }
 
+    /// Borrow panel `i` without copying — `Some` only for the in-memory
+    /// placement. Fused pass hooks use this to read every panel while
+    /// SpMM output intervals are finalized (SEM placement falls back to
+    /// explicit [`Self::load`] sweeps, since its panels live on the
+    /// store).
+    pub fn panel_ref(&self, i: usize) -> Option<&DenseMatrix> {
+        match self {
+            TallPanels::Mem(v) => v.get(i),
+            TallPanels::Sem(_) => None,
+        }
+    }
+
     /// Store panel `i` (Out-EM traffic in SEM placement).
     pub fn store(&mut self, i: usize, m: &DenseMatrix) -> Result<()> {
         match self {

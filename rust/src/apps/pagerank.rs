@@ -1,34 +1,52 @@
-//! SpMM-based PageRank (§4.1, Fig 14).
+//! SpMM-based PageRank (§4.1, Fig 14) with a fully fused iteration.
 //!
 //! `pr' = (1−d)/N + d · A (pr ⊘ L)` where `A[dst][src] = 1` for an edge
-//! `src → dst` and `L` is the out-degree vector. Each iteration is one
-//! SEM-SpMV plus elementwise work.
+//! `src → dst` and `L` is the out-degree vector.
+//!
+//! In the default configuration (`vecs_in_mem = 3`, native combine) the
+//! whole iteration is **one streaming pass with zero post-SpMM sweeps
+//! over the dense vectors**: a fused [`crate::spmm::StreamPass`] hook
+//! runs on every finished output row interval while those rows are hot —
+//! it applies the damping combine, accumulates the L1 residual
+//! `Σ|pr'ᵥ − prᵥ|` and the total probability mass in-pass, records the
+//! new `pr` values, and writes the *already degree-normalized* next
+//! input `pr' ⊘ L` to the output vector, which becomes the next pass's
+//! input directly. The residual drives optional early termination
+//! ([`PageRankConfig::tol`]).
 //!
 //! The Fig 14 memory knob (`vecs_in_mem`):
-//! * **3** — input, output and degree vectors in memory.
+//! * **3** — input, output and degree vectors in memory (fused path).
 //! * **2** — degree vector streamed from the store every iteration.
 //! * **1** — only the input vector in memory: the output is streamed to
 //!   the store and read back as the next iteration's input, and the
 //!   degree vector is streamed too.
 //!
 //! All three modes compute identical values; they differ only in I/O
-//! traffic — which is what the figure shows.
+//! traffic — which is what the figure shows. Modes 1–2 (and the
+//! offloaded-combine path) keep their explicit combine sweep, since
+//! their vectors live on the store; they are the I/O ablation, not the
+//! fast path.
 
 use crate::io::{CacheUsage, MergedWriter, ShardedStore};
 use crate::matrix::NumaDense;
 use crate::metrics::Stopwatch;
 use crate::runtime::DenseBackend;
-use crate::spmm::{engine, OutputSink, Source, SpmmOpts};
+use crate::spmm::{engine, exec, OutputSink, RowHook, Source, SpmmOpts, StreamPass};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// PageRank configuration.
 #[derive(Debug, Clone)]
 pub struct PageRankConfig {
+    /// Maximum iterations (fewer when `tol` converges first).
     pub iterations: usize,
     pub damping: f32,
     /// 1, 2 or 3 — vectors kept in memory (see module docs).
     pub vecs_in_mem: usize,
+    /// L1 convergence tolerance on `Σ|pr'ᵥ − prᵥ|`; `0` (the default)
+    /// always runs the full `iterations`. The residual is computed
+    /// in-pass, so convergence checking costs no extra vector sweep.
+    pub tol: f64,
     pub spmm: SpmmOpts,
     /// Offload the combine step to a dense backend (the AOT PJRT
     /// artifact when available, or the native backend).
@@ -41,6 +59,7 @@ impl Default for PageRankConfig {
             iterations: 30,
             damping: 0.85,
             vecs_in_mem: 3,
+            tol: 0.0,
             spmm: SpmmOpts::default(),
             combine_backend: None,
         }
@@ -52,7 +71,7 @@ impl Default for PageRankConfig {
 pub struct PageRankStats {
     /// Wall-clock seconds of the whole run.
     pub secs: f64,
-    /// Iterations executed.
+    /// Iterations executed (≤ the configured maximum under `tol`).
     pub iters: usize,
     /// Logical bytes read at the array interface during the run.
     pub bytes_read: u64,
@@ -65,6 +84,13 @@ pub struct PageRankStats {
     /// tile-row cache at least the matrix size and `vecs_in_mem = 3`,
     /// every entry after the first is zero.
     pub phys_read_reqs_per_iter: Vec<u64>,
+    /// L1 residual `Σ|pr'ᵥ − prᵥ|` per iteration, computed in-pass.
+    pub residuals: Vec<f64>,
+    /// Total probability mass `Σ pr'ᵥ` per iteration, computed in-pass
+    /// (drifts below 1 exactly by the dangling-vertex leak).
+    pub mass: Vec<f64>,
+    /// Whether `tol` terminated the run before `iterations`.
+    pub converged: bool,
     /// Tile-row cache activity during this run (when the SpMM options
     /// carried a cache budget and the source is SEM).
     pub cache: Option<CacheUsage>,
@@ -108,18 +134,6 @@ pub fn pagerank(
         store.put(DEG_OBJ, &bytes)?;
     }
 
-    let ncfg = engine::numa_config(meta.tile, n, &cfg.spmm);
-    let mut x = NumaDense::zeros(n, 1, ncfg);
-    let pr0 = 1.0 / n as f32;
-    x.fill(pr0);
-
-    let mut vec_mem = x.footprint_bytes();
-    match cfg.vecs_in_mem {
-        3 => vec_mem += 2 * (n as u64) * 4, // output + degree in memory
-        2 => vec_mem += (n as u64) * 4,     // output in memory
-        _ => {}
-    }
-
     // Cache accounting baselines: resolve the cache this run will use
     // up front (as the SEM driver would) so the snapshot and the final
     // reading come from the same cache even across budget changes.
@@ -132,80 +146,170 @@ pub fn pagerank(
         Source::Sem(s) => s.file.store(),
         Source::Mem(_) => store,
     };
-    let mut phys_reads_per_iter = Vec::with_capacity(cfg.iterations);
     let mut phys_reads_mark = phys_store.physical_read_reqs();
+    let mut phys_reads_per_iter = Vec::with_capacity(cfg.iterations);
+    let mut residuals = Vec::with_capacity(cfg.iterations);
+    let mut mass_per_iter = Vec::with_capacity(cfg.iterations);
+    let vec_mem;
 
-    const BLK: usize = 1 << 16;
-    let mut deg_blk = vec![0u8; BLK * 4];
-    for _iter in 0..cfg.iterations {
-        // Normalize the input vector by out-degree, streaming the degree
-        // vector from the store when it is not memory-resident.
-        if cfg.vecs_in_mem < 3 {
-            let degf = store.open_file(DEG_OBJ)?;
-            let mut r = 0;
-            while r < n {
-                let hi = (r + BLK).min(n);
-                let nb = (hi - r) * 4;
-                degf.read_at((r * 4) as u64, &mut deg_blk[..nb])?;
-                for i in r..hi {
-                    let d = f32::from_le_bytes(
-                        deg_blk[(i - r) * 4..(i - r) * 4 + 4].try_into().unwrap(),
-                    );
-                    x.row_mut(i)[0] *= d;
+    let fused = cfg.vecs_in_mem == 3 && cfg.combine_backend.is_none();
+    let ncfg = engine::numa_config(meta.tile, n, &cfg.spmm);
+    let pr0 = 1.0 / n as f32;
+    let d = cfg.damping;
+    let base = (1.0 - d) / n as f32;
+    let mut iters = 0usize;
+    let mut converged = false;
+
+    let pr_final: Vec<f32> = if fused {
+        // --- Fused path: one pass per iteration, zero vector sweeps.
+        let mut x = NumaDense::zeros(n, 1, ncfg);
+        let mut x_next = NumaDense::zeros(n, 1, ncfg);
+        let mut pr = NumaDense::zeros(n, 1, ncfg);
+        pr.fill(pr0);
+        for i in 0..n {
+            x.row_mut(i)[0] = pr0 * inv_deg[i];
+        }
+        vec_mem = x.footprint_bytes() + x_next.footprint_bytes() + pr.footprint_bytes()
+            + (n as u64) * 4;
+        while iters < cfg.iterations {
+            // The hook sees each finished interval of contrib = A·x̂
+            // exactly once: combine, meter, record pr', and leave the
+            // normalized next input in the outgoing rows.
+            let pr_ref = &pr;
+            let inv = &inv_deg;
+            let hook: RowHook = Box::new(move |rows_lo: usize, rows: &mut [f32], acc: &mut [f64]| {
+                for (i, v) in rows.iter_mut().enumerate() {
+                    let g = rows_lo + i;
+                    let pn = base + d * *v;
+                    let old = pr_ref.row(g)[0];
+                    acc[0] += (pn as f64 - old as f64).abs();
+                    acc[1] += pn as f64;
+                    *v = pn;
                 }
-                r = hi;
-            }
-        } else {
-            for i in 0..n {
-                x.row_mut(i)[0] *= inv_deg[i];
+                // Intervals are finalized exactly once and disjointly.
+                unsafe { pr_ref.write_rows_unsync(rows_lo, rows_lo + rows.len(), rows) };
+                for (i, v) in rows.iter_mut().enumerate() {
+                    *v *= inv[rows_lo + i];
+                }
+            });
+            // Scoped so the pass (and its loans of x / x_next / pr) is
+            // dropped before the buffers are swapped below.
+            let r = {
+                let pass =
+                    StreamPass::new().forward_with(&x, OutputSink::Mem(&x_next), 2, hook);
+                exec::run_pass(src, &pass, &cfg.spmm)?
+            };
+            let residual = r.accs[0][0];
+            let now = phys_store.physical_read_reqs();
+            phys_reads_per_iter.push(now - phys_reads_mark);
+            phys_reads_mark = now;
+            residuals.push(residual);
+            mass_per_iter.push(r.accs[0][1]);
+            std::mem::swap(&mut x, &mut x_next);
+            iters += 1;
+            if cfg.tol > 0.0 && residual < cfg.tol {
+                converged = true;
+                break;
             }
         }
+        (0..n).map(|i| pr.row(i)[0]).collect()
+    } else {
+        // --- Legacy sweeps: the Fig 14 I/O-ablation modes (vectors on
+        // the store) and the offloaded-combine path.
+        let mut x = NumaDense::zeros(n, 1, ncfg);
+        x.fill(pr0);
+        let mut prev = vec![pr0; n];
+        vec_mem = x.footprint_bytes()
+            + match cfg.vecs_in_mem {
+                3 => 2 * (n as u64) * 4, // output + degree in memory
+                2 => (n as u64) * 4,     // output in memory
+                _ => 0,
+            };
+        const BLK: usize = 1 << 16;
+        let mut deg_blk = vec![0u8; BLK * 4];
+        while iters < cfg.iterations {
+            // Normalize the input vector by out-degree, streaming the
+            // degree vector from the store when it is not memory-resident.
+            if cfg.vecs_in_mem < 3 {
+                let degf = store.open_file(DEG_OBJ)?;
+                let mut r = 0;
+                while r < n {
+                    let hi = (r + BLK).min(n);
+                    let nb = (hi - r) * 4;
+                    degf.read_at((r * 4) as u64, &mut deg_blk[..nb])?;
+                    for i in r..hi {
+                        let dg = f32::from_le_bytes(
+                            deg_blk[(i - r) * 4..(i - r) * 4 + 4].try_into().unwrap(),
+                        );
+                        x.row_mut(i)[0] *= dg;
+                    }
+                    r = hi;
+                }
+            } else {
+                for i in 0..n {
+                    x.row_mut(i)[0] *= inv_deg[i];
+                }
+            }
 
-        // contrib = A · x̂
-        let contrib: Vec<f32> = if cfg.vecs_in_mem == 1 {
-            // Output streamed to the store, then read back.
-            let outf = store.create_file(OUT_OBJ)?;
-            let w = MergedWriter::new(outf, 4 << 20);
-            crate::spmm::spmm(src, &x, &cfg.spmm, &OutputSink::Sem(&w))?;
-            w.finish()?;
-            let bytes = store.get(OUT_OBJ)?;
-            bytes
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                .collect()
-        } else {
-            let out = NumaDense::zeros(n, 1, ncfg);
-            crate::spmm::spmm(src, &x, &cfg.spmm, &OutputSink::Mem(&out))?;
-            out.to_dense().data
-        };
+            // contrib = A · x̂
+            let contrib: Vec<f32> = if cfg.vecs_in_mem == 1 {
+                // Output streamed to the store, then read back.
+                let outf = store.create_file(OUT_OBJ)?;
+                let w = MergedWriter::new(outf, 4 << 20);
+                crate::spmm::spmm(src, &x, &cfg.spmm, &OutputSink::Sem(&w))?;
+                w.finish()?;
+                let bytes = store.get(OUT_OBJ)?;
+                bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect()
+            } else {
+                let out = NumaDense::zeros(n, 1, ncfg);
+                crate::spmm::spmm(src, &x, &cfg.spmm, &OutputSink::Mem(&out))?;
+                out.to_dense().data
+            };
 
-        // pr' = (1 - d)/N + d · contrib — natively or via the backend.
-        let pr: Vec<f32> = match &cfg.combine_backend {
-            Some(be) => be.pagerank_combine(&contrib, cfg.damping, n)?,
-            None => contrib
-                .iter()
-                .map(|&c| (1.0 - cfg.damping) / n as f32 + cfg.damping * c)
-                .collect(),
-        };
-        for (i, &v) in pr.iter().enumerate() {
-            x.row_mut(i)[0] = v;
+            // pr' = (1 - d)/N + d · contrib — natively or via the backend.
+            let pr: Vec<f32> = match &cfg.combine_backend {
+                Some(be) => be.pagerank_combine(&contrib, cfg.damping, n)?,
+                None => contrib.iter().map(|&c| base + d * c).collect(),
+            };
+            // Residual/mass ride the combine sweep that already exists in
+            // these modes — no additional pass over the vectors.
+            let mut residual = 0f64;
+            let mut mass = 0f64;
+            for (i, &v) in pr.iter().enumerate() {
+                residual += (v as f64 - prev[i] as f64).abs();
+                mass += v as f64;
+                prev[i] = v;
+                x.row_mut(i)[0] = v;
+            }
+            let now = phys_store.physical_read_reqs();
+            phys_reads_per_iter.push(now - phys_reads_mark);
+            phys_reads_mark = now;
+            residuals.push(residual);
+            mass_per_iter.push(mass);
+            iters += 1;
+            if cfg.tol > 0.0 && residual < cfg.tol {
+                converged = true;
+                break;
+            }
         }
+        prev
+    };
 
-        let now = phys_store.physical_read_reqs();
-        phys_reads_per_iter.push(now - phys_reads_mark);
-        phys_reads_mark = now;
-    }
-
-    let pr: Vec<f32> = (0..n).map(|i| x.row(i)[0]).collect();
     Ok((
-        pr,
+        pr_final,
         PageRankStats {
             secs: sw.secs(),
-            iters: cfg.iterations,
+            iters,
             bytes_read: store.stats.bytes_read.get() - read0,
             bytes_written: store.stats.bytes_written.get() - written0,
             vec_mem_bytes: vec_mem,
             phys_read_reqs_per_iter: phys_reads_per_iter,
+            residuals,
+            mass: mass_per_iter,
+            converged,
             cache: cache.map(|c| c.usage().since(&cache_usage0)),
         },
     ))
@@ -282,6 +386,9 @@ mod tests {
             if vecs == 1 {
                 assert!(stats.bytes_written > 0, "mode 1 must stream output");
             }
+            // Residual and mass are recorded in every mode.
+            assert_eq!(stats.residuals.len(), 10);
+            assert_eq!(stats.mass.len(), 10);
         }
     }
 
@@ -305,9 +412,44 @@ mod tests {
             iterations: 20,
             ..Default::default()
         };
-        let (pr, _) = pagerank(&Source::Mem(img), &deg, &store, &cfg).unwrap();
+        let (pr, stats) = pagerank(&Source::Mem(img), &deg, &store, &cfg).unwrap();
         let sum: f64 = pr.iter().map(|&v| v as f64).sum();
         assert!((sum - 1.0).abs() < 1e-3, "mass {sum}");
+        // The in-pass mass meter must agree with the post-hoc sum.
+        let last_mass = *stats.mass.last().unwrap();
+        assert!((last_mass - sum).abs() < 1e-6, "{last_mass} vs {sum}");
+    }
+
+    #[test]
+    fn in_pass_residual_converges_and_stops_early() {
+        let (el, img, deg) = setup(9, 5000);
+        let _ = el;
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let cfg = PageRankConfig {
+            iterations: 200,
+            tol: 1e-7,
+            spmm: SpmmOpts {
+                threads: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (pr, stats) = pagerank(&Source::Mem(img.clone()), &deg, &store, &cfg).unwrap();
+        assert!(stats.converged, "must converge before 200 iterations");
+        assert!(stats.iters < 200);
+        assert!(*stats.residuals.last().unwrap() < 1e-7);
+        // Residuals shrink (geometrically, up to float noise).
+        assert!(stats.residuals[0] > *stats.residuals.last().unwrap());
+        // The converged vector matches a long fixed-iteration reference.
+        let ref_cfg = PageRankConfig {
+            iterations: stats.iters,
+            ..Default::default()
+        };
+        let (pr_ref, _) = pagerank(&Source::Mem(img), &deg, &store, &ref_cfg).unwrap();
+        for (a, b) in pr.iter().zip(&pr_ref) {
+            assert!((a - b).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -124,13 +124,13 @@ impl Bench {
     }
 }
 
-/// All experiment names, in paper order. `scale_shards` and
-/// `cache_sweep` are this reproduction's extensions: read throughput vs.
-/// simulated device count, and iterative SpMM time vs. tile-row-cache
-/// budget.
+/// All experiment names, in paper order. `scale_shards`, `cache_sweep`
+/// and `fused_ops` are this reproduction's extensions: read throughput
+/// vs. simulated device count, iterative SpMM time vs. tile-row-cache
+/// budget, and fused single-sweep vs. two-pass NMF I/O.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig5a", "fig5b", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "tab2", "fig14", "fig15", "fig16", "scale_shards", "cache_sweep",
+    "fig13", "tab2", "fig14", "fig15", "fig16", "scale_shards", "cache_sweep", "fused_ops",
 ];
 
 /// Run one experiment by name.
@@ -153,6 +153,7 @@ pub fn run(bench: &Bench, exp: &str) -> Result<()> {
         "fig16" => fig16(bench),
         "scale_shards" => scale_shards(bench),
         "cache_sweep" => cache_sweep(bench),
+        "fused_ops" => fused_ops(bench),
         "all" => {
             for e in ALL_EXPERIMENTS {
                 if *e == "fig5b" {

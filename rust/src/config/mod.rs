@@ -14,6 +14,8 @@
 //! spmm.cache_bytes   = 2097152
 //! spmm.cache_mb      = 2048       # tile-row cache budget (MiB, 0 = off)
 //! mem.budget_gb      = 8
+//! nmf.fused          = on         # one sweep computes A·Hᵀ + Aᵀ·W + residual
+//! pagerank.tol       = 1e-7       # in-pass L1 residual early stop (0 = off)
 //! ```
 //!
 //! Sections map onto [`crate::io::StoreSpec`], [`crate::spmm::SpmmOpts`]
@@ -144,6 +146,23 @@ impl Config {
     pub fn mem_budget(&self) -> Result<u64> {
         Ok((self.get_f64("mem.budget_gb", 0.0)? * 1e9) as u64)
     }
+
+    /// NMF fused-pass toggle (`nmf.fused`, default **on**): one
+    /// streaming sweep of A per iteration computes `A·Hᵀ`, `Aᵀ·W` and
+    /// the residual reduction together. `off` issues two single-op
+    /// sweeps with identical math — the I/O baseline of the `fused_ops`
+    /// bench experiment.
+    pub fn nmf_fused(&self) -> Result<bool> {
+        self.get_bool("nmf.fused", true)
+    }
+
+    /// PageRank L1 convergence tolerance (`pagerank.tol`, default 0 =
+    /// always run the configured iterations). The residual is computed
+    /// in-pass by the fused combine hook, so early stopping costs no
+    /// extra sweep over the vectors.
+    pub fn pagerank_tol(&self) -> Result<f64> {
+        self.get_f64("pagerank.tol", 0.0)
+    }
 }
 
 #[cfg(test)]
@@ -193,6 +212,16 @@ mod tests {
         assert_eq!(so.threads, 3);
         assert!(!so.vectorize);
         assert_eq!(so.cache_budget_bytes, 0, "cache defaults off");
+    }
+
+    #[test]
+    fn app_keys_default_and_parse() {
+        let c = Config::parse("").unwrap();
+        assert!(c.nmf_fused().unwrap(), "fused passes default on");
+        assert_eq!(c.pagerank_tol().unwrap(), 0.0);
+        let c = Config::parse("nmf.fused = off\npagerank.tol = 1e-6\n").unwrap();
+        assert!(!c.nmf_fused().unwrap());
+        assert!((c.pagerank_tol().unwrap() - 1e-6).abs() < 1e-18);
     }
 
     #[test]

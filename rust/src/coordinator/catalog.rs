@@ -1,11 +1,17 @@
 //! Dataset catalog: materializes registry graphs as store objects.
 //!
-//! For a dataset `name` the catalog manages four objects:
+//! For a dataset `name` the catalog manages these objects:
 //!
 //! * `name.csr` — the CSR image (conversion input, FlashGraph-like input),
+//! * `name.t.csr` — the transposed CSR image (vertex-engine baselines),
 //! * `name.semm` — the tiled SCSR image of A (row = dst, col = src),
-//! * `name.t.semm` — the tiled image of Aᵀ,
-//! * `name.deg` — out-degrees (u32 per vertex).
+//! * `name.deg` — out-degrees (u32 per vertex),
+//! * `name.t.semm` — the tiled image of Aᵀ, built **lazily** and only
+//!   when a caller explicitly asks ([`Catalog::open_adj_t`]): since the
+//!   fused transpose pass computes `Aᵀ·Y` from the single image of A,
+//!   nothing in the standard pipelines (NMF included) needs a second
+//!   tiled image anymore — keeping it out of `ensure` halves the
+//!   default on-store sparse footprint.
 //!
 //! `ensure` is idempotent: it generates + converts only missing objects,
 //! so `make`-style reruns are cheap (format conversion is the one-time
@@ -24,7 +30,9 @@ pub struct DatasetImages {
     pub name: String,
     /// Tiled image of A (row = dst, col = src).
     pub adj: String,
-    /// Tiled image of Aᵀ.
+    /// Tiled image of Aᵀ — the object *name* only; the image itself is
+    /// built lazily by [`Catalog::open_adj_t`] and is absent after a
+    /// plain `ensure` (the fused transpose pass made it optional).
     pub adj_t: String,
     /// CSR image object (baseline input; row = dst).
     pub csr: String,
@@ -83,17 +91,17 @@ impl Catalog {
         let have_all = self.store.exists(&csr_obj)
             && self.store.exists(&csr_t_obj)
             && self.store.exists(&adj_obj)
-            && self.store.exists(&adj_t_obj)
             && self.store.exists(&deg_obj);
         if !have_all {
             let el = spec.build();
             let m = Csr::from_edgelist(&el);
-            // CSR image + conversions (Table 2's pipeline).
+            // CSR image + conversions (Table 2's pipeline). The tiled
+            // image of Aᵀ is NOT built here — the fused transpose pass
+            // made it optional; `open_adj_t` converts it on first use.
             put_csr_image(&self.store, &csr_obj, &m)?;
             convert::convert(&self.store, &csr_obj, &adj_obj, self.tile, self.format)?;
             let mt = m.transpose();
             put_csr_image(&self.store, &csr_t_obj, &mt)?;
-            convert::convert(&self.store, &csr_t_obj, &adj_t_obj, self.tile, self.format)?;
             // Out-degrees: convention (row, col) = (dst, src) → column
             // degree = out-degree.
             let deg = el.col_degrees();
@@ -128,8 +136,15 @@ impl Catalog {
         crate::spmm::SemSource::open(&self.store, &imgs.adj)
     }
 
-    /// Open the tiled image of Aᵀ as a SEM source.
+    /// Open the tiled image of Aᵀ as a SEM source, converting it from
+    /// the transposed CSR image on first use. Nothing in the standard
+    /// pipelines calls this anymore (the fused transpose pass reads
+    /// `Aᵀ·Y` out of the single image of A); it exists for explicit
+    /// transpose-image baselines and differential tests.
     pub fn open_adj_t(&self, imgs: &DatasetImages) -> Result<crate::spmm::SemSource> {
+        if !self.store.exists(&imgs.adj_t) {
+            convert::convert(&self.store, &imgs.csr_t, &imgs.adj_t, self.tile, self.format)?;
+        }
         crate::spmm::SemSource::open(&self.store, &imgs.adj_t)
     }
 
@@ -158,6 +173,10 @@ mod tests {
         let cat = Catalog::new(store.clone(), 256);
         let spec = registry::by_name("twitter").unwrap().shrunk(10);
         let a = cat.ensure(&spec).unwrap();
+        // ensure materializes ONE tiled image: the transpose image is
+        // lazy now that the fused pass computes Aᵀ·Y from A directly.
+        assert!(store.exists(&a.adj));
+        assert!(!store.exists(&a.adj_t), "ensure must not build Aᵀ");
         let written = store.stats.bytes_written.get();
         let b = cat.ensure(&spec).unwrap();
         // Second ensure writes nothing new.

@@ -165,8 +165,8 @@ impl Service {
                 let k: usize = k.parse()?;
                 let iters: usize = iters.parse()?;
                 let imgs = self.ensure(ds)?;
+                // Single image of A: the fused pass supplies Aᵀ·W.
                 let a = Source::Sem(self.catalog.open_adj(&imgs)?);
-                let at = Source::Sem(self.catalog.open_adj_t(&imgs)?);
                 let cfg = nmf::NmfConfig {
                     k,
                     iterations: iters,
@@ -174,9 +174,10 @@ impl Service {
                     spmm: self.opts.clone(),
                     ..Default::default()
                 };
-                let res = nmf::nmf(&a, &at, self.catalog.store(), &cfg)?;
+                let res = nmf::nmf(&a, self.catalog.store(), &cfg)?;
                 Json::obj()
                     .set("residuals", res.residuals.clone())
+                    .set("sparse_passes", res.sparse_passes)
                     .set("secs", res.secs)
             }
             _ => Json::obj().set("error", format!("unknown request: {req}")),

@@ -173,6 +173,7 @@ fn cmd_pagerank(ctx: &Ctx, args: &[String]) -> Result<()> {
     let cfg = pagerank::PageRankConfig {
         iterations: iters,
         vecs_in_mem: vecs,
+        tol: ctx.cfg.pagerank_tol()?,
         spmm: ctx.cfg.spmm_opts()?,
         combine_backend: runtime::backend_from_env(),
         ..Default::default()
@@ -181,11 +182,16 @@ fn cmd_pagerank(ctx: &Ctx, args: &[String]) -> Result<()> {
     let mut top: Vec<(usize, f32)> = pr.iter().copied().enumerate().collect();
     top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     println!(
-        "pagerank {name}: {iters} iters in {} (read {}, wrote {})",
+        "pagerank {name}: {} iters{} in {} (read {}, wrote {})",
+        stats.iters,
+        if stats.converged { " (converged)" } else { "" },
         sem_spmm::util::human_secs(stats.secs),
         sem_spmm::util::human_bytes(stats.bytes_read),
         sem_spmm::util::human_bytes(stats.bytes_written)
     );
+    if let (Some(res), Some(mass)) = (stats.residuals.last(), stats.mass.last()) {
+        println!("  in-pass residual {res:.3e}, probability mass {mass:.6}");
+    }
     print_cache_line(&stats.cache);
     for (v, score) in top.iter().take(5) {
         println!("  v{v}\t{score:.6}");
@@ -247,20 +253,30 @@ fn cmd_nmf(ctx: &Ctx, args: &[String]) -> Result<()> {
     let iters: usize = args.get(2).map(|s| s.parse()).unwrap_or(Ok(5))?;
     let cols: usize = args.get(3).map(|s| s.parse()).unwrap_or(Ok(k))?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    // One stored image of A only — the fused pass computes Aᵀ·W from the
+    // same sweep, so no transpose image is ever materialized.
     let a = Source::Sem(ctx.catalog.open_adj(&imgs)?);
-    let at = Source::Sem(ctx.catalog.open_adj_t(&imgs)?);
     let cfg = nmf::NmfConfig {
         k,
         iterations: iters,
         cols_in_mem: cols,
         spmm: ctx.cfg.spmm_opts()?,
         backend: runtime::backend_from_env(),
+        fused: ctx.cfg.nmf_fused()?,
         ..Default::default()
     };
-    let res = nmf::nmf(&a, &at, &ctx.store, &cfg)?;
+    let res = nmf::nmf(&a, &ctx.store, &cfg)?;
+    let sparse_gb_per_iter = res
+        .sparse_bytes_per_iter
+        .iter()
+        .map(|&b| b as f64 / 1e9)
+        .sum::<f64>()
+        / (iters.max(1)) as f64;
     println!(
-        "nmf {name} k={k}: {iters} iters in {}",
-        sem_spmm::util::human_secs(res.secs)
+        "nmf {name} k={k}: {iters} iters in {} ({} sparse passes, {:.3} GB sparse reads/iter, single image of A)",
+        sem_spmm::util::human_secs(res.secs),
+        res.sparse_passes,
+        sparse_gb_per_iter
     );
     print_cache_line(&res.cache);
     for (i, r) in res.residuals.iter().enumerate() {

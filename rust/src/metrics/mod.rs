@@ -211,6 +211,35 @@ impl CacheStats {
     }
 }
 
+/// Per-op accounting of one fused streaming pass (the op level of the
+/// stats stack, above the cache and store levels): every op of a
+/// [`crate::spmm::StreamPass`] gets one accumulator shared by all
+/// workers, summed into [`crate::spmm::OpStats`] when the pass ends.
+#[derive(Debug, Default)]
+pub struct OpAccum {
+    /// Time inside this op's tile kernels, summed over workers.
+    pub kernel_time: TimeAccum,
+    /// Time in the op's end-of-pass reduction (transpose partial merge
+    /// plus reduce-time hooks; forward ops never touch it).
+    pub reduce_time: TimeAccum,
+    /// Output rows finalized for this op.
+    pub rows_out: Counter,
+}
+
+impl OpAccum {
+    /// New zeroed accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset every figure to zero.
+    pub fn reset(&self) {
+        self.kernel_time.reset();
+        self.reduce_time.reset();
+        self.rows_out.reset();
+    }
+}
+
 /// A simple stopwatch for benchmark harnesses.
 #[derive(Debug)]
 pub struct Stopwatch {
@@ -333,6 +362,20 @@ mod tests {
         m.alloc(10);
         assert_eq!(m.current(), 40);
         assert_eq!(m.peak(), 150);
+    }
+
+    #[test]
+    fn op_accum_accumulates_and_resets() {
+        let a = OpAccum::new();
+        a.kernel_time.add(2_000_000_000);
+        a.reduce_time.add(500_000_000);
+        a.rows_out.add(128);
+        assert!((a.kernel_time.secs() - 2.0).abs() < 1e-9);
+        assert!((a.reduce_time.secs() - 0.5).abs() < 1e-9);
+        assert_eq!(a.rows_out.get(), 128);
+        a.reset();
+        assert_eq!(a.rows_out.get(), 0);
+        assert_eq!(a.kernel_time.secs(), 0.0);
     }
 
     #[test]

@@ -1,34 +1,26 @@
-//! The parallel IM/SEM SpMM drivers (Algorithm 1).
+//! The classic IM/SEM SpMM entry points (Algorithm 1) — now thin
+//! wrappers over the plan/executor architecture.
 //!
-//! Both execution modes share the per-task compute path; they differ only
-//! in where tile-row bytes come from (a memory slice vs. an asynchronous
-//! store read) and where the output row interval goes (the in-memory
-//! NUMA-striped matrix, the merging writer, or nowhere for read-only
-//! benchmarks). Each worker keeps **one prefetch in flight**: it claims
-//! task *B* and submits its read before computing task *A*, so streaming
-//! I/O overlaps compute — with I/O polling the worker never blocks in the
-//! kernel, matching §3.5.
-//!
-//! With a tile-row cache budget (`SpmmOpts::cache_budget_bytes`), the
-//! prefetch consults the per-source [`TileRowCache`] before touching the
-//! I/O engine: a fully resident group skips the store outright, and a
-//! miss submits the group read with the cache fill riding on the ticket
-//! (published by the I/O completion path). Iterative apps that reuse one
-//! [`SemSource`] across SpMM calls therefore stop re-streaming hot tile
-//! rows — with a budget at least the matrix size, every multiply after
-//! the first performs zero store reads at either accounting level.
+//! This module keeps the *data model* of a multiply — where sparse bytes
+//! come from ([`Source`], [`SemSource`]), where finished output rows go
+//! ([`OutputSink`]), and what a run reports ([`SpmmStats`]) — plus the
+//! [`spmm`]/[`spmm_out`]/[`spmv`] entry points every existing caller
+//! uses. The streaming machinery itself (prefetch, cache consultation,
+//! scheduling, kernel dispatch, scatter partials, stats collection) lives
+//! in [`super::exec`], driven by a [`super::plan::StreamPass`] plan;
+//! [`spmm`] builds a single-forward-op plan and is byte-identical in
+//! behavior and stats to the pre-plan engine. Apps that want more from a
+//! sweep — a fused `Aᵀ·Y`, in-pass reductions — build richer plans and
+//! call [`super::exec::run_pass`] directly.
 
-use super::kernel::{mul_tile_dcsc, mul_tile_scsr};
-use super::scheduler::{Scheduler, Task};
+use super::exec;
+use super::plan::{OpStats, StreamPass};
 use super::SpmmOpts;
 use crate::format::tiled::{TiledImage, TiledMeta, HEADER_LEN};
-use crate::format::{dcsc, scsr, TileFormat};
-use crate::io::cache::{GroupFetch, TileRowCache};
-use crate::io::{BufferPool, IoEngine, IoTicket, MergedWriter, ShardedFile, ShardedStore};
+use crate::io::cache::TileRowCache;
+use crate::io::{MergedWriter, ShardedFile, ShardedStore};
 use crate::matrix::{DenseMatrix, NumaConfig, NumaDense};
-use crate::metrics::Stopwatch;
-use anyhow::{bail, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
+use anyhow::Result;
 use std::sync::{Arc, Mutex};
 
 /// A tiled sparse matrix resident on the store (header + index cached in
@@ -160,6 +152,7 @@ impl Source {
 }
 
 /// Where finished output row intervals go.
+#[derive(Clone, Copy)]
 pub enum OutputSink<'a> {
     /// Into an in-memory NUMA-striped matrix (written once, disjointly).
     Mem(&'a NumaDense),
@@ -192,6 +185,10 @@ pub struct SpmmStats {
     pub cache_misses: u64,
     /// Bytes served from the tile-row cache (store traffic avoided).
     pub bytes_from_cache: u64,
+    /// Per-op accounting of the pass (plan order). Classic [`spmm`] runs
+    /// carry exactly one forward entry; fused multi-op passes one entry
+    /// per plan op — kernel seconds, reduce seconds, rows emitted.
+    pub per_op: Vec<OpStats>,
 }
 
 /// Sparse × dense multiply: `out = A · X` with `A` from `src` (n×m tiled
@@ -205,432 +202,8 @@ pub fn spmm(
     opts: &SpmmOpts,
     sink: &OutputSink<'_>,
 ) -> Result<SpmmStats> {
-    let meta = src.meta().clone();
-    if input.nrows != meta.ncols {
-        bail!(
-            "input dense matrix has {} rows but sparse matrix has {} cols",
-            input.nrows,
-            meta.ncols
-        );
-    }
-    if let OutputSink::Mem(out) = sink {
-        if out.nrows != meta.nrows || out.ncols != input.ncols {
-            bail!("output matrix shape mismatch");
-        }
-    }
-    let p = input.ncols;
-    let t = meta.tile;
-    let ntr = meta.n_tile_rows();
-    let grain = opts.grain_tile_rows(p, t);
-    let sched = Scheduler::new(ntr, grain, opts.threads, opts.load_balance);
-    let tasks_done = AtomicU64::new(0);
-
-    // SEM plumbing: per-shard async read workers + pooled buffers, plus
-    // the (optional) tile-row cache consulted before every group read.
-    let io: Option<Arc<IoEngine>> = match src {
-        Source::Mem(_) => None,
-        Source::Sem(s) => {
-            let store = s.file.store();
-            let pool =
-                BufferPool::with_store(opts.buf_pool, opts.threads * 4, store.clone());
-            Some(Arc::new(IoEngine::new(store, opts.io_workers, pool)))
-        }
-    };
-    let cache: Option<Arc<TileRowCache>> = match src {
-        Source::Mem(_) => None,
-        Source::Sem(s) => s.cache_for(opts.cache_budget_bytes),
-    };
-    let (read0, phys0) = match src {
-        Source::Sem(s) => {
-            let store = s.file.store();
-            (store.stats.bytes_read.get(), store.physical_bytes_read())
-        }
-        Source::Mem(_) => (0, 0),
-    };
-    let cache0 = cache.as_ref().map(|c| c.usage()).unwrap_or_default();
-
-    let sw = Stopwatch::start();
-    let result: Result<()> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(opts.threads);
-        for ti in 0..opts.threads {
-            let sched = &sched;
-            let meta = &meta;
-            let tasks_done = &tasks_done;
-            let io = io.clone();
-            let cache = cache.clone();
-            handles.push(scope.spawn(move || -> Result<()> {
-                worker(
-                    ti,
-                    src,
-                    input,
-                    opts,
-                    sink,
-                    sched,
-                    meta,
-                    io.as_deref(),
-                    cache.as_ref(),
-                    tasks_done,
-                )
-            }));
-        }
-        for h in handles {
-            h.join().expect("spmm worker panicked")?;
-        }
-        Ok(())
-    });
-    result?;
-    if let OutputSink::Sem(w) = sink {
-        w.flush();
-    }
-
-    let secs = sw.secs();
-    let (bytes_read, physical_bytes_read) = match src {
-        Source::Sem(s) => {
-            let store = s.file.store();
-            (
-                store.stats.bytes_read.get() - read0,
-                store.physical_bytes_read() - phys0,
-            )
-        }
-        Source::Mem(_) => (0, 0),
-    };
-    let cache_use = cache
-        .as_ref()
-        .map(|c| c.usage().since(&cache0))
-        .unwrap_or_default();
-    Ok(SpmmStats {
-        secs,
-        tasks: tasks_done.load(Ordering::Relaxed),
-        bytes_read,
-        physical_bytes_read,
-        tile_rows: ntr,
-        read_gbps: bytes_read as f64 / 1e9 / secs.max(1e-12),
-        cache_hits: cache_use.hits,
-        cache_misses: cache_use.misses,
-        bytes_from_cache: cache_use.bytes_from_cache,
-    })
-}
-
-/// One worker thread: claim → (prefetch next) → compute → emit. The
-/// prefetch consults the tile-row cache first: a full group hit skips
-/// the I/O engine entirely; a miss submits the group read as before and
-/// publishes the claimed tile rows into the cache on completion.
-#[allow(clippy::too_many_arguments)]
-fn worker(
-    ti: usize,
-    src: &Source,
-    input: &NumaDense,
-    opts: &SpmmOpts,
-    sink: &OutputSink<'_>,
-    sched: &Scheduler,
-    meta: &TiledMeta,
-    io: Option<&IoEngine>,
-    cache: Option<&Arc<TileRowCache>>,
-    tasks_done: &AtomicU64,
-) -> Result<()> {
-    enum Fetch<'b> {
-        Mem(&'b [u8]),
-        Ticket(IoTicket),
-        /// A cache miss: the ticket reads only the plan's tile-row span;
-        /// resident rows outside it ride along as frames.
-        TicketPartial {
-            tk: IoTicket,
-            read_lo: usize,
-            read_hi: usize,
-            resident: Vec<(usize, Arc<Vec<u8>>)>,
-        },
-        /// All tile rows served from the cache: per-row frames, in order.
-        Frames(Vec<Arc<Vec<u8>>>),
-        Empty,
-    }
-    fn do_fetch<'b>(
-        src: &'b Source,
-        io: Option<&IoEngine>,
-        cache: Option<&Arc<TileRowCache>>,
-        task: Task,
-    ) -> Fetch<'b> {
-        match src {
-            Source::Mem(img) => Fetch::Mem(img.tile_rows(task.lo, task.hi)),
-            Source::Sem(s) => {
-                let off0 = s.index[task.lo].0;
-                let (oe, le) = s.index[task.hi - 1];
-                let len = (oe + le - off0) as usize;
-                if len == 0 {
-                    return Fetch::Empty;
-                }
-                let io = io.expect("SEM source requires an I/O engine");
-                match cache {
-                    None => Fetch::Ticket(io.submit(&s.file, s.data_start + off0, len)),
-                    Some(c) => match c.acquire(task.lo, task.hi) {
-                        GroupFetch::Hit(frames) => Fetch::Frames(frames),
-                        // Read only the span covering the missing rows;
-                        // the guard rides on the ticket, published by the
-                        // I/O completion path (or abandoned on error),
-                        // independent of this compute thread.
-                        GroupFetch::Fill(plan) => {
-                            let roff0 = s.index[plan.read_lo].0;
-                            let (roe, rle) = s.index[plan.read_hi - 1];
-                            let rlen = (roe + rle - roff0) as usize;
-                            let tk = io.submit_filling(
-                                &s.file,
-                                s.data_start + roff0,
-                                rlen,
-                                plan.guard,
-                            );
-                            Fetch::TicketPartial {
-                                tk,
-                                read_lo: plan.read_lo,
-                                read_hi: plan.read_hi,
-                                resident: plan.resident,
-                            }
-                        }
-                    },
-                }
-            }
-        }
-    }
-    let fetch = |task: Task| do_fetch(src, io, cache, task);
-
-    /// Per-tile-row slices of a group's contiguous bytes.
-    fn row_slices<'a>(src: &Source, task: Task, bytes: &'a [u8]) -> Vec<&'a [u8]> {
-        let base = tile_row_base(src, task.lo);
-        (task.lo..task.hi)
-            .map(|tr| {
-                let (off, len) = tile_row_extent(src, tr);
-                let s = (off - base) as usize;
-                &bytes[s..s + len as usize]
-            })
-            .collect()
-    }
-
-    /// Per-tile-row slices for a partial fetch: rows inside the read
-    /// span come out of `buf`, the rest from their resident frames
-    /// (every non-empty row outside the span is resident by
-    /// construction of the plan).
-    fn partial_row_slices<'a>(
-        src: &Source,
-        task: Task,
-        read_lo: usize,
-        read_hi: usize,
-        resident: &'a [(usize, Arc<Vec<u8>>)],
-        buf: &'a [u8],
-    ) -> Vec<&'a [u8]> {
-        let base = tile_row_base(src, read_lo);
-        let mut ri = 0usize;
-        (task.lo..task.hi)
-            .map(|tr| -> &'a [u8] {
-                let (off, len) = tile_row_extent(src, tr);
-                if len == 0 {
-                    return &[];
-                }
-                if (read_lo..read_hi).contains(&tr) {
-                    let s = (off - base) as usize;
-                    &buf[s..s + len as usize]
-                } else {
-                    while resident[ri].0 != tr {
-                        ri += 1;
-                    }
-                    resident[ri].1.as_slice()
-                }
-            })
-            .collect()
-    }
-
-    let p = input.ncols;
-    let t = meta.tile;
-    let mut outbuf: Vec<f32> = Vec::new();
-    let mut cur = sched.claim(ti).map(|task| (task, fetch(task)));
-    while let Some((task, f)) = cur {
-        // Prefetch the next group before computing this one.
-        cur = sched.claim(ti).map(|task| (task, fetch(task)));
-
-        let rows_lo = task.lo * t;
-        let rows_hi = (task.hi * t).min(meta.nrows);
-        outbuf.clear();
-        outbuf.resize((rows_hi - rows_lo) * p, 0.0);
-
-        match f {
-            Fetch::Mem(bytes) => {
-                let rows = row_slices(src, task, bytes);
-                process_group(task, &rows, input, opts, meta, &mut outbuf)?
-            }
-            Fetch::Ticket(tk) => {
-                let buf = tk.wait(opts.io_polling)?;
-                let rows = row_slices(src, task, &buf);
-                process_group(task, &rows, input, opts, meta, &mut outbuf)?;
-                drop(rows);
-                if let Some(io) = io {
-                    io.recycle(buf);
-                }
-            }
-            Fetch::TicketPartial {
-                tk,
-                read_lo,
-                read_hi,
-                resident,
-            } => {
-                let buf = tk.wait(opts.io_polling)?;
-                let rows =
-                    partial_row_slices(src, task, read_lo, read_hi, &resident, &buf);
-                process_group(task, &rows, input, opts, meta, &mut outbuf)?;
-                drop(rows);
-                if let Some(io) = io {
-                    io.recycle(buf);
-                }
-            }
-            Fetch::Frames(frames) => {
-                let rows: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
-                process_group(task, &rows, input, opts, meta, &mut outbuf)?;
-            }
-            Fetch::Empty => {}
-        }
-
-        match sink {
-            OutputSink::Mem(out) => unsafe {
-                out.write_rows_unsync(rows_lo, rows_hi, &outbuf);
-            },
-            OutputSink::Sem(w) => {
-                let mut bytes = Vec::with_capacity(outbuf.len() * 4);
-                for &v in &outbuf {
-                    bytes.extend_from_slice(&v.to_le_bytes());
-                }
-                w.write((rows_lo * p * 4) as u64, bytes);
-            }
-            OutputSink::Discard => {
-                // Keep the compiler from eliding the compute.
-                std::hint::black_box(&outbuf);
-            }
-        }
-        tasks_done.fetch_add(1, Ordering::Relaxed);
-    }
-    Ok(())
-}
-
-/// Multiply all tiles of the group `[task.lo, task.hi)` into `outbuf`.
-/// `rows[i]` is tile row `task.lo + i`'s encoded bytes — a slice of the
-/// group's contiguous read buffer, or a cached frame; the two are
-/// byte-identical, so the compute path cannot tell where bytes came from.
-fn process_group(
-    task: Task,
-    rows: &[&[u8]],
-    input: &NumaDense,
-    opts: &SpmmOpts,
-    meta: &TiledMeta,
-    outbuf: &mut [f32],
-) -> Result<()> {
-    let p = input.ncols;
-    let t = meta.tile;
-    let vt = meta.valtype;
-    let rows_lo = task.lo * t;
-    let n_rows = task.hi - task.lo;
-    debug_assert_eq!(rows.len(), n_rows);
-
-    // in/out row slices for one tile at offset `off` of `bytes`.
-    let mul_one = |bytes: &[u8], off: usize, outbuf: &mut [f32]| -> usize {
-        match meta.format {
-            TileFormat::Scsr => {
-                let (view, next) = scsr::parse(bytes, off, vt);
-                let tc = view.tile_col as usize;
-                let c_hi = ((tc + 1) * t).min(meta.ncols);
-                let in_rows = input.rows(tc * t, c_hi);
-                // Output rows of this tile: local to its tile row.
-                mul_tile_scsr(&view, vt, in_rows, outbuf, p, opts.vectorize);
-                next
-            }
-            TileFormat::Dcsc => {
-                let (view, next) = dcsc::parse(bytes, off, vt);
-                let tc = view.tile_col as usize;
-                let c_hi = ((tc + 1) * t).min(meta.ncols);
-                let in_rows = input.rows(tc * t, c_hi);
-                mul_tile_dcsc(&view, vt, in_rows, outbuf, p, opts.vectorize);
-                next
-            }
-        }
-    };
-
-    if opts.cache_blocking && n_rows > 1 {
-        // Super-block execution (Fig 4): regroup the tiles of the whole
-        // group into s×s blocks of tiles and process block by block, so
-        // the input rows touched by a block stay cached across the
-        // group's tile rows.
-        // Build a per-tile-row directory of (tile_col, byte offset).
-        let mut dirs: Vec<Vec<(u32, usize)>> = Vec::with_capacity(n_rows);
-        for bytes in rows {
-            let mut dir = Vec::new();
-            let mut off = 0usize;
-            while off < bytes.len() {
-                let (tc, next) = peek_tile(bytes, off, meta);
-                dir.push((tc, off));
-                off = next;
-            }
-            dirs.push(dir);
-        }
-        let block_tcs = sched_block_tcs(opts, p, t);
-        let ntc = meta.n_tile_cols();
-        let mut cursors = vec![0usize; n_rows];
-        let mut k = 0usize;
-        while k < ntc {
-            let block_end = (k + block_tcs) as u32;
-            for (i, bytes) in rows.iter().enumerate() {
-                let tr = task.lo + i;
-                let r0 = tr * t - rows_lo;
-                let r1 = ((tr + 1) * t).min(meta.nrows) - rows_lo;
-                let orow = &mut outbuf[r0 * p..r1 * p];
-                let dir = &dirs[i];
-                while cursors[i] < dir.len() && dir[cursors[i]].0 < block_end {
-                    mul_one(bytes, dir[cursors[i]].1, orow);
-                    cursors[i] += 1;
-                }
-            }
-            k += block_tcs;
-        }
-    } else {
-        // Plain order: each tile row's tiles in storage order.
-        for (i, bytes) in rows.iter().enumerate() {
-            let tr = task.lo + i;
-            let r0 = tr * t - rows_lo;
-            let r1 = ((tr + 1) * t).min(meta.nrows) - rows_lo;
-            let orow = &mut outbuf[r0 * p..r1 * p];
-            let mut off = 0usize;
-            while off < bytes.len() {
-                off = mul_one(bytes, off, orow);
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Tiles per super-block side: `s / t` where `s = cache / (2·p·4)` rows.
-fn sched_block_tcs(opts: &SpmmOpts, p: usize, t: usize) -> usize {
-    (opts.cache_bytes / (2 * p.max(1) * 4 * t)).max(1)
-}
-
-fn tile_row_base(src: &Source, tr: usize) -> u64 {
-    match src {
-        Source::Mem(img) => img.index[tr].0,
-        Source::Sem(s) => s.index[tr].0,
-    }
-}
-
-fn tile_row_extent(src: &Source, tr: usize) -> (u64, u64) {
-    match src {
-        Source::Mem(img) => img.index[tr],
-        Source::Sem(s) => s.index[tr],
-    }
-}
-
-/// Read a tile's column id and its end offset without decoding entries.
-fn peek_tile(bytes: &[u8], off: usize, meta: &TiledMeta) -> (u32, usize) {
-    match meta.format {
-        TileFormat::Scsr => {
-            let (v, next) = scsr::parse(bytes, off, meta.valtype);
-            (v.tile_col, next)
-        }
-        TileFormat::Dcsc => {
-            let (v, next) = dcsc::parse(bytes, off, meta.valtype);
-            (v.tile_col, next)
-        }
-    }
+    let pass = StreamPass::new().forward(input, *sink);
+    Ok(exec::run_pass(src, &pass, opts)?.stats)
 }
 
 /// Convenience wrapper: multiply into a fresh dense matrix (IM output).
@@ -669,7 +242,7 @@ mod tests {
     use super::*;
     use crate::io::StoreSpec;
 
-    use crate::format::Csr;
+    use crate::format::{Csr, TileFormat};
     use crate::graph::{erdos, rmat};
 
     fn sample_csr(scale: u32, edges: usize, seed: u64) -> Csr {

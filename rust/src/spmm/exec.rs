@@ -1,0 +1,1002 @@
+//! The streaming-pass **executor**: evaluates a [`StreamPass`] plan with
+//! one sweep of the sparse matrix (Algorithm 1, generalized to many ops).
+//!
+//! Both execution modes share the per-task compute path; they differ only
+//! in where tile-row bytes come from (a memory slice vs. an asynchronous
+//! store read). Each worker keeps **one prefetch in flight**: it claims
+//! task *B* and submits its read before computing task *A*, so streaming
+//! I/O overlaps compute — with I/O polling the worker never blocks in the
+//! kernel, matching §3.5.
+//!
+//! With a tile-row cache budget (`SpmmOpts::cache_budget_bytes`), the
+//! prefetch consults the per-source [`TileRowCache`] before touching the
+//! I/O engine: a fully resident group skips the store outright, and a
+//! miss submits the group read with the cache fill riding on the ticket
+//! (published by the I/O completion path). Iterative apps that reuse one
+//! [`super::SemSource`] across passes therefore stop re-streaming hot
+//! tile rows.
+//!
+//! Per tile-row group, the bytes are fetched **once** and every plan op
+//! consumes them in plan order:
+//!
+//! * forward ops multiply into a per-op thread-local buffer, run their
+//!   fused hook, and emit the finished interval to their sink — exactly
+//!   the classic engine path (super-block cache blocking included);
+//! * transpose ops scatter each tile into this worker's per-tile-column
+//!   partial block (lazily allocated, `t × p` floats) — storage order,
+//!   no regrouping: the gather rows are the tile row's own dense rows,
+//!   already hot.
+//!
+//! After the sweep, transpose partials are reduced **in parallel over
+//! tile columns** (each output interval summed across workers by exactly
+//! one reducer — no atomics anywhere), reduce-time hooks run while the
+//! rows are hot, and the interval is written to the op's output.
+
+use super::engine::{OutputSink, Source, SpmmStats};
+use super::kernel::{mul_tile_dcsc, mul_tile_dcsc_t, mul_tile_scsr, mul_tile_scsr_t};
+use super::plan::{OpStats, PassOp, PassResult, StreamPass};
+use super::scheduler::{Scheduler, Task};
+use super::SpmmOpts;
+use crate::format::tiled::TiledMeta;
+use crate::format::{dcsc, scsr, TileFormat};
+use crate::io::cache::{GroupFetch, TileRowCache};
+use crate::io::{BufferPool, IoEngine, IoTicket};
+use crate::matrix::NumaDense;
+use crate::metrics::{OpAccum, Stopwatch};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One worker's transpose partials: per tile column, a lazily allocated
+/// `t × p` block (absent until the first tile of that column is seen).
+type ScatterBlocks = Vec<Option<Box<[f32]>>>;
+
+/// Per-worker, per-op mutable state.
+struct OpState {
+    /// Forward ops: the thread-local output buffer for the current group.
+    outbuf: Vec<f32>,
+    /// Transpose ops: per tile column, this worker's partial block.
+    scatter: Option<ScatterBlocks>,
+    /// Hook accumulator slots.
+    acc: Vec<f64>,
+}
+
+/// What a worker hands back for the reduce phase.
+struct WorkerOut {
+    /// Per op: this worker's hook accumulator.
+    accs: Vec<Vec<f64>>,
+    /// Per op: the scatter partials (`Some` for transpose ops).
+    scatters: Vec<Option<ScatterBlocks>>,
+}
+
+/// Execute `pass` with one streaming sweep of `src`.
+///
+/// A single-forward-op plan is byte-identical in behavior and stats to
+/// the classic [`super::spmm`] engine (which is now a wrapper over this).
+pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<PassResult> {
+    let meta = src.meta().clone();
+    if pass.ops.is_empty() {
+        bail!("stream pass has no ops");
+    }
+    for op in &pass.ops {
+        match op {
+            PassOp::Forward(f) => {
+                if f.input.nrows != meta.ncols {
+                    bail!(
+                        "input dense matrix has {} rows but sparse matrix has {} cols",
+                        f.input.nrows,
+                        meta.ncols
+                    );
+                }
+                if let OutputSink::Mem(out) = &f.sink {
+                    if out.nrows != meta.nrows || out.ncols != f.input.ncols {
+                        bail!("output matrix shape mismatch");
+                    }
+                }
+            }
+            PassOp::Transpose(t) => {
+                if t.input.nrows != meta.nrows {
+                    bail!(
+                        "transpose input has {} rows but sparse matrix has {} rows",
+                        t.input.nrows,
+                        meta.nrows
+                    );
+                }
+                if t.output.nrows != meta.ncols || t.output.ncols != t.input.ncols {
+                    bail!("transpose output shape mismatch");
+                }
+            }
+        }
+    }
+    // Reject aliased dense operands: Mem sinks and transpose outputs are
+    // written through unsynchronized raw-pointer paths while op inputs
+    // are read concurrently from other workers, so one matrix object
+    // must never appear on both sides (or as two write targets) of the
+    // same pass — otherwise a fully safe caller could construct a data
+    // race.
+    {
+        let mut reads: Vec<*const NumaDense> = Vec::new();
+        let mut writes: Vec<*const NumaDense> = Vec::new();
+        for op in &pass.ops {
+            match op {
+                PassOp::Forward(f) => {
+                    reads.push(f.input as *const NumaDense);
+                    if let OutputSink::Mem(out) = &f.sink {
+                        writes.push(*out as *const NumaDense);
+                    }
+                }
+                PassOp::Transpose(t) => {
+                    reads.push(t.input as *const NumaDense);
+                    writes.push(t.output as *const NumaDense);
+                }
+            }
+        }
+        for (i, w) in writes.iter().enumerate() {
+            if reads.iter().any(|r| std::ptr::eq(*r, *w))
+                || writes[..i].iter().any(|w2| std::ptr::eq(*w2, *w))
+            {
+                bail!(
+                    "stream pass operands alias: a dense matrix is both \
+                     written and read (or written twice) in one pass"
+                );
+            }
+        }
+    }
+    // Grain sized for the widest op (single-op plans: identical to the
+    // classic engine).
+    let pmax = pass.ops.iter().map(|o| o.cols()).max().unwrap_or(1);
+    let t = meta.tile;
+    let ntr = meta.n_tile_rows();
+    let ntc = meta.n_tile_cols();
+    let grain = opts.grain_tile_rows(pmax, t);
+    let sched = Scheduler::new(ntr, grain, opts.threads, opts.load_balance);
+    let tasks_done = AtomicU64::new(0);
+
+    // SEM plumbing: per-shard async read workers + pooled buffers, plus
+    // the (optional) tile-row cache consulted before every group read.
+    let io: Option<Arc<IoEngine>> = match src {
+        Source::Mem(_) => None,
+        Source::Sem(s) => {
+            let store = s.file.store();
+            let pool = BufferPool::with_store(opts.buf_pool, opts.threads * 4, store.clone());
+            Some(Arc::new(IoEngine::new(store, opts.io_workers, pool)))
+        }
+    };
+    let cache: Option<Arc<TileRowCache>> = match src {
+        Source::Mem(_) => None,
+        Source::Sem(s) => s.cache_for(opts.cache_budget_bytes),
+    };
+    let (read0, phys0) = match src {
+        Source::Sem(s) => {
+            let store = s.file.store();
+            (store.stats.bytes_read.get(), store.physical_bytes_read())
+        }
+        Source::Mem(_) => (0, 0),
+    };
+    let cache0 = cache.as_ref().map(|c| c.usage()).unwrap_or_default();
+    let per_op_acc: Vec<OpAccum> = pass.ops.iter().map(|_| OpAccum::new()).collect();
+
+    let sw = Stopwatch::start();
+    let worker_outs: Result<Vec<WorkerOut>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(opts.threads);
+        for ti in 0..opts.threads {
+            let sched = &sched;
+            let meta = &meta;
+            let tasks_done = &tasks_done;
+            let per_op_acc = &per_op_acc;
+            let io = io.clone();
+            let cache = cache.clone();
+            let ops = &pass.ops;
+            handles.push(scope.spawn(move || -> Result<WorkerOut> {
+                worker(
+                    ti,
+                    src,
+                    ops,
+                    opts,
+                    sched,
+                    meta,
+                    ntc,
+                    io.as_deref(),
+                    cache.as_ref(),
+                    tasks_done,
+                    per_op_acc,
+                )
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pass worker panicked"))
+            .collect()
+    });
+    let worker_outs = worker_outs?;
+    for op in &pass.ops {
+        if let PassOp::Forward(f) = op {
+            if let OutputSink::Sem(w) = &f.sink {
+                w.flush();
+            }
+        }
+    }
+
+    // Sum worker hook accumulators.
+    let mut accs: Vec<Vec<f64>> = pass.ops.iter().map(|o| vec![0f64; o.acc_len()]).collect();
+    for w in &worker_outs {
+        for (dst, src_acc) in accs.iter_mut().zip(&w.accs) {
+            for (d, s) in dst.iter_mut().zip(src_acc) {
+                *d += *s;
+            }
+        }
+    }
+
+    // Reduce phase: merge transpose partials, run reduce-time hooks,
+    // write output intervals.
+    for (opi, op) in pass.ops.iter().enumerate() {
+        let PassOp::Transpose(top) = op else { continue };
+        let rsw = Instant::now();
+        let blocks: Vec<&ScatterBlocks> = worker_outs
+            .iter()
+            .map(|w| w.scatters[opi].as_ref().expect("transpose state"))
+            .collect();
+        let p = top.input.ncols;
+        let reducers = opts.threads.min(ntc).max(1);
+        let chunk = ntc.div_ceil(reducers).max(1);
+        let red_accs: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let mut hs = Vec::with_capacity(reducers);
+            for w in 0..reducers {
+                let lo = w * chunk;
+                let hi = ((w + 1) * chunk).min(ntc);
+                if lo >= hi {
+                    continue;
+                }
+                let blocks = &blocks;
+                let meta = &meta;
+                hs.push(scope.spawn(move || {
+                    let mut acc = vec![0f64; top.acc_len];
+                    let mut buf: Vec<f32> = Vec::new();
+                    for j in lo..hi {
+                        let rows_lo = j * t;
+                        let rows_hi = ((j + 1) * t).min(meta.ncols);
+                        buf.clear();
+                        buf.resize((rows_hi - rows_lo) * p, 0.0);
+                        for wb in blocks {
+                            if let Some(b) = &wb[j] {
+                                for (d, s) in buf.iter_mut().zip(b.iter()) {
+                                    *d += *s;
+                                }
+                            }
+                        }
+                        if let Some(h) = &top.hook {
+                            h(rows_lo, &mut buf, &mut acc);
+                        }
+                        // Reducers own disjoint tile columns → disjoint
+                        // output row intervals.
+                        unsafe { top.output.write_rows_unsync(rows_lo, rows_hi, &buf) };
+                    }
+                    acc
+                }));
+            }
+            hs.into_iter()
+                .map(|h| h.join().expect("reduce worker panicked"))
+                .collect()
+        });
+        for ra in red_accs {
+            for (d, s) in accs[opi].iter_mut().zip(&ra) {
+                *d += *s;
+            }
+        }
+        per_op_acc[opi].rows_out.add(meta.ncols as u64);
+        per_op_acc[opi]
+            .reduce_time
+            .add(rsw.elapsed().as_nanos() as u64);
+    }
+
+    let secs = sw.secs();
+    let (bytes_read, physical_bytes_read) = match src {
+        Source::Sem(s) => {
+            let store = s.file.store();
+            (
+                store.stats.bytes_read.get() - read0,
+                store.physical_bytes_read() - phys0,
+            )
+        }
+        Source::Mem(_) => (0, 0),
+    };
+    let cache_use = cache
+        .as_ref()
+        .map(|c| c.usage().since(&cache0))
+        .unwrap_or_default();
+    let per_op: Vec<OpStats> = pass
+        .ops
+        .iter()
+        .zip(&per_op_acc)
+        .map(|(op, a)| OpStats {
+            kind: op.kind(),
+            cols: op.cols(),
+            kernel_secs: a.kernel_time.secs(),
+            reduce_secs: a.reduce_time.secs(),
+            rows_out: a.rows_out.get(),
+        })
+        .collect();
+    Ok(PassResult {
+        stats: SpmmStats {
+            secs,
+            tasks: tasks_done.load(Ordering::Relaxed),
+            bytes_read,
+            physical_bytes_read,
+            tile_rows: ntr,
+            read_gbps: bytes_read as f64 / 1e9 / secs.max(1e-12),
+            cache_hits: cache_use.hits,
+            cache_misses: cache_use.misses,
+            bytes_from_cache: cache_use.bytes_from_cache,
+            per_op,
+        },
+        accs,
+    })
+}
+
+/// One worker thread: claim → (prefetch next) → fetch → run every op →
+/// emit. The prefetch consults the tile-row cache first: a full group hit
+/// skips the I/O engine entirely; a miss submits the group read as before
+/// and publishes the claimed tile rows into the cache on completion.
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    ti: usize,
+    src: &Source,
+    ops: &[PassOp<'_>],
+    opts: &SpmmOpts,
+    sched: &Scheduler,
+    meta: &TiledMeta,
+    ntc: usize,
+    io: Option<&IoEngine>,
+    cache: Option<&Arc<TileRowCache>>,
+    tasks_done: &AtomicU64,
+    per_op_acc: &[OpAccum],
+) -> Result<WorkerOut> {
+    enum Fetch<'b> {
+        Mem(&'b [u8]),
+        Ticket(IoTicket),
+        /// A cache miss: the ticket reads only the plan's tile-row span;
+        /// resident rows outside it ride along as frames.
+        TicketPartial {
+            tk: IoTicket,
+            read_lo: usize,
+            read_hi: usize,
+            resident: Vec<(usize, Arc<Vec<u8>>)>,
+        },
+        /// All tile rows served from the cache: per-row frames, in order.
+        Frames(Vec<Arc<Vec<u8>>>),
+        Empty,
+    }
+    fn do_fetch<'b>(
+        src: &'b Source,
+        io: Option<&IoEngine>,
+        cache: Option<&Arc<TileRowCache>>,
+        task: Task,
+    ) -> Fetch<'b> {
+        match src {
+            Source::Mem(img) => Fetch::Mem(img.tile_rows(task.lo, task.hi)),
+            Source::Sem(s) => {
+                let off0 = s.index[task.lo].0;
+                let (oe, le) = s.index[task.hi - 1];
+                let len = (oe + le - off0) as usize;
+                if len == 0 {
+                    return Fetch::Empty;
+                }
+                let io = io.expect("SEM source requires an I/O engine");
+                match cache {
+                    None => Fetch::Ticket(io.submit(&s.file, s.data_start + off0, len)),
+                    Some(c) => match c.acquire(task.lo, task.hi) {
+                        GroupFetch::Hit(frames) => Fetch::Frames(frames),
+                        // Read only the span covering the missing rows;
+                        // the guard rides on the ticket, published by the
+                        // I/O completion path (or abandoned on error),
+                        // independent of this compute thread.
+                        GroupFetch::Fill(plan) => {
+                            let roff0 = s.index[plan.read_lo].0;
+                            let (roe, rle) = s.index[plan.read_hi - 1];
+                            let rlen = (roe + rle - roff0) as usize;
+                            let tk = io.submit_filling(
+                                &s.file,
+                                s.data_start + roff0,
+                                rlen,
+                                plan.guard,
+                            );
+                            Fetch::TicketPartial {
+                                tk,
+                                read_lo: plan.read_lo,
+                                read_hi: plan.read_hi,
+                                resident: plan.resident,
+                            }
+                        }
+                    },
+                }
+            }
+        }
+    }
+    let fetch = |task: Task| do_fetch(src, io, cache, task);
+
+    /// Per-tile-row slices of a group's contiguous bytes.
+    fn row_slices<'a>(src: &Source, task: Task, bytes: &'a [u8]) -> Vec<&'a [u8]> {
+        let base = tile_row_base(src, task.lo);
+        (task.lo..task.hi)
+            .map(|tr| {
+                let (off, len) = tile_row_extent(src, tr);
+                let s = (off - base) as usize;
+                &bytes[s..s + len as usize]
+            })
+            .collect()
+    }
+
+    /// Per-tile-row slices for a partial fetch: rows inside the read
+    /// span come out of `buf`, the rest from their resident frames
+    /// (every non-empty row outside the span is resident by
+    /// construction of the plan).
+    fn partial_row_slices<'a>(
+        src: &Source,
+        task: Task,
+        read_lo: usize,
+        read_hi: usize,
+        resident: &'a [(usize, Arc<Vec<u8>>)],
+        buf: &'a [u8],
+    ) -> Vec<&'a [u8]> {
+        let base = tile_row_base(src, read_lo);
+        let mut ri = 0usize;
+        (task.lo..task.hi)
+            .map(|tr| -> &'a [u8] {
+                let (off, len) = tile_row_extent(src, tr);
+                if len == 0 {
+                    return &[];
+                }
+                if (read_lo..read_hi).contains(&tr) {
+                    let s = (off - base) as usize;
+                    &buf[s..s + len as usize]
+                } else {
+                    while resident[ri].0 != tr {
+                        ri += 1;
+                    }
+                    resident[ri].1.as_slice()
+                }
+            })
+            .collect()
+    }
+
+    let mut states: Vec<OpState> = ops
+        .iter()
+        .map(|op| OpState {
+            outbuf: Vec::new(),
+            scatter: match op {
+                PassOp::Forward(_) => None,
+                PassOp::Transpose(_) => Some(vec![None; ntc]),
+            },
+            acc: vec![0f64; op.acc_len()],
+        })
+        .collect();
+
+    let mut cur = sched.claim(ti).map(|task| (task, fetch(task)));
+    while let Some((task, f)) = cur {
+        // Prefetch the next group before computing this one.
+        cur = sched.claim(ti).map(|task| (task, fetch(task)));
+
+        match f {
+            Fetch::Mem(bytes) => {
+                let rows = row_slices(src, task, bytes);
+                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+            }
+            Fetch::Ticket(tk) => {
+                let buf = tk.wait(opts.io_polling)?;
+                let rows = row_slices(src, task, &buf);
+                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                drop(rows);
+                if let Some(io) = io {
+                    io.recycle(buf);
+                }
+            }
+            Fetch::TicketPartial {
+                tk,
+                read_lo,
+                read_hi,
+                resident,
+            } => {
+                let buf = tk.wait(opts.io_polling)?;
+                let rows = partial_row_slices(src, task, read_lo, read_hi, &resident, &buf);
+                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                drop(rows);
+                if let Some(io) = io {
+                    io.recycle(buf);
+                }
+            }
+            Fetch::Frames(frames) => {
+                let rows: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
+                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+            }
+            Fetch::Empty => {
+                // No bytes on the store for this group: forward ops still
+                // emit their (all-zero) output rows.
+                let rows: Vec<&[u8]> = vec![&[]; task.hi - task.lo];
+                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+            }
+        }
+        tasks_done.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok(WorkerOut {
+        accs: states.iter().map(|s| s.acc.clone()).collect(),
+        scatters: states.into_iter().map(|s| s.scatter).collect(),
+    })
+}
+
+/// Run every plan op over one fetched tile-row group. `rows[i]` is tile
+/// row `task.lo + i`'s encoded bytes — a slice of the group's contiguous
+/// read buffer, or a cached frame; the two are byte-identical, so the
+/// compute path cannot tell where bytes came from.
+fn process_group_ops(
+    task: Task,
+    rows: &[&[u8]],
+    ops: &[PassOp<'_>],
+    states: &mut [OpState],
+    opts: &SpmmOpts,
+    meta: &TiledMeta,
+    per_op_acc: &[OpAccum],
+) -> Result<()> {
+    let t = meta.tile;
+    let rows_lo = task.lo * t;
+    let rows_hi = (task.hi * t).min(meta.nrows);
+    for ((op, st), acc) in ops.iter().zip(states.iter_mut()).zip(per_op_acc) {
+        match op {
+            PassOp::Forward(fop) => {
+                let p = fop.input.ncols;
+                st.outbuf.clear();
+                st.outbuf.resize((rows_hi - rows_lo) * p, 0.0);
+                let t0 = Instant::now();
+                process_group_forward(task, rows, fop.input, opts, meta, &mut st.outbuf)?;
+                acc.kernel_time.add(t0.elapsed().as_nanos() as u64);
+                if let Some(h) = &fop.hook {
+                    h(rows_lo, &mut st.outbuf, &mut st.acc);
+                }
+                match &fop.sink {
+                    OutputSink::Mem(out) => unsafe {
+                        out.write_rows_unsync(rows_lo, rows_hi, &st.outbuf);
+                    },
+                    OutputSink::Sem(w) => {
+                        let mut bytes = Vec::with_capacity(st.outbuf.len() * 4);
+                        for &v in &st.outbuf {
+                            bytes.extend_from_slice(&v.to_le_bytes());
+                        }
+                        w.write((rows_lo * p * 4) as u64, bytes);
+                    }
+                    OutputSink::Discard => {
+                        // Keep the compiler from eliding the compute.
+                        std::hint::black_box(&st.outbuf);
+                    }
+                }
+                acc.rows_out.add((rows_hi - rows_lo) as u64);
+            }
+            PassOp::Transpose(top) => {
+                let t0 = Instant::now();
+                scatter_group(
+                    task,
+                    rows,
+                    top.input,
+                    meta,
+                    opts,
+                    st.scatter.as_mut().expect("transpose state"),
+                );
+                acc.kernel_time.add(t0.elapsed().as_nanos() as u64);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Multiply all tiles of the group `[task.lo, task.hi)` into `outbuf`
+/// (the forward / gather direction — the classic engine compute path).
+fn process_group_forward(
+    task: Task,
+    rows: &[&[u8]],
+    input: &NumaDense,
+    opts: &SpmmOpts,
+    meta: &TiledMeta,
+    outbuf: &mut [f32],
+) -> Result<()> {
+    let p = input.ncols;
+    let t = meta.tile;
+    let vt = meta.valtype;
+    let rows_lo = task.lo * t;
+    let n_rows = task.hi - task.lo;
+    debug_assert_eq!(rows.len(), n_rows);
+
+    // in/out row slices for one tile at offset `off` of `bytes`.
+    let mul_one = |bytes: &[u8], off: usize, outbuf: &mut [f32]| -> usize {
+        match meta.format {
+            TileFormat::Scsr => {
+                let (view, next) = scsr::parse(bytes, off, vt);
+                let tc = view.tile_col as usize;
+                let c_hi = ((tc + 1) * t).min(meta.ncols);
+                let in_rows = input.rows(tc * t, c_hi);
+                // Output rows of this tile: local to its tile row.
+                mul_tile_scsr(&view, vt, in_rows, outbuf, p, opts.vectorize);
+                next
+            }
+            TileFormat::Dcsc => {
+                let (view, next) = dcsc::parse(bytes, off, vt);
+                let tc = view.tile_col as usize;
+                let c_hi = ((tc + 1) * t).min(meta.ncols);
+                let in_rows = input.rows(tc * t, c_hi);
+                mul_tile_dcsc(&view, vt, in_rows, outbuf, p, opts.vectorize);
+                next
+            }
+        }
+    };
+
+    if opts.cache_blocking && n_rows > 1 {
+        // Super-block execution (Fig 4): regroup the tiles of the whole
+        // group into s×s blocks of tiles and process block by block, so
+        // the input rows touched by a block stay cached across the
+        // group's tile rows.
+        // Build a per-tile-row directory of (tile_col, byte offset).
+        let mut dirs: Vec<Vec<(u32, usize)>> = Vec::with_capacity(n_rows);
+        for bytes in rows {
+            let mut dir = Vec::new();
+            let mut off = 0usize;
+            while off < bytes.len() {
+                let (tc, next) = peek_tile(bytes, off, meta);
+                dir.push((tc, off));
+                off = next;
+            }
+            dirs.push(dir);
+        }
+        let block_tcs = sched_block_tcs(opts, p, t);
+        let ntc = meta.n_tile_cols();
+        let mut cursors = vec![0usize; n_rows];
+        let mut k = 0usize;
+        while k < ntc {
+            let block_end = (k + block_tcs) as u32;
+            for (i, bytes) in rows.iter().enumerate() {
+                let tr = task.lo + i;
+                let r0 = tr * t - rows_lo;
+                let r1 = ((tr + 1) * t).min(meta.nrows) - rows_lo;
+                let orow = &mut outbuf[r0 * p..r1 * p];
+                let dir = &dirs[i];
+                while cursors[i] < dir.len() && dir[cursors[i]].0 < block_end {
+                    mul_one(bytes, dir[cursors[i]].1, orow);
+                    cursors[i] += 1;
+                }
+            }
+            k += block_tcs;
+        }
+    } else {
+        // Plain order: each tile row's tiles in storage order.
+        for (i, bytes) in rows.iter().enumerate() {
+            let tr = task.lo + i;
+            let r0 = tr * t - rows_lo;
+            let r1 = ((tr + 1) * t).min(meta.nrows) - rows_lo;
+            let orow = &mut outbuf[r0 * p..r1 * p];
+            let mut off = 0usize;
+            while off < bytes.len() {
+                off = mul_one(bytes, off, orow);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Scatter all tiles of the group into this worker's per-tile-column
+/// partial blocks (the transpose direction). Storage order — the gather
+/// side of a scatter is the tile row's own dense rows, which stay hot
+/// regardless of tile order, so super-block regrouping buys nothing here.
+fn scatter_group(
+    task: Task,
+    rows: &[&[u8]],
+    input: &NumaDense,
+    meta: &TiledMeta,
+    opts: &SpmmOpts,
+    blocks: &mut [Option<Box<[f32]>>],
+) {
+    let p = input.ncols;
+    let t = meta.tile;
+    let vt = meta.valtype;
+    for (i, bytes) in rows.iter().enumerate() {
+        if bytes.is_empty() {
+            continue;
+        }
+        let tr = task.lo + i;
+        let r_lo = tr * t;
+        let r_hi = ((tr + 1) * t).min(meta.nrows);
+        let in_rows = input.rows(r_lo, r_hi);
+        let mut off = 0usize;
+        while off < bytes.len() {
+            match meta.format {
+                TileFormat::Scsr => {
+                    let (view, next) = scsr::parse(bytes, off, vt);
+                    let tc = view.tile_col as usize;
+                    let c_hi = ((tc + 1) * t).min(meta.ncols);
+                    let block = blocks[tc].get_or_insert_with(|| {
+                        vec![0f32; (c_hi - tc * t) * p].into_boxed_slice()
+                    });
+                    mul_tile_scsr_t(&view, vt, in_rows, block, p, opts.vectorize);
+                    off = next;
+                }
+                TileFormat::Dcsc => {
+                    let (view, next) = dcsc::parse(bytes, off, vt);
+                    let tc = view.tile_col as usize;
+                    let c_hi = ((tc + 1) * t).min(meta.ncols);
+                    let block = blocks[tc].get_or_insert_with(|| {
+                        vec![0f32; (c_hi - tc * t) * p].into_boxed_slice()
+                    });
+                    mul_tile_dcsc_t(&view, vt, in_rows, block, p, opts.vectorize);
+                    off = next;
+                }
+            }
+        }
+    }
+}
+
+/// Tiles per super-block side: `s / t` where `s = cache / (2·p·4)` rows.
+fn sched_block_tcs(opts: &SpmmOpts, p: usize, t: usize) -> usize {
+    (opts.cache_bytes / (2 * p.max(1) * 4 * t)).max(1)
+}
+
+fn tile_row_base(src: &Source, tr: usize) -> u64 {
+    match src {
+        Source::Mem(img) => img.index[tr].0,
+        Source::Sem(s) => s.index[tr].0,
+    }
+}
+
+fn tile_row_extent(src: &Source, tr: usize) -> (u64, u64) {
+    match src {
+        Source::Mem(img) => img.index[tr],
+        Source::Sem(s) => s.index[tr],
+    }
+}
+
+/// Read a tile's column id and its end offset without decoding entries.
+fn peek_tile(bytes: &[u8], off: usize, meta: &TiledMeta) -> (u32, usize) {
+    match meta.format {
+        TileFormat::Scsr => {
+            let (v, next) = scsr::parse(bytes, off, meta.valtype);
+            (v.tile_col, next)
+        }
+        TileFormat::Dcsc => {
+            let (v, next) = dcsc::parse(bytes, off, meta.valtype);
+            (v.tile_col, next)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::tiled::TiledImage;
+    use crate::format::{Csr, TileFormat};
+    use crate::graph::rmat;
+    use crate::matrix::DenseMatrix;
+    use crate::spmm::engine;
+    use crate::spmm::plan::OpKind;
+
+    fn sample_csr(scale: u32, edges: usize, seed: u64) -> Csr {
+        let el = rmat::generate(scale, edges, rmat::RmatParams::default(), seed);
+        Csr::from_edgelist(&el)
+    }
+
+    fn ncfg(tile: usize, n: usize, opts: &SpmmOpts) -> crate::matrix::NumaConfig {
+        engine::numa_config(tile, n, opts)
+    }
+
+    #[test]
+    fn transpose_op_matches_transposed_reference() {
+        // Aᵀ·Y via scatter over A's image == A'·Y via the gather engine
+        // over an explicitly transposed image, for both tile formats.
+        let m = sample_csr(9, 6000, 21);
+        let mt = m.transpose();
+        for fmt in [TileFormat::Scsr, TileFormat::Dcsc] {
+            let img = Arc::new(TiledImage::build(&m, 128, fmt));
+            let img_t = Arc::new(TiledImage::build(&mt, 128, fmt));
+            let p = 4;
+            let y = DenseMatrix::random(m.nrows, p, 31);
+            let opts = SpmmOpts {
+                threads: 3,
+                ..Default::default()
+            };
+            let cfg = ncfg(128, m.nrows.max(m.ncols), &opts);
+            let ynd = NumaDense::from_dense(&y, cfg);
+            let out = NumaDense::zeros(m.ncols, p, cfg);
+            let pass = StreamPass::new().transpose(&ynd, &out);
+            let r = run_pass(&Source::Mem(img), &pass, &opts).unwrap();
+            assert_eq!(r.stats.per_op.len(), 1);
+            assert_eq!(r.stats.per_op[0].kind, OpKind::Transpose);
+            assert_eq!(r.stats.per_op[0].rows_out, m.ncols as u64);
+            let got = out.to_dense();
+            let (want, _) = engine::spmm_out(&Source::Mem(img_t), &y, &opts).unwrap();
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-3, "{fmt:?}: transpose diff {diff}");
+        }
+    }
+
+    #[test]
+    fn fused_forward_and_transpose_match_separate_passes() {
+        // One sweep computing A·X and Aᵀ·Y must equal the two ops run in
+        // separate passes — fusion changes I/O, never values.
+        let m = sample_csr(9, 6000, 23);
+        let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
+        let p = 4;
+        let opts = SpmmOpts {
+            threads: 3,
+            ..Default::default()
+        };
+        let cfg = ncfg(128, m.nrows.max(m.ncols), &opts);
+        let x = NumaDense::from_dense(&DenseMatrix::random(m.ncols, p, 5), cfg);
+        let y = NumaDense::from_dense(&DenseMatrix::random(m.nrows, p, 6), cfg);
+
+        let fw_fused = NumaDense::zeros(m.nrows, p, cfg);
+        let tp_fused = NumaDense::zeros(m.ncols, p, cfg);
+        let pass = StreamPass::new()
+            .forward(&x, OutputSink::Mem(&fw_fused))
+            .transpose(&y, &tp_fused);
+        let r = run_pass(&Source::Mem(img.clone()), &pass, &opts).unwrap();
+        assert_eq!(r.stats.per_op.len(), 2);
+
+        let fw_solo = NumaDense::zeros(m.nrows, p, cfg);
+        let tp_solo = NumaDense::zeros(m.ncols, p, cfg);
+        let r1 = run_pass(
+            &Source::Mem(img.clone()),
+            &StreamPass::new().forward(&x, OutputSink::Mem(&fw_solo)),
+            &opts,
+        )
+        .unwrap();
+        let r2 = run_pass(
+            &Source::Mem(img),
+            &StreamPass::new().transpose(&y, &tp_solo),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(r1.stats.per_op[0].kind, OpKind::Forward);
+        assert_eq!(r2.stats.per_op[0].kind, OpKind::Transpose);
+        assert!(
+            fw_fused.to_dense().max_abs_diff(&fw_solo.to_dense()) < 1e-4,
+            "forward outputs diverge"
+        );
+        assert!(
+            tp_fused.to_dense().max_abs_diff(&tp_solo.to_dense()) < 1e-3,
+            "transpose outputs diverge"
+        );
+    }
+
+    /// Dot / squared-norm / column-sum reductions computed in-pass agree
+    /// with post-hoc sweeps over the materialized output.
+    #[test]
+    fn hook_reductions_match_post_hoc_sweeps() {
+        let m = sample_csr(9, 5000, 29);
+        let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
+        let p = 3;
+        let opts = SpmmOpts {
+            threads: 3,
+            ..Default::default()
+        };
+        let cfg = ncfg(128, m.nrows.max(m.ncols), &opts);
+        let xm = DenseMatrix::random(m.ncols, p, 8);
+        let other = DenseMatrix::random(m.nrows, p, 9);
+        let x = NumaDense::from_dense(&xm, cfg);
+        let out = NumaDense::zeros(m.nrows, p, cfg);
+        // acc: [0] = <out, other>, [1] = ||out||², [2..2+p] = column sums.
+        let hook: crate::spmm::plan::RowHook =
+            Box::new(|rows_lo: usize, rows: &mut [f32], acc: &mut [f64]| {
+            let o = &other.data[rows_lo * p..rows_lo * p + rows.len()];
+            for (i, &v) in rows.iter().enumerate() {
+                acc[0] += v as f64 * o[i] as f64;
+                acc[1] += v as f64 * v as f64;
+                acc[2 + i % p] += v as f64;
+            }
+        });
+        let pass = StreamPass::new().forward_with(&x, OutputSink::Mem(&out), 2 + p, hook);
+        let r = run_pass(&Source::Mem(img), &pass, &opts).unwrap();
+        let od = out.to_dense();
+        let mut want = vec![0f64; 2 + p];
+        for (i, &v) in od.data.iter().enumerate() {
+            want[0] += v as f64 * other.data[i] as f64;
+            want[1] += v as f64 * v as f64;
+            want[2 + i % p] += v as f64;
+        }
+        for (k, (a, b)) in r.accs[0].iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                "reduction {k}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn hook_can_map_rows_before_the_sink() {
+        // A hook that rewrites the interval in place must be observed by
+        // the sink — PageRank's fused damping combine relies on this.
+        let m = sample_csr(8, 2000, 33);
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let opts = SpmmOpts::sequential();
+        let cfg = ncfg(64, m.nrows.max(m.ncols), &opts);
+        let xm = DenseMatrix::random(m.ncols, 1, 3);
+        let x = NumaDense::from_dense(&xm, cfg);
+        let out = NumaDense::zeros(m.nrows, 1, cfg);
+        let hook: crate::spmm::plan::RowHook =
+            Box::new(|_lo: usize, rows: &mut [f32], _acc: &mut [f64]| {
+            for v in rows.iter_mut() {
+                *v = 2.0 * *v + 1.0;
+            }
+        });
+        let pass = StreamPass::new().forward_with(&x, OutputSink::Mem(&out), 0, hook);
+        run_pass(&Source::Mem(img.clone()), &pass, &opts).unwrap();
+        let (plain, _) = engine::spmm_out(&Source::Mem(img), &xm, &opts).unwrap();
+        let got = out.to_dense();
+        for (a, &b) in got.data.iter().zip(&plain.data) {
+            assert!((a - (2.0 * b + 1.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn aliased_operands_rejected() {
+        // A matrix appearing as both a write target and an input of the
+        // same pass would let safe code race; run_pass must refuse.
+        let m = sample_csr(8, 1500, 37);
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let opts = SpmmOpts::sequential();
+        let cfg = ncfg(64, m.nrows.max(m.ncols), &opts);
+        let shared = NumaDense::zeros(m.nrows, 2, cfg);
+        let tout = NumaDense::zeros(m.ncols, 2, cfg);
+        // Forward writes `shared` while the transpose reads it.
+        let pass = StreamPass::new()
+            .forward(&shared, OutputSink::Mem(&shared))
+            .transpose(&shared, &tout);
+        assert!(run_pass(&Source::Mem(img.clone()), &pass, &opts).is_err());
+        // Two transpose ops writing the same output also race.
+        let y = NumaDense::zeros(m.nrows, 2, cfg);
+        let pass = StreamPass::new().transpose(&y, &tout).transpose(&y, &tout);
+        assert!(run_pass(&Source::Mem(img), &pass, &opts).is_err());
+    }
+
+    #[test]
+    fn empty_plan_and_shape_mismatches_rejected() {
+        let m = sample_csr(8, 1000, 35);
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let opts = SpmmOpts::sequential();
+        let cfg = ncfg(64, m.nrows.max(m.ncols), &opts);
+        assert!(run_pass(&Source::Mem(img.clone()), &StreamPass::new(), &opts).is_err());
+        // Transpose input must have meta.nrows rows.
+        let bad = NumaDense::zeros(m.nrows + 3, 2, cfg);
+        let out = NumaDense::zeros(m.ncols, 2, cfg);
+        let pass = StreamPass::new().transpose(&bad, &out);
+        assert!(run_pass(&Source::Mem(img.clone()), &pass, &opts).is_err());
+        // Transpose output must have meta.ncols rows.
+        let y = NumaDense::zeros(m.nrows, 2, cfg);
+        let bad_out = NumaDense::zeros(m.ncols + 1, 2, cfg);
+        let pass = StreamPass::new().transpose(&y, &bad_out);
+        assert!(run_pass(&Source::Mem(img), &pass, &opts).is_err());
+    }
+
+    #[test]
+    fn transpose_on_rectangular_matrix() {
+        // 300 × 500: Aᵀ·Y is 500-rowed; scatter must respect the edge
+        // tile columns' short intervals.
+        let mut pairs = Vec::new();
+        let mut rng = crate::util::Xoshiro256::new(41);
+        for _ in 0..3000 {
+            pairs.push((rng.below(300) as u32, rng.below(500) as u32));
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let m = Csr::from_sorted_pairs(300, 500, &pairs);
+        let mt = m.transpose();
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let img_t = Arc::new(TiledImage::build(&mt, 64, TileFormat::Scsr));
+        let p = 2;
+        let y = DenseMatrix::random(300, p, 43);
+        let opts = SpmmOpts {
+            threads: 2,
+            ..Default::default()
+        };
+        let cfg = ncfg(64, 500, &opts);
+        let ynd = NumaDense::from_dense(&y, cfg);
+        let out = NumaDense::zeros(500, p, cfg);
+        let pass = StreamPass::new().transpose(&ynd, &out);
+        run_pass(&Source::Mem(img), &pass, &opts).unwrap();
+        let (want, _) = engine::spmm_out(&Source::Mem(img_t), &y, &opts).unwrap();
+        assert!(out.to_dense().max_abs_diff(&want) < 1e-3);
+    }
+}

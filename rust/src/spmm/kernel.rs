@@ -1,15 +1,27 @@
-//! Per-tile multiply kernels.
+//! Per-tile multiply kernels: forward (gather) and transpose (scatter).
 //!
-//! A tile multiply adds `val · in_row(col)` into `out_row(row)` for every
-//! non-zero. Rows of the dense matrices involved in one tile stay inside
-//! the CPU cache by construction (that is what the tile size guarantees),
-//! so these loops are the pure compute hot spot of the whole system.
+//! A **forward** tile multiply adds `val · in_row(col)` into
+//! `out_row(row)` for every non-zero — the `A·X` direction. A
+//! **transpose** tile multiply reads the *same* encoded bytes and adds
+//! `val · in_row(row)` into `out_row(col)` — the `Aᵀ·Y` direction: tile
+//! (I, J) of A, streamed while sweeping tile row I, contributes to output
+//! rows `J·t..` of `Aᵀ·Y`. Both directions work on one stored image, which
+//! is what lets a fused [`super::plan::StreamPass`] compute `A·X` and
+//! `Aᵀ·Y` from a single sweep of the store. Rows of the dense matrices
+//! involved in one tile stay inside the CPU cache by construction (that is
+//! what the tile size guarantees), so these loops are the pure compute hot
+//! spot of the whole system.
 //!
 //! The inner loop over the `p` columns of a dense row is width-specialized
 //! through a const generic: for `p ∈ {1, 2, 4, 8, 16}` the compiler sees a
 //! fixed-trip-count loop and emits vector FMAs (the paper's AVX
 //! optimization, §3.4). `vectorize = false` forces the generic
 //! variable-length loop — the Fig 12 `Vec` ablation baseline.
+//!
+//! The transpose kernels scatter into a **per-worker column-interval
+//! partial** (one `t × p` block per tile column), never a shared output —
+//! the executor reduces the partials at pass end, so no atomics touch
+//! these loops.
 
 use crate::format::{dcsc, scsr, ValueType};
 
@@ -205,6 +217,187 @@ fn mul_dcsc_generic(
     }
 }
 
+/// Scatter-multiply one SCSR+COO tile for the transpose direction:
+/// `out[lc] += val · in[lr]` over all entries.
+///
+/// `in_rows` starts at dense row `tile_row · t` of Y (the rows the sweep
+/// is already holding for this tile row); `out_rows` is the per-worker
+/// partial block for this tile's column interval, starting at output row
+/// `tile_col · t`. Both are row-major with `p` columns.
+#[inline]
+pub fn mul_tile_scsr_t(
+    view: &scsr::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+    vectorize: bool,
+) {
+    if vectorize {
+        match p {
+            1 => mul_scsr_t_w::<1>(view, vt, in_rows, out_rows),
+            2 => mul_scsr_t_w::<2>(view, vt, in_rows, out_rows),
+            4 => mul_scsr_t_w::<4>(view, vt, in_rows, out_rows),
+            8 => mul_scsr_t_w::<8>(view, vt, in_rows, out_rows),
+            16 => mul_scsr_t_w::<16>(view, vt, in_rows, out_rows),
+            _ => mul_scsr_t_generic(view, vt, in_rows, out_rows, p),
+        }
+    } else {
+        mul_scsr_t_generic(view, vt, in_rows, out_rows, p);
+    }
+}
+
+/// Width-specialized SCSR scatter: the roles of the row header (now the
+/// gather base) and the column words (now the scatter target) swap
+/// relative to [`mul_scsr_w`]; the stream walk is identical.
+fn mul_scsr_t_w<const P: usize>(
+    view: &scsr::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+) {
+    let weighted = vt == ValueType::F32;
+    let mut vi = 0usize;
+    let mut in_base = 0usize;
+    // SCSR part: the header row becomes the input row to scatter from.
+    for wbytes in view.scsr.chunks_exact(2) {
+        let w = u16::from_le_bytes([wbytes[0], wbytes[1]]);
+        if w & scsr::ROW_TAG != 0 {
+            in_base = ((w & !scsr::ROW_TAG) as usize) * P;
+        } else {
+            let out_base = (w as usize) * P;
+            let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
+            vi += 1;
+            let src = &in_rows[in_base..in_base + P];
+            let dst = &mut out_rows[out_base..out_base + P];
+            for j in 0..P {
+                dst[j] += v * src[j];
+            }
+        }
+    }
+    // COO part: (row, col) scatters row's input into col's output.
+    for (k, pair) in view.coo.chunks_exact(4).enumerate() {
+        let r = u16::from_le_bytes([pair[0], pair[1]]) as usize;
+        let c = u16::from_le_bytes([pair[2], pair[3]]) as usize;
+        let v = if weighted { read_f32(view.vals, vi + k) } else { 1.0 };
+        let src = &in_rows[r * P..r * P + P];
+        let dst = &mut out_rows[c * P..c * P + P];
+        for j in 0..P {
+            dst[j] += v * src[j];
+        }
+    }
+}
+
+/// Generic-width scalar transpose fallback (the `Vec = off` ablation).
+fn mul_scsr_t_generic(
+    view: &scsr::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+) {
+    let weighted = vt == ValueType::F32;
+    let words = view.scsr.len() / 2;
+    let mut vi = 0usize;
+    let mut in_base = 0usize;
+    let mut i = 0usize;
+    while i < words {
+        let w = read_u16(view.scsr, i);
+        if w & scsr::ROW_TAG != 0 {
+            in_base = ((w & !scsr::ROW_TAG) as usize) * p;
+        } else {
+            let out_base = (w as usize) * p;
+            let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
+            vi += 1;
+            for j in 0..p {
+                out_rows[out_base + j] += v * in_rows[in_base + j];
+            }
+        }
+        i += 1;
+    }
+    for k in 0..view.n_single {
+        let r = read_u16(view.coo, 2 * k) as usize;
+        let c = read_u16(view.coo, 2 * k + 1) as usize;
+        let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
+        vi += 1;
+        for j in 0..p {
+            out_rows[c * p + j] += v * in_rows[r * p + j];
+        }
+    }
+}
+
+/// Scatter-multiply one DCSC tile for the transpose direction. DCSC is
+/// column-grouped, so the transpose is actually a *gather* per non-empty
+/// column: the column's entries accumulate into one output row.
+pub fn mul_tile_dcsc_t(
+    view: &dcsc::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+    vectorize: bool,
+) {
+    if vectorize {
+        match p {
+            1 => mul_dcsc_t_w::<1>(view, vt, in_rows, out_rows),
+            2 => mul_dcsc_t_w::<2>(view, vt, in_rows, out_rows),
+            4 => mul_dcsc_t_w::<4>(view, vt, in_rows, out_rows),
+            8 => mul_dcsc_t_w::<8>(view, vt, in_rows, out_rows),
+            16 => mul_dcsc_t_w::<16>(view, vt, in_rows, out_rows),
+            _ => mul_dcsc_t_generic(view, vt, in_rows, out_rows, p),
+        }
+    } else {
+        mul_dcsc_t_generic(view, vt, in_rows, out_rows, p);
+    }
+}
+
+fn mul_dcsc_t_w<const P: usize>(
+    view: &dcsc::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+) {
+    let weighted = vt == ValueType::F32;
+    for k in 0..view.nnc {
+        let (c, s, e) = view.col(k);
+        let mut acc = [0f32; P];
+        for i in s..e {
+            let r = view.row(i) as usize;
+            let v = if weighted { view.val(i) } else { 1.0 };
+            let src = &in_rows[r * P..r * P + P];
+            for j in 0..P {
+                acc[j] += v * src[j];
+            }
+        }
+        let out_base = (c as usize) * P;
+        let dst = &mut out_rows[out_base..out_base + P];
+        for j in 0..P {
+            dst[j] += acc[j];
+        }
+    }
+}
+
+fn mul_dcsc_t_generic(
+    view: &dcsc::TileView<'_>,
+    vt: ValueType,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+) {
+    let weighted = vt == ValueType::F32;
+    for k in 0..view.nnc {
+        let (c, s, e) = view.col(k);
+        let out_base = (c as usize) * p;
+        for i in s..e {
+            let r = view.row(i) as usize;
+            let v = if weighted { view.val(i) } else { 1.0 };
+            for j in 0..p {
+                out_rows[out_base + j] += v * in_rows[r * p + j];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,10 +464,89 @@ mod tests {
         }
     }
 
+    /// Transpose reference: scatter `out[c] += v · x[r]`.
+    fn reference_t(e: &TileEntries, t: usize, x: &[f32], p: usize) -> Vec<f32> {
+        let mut out = vec![0f32; t * p];
+        for (i, &(r, c)) in e.coords.iter().enumerate() {
+            let v = if e.vals.is_empty() { 1.0 } else { e.vals[i] };
+            for j in 0..p {
+                out[c as usize * p + j] += v * x[r as usize * p + j];
+            }
+        }
+        out
+    }
+
+    fn check_kernels_t(t: u16, n: usize, p: usize, weighted: bool, seed: u64) {
+        let e = random_tile(t, n, seed, weighted);
+        let vt = if weighted {
+            ValueType::F32
+        } else {
+            ValueType::Binary
+        };
+        let mut rng = Xoshiro256::new(seed ^ 2);
+        let x: Vec<f32> = (0..t as usize * p).map(|_| rng.next_f32()).collect();
+        let expect = reference_t(&e, t as usize, &x, p);
+
+        let mut sbuf = Vec::new();
+        scsr::encode(0, &e, vt, &mut sbuf);
+        let (sv, _) = scsr::parse(&sbuf, 0, vt);
+        for vec in [true, false] {
+            let mut out = vec![0f32; t as usize * p];
+            mul_tile_scsr_t(&sv, vt, &x, &mut out, p, vec);
+            for (a, b) in out.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "scsr_t p={p} vec={vec}");
+            }
+        }
+
+        let mut dbuf = Vec::new();
+        dcsc::encode(0, &e, vt, &mut dbuf);
+        let (dv, _) = dcsc::parse(&dbuf, 0, vt);
+        for vec in [true, false] {
+            let mut out = vec![0f32; t as usize * p];
+            mul_tile_dcsc_t(&dv, vt, &x, &mut out, p, vec);
+            for (a, b) in out.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "dcsc_t p={p} vec={vec}");
+            }
+        }
+    }
+
     #[test]
     fn all_widths_binary() {
         for p in [1, 2, 3, 4, 5, 8, 16, 32] {
             check_kernels(128, 700, p, false, p as u64);
+        }
+    }
+
+    #[test]
+    fn transpose_all_widths_binary() {
+        for p in [1, 2, 3, 4, 5, 8, 16, 32] {
+            check_kernels_t(128, 700, p, false, 40 + p as u64);
+        }
+    }
+
+    #[test]
+    fn transpose_all_widths_weighted() {
+        for p in [1, 2, 4, 8, 16, 7] {
+            check_kernels_t(64, 300, p, true, 200 + p as u64);
+        }
+    }
+
+    #[test]
+    fn transpose_accumulates_into_existing_partial() {
+        // Scatter kernels add into the per-worker partial; a second call
+        // over the same tile must exactly double the block.
+        let e = random_tile(64, 200, 77, true);
+        let mut buf = Vec::new();
+        scsr::encode(0, &e, ValueType::F32, &mut buf);
+        let (v, _) = scsr::parse(&buf, 0, ValueType::F32);
+        let x: Vec<f32> = (0..64 * 2).map(|i| i as f32 * 0.25).collect();
+        let mut once = vec![0f32; 64 * 2];
+        mul_tile_scsr_t(&v, ValueType::F32, &x, &mut once, 2, true);
+        let mut twice = vec![0f32; 64 * 2];
+        mul_tile_scsr_t(&v, ValueType::F32, &x, &mut twice, 2, true);
+        mul_tile_scsr_t(&v, ValueType::F32, &x, &mut twice, 2, true);
+        for (a, b) in twice.iter().zip(&once) {
+            assert!((a - 2.0 * b).abs() < 1e-4);
         }
     }
 

@@ -1,29 +1,42 @@
-//! The SpMM engine (§3.4, Algorithm 1, Fig 4).
+//! The SpMM engine (§3.4, Algorithm 1, Fig 4) — a plan/executor split.
 //!
 //! One code path serves both execution modes: **IM-SpMM** keeps the tiled
 //! image in memory; **SEM-SpMM** streams tile rows from the store through
 //! the asynchronous read engine. Each worker thread repeatedly claims a
-//! group of contiguous tile rows from the dynamic scheduler, multiplies
-//! them against the in-memory (NUMA-striped) input dense matrix into a
-//! thread-local output buffer, and hands the finished row interval either
-//! to the in-memory output matrix or to the merging writer — so the output
-//! is written at most once and never to remote memory.
+//! group of contiguous tile rows from the dynamic scheduler, evaluates
+//! every op of the current [`StreamPass`] plan against the group's bytes
+//! (forward `A·X` gathers into a thread-local output buffer; transpose
+//! `Aᵀ·Y` scatters into per-worker column-interval partials), and hands
+//! finished forward row intervals either to the in-memory output matrix
+//! or to the merging writer — so the output is written at most once and
+//! never to remote memory. Transpose partials are reduced in parallel at
+//! pass end; fused hooks compute reductions while rows are hot.
 //!
 //! * [`scheduler`] — fine-grain dynamic load balancing over tile rows with
 //!   shrinking task sizes (Algorithm 1 lines 10–13).
-//! * [`kernel`] — per-tile multiply kernels over the SCSR+COO / DCSC views
-//!   with width-specialized (vectorizable) inner loops.
-//! * [`engine`] — the parallel IM/SEM drivers, super-block cache blocking,
-//!   double-buffered prefetch, the ablation toggles of Figs 12–13, and
-//!   the hookup to the memory-budgeted tile-row cache
-//!   ([`crate::io::cache`]) that lets iterative apps stop re-streaming
-//!   hot tile rows from the store.
+//! * [`kernel`] — per-tile forward (gather) and transpose (scatter)
+//!   kernels over the SCSR+COO / DCSC views with width-specialized
+//!   (vectorizable) inner loops.
+//! * [`plan`] — the [`StreamPass`] plan: which ops one sweep computes
+//!   (forward SpMM, transpose SpMM, fused per-interval reductions).
+//! * [`exec`] — the executor: prefetch, tile-row-cache consultation
+//!   ([`crate::io::cache`]), kernel dispatch, scatter reduction, and the
+//!   two-level stats; the ablation toggles of Figs 12–13 live here.
+//! * [`engine`] — the classic data model ([`Source`], [`OutputSink`],
+//!   [`SpmmStats`]) and the [`spmm`]/[`spmm_out`] entry points, now thin
+//!   wrappers over single-op plans (byte-identical to the old engine).
 
 pub mod engine;
+pub mod exec;
 pub mod kernel;
+pub mod plan;
 pub mod scheduler;
 
 pub use engine::{spmm, spmm_out, OutputSink, SemSource, SpmmStats, Source};
+pub use exec::run_pass;
+pub use plan::{
+    ForwardOp, OpKind, OpStats, PassOp, PassResult, RowHook, StreamPass, TransposeOp,
+};
 
 use crate::DEFAULT_TILE;
 

@@ -1,0 +1,226 @@
+//! Streaming-pass **plans**: what to compute during one sweep of the
+//! on-store sparse matrix.
+//!
+//! The paper's central currency is sparse-matrix bytes streamed from the
+//! SSD array; FlashEigen and SAGE both turn that into a design rule —
+//! *one pass over storage, many operations*. A [`StreamPass`] encodes
+//! that rule: it is a declarative list of operations that the executor
+//! ([`super::exec::run_pass`]) evaluates against a **single** streaming
+//! sweep of the tile rows of `A`:
+//!
+//! * [`ForwardOp`] — `out = A · X`, the existing gather kernels. The
+//!   finished output row interval goes to an [`OutputSink`] exactly as in
+//!   the classic engine.
+//! * [`TransposeOp`] — `out = Aᵀ · Y` from the *same* tile bytes: tile
+//!   (I, J), read while sweeping tile row I, scatters into output rows
+//!   `J·t..` via per-worker column-interval partials that are reduced at
+//!   pass end (no atomics in the inner loop, no second image on the
+//!   store).
+//! * **Fused reductions** — each op may carry a [`RowHook`] invoked once
+//!   per finalized output row interval, while those dense rows are still
+//!   hot in cache: dot products, squared norms, column sums, or an
+//!   in-place map of the interval before it is emitted (e.g. PageRank's
+//!   damping combine). Hooks accumulate into per-worker `f64` slots that
+//!   the executor sums into [`PassResult::accs`].
+//!
+//! The classic [`super::spmm`] entry point is a thin wrapper over a
+//! single-`ForwardOp` plan and is byte-identical to the pre-plan engine.
+
+use super::engine::OutputSink;
+use crate::matrix::NumaDense;
+
+/// Which direction a pass op multiplies in (carried by per-op stats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// `A · X` — gather kernels, output rows follow the sweep order.
+    Forward,
+    /// `Aᵀ · Y` — scatter kernels into per-worker partials.
+    Transpose,
+}
+
+impl std::fmt::Display for OpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OpKind::Forward => write!(f, "A·X"),
+            OpKind::Transpose => write!(f, "Aᵀ·Y"),
+        }
+    }
+}
+
+/// Per-op accounting of one executed pass (the op level of the stats
+/// stack — see [`crate::metrics::OpAccum`] for the collection side).
+#[derive(Debug, Clone)]
+pub struct OpStats {
+    /// Multiply direction.
+    pub kind: OpKind,
+    /// Dense width `p` of this op.
+    pub cols: usize,
+    /// Seconds inside this op's tile kernels, summed over workers.
+    pub kernel_secs: f64,
+    /// Seconds in the op's end-of-pass reduction (transpose partial
+    /// merge + reduce-time hooks; zero for forward ops).
+    pub reduce_secs: f64,
+    /// Output rows finalized for this op.
+    pub rows_out: u64,
+}
+
+/// A fused per-interval hook: `hook(rows_lo, rows, acc)` is called once
+/// per finalized output row interval of its op, with `rows` holding the
+/// interval's dense output rows (row-major, the op's `p` columns wide —
+/// mutable, so a hook may also map values in place *before* they reach
+/// the sink) and `acc` this worker's `f64` accumulator slots. Every
+/// output row is finalized exactly once per pass, so a hook that writes
+/// disjoint row intervals of an external buffer (e.g. via
+/// [`NumaDense::write_rows_unsync`]) never races with itself.
+pub type RowHook<'a> = Box<dyn Fn(usize, &mut [f32], &mut [f64]) + Sync + 'a>;
+
+/// Forward SpMM during the sweep: `sink ← A · input` (plus an optional
+/// fused hook over each finished output interval).
+pub struct ForwardOp<'a> {
+    /// The dense operand `X` (`meta.ncols` rows, striped in memory).
+    pub input: &'a NumaDense,
+    /// Where finished output row intervals go.
+    pub sink: OutputSink<'a>,
+    /// Accumulator slots handed to `hook` (0 when no hook).
+    pub acc_len: usize,
+    /// Fused per-interval reduction/map (see [`RowHook`]).
+    pub hook: Option<RowHook<'a>>,
+}
+
+/// Transpose SpMM during the sweep: `output ← Aᵀ · input`, accumulated
+/// via per-worker column-interval partials and reduced (in parallel, one
+/// tile column per reducer at a time) after the sweep completes. The
+/// hook, when present, runs at reduce time over each finalized output
+/// interval — still before any consumer can observe the rows.
+pub struct TransposeOp<'a> {
+    /// The dense operand `Y` (`meta.nrows` rows, striped in memory).
+    pub input: &'a NumaDense,
+    /// The dense output (`meta.ncols` rows); overwritten by the reduce.
+    pub output: &'a NumaDense,
+    /// Accumulator slots handed to `hook` (0 when no hook).
+    pub acc_len: usize,
+    /// Fused per-interval reduction/map (see [`RowHook`]).
+    pub hook: Option<RowHook<'a>>,
+}
+
+/// One operation of a [`StreamPass`].
+pub enum PassOp<'a> {
+    /// `A · X` (gather).
+    Forward(ForwardOp<'a>),
+    /// `Aᵀ · Y` (scatter + reduce).
+    Transpose(TransposeOp<'a>),
+}
+
+impl PassOp<'_> {
+    /// Multiply direction of this op.
+    pub fn kind(&self) -> OpKind {
+        match self {
+            PassOp::Forward(_) => OpKind::Forward,
+            PassOp::Transpose(_) => OpKind::Transpose,
+        }
+    }
+
+    /// Dense width `p` of this op.
+    pub fn cols(&self) -> usize {
+        match self {
+            PassOp::Forward(f) => f.input.ncols,
+            PassOp::Transpose(t) => t.input.ncols,
+        }
+    }
+
+    /// Accumulator slots this op's hook expects.
+    pub(crate) fn acc_len(&self) -> usize {
+        match self {
+            PassOp::Forward(f) => f.acc_len,
+            PassOp::Transpose(t) => t.acc_len,
+        }
+    }
+}
+
+/// A plan for one streaming sweep of the sparse matrix: every op in
+/// `ops` is computed from the same tile bytes, fetched once.
+#[derive(Default)]
+pub struct StreamPass<'a> {
+    /// The operations to fuse into the sweep, in plan order (the order
+    /// ops are evaluated per tile-row group, and the order of
+    /// [`PassResult::accs`] / per-op stats).
+    pub ops: Vec<PassOp<'a>>,
+}
+
+impl<'a> StreamPass<'a> {
+    /// An empty plan (executing it is an error — add at least one op).
+    pub fn new() -> StreamPass<'a> {
+        StreamPass { ops: Vec::new() }
+    }
+
+    /// Add a plain forward op `sink ← A · input`.
+    pub fn forward(self, input: &'a NumaDense, sink: OutputSink<'a>) -> StreamPass<'a> {
+        self.push(PassOp::Forward(ForwardOp {
+            input,
+            sink,
+            acc_len: 0,
+            hook: None,
+        }))
+    }
+
+    /// Add a forward op with a fused per-interval hook over `acc_len`
+    /// accumulator slots.
+    pub fn forward_with(
+        self,
+        input: &'a NumaDense,
+        sink: OutputSink<'a>,
+        acc_len: usize,
+        hook: RowHook<'a>,
+    ) -> StreamPass<'a> {
+        self.push(PassOp::Forward(ForwardOp {
+            input,
+            sink,
+            acc_len,
+            hook: Some(hook),
+        }))
+    }
+
+    /// Add a plain transpose op `output ← Aᵀ · input`.
+    pub fn transpose(self, input: &'a NumaDense, output: &'a NumaDense) -> StreamPass<'a> {
+        self.push(PassOp::Transpose(TransposeOp {
+            input,
+            output,
+            acc_len: 0,
+            hook: None,
+        }))
+    }
+
+    /// Add a transpose op with a fused reduce-time hook over `acc_len`
+    /// accumulator slots.
+    pub fn transpose_with(
+        self,
+        input: &'a NumaDense,
+        output: &'a NumaDense,
+        acc_len: usize,
+        hook: RowHook<'a>,
+    ) -> StreamPass<'a> {
+        self.push(PassOp::Transpose(TransposeOp {
+            input,
+            output,
+            acc_len,
+            hook: Some(hook),
+        }))
+    }
+
+    /// Append an already-built op.
+    pub fn push(mut self, op: PassOp<'a>) -> StreamPass<'a> {
+        self.ops.push(op);
+        self
+    }
+}
+
+/// What one executed pass produced.
+pub struct PassResult {
+    /// Run statistics — identical in meaning to a classic [`super::spmm`]
+    /// call (one sweep = one set of I/O numbers), plus per-op accounting
+    /// in [`super::SpmmStats::per_op`].
+    pub stats: super::SpmmStats,
+    /// Per op (plan order): the element-wise sum of every worker's (and,
+    /// for transpose ops, every reducer's) hook accumulator slots.
+    pub accs: Vec<Vec<f64>>,
+}

@@ -33,28 +33,55 @@ pub struct Scheduler {
     next: AtomicUsize,
     /// Static mode: per-thread cursors.
     static_next: Vec<AtomicUsize>,
+    /// Static mode: per-thread `[lo, hi)` bounds, fixed at construction
+    /// (claims just look them up — no per-claim chunk arithmetic).
+    static_bounds: Vec<(usize, usize)>,
 }
 
 impl Scheduler {
+    /// Create a scheduler over `total_tile_rows`.
+    ///
+    /// # Contract
+    ///
+    /// `grain` must be at least 1 — a task always advances the cursor by
+    /// at least one tile row ([`SpmmOpts::grain_tile_rows`] guarantees
+    /// this for engine callers). A zero grain is rejected with a panic in
+    /// **both** modes: previously the dynamic path silently clamped while
+    /// the static path would have looped without progress.
+    ///
+    /// `threads` may exceed `total_tile_rows`; surplus threads simply get
+    /// empty static ranges (their first `claim` returns `None`).
+    ///
+    /// [`SpmmOpts::grain_tile_rows`]: super::SpmmOpts::grain_tile_rows
     pub fn new(total_tile_rows: usize, grain: usize, threads: usize, dynamic: bool) -> Scheduler {
+        assert!(grain > 0, "Scheduler::new: grain must be at least 1");
         let threads = threads.max(1);
         let chunk = total_tile_rows.div_ceil(threads);
+        let static_bounds: Vec<(usize, usize)> = (0..threads)
+            .map(|i| {
+                (
+                    (i * chunk).min(total_tile_rows),
+                    ((i + 1) * chunk).min(total_tile_rows),
+                )
+            })
+            .collect();
         Scheduler {
             total: total_tile_rows,
-            grain: grain.max(1),
+            grain,
             threads,
             dynamic,
             next: AtomicUsize::new(0),
-            static_next: (0..threads)
-                .map(|i| AtomicUsize::new((i * chunk).min(total_tile_rows)))
+            static_next: static_bounds
+                .iter()
+                .map(|&(lo, _)| AtomicUsize::new(lo))
                 .collect(),
+            static_bounds,
         }
     }
 
-    /// Upper bound of thread `i`'s static range.
+    /// Upper bound of thread `i`'s static range (cached at construction).
     fn static_hi(&self, i: usize) -> usize {
-        let chunk = self.total.div_ceil(self.threads);
-        ((i + 1) * chunk).min(self.total)
+        self.static_bounds[i].1
     }
 
     /// Claim the next task for worker `thread`; `None` when exhausted.
@@ -205,4 +232,59 @@ mod tests {
             assert_eq!(w[0].hi, w[1].lo, "claims must be contiguous in order");
         }
     }
+
+    /// Drain every thread's claims and assert exact once-coverage.
+    fn assert_covers_exactly(total: usize, grain: usize, threads: usize, dynamic: bool) {
+        let s = Scheduler::new(total, grain, threads, dynamic);
+        let mut all = Vec::new();
+        for th in 0..threads {
+            for t in collect_all(&s, th) {
+                assert!(t.lo < t.hi, "empty task handed out");
+                all.extend(t.lo..t.hi);
+            }
+        }
+        all.sort_unstable();
+        assert_eq!(
+            all,
+            (0..total).collect::<Vec<_>>(),
+            "total={total} grain={grain} threads={threads} dynamic={dynamic}"
+        );
+    }
+
+    #[test]
+    fn more_threads_than_tile_rows() {
+        // Surplus threads get empty ranges; every row still claimed once.
+        for dynamic in [true, false] {
+            assert_covers_exactly(3, 2, 8, dynamic);
+            assert_covers_exactly(1, 4, 16, dynamic);
+        }
+        // A surplus thread's very first claim is None in static mode.
+        let s = Scheduler::new(3, 2, 8, false);
+        assert_eq!(s.claim(7), None);
+    }
+
+    #[test]
+    fn grain_larger_than_total() {
+        for dynamic in [true, false] {
+            assert_covers_exactly(5, 100, 2, dynamic);
+            assert_covers_exactly(7, 8, 1, dynamic);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "grain must be at least 1")]
+    fn zero_grain_rejected() {
+        let _ = Scheduler::new(10, 0, 2, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "grain must be at least 1")]
+    fn zero_grain_rejected_static() {
+        let _ = Scheduler::new(10, 0, 2, false);
+    }
+
+    // The concurrent exactly-once *property test* over random shapes
+    // (both modes, real threads) lives in tests/proptests.rs
+    // (`prop_scheduler_concurrent_modes_claim_exactly_once`) — one copy,
+    // at the integration level, so it cannot drift from a unit twin.
 }

@@ -7,10 +7,10 @@
 use sem_spmm::baselines::{csr_spmm, CsrSchedule, CsrSpmmOpts};
 use sem_spmm::format::tiled::TiledImage;
 use sem_spmm::format::{Csr, TileFormat};
-use sem_spmm::graph::rmat;
+use sem_spmm::graph::{rmat, sbm};
 use sem_spmm::io::{ShardedStore, StoreSpec};
 use sem_spmm::matrix::{DenseMatrix, NumaConfig, NumaDense};
-use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
+use sem_spmm::spmm::{engine, run_pass, SemSource, Source, SpmmOpts, StreamPass};
 use std::sync::Arc;
 
 const WIDTHS: [usize; 3] = [1, 4, 32];
@@ -158,6 +158,92 @@ fn cached_sem_budget0_vs_infinite_bit_identical() {
     for i in 1..iters {
         assert_eq!(warm_logical[i], 0, "iteration {i} issued store reads");
         assert_eq!(warm_physical[i], 0, "iteration {i} did physical reads");
+    }
+}
+
+/// Transpose-path differential: the fused scatter computation of `Aᵀ·Y`
+/// from a sweep of A's single image must agree with the gather engine
+/// running over an **explicitly converted transpose image** — on an RMAT
+/// and an SBM graph, through a 4-shard striped store, under a partial
+/// tile-row-cache budget (second pass exercises cache hits + mixed
+/// groups), within 1e-4.
+#[test]
+fn transpose_pass_matches_transposed_image() {
+    let rmat_m = Csr::from_edgelist(&rmat::generate(
+        10,
+        12_000,
+        rmat::RmatParams::default(),
+        0x7A55,
+    ));
+    let sbm_m = Csr::from_edgelist(&sbm::generate(
+        sbm::SbmParams {
+            num_verts: 1 << 10,
+            num_edges: 14_000,
+            num_clusters: 16,
+            in_out: 8.0,
+            clustered_order: true,
+        },
+        0x5B31,
+    ));
+    for (name, m) in [("rmat", rmat_m), ("sbm", sbm_m)] {
+        let mt = m.transpose();
+        let img = TiledImage::build(&m, 128, TileFormat::Scsr);
+        let img_t = TiledImage::build(&mt, 128, TileFormat::Scsr);
+        let dir = sem_spmm::util::tempdir();
+        let store = ShardedStore::open(StoreSpec {
+            dir: dir.path().to_path_buf(),
+            shards: 4,
+            stripe_bytes: 4096,
+            read_gbps: None,
+            write_gbps: None,
+            latency_us: 0,
+        })
+        .unwrap();
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("a.semm", &buf).unwrap();
+        let mut buf_t = Vec::new();
+        img_t.write_to(&mut buf_t).unwrap();
+        store.put("at.semm", &buf_t).unwrap();
+
+        let p = 4;
+        let y = DenseMatrix::random(m.nrows, p, 0xD1D);
+        let opts = SpmmOpts {
+            threads: 4,
+            io_workers: 2,
+            // Partial budget: only the densest tile rows stay resident,
+            // so the second pass mixes cache frames with store reads.
+            cache_budget_bytes: img.data_bytes() * 2 / 3,
+            ..Default::default()
+        };
+        // Reference: gather over the explicitly converted Aᵀ image.
+        let src_t = Source::Sem(SemSource::open(&store, "at.semm").unwrap());
+        let (want, _) = engine::spmm_out(&src_t, &y, &opts).unwrap();
+
+        let src = Source::Sem(SemSource::open(&store, "a.semm").unwrap());
+        let ncfg = engine::numa_config(128, m.nrows.max(m.ncols), &opts);
+        let ynd = NumaDense::from_dense(&y, ncfg);
+        for pass_i in 0..2 {
+            let out = NumaDense::zeros(m.ncols, p, ncfg);
+            let pass = StreamPass::new().transpose(&ynd, &out);
+            let stats = run_pass(&src, &pass, &opts).unwrap().stats;
+            if pass_i == 0 {
+                assert!(stats.bytes_read > 0, "{name}: first pass must stream");
+            } else {
+                assert!(stats.cache_hits > 0, "{name}: second pass must hit cache");
+            }
+            let got = out.to_dense();
+            for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "{name} pass {pass_i}: row-major index {i}: {a} vs {b}"
+                );
+            }
+        }
+        // The striped data area really fanned out over all shards.
+        for k in 0..store.num_shards() {
+            assert!(store.shard(k).stats.read_reqs.get() > 0, "{name}: shard {k} idle");
+        }
     }
 }
 

@@ -291,8 +291,8 @@ fn catalog_recovers_from_partially_deleted_dataset() {
     let spec = registry::by_name("twitter").unwrap().shrunk(9);
     let imgs = catalog.ensure(&spec).unwrap();
     // Delete one object; ensure() must rebuild the set.
-    s.remove(&imgs.adj_t).unwrap();
+    s.remove(&imgs.adj).unwrap();
     let imgs2 = catalog.ensure(&spec).unwrap();
     assert_eq!(imgs2.nnz, imgs.nnz);
-    assert!(s.exists(&imgs2.adj_t));
+    assert!(s.exists(&imgs2.adj));
 }

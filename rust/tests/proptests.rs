@@ -144,6 +144,46 @@ fn prop_scheduler_partitions_exactly() {
 }
 
 #[test]
+fn prop_scheduler_concurrent_modes_claim_exactly_once() {
+    // Satellite property: dynamic AND static modes claim every tile row
+    // exactly once with no overlap, under real concurrent claiming —
+    // including threads > total and grain > total shapes.
+    check("scheduler-concurrent-exactly-once", 30, |g| {
+        let total = g.usize_in(0, 300);
+        let grain = g.usize_in(1, 40); // may exceed total
+        let threads = g.usize_in(1, 10); // may exceed total
+        for dynamic in [true, false] {
+            let s = Arc::new(Scheduler::new(total, grain, threads, dynamic));
+            let handles: Vec<_> = (0..threads)
+                .map(|i| {
+                    let s = s.clone();
+                    std::thread::spawn(move || {
+                        let mut mine = Vec::new();
+                        while let Some(t) = s.claim(i) {
+                            mine.extend(t.lo..t.hi);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            let mut all: Vec<usize> = handles
+                .into_iter()
+                .flat_map(|h| h.join().unwrap())
+                .collect();
+            all.sort_unstable();
+            if all != (0..total).collect::<Vec<_>>() {
+                return Err(format!(
+                    "coverage broken: total={total} grain={grain} threads={threads} \
+                     dynamic={dynamic}: claimed {} rows",
+                    all.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_engine_matches_reference() {
     check("engine-vs-reference", 12, |g| {
         let nrows = g.usize_in(50, 900);
