@@ -885,6 +885,104 @@ pub fn fused_ops(b: &Bench) -> Result<()> {
     )
 }
 
+/// ---------------------------------------------------------- serve_batch
+/// Ride-sharing service throughput: N concurrent SPMM clients against
+/// one dataset on a throttled 4-shard array, served (a) serially — one
+/// engine invocation per request, the pre-batcher service — and (b)
+/// through the batching coordinator, which compiles waiting requests
+/// into shared sweeps. Reports aggregate wall time, logical sparse GB
+/// streamed, and the observed pass occupancy: with the store as the
+/// bottleneck, batched serving reads ~1× the matrix where serial
+/// serving reads N×.
+pub fn serve_batch(b: &Bench) -> Result<()> {
+    use crate::coordinator::batcher::{BatchConfig, BatchJob, Batcher};
+    let spec = b.dataset("rmat-160").unwrap();
+    let m = Csr::from_edgelist(&spec.build());
+    let img = TiledImage::build(&m, b.tile, TileFormat::Scsr);
+    let mut buf = Vec::new();
+    img.write_to(&mut buf)?;
+    // A deliberately slow 4-shard array (1 GB/s aggregate): sparse
+    // streaming dominates, so amortizing it shows up in wall time.
+    let store = crate::io::ShardedStore::open(crate::io::StoreSpec {
+        dir: b.store.spec().dir.join("serve-batch"),
+        shards: 4,
+        stripe_bytes: 256 << 10,
+        read_gbps: Some(0.25),
+        write_gbps: Some(0.25),
+        latency_us: 30,
+    })?;
+    store.put("serve.semm", &buf)?;
+
+    let p = 4usize;
+    let mut rows = Vec::new();
+    for clients in [1usize, 2, 4, 8] {
+        let xs: Vec<DenseMatrix> = (0..clients)
+            .map(|i| DenseMatrix::random(m.ncols, p, 40 + i as u64))
+            .collect();
+
+        // (a) Serial baseline: one engine invocation per request.
+        let src = Source::Sem(SemSource::open(&store, "serve.semm")?);
+        let read0 = store.stats.bytes_read.get();
+        let sw = crate::metrics::Stopwatch::start();
+        let mut serial_outs = Vec::with_capacity(clients);
+        for x in &xs {
+            serial_outs.push(engine::spmm_out(&src, x, &b.opts)?.0);
+        }
+        let serial_secs = sw.secs();
+        let serial_gb = (store.stats.bytes_read.get() - read0) as f64 / 1e9;
+
+        // (b) Batched: concurrent clients submit at once; the linger
+        // coalesces them into shared sweeps.
+        let batcher = Batcher::new(
+            b.opts.clone(),
+            BatchConfig {
+                max_riders: 8,
+                max_linger: std::time::Duration::from_millis(20),
+            },
+        );
+        let src = Source::Sem(SemSource::open(&store, "serve.semm")?);
+        let read0 = store.stats.bytes_read.get();
+        let sw = crate::metrics::Stopwatch::start();
+        let outs: Vec<DenseMatrix> = std::thread::scope(|scope| {
+            let handles: Vec<_> = xs
+                .iter()
+                .enumerate()
+                .map(|(i, x)| {
+                    let batcher = &batcher;
+                    let src = &src;
+                    scope.spawn(move || {
+                        batcher
+                            .run("serve", src, BatchJob::forward(x.clone(), format!("c{i}")))
+                            .map(|r| r.output)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("client thread"))
+                .collect::<Result<Vec<_>>>()
+        })?;
+        let batch_secs = sw.secs();
+        let batch_gb = (store.stats.bytes_read.get() - read0) as f64 / 1e9;
+        for (i, (a, want)) in outs.iter().zip(&serial_outs).enumerate() {
+            anyhow::ensure!(
+                a.data == want.data,
+                "client {i}: batched reply diverged from serial"
+            );
+        }
+        rows.push(format!(
+            "{clients}\t{serial_secs:.4}\t{serial_gb:.4}\t{batch_secs:.4}\t{batch_gb:.4}\t{}\t{:.2}",
+            batcher.stats().occupancy_max.get(),
+            batcher.stats().amortization(),
+        ));
+    }
+    b.emit(
+        "serve_batch",
+        "clients\tserial_secs\tserial_sparse_gb\tbatched_secs\tbatched_sparse_gb\toccupancy_max\tamortization",
+        &rows,
+    )
+}
+
 /// ----------------------------------------------------------------- perf
 /// §Perf hot-path micro-harness: absolute engine timings used by the
 /// optimization log in EXPERIMENTS.md (IM/SEM SpMV and SpMM-8 on the

@@ -124,13 +124,15 @@ impl Bench {
     }
 }
 
-/// All experiment names, in paper order. `scale_shards`, `cache_sweep`
-/// and `fused_ops` are this reproduction's extensions: read throughput
-/// vs. simulated device count, iterative SpMM time vs. tile-row-cache
-/// budget, and fused single-sweep vs. two-pass NMF I/O.
+/// All experiment names, in paper order. `scale_shards`, `cache_sweep`,
+/// `fused_ops` and `serve_batch` are this reproduction's extensions:
+/// read throughput vs. simulated device count, iterative SpMM time vs.
+/// tile-row-cache budget, fused single-sweep vs. two-pass NMF I/O, and
+/// ride-sharing batched serving vs. one-engine-call-per-request.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig5a", "fig5b", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "tab2", "fig14", "fig15", "fig16", "scale_shards", "cache_sweep", "fused_ops",
+    "serve_batch",
 ];
 
 /// Run one experiment by name.
@@ -154,6 +156,7 @@ pub fn run(bench: &Bench, exp: &str) -> Result<()> {
         "scale_shards" => scale_shards(bench),
         "cache_sweep" => cache_sweep(bench),
         "fused_ops" => fused_ops(bench),
+        "serve_batch" => serve_batch(bench),
         "all" => {
             for e in ALL_EXPERIMENTS {
                 if *e == "fig5b" {

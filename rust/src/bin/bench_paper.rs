@@ -8,9 +8,11 @@
 //!
 //! Experiments: fig2 fig5a fig5b fig6 fig7 fig8 fig9 fig10 fig11 fig12
 //! fig13 tab2 fig14 fig15 fig16 scale_shards cache_sweep fused_ops
-//! (DESIGN.md maps each to the paper; `fused_ops` compares fused
-//! single-sweep NMF — one pass computing A·Hᵀ, Aᵀ·W and the residual —
-//! against the two-pass baseline on a throttled striped store).
+//! serve_batch (DESIGN.md maps each to the paper; `fused_ops` compares
+//! fused single-sweep NMF — one pass computing A·Hᵀ, Aᵀ·W and the
+//! residual — against the two-pass baseline on a throttled striped
+//! store; `serve_batch` measures ride-sharing batched serving of
+//! concurrent SPMM clients against the serial per-request baseline).
 //!
 //! Defaults: registry scale (2^17–2^18 vertices), all cores, store
 //! throttled to the paper's 12 GB/s SSD array as one device, tile 4096.

@@ -16,10 +16,13 @@
 //! mem.budget_gb      = 8
 //! nmf.fused          = on         # one sweep computes A·Hᵀ + Aᵀ·W + residual
 //! pagerank.tol       = 1e-7       # in-pass L1 residual early stop (0 = off)
+//! serve.batch_max       = 8       # riders per shared serve-mode sweep (1 = off)
+//! serve.batch_linger_ms = 2       # max wait for co-riders before dispatch
 //! ```
 //!
-//! Sections map onto [`crate::io::StoreSpec`], [`crate::spmm::SpmmOpts`]
-//! and the coordinator's memory budget.
+//! Sections map onto [`crate::io::StoreSpec`], [`crate::spmm::SpmmOpts`],
+//! the coordinator's memory budget and the serve-mode request batcher
+//! ([`crate::coordinator::BatchConfig`]).
 
 pub mod json;
 
@@ -163,6 +166,30 @@ impl Config {
     pub fn pagerank_tol(&self) -> Result<f64> {
         self.get_f64("pagerank.tol", 0.0)
     }
+
+    /// Serve-mode batching knobs (`serve.batch_max`, the most requests
+    /// one shared sweep may carry — clamped to ≥ 1, where 1 reproduces
+    /// per-request engine calls exactly — and `serve.batch_linger_ms`,
+    /// how long a queued request waits for co-riders).
+    pub fn batch_config(&self) -> Result<crate::coordinator::BatchConfig> {
+        let d = crate::coordinator::BatchConfig::default();
+        let linger_ms = self.get_f64(
+            "serve.batch_linger_ms",
+            d.max_linger.as_secs_f64() * 1e3,
+        )?;
+        // NaN/inf parse as f64 but would panic in Duration conversion;
+        // an hour is already far beyond any sane admission linger.
+        if !(0.0..=3_600_000.0).contains(&linger_ms) {
+            anyhow::bail!(
+                "config serve.batch_linger_ms={linger_ms}: must be finite, >= 0 \
+                 and <= 3600000"
+            );
+        }
+        Ok(crate::coordinator::BatchConfig {
+            max_riders: self.get_usize("serve.batch_max", d.max_riders)?.max(1),
+            max_linger: std::time::Duration::from_secs_f64(linger_ms / 1e3),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +249,22 @@ mod tests {
         let c = Config::parse("nmf.fused = off\npagerank.tol = 1e-6\n").unwrap();
         assert!(!c.nmf_fused().unwrap());
         assert!((c.pagerank_tol().unwrap() - 1e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn serve_batch_keys_default_and_parse() {
+        let c = Config::parse("").unwrap();
+        let b = c.batch_config().unwrap();
+        assert_eq!(b.max_riders, 8);
+        assert_eq!(b.max_linger, std::time::Duration::from_millis(2));
+        let c = Config::parse("serve.batch_max = 0\nserve.batch_linger_ms = 25\n").unwrap();
+        let b = c.batch_config().unwrap();
+        assert_eq!(b.max_riders, 1, "batch_max clamps to >= 1");
+        assert_eq!(b.max_linger, std::time::Duration::from_millis(25));
+        for bad in ["-3", "nan", "inf", "1e300"] {
+            let c = Config::parse(&format!("serve.batch_linger_ms = {bad}\n")).unwrap();
+            assert!(c.batch_config().is_err(), "linger '{bad}' must be rejected");
+        }
     }
 
     #[test]

@@ -1,0 +1,640 @@
+//! The ride-sharing request batcher: coalesce concurrent SpMM-shaped
+//! service requests against the same dataset into **one shared streaming
+//! sweep** of the sparse matrix.
+//!
+//! The paper's machine is a shared compute node, but a naive service
+//! runs one engine invocation per request — N concurrent requests
+//! against the same dataset stream the matrix N times. The fused
+//! plan/executor already proves one pass of `A` can feed many
+//! independent outputs ([`crate::spmm::StreamPass`]); this module turns
+//! that into the serving path's amortization move, the single-node
+//! recovery of the bulk-synchronous batching that distributed SpMM
+//! frameworks (Trilinos, Combinatorial BLAS) get from their execution
+//! model:
+//!
+//! * [`Batcher::submit`] queues a [`BatchJob`] (a forward multiply
+//!   `out = A·X`, optionally with a fused [`BatchHook`]) under a
+//!   **dataset key**; the submitting thread blocks on its [`Ticket`].
+//! * A dispatcher thread drains the queues: when a dataset has
+//!   [`BatchConfig::max_riders`] waiting jobs — or its oldest job has
+//!   lingered [`BatchConfig::max_linger`] — every waiting job is
+//!   compiled into a single [`StreamPass`] (one labeled `ForwardOp` per
+//!   rider, each with its own freshly allocated output sink, so ops can
+//!   never alias) and executed with **one** sweep of the matrix.
+//! * Each rider is woken with its own output, hook accumulators and
+//!   [`RideStats`] — queue wait, riders-in-pass, and the pass's
+//!   logical/physical sparse bytes amortized per rider.
+//!
+//! `max_riders = 1` degrades exactly to today's per-request behavior:
+//! every pass is a single-op plan, which is byte-identical (values and
+//! engine stats) to a classic [`crate::spmm::engine::spmm_out`] call.
+//!
+//! A pass failure (e.g. a shard read error mid-sweep) fails **every**
+//! rider of that pass with an error naming the cause; the dispatcher
+//! and its queues stay healthy and keep serving subsequent requests.
+
+use crate::matrix::{DenseMatrix, NumaDense};
+use crate::metrics::BatchStats;
+use crate::spmm::{engine, exec, OutputSink, Source, SpmmOpts, StreamPass};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Admission-control knobs for the batcher (config keys `serve.batch_*`).
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Most riders one pass may carry (≥ 1). `1` disables sharing: each
+    /// request runs its own single-op pass, exactly like the classic
+    /// per-request engine call.
+    pub max_riders: usize,
+    /// Longest a queued request may wait for co-riders before its pass
+    /// is dispatched anyway. Irrelevant at `max_riders = 1` (a lone
+    /// request is already a full batch).
+    pub max_linger: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_riders: 8,
+            max_linger: Duration::from_millis(2),
+        }
+    }
+}
+
+/// An owned fused hook: like [`crate::spmm::RowHook`] but `'static` and
+/// `Send`, since the pass runs on the dispatcher thread, not the
+/// submitter's. Same contract: called once per finalized output row
+/// interval with that interval's mutable rows and this worker's `f64`
+/// accumulator slots.
+pub type BatchHook = Box<dyn Fn(usize, &mut [f32], &mut [f64]) + Send + Sync + 'static>;
+
+/// One queued multiply: `output = A · input` over the keyed dataset.
+pub struct BatchJob {
+    /// The dense operand (`meta.ncols` rows; any width ≥ 1 — riders of
+    /// different widths share a pass).
+    pub input: DenseMatrix,
+    /// Accumulator slots handed to `hook` (0 when no hook).
+    pub acc_len: usize,
+    /// Optional fused per-interval reduction/map (see [`BatchHook`]).
+    pub hook: Option<BatchHook>,
+    /// Attribution label: carried into the op's stats and any executor
+    /// error, so shared-pass failures name the request.
+    pub label: String,
+}
+
+impl BatchJob {
+    /// A plain forward multiply.
+    pub fn forward(input: DenseMatrix, label: impl Into<String>) -> BatchJob {
+        BatchJob {
+            input,
+            acc_len: 0,
+            hook: None,
+            label: label.into(),
+        }
+    }
+
+    /// A forward multiply with a fused hook over `acc_len` slots.
+    pub fn with_hook(
+        input: DenseMatrix,
+        label: impl Into<String>,
+        acc_len: usize,
+        hook: BatchHook,
+    ) -> BatchJob {
+        BatchJob {
+            input,
+            acc_len,
+            hook: Some(hook),
+            label: label.into(),
+        }
+    }
+}
+
+/// Per-request accounting of one ride.
+#[derive(Debug, Clone)]
+pub struct RideStats {
+    /// Seconds this request waited in the queue before its pass started.
+    pub queue_wait_secs: f64,
+    /// Wall-clock seconds of the shared pass.
+    pub pass_secs: f64,
+    /// Riders the pass carried (this request included).
+    pub riders: usize,
+    /// Logical sparse bytes the shared sweep read (whole pass).
+    pub pass_logical_bytes: u64,
+    /// The pass's logical bytes amortized over its riders — the cost
+    /// actually attributable to this request.
+    pub logical_bytes_per_rider: u64,
+    /// Physical sparse bytes the sweep read, summed over shards.
+    pub pass_physical_bytes: u64,
+    /// Seconds inside this rider's tile kernels (its op's attribution
+    /// out of the shared pass, summed over workers).
+    pub kernel_secs: f64,
+}
+
+/// What a completed ride hands back.
+pub struct RideResult {
+    /// The dense product `A · input`.
+    pub output: DenseMatrix,
+    /// The job's hook accumulators (empty without a hook).
+    pub accs: Vec<f64>,
+    /// Per-request accounting.
+    pub stats: RideStats,
+}
+
+/// A claim on a queued job's eventual result.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<RideResult>>,
+}
+
+impl Ticket {
+    /// Block until the job's pass completes (or fails).
+    pub fn wait(self) -> Result<RideResult> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("batcher shut down before the request ran"))?
+    }
+}
+
+struct Pending {
+    job: BatchJob,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<RideResult>>,
+}
+
+struct Queue {
+    /// The source every rider of the current burst shares (→ one
+    /// tile-row cache per burst for SEM riders). Refreshed whenever a
+    /// submit finds the queue idle, and the whole entry is evicted once
+    /// a drain empties it — so a dataset rebuilt under the same key is
+    /// picked up by the next burst instead of being served from a stale
+    /// handle, and the map stays bounded by the keys currently in
+    /// flight.
+    source: Source,
+    pending: VecDeque<Pending>,
+}
+
+struct State {
+    queues: HashMap<String, Queue>,
+    shutdown: bool,
+}
+
+struct Shared {
+    cfg: BatchConfig,
+    opts: SpmmOpts,
+    state: Mutex<State>,
+    cv: Condvar,
+    stats: BatchStats,
+}
+
+/// The batching coordinator. Owns one dispatcher thread; dropping the
+/// batcher drains every queued request (running their passes) and joins
+/// the dispatcher.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Start a batcher running passes with `opts` under `cfg`'s
+    /// admission control.
+    pub fn new(opts: SpmmOpts, cfg: BatchConfig) -> Batcher {
+        let shared = Arc::new(Shared {
+            cfg: BatchConfig {
+                max_riders: cfg.max_riders.max(1),
+                ..cfg
+            },
+            opts,
+            state: Mutex::new(State {
+                queues: HashMap::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            stats: BatchStats::new(),
+        });
+        let dispatcher = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("sem-batcher".into())
+                .spawn(move || dispatch_loop(shared))
+                .expect("spawning batcher dispatcher")
+        };
+        Batcher {
+            shared,
+            dispatcher: Some(dispatcher),
+        }
+    }
+
+    /// Queue `job` against the dataset identified by `key`. `source` is
+    /// the matrix to sweep; all riders of one burst share the source
+    /// adopted when the burst started (an idle queue adopts the newest
+    /// submitted source, and drained queues are evicted — so a rebuilt
+    /// dataset is never swept through a stale handle). The job's shape
+    /// is validated *here*, so a malformed request is rejected
+    /// immediately instead of poisoning a shared pass.
+    pub fn submit(&self, key: &str, source: &Source, job: BatchJob) -> Result<Ticket> {
+        let meta = source.meta();
+        if job.input.ncols == 0 {
+            bail!("job '{}': zero-width dense input", job.label);
+        }
+        if job.input.nrows != meta.ncols {
+            bail!(
+                "job '{}': input has {} rows but sparse matrix has {} cols",
+                job.label,
+                job.input.nrows,
+                meta.ncols
+            );
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.shutdown {
+                bail!("batcher is shutting down");
+            }
+            let q = st.queues.entry(key.to_string()).or_insert_with(|| Queue {
+                source: source.clone(),
+                pending: VecDeque::new(),
+            });
+            if q.pending.is_empty() {
+                // Idle queue: adopt the freshly opened source, so a
+                // dataset rebuilt under the same key is never swept
+                // through a stale handle (shape validation above already
+                // used this source's meta).
+                q.source = source.clone();
+            }
+            q.pending.push_back(Pending {
+                job,
+                enqueued: Instant::now(),
+                tx,
+            });
+        }
+        self.shared.cv.notify_all();
+        Ok(Ticket { rx })
+    }
+
+    /// Submit and block for the result (convenience for one-shot callers).
+    pub fn run(&self, key: &str, source: &Source, job: BatchJob) -> Result<RideResult> {
+        self.submit(key, source, job)?.wait()
+    }
+
+    /// Ride-sharing accounting since construction.
+    pub fn stats(&self) -> &BatchStats {
+        &self.shared.stats
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The dispatcher: pick the ripest queue (full batch first, else the one
+/// whose oldest rider's linger deadline is nearest), wait out the linger
+/// when profitable, drain up to `max_riders`, and hand the batch to a
+/// worker thread — so one dataset's long pass never delays another
+/// dataset's dispatch (or even a second burst of the same dataset). On
+/// shutdown every remaining request is still dispatched (linger
+/// skipped) and every in-flight pass joined before the thread exits.
+fn dispatch_loop(sh: Arc<Shared>) {
+    let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut st = sh.state.lock().unwrap();
+    loop {
+        let now = Instant::now();
+        // Scan: a full queue dispatches now; otherwise the earliest
+        // linger deadline decides what to wait for.
+        let mut full: Option<String> = None;
+        let mut earliest: Option<(String, Instant)> = None;
+        for (k, q) in st.queues.iter() {
+            let Some(head) = q.pending.front() else { continue };
+            if full.is_none() && q.pending.len() >= sh.cfg.max_riders {
+                full = Some(k.clone());
+            }
+            let deadline = head.enqueued + sh.cfg.max_linger;
+            let sooner = match &earliest {
+                None => true,
+                Some((_, d)) => deadline < *d,
+            };
+            if sooner {
+                earliest = Some((k.clone(), deadline));
+            }
+        }
+        let (key, deadline) = match (full, earliest) {
+            (Some(k), _) => (k, now),
+            (None, Some((k, d))) => (k, d),
+            (None, None) => {
+                if st.shutdown {
+                    drop(st);
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    return;
+                }
+                st = sh.cv.wait(st).unwrap();
+                continue;
+            }
+        };
+        if !st.shutdown && now < deadline {
+            let (guard, _) = sh
+                .cv
+                .wait_timeout(st, deadline.duration_since(now))
+                .unwrap();
+            st = guard;
+            continue;
+        }
+        let (source, riders) = {
+            let q = st.queues.get_mut(&key).expect("scanned queue exists");
+            let n = q.pending.len().min(sh.cfg.max_riders);
+            let drained = (q.source.clone(), q.pending.drain(..n).collect::<Vec<_>>());
+            if q.pending.is_empty() {
+                // Evict drained entries: bounds the map and drops the
+                // burst's source (and any tile-row cache it pinned).
+                st.queues.remove(&key);
+            }
+            drained
+        };
+        drop(st);
+        workers.retain(|h| !h.is_finished());
+        let shw = sh.clone();
+        workers.push(std::thread::spawn(move || {
+            run_batch(&shw, &source, riders)
+        }));
+        st = sh.state.lock().unwrap();
+    }
+}
+
+/// Compile `riders` into one [`StreamPass`] — one labeled forward op per
+/// rider, each with its own freshly allocated striped input and output
+/// (distinct allocations, so pass operands can never alias) — execute it
+/// with a single sweep of `source`, and deliver per-rider results.
+fn run_batch(sh: &Shared, source: &Source, riders: Vec<Pending>) {
+    let t0 = Instant::now();
+    let meta = source.meta().clone();
+    let ncfg = engine::numa_config(meta.tile, meta.nrows.max(meta.ncols), &sh.opts);
+    let n = riders.len();
+    let queue_waits: Vec<f64> = riders
+        .iter()
+        .map(|p| t0.duration_since(p.enqueued).as_secs_f64())
+        .collect();
+    for w in &queue_waits {
+        sh.stats.queue_wait.add((*w * 1e9) as u64);
+    }
+    let inputs: Vec<NumaDense> = riders
+        .iter()
+        .map(|p| NumaDense::from_dense(&p.job.input, ncfg))
+        .collect();
+    let outputs: Vec<NumaDense> = riders
+        .iter()
+        .map(|p| NumaDense::zeros(meta.nrows, p.job.input.ncols, ncfg))
+        .collect();
+
+    let result = {
+        let mut pass = StreamPass::new();
+        for (i, p) in riders.iter().enumerate() {
+            pass = match &p.job.hook {
+                None => pass.forward(&inputs[i], OutputSink::Mem(&outputs[i])),
+                Some(h) => {
+                    let h: &(dyn Fn(usize, &mut [f32], &mut [f64]) + Send + Sync) = h.as_ref();
+                    pass.forward_with(
+                        &inputs[i],
+                        OutputSink::Mem(&outputs[i]),
+                        p.job.acc_len,
+                        Box::new(move |lo, rows, acc| h(lo, rows, acc)),
+                    )
+                }
+            };
+            pass = pass.labeled(p.job.label.as_str());
+        }
+        exec::run_pass(source, &pass, &sh.opts)
+    };
+
+    match result {
+        Ok(r) => {
+            sh.stats.passes.inc();
+            if n > 1 {
+                sh.stats.shared_passes.inc();
+            }
+            sh.stats.riders.add(n as u64);
+            sh.stats.occupancy_max.observe(n as u64);
+            sh.stats.swept_bytes.add(r.stats.bytes_read);
+            sh.stats.serial_equiv_bytes.add(r.stats.bytes_read * n as u64);
+            let per_rider = r.stats.bytes_read / n as u64;
+            for (i, (p, out)) in riders.into_iter().zip(outputs).enumerate() {
+                let res = RideResult {
+                    output: out.to_dense(),
+                    accs: r.accs[i].clone(),
+                    stats: RideStats {
+                        queue_wait_secs: queue_waits[i],
+                        pass_secs: r.stats.secs,
+                        riders: n,
+                        pass_logical_bytes: r.stats.bytes_read,
+                        logical_bytes_per_rider: per_rider,
+                        pass_physical_bytes: r.stats.physical_bytes_read,
+                        kernel_secs: r.stats.per_op[i].kernel_secs,
+                    },
+                };
+                // A rider may have hung up (client disconnect) — fine.
+                let _ = p.tx.send(Ok(res));
+            }
+        }
+        Err(e) => {
+            // One failed sweep fails every rider of the pass — each gets
+            // the cause — but poisons nothing: the queues and dispatcher
+            // keep serving subsequent requests.
+            let msg = format!("{e:#}");
+            for p in riders {
+                let _ = p
+                    .tx
+                    .send(Err(anyhow!("batched pass ({n} riders) failed: {msg}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::tiled::TiledImage;
+    use crate::format::{Csr, TileFormat};
+    use crate::graph::rmat;
+    use std::sync::Arc;
+
+    fn sample_source(scale: u32, edges: usize, seed: u64) -> (Csr, Source) {
+        let el = rmat::generate(scale, edges, rmat::RmatParams::default(), seed);
+        let m = Csr::from_edgelist(&el);
+        let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
+        (m, Source::Mem(img))
+    }
+
+    fn opts() -> SpmmOpts {
+        SpmmOpts {
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn solo_ride_matches_engine_bit_for_bit() {
+        // max_riders = 1 must degrade exactly to per-request engine calls.
+        let (m, src) = sample_source(9, 5000, 11);
+        let b = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders: 1,
+                max_linger: Duration::from_millis(50),
+            },
+        );
+        for p in [1usize, 3, 4] {
+            let x = DenseMatrix::random(m.ncols, p, 7 + p as u64);
+            let (want, _) = engine::spmm_out(&src, &x, &opts()).unwrap();
+            let r = b.run("k", &src, BatchJob::forward(x, "solo")).unwrap();
+            assert_eq!(r.output.data, want.data, "p={p} not bit-identical");
+            assert_eq!(r.stats.riders, 1);
+        }
+        assert_eq!(b.stats().shared_passes.get(), 0);
+        assert_eq!(b.stats().passes.get(), 3);
+    }
+
+    #[test]
+    fn coalesced_riders_share_one_pass_and_stay_exact() {
+        // Submit several heterogeneous-width jobs without waiting: the
+        // linger coalesces them into one pass, and every rider's output
+        // is bit-identical to its solo engine run.
+        let (m, src) = sample_source(9, 6000, 13);
+        let b = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders: 8,
+                max_linger: Duration::from_millis(80),
+            },
+        );
+        let widths = [1usize, 2, 3, 8];
+        let xs: Vec<DenseMatrix> = widths
+            .iter()
+            .map(|&p| DenseMatrix::random(m.ncols, p, 100 + p as u64))
+            .collect();
+        let tickets: Vec<Ticket> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                b.submit("k", &src, BatchJob::forward(x.clone(), format!("r{i}")))
+                    .unwrap()
+            })
+            .collect();
+        let results: Vec<RideResult> =
+            tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        for ((x, r), &p) in xs.iter().zip(&results).zip(&widths) {
+            let (want, _) = engine::spmm_out(&src, x, &opts()).unwrap();
+            assert_eq!(r.output.ncols, p);
+            assert_eq!(r.output.data, want.data, "rider p={p} diverged");
+            assert_eq!(r.stats.riders, 4, "all four must share the pass");
+        }
+        assert_eq!(b.stats().passes.get(), 1, "one shared sweep");
+        assert_eq!(b.stats().shared_passes.get(), 1);
+        assert_eq!(b.stats().occupancy_max.get(), 4);
+    }
+
+    #[test]
+    fn hook_rides_accumulate_like_pagerank() {
+        // An owned hook (PageRank-style damping combine + column sum)
+        // rides a shared pass next to a plain job.
+        let (m, src) = sample_source(8, 3000, 17);
+        let b = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders: 4,
+                max_linger: Duration::from_millis(80),
+            },
+        );
+        let x = DenseMatrix::random(m.ncols, 1, 5);
+        let hook: BatchHook = Box::new(|_, rows, acc| {
+            for v in rows.iter_mut() {
+                *v = 0.1 + 0.85 * *v;
+                acc[0] += *v as f64;
+            }
+        });
+        let t1 = b
+            .submit("k", &src, BatchJob::with_hook(x.clone(), "pr", 1, hook))
+            .unwrap();
+        let t2 = b
+            .submit("k", &src, BatchJob::forward(x.clone(), "plain"))
+            .unwrap();
+        let r1 = t1.wait().unwrap();
+        let r2 = t2.wait().unwrap();
+        let (plain, _) = engine::spmm_out(&src, &x, &opts()).unwrap();
+        assert_eq!(r2.output.data, plain.data);
+        let mut want_acc = 0f64;
+        for (a, &pv) in r1.output.data.iter().zip(&plain.data) {
+            let expect = 0.1 + 0.85 * pv;
+            assert!((a - expect).abs() < 1e-6);
+            want_acc += expect as f64;
+        }
+        assert!((r1.accs[0] - want_acc).abs() <= 1e-6 * want_acc.abs().max(1.0));
+    }
+
+    #[test]
+    fn malformed_job_rejected_at_submit_not_in_pass() {
+        let (_m, src) = sample_source(8, 1000, 19);
+        let b = Batcher::new(opts(), BatchConfig::default());
+        let bad = DenseMatrix::random(7, 2, 1); // wrong row count
+        assert!(b.submit("k", &src, BatchJob::forward(bad, "bad")).is_err());
+        let zero = DenseMatrix::zeros(0, 0);
+        assert!(b.submit("k", &src, BatchJob::forward(zero, "zw")).is_err());
+    }
+
+    #[test]
+    fn drop_drains_queued_requests() {
+        // Requests queued at drop time still run (no dropped tickets).
+        let (m, src) = sample_source(8, 2000, 23);
+        let b = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders: 8,
+                max_linger: Duration::from_secs(5), // would linger long
+            },
+        );
+        let x = DenseMatrix::random(m.ncols, 2, 3);
+        let t = b
+            .submit("k", &src, BatchJob::forward(x.clone(), "late"))
+            .unwrap();
+        drop(b); // shutdown skips the linger and dispatches
+        let r = t.wait().unwrap();
+        let (want, _) = engine::spmm_out(&src, &x, &opts()).unwrap();
+        assert_eq!(r.output.data, want.data);
+    }
+
+    #[test]
+    fn distinct_datasets_use_distinct_queues() {
+        let (m1, s1) = sample_source(8, 2000, 29);
+        let (m2, s2) = sample_source(9, 3000, 31);
+        let b = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders: 4,
+                max_linger: Duration::from_millis(40),
+            },
+        );
+        let x1 = DenseMatrix::random(m1.ncols, 2, 1);
+        let x2 = DenseMatrix::random(m2.ncols, 2, 2);
+        let t1 = b.submit("a", &s1, BatchJob::forward(x1.clone(), "a")).unwrap();
+        let t2 = b.submit("b", &s2, BatchJob::forward(x2.clone(), "b")).unwrap();
+        let r1 = t1.wait().unwrap();
+        let r2 = t2.wait().unwrap();
+        let (w1, _) = engine::spmm_out(&s1, &x1, &opts()).unwrap();
+        let (w2, _) = engine::spmm_out(&s2, &x2, &opts()).unwrap();
+        assert_eq!(r1.output.data, w1.data);
+        assert_eq!(r2.output.data, w2.data);
+        // Different keys never share a pass.
+        assert_eq!(r1.stats.riders, 1);
+        assert_eq!(r2.stats.riders, 1);
+        assert_eq!(b.stats().passes.get(), 2);
+    }
+}

@@ -4,12 +4,16 @@
 //! This layer owns the decisions the paper frames as "how to use the
 //! memory you have" (§3.6, §4): how many dense-matrix columns fit, how
 //! many passes over the sparse matrix a multiply needs, and which
-//! placement each application should use.
+//! placement each application should use — plus, on the serving side,
+//! how many concurrent requests one streaming sweep should carry
+//! ([`batcher`]).
 
+pub mod batcher;
 pub mod catalog;
 pub mod service;
 pub mod vert;
 
+pub use batcher::{BatchConfig, BatchJob, Batcher, RideResult, RideStats, Ticket};
 pub use catalog::{Catalog, DatasetImages};
 pub use vert::{spmm_vert, VertReport};
 

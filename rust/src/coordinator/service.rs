@@ -1,8 +1,12 @@
 //! The request-service loop: a line-oriented TCP protocol over the
 //! coordinator, so a SEM-SpMM node can be driven remotely (`sem-spmm
-//! serve`). One thread per connection; the engine itself parallelizes
-//! each request internally, mirroring how the paper's machine is used as
-//! a single shared compute node.
+//! serve`). One thread per connection; SPMV/SPMM requests are **not**
+//! run per-connection — they are queued with the ride-sharing
+//! [`Batcher`], so concurrent requests against the same dataset share a
+//! single streaming sweep of the sparse matrix (see
+//! [`crate::coordinator::batcher`] and DESIGN.md "Life of a batched
+//! request"). Iterative app requests (PageRank/eigen/NMF) run their own
+//! fused per-iteration passes on the connection thread.
 //!
 //! Protocol (one request per line, JSON reply per line):
 //!
@@ -14,65 +18,126 @@
 //! PAGERANK <dataset> <iters>
 //! EIGEN <dataset> <nev>
 //! NMF <dataset> <k> <iters>
+//! STATS
 //! QUIT
 //! ```
+//!
+//! Batched replies (`SPMV`/`SPMM`) carry per-request ride accounting:
+//! `riders` (requests sharing the pass), `queue_ms` (admission wait),
+//! `sparse_bytes` (the whole pass) and `sparse_bytes_per_rider` (this
+//! request's amortized share), plus a `check` field — an FNV-1a hash of
+//! the output bytes, so clients (and the stress tests) can assert
+//! bit-identical results against a serial run. `STATS` reports the
+//! service-wide batching counters.
 
+use super::batcher::{BatchConfig, BatchJob, Batcher};
 use super::catalog::Catalog;
 use crate::apps::{eigen, nmf, pagerank};
 use crate::config::json::Json;
 use crate::graph::registry;
 use crate::matrix::DenseMatrix;
-use crate::metrics::Stopwatch;
-use crate::spmm::{engine, Source, SpmmOpts};
+use crate::metrics::{BatchStats, Stopwatch};
+use crate::spmm::{Source, SpmmOpts};
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long a connection handler blocks in a read before re-checking the
+/// stop flag. Bounds shutdown latency for idle connections.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// How long the accept loop parks between non-blocking accepts.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
 
 /// Service over one catalog/store.
 pub struct Service {
     catalog: Catalog,
     opts: SpmmOpts,
     stop: Arc<AtomicBool>,
+    batcher: Batcher,
+    /// Per-dataset build locks: concurrent connections asking for a
+    /// not-yet-materialized dataset must not race `Catalog::ensure`'s
+    /// check-then-build — but one dataset's slow build must not stall
+    /// requests for every other dataset, so the serialization is keyed.
+    ensure_locks: Mutex<std::collections::HashMap<String, Arc<Mutex<()>>>>,
 }
 
 impl Service {
+    /// A service with default batching ([`BatchConfig::default`]).
     pub fn new(catalog: Catalog, opts: SpmmOpts) -> Service {
+        Self::with_batch(catalog, opts, BatchConfig::default())
+    }
+
+    /// A service with explicit batching knobs (`serve.batch_*` config
+    /// keys). `max_riders = 1` reproduces per-request engine calls.
+    pub fn with_batch(catalog: Catalog, opts: SpmmOpts, batch: BatchConfig) -> Service {
+        let batcher = Batcher::new(opts.clone(), batch);
         Service {
             catalog,
             opts,
             stop: Arc::new(AtomicBool::new(false)),
+            batcher,
+            ensure_locks: Mutex::new(std::collections::HashMap::new()),
         }
     }
 
-    /// A handle that makes `serve` return after the current connection.
+    /// A handle that makes `serve` return promptly (bounded by the
+    /// accept/read poll intervals plus any request still executing).
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         self.stop.clone()
+    }
+
+    /// Service-wide ride-sharing counters.
+    pub fn batch_stats(&self) -> &BatchStats {
+        self.batcher.stats()
     }
 
     /// Serve on `addr` (e.g. `127.0.0.1:7878`) until stopped.
     pub fn serve(&self, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
-        listener.set_nonblocking(true)?;
         eprintln!("sem-spmm service listening on {addr}");
-        loop {
-            if self.stop.load(Ordering::Relaxed) {
-                return Ok(());
-            }
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    stream.set_nonblocking(false)?;
-                    if let Err(e) = self.handle(stream) {
-                        eprintln!("connection error: {e:#}");
+        self.serve_listener(listener)
+    }
+
+    /// Serve on an already-bound listener (lets tests bind port 0 and
+    /// read the assigned address). One handler thread per connection;
+    /// handlers poll the stop flag between reads, so `serve_listener`
+    /// returns within a bounded time of [`Service::stop_handle`] firing
+    /// even while connections sit open.
+    pub fn serve_listener(&self, listener: TcpListener) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        std::thread::scope(|scope| -> Result<()> {
+            loop {
+                if self.stop.load(Ordering::Relaxed) {
+                    // Scope join waits for handlers; their read polls
+                    // observe the flag within READ_POLL.
+                    return Ok(());
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false)?;
+                        stream.set_read_timeout(Some(READ_POLL))?;
+                        scope.spawn(move || {
+                            if let Err(e) = self.handle(stream) {
+                                eprintln!("connection error: {e:#}");
+                            }
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) => {
+                        // Fatal accept error: flag stop so open handlers
+                        // drain instead of pinning the scope join.
+                        self.stop.store(true, Ordering::Relaxed);
+                        return Err(e.into());
                     }
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(20));
-                }
-                Err(e) => return Err(e.into()),
             }
-        }
+        })
     }
 
     fn handle(&self, stream: TcpStream) -> Result<()> {
@@ -80,18 +145,38 @@ impl Service {
         let mut out = stream;
         let mut line = String::new();
         loop {
-            line.clear();
-            if reader.read_line(&mut line)? == 0 {
-                return Ok(());
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()), // client hung up
+                Ok(_) => {
+                    let reply = match self.dispatch(line.trim()) {
+                        Ok(Some(j)) => j,
+                        Ok(None) => return Ok(()), // QUIT
+                        Err(e) => Json::obj().set("error", format!("{e:#}")),
+                    };
+                    line.clear();
+                    out.write_all(reply.to_string().as_bytes())?;
+                    out.write_all(b"\n")?;
+                    out.flush()?;
+                    // Re-check between requests too: a client sending
+                    // back-to-back requests never hits the read timeout,
+                    // and must not be able to pin shutdown.
+                    if self.stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // Read poll expired. Any bytes already consumed stay
+                    // in `line` (read_line appends), so a request split
+                    // across polls is reassembled intact.
+                    if self.stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
             }
-            let reply = match self.dispatch(line.trim()) {
-                Ok(Some(j)) => j,
-                Ok(None) => return Ok(()), // QUIT
-                Err(e) => Json::obj().set("error", format!("{e:#}")),
-            };
-            out.write_all(reply.to_string().as_bytes())?;
-            out.write_all(b"\n")?;
-            out.flush()?;
         }
     }
 
@@ -102,6 +187,18 @@ impl Service {
         let reply = match parts.as_slice() {
             ["PING"] => Json::obj().set("pong", true),
             ["QUIT"] => return Ok(None),
+            ["STATS"] => {
+                let s = self.batch_stats();
+                Json::obj()
+                    .set("passes", s.passes.get())
+                    .set("shared_passes", s.shared_passes.get())
+                    .set("riders", s.riders.get())
+                    .set("occupancy_max", s.occupancy_max.get())
+                    .set("mean_occupancy", s.mean_occupancy())
+                    .set("swept_bytes", s.swept_bytes.get())
+                    .set("serial_equiv_bytes", s.serial_equiv_bytes.get())
+                    .set("amortization", s.amortization())
+            }
             ["INFO", ds] => {
                 let imgs = self.ensure(ds)?;
                 Json::obj()
@@ -112,21 +209,36 @@ impl Service {
             ["SPMV", ds] => {
                 let imgs = self.ensure(ds)?;
                 let src = Source::Sem(self.catalog.open_adj(&imgs)?);
-                let x = vec![1f32; imgs.num_verts];
-                let (y, stats) = engine::spmv(&src, &x, &self.opts)?;
-                let sum: f64 = y.iter().map(|&v| v as f64).sum();
-                Json::obj()
-                    .set("sum", sum)
-                    .set("secs", stats.secs)
-                    .set("read_gbps", stats.read_gbps)
+                let x = DenseMatrix::from_col(&vec![1f32; imgs.num_verts]);
+                let r = self
+                    .batcher
+                    .run(&imgs.adj, &src, BatchJob::forward(x, format!("SPMV {ds}")))?;
+                let sum: f64 = r.output.data.iter().map(|&v| v as f64).sum();
+                ride_fields(
+                    Json::obj()
+                        .set("sum", sum)
+                        .set("check", format!("{:016x}", fnv1a(&r.output.to_le_bytes()))),
+                    &r,
+                )
             }
             ["SPMM", ds, cols] => {
                 let p: usize = cols.parse()?;
                 let imgs = self.ensure(ds)?;
                 let src = Source::Sem(self.catalog.open_adj(&imgs)?);
                 let x = DenseMatrix::random(imgs.num_verts, p, 1);
-                let (_, stats) = engine::spmm_out(&src, &x, &self.opts)?;
-                Json::obj().set("secs", stats.secs).set("cols", p)
+                let r = self.batcher.run(
+                    &imgs.adj,
+                    &src,
+                    BatchJob::forward(x, format!("SPMM {ds} p={p}")),
+                )?;
+                let sum: f64 = r.output.data.iter().map(|&v| v as f64).sum();
+                ride_fields(
+                    Json::obj()
+                        .set("cols", p)
+                        .set("sum", sum)
+                        .set("check", format!("{:016x}", fnv1a(&r.output.to_le_bytes()))),
+                    &r,
+                )
             }
             ["PAGERANK", ds, iters] => {
                 let iters: usize = iters.parse()?;
@@ -195,14 +307,46 @@ impl Service {
         } else {
             spec.shrunk(12)
         };
+        // Keyed lock, poison-tolerant: a panicking build on one
+        // connection thread must neither crash every later request nor
+        // block builds of unrelated datasets.
+        let lock = {
+            let mut m = self
+                .ensure_locks
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            m.entry(ds.to_string()).or_default().clone()
+        };
+        let _build_guard = lock.lock().unwrap_or_else(|p| p.into_inner());
         self.catalog.ensure(&spec)
     }
+}
+
+/// Append the per-request ride accounting to a reply.
+fn ride_fields(j: Json, r: &super::batcher::RideResult) -> Json {
+    j.set("secs", r.stats.pass_secs)
+        .set("riders", r.stats.riders)
+        .set("queue_ms", r.stats.queue_wait_secs * 1e3)
+        .set("sparse_bytes", r.stats.pass_logical_bytes)
+        .set("sparse_bytes_per_rider", r.stats.logical_bytes_per_rider)
+}
+
+/// FNV-1a over a byte string — the reply checksum clients use to assert
+/// bit-identical outputs.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::io::{ShardedStore, StoreSpec};
+    use std::time::Instant;
 
     fn service() -> (crate::util::TempDir, Service) {
         let dir = crate::util::tempdir();
@@ -232,6 +376,11 @@ mod tests {
         let sum = r.get("sum").unwrap().as_f64().unwrap();
         let info = svc.dispatch("INFO twitter").unwrap().unwrap();
         assert_eq!(sum, info.get("nnz").unwrap().as_f64().unwrap());
+        // Batched replies carry ride accounting.
+        assert_eq!(r.get("riders").unwrap().as_f64().unwrap(), 1.0);
+        assert!(r.get("sparse_bytes").unwrap().as_f64().unwrap() > 0.0);
+        let s = svc.dispatch("STATS").unwrap().unwrap();
+        assert_eq!(s.get("riders").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]
@@ -255,13 +404,12 @@ mod tests {
         let (_d, svc) = service();
         let svc = Arc::new(svc);
         let stop = svc.stop_handle();
-        let addr = "127.0.0.1:47391";
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
         let server = {
             let svc = svc.clone();
-            std::thread::spawn(move || svc.serve(addr))
+            std::thread::spawn(move || svc.serve_listener(listener))
         };
-        // Wait for bind.
-        std::thread::sleep(std::time::Duration::from_millis(100));
         let mut conn = TcpStream::connect(addr).unwrap();
         conn.write_all(b"PING\n").unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -271,5 +419,109 @@ mod tests {
         conn.write_all(b"QUIT\n").unwrap();
         stop.store(true, Ordering::Relaxed);
         server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn stop_returns_promptly_with_an_idle_connection_open() {
+        // Regression for the shutdown satellite: an idle connection used
+        // to pin `serve` in a blocking read; the poll-based handler must
+        // let it return within a bounded time of the stop flag.
+        let (_d, svc) = service();
+        let svc = Arc::new(svc);
+        let stop = svc.stop_handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let svc = svc.clone();
+            std::thread::spawn(move || svc.serve_listener(listener))
+        };
+        // An idle connection that never sends a byte.
+        let conn = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        let t0 = Instant::now();
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "serve took {:?} to observe stop",
+            t0.elapsed()
+        );
+        drop(conn);
+    }
+
+    #[test]
+    fn stop_returns_promptly_with_a_busy_client() {
+        // A client sending back-to-back requests never hits the read
+        // timeout; the handler must re-check stop between requests or a
+        // chatty client pins shutdown forever.
+        let (_d, svc) = service();
+        let svc = Arc::new(svc);
+        let stop = svc.stop_handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let svc = svc.clone();
+            std::thread::spawn(move || svc.serve_listener(listener))
+        };
+        let client = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            // Hammer PINGs until the server closes the connection.
+            loop {
+                if conn.write_all(b"PING\n").and_then(|_| conn.flush()).is_err() {
+                    break;
+                }
+                line.clear();
+                match reader.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let t0 = Instant::now();
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "busy client pinned serve for {:?}",
+            t0.elapsed()
+        );
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn request_split_across_read_polls_is_reassembled() {
+        // A request written byte-by-byte slower than the read poll must
+        // still parse as one line (partial reads stay buffered).
+        let (_d, svc) = service();
+        let svc = Arc::new(svc);
+        let stop = svc.stop_handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let svc = svc.clone();
+            std::thread::spawn(move || svc.serve_listener(listener))
+        };
+        let mut conn = TcpStream::connect(addr).unwrap();
+        for chunk in [&b"PI"[..], &b"NG"[..], &b"\n"[..]] {
+            conn.write_all(chunk).unwrap();
+            conn.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(60));
+        }
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"pong\":true"), "{line}");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn fnv_is_stable_and_discriminating() {
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+        assert_ne!(fnv1a(&1.0f32.to_le_bytes()), fnv1a(&1.5f32.to_le_bytes()));
     }
 }

@@ -313,6 +313,13 @@ fn cmd_serve(ctx: &Ctx, args: &[String]) -> Result<()> {
         .first()
         .map(|s| s.as_str())
         .unwrap_or("127.0.0.1:7878");
-    let svc = Service::new(ctx.catalog.clone(), ctx.cfg.spmm_opts()?);
+    // Concurrent SPMV/SPMM requests against one dataset coalesce into
+    // shared sweeps (`serve.batch_max` / `serve.batch_linger_ms` keys;
+    // batch_max=1 restores strict per-request engine calls).
+    let svc = Service::with_batch(
+        ctx.catalog.clone(),
+        ctx.cfg.spmm_opts()?,
+        ctx.cfg.batch_config()?,
+    );
     svc.serve(addr)
 }

@@ -240,6 +240,122 @@ impl OpAccum {
     }
 }
 
+/// A lock-free running maximum (high-water marks: batch occupancy, queue
+/// depth). `observe` is a CAS loop like [`MemStats`]'s peak update.
+#[derive(Debug, Default)]
+pub struct MaxGauge {
+    v: AtomicU64,
+}
+
+impl MaxGauge {
+    /// New gauge at zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Raise the gauge to `x` if `x` exceeds the current maximum.
+    pub fn observe(&self, x: u64) {
+        let mut cur = self.v.load(Ordering::Relaxed);
+        while x > cur {
+            match self
+                .v
+                .compare_exchange_weak(cur, x, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Current maximum.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero.
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Request-batching accounting for the serving coordinator (the
+/// ride-sharing level of the stats stack, above the op level): how many
+/// shared sweeps ran, how many riders they carried, and how many sparse
+/// bytes the sharing amortized away relative to one-engine-call-per-
+/// request serving. See [`crate::coordinator::batcher`].
+#[derive(Debug, Default)]
+pub struct BatchStats {
+    /// Streaming passes dispatched by the batcher.
+    pub passes: Counter,
+    /// Passes that carried two or more riders (actual sharing happened).
+    pub shared_passes: Counter,
+    /// Requests served (summed over passes).
+    pub riders: Counter,
+    /// Highest riders-in-one-pass observed.
+    pub occupancy_max: MaxGauge,
+    /// Logical sparse bytes the shared sweeps actually read.
+    pub swept_bytes: Counter,
+    /// Logical sparse bytes a per-request engine would have read for the
+    /// same requests (pass bytes × riders). `serial_equiv / swept` is the
+    /// amortization factor the batcher bought.
+    pub serial_equiv_bytes: Counter,
+    /// Wall time requests spent queued before their pass started.
+    pub queue_wait: TimeAccum,
+}
+
+impl BatchStats {
+    /// New zeroed stats block.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mean riders per pass (0 when no pass ran).
+    pub fn mean_occupancy(&self) -> f64 {
+        let p = self.passes.get();
+        if p == 0 {
+            return 0.0;
+        }
+        self.riders.get() as f64 / p as f64
+    }
+
+    /// Sparse-byte amortization factor: serial-equivalent bytes over
+    /// bytes actually swept (1.0 when nothing was shared or read).
+    pub fn amortization(&self) -> f64 {
+        let swept = self.swept_bytes.get();
+        if swept == 0 {
+            return 1.0;
+        }
+        self.serial_equiv_bytes.get() as f64 / swept as f64
+    }
+
+    /// Reset every figure to zero.
+    pub fn reset(&self) {
+        self.passes.reset();
+        self.shared_passes.reset();
+        self.riders.reset();
+        self.occupancy_max.reset();
+        self.swept_bytes.reset();
+        self.serial_equiv_bytes.reset();
+        self.queue_wait.reset();
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} riders over {} passes ({} shared, occupancy ≤{}, mean {:.2}), \
+             swept {} for a {}-worth of requests ({:.2}x amortized)",
+            self.riders.get(),
+            self.passes.get(),
+            self.shared_passes.get(),
+            self.occupancy_max.get(),
+            self.mean_occupancy(),
+            crate::util::human_bytes(self.swept_bytes.get()),
+            crate::util::human_bytes(self.serial_equiv_bytes.get()),
+            self.amortization(),
+        )
+    }
+}
+
 /// A simple stopwatch for benchmark harnesses.
 #[derive(Debug)]
 pub struct Stopwatch {
@@ -376,6 +492,54 @@ mod tests {
         a.reset();
         assert_eq!(a.rows_out.get(), 0);
         assert_eq!(a.kernel_time.secs(), 0.0);
+    }
+
+    #[test]
+    fn max_gauge_concurrent_keeps_maximum() {
+        let g = Arc::new(MaxGauge::new());
+        let hs: Vec<_> = (0..6)
+            .map(|t| {
+                let g = g.clone();
+                std::thread::spawn(move || {
+                    for i in 0..2000u64 {
+                        g.observe(t * 2000 + i);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(g.get(), 5 * 2000 + 1999);
+        g.reset();
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn batch_stats_amortization_and_occupancy() {
+        let b = BatchStats::new();
+        assert_eq!(b.amortization(), 1.0);
+        assert_eq!(b.mean_occupancy(), 0.0);
+        // Pass 1: 4 riders sharing a 100-byte sweep.
+        b.passes.inc();
+        b.shared_passes.inc();
+        b.riders.add(4);
+        b.occupancy_max.observe(4);
+        b.swept_bytes.add(100);
+        b.serial_equiv_bytes.add(400);
+        // Pass 2: a solo rider.
+        b.passes.inc();
+        b.riders.add(1);
+        b.occupancy_max.observe(1);
+        b.swept_bytes.add(100);
+        b.serial_equiv_bytes.add(100);
+        assert_eq!(b.occupancy_max.get(), 4);
+        assert!((b.mean_occupancy() - 2.5).abs() < 1e-12);
+        assert!((b.amortization() - 2.5).abs() < 1e-12);
+        assert_eq!(b.shared_passes.get(), 1);
+        b.reset();
+        assert_eq!(b.riders.get(), 0);
+        assert_eq!(b.amortization(), 1.0);
     }
 
     #[test]

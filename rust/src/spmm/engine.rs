@@ -101,7 +101,11 @@ impl SemSource {
     }
 }
 
-/// Where tile-row bytes come from.
+/// Where tile-row bytes come from. Cloning is cheap (the image is held
+/// by `Arc`, the SEM handle shares its store, index and tile-row cache)
+/// — the batching coordinator clones one source per dataset so queued
+/// requests against the same matrix share a sweep.
+#[derive(Clone)]
 pub enum Source {
     /// In-memory execution (IM-SpMM).
     Mem(Arc<TiledImage>),

@@ -79,32 +79,37 @@ pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<
     if pass.ops.is_empty() {
         bail!("stream pass has no ops");
     }
-    for op in &pass.ops {
+    for (i, op) in pass.ops.iter().enumerate() {
+        // Errors name the op (index, kind, caller label) — in a
+        // multi-rider batched pass the caller must know *which* request
+        // tripped validation.
         match op {
             PassOp::Forward(f) => {
                 if f.input.nrows != meta.ncols {
                     bail!(
-                        "input dense matrix has {} rows but sparse matrix has {} cols",
+                        "{}: input dense matrix has {} rows but sparse matrix has {} cols",
+                        op.tag(i),
                         f.input.nrows,
                         meta.ncols
                     );
                 }
                 if let OutputSink::Mem(out) = &f.sink {
                     if out.nrows != meta.nrows || out.ncols != f.input.ncols {
-                        bail!("output matrix shape mismatch");
+                        bail!("{}: output matrix shape mismatch", op.tag(i));
                     }
                 }
             }
             PassOp::Transpose(t) => {
                 if t.input.nrows != meta.nrows {
                     bail!(
-                        "transpose input has {} rows but sparse matrix has {} rows",
+                        "{}: transpose input has {} rows but sparse matrix has {} rows",
+                        op.tag(i),
                         t.input.nrows,
                         meta.nrows
                     );
                 }
                 if t.output.nrows != meta.ncols || t.output.ncols != t.input.ncols {
-                    bail!("transpose output shape mismatch");
+                    bail!("{}: transpose output shape mismatch", op.tag(i));
                 }
             }
         }
@@ -117,28 +122,29 @@ pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<
     // race.
     {
         let mut reads: Vec<*const NumaDense> = Vec::new();
-        let mut writes: Vec<*const NumaDense> = Vec::new();
-        for op in &pass.ops {
+        let mut writes: Vec<(usize, *const NumaDense)> = Vec::new();
+        for (i, op) in pass.ops.iter().enumerate() {
             match op {
                 PassOp::Forward(f) => {
                     reads.push(f.input as *const NumaDense);
                     if let OutputSink::Mem(out) = &f.sink {
-                        writes.push(*out as *const NumaDense);
+                        writes.push((i, *out as *const NumaDense));
                     }
                 }
                 PassOp::Transpose(t) => {
                     reads.push(t.input as *const NumaDense);
-                    writes.push(t.output as *const NumaDense);
+                    writes.push((i, t.output as *const NumaDense));
                 }
             }
         }
-        for (i, w) in writes.iter().enumerate() {
+        for (k, (opi, w)) in writes.iter().enumerate() {
             if reads.iter().any(|r| std::ptr::eq(*r, *w))
-                || writes[..i].iter().any(|w2| std::ptr::eq(*w2, *w))
+                || writes[..k].iter().any(|(_, w2)| std::ptr::eq(*w2, *w))
             {
                 bail!(
-                    "stream pass operands alias: a dense matrix is both \
-                     written and read (or written twice) in one pass"
+                    "stream pass operands alias at {}: a dense matrix is both \
+                     written and read (or written twice) in one pass",
+                    pass.ops[*opi].tag(*opi)
                 );
             }
         }
@@ -311,6 +317,7 @@ pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<
         .zip(&per_op_acc)
         .map(|(op, a)| OpStats {
             kind: op.kind(),
+            label: op.label().map(str::to_string),
             cols: op.cols(),
             kernel_secs: a.kernel_time.secs(),
             reduce_secs: a.reduce_time.secs(),
@@ -928,6 +935,93 @@ mod tests {
         for (a, &b) in got.data.iter().zip(&plain.data) {
             assert!((a - (2.0 * b + 1.0)).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn heterogeneous_width_ops_share_one_pass_exactly() {
+        // The batching coordinator compiles riders of different dense
+        // widths into one plan: every op must match its solo run
+        // bit-for-bit, and per-op stats must attribute by plan order,
+        // width and label.
+        let m = sample_csr(9, 6000, 51);
+        let img = Arc::new(TiledImage::build(&m, 128, TileFormat::Scsr));
+        let widths = [1usize, 3, 4, 8];
+        let opts = SpmmOpts {
+            threads: 3,
+            ..Default::default()
+        };
+        let cfg = ncfg(128, m.nrows.max(m.ncols), &opts);
+        let xs: Vec<NumaDense> = widths
+            .iter()
+            .map(|&p| NumaDense::from_dense(&DenseMatrix::random(m.ncols, p, 60 + p as u64), cfg))
+            .collect();
+        let outs: Vec<NumaDense> = widths
+            .iter()
+            .map(|&p| NumaDense::zeros(m.nrows, p, cfg))
+            .collect();
+        let mut pass = StreamPass::new();
+        for (i, x) in xs.iter().enumerate() {
+            pass = pass
+                .forward(x, OutputSink::Mem(&outs[i]))
+                .labeled(format!("rider{i}"));
+        }
+        let r = run_pass(&Source::Mem(img.clone()), &pass, &opts).unwrap();
+        assert_eq!(r.stats.per_op.len(), widths.len());
+        for (i, (op, &p)) in r.stats.per_op.iter().zip(&widths).enumerate() {
+            assert_eq!(op.kind, OpKind::Forward);
+            assert_eq!(op.cols, p, "op {i} width attribution");
+            assert_eq!(op.label.as_deref(), Some(format!("rider{i}").as_str()));
+            assert_eq!(op.rows_out, m.nrows as u64);
+        }
+        for (i, (x, out)) in xs.iter().zip(&outs).enumerate() {
+            let solo = NumaDense::zeros(m.nrows, widths[i], cfg);
+            run_pass(
+                &Source::Mem(img.clone()),
+                &StreamPass::new().forward(x, OutputSink::Mem(&solo)),
+                &opts,
+            )
+            .unwrap();
+            assert_eq!(
+                out.to_dense().data,
+                solo.to_dense().data,
+                "width {} diverged in the shared pass",
+                widths[i]
+            );
+        }
+    }
+
+    #[test]
+    fn errors_name_the_offending_op() {
+        // Per-op error attribution: a shared pass must say which op (and
+        // label) tripped validation, so a batched request failure can be
+        // routed to the right rider.
+        let m = sample_csr(8, 1500, 53);
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let opts = SpmmOpts::sequential();
+        let cfg = ncfg(64, m.nrows.max(m.ncols), &opts);
+        let good = NumaDense::zeros(m.ncols, 2, cfg);
+        let good_out = NumaDense::zeros(m.nrows, 2, cfg);
+        let bad = NumaDense::zeros(m.ncols + 5, 2, cfg);
+        let bad_out = NumaDense::zeros(m.nrows, 2, cfg);
+        let pass = StreamPass::new()
+            .forward(&good, OutputSink::Mem(&good_out))
+            .labeled("ok")
+            .forward(&bad, OutputSink::Mem(&bad_out))
+            .labeled("broken");
+        let err = run_pass(&Source::Mem(img.clone()), &pass, &opts).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("op 1"), "no op index in: {msg}");
+        assert!(msg.contains("broken"), "no label in: {msg}");
+        // Aliasing errors are attributed too.
+        let y = NumaDense::zeros(m.nrows, 2, cfg);
+        let tout = NumaDense::zeros(m.ncols, 2, cfg);
+        let pass = StreamPass::new()
+            .transpose(&y, &tout)
+            .labeled("first")
+            .transpose(&y, &tout)
+            .labeled("second");
+        let msg = format!("{:#}", run_pass(&Source::Mem(img), &pass, &opts).unwrap_err());
+        assert!(msg.contains("second"), "aliasing not attributed: {msg}");
     }
 
     #[test]

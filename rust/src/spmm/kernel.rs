@@ -510,6 +510,113 @@ mod tests {
         }
     }
 
+    /// Column-slice a row-major buffer: rows × `[c0, c0+w)` of a `p`-wide
+    /// buffer, as a contiguous `w`-wide buffer.
+    fn col_slice(x: &[f32], p: usize, c0: usize, w: usize) -> Vec<f32> {
+        let rows = x.len() / p;
+        let mut out = Vec::with_capacity(rows * w);
+        for r in 0..rows {
+            out.extend_from_slice(&x[r * p + c0..r * p + c0 + w]);
+        }
+        out
+    }
+
+    /// Merge a `w`-wide buffer back into columns `[c0, c0+w)` of `out`.
+    fn merge_cols(out: &mut [f32], p: usize, c0: usize, sub: &[f32], w: usize) {
+        for (r, chunk) in sub.chunks_exact(w).enumerate() {
+            out[r * p + c0..r * p + c0 + w].copy_from_slice(chunk);
+        }
+    }
+
+    /// Widths {3, 5, 7, 32} have no specialized kernel: the engine's
+    /// dispatch falls through to the generic loop. Check that fallback
+    /// differentially against the *width-specialized* kernels by
+    /// splitting the dense operand into specialized-width column panels
+    /// (16/8/4/2/1), running each panel through the specialized path,
+    /// and reassembling — the two routes must agree on weighted and
+    /// binary tiles, for gather and scatter, in both formats.
+    fn check_generic_vs_specialized(p: usize, weighted: bool, seed: u64) {
+        const SPECIALIZED: [usize; 5] = [16, 8, 4, 2, 1];
+        let t = 128u16;
+        let e = random_tile(t, 900, seed, weighted);
+        let vt = if weighted {
+            ValueType::F32
+        } else {
+            ValueType::Binary
+        };
+        let mut rng = Xoshiro256::new(seed ^ 0xD1);
+        let x: Vec<f32> = (0..t as usize * p).map(|_| rng.next_f32()).collect();
+
+        let mut sbuf = Vec::new();
+        scsr::encode(0, &e, vt, &mut sbuf);
+        let (sv, _) = scsr::parse(&sbuf, 0, vt);
+        let mut dbuf = Vec::new();
+        dcsc::encode(0, &e, vt, &mut dbuf);
+        let (dv, _) = dcsc::parse(&dbuf, 0, vt);
+
+        let k_scsr = |xin: &[f32], out: &mut [f32], w: usize| {
+            mul_tile_scsr(&sv, vt, xin, out, w, true)
+        };
+        let k_dcsc = |xin: &[f32], out: &mut [f32], w: usize| {
+            mul_tile_dcsc(&dv, vt, xin, out, w, true)
+        };
+        let k_scsr_t = |xin: &[f32], out: &mut [f32], w: usize| {
+            mul_tile_scsr_t(&sv, vt, xin, out, w, true)
+        };
+        let k_dcsc_t = |xin: &[f32], out: &mut [f32], w: usize| {
+            mul_tile_dcsc_t(&dv, vt, xin, out, w, true)
+        };
+        let kernels: [(&str, &dyn Fn(&[f32], &mut [f32], usize)); 4] = [
+            ("scsr", &k_scsr),
+            ("dcsc", &k_dcsc),
+            ("scsr_t", &k_scsr_t),
+            ("dcsc_t", &k_dcsc_t),
+        ];
+        for (name, kern) in kernels {
+            // Generic fallback at the full (non-specialized) width. The
+            // `vectorize = true` dispatch has no arm for p ∉ {1,2,4,8,16}
+            // and must take the same generic loop `vectorize = false`
+            // takes explicitly.
+            let mut generic = vec![0f32; t as usize * p];
+            kern(&x, &mut generic, p);
+            let mut scalar = vec![0f32; t as usize * p];
+            match name {
+                "scsr" => mul_tile_scsr(&sv, vt, &x, &mut scalar, p, false),
+                "dcsc" => mul_tile_dcsc(&dv, vt, &x, &mut scalar, p, false),
+                "scsr_t" => mul_tile_scsr_t(&sv, vt, &x, &mut scalar, p, false),
+                _ => mul_tile_dcsc_t(&dv, vt, &x, &mut scalar, p, false),
+            }
+            assert_eq!(generic, scalar, "{name} p={p}: dispatch not the generic loop");
+
+            // Specialized assembly: column panels of specialized widths.
+            let mut specialized = vec![0f32; t as usize * p];
+            let mut c0 = 0usize;
+            while c0 < p {
+                let w = *SPECIALIZED.iter().find(|&&w| w <= p - c0).unwrap();
+                let sub_in = col_slice(&x, p, c0, w);
+                let mut sub_out = vec![0f32; t as usize * w];
+                kern(&sub_in, &mut sub_out, w);
+                merge_cols(&mut specialized, p, c0, &sub_out, w);
+                c0 += w;
+            }
+            for (i, (a, b)) in generic.iter().zip(&specialized).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5 * b.abs().max(1.0),
+                    "{name} p={p} weighted={weighted} idx {i}: generic {a} vs specialized {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generic_fallback_matches_specialized_widths() {
+        for p in [3usize, 5, 7, 32] {
+            for weighted in [false, true] {
+                check_generic_vs_specialized(p, weighted, 0x57EED ^ p as u64);
+            }
+        }
+    }
+
     #[test]
     fn all_widths_binary() {
         for p in [1, 2, 3, 4, 5, 8, 16, 32] {

@@ -53,6 +53,10 @@ impl std::fmt::Display for OpKind {
 pub struct OpStats {
     /// Multiply direction.
     pub kind: OpKind,
+    /// Caller-assigned label of the op ([`StreamPass::labeled`]) — the
+    /// batching coordinator tags each rider's op with its request id so
+    /// per-request stats can be attributed out of a shared pass.
+    pub label: Option<String>,
     /// Dense width `p` of this op.
     pub cols: usize,
     /// Seconds inside this op's tile kernels, summed over workers.
@@ -85,6 +89,8 @@ pub struct ForwardOp<'a> {
     pub acc_len: usize,
     /// Fused per-interval reduction/map (see [`RowHook`]).
     pub hook: Option<RowHook<'a>>,
+    /// Attribution label (see [`StreamPass::labeled`]).
+    pub label: Option<String>,
 }
 
 /// Transpose SpMM during the sweep: `output ← Aᵀ · input`, accumulated
@@ -101,6 +107,8 @@ pub struct TransposeOp<'a> {
     pub acc_len: usize,
     /// Fused per-interval reduction/map (see [`RowHook`]).
     pub hook: Option<RowHook<'a>>,
+    /// Attribution label (see [`StreamPass::labeled`]).
+    pub label: Option<String>,
 }
 
 /// One operation of a [`StreamPass`].
@@ -135,6 +143,23 @@ impl PassOp<'_> {
             PassOp::Transpose(t) => t.acc_len,
         }
     }
+
+    /// Attribution label of this op, if one was set.
+    pub fn label(&self) -> Option<&str> {
+        match self {
+            PassOp::Forward(f) => f.label.as_deref(),
+            PassOp::Transpose(t) => t.label.as_deref(),
+        }
+    }
+
+    /// `"op 2 (A·X 'spmm#7')"`-style tag for error/stat attribution: in a
+    /// multi-rider pass, an executor error must name the op that tripped.
+    pub(crate) fn tag(&self, index: usize) -> String {
+        match self.label() {
+            Some(l) => format!("op {index} ({} '{l}')", self.kind()),
+            None => format!("op {index} ({})", self.kind()),
+        }
+    }
 }
 
 /// A plan for one streaming sweep of the sparse matrix: every op in
@@ -160,6 +185,7 @@ impl<'a> StreamPass<'a> {
             sink,
             acc_len: 0,
             hook: None,
+            label: None,
         }))
     }
 
@@ -177,6 +203,7 @@ impl<'a> StreamPass<'a> {
             sink,
             acc_len,
             hook: Some(hook),
+            label: None,
         }))
     }
 
@@ -187,6 +214,7 @@ impl<'a> StreamPass<'a> {
             output,
             acc_len: 0,
             hook: None,
+            label: None,
         }))
     }
 
@@ -204,7 +232,21 @@ impl<'a> StreamPass<'a> {
             output,
             acc_len,
             hook: Some(hook),
+            label: None,
         }))
+    }
+
+    /// Label the most recently added op. The label is carried into that
+    /// op's [`OpStats`] and into executor error messages, which is how a
+    /// multi-rider pass attributes stats and failures per request.
+    pub fn labeled(mut self, label: impl Into<String>) -> StreamPass<'a> {
+        if let Some(op) = self.ops.last_mut() {
+            match op {
+                PassOp::Forward(f) => f.label = Some(label.into()),
+                PassOp::Transpose(t) => t.label = Some(label.into()),
+            }
+        }
+        self
     }
 
     /// Append an already-built op.

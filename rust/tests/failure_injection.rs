@@ -284,6 +284,101 @@ fn healthy_sharded_run_unaffected_by_failure_of_unused_object() {
 }
 
 #[test]
+fn mid_batch_shard_error_fails_every_rider_but_not_the_batcher() {
+    // One dead shard of four mid-batch: every rider of that shared pass
+    // gets an error reply (naming the failure), while the dispatcher
+    // stays healthy — subsequent requests against an intact dataset on
+    // the same store are served correctly. No poisoned state, no hang.
+    use sem_spmm::coordinator::batcher::{BatchConfig, BatchJob, Batcher};
+    let dir = sem_spmm::util::tempdir();
+    let (s, m) = sharded_store_with_image(dir.path());
+    // A second, healthy image on the same sharded store.
+    let m2 = sample_image(&s, "ok.semm");
+    maim_shard(&s, 2, "m.semm");
+
+    let batcher = Batcher::new(
+        SpmmOpts {
+            threads: 2,
+            ..Default::default()
+        },
+        BatchConfig {
+            max_riders: 4,
+            max_linger: std::time::Duration::from_millis(40),
+        },
+    );
+    let src = Source::Sem(SemSource::open(&s, "m.semm").unwrap());
+    let tickets: Vec<_> = (0..3u64)
+        .map(|i| {
+            let x = DenseMatrix::random(m.ncols, 2, 50 + i);
+            batcher
+                .submit("broken", &src, BatchJob::forward(x, format!("r{i}")))
+                .unwrap()
+        })
+        .collect();
+    let mut failures = 0;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => {}
+            Err(e) => {
+                failures += 1;
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("batched pass"),
+                    "error must name the shared pass: {msg}"
+                );
+            }
+        }
+    }
+    assert_eq!(failures, 3, "every rider of the failed pass must error");
+
+    // The batcher keeps serving: a healthy dataset works right after.
+    let x = DenseMatrix::random(m2.ncols, 2, 9);
+    let ok_src = Source::Sem(SemSource::open(&s, "ok.semm").unwrap());
+    let r = batcher
+        .run("ok", &ok_src, BatchJob::forward(x.clone(), "after"))
+        .unwrap();
+    let expect = m2.spmm_ref(&x.data, 2);
+    for (a, b) in r.output.data.iter().zip(&expect) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+    }
+}
+
+#[test]
+fn service_survives_a_corrupted_dataset_and_keeps_serving() {
+    // Service-level continuity: a dataset whose tiled image rots on the
+    // store yields error replies, but the connection loop and batcher
+    // keep accepting and serving other datasets.
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    let catalog = Catalog::new(s.clone(), 256);
+    let svc = sem_spmm::coordinator::service::Service::new(
+        catalog,
+        SpmmOpts {
+            threads: 1,
+            ..Default::default()
+        },
+    );
+    // Materialize the dataset, then corrupt its adjacency image.
+    let info = svc.dispatch("INFO twitter").unwrap().unwrap();
+    assert!(info.get("nnz").is_some());
+    let spec = registry::by_name("twitter").unwrap().shrunk(12);
+    let imgs = Catalog::new(s.clone(), 256).ensure(&spec).unwrap();
+    s.put(&imgs.adj, &[0xAB; 128]).unwrap();
+    // The corrupted dataset errors (open or sweep — either way, loudly).
+    assert!(svc.dispatch("SPMV twitter").is_err());
+    // ...but the service still answers, including batched work on an
+    // intact dataset.
+    let r = svc.dispatch("PING").unwrap().unwrap();
+    assert!(r.get("pong").is_some());
+    let r = svc.dispatch("SPMV rmat-40").unwrap().unwrap();
+    let info = svc.dispatch("INFO rmat-40").unwrap().unwrap();
+    assert_eq!(
+        r.get("sum").unwrap().as_f64().unwrap(),
+        info.get("nnz").unwrap().as_f64().unwrap()
+    );
+}
+
+#[test]
 fn catalog_recovers_from_partially_deleted_dataset() {
     let dir = sem_spmm::util::tempdir();
     let s = store(dir.path());

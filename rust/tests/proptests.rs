@@ -4,7 +4,9 @@
 //! (see `sem_spmm::util::proptest` for the harness; failures print a
 //! replayable seed).
 
+use sem_spmm::coordinator::batcher::{BatchConfig, BatchJob, Batcher};
 use sem_spmm::coordinator::{MemBudget, PassPlan};
+use sem_spmm::graph::rmat;
 use sem_spmm::format::tiled::{decode_all, TiledImage};
 use sem_spmm::format::{dcsc, scsr, Csr, TileEntries, TileFormat, ValueType};
 use sem_spmm::matrix::DenseMatrix;
@@ -268,6 +270,163 @@ fn prop_budget_accounting_never_goes_negative() {
             return Err(format!("leak: {} bytes", budget.used()));
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_never_drops_duplicates_or_cross_delivers() {
+    // Batcher invariant: under arbitrary interleavings of concurrent
+    // enqueues and dispatches (random batch size / linger), every
+    // request resolves exactly once with exactly ITS result. Inputs are
+    // integer-tagged constants against a binary matrix, so each rider's
+    // correct output (`tag · rowdeg`) is exact in f32 — any drop,
+    // duplicate or cross-delivery is a hard mismatch, not a tolerance
+    // question.
+    let el = rmat::generate(9, 4000, rmat::RmatParams::default(), 77);
+    let m = Csr::from_edgelist(&el);
+    let n = m.ncols;
+    let rowdeg = m.spmm_ref(&vec![1f32; n], 1);
+    let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+    check("batcher-delivery", 8, |g| {
+        let src = Source::Mem(img.clone());
+        let cfg = BatchConfig {
+            max_riders: g.usize_in(1, 5),
+            max_linger: std::time::Duration::from_millis(g.usize_in(0, 4) as u64),
+        };
+        let opts = SpmmOpts {
+            threads: g.usize_in(1, 3),
+            ..Default::default()
+        };
+        let batcher = Batcher::new(opts, cfg);
+        const THREADS: usize = 3;
+        const JOBS: usize = 4;
+        let errs: Vec<String> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let batcher = &batcher;
+                    let src = &src;
+                    let rowdeg = &rowdeg;
+                    scope.spawn(move || -> Vec<String> {
+                        let mut errs = Vec::new();
+                        let tickets: Vec<(u32, usize, _)> = (0..JOBS)
+                            .map(|j| {
+                                let tag = (t * JOBS + j + 1) as u32;
+                                let p = 1 + (tag as usize % 3);
+                                let x = sem_spmm::matrix::DenseMatrix::full(
+                                    src.meta().ncols,
+                                    p,
+                                    tag as f32,
+                                );
+                                let tk = batcher
+                                    .submit("k", src, BatchJob::forward(x, format!("t{tag}")))
+                                    .unwrap();
+                                (tag, p, tk)
+                            })
+                            .collect();
+                        for (tag, p, tk) in tickets {
+                            let r = match tk.wait() {
+                                Ok(r) => r,
+                                Err(e) => {
+                                    errs.push(format!("tag {tag} dropped: {e:#}"));
+                                    continue;
+                                }
+                            };
+                            if r.output.ncols != p || r.output.nrows != rowdeg.len() {
+                                errs.push(format!("tag {tag}: wrong shape"));
+                                continue;
+                            }
+                            for (i, &v) in r.output.data.iter().enumerate() {
+                                let want = tag as f32 * rowdeg[i / p];
+                                if v != want {
+                                    errs.push(format!(
+                                        "tag {tag} row {}: got {v}, want {want} \
+                                         (cross-delivery or corruption)",
+                                        i / p
+                                    ));
+                                    break;
+                                }
+                            }
+                        }
+                        errs
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("submitter panicked"))
+                .collect()
+        });
+        if !errs.is_empty() {
+            return Err(errs.join("; "));
+        }
+        // Conservation: riders served == requests submitted, and no pass
+        // ever exceeded the configured occupancy.
+        let served = batcher.stats().riders.get();
+        if served != (THREADS * JOBS) as u64 {
+            return Err(format!("{served} riders served, expected {}", THREADS * JOBS));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pass_rejects_exactly_the_aliased_plans() {
+    // A pass must never carry two ops that write the same output, or an
+    // op whose input is another op's output — and must accept every
+    // non-aliased plan. Random plans over a pool of dense matrices probe
+    // both sides of the predicate.
+    // R-MAT edge lists produce square CSRs, so forward and transpose
+    // op shapes coincide and one matrix pool serves both roles.
+    let el = rmat::generate(8, 2000, rmat::RmatParams::default(), 79);
+    let m = Csr::from_edgelist(&el);
+    let n = m.nrows;
+    assert_eq!(n, m.ncols, "rmat CSR must be square");
+    let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+    check("pass-alias-rejection", 40, |g| {
+        let opts = SpmmOpts::sequential();
+        let cfg = sem_spmm::spmm::engine::numa_config(64, n, &opts);
+        let ins: Vec<sem_spmm::matrix::NumaDense> = (0..3u64)
+            .map(|i| {
+                sem_spmm::matrix::NumaDense::from_dense(
+                    &sem_spmm::matrix::DenseMatrix::random(n, 2, i),
+                    cfg,
+                )
+            })
+            .collect();
+        let outs: Vec<sem_spmm::matrix::NumaDense> = (0..3)
+            .map(|_| sem_spmm::matrix::NumaDense::zeros(n, 2, cfg))
+            .collect();
+        let n_ops = g.usize_in(1, 4);
+        let mut pass = sem_spmm::spmm::StreamPass::new();
+        let mut out_picks: Vec<usize> = Vec::new();
+        let mut in_picks: Vec<usize> = Vec::new(); // 0..2 ins, 3..5 outs
+        for _ in 0..n_ops {
+            let ii = g.usize_in(0, 5);
+            let oi = g.usize_in(0, 2);
+            let input = if ii < 3 { &ins[ii] } else { &outs[ii - 3] };
+            pass = if g.bool() {
+                pass.forward(input, sem_spmm::spmm::OutputSink::Mem(&outs[oi]))
+            } else {
+                pass.transpose(input, &outs[oi])
+            };
+            in_picks.push(ii);
+            out_picks.push(oi);
+        }
+        let mut expect_reject = false;
+        for (k, &oi) in out_picks.iter().enumerate() {
+            if out_picks[..k].contains(&oi) {
+                expect_reject = true;
+            }
+            if in_picks.iter().any(|&ii| ii == oi + 3) {
+                expect_reject = true;
+            }
+        }
+        let r = sem_spmm::spmm::run_pass(&Source::Mem(img.clone()), &pass, &opts);
+        match (expect_reject, r) {
+            (true, Ok(_)) => Err("aliased plan accepted".into()),
+            (false, Err(e)) => Err(format!("clean plan rejected: {e:#}")),
+            _ => Ok(()),
+        }
     });
 }
 

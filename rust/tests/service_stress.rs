@@ -1,0 +1,258 @@
+//! Service concurrency stress: many loopback clients hammering one
+//! dataset with mixed traffic. Every reply must be bit-identical to a
+//! serially computed reference, ride-sharing must actually happen
+//! (batch occupancy > 1 observed), and the acceptance criterion of the
+//! batching coordinator holds — 8 concurrent SPMM clients on a
+//! throttled 4-shard dataset stream ≤ 2× one request's sparse bytes,
+//! where serial serving streams 8×.
+
+use sem_spmm::config::json::Json;
+use sem_spmm::coordinator::batcher::{BatchConfig, BatchJob, Batcher};
+use sem_spmm::coordinator::service::{fnv1a, Service};
+use sem_spmm::coordinator::Catalog;
+use sem_spmm::graph::registry;
+use sem_spmm::io::{ShardedStore, StoreSpec};
+use sem_spmm::matrix::DenseMatrix;
+use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+fn opts() -> SpmmOpts {
+    SpmmOpts {
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+/// One line out, one JSON line back.
+fn request(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Json {
+    conn.write_all(req.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    conn.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad reply '{line}': {e:#}"))
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("no numeric '{key}' in {j}"))
+}
+
+#[test]
+fn eight_clients_mixed_traffic_bit_identical_with_sharing() {
+    let dir = sem_spmm::util::tempdir();
+    let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+    let catalog = Catalog::new(store.clone(), 256);
+
+    // Serial reference, computed before the service sees any traffic:
+    // the same dataset the service will resolve ("twitter" shrunk to
+    // scale 12), the same inputs (ones for SPMV; seed-1 random for SPMM).
+    let spec = registry::by_name("twitter").unwrap().shrunk(12);
+    let imgs = catalog.ensure(&spec).unwrap();
+    let n = imgs.num_verts;
+    let src = Source::Sem(catalog.open_adj(&imgs).unwrap());
+    let mut want_check = std::collections::HashMap::new();
+    for p in [4usize, 8] {
+        let x = DenseMatrix::random(n, p, 1);
+        let (out, _) = engine::spmm_out(&src, &x, &opts()).unwrap();
+        want_check.insert(p, format!("{:016x}", fnv1a(&out.to_le_bytes())));
+    }
+    let nnz = imgs.nnz as f64;
+
+    let svc = Arc::new(Service::with_batch(
+        catalog,
+        opts(),
+        BatchConfig {
+            max_riders: 8,
+            max_linger: Duration::from_millis(60),
+        },
+    ));
+    let stop = svc.stop_handle();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = {
+        let svc = svc.clone();
+        std::thread::spawn(move || svc.serve_listener(listener))
+    };
+
+    const CLIENTS: usize = 8;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let want_check = Arc::new(want_check);
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let barrier = barrier.clone();
+            let want_check = want_check.clone();
+            std::thread::spawn(move || -> u64 {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                let r = request(&mut conn, &mut reader, "PING");
+                assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
+                let r = request(&mut conn, &mut reader, "INFO twitter");
+                assert_eq!(num(&r, "nnz"), nnz, "client {c}: INFO nnz");
+                // All clients fire their SPMM together so the linger can
+                // coalesce them; widths 4 and 8 share the same sweep.
+                let p = if c % 2 == 0 { 4 } else { 8 };
+                barrier.wait();
+                let r = request(&mut conn, &mut reader, &format!("SPMM twitter {p}"));
+                assert!(
+                    r.get("error").is_none(),
+                    "client {c}: SPMM error {r}"
+                );
+                assert_eq!(
+                    r.get("check").and_then(|v| v.as_str()),
+                    Some(want_check[&p].as_str()),
+                    "client {c}: SPMM p={p} not bit-identical to serial"
+                );
+                let riders = num(&r, "riders") as u64;
+                assert!((1..=8).contains(&riders));
+                // Amortization accounting is self-consistent.
+                let pass_bytes = num(&r, "sparse_bytes");
+                let per_rider = num(&r, "sparse_bytes_per_rider");
+                assert!(per_rider <= pass_bytes);
+                // SPMV afterwards: ones vector sums to nnz exactly.
+                let r = request(&mut conn, &mut reader, "SPMV twitter");
+                assert_eq!(num(&r, "sum"), nnz, "client {c}: SPMV sum");
+                conn.write_all(b"QUIT\n").unwrap();
+                riders
+            })
+        })
+        .collect();
+    let max_riders_seen = handles
+        .into_iter()
+        .map(|h| h.join().expect("client panicked"))
+        .max()
+        .unwrap();
+
+    assert!(
+        max_riders_seen > 1,
+        "no SPMM reply reported sharing (max riders {max_riders_seen})"
+    );
+    let stats = svc.batch_stats();
+    assert!(stats.occupancy_max.get() > 1, "occupancy never exceeded 1");
+    assert!(stats.shared_passes.get() >= 1);
+    assert!(
+        stats.amortization() > 1.0,
+        "sharing must amortize sparse bytes: {}",
+        stats.summary()
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+/// The tentpole acceptance criterion, at the batcher level: 8 concurrent
+/// SPMM requests against one throttled 4-shard dataset read ≤ 2× one
+/// request's logical sparse bytes (vs exactly 8× served serially), with
+/// every reply bit-identical to its serial twin — and `max_riders = 1`
+/// reproduces the serial byte count exactly.
+#[test]
+fn eight_concurrent_spmm_clients_amortize_sparse_reads() {
+    let dir = sem_spmm::util::tempdir();
+    let store = ShardedStore::open(StoreSpec {
+        dir: dir.path().to_path_buf(),
+        shards: 4,
+        stripe_bytes: 64 << 10,
+        read_gbps: Some(0.5), // 2 GB/s aggregate — throttled but quick
+        write_gbps: None,
+        latency_us: 10,
+    })
+    .unwrap();
+    let el = sem_spmm::graph::rmat::generate(
+        11,
+        40_000,
+        sem_spmm::graph::rmat::RmatParams::default(),
+        7,
+    );
+    let m = sem_spmm::format::Csr::from_edgelist(&el);
+    let img = sem_spmm::format::tiled::TiledImage::build(
+        &m,
+        256,
+        sem_spmm::format::TileFormat::Scsr,
+    );
+    let mut buf = Vec::new();
+    img.write_to(&mut buf).unwrap();
+    store.put("m.semm", &buf).unwrap();
+
+    const CLIENTS: usize = 8;
+    let p = 4usize;
+    let xs: Vec<DenseMatrix> = (0..CLIENTS)
+        .map(|i| DenseMatrix::random(m.ncols, p, 70 + i as u64))
+        .collect();
+
+    // Serial baseline: one engine invocation per request.
+    let src = Source::Sem(SemSource::open(&store, "m.semm").unwrap());
+    let read0 = store.stats.bytes_read.get();
+    let serial: Vec<DenseMatrix> = xs
+        .iter()
+        .map(|x| engine::spmm_out(&src, x, &opts()).unwrap().0)
+        .collect();
+    let serial_bytes = store.stats.bytes_read.get() - read0;
+    let single_bytes = serial_bytes / CLIENTS as u64;
+    assert!(single_bytes > 0);
+    assert_eq!(
+        serial_bytes,
+        single_bytes * CLIENTS as u64,
+        "serial requests must each stream the matrix once"
+    );
+
+    // Batched: all 8 submit concurrently; the linger coalesces them.
+    let run_batched = |max_riders: usize| -> (u64, Vec<DenseMatrix>, u64) {
+        let batcher = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders,
+                max_linger: Duration::from_millis(100),
+            },
+        );
+        let src = Source::Sem(SemSource::open(&store, "m.semm").unwrap());
+        let read0 = store.stats.bytes_read.get();
+        let barrier = Barrier::new(CLIENTS);
+        let outs: Vec<DenseMatrix> = std::thread::scope(|scope| {
+            let handles: Vec<_> = xs
+                .iter()
+                .enumerate()
+                .map(|(i, x)| {
+                    let batcher = &batcher;
+                    let src = &src;
+                    let barrier = &barrier;
+                    scope.spawn(move || {
+                        barrier.wait();
+                        batcher
+                            .run("m", src, BatchJob::forward(x.clone(), format!("c{i}")))
+                            .unwrap()
+                            .output
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let bytes = store.stats.bytes_read.get() - read0;
+        (bytes, outs, batcher.stats().occupancy_max.get())
+    };
+
+    let (batched_bytes, batched, occupancy) = run_batched(8);
+    for (i, (a, b)) in batched.iter().zip(&serial).enumerate() {
+        assert_eq!(a.data, b.data, "client {i}: batched != serial");
+    }
+    assert!(occupancy > 1, "no sharing happened");
+    assert!(
+        batched_bytes <= 2 * single_bytes,
+        "8 riders read {batched_bytes} bytes; budget is 2x one request ({single_bytes})"
+    );
+
+    // Batch size 1 degrades exactly to serial per-request behavior.
+    let (solo_bytes, solo_outs, solo_occ) = run_batched(1);
+    assert_eq!(solo_occ, 1);
+    assert_eq!(
+        solo_bytes, serial_bytes,
+        "max_riders=1 must stream exactly what serial serving streams"
+    );
+    for (a, b) in solo_outs.iter().zip(&serial) {
+        assert_eq!(a.data, b.data, "max_riders=1 output differs from serial");
+    }
+}
