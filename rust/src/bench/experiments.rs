@@ -713,6 +713,7 @@ pub fn scale_shards(b: &Bench) -> Result<()> {
             read_gbps: Some(0.2),
             write_gbps: Some(0.2),
             latency_us: 30,
+            parity: false,
         })?;
         store.put("scale.semm", &buf)?;
         let sem = Source::Sem(SemSource::open(&store, "scale.semm")?);
@@ -759,6 +760,7 @@ pub fn cache_sweep(b: &Bench) -> Result<()> {
         read_gbps: Some(0.25),
         write_gbps: Some(0.25),
         latency_us: 30,
+        parity: false,
     })?;
     store.put("cache.semm", &buf)?;
 
@@ -840,6 +842,7 @@ pub fn fused_ops(b: &Bench) -> Result<()> {
         read_gbps: Some(0.25),
         write_gbps: Some(0.25),
         latency_us: 30,
+        parity: false,
     })?;
     store.put("fused.semm", &buf)?;
 
@@ -910,6 +913,7 @@ pub fn serve_batch(b: &Bench) -> Result<()> {
         read_gbps: Some(0.25),
         write_gbps: Some(0.25),
         latency_us: 30,
+        parity: false,
     })?;
     store.put("serve.semm", &buf)?;
 
@@ -938,8 +942,9 @@ pub fn serve_batch(b: &Bench) -> Result<()> {
             BatchConfig {
                 max_riders: 8,
                 max_linger: std::time::Duration::from_millis(20),
+                ..BatchConfig::default()
             },
-        );
+        )?;
         let src = Source::Sem(SemSource::open(&store, "serve.semm")?);
         let read0 = store.stats.bytes_read.get();
         let sw = crate::metrics::Stopwatch::start();
@@ -979,6 +984,157 @@ pub fn serve_batch(b: &Bench) -> Result<()> {
     b.emit(
         "serve_batch",
         "clients\tserial_secs\tserial_sparse_gb\tbatched_secs\tbatched_sparse_gb\toccupancy_max\tamortization",
+        &rows,
+    )
+}
+
+/// ---------------------------------------------------------- qos_tenants
+/// Multi-tenant QoS under faults: a wide "gold" tenant and a narrow
+/// "free" tenant share one batching coordinator over a parity-protected
+/// 4-shard array. The same mixed wave runs twice — once healthy, once
+/// with a shard killed mid-service — and every degraded reply must be
+/// bit-identical to its healthy twin while the store reports
+/// reconstructed reads. A final probe demonstrates bounded admission:
+/// an over-budget submission is rejected with a structured backpressure
+/// reply, not queued toward OOM. Reports per-phase/per-tenant queue
+/// waits and the degraded-read counters.
+pub fn qos_tenants(b: &Bench) -> Result<()> {
+    use crate::coordinator::batcher::{Backpressure, BatchConfig, BatchJob, Batcher};
+    let spec = b.dataset("rmat-160").unwrap();
+    let m = Csr::from_edgelist(&spec.build());
+    let img = TiledImage::build(&m, b.tile, TileFormat::Scsr);
+    let mut buf = Vec::new();
+    img.write_to(&mut buf)?;
+    // A parity-protected 4-shard array: one shard may die or stall and
+    // reads degrade to reconstruction instead of failing the pass. The
+    // small stripe keeps every shard populated even at smoke scales, so
+    // the dead-shard injection below always bites.
+    let store = crate::io::ShardedStore::open(crate::io::StoreSpec {
+        dir: b.store.spec().dir.join("qos-tenants"),
+        shards: 4,
+        stripe_bytes: 2048,
+        read_gbps: Some(0.5),
+        write_gbps: None,
+        latency_us: 30,
+        parity: true,
+    })?;
+    store.put("qos.semm", &buf)?;
+
+    let batcher = Batcher::new(
+        b.opts.clone(),
+        BatchConfig {
+            max_riders: 8,
+            max_linger: std::time::Duration::from_millis(20),
+            tenant_weights: vec![("gold".into(), 4.0), ("free".into(), 1.0)],
+            ..BatchConfig::default()
+        },
+    )?;
+
+    // Mixed profiles: gold runs wide SpMM requests, free runs narrow
+    // SPMV-sized ones; each wave submits all jobs concurrently. Seeds
+    // depend only on (width, j), so both waves use identical inputs.
+    let profiles: &[(&str, usize, usize)] = &[("gold", 4, 4), ("free", 1, 4)];
+    let run_wave = |tag: &str| -> Result<Vec<(String, crate::coordinator::RideResult)>> {
+        let src = Source::Sem(SemSource::open(&store, "qos.semm")?);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = profiles
+                .iter()
+                .flat_map(|&(tenant, width, jobs)| (0..jobs).map(move |j| (tenant, width, j)))
+                .map(|(tenant, width, j)| {
+                    let batcher = &batcher;
+                    let src = &src;
+                    let m = &m;
+                    scope.spawn(move || {
+                        let x =
+                            DenseMatrix::random(m.ncols, width, 90 + (width * 16 + j) as u64);
+                        batcher
+                            .run(
+                                "qos",
+                                src,
+                                BatchJob::forward(x, format!("{tag}-{tenant}{j}"))
+                                    .for_tenant(tenant),
+                            )
+                            .map(|r| (tenant.to_string(), r))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("qos client thread"))
+                .collect()
+        })
+    };
+
+    let healthy = run_wave("h")?;
+    anyhow::ensure!(
+        store.degraded.degraded_reads.get() == 0,
+        "healthy wave reconstructed reads"
+    );
+
+    // Kill one of the four shards mid-service: truncate its backing file.
+    let victim = store.spec().shard_dir(2).join("qos.semm");
+    let len = std::fs::metadata(&victim)?.len();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&victim)?
+        .set_len(len / 4)?;
+
+    let degraded = run_wave("d")?;
+    let dr = store.degraded.degraded_reads.get();
+    let rb = store.degraded.reconstructed_bytes.get();
+    anyhow::ensure!(dr > 0, "dead shard never triggered reconstruction");
+    for (i, ((ta, a), (tb, h))) in degraded.iter().zip(&healthy).enumerate() {
+        anyhow::ensure!(
+            ta == tb && a.output.data == h.output.data,
+            "job {i} (tenant {ta}): degraded reply diverged from healthy run"
+        );
+    }
+
+    let mut rows = Vec::new();
+    for (phase, wave, (p_dr, p_rb)) in [
+        ("healthy", &healthy, (0u64, 0u64)),
+        ("dead-shard", &degraded, (dr, rb)),
+    ] {
+        for &(tenant, _, _) in profiles {
+            let waits: Vec<f64> = wave
+                .iter()
+                .filter(|(t, _)| t.as_str() == tenant)
+                .map(|(_, r)| r.stats.queue_wait_secs * 1e3)
+                .collect();
+            let mean_wait = waits.iter().sum::<f64>() / waits.len().max(1) as f64;
+            rows.push(format!(
+                "{phase}\t{tenant}\t{}\t{mean_wait:.2}\t{p_dr}\t{p_rb}\tbit-identical",
+                waits.len()
+            ));
+        }
+    }
+
+    // Bounded admission: an 8-byte in-flight budget rejects any real job
+    // with a structured backpressure reply (never an unbounded queue).
+    let tight = Batcher::new(
+        b.opts.clone(),
+        BatchConfig {
+            byte_budget: 8,
+            ..BatchConfig::default()
+        },
+    )?;
+    let src = Source::Sem(SemSource::open(&store, "qos.semm")?);
+    let x = DenseMatrix::random(m.ncols, 1, 200);
+    let err = tight
+        .submit("qos", &src, BatchJob::forward(x, "over").for_tenant("free"))
+        .err()
+        .ok_or_else(|| anyhow::anyhow!("over-budget submission was admitted"))?;
+    let bp = err
+        .downcast_ref::<Backpressure>()
+        .ok_or_else(|| anyhow::anyhow!("rejection was not structured backpressure: {err:#}"))?;
+    rows.push(format!(
+        "backpressure\t{}\t1\t-\t-\t-\trejected (budget {} B)",
+        bp.limit, bp.byte_budget
+    ));
+
+    b.emit(
+        "qos_tenants",
+        "phase\ttenant\tjobs\tmean_wait_ms\tdegraded_reads\treconstructed_bytes\tverdict",
         &rows,
     )
 }

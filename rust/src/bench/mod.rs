@@ -71,6 +71,7 @@ impl Bench {
             read_gbps: (gbps > 0.0).then_some(gbps / shards as f64),
             write_gbps: (gbps > 0.0).then_some(gbps * 10.0 / 12.0 / shards as f64),
             latency_us: if gbps > 0.0 { 30 } else { 0 },
+            parity: false,
         }
     }
 
@@ -125,14 +126,16 @@ impl Bench {
 }
 
 /// All experiment names, in paper order. `scale_shards`, `cache_sweep`,
-/// `fused_ops` and `serve_batch` are this reproduction's extensions:
-/// read throughput vs. simulated device count, iterative SpMM time vs.
-/// tile-row-cache budget, fused single-sweep vs. two-pass NMF I/O, and
-/// ride-sharing batched serving vs. one-engine-call-per-request.
+/// `fused_ops`, `serve_batch` and `qos_tenants` are this reproduction's
+/// extensions: read throughput vs. simulated device count, iterative
+/// SpMM time vs. tile-row-cache budget, fused single-sweep vs. two-pass
+/// NMF I/O, ride-sharing batched serving vs.
+/// one-engine-call-per-request, and multi-tenant QoS with parity
+/// reconstruction through an injected dead shard.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig5a", "fig5b", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "tab2", "fig14", "fig15", "fig16", "scale_shards", "cache_sweep", "fused_ops",
-    "serve_batch",
+    "serve_batch", "qos_tenants",
 ];
 
 /// Run one experiment by name.
@@ -157,6 +160,7 @@ pub fn run(bench: &Bench, exp: &str) -> Result<()> {
         "cache_sweep" => cache_sweep(bench),
         "fused_ops" => fused_ops(bench),
         "serve_batch" => serve_batch(bench),
+        "qos_tenants" => qos_tenants(bench),
         "all" => {
             for e in ALL_EXPERIMENTS {
                 if *e == "fig5b" {

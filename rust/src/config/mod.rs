@@ -18,6 +18,11 @@
 //! pagerank.tol       = 1e-7       # in-pass L1 residual early stop (0 = off)
 //! serve.batch_max       = 8       # riders per shared serve-mode sweep (1 = off)
 //! serve.batch_linger_ms = 2       # max wait for co-riders before dispatch
+//! store.parity       = on         # XOR parity shard: degraded reads survive a dead shard
+//! serve.queue_depth  = 64         # per-tenant queued-job bound (0 = unbounded)
+//! serve.byte_budget_mb = 256      # per-tenant in-flight byte budget (MiB, 0 = unlimited)
+//! serve.tenant_weights = gold:4,free:1   # weighted-fair shares (unlisted = 1)
+//! serve.max_inflight = 2          # concurrent shared passes (0 = unbounded)
 //! ```
 //!
 //! Sections map onto [`crate::io::StoreSpec`], [`crate::spmm::SpmmOpts`],
@@ -112,7 +117,9 @@ impl Config {
 
     /// Build the sharded-store spec (`store.*` keys). Bandwidth keys are
     /// **per shard**; `store.shards = 1` (the default) reproduces the
-    /// single-device store.
+    /// single-device store. `store.parity` (default off) adds one XOR
+    /// parity shard per stripe group so reads survive a single
+    /// slow-or-dead shard via reconstruction.
     pub fn store_spec(&self) -> Result<StoreSpec> {
         let dir = PathBuf::from(self.get_or("store.dir", "sem-store"));
         let read = self.get_f64("store.read_gbps", 0.0)?;
@@ -124,6 +131,7 @@ impl Config {
             read_gbps: (read > 0.0).then_some(read),
             write_gbps: (write > 0.0).then_some(write),
             latency_us: self.get_usize("store.latency_us", 0)? as u64,
+            parity: self.get_bool("store.parity", false)?,
         })
     }
 
@@ -167,10 +175,19 @@ impl Config {
         self.get_f64("pagerank.tol", 0.0)
     }
 
-    /// Serve-mode batching knobs (`serve.batch_max`, the most requests
-    /// one shared sweep may carry — clamped to ≥ 1, where 1 reproduces
-    /// per-request engine calls exactly — and `serve.batch_linger_ms`,
-    /// how long a queued request waits for co-riders).
+    /// Serve-mode batching and QoS knobs:
+    ///
+    /// * `serve.batch_max` — most requests one shared sweep may carry
+    ///   (clamped to ≥ 1; 1 reproduces per-request engine calls).
+    /// * `serve.batch_linger_ms` — how long a queued request waits for
+    ///   co-riders.
+    /// * `serve.queue_depth` — most jobs one tenant may have queued
+    ///   (0 = unbounded); overflow gets a structured backpressure reply.
+    /// * `serve.byte_budget_mb` — per-tenant in-flight byte budget in
+    ///   MiB (0 = unlimited).
+    /// * `serve.tenant_weights` — `name:weight` pairs, comma-separated
+    ///   (e.g. `gold:4,free:1`); unlisted tenants ride at weight 1.
+    /// * `serve.max_inflight` — concurrent shared passes (0 = unbounded).
     pub fn batch_config(&self) -> Result<crate::coordinator::BatchConfig> {
         let d = crate::coordinator::BatchConfig::default();
         let linger_ms = self.get_f64(
@@ -185,9 +202,40 @@ impl Config {
                  and <= 3600000"
             );
         }
+        let budget_mb = self.get_f64("serve.byte_budget_mb", 0.0)?;
+        if !(0.0..=1e12).contains(&budget_mb) {
+            anyhow::bail!(
+                "config serve.byte_budget_mb={budget_mb}: must be finite and >= 0"
+            );
+        }
+        let mut tenant_weights = Vec::new();
+        if let Some(spec) = self.get("serve.tenant_weights") {
+            for pair in spec.split(',').filter(|p| !p.trim().is_empty()) {
+                let Some((name, w)) = pair.split_once(':') else {
+                    bail!(
+                        "config serve.tenant_weights: '{pair}' is not 'name:weight'"
+                    );
+                };
+                let w: f64 = w
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("config serve.tenant_weights: '{pair}'"))?;
+                if !(w > 0.0 && w.is_finite()) {
+                    bail!(
+                        "config serve.tenant_weights: weight for '{}' must be finite and > 0",
+                        name.trim()
+                    );
+                }
+                tenant_weights.push((name.trim().to_string(), w));
+            }
+        }
         Ok(crate::coordinator::BatchConfig {
             max_riders: self.get_usize("serve.batch_max", d.max_riders)?.max(1),
             max_linger: std::time::Duration::from_secs_f64(linger_ms / 1e3),
+            queue_depth: self.get_usize("serve.queue_depth", d.queue_depth)?,
+            byte_budget: (budget_mb * (1u64 << 20) as f64) as u64,
+            tenant_weights,
+            max_inflight: self.get_usize("serve.max_inflight", d.max_inflight)?,
         })
     }
 }
@@ -265,6 +313,52 @@ mod tests {
             let c = Config::parse(&format!("serve.batch_linger_ms = {bad}\n")).unwrap();
             assert!(c.batch_config().is_err(), "linger '{bad}' must be rejected");
         }
+    }
+
+    #[test]
+    fn serve_qos_keys_default_and_parse() {
+        let c = Config::parse("").unwrap();
+        let b = c.batch_config().unwrap();
+        assert_eq!(b.queue_depth, 0, "queue depth defaults unbounded");
+        assert_eq!(b.byte_budget, 0, "byte budget defaults unlimited");
+        assert!(b.tenant_weights.is_empty());
+        assert_eq!(b.max_inflight, 0);
+        let c = Config::parse(
+            "serve.queue_depth = 16\nserve.byte_budget_mb = 1.5\n\
+             serve.tenant_weights = gold:4, free:0.5\nserve.max_inflight = 2\n",
+        )
+        .unwrap();
+        let b = c.batch_config().unwrap();
+        assert_eq!(b.queue_depth, 16);
+        assert_eq!(b.byte_budget, (1.5 * (1u64 << 20) as f64) as u64);
+        assert_eq!(
+            b.tenant_weights,
+            vec![("gold".to_string(), 4.0), ("free".to_string(), 0.5)]
+        );
+        assert_eq!(b.weight("gold"), 4.0);
+        assert_eq!(b.weight("unlisted"), 1.0);
+        assert_eq!(b.max_inflight, 2);
+        for bad in [
+            "serve.tenant_weights = gold",
+            "serve.tenant_weights = gold:zero",
+            "serve.tenant_weights = gold:-1",
+            "serve.tenant_weights = gold:inf",
+            "serve.byte_budget_mb = -2",
+            "serve.byte_budget_mb = nan",
+        ] {
+            let c = Config::parse(&format!("{bad}\n")).unwrap();
+            assert!(c.batch_config().is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn store_parity_key() {
+        let c = Config::parse("").unwrap();
+        assert!(!c.store_spec().unwrap().parity, "parity defaults off");
+        let c = Config::parse("store.parity = on\n").unwrap();
+        assert!(c.store_spec().unwrap().parity);
+        let c = Config::parse("store.parity = sideways\n").unwrap();
+        assert!(c.store_spec().is_err());
     }
 
     #[test]

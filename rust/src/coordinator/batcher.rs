@@ -32,14 +32,42 @@
 //! A pass failure (e.g. a shard read error mid-sweep) fails **every**
 //! rider of that pass with an error naming the cause; the dispatcher
 //! and its queues stay healthy and keep serving subsequent requests.
+//!
+//! # Multi-tenant QoS
+//!
+//! Jobs carry a **tenant** label ([`BatchJob::for_tenant`]); admission
+//! and dispatch are tenant-aware:
+//!
+//! * **Bounded admission** — [`BatchConfig::queue_depth`] caps how many
+//!   jobs one tenant may have waiting and
+//!   [`BatchConfig::byte_budget`] caps its in-flight bytes (dense input
+//!   + output of queued and running jobs). Overflow is rejected at
+//!   [`Batcher::submit`] with a structured [`Backpressure`] error —
+//!   an immediate, machine-readable "back off", never an unbounded
+//!   queue marching toward OOM.
+//! * **Weighted-fair dispatch** — when a drain has more waiting jobs
+//!   than seats, seats go to tenants by stride scheduling over
+//!   per-tenant virtual time ([`BatchConfig::tenant_weights`]): each
+//!   seat charges its tenant `cost / weight`, and the lowest virtual
+//!   time rides first. A tenant flooding wide SpMM jobs advances its
+//!   clock quickly, so a narrow SPMV tenant's jobs keep boarding the
+//!   next pass instead of starving at the back of a FIFO line.
+//! * **Bounded concurrency** — [`BatchConfig::max_inflight`] caps
+//!   concurrent passes, which is what makes the fair picker (not
+//!   thread-spawn order) decide service order under saturation.
+//!
+//! All shared state is poison-tolerant: a panicking rider hook fails
+//! its own pass (the panic is caught and reported per rider) and the
+//! dispatcher keeps serving everyone else.
 
 use crate::matrix::{DenseMatrix, NumaDense};
 use crate::metrics::BatchStats;
 use crate::spmm::{engine, exec, OutputSink, Source, SpmmOpts, StreamPass};
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Admission-control knobs for the batcher (config keys `serve.batch_*`).
@@ -53,6 +81,27 @@ pub struct BatchConfig {
     /// is dispatched anyway. Irrelevant at `max_riders = 1` (a lone
     /// request is already a full batch).
     pub max_linger: Duration,
+    /// Most jobs one tenant may have queued (awaiting dispatch) at
+    /// once; `0` = unbounded. Overflow is rejected at submit with a
+    /// structured [`Backpressure`] error (config key
+    /// `serve.queue_depth`).
+    pub queue_depth: usize,
+    /// Per-tenant in-flight byte budget — dense input plus output bytes
+    /// of the tenant's queued *and running* jobs; `0` = unlimited.
+    /// Overflow backpressures at submit (config key
+    /// `serve.byte_budget_mb`).
+    pub byte_budget: u64,
+    /// Weighted-fair shares per tenant (`(name, weight)`); tenants not
+    /// listed ride at weight 1. A seat on a pass charges its tenant
+    /// `cost / weight` of virtual time, so twice the weight is twice
+    /// the share of seats under contention (config key
+    /// `serve.tenant_weights`).
+    pub tenant_weights: Vec<(String, f64)>,
+    /// Most shared passes allowed to run concurrently; `0` = unbounded
+    /// (every drained batch spawns immediately, the pre-QoS behavior).
+    /// Bounding it is what lets queued jobs accumulate so the fair
+    /// picker decides boarding order under saturation.
+    pub max_inflight: usize,
 }
 
 impl Default for BatchConfig {
@@ -60,9 +109,66 @@ impl Default for BatchConfig {
         BatchConfig {
             max_riders: 8,
             max_linger: Duration::from_millis(2),
+            queue_depth: 0,
+            byte_budget: 0,
+            tenant_weights: Vec::new(),
+            max_inflight: 0,
         }
     }
 }
+
+impl BatchConfig {
+    /// The fair-share weight for `tenant`: its entry in
+    /// [`Self::tenant_weights`], else 1. Clamped to ≥ 0.001 so a
+    /// misconfigured zero/negative weight throttles instead of dividing
+    /// by zero.
+    pub fn weight(&self, tenant: &str) -> f64 {
+        self.tenant_weights
+            .iter()
+            .find(|(n, _)| n == tenant)
+            .map(|(_, w)| w.max(1e-3))
+            .unwrap_or(1.0)
+    }
+}
+
+/// Structured admission-control rejection: the submitting tenant's
+/// bounded queue or in-flight byte budget is full. Carried as the root
+/// cause of the `anyhow::Error` returned by [`Batcher::submit`]
+/// (downcast to recover the fields), so the service layer can send the
+/// client a machine-readable reply to back off and retry — the
+/// alternative to an unbounded queue is an immediate, honest no.
+#[derive(Debug, Clone)]
+pub struct Backpressure {
+    /// Tenant whose budget is exhausted.
+    pub tenant: String,
+    /// Jobs the tenant had queued (awaiting dispatch) at rejection.
+    pub queued: usize,
+    /// The configured queue bound (0 = unbounded).
+    pub queue_depth: usize,
+    /// Bytes of queued + running work attributed to the tenant.
+    pub in_flight_bytes: u64,
+    /// The configured byte budget (0 = unlimited).
+    pub byte_budget: u64,
+    /// Which bound tripped: `"queue_depth"` or `"byte_budget"`.
+    pub limit: &'static str,
+}
+
+impl std::fmt::Display for Backpressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "backpressure ({}) for tenant '{}': {} queued (depth {}), {} in-flight bytes (budget {})",
+            self.limit,
+            self.tenant,
+            self.queued,
+            self.queue_depth,
+            self.in_flight_bytes,
+            self.byte_budget
+        )
+    }
+}
+
+impl std::error::Error for Backpressure {}
 
 /// An owned fused hook: like [`crate::spmm::RowHook`] but `'static` and
 /// `Send`, since the pass runs on the dispatcher thread, not the
@@ -83,6 +189,10 @@ pub struct BatchJob {
     /// Attribution label: carried into the op's stats and any executor
     /// error, so shared-pass failures name the request.
     pub label: String,
+    /// Tenant the job bills against for admission control and
+    /// weighted-fair dispatch. Defaults to `""` — all unattributed
+    /// jobs share one lane, exactly the pre-QoS behavior.
+    pub tenant: String,
 }
 
 impl BatchJob {
@@ -93,6 +203,7 @@ impl BatchJob {
             acc_len: 0,
             hook: None,
             label: label.into(),
+            tenant: String::new(),
         }
     }
 
@@ -108,7 +219,15 @@ impl BatchJob {
             acc_len,
             hook: Some(hook),
             label: label.into(),
+            tenant: String::new(),
         }
+    }
+
+    /// Bill this job to `tenant` (builder style) for admission control
+    /// and weighted-fair dispatch.
+    pub fn for_tenant(mut self, tenant: impl Into<String>) -> BatchJob {
+        self.tenant = tenant.into();
+        self
     }
 }
 
@@ -131,6 +250,15 @@ pub struct RideStats {
     /// Seconds inside this rider's tile kernels (its op's attribution
     /// out of the shared pass, summed over workers).
     pub kernel_secs: f64,
+    /// Dispatch sequence number of the pass this request rode (0-based,
+    /// monotone in dispatch order). Lets fairness tests assert *when* a
+    /// tenant boarded, independent of wall-clock jitter.
+    pub pass_seq: u64,
+    /// Parity-reconstructed shard reads the shared sweep served (SEM
+    /// sources on a parity store; 0 on healthy stores).
+    pub degraded_reads: u64,
+    /// Bytes the sweep rebuilt by XOR reconstruction.
+    pub reconstructed_bytes: u64,
 }
 
 /// What a completed ride hands back.
@@ -161,6 +289,9 @@ struct Pending {
     job: BatchJob,
     enqueued: Instant,
     tx: mpsc::Sender<Result<RideResult>>,
+    /// Admission cost charged at submit (input + output bytes);
+    /// released against the tenant's budget when the ride is delivered.
+    bytes: u64,
 }
 
 struct Queue {
@@ -175,8 +306,30 @@ struct Queue {
     pending: VecDeque<Pending>,
 }
 
+/// One tenant's admission + fair-share bookkeeping. Entries live only
+/// while the tenant has work queued or running (evicted at idle, so
+/// hostile tenant-name churn cannot grow the map without bound).
+#[derive(Default)]
+struct Tenant {
+    /// Jobs queued, awaiting dispatch (bounded by `queue_depth`).
+    queued: usize,
+    /// Bytes of queued + running work (bounded by `byte_budget`).
+    in_flight_bytes: u64,
+    /// Stride-scheduling virtual time: advanced `cost / weight` per
+    /// seat. Compared against the global `vclock` floor at pick time,
+    /// so an idle tenant re-enters at the current clock instead of
+    /// replaying banked idle time.
+    vtime: f64,
+}
+
 struct State {
     queues: HashMap<String, Queue>,
+    tenants: HashMap<String, Tenant>,
+    /// Fair-share floor: the virtual service start of the most recent
+    /// seat. New or re-activating tenants board at this clock.
+    vclock: f64,
+    /// Passes currently running (bounded by `max_inflight`).
+    inflight: usize,
     shutdown: bool,
 }
 
@@ -186,6 +339,17 @@ struct Shared {
     state: Mutex<State>,
     cv: Condvar,
     stats: BatchStats,
+    /// Dispatch-order sequence number handed to each pass.
+    pass_seq: AtomicU64,
+}
+
+/// Poison-tolerant lock (the satellite bugfix): a panicking rider hook
+/// or dispatcher iteration must never wedge the whole service, so a
+/// poisoned guard is recovered. Every critical section below leaves the
+/// bookkeeping consistent before any call that could unwind, so the
+/// recovered state is always usable.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// The batching coordinator. Owns one dispatcher thread; dropping the
@@ -198,8 +362,10 @@ pub struct Batcher {
 
 impl Batcher {
     /// Start a batcher running passes with `opts` under `cfg`'s
-    /// admission control.
-    pub fn new(opts: SpmmOpts, cfg: BatchConfig) -> Batcher {
+    /// admission control. Fails (instead of aborting the process) if
+    /// the dispatcher thread cannot be spawned — the caller's serve
+    /// startup propagates the error.
+    pub fn new(opts: SpmmOpts, cfg: BatchConfig) -> Result<Batcher> {
         let shared = Arc::new(Shared {
             cfg: BatchConfig {
                 max_riders: cfg.max_riders.max(1),
@@ -208,22 +374,26 @@ impl Batcher {
             opts,
             state: Mutex::new(State {
                 queues: HashMap::new(),
+                tenants: HashMap::new(),
+                vclock: 0.0,
+                inflight: 0,
                 shutdown: false,
             }),
             cv: Condvar::new(),
             stats: BatchStats::new(),
+            pass_seq: AtomicU64::new(0),
         });
         let dispatcher = {
             let shared = shared.clone();
             std::thread::Builder::new()
                 .name("sem-batcher".into())
                 .spawn(move || dispatch_loop(shared))
-                .expect("spawning batcher dispatcher")
+                .map_err(|e| anyhow!("spawning batcher dispatcher: {e}"))?
         };
-        Batcher {
+        Ok(Batcher {
             shared,
             dispatcher: Some(dispatcher),
-        }
+        })
     }
 
     /// Queue `job` against the dataset identified by `key`. `source` is
@@ -232,7 +402,10 @@ impl Batcher {
     /// submitted source, and drained queues are evicted — so a rebuilt
     /// dataset is never swept through a stale handle). The job's shape
     /// is validated *here*, so a malformed request is rejected
-    /// immediately instead of poisoning a shared pass.
+    /// immediately instead of poisoning a shared pass — and the
+    /// tenant's queue-depth and byte-budget bounds are enforced here
+    /// too: overflow returns a structured [`Backpressure`] error
+    /// without queuing anything.
     pub fn submit(&self, key: &str, source: &Source, job: BatchJob) -> Result<Ticket> {
         let meta = source.meta();
         if job.input.ncols == 0 {
@@ -246,12 +419,44 @@ impl Batcher {
                 meta.ncols
             );
         }
+        // Admission cost: the rider's dense input plus the output the
+        // pass will allocate for it — the two allocations its ride pins.
+        let bytes = 4 * (job.input.nrows as u64 + meta.nrows as u64) * job.input.ncols as u64;
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock(&self.shared.state);
             if st.shutdown {
                 bail!("batcher is shutting down");
             }
+            let (depth, budget) = (self.shared.cfg.queue_depth, self.shared.cfg.byte_budget);
+            let (queued, in_flight_bytes) = st
+                .tenants
+                .get(&job.tenant)
+                .map(|t| (t.queued, t.in_flight_bytes))
+                .unwrap_or((0, 0));
+            if depth > 0 && queued >= depth {
+                return Err(anyhow::Error::new(Backpressure {
+                    tenant: job.tenant.clone(),
+                    queued,
+                    queue_depth: depth,
+                    in_flight_bytes,
+                    byte_budget: budget,
+                    limit: "queue_depth",
+                }));
+            }
+            if budget > 0 && in_flight_bytes.saturating_add(bytes) > budget {
+                return Err(anyhow::Error::new(Backpressure {
+                    tenant: job.tenant.clone(),
+                    queued,
+                    queue_depth: depth,
+                    in_flight_bytes,
+                    byte_budget: budget,
+                    limit: "byte_budget",
+                }));
+            }
+            let t = st.tenants.entry(job.tenant.clone()).or_default();
+            t.queued += 1;
+            t.in_flight_bytes += bytes;
             let q = st.queues.entry(key.to_string()).or_insert_with(|| Queue {
                 source: source.clone(),
                 pending: VecDeque::new(),
@@ -267,6 +472,7 @@ impl Batcher {
                 job,
                 enqueued: Instant::now(),
                 tx,
+                bytes,
             });
         }
         self.shared.cv.notify_all();
@@ -287,7 +493,7 @@ impl Batcher {
 impl Drop for Batcher {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock(&self.shared.state);
             st.shutdown = true;
         }
         self.shared.cv.notify_all();
@@ -306,8 +512,16 @@ impl Drop for Batcher {
 /// skipped) and every in-flight pass joined before the thread exits.
 fn dispatch_loop(sh: Arc<Shared>) {
     let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    let mut st = sh.state.lock().unwrap();
+    let mut st = lock(&sh.state);
     loop {
+        // Bound concurrent passes: while the pool is full, queued jobs
+        // accumulate and the weighted-fair picker — not thread-spawn
+        // order — decides who boards next. Pass completions notify the
+        // condvar, so this also makes progress during shutdown drain.
+        if sh.cfg.max_inflight > 0 && st.inflight >= sh.cfg.max_inflight {
+            st = sh.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+            continue;
+        }
         let now = Instant::now();
         // Scan: a full queue dispatches now; otherwise the earliest
         // linger deadline decides what to wait for.
@@ -338,7 +552,7 @@ fn dispatch_loop(sh: Arc<Shared>) {
                     }
                     return;
                 }
-                st = sh.cv.wait(st).unwrap();
+                st = sh.cv.wait(st).unwrap_or_else(|p| p.into_inner());
                 continue;
             }
         };
@@ -346,37 +560,106 @@ fn dispatch_loop(sh: Arc<Shared>) {
             let (guard, _) = sh
                 .cv
                 .wait_timeout(st, deadline.duration_since(now))
-                .unwrap();
+                .unwrap_or_else(|p| p.into_inner());
             st = guard;
             continue;
         }
-        let (source, riders) = {
-            let q = st.queues.get_mut(&key).expect("scanned queue exists");
-            let n = q.pending.len().min(sh.cfg.max_riders);
-            let drained = (q.source.clone(), q.pending.drain(..n).collect::<Vec<_>>());
-            if q.pending.is_empty() {
-                // Evict drained entries: bounds the map and drops the
-                // burst's source (and any tile-row cache it pinned).
-                st.queues.remove(&key);
-            }
-            drained
+        let stref = &mut *st;
+        // The scan above ran under this same guard, so the key should
+        // still resolve — but a missing queue is a rescan, not a panic
+        // that would kill the dispatcher and strand every ticket.
+        let Some(q) = stref.queues.get_mut(&key) else {
+            continue;
         };
+        let n = q.pending.len().min(sh.cfg.max_riders);
+        let source = q.source.clone();
+        let mut riders: Vec<Pending> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Weighted-fair seat assignment: each tenant's candidate is
+            // its first queued job (FIFO within a tenant); among the
+            // candidates the lowest effective virtual time boards, and
+            // the seat charges its tenant `cost / weight` — stride
+            // scheduling, so a tenant flooding wide jobs advances its
+            // clock fast and cannot starve a light tenant.
+            let mut chosen = 0usize;
+            let mut chosen_vt = f64::INFINITY;
+            {
+                let mut seen: Vec<&str> = Vec::new();
+                for (i, p) in q.pending.iter().enumerate() {
+                    if seen.iter().any(|t| *t == p.job.tenant) {
+                        continue;
+                    }
+                    seen.push(p.job.tenant.as_str());
+                    let vt = stref
+                        .tenants
+                        .get(&p.job.tenant)
+                        .map(|t| t.vtime)
+                        .unwrap_or(stref.vclock)
+                        .max(stref.vclock);
+                    if vt < chosen_vt {
+                        chosen_vt = vt;
+                        chosen = i;
+                    }
+                }
+            }
+            let Some(p) = q.pending.remove(chosen) else { break };
+            stref.vclock = chosen_vt;
+            let w = sh.cfg.weight(&p.job.tenant);
+            let t = stref.tenants.entry(p.job.tenant.clone()).or_default();
+            t.vtime = chosen_vt + p.bytes as f64 / w;
+            t.queued = t.queued.saturating_sub(1);
+            riders.push(p);
+        }
+        if q.pending.is_empty() {
+            // Evict drained entries: bounds the map and drops the
+            // burst's source (and any tile-row cache it pinned).
+            stref.queues.remove(&key);
+        }
+        stref.inflight += 1;
         drop(st);
+        let seq = sh.pass_seq.fetch_add(1, Ordering::Relaxed);
         workers.retain(|h| !h.is_finished());
         let shw = sh.clone();
         workers.push(std::thread::spawn(move || {
-            run_batch(&shw, &source, riders)
+            run_batch(&shw, &source, riders, seq)
         }));
-        st = sh.state.lock().unwrap();
+        st = lock(&sh.state);
     }
+}
+
+/// Release a finished pass's admission charges and its in-flight slot.
+/// Runs *before* results are delivered, so a client woken by its ticket
+/// observes its budget already freed. Fully-idle tenants are evicted
+/// (their fair-share clock restarts at the global floor on return).
+fn finish_batch(sh: &Shared, charges: &[(String, u64)]) {
+    let mut st = lock(&sh.state);
+    st.inflight = st.inflight.saturating_sub(1);
+    for (tenant, bytes) in charges {
+        let evict = match st.tenants.get_mut(tenant) {
+            Some(t) => {
+                t.in_flight_bytes = t.in_flight_bytes.saturating_sub(*bytes);
+                t.queued == 0 && t.in_flight_bytes == 0
+            }
+            None => false,
+        };
+        if evict {
+            st.tenants.remove(tenant);
+        }
+    }
+    drop(st);
+    sh.cv.notify_all();
 }
 
 /// Compile `riders` into one [`StreamPass`] — one labeled forward op per
 /// rider, each with its own freshly allocated striped input and output
 /// (distinct allocations, so pass operands can never alias) — execute it
 /// with a single sweep of `source`, and deliver per-rider results.
-fn run_batch(sh: &Shared, source: &Source, riders: Vec<Pending>) {
+fn run_batch(sh: &Shared, source: &Source, riders: Vec<Pending>, seq: u64) {
     let t0 = Instant::now();
+    let charges: Vec<(String, u64)> = riders
+        .iter()
+        .map(|p| (p.job.tenant.clone(), p.bytes))
+        .collect();
     let meta = source.meta().clone();
     let ncfg = engine::numa_config(meta.tile, meta.nrows.max(meta.ncols), &sh.opts);
     let n = riders.len();
@@ -413,8 +696,25 @@ fn run_batch(sh: &Shared, source: &Source, riders: Vec<Pending>) {
             };
             pass = pass.labeled(p.job.label.as_str());
         }
-        exec::run_pass(source, &pass, &sh.opts)
+        // A panicking rider hook unwinds out of the pass's worker join;
+        // catch it here and fail this pass's riders like any other pass
+        // error — the dispatcher and every other tenant keep serving.
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec::run_pass(source, &pass, &sh.opts)
+        }))
+        .unwrap_or_else(|payload| {
+            let what = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(anyhow!("pass panicked: {what}"))
+        })
     };
+
+    // Free budgets before waking anyone: a client that sees its ticket
+    // resolve can immediately resubmit without a backpressure race.
+    finish_batch(sh, &charges);
 
     match result {
         Ok(r) => {
@@ -439,6 +739,9 @@ fn run_batch(sh: &Shared, source: &Source, riders: Vec<Pending>) {
                         logical_bytes_per_rider: per_rider,
                         pass_physical_bytes: r.stats.physical_bytes_read,
                         kernel_secs: r.stats.per_op[i].kernel_secs,
+                        pass_seq: seq,
+                        degraded_reads: r.stats.degraded_reads,
+                        reconstructed_bytes: r.stats.reconstructed_bytes,
                     },
                 };
                 // A rider may have hung up (client disconnect) — fine.
@@ -490,8 +793,10 @@ mod tests {
             BatchConfig {
                 max_riders: 1,
                 max_linger: Duration::from_millis(50),
+                ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         for p in [1usize, 3, 4] {
             let x = DenseMatrix::random(m.ncols, p, 7 + p as u64);
             let (want, _) = engine::spmm_out(&src, &x, &opts()).unwrap();
@@ -514,8 +819,10 @@ mod tests {
             BatchConfig {
                 max_riders: 8,
                 max_linger: Duration::from_millis(80),
+                ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let widths = [1usize, 2, 3, 8];
         let xs: Vec<DenseMatrix> = widths
             .iter()
@@ -552,8 +859,10 @@ mod tests {
             BatchConfig {
                 max_riders: 4,
                 max_linger: Duration::from_millis(80),
+                ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let x = DenseMatrix::random(m.ncols, 1, 5);
         let hook: BatchHook = Box::new(|_, rows, acc| {
             for v in rows.iter_mut() {
@@ -583,7 +892,7 @@ mod tests {
     #[test]
     fn malformed_job_rejected_at_submit_not_in_pass() {
         let (_m, src) = sample_source(8, 1000, 19);
-        let b = Batcher::new(opts(), BatchConfig::default());
+        let b = Batcher::new(opts(), BatchConfig::default()).unwrap();
         let bad = DenseMatrix::random(7, 2, 1); // wrong row count
         assert!(b.submit("k", &src, BatchJob::forward(bad, "bad")).is_err());
         let zero = DenseMatrix::zeros(0, 0);
@@ -599,8 +908,10 @@ mod tests {
             BatchConfig {
                 max_riders: 8,
                 max_linger: Duration::from_secs(5), // would linger long
+                ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let x = DenseMatrix::random(m.ncols, 2, 3);
         let t = b
             .submit("k", &src, BatchJob::forward(x.clone(), "late"))
@@ -620,8 +931,10 @@ mod tests {
             BatchConfig {
                 max_riders: 4,
                 max_linger: Duration::from_millis(40),
+                ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let x1 = DenseMatrix::random(m1.ncols, 2, 1);
         let x2 = DenseMatrix::random(m2.ncols, 2, 2);
         let t1 = b.submit("a", &s1, BatchJob::forward(x1.clone(), "a")).unwrap();
@@ -636,5 +949,170 @@ mod tests {
         assert_eq!(r1.stats.riders, 1);
         assert_eq!(r2.stats.riders, 1);
         assert_eq!(b.stats().passes.get(), 2);
+    }
+
+    #[test]
+    fn panicking_hook_leaves_the_batcher_serving() {
+        // Regression for the poisoned-mutex service death: a rider hook
+        // that panics must fail only its own pass — the dispatcher,
+        // queues and locks stay healthy for everyone after it.
+        let (m, src) = sample_source(8, 2000, 37);
+        let b = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders: 1, // the panicking job rides alone
+                max_linger: Duration::from_millis(5),
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        let x = DenseMatrix::random(m.ncols, 2, 4);
+        let bomb: BatchHook = Box::new(|_, _, _| panic!("hook went off"));
+        let err = b
+            .run("k", &src, BatchJob::with_hook(x.clone(), "bomb", 1, bomb))
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("panicked"),
+            "error should name the panic: {err:#}"
+        );
+        // The service keeps serving, and correctly.
+        let r = b.run("k", &src, BatchJob::forward(x.clone(), "after")).unwrap();
+        let (want, _) = engine::spmm_out(&src, &x, &opts()).unwrap();
+        assert_eq!(r.output.data, want.data);
+    }
+
+    #[test]
+    fn queue_depth_overflow_gets_structured_backpressure() {
+        let (m, src) = sample_source(8, 2000, 41);
+        let b = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders: 8,
+                max_linger: Duration::from_millis(150),
+                queue_depth: 1,
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        let x = DenseMatrix::random(m.ncols, 1, 2);
+        let t1 = b
+            .submit("k", &src, BatchJob::forward(x.clone(), "first"))
+            .unwrap();
+        // Second submit while the first lingers: rejected, structured.
+        let err = b
+            .submit("k", &src, BatchJob::forward(x.clone(), "second"))
+            .unwrap_err();
+        let bp = err
+            .downcast_ref::<Backpressure>()
+            .expect("backpressure must downcast");
+        assert_eq!(bp.limit, "queue_depth");
+        assert_eq!(bp.queued, 1);
+        assert_eq!(bp.queue_depth, 1);
+        t1.wait().unwrap();
+        // Budget freed: the tenant is admitted again.
+        let r = b.run("k", &src, BatchJob::forward(x.clone(), "third")).unwrap();
+        let (want, _) = engine::spmm_out(&src, &x, &opts()).unwrap();
+        assert_eq!(r.output.data, want.data);
+    }
+
+    #[test]
+    fn byte_budget_overflow_gets_structured_backpressure() {
+        let (m, src) = sample_source(8, 2000, 43);
+        // One width-1 job costs 4·(ncols + nrows) bytes; budget admits
+        // one such job but not two at once.
+        let meta = src.meta();
+        let one_job = 4 * (meta.ncols as u64 + meta.nrows as u64);
+        let b = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders: 8,
+                max_linger: Duration::from_millis(100),
+                byte_budget: one_job + one_job / 2,
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        let x = DenseMatrix::random(m.ncols, 1, 3);
+        let t1 = b
+            .submit("k", &src, BatchJob::forward(x.clone(), "fits"))
+            .unwrap();
+        let err = b
+            .submit("k", &src, BatchJob::forward(x.clone(), "over"))
+            .unwrap_err();
+        let bp = err
+            .downcast_ref::<Backpressure>()
+            .expect("backpressure must downcast");
+        assert_eq!(bp.limit, "byte_budget");
+        assert_eq!(bp.in_flight_bytes, one_job);
+        t1.wait().unwrap();
+        // Charges are released before tickets resolve, so a resubmit
+        // straight after wait() is deterministic, not a race.
+        b.run("k", &src, BatchJob::forward(x, "again")).unwrap();
+    }
+
+    #[test]
+    fn weighted_fair_dispatch_boards_the_narrow_tenant_early() {
+        // A wide tenant floods the queue behind a blocker pass; with
+        // max_inflight = 1 nothing else dispatches until the blocker
+        // finishes, so the fair picker (not submit order) decides
+        // boarding. The narrow tenant's lone job must board long before
+        // the whale's tail instead of queuing behind all of it.
+        let (m, src) = sample_source(8, 2000, 47);
+        let b = Batcher::new(
+            opts(),
+            BatchConfig {
+                max_riders: 1, // one seat per pass: pick order is visible
+                max_linger: Duration::ZERO,
+                max_inflight: 1,
+                tenant_weights: vec![("minnow".into(), 2.0)],
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        let x1 = DenseMatrix::random(m.ncols, 1, 5);
+        // Blocker: holds the single in-flight slot while we queue.
+        let gate: BatchHook = Box::new(|_, _, _| {
+            std::thread::sleep(Duration::from_millis(120));
+        });
+        let tb = b
+            .submit(
+                "k",
+                &src,
+                BatchJob::with_hook(x1.clone(), "gate", 1, gate).for_tenant("gate"),
+            )
+            .unwrap();
+        let whale_tickets: Vec<Ticket> = (0..6)
+            .map(|i| {
+                b.submit(
+                    "k",
+                    &src,
+                    BatchJob::forward(DenseMatrix::random(m.ncols, 4, 50 + i), format!("w{i}"))
+                        .for_tenant("whale"),
+                )
+                .unwrap()
+            })
+            .collect();
+        let tn = b
+            .submit(
+                "k",
+                &src,
+                BatchJob::forward(x1.clone(), "narrow").for_tenant("minnow"),
+            )
+            .unwrap();
+        let narrow = tn.wait().unwrap();
+        let whale_seqs: Vec<u64> = whale_tickets
+            .into_iter()
+            .map(|t| t.wait().unwrap().stats.pass_seq)
+            .collect();
+        tb.wait().unwrap();
+        let later_whales = whale_seqs
+            .iter()
+            .filter(|&&s| s > narrow.stats.pass_seq)
+            .count();
+        assert!(
+            later_whales >= 4,
+            "narrow rider (seq {}) should board before most of the whale flood (seqs {whale_seqs:?})",
+            narrow.stats.pass_seq
+        );
     }
 }

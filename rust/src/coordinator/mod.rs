@@ -13,7 +13,7 @@ pub mod catalog;
 pub mod service;
 pub mod vert;
 
-pub use batcher::{BatchConfig, BatchJob, Batcher, RideResult, RideStats, Ticket};
+pub use batcher::{Backpressure, BatchConfig, BatchJob, Batcher, RideResult, RideStats, Ticket};
 pub use catalog::{Catalog, DatasetImages};
 pub use vert::{spmm_vert, VertReport};
 

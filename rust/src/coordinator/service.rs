@@ -12,6 +12,7 @@
 //!
 //! ```text
 //! PING
+//! TENANT <name>
 //! INFO <dataset>
 //! SPMV <dataset>
 //! SPMM <dataset> <cols>
@@ -28,9 +29,19 @@
 //! request's amortized share), plus a `check` field — an FNV-1a hash of
 //! the output bytes, so clients (and the stress tests) can assert
 //! bit-identical results against a serial run. `STATS` reports the
-//! service-wide batching counters.
+//! service-wide batching counters plus the store's degraded-read
+//! counters (parity reconstructions, see `store.parity`).
+//!
+//! `TENANT <name>` attributes the connection's subsequent batched
+//! requests to a tenant for admission control and weighted-fair
+//! dispatch (`serve.queue_depth` / `serve.byte_budget_mb` /
+//! `serve.tenant_weights`). A submission rejected by admission control
+//! gets a structured reply — `{"backpressure":true, "limit":..,
+//! "tenant":.., "queued":.., "queue_depth":.., "in_flight_bytes":..,
+//! "byte_budget":..}` — not a hung or dropped connection, so clients
+//! know to back off and retry.
 
-use super::batcher::{BatchConfig, BatchJob, Batcher};
+use super::batcher::{Backpressure, BatchConfig, BatchJob, Batcher};
 use super::catalog::Catalog;
 use crate::apps::{eigen, nmf, pagerank};
 use crate::config::json::Json;
@@ -67,21 +78,24 @@ pub struct Service {
 
 impl Service {
     /// A service with default batching ([`BatchConfig::default`]).
-    pub fn new(catalog: Catalog, opts: SpmmOpts) -> Service {
+    /// Fails if the batcher's dispatcher thread cannot be spawned.
+    pub fn new(catalog: Catalog, opts: SpmmOpts) -> Result<Service> {
         Self::with_batch(catalog, opts, BatchConfig::default())
     }
 
     /// A service with explicit batching knobs (`serve.batch_*` config
     /// keys). `max_riders = 1` reproduces per-request engine calls.
-    pub fn with_batch(catalog: Catalog, opts: SpmmOpts, batch: BatchConfig) -> Service {
-        let batcher = Batcher::new(opts.clone(), batch);
-        Service {
+    /// Fails (propagated through serve startup, not a process abort) if
+    /// the batcher's dispatcher thread cannot be spawned.
+    pub fn with_batch(catalog: Catalog, opts: SpmmOpts, batch: BatchConfig) -> Result<Service> {
+        let batcher = Batcher::new(opts.clone(), batch)?;
+        Ok(Service {
             catalog,
             opts,
             stop: Arc::new(AtomicBool::new(false)),
             batcher,
             ensure_locks: Mutex::new(std::collections::HashMap::new()),
-        }
+        })
     }
 
     /// A handle that makes `serve` return promptly (bounded by the
@@ -144,14 +158,15 @@ impl Service {
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut out = stream;
         let mut line = String::new();
+        let mut tenant = String::new();
         loop {
             match reader.read_line(&mut line) {
                 Ok(0) => return Ok(()), // client hung up
                 Ok(_) => {
-                    let reply = match self.dispatch(line.trim()) {
+                    let reply = match self.dispatch_as(line.trim(), &mut tenant) {
                         Ok(Some(j)) => j,
                         Ok(None) => return Ok(()), // QUIT
-                        Err(e) => Json::obj().set("error", format!("{e:#}")),
+                        Err(e) => error_reply(&e),
                     };
                     line.clear();
                     out.write_all(reply.to_string().as_bytes())?;
@@ -180,15 +195,30 @@ impl Service {
         }
     }
 
-    /// Execute one request; `None` means close the connection.
+    /// Execute one request under the anonymous tenant; `None` means
+    /// close the connection. Convenience wrapper over
+    /// [`Self::dispatch_as`] for callers without connection state.
     pub fn dispatch(&self, req: &str) -> Result<Option<Json>> {
+        let mut tenant = String::new();
+        self.dispatch_as(req, &mut tenant)
+    }
+
+    /// Execute one request, attributing batched work to `tenant` (the
+    /// connection's current lane; the `TENANT` verb rebinds it).
+    /// `None` means close the connection.
+    pub fn dispatch_as(&self, req: &str, tenant: &mut String) -> Result<Option<Json>> {
         let parts: Vec<&str> = req.split_whitespace().collect();
         let sw = Stopwatch::start();
         let reply = match parts.as_slice() {
             ["PING"] => Json::obj().set("pong", true),
             ["QUIT"] => return Ok(None),
+            ["TENANT", name] => {
+                *tenant = name.to_string();
+                Json::obj().set("tenant", *name)
+            }
             ["STATS"] => {
                 let s = self.batch_stats();
+                let d = &self.catalog.store().degraded;
                 Json::obj()
                     .set("passes", s.passes.get())
                     .set("shared_passes", s.shared_passes.get())
@@ -198,6 +228,8 @@ impl Service {
                     .set("swept_bytes", s.swept_bytes.get())
                     .set("serial_equiv_bytes", s.serial_equiv_bytes.get())
                     .set("amortization", s.amortization())
+                    .set("degraded_reads", d.degraded_reads.get())
+                    .set("reconstructed_bytes", d.reconstructed_bytes.get())
             }
             ["INFO", ds] => {
                 let imgs = self.ensure(ds)?;
@@ -210,9 +242,11 @@ impl Service {
                 let imgs = self.ensure(ds)?;
                 let src = Source::Sem(self.catalog.open_adj(&imgs)?);
                 let x = DenseMatrix::from_col(&vec![1f32; imgs.num_verts]);
-                let r = self
-                    .batcher
-                    .run(&imgs.adj, &src, BatchJob::forward(x, format!("SPMV {ds}")))?;
+                let r = self.batcher.run(
+                    &imgs.adj,
+                    &src,
+                    BatchJob::forward(x, format!("SPMV {ds}")).for_tenant(tenant.clone()),
+                )?;
                 let sum: f64 = r.output.data.iter().map(|&v| v as f64).sum();
                 ride_fields(
                     Json::obj()
@@ -229,7 +263,7 @@ impl Service {
                 let r = self.batcher.run(
                     &imgs.adj,
                     &src,
-                    BatchJob::forward(x, format!("SPMM {ds} p={p}")),
+                    BatchJob::forward(x, format!("SPMM {ds} p={p}")).for_tenant(tenant.clone()),
                 )?;
                 let sum: f64 = r.output.data.iter().map(|&v| v as f64).sum();
                 ride_fields(
@@ -329,6 +363,25 @@ fn ride_fields(j: Json, r: &super::batcher::RideResult) -> Json {
         .set("queue_ms", r.stats.queue_wait_secs * 1e3)
         .set("sparse_bytes", r.stats.pass_logical_bytes)
         .set("sparse_bytes_per_rider", r.stats.logical_bytes_per_rider)
+        .set("pass_seq", r.stats.pass_seq)
+        .set("degraded_reads", r.stats.degraded_reads)
+}
+
+/// Serialize a request failure. Admission-control rejections become a
+/// structured backpressure reply (machine-readable bounds, so clients
+/// back off and retry); everything else is a plain `error` object.
+fn error_reply(e: &anyhow::Error) -> Json {
+    match e.downcast_ref::<Backpressure>() {
+        Some(bp) => Json::obj()
+            .set("backpressure", true)
+            .set("limit", bp.limit)
+            .set("tenant", bp.tenant.clone())
+            .set("queued", bp.queued)
+            .set("queue_depth", bp.queue_depth)
+            .set("in_flight_bytes", bp.in_flight_bytes)
+            .set("byte_budget", bp.byte_budget),
+        None => Json::obj().set("error", format!("{e:#}")),
+    }
 }
 
 /// FNV-1a over a byte string — the reply checksum clients use to assert
@@ -360,7 +413,8 @@ mod tests {
                     threads: 2,
                     ..Default::default()
                 },
-            ),
+            )
+            .unwrap(),
         )
     }
 
@@ -516,6 +570,53 @@ mod tests {
         assert!(line.contains("\"pong\":true"), "{line}");
         stop.store(true, Ordering::Relaxed);
         server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn tenant_verb_rebinds_the_connection_lane() {
+        let (_d, svc) = service();
+        let mut tenant = String::new();
+        let r = svc.dispatch_as("TENANT alice", &mut tenant).unwrap().unwrap();
+        assert_eq!(r.get("tenant").and_then(|j| j.as_str()), Some("alice"));
+        assert_eq!(tenant, "alice");
+        // Attributed requests still serve correctly.
+        let r = svc.dispatch_as("SPMV twitter", &mut tenant).unwrap().unwrap();
+        assert!(r.get("sum").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn over_budget_submission_gets_a_structured_backpressure_reply() {
+        // A byte budget smaller than any job: every batched request is
+        // rejected at admission with a machine-readable reply (what a
+        // connection handler writes back), never a panic or a hang.
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let catalog = Catalog::new(store, 256);
+        let svc = Service::with_batch(
+            catalog,
+            SpmmOpts {
+                threads: 2,
+                ..Default::default()
+            },
+            BatchConfig {
+                byte_budget: 8,
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        let mut tenant = "tiny".to_string();
+        let err = svc.dispatch_as("SPMV twitter", &mut tenant).unwrap_err();
+        let j = error_reply(&err);
+        assert_eq!(j.get("backpressure"), Some(&Json::Bool(true)));
+        assert_eq!(
+            j.get("limit").and_then(|v| v.as_str()),
+            Some("byte_budget")
+        );
+        assert_eq!(j.get("tenant").and_then(|v| v.as_str()), Some("tiny"));
+        assert_eq!(j.get("byte_budget").unwrap().as_f64().unwrap(), 8.0);
+        // Non-batched verbs still work under the same service.
+        let r = svc.dispatch_as("PING", &mut tenant).unwrap().unwrap();
+        assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
     }
 
     #[test]

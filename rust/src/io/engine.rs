@@ -14,7 +14,6 @@
 use super::cache::FillGuard;
 use super::pool::BufferPool;
 use super::sharded::ShardedFile;
-use super::store::StoreFile;
 use crate::io::ShardedStore;
 use anyhow::{anyhow, Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -133,8 +132,13 @@ impl IoTicket {
 
 /// One sub-read routed to a shard's queue.
 struct Job {
-    /// Shard-level file handle (throttled + metered by its shard).
-    file: StoreFile,
+    /// The logical object handle: the worker reads shard `shard` through
+    /// it (throttled + metered by that shard), and — when the object has
+    /// parity coverage — can reconstruct the extent from the surviving
+    /// shards if the addressed one fails or is badly backlogged.
+    file: Arc<ShardedFile>,
+    /// Which shard this sub-read addresses.
+    shard: usize,
     local_off: u64,
     len: usize,
     /// Scatter list: (offset within the logical buffer, piece length).
@@ -267,11 +271,13 @@ impl IoEngine {
             state.done.store(true, Ordering::Release);
             state.cv.notify_all();
         } else {
+            let fh = Arc::new(file.clone());
             for sub in subs {
                 let whole = sub.is_whole(len);
                 self.senders[sub.shard]
                     .send(Msg::Read(Job {
-                        file: file.shard_handle(sub.shard).clone(),
+                        file: fh.clone(),
+                        shard: sub.shard,
                         local_off: sub.local_off,
                         len: sub.len,
                         chunks: sub.chunks,
@@ -301,6 +307,10 @@ impl IoEngine {
 }
 
 /// Execute one sub-read and publish its slice of the logical buffer.
+/// The read goes through [`ShardedFile::read_local`], so a failed or
+/// badly backlogged shard is served by parity reconstruction (running on
+/// this shard's own I/O worker — the healthy shards' queues stay free)
+/// when the object carries parity, and fails the ticket otherwise.
 fn run_read(job: Job, pool: &BufferPool) {
     if job.whole {
         // Single-sub fast path (always taken on single-shard stores):
@@ -308,7 +318,7 @@ fn run_read(job: Job, pool: &BufferPool) {
         let taken = { job.state.slot.lock().unwrap().buf.take() };
         match taken {
             Some(mut buf) => {
-                let res = job.file.read_at(job.local_off, &mut buf);
+                let res = job.file.read_local(job.shard, job.local_off, &mut buf);
                 let mut slot = job.state.slot.lock().unwrap();
                 match res {
                     Ok(()) => slot.buf = Some(buf),
@@ -331,7 +341,7 @@ fn run_read(job: Job, pool: &BufferPool) {
         // Scatter path: one contiguous local read into a pooled scratch
         // buffer, then copy the stripe pieces into place.
         let mut scratch = pool.get(job.len);
-        let res = job.file.read_at(job.local_off, &mut scratch);
+        let res = job.file.read_local(job.shard, job.local_off, &mut scratch);
         {
             let mut slot = job.state.slot.lock().unwrap();
             match res {
@@ -381,6 +391,14 @@ mod tests {
     }
 
     fn setup_sharded(shards: usize, stripe: usize) -> (crate::util::TempDir, Arc<ShardedStore>) {
+        setup_spec(shards, stripe, false)
+    }
+
+    fn setup_spec(
+        shards: usize,
+        stripe: usize,
+        parity: bool,
+    ) -> (crate::util::TempDir, Arc<ShardedStore>) {
         let dir = crate::util::tempdir();
         let store = ShardedStore::open(StoreSpec {
             dir: dir.path().to_path_buf(),
@@ -389,6 +407,7 @@ mod tests {
             read_gbps: None,
             write_gbps: None,
             latency_us: 0,
+            parity,
         })
         .unwrap();
         (dir, store)
@@ -495,6 +514,36 @@ mod tests {
             assert!(b.iter().all(|&x| x == 7));
             eng.recycle(b);
         }
+    }
+
+    #[test]
+    fn dead_shard_with_parity_serves_degraded_async_reads() {
+        // Same injection as the fail-hard test above, but with parity:
+        // every ticket must now succeed with the exact original bytes,
+        // and the reconstruction must be visible in the degraded stats.
+        let (_d, store) = setup_spec(4, 1024, true);
+        let data: Vec<u8> = (0..64 * 1024u32).map(|i| (i % 239) as u8).collect();
+        store.put("obj", &data).unwrap();
+        let victim = store.spec().shard_dir(2).join("obj");
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&victim)
+            .unwrap()
+            .set_len(0)
+            .unwrap();
+        let f = store.open_file("obj").unwrap();
+        assert!(f.has_parity());
+        let eng = IoEngine::new(&store, 2, BufferPool::new(true, 16));
+        for polling in [true, false] {
+            let t = eng.submit(&f, 0, 16 * 1024);
+            let b = t.wait(polling).unwrap_or_else(|e| {
+                panic!("degraded read failed (polling={polling}): {e:#}")
+            });
+            assert_eq!(&b[..], &data[..16 * 1024], "polling={polling}");
+            eng.recycle(b);
+        }
+        assert!(store.degraded.degraded_reads.get() >= 2);
+        assert!(store.degraded.reconstructed_bytes.get() > 0);
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //!   per-shard sub-reads, so aggregate bandwidth grows with the shard
 //!   count; `shards = 1` is byte-for-byte the single-device layout.
 //!   [`StoreSpec`] is the config surface (`shards`, `stripe_bytes`,
-//!   per-shard `gbps`), with a JSON round-trip for the CLI tools.
+//!   per-shard `gbps`, `parity`), with a JSON round-trip for the CLI
+//!   tools. With `parity` on, one XOR parity shard per stripe group is
+//!   maintained at write time, so a single slow-or-dead shard degrades
+//!   to reconstructed reads (counted in
+//!   [`crate::metrics::DegradedStats`]) instead of failing the pass.
 //! * [`cache`] — a memory-budgeted **tile-row cache** for iterative
 //!   SEM-SpMM: decoded tile-row extents held in RAM under a hard byte
 //!   budget with degree-aware admission and CLOCK eviction, so repeated

@@ -24,13 +24,29 @@
 //! byte-count assertions hold for any shard count. (The merging writer
 //! issues its post-merge writes at this interface, exactly as it did on
 //! the single-device store it replaced.)
+//!
+//! With `StoreSpec::parity` on, the array additionally maintains **one
+//! XOR parity shard per stripe group** (under `dir/parity`): parity byte
+//! at local offset `o` is the XOR of every data shard's byte at local
+//! offset `o` (short shard files contribute zeros). Every striped write
+//! folds its delta into the parity extent (read-modify-write, serialized
+//! per object), so a single slow-or-dead data shard degrades to
+//! **reconstructed reads** — retry once, then XOR the surviving shards
+//! with parity — instead of failing the request; reconstructions are
+//! counted in the store's [`DegradedStats`]. Objects written through the
+//! merging writer bypass the striped write path and therefore carry no
+//! parity (their parity file is removed, so reads stay fail-hard rather
+//! than reconstructing stale bytes).
 
 use super::store::{ExtMemStore, StoreConfig, StoreFile};
 use crate::config::json::Json;
-use crate::metrics::IoStats;
+use crate::metrics::{DegradedStats, IoStats};
 use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Default stripe size: 1 MiB — large enough that per-stripe overheads
 /// vanish, small enough that a typical tile-row group read spans every
@@ -62,6 +78,10 @@ pub struct StoreSpec {
     pub write_gbps: Option<f64>,
     /// Fixed per-request latency in microseconds (submission overhead).
     pub latency_us: u64,
+    /// Maintain one XOR parity shard per stripe group (under
+    /// `dir/parity`) so a single slow-or-dead data shard degrades to
+    /// reconstructed reads instead of failing every request.
+    pub parity: bool,
 }
 
 impl StoreSpec {
@@ -74,6 +94,7 @@ impl StoreSpec {
             read_gbps: None,
             write_gbps: None,
             latency_us: 0,
+            parity: false,
         }
     }
 
@@ -86,6 +107,7 @@ impl StoreSpec {
             read_gbps: Some(gbps),
             write_gbps: Some(gbps * 0.8),
             latency_us: 60,
+            parity: false,
         }
     }
 
@@ -98,6 +120,7 @@ impl StoreSpec {
             read_gbps: Some(gbps_each),
             write_gbps: Some(gbps_each * 10.0 / 12.0),
             latency_us: 30,
+            parity: false,
         }
     }
 
@@ -111,6 +134,7 @@ impl StoreSpec {
             read_gbps: Some(12.0 / 24.0),
             write_gbps: Some(10.0 / 24.0),
             latency_us: 30,
+            parity: false,
         }
     }
 
@@ -138,6 +162,24 @@ impl StoreSpec {
         }
     }
 
+    /// Directory of the parity shard. Always a dedicated subdirectory —
+    /// even on single-shard stores, where data objects live directly in
+    /// `dir` — so parity bytes never collide with data objects.
+    pub fn parity_dir(&self) -> PathBuf {
+        self.dir.join("parity")
+    }
+
+    /// Single-device [`StoreConfig`] for the parity shard (same throttle
+    /// profile as the data shards).
+    pub fn parity_config(&self) -> StoreConfig {
+        StoreConfig {
+            dir: self.parity_dir(),
+            read_gbps: self.read_gbps,
+            write_gbps: self.write_gbps,
+            latency_us: self.latency_us,
+        }
+    }
+
     /// Serialize to the config-JSON surface.
     pub fn to_json(&self) -> Json {
         Json::obj()
@@ -153,6 +195,7 @@ impl StoreSpec {
                 self.write_gbps.map(Json::Num).unwrap_or(Json::Null),
             )
             .set("latency_us", self.latency_us)
+            .set("parity", Json::Bool(self.parity))
     }
 
     /// Parse from the config-JSON surface. Missing keys take defaults;
@@ -163,13 +206,14 @@ impl StoreSpec {
         let Json::Obj(map) = j else {
             anyhow::bail!("store spec: expected a JSON object");
         };
-        const KEYS: [&str; 6] = [
+        const KEYS: [&str; 7] = [
             "dir",
             "shards",
             "stripe_bytes",
             "read_gbps",
             "write_gbps",
             "latency_us",
+            "parity",
         ];
         for k in map.keys() {
             ensure!(
@@ -191,6 +235,13 @@ impl StoreSpec {
             Some(other) => anyhow::bail!("store spec: 'dir' must be a string, got {other}"),
             None => anyhow::bail!("store spec: missing 'dir'"),
         };
+        let parity = match j.get("parity") {
+            None | Some(Json::Null) => false,
+            Some(Json::Bool(b)) => *b,
+            Some(other) => {
+                anyhow::bail!("store spec: 'parity' must be a boolean, got {other}")
+            }
+        };
         let spec = StoreSpec {
             dir,
             shards: num("shards")?.map(|v| v as usize).unwrap_or(1),
@@ -200,6 +251,7 @@ impl StoreSpec {
             read_gbps: num("read_gbps")?.filter(|&g| g > 0.0),
             write_gbps: num("write_gbps")?.filter(|&g| g > 0.0),
             latency_us: num("latency_us")?.map(|v| v as u64).unwrap_or(0),
+            parity,
         };
         spec.validate()?;
         Ok(spec)
@@ -249,10 +301,23 @@ impl SubExtent {
 pub struct ShardedStore {
     spec: StoreSpec,
     shards: Vec<Arc<ExtMemStore>>,
+    /// The parity shard (`Some` iff `spec.parity`).
+    parity: Option<Arc<ExtMemStore>>,
+    /// Serializes parity read-modify-write cycles, per object name:
+    /// concurrent writers to one object would otherwise interleave their
+    /// read/XOR/write triples and corrupt the parity bytes.
+    parity_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    /// Degraded-read projected-wait bound in milliseconds; `u64::MAX`
+    /// means the slow-shard bypass is disabled (the default — only
+    /// *failed* reads fall back to reconstruction).
+    degraded_timeout_ms: AtomicU64,
     /// Logical (pre-striping) I/O accounting: one entry per request the
     /// engine issued, regardless of how many shards served it. Per-shard
     /// physical accounting lives on each shard's own `stats`.
     pub stats: IoStats,
+    /// Degraded-read accounting: reads served by parity reconstruction
+    /// instead of the addressed shard.
+    pub degraded: DegradedStats,
 }
 
 impl ShardedStore {
@@ -262,11 +327,63 @@ impl ShardedStore {
         let shards = (0..spec.shards)
             .map(|k| ExtMemStore::open(spec.shard_config(k)))
             .collect::<Result<Vec<_>>>()?;
+        let parity = if spec.parity {
+            Some(ExtMemStore::open(spec.parity_config())?)
+        } else {
+            None
+        };
         Ok(Arc::new(ShardedStore {
             spec,
             shards,
+            parity,
+            parity_locks: Mutex::new(HashMap::new()),
+            degraded_timeout_ms: AtomicU64::new(u64::MAX),
             stats: IoStats::new(),
+            degraded: DegradedStats::new(),
         }))
+    }
+
+    /// The parity shard's single-device store (`Some` iff the spec has
+    /// `parity` on). Its `stats` meter the physical parity traffic.
+    pub fn parity_store(&self) -> Option<&Arc<ExtMemStore>> {
+        self.parity.as_ref()
+    }
+
+    /// Whether this array maintains a parity shard.
+    pub fn has_parity(&self) -> bool {
+        self.parity.is_some()
+    }
+
+    /// Bound the queueing delay a degraded read will tolerate: when a
+    /// read targets a shard whose *projected* throttle wait exceeds `t`,
+    /// the shard is bypassed and the extent reconstructed from the
+    /// surviving shards + parity instead. (The simulator cannot cancel a
+    /// read that is already sleeping in its bandwidth window, so the
+    /// "timeout" is enforced up front against the token bucket's
+    /// projected wait.) `None` — the default — disables the bypass;
+    /// failed reads still reconstruct after one retry.
+    pub fn set_degraded_read_timeout(&self, t: Option<Duration>) {
+        let ms = t
+            .map(|d| (d.as_millis() as u64).max(1))
+            .unwrap_or(u64::MAX);
+        self.degraded_timeout_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// The configured degraded-read projected-wait bound, if any.
+    pub fn degraded_read_timeout(&self) -> Option<Duration> {
+        match self.degraded_timeout_ms.load(Ordering::Relaxed) {
+            u64::MAX => None,
+            ms => Some(Duration::from_millis(ms)),
+        }
+    }
+
+    /// The per-object parity write lock (created on first use).
+    fn parity_lock(&self, name: &str) -> Arc<Mutex<()>> {
+        let mut map = self
+            .parity_locks
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        map.entry(name.to_string()).or_default().clone()
     }
 
     /// The configuration this store was opened with.
@@ -330,24 +447,36 @@ impl ShardedStore {
         Ok(end)
     }
 
-    /// Remove a named object from every shard (ignores missing).
+    /// Remove a named object from every shard (ignores missing),
+    /// including its parity file if the array maintains one.
     pub fn remove(&self, name: &str) -> Result<()> {
         for s in &self.shards {
             s.remove(name)?;
         }
+        if let Some(p) = &self.parity {
+            p.remove(name)?;
+        }
         Ok(())
     }
 
-    /// Open a named object for reading.
+    /// Open a named object for reading. Degraded reads engage only when
+    /// the object has a parity file (objects written before parity was
+    /// enabled, or through the merging writer, have none and keep the
+    /// classic fail-hard semantics).
     pub fn open_file(self: &Arc<Self>, name: &str) -> Result<ShardedFile> {
         let files = self
             .shards
             .iter()
             .map(|s| s.open_file(name))
             .collect::<Result<Vec<_>>>()?;
+        let parity = match &self.parity {
+            Some(ps) if ps.exists(name) => Some(ps.open_file(name)?),
+            _ => None,
+        };
         Ok(ShardedFile {
             store: self.clone(),
             files,
+            parity,
             name: name.to_string(),
         })
     }
@@ -359,9 +488,15 @@ impl ShardedStore {
             .iter()
             .map(|s| s.create_file(name))
             .collect::<Result<Vec<_>>>()?;
+        let parity = self
+            .parity
+            .as_ref()
+            .map(|ps| ps.create_file(name))
+            .transpose()?;
         Ok(ShardedFile {
             store: self.clone(),
             files,
+            parity,
             name: name.to_string(),
         })
     }
@@ -506,6 +641,9 @@ pub struct ShardedFile {
     store: Arc<ShardedStore>,
     /// Per-shard handles, indexed by shard.
     files: Vec<StoreFile>,
+    /// Parity-shard handle (`Some` iff the array maintains parity *and*
+    /// this object has a parity file).
+    parity: Option<StoreFile>,
     name: String,
 }
 
@@ -523,6 +661,27 @@ impl ShardedFile {
     /// The shard-level handle serving shard `k` (I/O engine, writer).
     pub(crate) fn shard_handle(&self, k: usize) -> &StoreFile {
         &self.files[k]
+    }
+
+    /// Whether degraded (parity-reconstructed) reads are available for
+    /// this object.
+    pub fn has_parity(&self) -> bool {
+        self.parity.is_some()
+    }
+
+    /// Drop this object's parity coverage: remove the parity file so
+    /// readers fall back to the classic fail-hard semantics. Writers
+    /// that bypass the striped write path (the merging writer issues its
+    /// post-merge writes per shard) call this up front — stale parity
+    /// would silently reconstruct garbage, absent parity degrades
+    /// honestly.
+    pub(crate) fn invalidate_parity(&mut self) -> Result<()> {
+        if self.parity.take().is_some() {
+            if let Some(ps) = self.store.parity.as_ref() {
+                ps.remove(&self.name)?;
+            }
+        }
+        Ok(())
     }
 
     /// Logical length: the furthest logical byte implied by any shard
@@ -545,16 +704,28 @@ impl ShardedFile {
 
     /// Set the logical length (each shard file gets its stripe share).
     /// Unwritten regions read back as zeros — the sparse-file contract
-    /// [`crate::matrix::SemDense`] relies on.
+    /// [`crate::matrix::SemDense`] relies on. The parity file tracks the
+    /// longest shard file: zero-extension keeps parity valid (the XOR of
+    /// zeros is zero), and truncation discards exactly the parity bytes
+    /// of the discarded data bytes.
     pub fn set_len(&self, len: u64) -> Result<()> {
         for (k, f) in self.files.iter().enumerate() {
             f.raw().set_len(self.store.local_len(k, len))?;
+        }
+        if let Some(p) = &self.parity {
+            let plen = (0..self.files.len())
+                .map(|k| self.store.local_len(k, len))
+                .max()
+                .unwrap_or(0);
+            p.raw().set_len(plen)?;
         }
         Ok(())
     }
 
     /// Throttled positional read into `buf` (exact length). Multi-shard
-    /// sub-reads run in parallel, each throttled by its own shard.
+    /// sub-reads run in parallel, each throttled by its own shard. With
+    /// parity coverage a failed or badly backlogged shard is served by
+    /// reconstruction instead (see [`Self::read_local`]).
     pub fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
         self.store.stats.read_reqs.inc();
         self.store.stats.bytes_read.add(buf.len() as u64);
@@ -563,11 +734,81 @@ impl ShardedFile {
             match subs.as_slice() {
                 [] => Ok(()),
                 [sub] if sub.is_whole(buf.len()) => {
-                    self.files[sub.shard].read_at(sub.local_off, buf)
+                    self.read_local(sub.shard, sub.local_off, buf)
                 }
                 _ => self.read_scattered(&subs, buf),
             }
         })
+    }
+
+    /// Read shard `shard`'s local extent `[local_off, local_off + buf)`
+    /// under the degraded-read policy:
+    ///
+    /// 1. with a configured projected-wait bound, a shard whose throttle
+    ///    backlog exceeds the bound is bypassed outright and the extent
+    ///    reconstructed from the surviving shards + parity;
+    /// 2. a failed read is retried once (transient-error model);
+    /// 3. a second failure reconstructs, if this object carries parity —
+    ///    otherwise the first error propagates (classic fail-hard).
+    pub(crate) fn read_local(&self, shard: usize, local_off: u64, buf: &mut [u8]) -> Result<()> {
+        if self.parity.is_some() {
+            if let Some(bound) = self.store.degraded_read_timeout() {
+                if self.store.shards[shard].projected_read_wait() > bound {
+                    return self.reconstruct_local(shard, local_off, buf);
+                }
+            }
+        }
+        let first = match self.files[shard].read_at(local_off, buf) {
+            Ok(()) => return Ok(()),
+            Err(e) => e,
+        };
+        if self.files[shard].read_at(local_off, buf).is_ok() {
+            return Ok(());
+        }
+        if self.parity.is_some() {
+            self.reconstruct_local(shard, local_off, buf).with_context(|| {
+                format!(
+                    "shard {shard} of '{}' failed ({first:#}); serving degraded read",
+                    self.name
+                )
+            })
+        } else {
+            Err(first)
+        }
+    }
+
+    /// Rebuild shard `shard`'s local extent by XORing the same local
+    /// range of every surviving data shard with the parity shard (short
+    /// files contribute zeros, mirroring how parity was accumulated).
+    pub(crate) fn reconstruct_local(
+        &self,
+        shard: usize,
+        local_off: u64,
+        buf: &mut [u8],
+    ) -> Result<()> {
+        let parity = self
+            .parity
+            .as_ref()
+            .context("no parity coverage to reconstruct from")?;
+        buf.fill(0);
+        for (k, f) in self.files.iter().enumerate() {
+            if k == shard {
+                continue;
+            }
+            let peer = read_local_padded(f, local_off, buf.len())
+                .with_context(|| format!("reading surviving shard {k} of '{}'", self.name))?;
+            for (d, s) in buf.iter_mut().zip(&peer) {
+                *d ^= *s;
+            }
+        }
+        let pbytes = read_local_padded(parity, local_off, buf.len())
+            .with_context(|| format!("reading parity shard of '{}'", self.name))?;
+        for (d, s) in buf.iter_mut().zip(&pbytes) {
+            *d ^= *s;
+        }
+        self.store.degraded.degraded_reads.inc();
+        self.store.degraded.reconstructed_bytes.add(buf.len() as u64);
+        Ok(())
     }
 
     /// Per-shard reads with scatter into `buf` — parallel (one scoped
@@ -595,7 +836,7 @@ impl ShardedFile {
         }
         let one = |sub: &SubExtent, chunks: Vec<&mut [u8]>| -> Result<()> {
             let mut scratch = vec![0u8; sub.len];
-            self.files[sub.shard].read_at(sub.local_off, &mut scratch)?;
+            self.read_local(sub.shard, sub.local_off, &mut scratch)?;
             let mut o = 0usize;
             for c in chunks {
                 c.copy_from_slice(&scratch[o..o + c.len()]);
@@ -623,11 +864,36 @@ impl ShardedFile {
     }
 
     /// Throttled positional write. Multi-shard sub-writes run in
-    /// parallel, each throttled by its own shard.
+    /// parallel, each throttled by its own shard. With parity coverage
+    /// every sub-write is a read-modify-write cycle (serialized per
+    /// object): the old-XOR-new delta of the data bytes is folded into
+    /// the parity extent at the same local offsets, so the invariant
+    /// `parity[o] = XOR over shards of data[o]` holds after every write.
     pub fn write_at(&self, off: u64, data: &[u8]) -> Result<()> {
         self.store.stats.write_reqs.inc();
         self.store.stats.bytes_written.add(data.len() as u64);
         let subs = self.store.split_extent(off, data.len());
+        if let Some(parity) = &self.parity {
+            return self.store.stats.write_time.time(|| -> Result<()> {
+                let lock = self.store.parity_lock(&self.name);
+                let _guard = lock.lock().unwrap_or_else(|p| p.into_inner());
+                for sub in &subs {
+                    let new_local = gather_local(sub, data);
+                    let file = &self.files[sub.shard];
+                    let mut delta = read_local_padded(file, sub.local_off, sub.len)?;
+                    for (d, n) in delta.iter_mut().zip(&new_local) {
+                        *d ^= *n;
+                    }
+                    file.write_at(sub.local_off, &new_local)?;
+                    let mut pbytes = read_local_padded(parity, sub.local_off, sub.len)?;
+                    for (p, d) in pbytes.iter_mut().zip(&delta) {
+                        *p ^= *d;
+                    }
+                    parity.write_at(sub.local_off, &pbytes)?;
+                }
+                Ok(())
+            });
+        }
         self.store.stats.write_time.time(|| -> Result<()> {
             match subs.as_slice() {
                 [] => Ok(()),
@@ -662,6 +928,9 @@ impl ShardedFile {
         for f in &self.files {
             f.sync()?;
         }
+        if let Some(p) = &self.parity {
+            p.sync()?;
+        }
         Ok(())
     }
 }
@@ -676,6 +945,19 @@ pub(crate) fn gather_local(sub: &SubExtent, data: &[u8]) -> Vec<u8> {
     local
 }
 
+/// Read `[off, off + len)` of a shard-local file, zero-filling past its
+/// current end — the padding rule under which parity accumulation and
+/// reconstruction agree (an unwritten byte contributes zero to the XOR).
+fn read_local_padded(file: &StoreFile, off: u64, len: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; len];
+    let flen = file.len()?;
+    let avail = flen.saturating_sub(off).min(len as u64) as usize;
+    if avail > 0 {
+        file.read_at(off, &mut buf[..avail])?;
+    }
+    Ok(buf)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -688,6 +970,20 @@ mod tests {
             read_gbps: None,
             write_gbps: None,
             latency_us: 0,
+            parity: false,
+        })
+        .unwrap()
+    }
+
+    fn sharded_parity(dir: &std::path::Path, shards: usize, stripe: usize) -> Arc<ShardedStore> {
+        ShardedStore::open(StoreSpec {
+            dir: dir.to_path_buf(),
+            shards,
+            stripe_bytes: stripe,
+            read_gbps: None,
+            write_gbps: None,
+            latency_us: 0,
+            parity: true,
         })
         .unwrap()
     }
@@ -862,10 +1158,15 @@ mod tests {
             read_gbps: Some(0.5),
             write_gbps: None,
             latency_us: 30,
+            parity: true,
         };
         let text = spec.to_json().to_string();
         let back = StoreSpec::from_json_str(&text).unwrap();
         assert_eq!(back, spec);
+        // Absent / null parity defaults off; wrong types are errors.
+        let s = StoreSpec::from_json_str(r#"{"dir":"x"}"#).unwrap();
+        assert!(!s.parity);
+        assert!(StoreSpec::from_json_str(r#"{"dir":"x","parity":1}"#).is_err());
         // A worked example of the documented surface.
         let example = r#"{"dir":"/mnt/ssd-array","shards":4,"stripe_bytes":1048576,"read_gbps":0.5,"write_gbps":0.4,"latency_us":30}"#;
         let s = StoreSpec::from_json_str(example).unwrap();
@@ -916,6 +1217,7 @@ mod tests {
             read_gbps: Some(0.05),
             write_gbps: None,
             latency_us: 0,
+            parity: false,
         })
         .unwrap();
         let data = vec![9u8; 8 << 20];
@@ -929,5 +1231,139 @@ mod tests {
         // proves parallelism while tolerating slow shared CI runners.
         assert!(secs < 0.15, "striped read not parallel: {secs:.3}s");
         assert!(secs >= 0.03, "per-shard throttle ignored: {secs:.3}s");
+    }
+
+    /// Truncate shard `k`'s file of `name` to a quarter of its length —
+    /// the dead/corrupted-device injection used by the parity tests.
+    fn maim(store: &ShardedStore, k: usize, name: &str) {
+        let path = store.spec().shard_dir(k).join(name);
+        let len = std::fs::metadata(&path).unwrap().len();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(len / 4)
+            .unwrap();
+    }
+
+    #[test]
+    fn parity_reconstructs_a_dead_shard() {
+        let dir = crate::util::tempdir();
+        let store = sharded_parity(dir.path(), 3, 1024);
+        let data = pattern(50_000);
+        store.put("obj", &data).unwrap();
+        // Healthy reads don't reconstruct.
+        assert_eq!(store.get("obj").unwrap(), data);
+        assert_eq!(store.degraded.degraded_reads.get(), 0);
+        // Kill shard 1 and read everything back, plus random extents.
+        maim(&store, 1, "obj");
+        assert_eq!(store.get("obj").unwrap(), data, "full degraded read");
+        assert!(store.degraded.degraded_reads.get() > 0);
+        assert!(store.degraded.reconstructed_bytes.get() > 0);
+        let f = store.open_file("obj").unwrap();
+        assert!(f.has_parity());
+        let mut rng = crate::util::Xoshiro256::new(11);
+        for _ in 0..50 {
+            let off = rng.below(49_999);
+            let len = 1 + rng.below((50_000 - off).min(7000)) as usize;
+            let mut buf = vec![0u8; len];
+            f.read_at(off, &mut buf).unwrap();
+            assert_eq!(&buf[..], &data[off as usize..off as usize + len]);
+        }
+    }
+
+    #[test]
+    fn parity_tracks_random_overwrites() {
+        // Parity stays valid under arbitrary striped RMW traffic: after
+        // 100 random overwrites, losing any one shard still reconstructs
+        // the exact reference bytes.
+        let dir = crate::util::tempdir();
+        let store = sharded_parity(dir.path(), 4, 1024);
+        let mut reference = vec![0u8; 30_000];
+        let f = store.create_file("obj").unwrap();
+        f.set_len(30_000).unwrap();
+        let mut rng = crate::util::Xoshiro256::new(7);
+        for i in 0..100u64 {
+            let off = rng.below(29_999);
+            let len = 1 + rng.below((30_000 - off).min(5000)) as usize;
+            let chunk: Vec<u8> = (0..len).map(|j| ((i as usize + j) % 241) as u8).collect();
+            f.write_at(off, &chunk).unwrap();
+            reference[off as usize..off as usize + len].copy_from_slice(&chunk);
+        }
+        assert_eq!(store.get("obj").unwrap(), reference, "healthy read");
+        maim(&store, 2, "obj");
+        assert_eq!(store.get("obj").unwrap(), reference, "degraded read");
+        assert!(store.degraded.degraded_reads.get() > 0);
+    }
+
+    #[test]
+    fn parity_on_single_shard_acts_as_a_mirror() {
+        // With one data shard the parity bytes equal the data bytes —
+        // reconstruction degenerates to reading the mirror.
+        let dir = crate::util::tempdir();
+        let store = sharded_parity(dir.path(), 1, 4096);
+        let data = pattern(9_000);
+        store.put("obj", &data).unwrap();
+        maim(&store, 0, "obj");
+        assert_eq!(store.get("obj").unwrap(), data);
+        assert!(store.degraded.degraded_reads.get() > 0);
+    }
+
+    #[test]
+    fn objects_without_parity_files_stay_fail_hard() {
+        // An object written before parity existed has no parity file:
+        // reads must fail on a dead shard, never reconstruct garbage.
+        let dir = crate::util::tempdir();
+        let plain = sharded(dir.path(), 3, 1024);
+        plain.put("obj", &pattern(20_000)).unwrap();
+        let store = sharded_parity(dir.path(), 3, 1024);
+        let f = store.open_file("obj").unwrap();
+        assert!(!f.has_parity());
+        maim(&store, 1, "obj");
+        let mut buf = vec![0u8; 20_000];
+        assert!(f.read_at(0, &mut buf).is_err());
+        assert_eq!(store.degraded.degraded_reads.get(), 0);
+    }
+
+    #[test]
+    fn backlogged_shard_bypassed_under_projected_wait_bound() {
+        // A shard whose token bucket is deep in the future is skipped in
+        // favour of reconstruction when a degraded-read timeout is set.
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec {
+            dir: dir.path().to_path_buf(),
+            shards: 2,
+            stripe_bytes: 4096,
+            read_gbps: Some(0.001), // 1 MB/s per shard
+            write_gbps: None,
+            latency_us: 0,
+            parity: true,
+        })
+        .unwrap();
+        let data = pattern(512 << 10);
+        store.put("obj", &data).unwrap();
+        let f = store.open_file("obj").unwrap();
+        // Background reader saturates shard 0's bucket for ~250 ms.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let bg = {
+            let f = f.clone();
+            std::thread::spawn(move || {
+                let mut big = vec![0u8; 256 << 10];
+                tx.send(()).unwrap();
+                f.shard_handle(0).read_at(0, &mut big).unwrap();
+            })
+        };
+        rx.recv().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        store.set_degraded_read_timeout(Some(Duration::from_millis(5)));
+        let mut buf = vec![0u8; 1024];
+        f.read_at(0, &mut buf).unwrap(); // logical [0,1024) lives on shard 0
+        assert_eq!(&buf[..], &data[..1024]);
+        assert!(
+            store.degraded.degraded_reads.get() >= 1,
+            "backlogged shard was not bypassed"
+        );
+        store.set_degraded_read_timeout(None);
+        bg.join().unwrap();
     }
 }

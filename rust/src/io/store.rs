@@ -88,7 +88,7 @@ impl Channel {
     fn charge(&self, bytes: usize) {
         let dur = Duration::from_secs_f64(bytes as f64 / self.bps);
         let end = {
-            let mut nf = self.next_free.lock().unwrap();
+            let mut nf = self.next_free.lock().unwrap_or_else(|p| p.into_inner());
             let now = Instant::now();
             let start = if *nf > now { *nf } else { now };
             *nf = start + dur;
@@ -97,6 +97,19 @@ impl Channel {
         let now = Instant::now();
         if end > now {
             std::thread::sleep(end - now);
+        }
+    }
+
+    /// How long a request submitted *now* would queue behind the bucket
+    /// before its own bandwidth window starts. A pure peek: nothing is
+    /// reserved.
+    fn projected_wait(&self) -> Duration {
+        let nf = *self.next_free.lock().unwrap_or_else(|p| p.into_inner());
+        let now = Instant::now();
+        if nf > now {
+            nf - now
+        } else {
+            Duration::ZERO
         }
     }
 }
@@ -157,6 +170,18 @@ impl ExtMemStore {
         if self.cfg.latency_us > 0 {
             std::thread::sleep(Duration::from_micros(self.cfg.latency_us));
         }
+    }
+
+    /// Projected queueing delay a read submitted now would suffer behind
+    /// this device's read throttle (zero when unthrottled). The sharded
+    /// store's degraded-read policy peeks this to decide whether a
+    /// backlogged shard should be bypassed and its extent reconstructed
+    /// from the parity group instead.
+    pub fn projected_read_wait(&self) -> Duration {
+        self.read_ch
+            .as_ref()
+            .map(|c| c.projected_wait())
+            .unwrap_or(Duration::ZERO)
     }
 
     /// Throttled positional read into `buf` (exact length).

@@ -28,6 +28,10 @@ enum Cmd {
 }
 
 /// Asynchronous merging writer over one logical store object.
+///
+/// Writer-produced objects carry no parity: construction invalidates any
+/// parity file the object had, because the per-shard writer threads do
+/// not maintain the XOR invariant.
 pub struct MergedWriter {
     store: Arc<ShardedStore>,
     /// One command queue per shard.
@@ -60,7 +64,17 @@ impl MergedWriter {
     /// Create a writer over `file`. `merge_window` is the number of bytes
     /// each shard's thread buffers before a forced flush; pending adjacent
     /// extents are always merged into single writes.
-    pub fn new(file: ShardedFile, merge_window: usize) -> MergedWriter {
+    ///
+    /// The writer's per-shard threads write through the shard handles
+    /// directly, bypassing the striped read-modify-write path that keeps
+    /// XOR parity current — so any parity the object carries is
+    /// invalidated (removed) up front. Output objects stay fail-hard
+    /// rather than risking reconstruction from stale parity.
+    pub fn new(mut file: ShardedFile, merge_window: usize) -> MergedWriter {
+        // Best-effort: a failed removal only means a stale parity file
+        // lingers on disk; the dropped in-memory handle alone already
+        // keeps reads fail-hard for this object.
+        let _ = file.invalidate_parity();
         let store = file.store().clone();
         let n = store.num_shards();
         let mut senders = Vec::with_capacity(n);
@@ -295,6 +309,7 @@ mod tests {
             read_gbps: None,
             write_gbps: None,
             latency_us: 0,
+            parity: false,
         })
         .unwrap();
         let f = store.create_file("out").unwrap();

@@ -86,6 +86,15 @@ fn run() -> Result<()> {
     }
 
     let store = ShardedStore::open(cfg.store_spec()?)?;
+    // Optional degraded-read eagerness: a parity store reconstructs
+    // immediately instead of queueing behind a shard whose projected
+    // wait exceeds this bound (0 = only reconstruct after read failure).
+    let slow_ms = cfg.get_f64("store.degraded_timeout_ms", 0.0)?;
+    if slow_ms > 0.0 && slow_ms.is_finite() {
+        store.set_degraded_read_timeout(Some(std::time::Duration::from_secs_f64(
+            slow_ms / 1e3,
+        )));
+    }
     let tile = cfg.get_usize("format.tile", 4096)?;
     let ctx = Ctx {
         catalog: Catalog::new(store.clone(), tile),
@@ -320,6 +329,6 @@ fn cmd_serve(ctx: &Ctx, args: &[String]) -> Result<()> {
         ctx.catalog.clone(),
         ctx.cfg.spmm_opts()?,
         ctx.cfg.batch_config()?,
-    );
+    )?;
     svc.serve(addr)
 }

@@ -82,6 +82,42 @@ impl TimeAccum {
     }
 }
 
+/// Degraded-read accounting for a parity-striped store: how often a
+/// slow-or-dead shard's extent was served by XOR reconstruction from the
+/// surviving shards instead of the addressed device.
+#[derive(Debug, Default)]
+pub struct DegradedStats {
+    /// Sub-reads served by parity reconstruction (one per bypassed or
+    /// failed shard extent).
+    pub degraded_reads: Counter,
+    /// Bytes of shard-local data rebuilt by XOR (the reconstructed
+    /// extents themselves, not the surviving-shard traffic that fed
+    /// them).
+    pub reconstructed_bytes: Counter,
+}
+
+impl DegradedStats {
+    /// New zeroed stats block.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset both counters to zero.
+    pub fn reset(&self) {
+        self.degraded_reads.reset();
+        self.reconstructed_bytes.reset();
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} degraded reads, {} reconstructed",
+            self.degraded_reads.get(),
+            crate::util::human_bytes(self.reconstructed_bytes.get())
+        )
+    }
+}
+
 /// I/O accounting for one store (or one run): byte counts, request counts
 /// and busy time, split by direction. The paper reports average throughput
 /// (Fig 5b) and total data read (Fig 13 discussion); both derive from this.

@@ -193,6 +193,11 @@ pub struct SpmmStats {
     /// carry exactly one forward entry; fused multi-op passes one entry
     /// per plan op — kernel seconds, reduce seconds, rows emitted.
     pub per_op: Vec<OpStats>,
+    /// Shard reads served via parity reconstruction during this run
+    /// (SEM mode with `store.parity`; 0 on healthy stores).
+    pub degraded_reads: u64,
+    /// Bytes rebuilt by XOR reconstruction during this run.
+    pub reconstructed_bytes: u64,
 }
 
 /// Sparse × dense multiply: `out = A · X` with `A` from `src` (n×m tiled
@@ -359,6 +364,7 @@ mod tests {
             read_gbps: None,
             write_gbps: None,
             latency_us: 0,
+            parity: false,
         })
         .unwrap();
         let mut buf = Vec::new();
@@ -425,6 +431,7 @@ mod tests {
             read_gbps: None,
             write_gbps: None,
             latency_us: 0,
+            parity: false,
         })
         .unwrap();
         let mut buf = Vec::new();
@@ -467,6 +474,7 @@ mod tests {
             read_gbps: None,
             write_gbps: None,
             latency_us: 0,
+            parity: false,
         })
         .unwrap();
         let mut buf = Vec::new();

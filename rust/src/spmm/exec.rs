@@ -173,12 +173,17 @@ pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<
         Source::Mem(_) => None,
         Source::Sem(s) => s.cache_for(opts.cache_budget_bytes),
     };
-    let (read0, phys0) = match src {
+    let (read0, phys0, deg0, rec0) = match src {
         Source::Sem(s) => {
             let store = s.file.store();
-            (store.stats.bytes_read.get(), store.physical_bytes_read())
+            (
+                store.stats.bytes_read.get(),
+                store.physical_bytes_read(),
+                store.degraded.degraded_reads.get(),
+                store.degraded.reconstructed_bytes.get(),
+            )
         }
-        Source::Mem(_) => (0, 0),
+        Source::Mem(_) => (0, 0, 0, 0),
     };
     let cache0 = cache.as_ref().map(|c| c.usage()).unwrap_or_default();
     let per_op_acc: Vec<OpAccum> = pass.ops.iter().map(|_| OpAccum::new()).collect();
@@ -297,15 +302,17 @@ pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<
     }
 
     let secs = sw.secs();
-    let (bytes_read, physical_bytes_read) = match src {
+    let (bytes_read, physical_bytes_read, degraded_reads, reconstructed_bytes) = match src {
         Source::Sem(s) => {
             let store = s.file.store();
             (
                 store.stats.bytes_read.get() - read0,
                 store.physical_bytes_read() - phys0,
+                store.degraded.degraded_reads.get() - deg0,
+                store.degraded.reconstructed_bytes.get() - rec0,
             )
         }
-        Source::Mem(_) => (0, 0),
+        Source::Mem(_) => (0, 0, 0, 0),
     };
     let cache_use = cache
         .as_ref()
@@ -336,6 +343,8 @@ pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<
             cache_misses: cache_use.misses,
             bytes_from_cache: cache_use.bytes_from_cache,
             per_op,
+            degraded_reads,
+            reconstructed_bytes,
         },
         accs,
     })

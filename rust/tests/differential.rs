@@ -197,6 +197,7 @@ fn transpose_pass_matches_transposed_image() {
             read_gbps: None,
             write_gbps: None,
             latency_us: 0,
+            parity: false,
         })
         .unwrap();
         let mut buf = Vec::new();

@@ -174,7 +174,8 @@ fn service_rejects_malformed_requests_without_dying() {
             threads: 1,
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     for req in ["", "SPMM", "SPMM twitter notanumber", "PAGERANK x y z w"] {
         match svc.dispatch(req) {
             Ok(Some(j)) => assert!(j.get("error").is_some(), "req '{req}'"),
@@ -201,10 +202,12 @@ fn zero_row_and_empty_matrices() {
     assert!(y.data.iter().all(|&v| v == 0.0));
 }
 
-/// A 4-shard store with a small stripe plus an image big enough that
-/// every tile-row-group read spans several shards.
+/// A 4-shard store (optionally parity-protected) with a small stripe
+/// plus an image big enough that every tile-row-group read spans
+/// several shards.
 fn sharded_store_with_image(
     dir: &std::path::Path,
+    parity: bool,
 ) -> (Arc<ShardedStore>, Csr) {
     let s = ShardedStore::open(StoreSpec {
         dir: dir.to_path_buf(),
@@ -213,6 +216,7 @@ fn sharded_store_with_image(
         read_gbps: None,
         write_gbps: None,
         latency_us: 0,
+        parity,
     })
     .unwrap();
     let m = sample_image(&s, "m.semm");
@@ -238,7 +242,7 @@ fn sem_run_errors_when_one_of_n_shards_fails_polling_and_blocking() {
     // perfectly healthy.
     for polling in [true, false] {
         let dir = sem_spmm::util::tempdir();
-        let (s, m) = sharded_store_with_image(dir.path());
+        let (s, m) = sharded_store_with_image(dir.path(), false);
         maim_shard(&s, 2, "m.semm");
         let sem = SemSource::open(&s, "m.semm").unwrap();
         let x = DenseMatrix::random(m.ncols, 2, 5);
@@ -262,7 +266,7 @@ fn sem_run_errors_when_one_of_n_shards_fails_polling_and_blocking() {
 fn healthy_sharded_run_unaffected_by_failure_of_unused_object() {
     // Sanity inverse: maiming an unrelated object leaves the run intact.
     let dir = sem_spmm::util::tempdir();
-    let (s, m) = sharded_store_with_image(dir.path());
+    let (s, m) = sharded_store_with_image(dir.path(), false);
     let junk = vec![1u8; 40_000];
     s.put("other", &junk).unwrap();
     maim_shard(&s, 1, "other");
@@ -291,7 +295,7 @@ fn mid_batch_shard_error_fails_every_rider_but_not_the_batcher() {
     // the same store are served correctly. No poisoned state, no hang.
     use sem_spmm::coordinator::batcher::{BatchConfig, BatchJob, Batcher};
     let dir = sem_spmm::util::tempdir();
-    let (s, m) = sharded_store_with_image(dir.path());
+    let (s, m) = sharded_store_with_image(dir.path(), false);
     // A second, healthy image on the same sharded store.
     let m2 = sample_image(&s, "ok.semm");
     maim_shard(&s, 2, "m.semm");
@@ -304,8 +308,10 @@ fn mid_batch_shard_error_fails_every_rider_but_not_the_batcher() {
         BatchConfig {
             max_riders: 4,
             max_linger: std::time::Duration::from_millis(40),
+            ..BatchConfig::default()
         },
-    );
+    )
+    .unwrap();
     let src = Source::Sem(SemSource::open(&s, "m.semm").unwrap());
     let tickets: Vec<_> = (0..3u64)
         .map(|i| {
@@ -357,7 +363,8 @@ fn service_survives_a_corrupted_dataset_and_keeps_serving() {
             threads: 1,
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     // Materialize the dataset, then corrupt its adjacency image.
     let info = svc.dispatch("INFO twitter").unwrap().unwrap();
     assert!(info.get("nnz").is_some());
@@ -375,6 +382,200 @@ fn service_survives_a_corrupted_dataset_and_keeps_serving() {
     assert_eq!(
         r.get("sum").unwrap().as_f64().unwrap(),
         info.get("nnz").unwrap().as_f64().unwrap()
+    );
+}
+
+#[test]
+fn parity_store_serves_riders_bit_identical_through_a_dead_shard() {
+    // With `store.parity` on, killing one of four shards mid-service must
+    // not fail anyone: every rider of the shared pass still succeeds, the
+    // store reports reconstructed reads, and the outputs are bit-for-bit
+    // what the healthy store produced.
+    use sem_spmm::coordinator::batcher::{BatchConfig, BatchJob, Batcher};
+    let dir = sem_spmm::util::tempdir();
+    let (s, m) = sharded_store_with_image(dir.path(), true);
+    let xs: Vec<DenseMatrix> = (0..3u64)
+        .map(|i| DenseMatrix::random(m.ncols, 2, 70 + i))
+        .collect();
+    let batcher = Batcher::new(
+        SpmmOpts {
+            threads: 2,
+            ..Default::default()
+        },
+        BatchConfig {
+            max_riders: 4,
+            max_linger: std::time::Duration::from_millis(40),
+            ..BatchConfig::default()
+        },
+    )
+    .unwrap();
+    let run_all = |tag: &str| -> Vec<sem_spmm::coordinator::RideResult> {
+        let src = Source::Sem(SemSource::open(&s, "m.semm").unwrap());
+        let tickets: Vec<_> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                batcher
+                    .submit(
+                        "k",
+                        &src,
+                        BatchJob::forward(x.clone(), format!("{tag}{i}")),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        tickets.into_iter().map(|t| t.wait().unwrap()).collect()
+    };
+
+    let healthy = run_all("h");
+    assert_eq!(s.degraded.degraded_reads.get(), 0, "healthy run reconstructed");
+
+    maim_shard(&s, 2, "m.semm");
+    let degraded = run_all("d");
+    assert!(
+        s.degraded.degraded_reads.get() > 0,
+        "dead shard never triggered reconstruction"
+    );
+    assert!(
+        s.degraded.reconstructed_bytes.get() > 0,
+        "reconstruction rebuilt no bytes"
+    );
+    let ride_degraded: u64 = degraded.iter().map(|r| r.stats.degraded_reads).sum();
+    assert!(
+        ride_degraded > 0,
+        "per-ride stats must surface the degraded reads"
+    );
+    for (i, (d, h)) in degraded.iter().zip(&healthy).enumerate() {
+        assert!(
+            d.output.data == h.output.data,
+            "rider {i}: degraded output diverged from the healthy run"
+        );
+    }
+}
+
+#[test]
+fn slow_shard_times_out_into_reconstructed_reads_mid_pass() {
+    // A shard whose token bucket is deep in the future (a stalling
+    // device) is bypassed mid-SEM-pass once `store.degraded_timeout_ms`
+    // is set: the pass finishes with correct numbers and the store
+    // reports reconstructed reads instead of waiting out the backlog.
+    let dir = sem_spmm::util::tempdir();
+    let s = ShardedStore::open(StoreSpec {
+        dir: dir.path().to_path_buf(),
+        shards: 2,
+        stripe_bytes: 256 << 10,
+        read_gbps: Some(0.004), // 4 MB/s per shard
+        write_gbps: None,
+        latency_us: 0,
+        parity: true,
+    })
+    .unwrap();
+    let m = sample_image(&s, "m.semm");
+    // A pad object whose first stripe lives entirely on shard 0: one big
+    // read of it books ~64 ms of shard-0 bucket debt.
+    s.put("pad", &vec![3u8; 512 << 10]).unwrap();
+    let pad = s.open_file("pad").unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let bg = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 256 << 10];
+        tx.send(()).unwrap();
+        pad.read_at(0, &mut buf).unwrap();
+    });
+    rx.recv().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    s.set_degraded_read_timeout(Some(std::time::Duration::from_millis(2)));
+
+    let sem = SemSource::open(&s, "m.semm").unwrap();
+    let x = DenseMatrix::random(m.ncols, 2, 31);
+    let (got, stats) = engine::spmm_out(
+        &Source::Sem(sem),
+        &x,
+        &SpmmOpts {
+            threads: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    s.set_degraded_read_timeout(None);
+    bg.join().unwrap();
+    assert!(
+        stats.degraded_reads > 0,
+        "backlogged shard was never bypassed into reconstruction"
+    );
+    let expect = m.spmm_ref(&x.data, 2);
+    for (a, b) in got.data.iter().zip(&expect) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+    }
+}
+
+#[test]
+fn narrow_tenant_boards_ahead_of_a_wide_flood_end_to_end() {
+    // Starvation check over a real SEM source: a wide tenant saturates
+    // the queue behind a blocker pass; the narrow tenant's lone SPMV-
+    // sized job must board long before the whale's tail. `pass_seq` is
+    // assigned at dispatch, so it is the boarding order.
+    use sem_spmm::coordinator::batcher::{BatchConfig, BatchHook, BatchJob, Batcher, Ticket};
+    let dir = sem_spmm::util::tempdir();
+    let (s, m) = sharded_store_with_image(dir.path(), false);
+    let b = Batcher::new(
+        SpmmOpts {
+            threads: 2,
+            ..Default::default()
+        },
+        BatchConfig {
+            max_riders: 1, // one seat per pass: pick order is visible
+            max_linger: std::time::Duration::ZERO,
+            max_inflight: 1,
+            tenant_weights: vec![("minnow".into(), 2.0)],
+            ..BatchConfig::default()
+        },
+    )
+    .unwrap();
+    let src = Source::Sem(SemSource::open(&s, "m.semm").unwrap());
+    let x1 = DenseMatrix::random(m.ncols, 1, 5);
+    // Blocker: holds the single in-flight slot while the flood queues.
+    let gate: BatchHook = Box::new(|_, _, _| {
+        std::thread::sleep(std::time::Duration::from_millis(150));
+    });
+    let tb = b
+        .submit(
+            "k",
+            &src,
+            BatchJob::with_hook(x1.clone(), "gate", 1, gate).for_tenant("gate"),
+        )
+        .unwrap();
+    let whale_tickets: Vec<Ticket> = (0..6u64)
+        .map(|i| {
+            b.submit(
+                "k",
+                &src,
+                BatchJob::forward(DenseMatrix::random(m.ncols, 4, 80 + i), format!("w{i}"))
+                    .for_tenant("whale"),
+            )
+            .unwrap()
+        })
+        .collect();
+    let tn = b
+        .submit(
+            "k",
+            &src,
+            BatchJob::forward(x1, "narrow").for_tenant("minnow"),
+        )
+        .unwrap();
+    let narrow = tn.wait().unwrap();
+    let whale_seqs: Vec<u64> = whale_tickets
+        .into_iter()
+        .map(|t| t.wait().unwrap().stats.pass_seq)
+        .collect();
+    tb.wait().unwrap();
+    let later_whales = whale_seqs
+        .iter()
+        .filter(|&&q| q > narrow.stats.pass_seq)
+        .count();
+    assert!(
+        later_whales >= 4,
+        "narrow rider (seq {}) starved behind the whale flood (seqs {whale_seqs:?})",
+        narrow.stats.pass_seq
     );
 }
 

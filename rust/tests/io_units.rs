@@ -180,6 +180,7 @@ fn sharded_store_scales_sem_read_throughput() {
             read_gbps: Some(0.2),
             write_gbps: None,
             latency_us: 0,
+            parity: false,
         })
         .unwrap();
         store.put("m.semm", &buf).unwrap();
@@ -208,6 +209,7 @@ fn per_shard_stats_sum_to_logical_bytes() {
         read_gbps: None,
         write_gbps: None,
         latency_us: 0,
+        parity: false,
     })
     .unwrap();
     let data: Vec<u8> = (0..100_000).map(|i| (i % 239) as u8).collect();

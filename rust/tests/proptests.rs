@@ -292,12 +292,13 @@ fn prop_batcher_never_drops_duplicates_or_cross_delivers() {
         let cfg = BatchConfig {
             max_riders: g.usize_in(1, 5),
             max_linger: std::time::Duration::from_millis(g.usize_in(0, 4) as u64),
+            ..BatchConfig::default()
         };
         let opts = SpmmOpts {
             threads: g.usize_in(1, 3),
             ..Default::default()
         };
-        let batcher = Batcher::new(opts, cfg);
+        let batcher = Batcher::new(opts, cfg).unwrap();
         const THREADS: usize = 3;
         const JOBS: usize = 4;
         let errs: Vec<String> = std::thread::scope(|scope| {

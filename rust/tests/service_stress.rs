@@ -64,14 +64,18 @@ fn eight_clients_mixed_traffic_bit_identical_with_sharing() {
     }
     let nnz = imgs.nnz as f64;
 
-    let svc = Arc::new(Service::with_batch(
-        catalog,
-        opts(),
-        BatchConfig {
-            max_riders: 8,
-            max_linger: Duration::from_millis(60),
-        },
-    ));
+    let svc = Arc::new(
+        Service::with_batch(
+            catalog,
+            opts(),
+            BatchConfig {
+                max_riders: 8,
+                max_linger: Duration::from_millis(60),
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap(),
+    );
     let stop = svc.stop_handle();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -160,6 +164,7 @@ fn eight_concurrent_spmm_clients_amortize_sparse_reads() {
         read_gbps: Some(0.5), // 2 GB/s aggregate — throttled but quick
         write_gbps: None,
         latency_us: 10,
+        parity: false,
     })
     .unwrap();
     let el = sem_spmm::graph::rmat::generate(
@@ -207,8 +212,10 @@ fn eight_concurrent_spmm_clients_amortize_sparse_reads() {
             BatchConfig {
                 max_riders,
                 max_linger: Duration::from_millis(100),
+                ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let src = Source::Sem(SemSource::open(&store, "m.semm").unwrap());
         let read0 = store.stats.bytes_read.get();
         let barrier = Barrier::new(CLIENTS);
