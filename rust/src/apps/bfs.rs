@@ -1,0 +1,291 @@
+//! Frontier-based BFS as or-and semiring sweeps of the SEM store.
+//!
+//! One level of BFS is one streaming pass: under the boolean semiring
+//! [`OrAnd`], `y = A ⊗ x` maps a frontier indicator vector `x` to the
+//! indicator of its out-neighborhood — `y[v] = ⋁ᵤ (A[v][u] ∧ x[u])`,
+//! using the same tile kernels, prefetch, scheduling, and tile-row cache
+//! as every arithmetic multiply (the image convention matches
+//! [`super::pagerank`]: `A[dst][src] = 1` for an edge `src → dst`, so the
+//! sweep expands along edge direction). A fused [`RowHook`] then masks
+//! the expansion against the visited set *while the rows are hot*: newly
+//! reached vertices get their level recorded and form the next frontier
+//! in place, already in the pass's output vector — a BFS level costs one
+//! matrix sweep and zero extra vector sweeps.
+//!
+//! The sparse matrix never leaves the store (SEM mode): BFS on a graph
+//! much larger than memory needs only three n×1 vectors plus the visited
+//! and level vectors in RAM.
+
+use crate::metrics::Stopwatch;
+use crate::matrix::NumaDense;
+use crate::spmm::{engine, exec, OrAnd, OutputSink, RowHook, Source, SpmmOpts, StreamPass};
+use anyhow::{bail, Result};
+
+/// BFS configuration.
+#[derive(Debug, Clone)]
+pub struct BfsConfig {
+    /// Stop after this many levels even if frontiers remain (the
+    /// default never truncates — BFS ends when a frontier is empty).
+    pub max_levels: usize,
+    /// Engine options for each sweep.
+    pub spmm: SpmmOpts,
+}
+
+impl Default for BfsConfig {
+    fn default() -> Self {
+        BfsConfig {
+            max_levels: usize::MAX,
+            spmm: SpmmOpts::default(),
+        }
+    }
+}
+
+/// Run statistics.
+#[derive(Debug, Clone, Default)]
+pub struct BfsStats {
+    /// Wall-clock seconds of the whole traversal.
+    pub secs: f64,
+    /// Deepest level assigned (= number of non-empty expansion sweeps).
+    pub levels: usize,
+    /// Vertices reached, including the root.
+    pub reached: u64,
+    /// Newly reached vertices per level, starting at level 1.
+    pub frontier: Vec<u64>,
+    /// Logical sparse-matrix bytes read from the store across all sweeps
+    /// (SEM mode; 0 for IM).
+    pub bytes_read: u64,
+}
+
+/// Breadth-first search from `root` over an adjacency image
+/// (`row = dst`, `col = src`). Returns per-vertex levels (`-1` =
+/// unreached, root = 0) and run statistics.
+pub fn bfs(src: &Source, root: u32, cfg: &BfsConfig) -> Result<(Vec<i32>, BfsStats)> {
+    let meta = src.meta().clone();
+    let n = meta.nrows;
+    if meta.ncols != n {
+        bail!("bfs needs a square adjacency image");
+    }
+    if root as usize >= n {
+        bail!("bfs root {root} out of range (n = {n})");
+    }
+    let sw = Stopwatch::start();
+    let ncfg = engine::numa_config(meta.tile, n, &cfg.spmm);
+    let mut x = NumaDense::zeros(n, 1, ncfg);
+    let mut x_next = NumaDense::zeros(n, 1, ncfg);
+    let mut visited = NumaDense::zeros(n, 1, ncfg);
+    let mut levels = NumaDense::zeros(n, 1, ncfg);
+    levels.fill(-1.0);
+    levels.row_mut(root as usize)[0] = 0.0;
+    visited.row_mut(root as usize)[0] = 1.0;
+    x.row_mut(root as usize)[0] = 1.0;
+
+    let mut level = 0usize;
+    let mut reached = 1u64;
+    let mut frontier = Vec::new();
+    let mut bytes_read = 0u64;
+    while level < cfg.max_levels {
+        let d = (level + 1) as f32;
+        let vis = &visited;
+        let lev = &levels;
+        // The hook sees each finalized interval of y = A ⊗ x exactly
+        // once: unvisited hits become level-d vertices and stay 1.0 in
+        // the outgoing rows (the next frontier); everything else is
+        // masked to 0. Intervals are disjoint, so the unsynchronized
+        // writes never race.
+        let hook: RowHook = Box::new(move |lo: usize, rows: &mut [f32], acc: &mut [f64]| {
+            let hi = lo + rows.len();
+            let mut vbuf: Vec<f32> = (lo..hi).map(|g| vis.row(g)[0]).collect();
+            let mut lbuf: Vec<f32> = (lo..hi).map(|g| lev.row(g)[0]).collect();
+            for (i, r) in rows.iter_mut().enumerate() {
+                if *r != 0.0 && vbuf[i] == 0.0 {
+                    vbuf[i] = 1.0;
+                    lbuf[i] = d;
+                    acc[0] += 1.0;
+                    *r = 1.0;
+                } else {
+                    *r = 0.0;
+                }
+            }
+            unsafe {
+                vis.write_rows_unsync(lo, hi, &vbuf);
+                lev.write_rows_unsync(lo, hi, &lbuf);
+            }
+        });
+        let r = {
+            let pass =
+                StreamPass::<OrAnd>::new().forward_with(&x, OutputSink::Mem(&x_next), 1, hook);
+            exec::run_pass_ring(src, &pass, &cfg.spmm)?
+        };
+        bytes_read += r.stats.bytes_read;
+        let newly = r.accs[0][0] as u64;
+        if newly == 0 {
+            break;
+        }
+        level += 1;
+        reached += newly;
+        frontier.push(newly);
+        std::mem::swap(&mut x, &mut x_next);
+    }
+
+    let out: Vec<i32> = (0..n).map(|i| levels.row(i)[0] as i32).collect();
+    Ok((
+        out,
+        BfsStats {
+            secs: sw.secs(),
+            levels: level,
+            reached,
+            frontier,
+            bytes_read,
+        },
+    ))
+}
+
+/// Queue-based reference BFS over an edge list (test oracle). An edge
+/// tuple `(r, c)` is the matrix entry `A[r][c]`, i.e. the directed edge
+/// `c → r`, matching the image convention.
+pub fn bfs_ref(num_verts: usize, edges: &[(u32, u32)], root: u32) -> Vec<i32> {
+    let mut adj = vec![Vec::new(); num_verts];
+    for &(r, c) in edges {
+        adj[c as usize].push(r);
+    }
+    let mut lv = vec![-1i32; num_verts];
+    lv[root as usize] = 0;
+    let mut q = std::collections::VecDeque::new();
+    q.push_back(root);
+    while let Some(u) = q.pop_front() {
+        let next = lv[u as usize] + 1;
+        for &v in &adj[u as usize] {
+            if lv[v as usize] < 0 {
+                lv[v as usize] = next;
+                q.push_back(v);
+            }
+        }
+    }
+    lv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::tiled::TiledImage;
+    use crate::format::{Csr, TileFormat};
+    use crate::graph::{rmat, sbm};
+    use crate::io::{ShardedStore, StoreSpec};
+    use crate::spmm::SemSource;
+    use std::sync::Arc;
+
+    fn image(el: &crate::graph::EdgeList, tile: usize, fmt: TileFormat) -> Arc<TiledImage> {
+        let m = Csr::from_edgelist(el);
+        Arc::new(TiledImage::build(&m, tile, fmt))
+    }
+
+    #[test]
+    fn matches_reference_on_rmat_both_formats() {
+        let el = rmat::generate(9, 4000, rmat::RmatParams::default(), 31);
+        let want = bfs_ref(el.num_verts, &el.edges, 0);
+        for fmt in [TileFormat::Scsr, TileFormat::Dcsc] {
+            let img = image(&el, 128, fmt);
+            let cfg = BfsConfig {
+                spmm: SpmmOpts {
+                    threads: 3,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (lv, stats) = bfs(&Source::Mem(img), 0, &cfg).unwrap();
+            assert_eq!(lv, want, "{fmt:?}");
+            assert_eq!(
+                stats.reached,
+                want.iter().filter(|&&l| l >= 0).count() as u64
+            );
+            assert_eq!(
+                stats.levels as i32,
+                *want.iter().max().unwrap(),
+                "deepest level"
+            );
+            assert_eq!(
+                stats.frontier.iter().sum::<u64>() + 1,
+                stats.reached,
+                "frontiers partition the reached set"
+            );
+        }
+    }
+
+    #[test]
+    fn sem_traversal_is_identical_and_streams_the_matrix() {
+        let mut el = sbm::generate(
+            sbm::SbmParams {
+                num_verts: 500,
+                num_edges: 3000,
+                num_clusters: 4,
+                in_out: 4.0,
+                clustered_order: true,
+            },
+            7,
+        );
+        el.dedup();
+        let img = image(&el, 64, TileFormat::Scsr);
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        store.put("bfs.semm", &buf).unwrap();
+        let sem = Source::Sem(SemSource::open(&store, "bfs.semm").unwrap());
+        let cfg = BfsConfig {
+            spmm: SpmmOpts {
+                threads: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (lv_mem, _) = bfs(&Source::Mem(img), 3, &cfg).unwrap();
+        let (lv_sem, stats) = bfs(&sem, 3, &cfg).unwrap();
+        assert_eq!(lv_mem, lv_sem, "SEM must match IM bit for bit");
+        assert_eq!(lv_sem, bfs_ref(el.num_verts, &el.edges, 3));
+        assert!(stats.bytes_read > 0, "SEM BFS must stream the matrix");
+    }
+
+    #[test]
+    fn max_levels_truncates_the_traversal() {
+        let el = rmat::generate(8, 1500, rmat::RmatParams::default(), 11);
+        let img = image(&el, 128, TileFormat::Scsr);
+        let want = bfs_ref(el.num_verts, &el.edges, 0);
+        let cfg = BfsConfig {
+            max_levels: 2,
+            spmm: SpmmOpts::sequential(),
+        };
+        let (lv, stats) = bfs(&Source::Mem(img), 0, &cfg).unwrap();
+        assert!(stats.levels <= 2);
+        for (v, (&got, &exp)) in lv.iter().zip(&want).enumerate() {
+            if (0..=2).contains(&exp) {
+                assert_eq!(got, exp, "vertex {v} within the horizon");
+            } else {
+                assert_eq!(got, -1, "vertex {v} beyond the horizon");
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_vertices_stay_unreached() {
+        // A ring 0..32 plus isolated vertices 32..64.
+        let mut el = crate::graph::EdgeList::new(64);
+        for v in 0..32u32 {
+            el.edges.push(((v + 1) % 32, v));
+        }
+        let img = image(&el, 16, TileFormat::Scsr);
+        let (lv, stats) = bfs(
+            &Source::Mem(img),
+            0,
+            &BfsConfig {
+                spmm: SpmmOpts::sequential(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.reached, 32);
+        assert_eq!(stats.levels, 31, "a directed ring is a single chain");
+        for v in 0..64 {
+            assert_eq!(lv[v], if v < 32 { v as i32 } else { -1 });
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Min-label propagation (connected components) as min-select sweeps.
+//!
+//! Under [`MinSelect`] (GraphBLAS `MIN_SECOND`), one streaming pass
+//! `y = A ⊗ x` computes `y[v] = min { x[u] : u an in-neighbor of v }`,
+//! ignoring edge values. Starting from `label[v] = v` and folding
+//! `label' = min(y, label)` in a fused [`RowHook`], labels flood across
+//! edges until a fixpoint: on a **symmetric** adjacency image every
+//! vertex ends up labeled with the smallest vertex id of its connected
+//! component — the classic min-label / hash-min connected-components
+//! algorithm, running entirely on the SEM sweep (the matrix never
+//! leaves the store; convergence takes at most diameter-many sweeps).
+//!
+//! On a directed (non-symmetric) image the fixpoint is still well
+//! defined — each vertex gets the smallest label that can reach it —
+//! but it is not "connected components"; symmetrize first (as the SBM
+//! generator and [`crate::graph::EdgeList::symmetrize`] do).
+//!
+//! Labels ride the engine's `f32` elements, which represent integers
+//! exactly only up to 2²⁴ — [`connected_components`] rejects larger
+//! vertex counts instead of corrupting ids silently.
+
+use crate::metrics::Stopwatch;
+use crate::matrix::NumaDense;
+use crate::spmm::{engine, exec, MinSelect, OutputSink, RowHook, Source, SpmmOpts, StreamPass};
+use anyhow::{bail, Result};
+
+/// Label-propagation configuration.
+#[derive(Debug, Clone)]
+pub struct LabelPropConfig {
+    /// Sweep cap; the default runs to the fixpoint (at most
+    /// diameter-many sweeps on a symmetric image).
+    pub max_iters: usize,
+    /// Engine options for each sweep.
+    pub spmm: SpmmOpts,
+}
+
+impl Default for LabelPropConfig {
+    fn default() -> Self {
+        LabelPropConfig {
+            max_iters: usize::MAX,
+            spmm: SpmmOpts::default(),
+        }
+    }
+}
+
+/// Run statistics.
+#[derive(Debug, Clone, Default)]
+pub struct LabelPropStats {
+    /// Wall-clock seconds of the whole run.
+    pub secs: f64,
+    /// Sweeps executed (including the final no-change sweep).
+    pub iters: usize,
+    /// Whether a sweep with zero label changes was reached.
+    pub converged: bool,
+    /// Number of distinct final labels (= connected components on a
+    /// symmetric image after convergence).
+    pub components: usize,
+    /// Labels changed per sweep.
+    pub changed: Vec<u64>,
+    /// Logical sparse-matrix bytes read across all sweeps (SEM mode).
+    pub bytes_read: u64,
+}
+
+/// Min-label propagation over an adjacency image; on a **symmetric**
+/// image this computes connected components (`labels[v]` = smallest
+/// vertex id in `v`'s component). Rejects `n > 2²⁴` (f32 exact-integer
+/// ceiling for labels).
+pub fn connected_components(
+    src: &Source,
+    cfg: &LabelPropConfig,
+) -> Result<(Vec<u32>, LabelPropStats)> {
+    let meta = src.meta().clone();
+    let n = meta.nrows;
+    if meta.ncols != n {
+        bail!("label propagation needs a square adjacency image");
+    }
+    if n > (1 << 24) {
+        bail!("label propagation labels exceed the f32 exact-integer range (n = {n} > 2^24)");
+    }
+    let sw = Stopwatch::start();
+    let ncfg = engine::numa_config(meta.tile, n, &cfg.spmm);
+    let mut x = NumaDense::zeros(n, 1, ncfg);
+    let mut x_next = NumaDense::zeros(n, 1, ncfg);
+    let mut label = NumaDense::zeros(n, 1, ncfg);
+    for v in 0..n {
+        x.row_mut(v)[0] = v as f32;
+        label.row_mut(v)[0] = v as f32;
+    }
+
+    let mut iters = 0usize;
+    let mut converged = false;
+    let mut changed = Vec::new();
+    let mut bytes_read = 0u64;
+    while iters < cfg.max_iters {
+        let lref = &label;
+        // label' = min(neighborhood minimum, own label), folded while the
+        // rows are hot; changed count drives convergence.
+        let hook: RowHook = Box::new(move |lo: usize, rows: &mut [f32], acc: &mut [f64]| {
+            let hi = lo + rows.len();
+            let mut lbuf: Vec<f32> = (lo..hi).map(|g| lref.row(g)[0]).collect();
+            for (i, r) in rows.iter_mut().enumerate() {
+                if *r < lbuf[i] {
+                    lbuf[i] = *r;
+                    acc[0] += 1.0;
+                } else {
+                    *r = lbuf[i];
+                }
+            }
+            unsafe { lref.write_rows_unsync(lo, hi, &lbuf) };
+        });
+        let r = {
+            let pass =
+                StreamPass::<MinSelect>::new().forward_with(&x, OutputSink::Mem(&x_next), 1, hook);
+            exec::run_pass_ring(src, &pass, &cfg.spmm)?
+        };
+        bytes_read += r.stats.bytes_read;
+        let delta = r.accs[0][0] as u64;
+        iters += 1;
+        if delta == 0 {
+            converged = true;
+            break;
+        }
+        changed.push(delta);
+        std::mem::swap(&mut x, &mut x_next);
+    }
+
+    let labels: Vec<u32> = (0..n).map(|i| label.row(i)[0] as u32).collect();
+    let components = labels
+        .iter()
+        .enumerate()
+        .filter(|&(v, &l)| l as usize == v)
+        .count();
+    Ok((
+        labels,
+        LabelPropStats {
+            secs: sw.secs(),
+            iters,
+            converged,
+            components,
+            changed,
+            bytes_read,
+        },
+    ))
+}
+
+/// Union-find reference: smallest vertex id per connected component of
+/// the **undirected** graph underlying the edge list (test oracle).
+pub fn cc_ref(num_verts: usize, edges: &[(u32, u32)]) -> Vec<u32> {
+    let mut parent: Vec<u32> = (0..num_verts as u32).collect();
+    fn find(parent: &mut [u32], v: u32) -> u32 {
+        let mut r = v;
+        while parent[r as usize] != r {
+            r = parent[r as usize];
+        }
+        let mut c = v;
+        while parent[c as usize] != r {
+            let next = parent[c as usize];
+            parent[c as usize] = r;
+            c = next;
+        }
+        r
+    }
+    for &(a, b) in edges {
+        let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+        if ra != rb {
+            // Union by smaller id, so every root is its component minimum.
+            let (lo, hi) = (ra.min(rb), ra.max(rb));
+            parent[hi as usize] = lo;
+        }
+    }
+    (0..num_verts as u32)
+        .map(|v| find(&mut parent, v))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::tiled::TiledImage;
+    use crate::format::{Csr, TileFormat};
+    use crate::graph::{rmat, sbm, EdgeList};
+    use crate::io::{ShardedStore, StoreSpec};
+    use crate::spmm::SemSource;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    fn image(el: &EdgeList, tile: usize, fmt: TileFormat) -> Arc<TiledImage> {
+        let m = Csr::from_edgelist(el);
+        Arc::new(TiledImage::build(&m, tile, fmt))
+    }
+
+    #[test]
+    fn matches_union_find_on_symmetrized_rmat() {
+        // RMAT leaves plenty of isolated vertices at this density —
+        // exactly the singleton components that must keep their own id.
+        let mut el = rmat::generate(9, 1200, rmat::RmatParams::default(), 47);
+        el.symmetrize();
+        let want = cc_ref(el.num_verts, &el.edges);
+        for fmt in [TileFormat::Scsr, TileFormat::Dcsc] {
+            let img = image(&el, 128, fmt);
+            let cfg = LabelPropConfig {
+                spmm: SpmmOpts {
+                    threads: 3,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (labels, stats) = connected_components(&Source::Mem(img), &cfg).unwrap();
+            assert!(stats.converged, "{fmt:?}");
+            assert_eq!(labels, want, "{fmt:?}");
+            assert_eq!(
+                stats.components,
+                want.iter().collect::<HashSet<_>>().len()
+            );
+        }
+    }
+
+    #[test]
+    fn sem_run_matches_and_pure_clusters_are_components() {
+        // in_out = ∞ keeps every edge inside its cluster, so components
+        // can only merge within clusters — labels must respect cluster
+        // boundaries, and the SEM run must equal the IM run bit for bit.
+        let mut el = sbm::generate(
+            sbm::SbmParams {
+                num_verts: 400,
+                num_edges: 4000,
+                num_clusters: 4,
+                in_out: f64::INFINITY,
+                clustered_order: true,
+            },
+            13,
+        );
+        el.dedup();
+        let want = cc_ref(el.num_verts, &el.edges);
+        let img = image(&el, 64, TileFormat::Scsr);
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        store.put("cc.semm", &buf).unwrap();
+        let sem = Source::Sem(SemSource::open(&store, "cc.semm").unwrap());
+        let cfg = LabelPropConfig {
+            spmm: SpmmOpts {
+                threads: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (l_mem, _) = connected_components(&Source::Mem(img), &cfg).unwrap();
+        let (l_sem, stats) = connected_components(&sem, &cfg).unwrap();
+        assert_eq!(l_mem, l_sem, "SEM must match IM bit for bit");
+        assert_eq!(l_sem, want);
+        assert!(stats.bytes_read > 0, "SEM run must stream the matrix");
+        // Cluster purity: labels never cross the 100-vertex cluster
+        // boundaries in_out = ∞ guarantees.
+        for (v, &l) in l_sem.iter().enumerate() {
+            assert_eq!(v / 100, l as usize / 100, "vertex {v} labeled {l}");
+        }
+    }
+
+    #[test]
+    fn chain_converges_in_diameter_sweeps_and_cap_truncates() {
+        // An undirected path 0–1–…–63: label 0 floods one hop per sweep.
+        let mut el = EdgeList::new(64);
+        for v in 0..63u32 {
+            el.edges.push((v, v + 1));
+        }
+        el.symmetrize();
+        let img = image(&el, 16, TileFormat::Scsr);
+        let cfg = LabelPropConfig {
+            spmm: SpmmOpts::sequential(),
+            ..Default::default()
+        };
+        let (labels, stats) = connected_components(&Source::Mem(img.clone()), &cfg).unwrap();
+        assert!(labels.iter().all(|&l| l == 0));
+        assert_eq!(stats.components, 1);
+        // 63 flooding sweeps + the fixpoint-confirming sweep.
+        assert_eq!(stats.iters, 64);
+        // A capped run reports non-convergence and partial labels.
+        let capped = LabelPropConfig {
+            max_iters: 3,
+            spmm: SpmmOpts::sequential(),
+        };
+        let (lp, sp) = connected_components(&Source::Mem(img), &capped).unwrap();
+        assert!(!sp.converged);
+        assert_eq!(lp[3], 0, "within the flooded horizon");
+        assert_eq!(lp[40], 37, "beyond it: min label within 3 hops");
+    }
+}

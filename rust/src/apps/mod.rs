@@ -15,10 +15,24 @@
 //! [`TallPanels`] is the shared abstraction: a tall dense matrix stored as
 //! fixed-width column panels either in memory or on the store, so the
 //! apps' streaming algebra is written once against both placements.
+//!
+//! Three graph-traversal apps run the *same* streaming sweep under
+//! non-arithmetic semirings ([`crate::spmm::semiring`]) — the traversal
+//! state is a handful of n×1 vectors, so each works on graphs far larger
+//! than memory:
+//!
+//! * [`bfs`] — frontier BFS, one or-and sweep per level.
+//! * [`sssp`] — Bellman–Ford SSSP, one min-plus sweep per round, plus a
+//!   streaming edge scan that recovers the shortest-path tree.
+//! * [`labelprop`] — min-label propagation / connected components, one
+//!   min-select sweep per round.
 
+pub mod bfs;
 pub mod eigen;
+pub mod labelprop;
 pub mod nmf;
 pub mod pagerank;
+pub mod sssp;
 
 use crate::io::ShardedStore;
 use crate::matrix::{DenseMatrix, SemDense};

@@ -1139,6 +1139,106 @@ pub fn qos_tenants(b: &Bench) -> Result<()> {
     )
 }
 
+/// -------------------------------------------------------- semiring_apps
+/// Graph traversals as semiring sweeps on a throttled 4-shard array:
+/// frontier BFS (or-and), Bellman–Ford SSSP (min-plus), and the
+/// out-of-core A·A SpGEMM, each run in-memory and semi-external on the
+/// same image. The traversal state is a handful of n×1 vectors, so the
+/// SEM runs stream the matrix once per sweep and must reproduce the IM
+/// results bit for bit; SpGEMM additionally exercises its physical
+/// run-spill/merge pipeline against the store. Reports wall time,
+/// rounds (levels / relaxation sweeps / spilled runs), work (vertices
+/// reached / product nnz) and the logical GB moved.
+pub fn semiring_apps(b: &Bench) -> Result<()> {
+    use crate::apps::{bfs, sssp};
+    use crate::spmm::spgemm;
+    let spec = b.dataset("rmat-160").unwrap();
+    let m = Csr::from_edgelist(&spec.build());
+    let img = Arc::new(TiledImage::build(&m, b.tile, TileFormat::Scsr));
+    let mut buf = Vec::new();
+    img.write_to(&mut buf)?;
+    // The same deliberately slow 4-shard array as fused_ops (1 GB/s
+    // aggregate): per-sweep streaming dominates, so traversal cost is
+    // sweeps × matrix size, not frontier size.
+    let store = crate::io::ShardedStore::open(crate::io::StoreSpec {
+        dir: b.store.spec().dir.join("semiring-apps"),
+        shards: 4,
+        stripe_bytes: 256 << 10,
+        read_gbps: Some(0.25),
+        write_gbps: Some(0.25),
+        latency_us: 30,
+        parity: false,
+    })?;
+    store.put("semiring.semm", &buf)?;
+
+    let root = 0u32;
+    let mut rows = Vec::new();
+    let mut bfs_levels: Vec<Vec<i32>> = Vec::new();
+    let mut sssp_dists: Vec<Vec<f32>> = Vec::new();
+    let mut products: Vec<Csr> = Vec::new();
+    for label in ["IM", "SEM"] {
+        let src = if label == "IM" {
+            Source::Mem(img.clone())
+        } else {
+            Source::Sem(SemSource::open(&store, "semiring.semm")?)
+        };
+        let bcfg = bfs::BfsConfig {
+            spmm: b.opts.clone(),
+            ..Default::default()
+        };
+        let (levels, bs) = bfs::bfs(&src, root, &bcfg)?;
+        rows.push(format!(
+            "bfs\t{label}\t{:.4}\t{}\t{}\t{:.4}",
+            bs.secs,
+            bs.levels,
+            bs.reached,
+            bs.bytes_read as f64 / 1e9
+        ));
+        bfs_levels.push(levels);
+
+        // Distance-only SSSP: the bench meters the sweep loop, not the
+        // parent-recovery edge scan.
+        let scfg = sssp::SsspConfig {
+            skip_parents: true,
+            spmm: b.opts.clone(),
+            ..Default::default()
+        };
+        let (dists, _, ss) = sssp::sssp(&src, root, &scfg)?;
+        rows.push(format!(
+            "sssp\t{label}\t{:.4}\t{}\t{}\t{:.4}",
+            ss.secs,
+            ss.iters,
+            ss.reached,
+            ss.bytes_read as f64 / 1e9
+        ));
+        sssp_dists.push(dists);
+
+        let gopts = spgemm::SpgemmOpts {
+            threads: b.opts.threads,
+            ..Default::default()
+        };
+        let scratch = format!("semiring.aa.{label}.runs");
+        let prod = spgemm::spgemm(&src, &img, &store, &scratch, &gopts)?;
+        rows.push(format!(
+            "spgemm-aa\t{label}\t{:.4}\t{}\t{}\t{:.4}",
+            prod.stats.sweep_secs + prod.stats.merge_secs,
+            prod.stats.runs,
+            prod.stats.nnz,
+            prod.stats.run_bytes as f64 / 1e9
+        ));
+        products.push(prod.csr);
+    }
+    anyhow::ensure!(bfs_levels[0] == bfs_levels[1], "SEM BFS diverged from IM");
+    anyhow::ensure!(sssp_dists[0] == sssp_dists[1], "SEM SSSP diverged from IM");
+    anyhow::ensure!(products[0] == products[1], "SEM A·A diverged from IM");
+    rows.push("verdict\tSEM==IM\t-\t-\t-\t-".into());
+    b.emit(
+        "semiring_apps",
+        "app\tmode\tsecs\trounds\twork\tgb_moved",
+        &rows,
+    )
+}
+
 /// ----------------------------------------------------------------- perf
 /// §Perf hot-path micro-harness: absolute engine timings used by the
 /// optimization log in EXPERIMENTS.md (IM/SEM SpMV and SpMM-8 on the

@@ -23,6 +23,12 @@
 //! serve.byte_budget_mb = 256      # per-tenant in-flight byte budget (MiB, 0 = unlimited)
 //! serve.tenant_weights = gold:4,free:1   # weighted-fair shares (unlisted = 1)
 //! serve.max_inflight = 2          # concurrent shared passes (0 = unbounded)
+//! bfs.max_levels     = 0          # BFS level cap (0 = until frontier empties)
+//! sssp.max_iters     = 0          # Bellman-Ford round cap (0 = to fixpoint)
+//! cc.max_iters       = 0          # label-propagation sweep cap (0 = to fixpoint)
+//! spgemm.run_flush_kb = 1024      # per-worker sorted-run flush threshold (KiB)
+//! spgemm.b_cache_tile_rows = 8    # decoded B tile rows kept in memory
+//! spgemm.merge_window_kb = 1024   # merge window of the run writer (KiB)
 //! ```
 //!
 //! Sections map onto [`crate::io::StoreSpec`], [`crate::spmm::SpmmOpts`],
@@ -173,6 +179,50 @@ impl Config {
     /// extra sweep over the vectors.
     pub fn pagerank_tol(&self) -> Result<f64> {
         self.get_f64("pagerank.tol", 0.0)
+    }
+
+    /// A sweep cap key where `0` (the default) means "no cap" — the
+    /// traversal apps then run to their natural fixpoint.
+    fn sweep_cap(&self, key: &str) -> Result<usize> {
+        let v = self.get_usize(key, 0)?;
+        Ok(if v == 0 { usize::MAX } else { v })
+    }
+
+    /// BFS level cap (`bfs.max_levels`, 0 = until a frontier empties).
+    pub fn bfs_max_levels(&self) -> Result<usize> {
+        self.sweep_cap("bfs.max_levels")
+    }
+
+    /// SSSP round cap (`sssp.max_iters`, 0 = run to the distance fixpoint).
+    pub fn sssp_max_iters(&self) -> Result<usize> {
+        self.sweep_cap("sssp.max_iters")
+    }
+
+    /// Label-propagation sweep cap (`cc.max_iters`, 0 = to the fixpoint).
+    pub fn cc_max_iters(&self) -> Result<usize> {
+        self.sweep_cap("cc.max_iters")
+    }
+
+    /// Out-of-core SpGEMM knobs (`spgemm.*` keys; worker count rides the
+    /// shared `spmm.threads`): `run_flush_kb` bounds each worker's sorted
+    /// run buffer, `b_cache_tile_rows` the decoded B tile rows held in
+    /// memory, `merge_window_kb` the merging writer's window.
+    pub fn spgemm_opts(&self) -> Result<crate::spmm::spgemm::SpgemmOpts> {
+        let d = crate::spmm::spgemm::SpgemmOpts::default();
+        Ok(crate::spmm::spgemm::SpgemmOpts {
+            threads: self.get_usize("spmm.threads", d.threads)?,
+            run_flush_bytes: self
+                .get_usize("spgemm.run_flush_kb", d.run_flush_bytes >> 10)?
+                .max(1)
+                << 10,
+            b_cache_tile_rows: self
+                .get_usize("spgemm.b_cache_tile_rows", d.b_cache_tile_rows)?
+                .max(1),
+            merge_window: self
+                .get_usize("spgemm.merge_window_kb", d.merge_window >> 10)?
+                .max(1)
+                << 10,
+        })
     }
 
     /// Serve-mode batching and QoS knobs:
@@ -349,6 +399,37 @@ mod tests {
             let c = Config::parse(&format!("{bad}\n")).unwrap();
             assert!(c.batch_config().is_err(), "'{bad}' must be rejected");
         }
+    }
+
+    #[test]
+    fn traversal_and_spgemm_keys_default_and_parse() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.bfs_max_levels().unwrap(), usize::MAX, "0 means uncapped");
+        assert_eq!(c.sssp_max_iters().unwrap(), usize::MAX);
+        assert_eq!(c.cc_max_iters().unwrap(), usize::MAX);
+        let so = c.spgemm_opts().unwrap();
+        let d = crate::spmm::spgemm::SpgemmOpts::default();
+        assert_eq!(so.run_flush_bytes, d.run_flush_bytes);
+        assert_eq!(so.b_cache_tile_rows, d.b_cache_tile_rows);
+        assert_eq!(so.merge_window, d.merge_window);
+        let c = Config::parse(
+            "bfs.max_levels = 4\nsssp.max_iters = 12\ncc.max_iters = 3\n\
+             spmm.threads = 5\nspgemm.run_flush_kb = 64\n\
+             spgemm.b_cache_tile_rows = 2\nspgemm.merge_window_kb = 256\n",
+        )
+        .unwrap();
+        assert_eq!(c.bfs_max_levels().unwrap(), 4);
+        assert_eq!(c.sssp_max_iters().unwrap(), 12);
+        assert_eq!(c.cc_max_iters().unwrap(), 3);
+        let so = c.spgemm_opts().unwrap();
+        assert_eq!(so.threads, 5, "spgemm rides spmm.threads");
+        assert_eq!(so.run_flush_bytes, 64 << 10);
+        assert_eq!(so.b_cache_tile_rows, 2);
+        assert_eq!(so.merge_window, 256 << 10);
+        assert!(Config::parse("bfs.max_levels = many\n")
+            .unwrap()
+            .bfs_max_levels()
+            .is_err());
     }
 
     #[test]

@@ -19,9 +19,18 @@
 //! PAGERANK <dataset> <iters>
 //! EIGEN <dataset> <nev>
 //! NMF <dataset> <k> <iters>
+//! BFS <dataset> <root>
+//! SSSP <dataset> <root>
+//! CC <dataset>
 //! STATS
 //! QUIT
 //! ```
+//!
+//! The traversal verbs (`BFS`/`SSSP`/`CC`) run the semiring sweeps of
+//! [`crate::apps::bfs`], [`crate::apps::sssp`] and
+//! [`crate::apps::labelprop`] on the connection thread, like the other
+//! iterative apps; `CC` serves the undirected (symmetrized) variant of
+//! the dataset, since components are defined on the undirected graph.
 //!
 //! Batched replies (`SPMV`/`SPMM`) carry per-request ride accounting:
 //! `riders` (requests sharing the pass), `queue_ms` (admission wait),
@@ -43,7 +52,7 @@
 
 use super::batcher::{Backpressure, BatchConfig, BatchJob, Batcher};
 use super::catalog::Catalog;
-use crate::apps::{eigen, nmf, pagerank};
+use crate::apps::{bfs, eigen, labelprop, nmf, pagerank, sssp};
 use crate::config::json::Json;
 use crate::graph::registry;
 use crate::matrix::DenseMatrix;
@@ -326,14 +335,79 @@ impl Service {
                     .set("sparse_passes", res.sparse_passes)
                     .set("secs", res.secs)
             }
+            ["BFS", ds, root] => {
+                let root: u32 = root.parse()?;
+                let imgs = self.ensure(ds)?;
+                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let cfg = bfs::BfsConfig {
+                    spmm: self.opts.clone(),
+                    ..Default::default()
+                };
+                let (_, stats) = bfs::bfs(&src, root, &cfg)?;
+                Json::obj()
+                    .set("root", root as usize)
+                    .set("reached", stats.reached)
+                    .set("levels", stats.levels)
+                    .set("secs", stats.secs)
+            }
+            ["SSSP", ds, root] => {
+                let root: u32 = root.parse()?;
+                let imgs = self.ensure(ds)?;
+                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let cfg = sssp::SsspConfig {
+                    spmm: self.opts.clone(),
+                    ..Default::default()
+                };
+                let (_, parents, stats) = sssp::sssp(&src, root, &cfg)?;
+                Json::obj()
+                    .set("root", root as usize)
+                    .set("reached", stats.reached)
+                    .set("rounds", stats.iters)
+                    .set("converged", stats.converged)
+                    .set("tree_edges", parents.iter().filter(|&&p| p >= 0).count())
+                    .set("secs", stats.secs)
+            }
+            ["CC", ds] => {
+                let imgs = self.ensure_undirected(ds)?;
+                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let cfg = labelprop::LabelPropConfig {
+                    spmm: self.opts.clone(),
+                    ..Default::default()
+                };
+                let (_, stats) = labelprop::connected_components(&src, &cfg)?;
+                Json::obj()
+                    .set("components", stats.components)
+                    .set("sweeps", stats.iters)
+                    .set("converged", stats.converged)
+                    .set("secs", stats.secs)
+            }
             _ => Json::obj().set("error", format!("unknown request: {req}")),
         };
         Ok(Some(reply.set("wall_secs", sw.secs())))
     }
 
     fn ensure(&self, ds: &str) -> Result<super::catalog::DatasetImages> {
-        let spec = registry::by_name(ds)
+        self.ensure_spec(ds, false)
+    }
+
+    /// `ensure` with the dataset forced undirected (symmetrized) — the
+    /// `CC` verb, since components live on the undirected graph. The
+    /// catalog names directed and undirected variants distinctly, so
+    /// both coexist on one store.
+    fn ensure_undirected(&self, ds: &str) -> Result<super::catalog::DatasetImages> {
+        self.ensure_spec(ds, true)
+    }
+
+    fn ensure_spec(
+        &self,
+        ds: &str,
+        force_undirected: bool,
+    ) -> Result<super::catalog::DatasetImages> {
+        let mut spec = registry::by_name(ds)
             .ok_or_else(|| anyhow::anyhow!("unknown dataset '{ds}'"))?;
+        if force_undirected {
+            spec.directed = false;
+        }
         // Service uses shrunk datasets for responsiveness; the bench
         // harness drives full-scale runs directly.
         let spec = if std::env::var_os("SEM_FULL_SCALE").is_some() {
@@ -435,6 +509,28 @@ mod tests {
         assert!(r.get("sparse_bytes").unwrap().as_f64().unwrap() > 0.0);
         let s = svc.dispatch("STATS").unwrap().unwrap();
         assert_eq!(s.get("riders").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn dispatch_traversal_verbs() {
+        let (_d, svc) = service();
+        let r = svc.dispatch("BFS twitter 0").unwrap().unwrap();
+        assert!(r.get("reached").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(r.get("levels").is_some());
+        let r = svc.dispatch("SSSP twitter 0").unwrap().unwrap();
+        assert_eq!(r.get("converged"), Some(&Json::Bool(true)));
+        let reached = r.get("reached").unwrap().as_f64().unwrap();
+        // Binary adjacency ⇒ SSSP reach = BFS reach from the same root.
+        let b = svc.dispatch("BFS twitter 0").unwrap().unwrap();
+        assert_eq!(b.get("reached").unwrap().as_f64().unwrap(), reached);
+        assert_eq!(
+            r.get("tree_edges").unwrap().as_f64().unwrap(),
+            reached - 1.0,
+            "every reached non-root vertex has one tree edge"
+        );
+        let r = svc.dispatch("CC twitter").unwrap().unwrap();
+        assert_eq!(r.get("converged"), Some(&Json::Bool(true)));
+        assert!(r.get("components").unwrap().as_f64().unwrap() >= 1.0);
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //!   pagerank <dataset> <iters> [vecs] SpMM-PageRank (vecs in memory: 1-3)
 //!   eigen   <dataset> <nev> [min|max] SEM Krylov-Schur eigensolver
 //!   nmf     <dataset> <k> <iters> [cols_in_mem]
+//!   bfs     <dataset> [root]          BFS levels via or-and sweeps
+//!   sssp    <dataset> [root]          Bellman-Ford via min-plus sweeps
+//!   cc      <dataset>                 connected components (min-label)
+//!   spgemm  <dataset> [triangles]     out-of-core A·A (+ triangle count)
 //!   convert <dataset>                 CSR→SCSR conversion timing (Table 2)
 //!   serve   <addr>                    request-service loop (TCP)
 //!   datasets                          list registry datasets
@@ -20,7 +24,8 @@
 //! come from the config (`store.*` keys).
 
 use anyhow::{bail, Context, Result};
-use sem_spmm::apps::{eigen, nmf, pagerank};
+use sem_spmm::apps::{bfs, eigen, labelprop, nmf, pagerank, sssp};
+use sem_spmm::spmm::spgemm;
 use sem_spmm::config::Config;
 use sem_spmm::coordinator::{service::Service, Catalog};
 use sem_spmm::graph::registry;
@@ -72,7 +77,9 @@ fn run() -> Result<()> {
         bail!("no command; try `sem-spmm help`");
     };
     if cmd == "--help" || cmd == "help" {
-        println!("commands: info spmv spmm pagerank eigen nmf convert serve datasets");
+        println!(
+            "commands: info spmv spmm pagerank eigen nmf bfs sssp cc spgemm convert serve datasets"
+        );
         return Ok(());
     }
     if cmd == "datasets" {
@@ -109,6 +116,10 @@ fn run() -> Result<()> {
         "pagerank" => cmd_pagerank(&ctx, &args[1..]),
         "eigen" => cmd_eigen(&ctx, &args[1..]),
         "nmf" => cmd_nmf(&ctx, &args[1..]),
+        "bfs" => cmd_bfs(&ctx, &args[1..]),
+        "sssp" => cmd_sssp(&ctx, &args[1..]),
+        "cc" => cmd_cc(&ctx, &args[1..]),
+        "spgemm" => cmd_spgemm(&ctx, &args[1..]),
         "convert" => cmd_convert(&ctx, &args[1..]),
         "serve" => cmd_serve(&ctx, &args[1..]),
         other => bail!("unknown command '{other}'"),
@@ -290,6 +301,128 @@ fn cmd_nmf(ctx: &Ctx, args: &[String]) -> Result<()> {
     print_cache_line(&res.cache);
     for (i, r) in res.residuals.iter().enumerate() {
         println!("  iter {i}: ‖A−WH‖ = {r:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_bfs(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("bfs <dataset> [root]")?;
+    let root: u32 = args.get(1).map(|s| s.parse()).unwrap_or(Ok(0))?;
+    let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let cfg = bfs::BfsConfig {
+        max_levels: ctx.cfg.bfs_max_levels()?,
+        spmm: ctx.cfg.spmm_opts()?,
+    };
+    let (_, stats) = bfs::bfs(&src, root, &cfg)?;
+    println!(
+        "bfs {name} root={root}: reached {}/{} in {} levels, {} ({} read)",
+        stats.reached,
+        imgs.num_verts,
+        stats.levels,
+        sem_spmm::util::human_secs(stats.secs),
+        sem_spmm::util::human_bytes(stats.bytes_read)
+    );
+    for (l, f) in stats.frontier.iter().enumerate().take(8) {
+        println!("  level {}\tfrontier {f}", l + 1);
+    }
+    Ok(())
+}
+
+fn cmd_sssp(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("sssp <dataset> [root]")?;
+    let root: u32 = args.get(1).map(|s| s.parse()).unwrap_or(Ok(0))?;
+    let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let cfg = sssp::SsspConfig {
+        max_iters: ctx.cfg.sssp_max_iters()?,
+        spmm: ctx.cfg.spmm_opts()?,
+        ..Default::default()
+    };
+    let (d, parents, stats) = sssp::sssp(&src, root, &cfg)?;
+    let ecc = d
+        .iter()
+        .filter(|x| x.is_finite())
+        .fold(0f32, |a, &b| a.max(b));
+    println!(
+        "sssp {name} root={root}: reached {}/{} in {} rounds{}, eccentricity {ecc}, {} ({} read)",
+        stats.reached,
+        imgs.num_verts,
+        stats.iters,
+        if stats.converged { " (converged)" } else { "" },
+        sem_spmm::util::human_secs(stats.secs),
+        sem_spmm::util::human_bytes(stats.bytes_read)
+    );
+    let tree_edges = parents.iter().filter(|&&p| p >= 0).count();
+    println!("  shortest-path tree: {tree_edges} edges");
+    Ok(())
+}
+
+fn cmd_cc(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("cc <dataset>")?;
+    let mut spec = dataset_spec(ctx, name)?;
+    spec.directed = false; // components are defined on the undirected graph
+    let imgs = ctx.catalog.ensure(&spec)?;
+    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let cfg = labelprop::LabelPropConfig {
+        max_iters: ctx.cfg.cc_max_iters()?,
+        spmm: ctx.cfg.spmm_opts()?,
+    };
+    let (labels, stats) = labelprop::connected_components(&src, &cfg)?;
+    let giant = {
+        let mut counts = std::collections::HashMap::new();
+        for &l in &labels {
+            *counts.entry(l).or_insert(0u64) += 1;
+        }
+        counts.values().copied().max().unwrap_or(0)
+    };
+    println!(
+        "cc {name}: {} components in {} sweeps{}, giant component {}/{}, {} ({} read)",
+        stats.components,
+        stats.iters,
+        if stats.converged { " (converged)" } else { "" },
+        giant,
+        imgs.num_verts,
+        sem_spmm::util::human_secs(stats.secs),
+        sem_spmm::util::human_bytes(stats.bytes_read)
+    );
+    Ok(())
+}
+
+fn cmd_spgemm(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let name = args.first().context("spgemm <dataset> [triangles]")?;
+    let triangles = args.get(1).map(|s| s == "triangles").unwrap_or(false);
+    let mut spec = dataset_spec(ctx, name)?;
+    if triangles {
+        spec.directed = false; // triangle counting needs a symmetric A
+    }
+    let imgs = ctx.catalog.ensure(&spec)?;
+    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    // B = A held tile-row-at-a-time in memory (the out-of-core SpGEMM
+    // contract); A itself streams from the store.
+    let b = sem_spmm::format::tiled::TiledImage::from_bytes(&ctx.store.get(&imgs.adj)?)?;
+    let scratch = format!("{}.aa.runs", imgs.name);
+    let prod = spgemm::spgemm(&src, &b, &ctx.store, &scratch, &ctx.cfg.spgemm_opts()?)?;
+    let s = &prod.stats;
+    println!(
+        "spgemm {name}: A·A nnz {} from {} sorted runs ({} triples, {}), sweep {} + merge {}",
+        s.nnz,
+        s.runs,
+        s.run_triples,
+        sem_spmm::util::human_bytes(s.run_bytes),
+        sem_spmm::util::human_secs(s.sweep_secs),
+        sem_spmm::util::human_secs(s.merge_secs)
+    );
+    if triangles {
+        let (mut coords, _) = sem_spmm::format::tiled::decode_all(&b);
+        coords.sort_unstable();
+        let adj = sem_spmm::format::Csr::from_sorted_pairs(
+            imgs.num_verts,
+            imgs.num_verts,
+            &coords,
+        );
+        let tri = spgemm::triangle_count(&prod.csr, &adj);
+        println!("  triangles: {tri} (Σ A⊙(A·A) / 6)");
     }
     Ok(())
 }

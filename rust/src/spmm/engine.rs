@@ -153,6 +153,42 @@ impl Source {
             Source::Sem(s) => s.cache_for(opts.cache_budget_bytes),
         }
     }
+
+    /// Stream every stored entry as `f(row, col, value)` in tile order —
+    /// one sequential sweep of the image, tile rows decoded on the fly
+    /// (binary images yield `1.0` per entry). SEM sources read each tile
+    /// row from the store exactly once; nothing is retained. Apps use
+    /// this for edge-level post-processing that SpMM cannot express, e.g.
+    /// SSSP parent derivation after the distance fixpoint.
+    pub fn for_each_edge(&self, mut f: impl FnMut(u32, u32, f32)) -> Result<()> {
+        let meta = self.meta().clone();
+        let t = meta.tile as u32;
+        let ntr = meta.n_tile_rows();
+        let mut sembuf: Vec<u8> = Vec::new();
+        for tr in 0..ntr {
+            let bytes: &[u8] = match self {
+                Source::Mem(img) => img.tile_row(tr),
+                Source::Sem(s) => {
+                    let (off, len) = s.index[tr];
+                    sembuf.resize(len as usize, 0);
+                    s.file.read_at(s.data_start + off, &mut sembuf)?;
+                    &sembuf
+                }
+            };
+            let row_base = (tr as u32) * t;
+            let mut off = 0usize;
+            while off < bytes.len() {
+                let (tc, e, next) = super::spgemm::decode_tile(bytes, off, &meta);
+                let col_base = tc * t;
+                for (i, &(r, c)) in e.coords.iter().enumerate() {
+                    let v = e.vals.get(i).copied().unwrap_or(1.0);
+                    f(row_base + r as u32, col_base + c as u32, v);
+                }
+                off = next;
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Where finished output row intervals go.

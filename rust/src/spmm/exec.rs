@@ -35,6 +35,7 @@
 use super::engine::{OutputSink, Source, SpmmStats};
 use super::kernel::{mul_tile_dcsc, mul_tile_dcsc_t, mul_tile_scsr, mul_tile_scsr_t};
 use super::plan::{OpStats, PassOp, PassResult, StreamPass};
+use super::semiring::Semiring;
 use super::scheduler::{Scheduler, Task};
 use super::SpmmOpts;
 use crate::format::tiled::TiledMeta;
@@ -74,7 +75,24 @@ struct WorkerOut {
 ///
 /// A single-forward-op plan is byte-identical in behavior and stats to
 /// the classic [`super::spmm`] engine (which is now a wrapper over this).
+/// This is the [`super::semiring::Arith`] instantiation of
+/// [`run_pass_ring`] — same monomorphized code, fixed `(+, ×)` algebra.
 pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<PassResult> {
+    run_pass_ring(src, pass, opts)
+}
+
+/// Execute `pass` under its semiring `S`: every kernel fold, every
+/// scatter-partial zero-fill, and the end-of-pass partial merge use
+/// `(S::add, S::mul, S::ZERO)`. Everything else — scheduling, prefetch,
+/// caching, sinks, hooks, stats — is algebra-independent and shared.
+/// Hook accumulators stay plain `f64` additions: they are reductions
+/// *about* the output (counts, norms, frontier sizes), not elements of
+/// the ring.
+pub fn run_pass_ring<S: Semiring>(
+    src: &Source,
+    pass: &StreamPass<'_, S>,
+    opts: &SpmmOpts,
+) -> Result<PassResult> {
     let meta = src.meta().clone();
     if pass.ops.is_empty() {
         bail!("stream pass has no ops");
@@ -200,7 +218,7 @@ pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<
             let cache = cache.clone();
             let ops = &pass.ops;
             handles.push(scope.spawn(move || -> Result<WorkerOut> {
-                worker(
+                worker::<S>(
                     ti,
                     src,
                     ops,
@@ -268,11 +286,11 @@ pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<
                         let rows_lo = j * t;
                         let rows_hi = ((j + 1) * t).min(meta.ncols);
                         buf.clear();
-                        buf.resize((rows_hi - rows_lo) * p, 0.0);
+                        buf.resize((rows_hi - rows_lo) * p, S::ZERO);
                         for wb in blocks {
                             if let Some(b) = &wb[j] {
                                 for (d, s) in buf.iter_mut().zip(b.iter()) {
-                                    *d += *s;
+                                    *d = S::add(*d, *s);
                                 }
                             }
                         }
@@ -355,7 +373,7 @@ pub fn run_pass(src: &Source, pass: &StreamPass<'_>, opts: &SpmmOpts) -> Result<
 /// skips the I/O engine entirely; a miss submits the group read as before
 /// and publishes the claimed tile rows into the cache on completion.
 #[allow(clippy::too_many_arguments)]
-fn worker(
+fn worker<S: Semiring>(
     ti: usize,
     src: &Source,
     ops: &[PassOp<'_>],
@@ -496,12 +514,12 @@ fn worker(
         match f {
             Fetch::Mem(bytes) => {
                 let rows = row_slices(src, task, bytes);
-                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
             }
             Fetch::Ticket(tk) => {
                 let buf = tk.wait(opts.io_polling)?;
                 let rows = row_slices(src, task, &buf);
-                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
                 drop(rows);
                 if let Some(io) = io {
                     io.recycle(buf);
@@ -515,7 +533,7 @@ fn worker(
             } => {
                 let buf = tk.wait(opts.io_polling)?;
                 let rows = partial_row_slices(src, task, read_lo, read_hi, &resident, &buf);
-                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
                 drop(rows);
                 if let Some(io) = io {
                     io.recycle(buf);
@@ -523,13 +541,13 @@ fn worker(
             }
             Fetch::Frames(frames) => {
                 let rows: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
-                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
             }
             Fetch::Empty => {
                 // No bytes on the store for this group: forward ops still
                 // emit their (all-zero) output rows.
                 let rows: Vec<&[u8]> = vec![&[]; task.hi - task.lo];
-                process_group_ops(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
             }
         }
         tasks_done.fetch_add(1, Ordering::Relaxed);
@@ -544,7 +562,7 @@ fn worker(
 /// row `task.lo + i`'s encoded bytes — a slice of the group's contiguous
 /// read buffer, or a cached frame; the two are byte-identical, so the
 /// compute path cannot tell where bytes came from.
-fn process_group_ops(
+fn process_group_ops<S: Semiring>(
     task: Task,
     rows: &[&[u8]],
     ops: &[PassOp<'_>],
@@ -561,9 +579,9 @@ fn process_group_ops(
             PassOp::Forward(fop) => {
                 let p = fop.input.ncols;
                 st.outbuf.clear();
-                st.outbuf.resize((rows_hi - rows_lo) * p, 0.0);
+                st.outbuf.resize((rows_hi - rows_lo) * p, S::ZERO);
                 let t0 = Instant::now();
-                process_group_forward(task, rows, fop.input, opts, meta, &mut st.outbuf)?;
+                process_group_forward::<S>(task, rows, fop.input, opts, meta, &mut st.outbuf)?;
                 acc.kernel_time.add(t0.elapsed().as_nanos() as u64);
                 if let Some(h) = &fop.hook {
                     h(rows_lo, &mut st.outbuf, &mut st.acc);
@@ -588,7 +606,7 @@ fn process_group_ops(
             }
             PassOp::Transpose(top) => {
                 let t0 = Instant::now();
-                scatter_group(
+                scatter_group::<S>(
                     task,
                     rows,
                     top.input,
@@ -605,7 +623,7 @@ fn process_group_ops(
 
 /// Multiply all tiles of the group `[task.lo, task.hi)` into `outbuf`
 /// (the forward / gather direction — the classic engine compute path).
-fn process_group_forward(
+fn process_group_forward<S: Semiring>(
     task: Task,
     rows: &[&[u8]],
     input: &NumaDense,
@@ -629,7 +647,7 @@ fn process_group_forward(
                 let c_hi = ((tc + 1) * t).min(meta.ncols);
                 let in_rows = input.rows(tc * t, c_hi);
                 // Output rows of this tile: local to its tile row.
-                mul_tile_scsr(&view, vt, in_rows, outbuf, p, opts.vectorize);
+                mul_tile_scsr::<S>(&view, vt, in_rows, outbuf, p, opts.vectorize);
                 next
             }
             TileFormat::Dcsc => {
@@ -637,7 +655,7 @@ fn process_group_forward(
                 let tc = view.tile_col as usize;
                 let c_hi = ((tc + 1) * t).min(meta.ncols);
                 let in_rows = input.rows(tc * t, c_hi);
-                mul_tile_dcsc(&view, vt, in_rows, outbuf, p, opts.vectorize);
+                mul_tile_dcsc::<S>(&view, vt, in_rows, outbuf, p, opts.vectorize);
                 next
             }
         }
@@ -699,7 +717,7 @@ fn process_group_forward(
 /// partial blocks (the transpose direction). Storage order — the gather
 /// side of a scatter is the tile row's own dense rows, which stay hot
 /// regardless of tile order, so super-block regrouping buys nothing here.
-fn scatter_group(
+fn scatter_group<S: Semiring>(
     task: Task,
     rows: &[&[u8]],
     input: &NumaDense,
@@ -726,9 +744,9 @@ fn scatter_group(
                     let tc = view.tile_col as usize;
                     let c_hi = ((tc + 1) * t).min(meta.ncols);
                     let block = blocks[tc].get_or_insert_with(|| {
-                        vec![0f32; (c_hi - tc * t) * p].into_boxed_slice()
+                        vec![S::ZERO; (c_hi - tc * t) * p].into_boxed_slice()
                     });
-                    mul_tile_scsr_t(&view, vt, in_rows, block, p, opts.vectorize);
+                    mul_tile_scsr_t::<S>(&view, vt, in_rows, block, p, opts.vectorize);
                     off = next;
                 }
                 TileFormat::Dcsc => {
@@ -736,9 +754,9 @@ fn scatter_group(
                     let tc = view.tile_col as usize;
                     let c_hi = ((tc + 1) * t).min(meta.ncols);
                     let block = blocks[tc].get_or_insert_with(|| {
-                        vec![0f32; (c_hi - tc * t) * p].into_boxed_slice()
+                        vec![S::ZERO; (c_hi - tc * t) * p].into_boxed_slice()
                     });
-                    mul_tile_dcsc_t(&view, vt, in_rows, block, p, opts.vectorize);
+                    mul_tile_dcsc_t::<S>(&view, vt, in_rows, block, p, opts.vectorize);
                     off = next;
                 }
             }
@@ -1071,6 +1089,55 @@ mod tests {
         let bad_out = NumaDense::zeros(m.ncols + 1, 2, cfg);
         let pass = StreamPass::new().transpose(&y, &bad_out);
         assert!(run_pass(&Source::Mem(img), &pass, &opts).is_err());
+    }
+
+    #[test]
+    fn minplus_pass_relaxes_like_the_dense_fold() {
+        // A full executor pass under the tropical ring — forward and
+        // transpose ops fused in one sweep — must equal the per-edge
+        // min-plus fold, exactly (min and + introduce no rounding here:
+        // all inputs are dyadic or +∞).
+        use crate::spmm::semiring::MinPlus;
+        let m = sample_csr(8, 3000, 61);
+        let img = Arc::new(TiledImage::build(&m, 64, TileFormat::Scsr));
+        let opts = SpmmOpts {
+            threads: 3,
+            ..Default::default()
+        };
+        let cfg = ncfg(64, m.nrows.max(m.ncols), &opts);
+        let mut rng = crate::util::Xoshiro256::new(62);
+        let mut dyadic = |n: usize| -> Vec<f32> {
+            (0..n)
+                .map(|_| {
+                    if rng.below(5) == 0 {
+                        f32::INFINITY
+                    } else {
+                        (rng.below(64) as f32) / 4.0
+                    }
+                })
+                .collect()
+        };
+        let xv = dyadic(m.ncols);
+        let yv = dyadic(m.nrows);
+        let x = NumaDense::from_dense(&DenseMatrix::from_vec(m.ncols, 1, xv.clone()), cfg);
+        let y = NumaDense::from_dense(&DenseMatrix::from_vec(m.nrows, 1, yv.clone()), cfg);
+        let fw = NumaDense::zeros(m.nrows, 1, cfg);
+        let tp = NumaDense::zeros(m.ncols, 1, cfg);
+        let pass = StreamPass::<MinPlus>::new()
+            .forward(&x, OutputSink::Mem(&fw))
+            .transpose(&y, &tp);
+        run_pass_ring(&Source::Mem(img), &pass, &opts).unwrap();
+        // Per-edge tropical fold (binary matrix: weight = PATTERN = 1).
+        let mut want_f = vec![f32::INFINITY; m.nrows];
+        let mut want_t = vec![f32::INFINITY; m.ncols];
+        for r in 0..m.nrows {
+            for &c in m.row(r) {
+                want_f[r] = want_f[r].min(1.0 + xv[c as usize]);
+                want_t[c as usize] = want_t[c as usize].min(1.0 + yv[r]);
+            }
+        }
+        assert_eq!(fw.to_dense().data, want_f, "forward min-plus");
+        assert_eq!(tp.to_dense().data, want_t, "transpose min-plus");
     }
 
     #[test]

@@ -1,9 +1,10 @@
-//! Per-tile multiply kernels: forward (gather) and transpose (scatter).
+//! Per-tile multiply kernels: forward (gather) and transpose (scatter),
+//! generic over a [`Semiring`].
 //!
-//! A **forward** tile multiply adds `val · in_row(col)` into
-//! `out_row(row)` for every non-zero — the `A·X` direction. A
-//! **transpose** tile multiply reads the *same* encoded bytes and adds
-//! `val · in_row(row)` into `out_row(col)` — the `Aᵀ·Y` direction: tile
+//! A **forward** tile multiply folds `val ⊗ in_row(col)` into
+//! `out_row(row)` with ⊕ for every non-zero — the `A·X` direction. A
+//! **transpose** tile multiply reads the *same* encoded bytes and folds
+//! `val ⊗ in_row(row)` into `out_row(col)` — the `Aᵀ·Y` direction: tile
 //! (I, J) of A, streamed while sweeping tile row I, contributes to output
 //! rows `J·t..` of `Aᵀ·Y`. Both directions work on one stored image, which
 //! is what lets a fused [`super::plan::StreamPass`] compute `A·X` and
@@ -11,6 +12,12 @@
 //! involved in one tile stay inside the CPU cache by construction (that is
 //! what the tile size guarantees), so these loops are the pure compute hot
 //! spot of the whole system.
+//!
+//! The semiring is a zero-sized type parameter: under [`Arith`] the fold
+//! is `out += val * in` and every function monomorphizes to exactly the
+//! pre-semiring kernel; under [`super::semiring::MinPlus`] the same loop
+//! relaxes shortest-path distances, under [`super::semiring::OrAnd`] it
+//! expands BFS frontiers (see `spmm/semiring.rs`).
 //!
 //! The inner loop over the `p` columns of a dense row is width-specialized
 //! through a const generic: for `p ∈ {1, 2, 4, 8, 16}` the compiler sees a
@@ -23,14 +30,58 @@
 //! the executor reduces the partials at pass end, so no atomics touch
 //! these loops.
 
+use super::semiring::Semiring;
 use crate::format::{dcsc, scsr, ValueType};
+use std::slice::ChunksExact;
 
-/// Multiply one SCSR+COO tile: `out[lr] += val · inm[lc]` over all entries.
+/// Sequential decoder over a tile's value bytes.
+///
+/// §Perf (EXPERIMENTS.md opt B): the hot loops used to index values as
+/// `f32::from_le_bytes([b[4i], b[4i+1], …])` — four checked byte loads
+/// per non-zero. This cursor walks the same bytes with `chunks_exact(4)`,
+/// so each value costs one pointer bump and a 4-byte conversion with no
+/// per-element bounds checks; both tile formats store values in exactly
+/// the order their entry streams consume them. Binary tiles (no stored
+/// values) yield the semiring's pattern constant without touching memory.
+struct ValCursor<'a> {
+    chunks: ChunksExact<'a, u8>,
+    /// Value substituted per entry when the tile stores no values.
+    pattern: f32,
+    weighted: bool,
+}
+
+impl<'a> ValCursor<'a> {
+    #[inline(always)]
+    fn new(vals: &'a [u8], vt: ValueType, pattern: f32) -> ValCursor<'a> {
+        ValCursor {
+            chunks: vals.chunks_exact(4),
+            pattern,
+            weighted: vt == ValueType::F32,
+        }
+    }
+
+    /// The next stored value, or the pattern constant on binary tiles.
+    #[inline(always)]
+    fn next(&mut self) -> f32 {
+        if self.weighted {
+            match self.chunks.next() {
+                Some(c) => f32::from_le_bytes(c.try_into().unwrap()),
+                // Unreachable on well-formed tiles (the encoders emit one
+                // value per entry); stay total rather than panic here.
+                None => self.pattern,
+            }
+        } else {
+            self.pattern
+        }
+    }
+}
+
+/// Multiply one SCSR+COO tile: `out[lr] ⊕= val ⊗ in[lc]` over all entries.
 ///
 /// `in_rows` starts at dense row `tile_col · t`; `out_rows` starts at the
 /// tile row's first row. Both are row-major with `p` columns.
 #[inline]
-pub fn mul_tile_scsr(
+pub fn mul_tile_scsr<S: Semiring>(
     view: &scsr::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
@@ -40,15 +91,15 @@ pub fn mul_tile_scsr(
 ) {
     if vectorize {
         match p {
-            1 => mul_scsr_w::<1>(view, vt, in_rows, out_rows),
-            2 => mul_scsr_w::<2>(view, vt, in_rows, out_rows),
-            4 => mul_scsr_w::<4>(view, vt, in_rows, out_rows),
-            8 => mul_scsr_w::<8>(view, vt, in_rows, out_rows),
-            16 => mul_scsr_w::<16>(view, vt, in_rows, out_rows),
-            _ => mul_scsr_generic(view, vt, in_rows, out_rows, p),
+            1 => mul_scsr_w::<S, 1>(view, vt, in_rows, out_rows),
+            2 => mul_scsr_w::<S, 2>(view, vt, in_rows, out_rows),
+            4 => mul_scsr_w::<S, 4>(view, vt, in_rows, out_rows),
+            8 => mul_scsr_w::<S, 8>(view, vt, in_rows, out_rows),
+            16 => mul_scsr_w::<S, 16>(view, vt, in_rows, out_rows),
+            _ => mul_scsr_generic::<S>(view, vt, in_rows, out_rows, p),
         }
     } else {
-        mul_scsr_generic(view, vt, in_rows, out_rows, p);
+        mul_scsr_generic::<S>(view, vt, in_rows, out_rows, p);
     }
 }
 
@@ -57,28 +108,23 @@ fn read_u16(b: &[u8], i: usize) -> u16 {
     u16::from_le_bytes([b[2 * i], b[2 * i + 1]])
 }
 
-#[inline(always)]
-fn read_f32(b: &[u8], i: usize) -> f32 {
-    f32::from_le_bytes([b[4 * i], b[4 * i + 1], b[4 * i + 2], b[4 * i + 3]])
-}
-
 /// Width-specialized SCSR multiply: the `P`-length loops compile to
 /// straight-line vector code.
 ///
 /// §Perf: the stream walk uses `chunks_exact(2)` so the word loads carry
-/// no per-iteration bounds checks, and the dense-row accesses go through
-/// `get_unchecked` — safe because every local index in a well-formed tile
-/// is `< t` and both slices span `t` rows (debug builds assert it). This
-/// removed the last branchy bounds checks from the hot loop
-/// (EXPERIMENTS.md §Perf, opt A).
-fn mul_scsr_w<const P: usize>(
+/// no per-iteration bounds checks, the value stream is decoded through a
+/// [`ValCursor`], and the dense-row accesses go through `get_unchecked`
+/// — safe because every local index in a well-formed tile is `< t` and
+/// both slices span `t` rows (debug builds assert it). This removed the
+/// last branchy bounds checks from the hot loop (EXPERIMENTS.md §Perf,
+/// opts A and B).
+fn mul_scsr_w<S: Semiring, const P: usize>(
     view: &scsr::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
     out_rows: &mut [f32],
 ) {
-    let weighted = vt == ValueType::F32;
-    let mut vi = 0usize;
+    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     let mut out_base = 0usize;
     // SCSR part: rows with >= 2 entries.
     for wbytes in view.scsr.chunks_exact(2) {
@@ -87,43 +133,41 @@ fn mul_scsr_w<const P: usize>(
             out_base = ((w & !scsr::ROW_TAG) as usize) * P;
         } else {
             let in_base = (w as usize) * P;
-            let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
-            vi += 1;
+            let v = vals.next();
             debug_assert!(in_base + P <= in_rows.len() && out_base + P <= out_rows.len());
             unsafe {
                 for j in 0..P {
-                    *out_rows.get_unchecked_mut(out_base + j) +=
-                        v * in_rows.get_unchecked(in_base + j);
+                    let o = out_rows.get_unchecked_mut(out_base + j);
+                    *o = S::add(*o, S::mul(v, *in_rows.get_unchecked(in_base + j)));
                 }
             }
         }
     }
     // COO part: single-entry rows — no end-of-row test per entry.
-    for (k, pair) in view.coo.chunks_exact(4).enumerate() {
+    for pair in view.coo.chunks_exact(4) {
         let r = u16::from_le_bytes([pair[0], pair[1]]) as usize;
         let c = u16::from_le_bytes([pair[2], pair[3]]) as usize;
-        let v = if weighted { read_f32(view.vals, vi + k) } else { 1.0 };
+        let v = vals.next();
         debug_assert!(c * P + P <= in_rows.len() && r * P + P <= out_rows.len());
         unsafe {
             for j in 0..P {
-                *out_rows.get_unchecked_mut(r * P + j) +=
-                    v * in_rows.get_unchecked(c * P + j);
+                let o = out_rows.get_unchecked_mut(r * P + j);
+                *o = S::add(*o, S::mul(v, *in_rows.get_unchecked(c * P + j)));
             }
         }
     }
 }
 
 /// Generic-width scalar fallback (also the `Vec = off` ablation).
-fn mul_scsr_generic(
+fn mul_scsr_generic<S: Semiring>(
     view: &scsr::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
 ) {
-    let weighted = vt == ValueType::F32;
+    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     let words = view.scsr.len() / 2;
-    let mut vi = 0usize;
     let mut out_base = 0usize;
     let mut i = 0usize;
     while i < words {
@@ -132,10 +176,9 @@ fn mul_scsr_generic(
             out_base = ((w & !scsr::ROW_TAG) as usize) * p;
         } else {
             let in_base = (w as usize) * p;
-            let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
-            vi += 1;
+            let v = vals.next();
             for j in 0..p {
-                out_rows[out_base + j] += v * in_rows[in_base + j];
+                out_rows[out_base + j] = S::add(out_rows[out_base + j], S::mul(v, in_rows[in_base + j]));
             }
         }
         i += 1;
@@ -143,16 +186,15 @@ fn mul_scsr_generic(
     for k in 0..view.n_single {
         let r = read_u16(view.coo, 2 * k) as usize;
         let c = read_u16(view.coo, 2 * k + 1) as usize;
-        let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
-        vi += 1;
+        let v = vals.next();
         for j in 0..p {
-            out_rows[r * p + j] += v * in_rows[c * p + j];
+            out_rows[r * p + j] = S::add(out_rows[r * p + j], S::mul(v, in_rows[c * p + j]));
         }
     }
 }
 
 /// Multiply one DCSC tile (the format-ablation path, Fig 13).
-pub fn mul_tile_dcsc(
+pub fn mul_tile_dcsc<S: Semiring>(
     view: &dcsc::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
@@ -162,70 +204,70 @@ pub fn mul_tile_dcsc(
 ) {
     if vectorize {
         match p {
-            1 => mul_dcsc_w::<1>(view, vt, in_rows, out_rows),
-            2 => mul_dcsc_w::<2>(view, vt, in_rows, out_rows),
-            4 => mul_dcsc_w::<4>(view, vt, in_rows, out_rows),
-            8 => mul_dcsc_w::<8>(view, vt, in_rows, out_rows),
-            16 => mul_dcsc_w::<16>(view, vt, in_rows, out_rows),
-            _ => mul_dcsc_generic(view, vt, in_rows, out_rows, p),
+            1 => mul_dcsc_w::<S, 1>(view, vt, in_rows, out_rows),
+            2 => mul_dcsc_w::<S, 2>(view, vt, in_rows, out_rows),
+            4 => mul_dcsc_w::<S, 4>(view, vt, in_rows, out_rows),
+            8 => mul_dcsc_w::<S, 8>(view, vt, in_rows, out_rows),
+            16 => mul_dcsc_w::<S, 16>(view, vt, in_rows, out_rows),
+            _ => mul_dcsc_generic::<S>(view, vt, in_rows, out_rows, p),
         }
     } else {
-        mul_dcsc_generic(view, vt, in_rows, out_rows, p);
+        mul_dcsc_generic::<S>(view, vt, in_rows, out_rows, p);
     }
 }
 
-fn mul_dcsc_w<const P: usize>(
+fn mul_dcsc_w<S: Semiring, const P: usize>(
     view: &dcsc::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
     out_rows: &mut [f32],
 ) {
-    let weighted = vt == ValueType::F32;
+    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     for k in 0..view.nnc {
         let (c, s, e) = view.col(k);
         let in_base = (c as usize) * P;
         let src: [f32; P] = in_rows[in_base..in_base + P].try_into().unwrap();
         for i in s..e {
             let r = view.row(i) as usize;
-            let v = if weighted { view.val(i) } else { 1.0 };
+            let v = vals.next();
             let dst = &mut out_rows[r * P..r * P + P];
             for j in 0..P {
-                dst[j] += v * src[j];
+                dst[j] = S::add(dst[j], S::mul(v, src[j]));
             }
         }
     }
 }
 
-fn mul_dcsc_generic(
+fn mul_dcsc_generic<S: Semiring>(
     view: &dcsc::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
 ) {
-    let weighted = vt == ValueType::F32;
+    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     for k in 0..view.nnc {
         let (c, s, e) = view.col(k);
         let in_base = (c as usize) * p;
         for i in s..e {
             let r = view.row(i) as usize;
-            let v = if weighted { view.val(i) } else { 1.0 };
+            let v = vals.next();
             for j in 0..p {
-                out_rows[r * p + j] += v * in_rows[in_base + j];
+                out_rows[r * p + j] = S::add(out_rows[r * p + j], S::mul(v, in_rows[in_base + j]));
             }
         }
     }
 }
 
 /// Scatter-multiply one SCSR+COO tile for the transpose direction:
-/// `out[lc] += val · in[lr]` over all entries.
+/// `out[lc] ⊕= val ⊗ in[lr]` over all entries.
 ///
 /// `in_rows` starts at dense row `tile_row · t` of Y (the rows the sweep
 /// is already holding for this tile row); `out_rows` is the per-worker
 /// partial block for this tile's column interval, starting at output row
 /// `tile_col · t`. Both are row-major with `p` columns.
 #[inline]
-pub fn mul_tile_scsr_t(
+pub fn mul_tile_scsr_t<S: Semiring>(
     view: &scsr::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
@@ -235,29 +277,28 @@ pub fn mul_tile_scsr_t(
 ) {
     if vectorize {
         match p {
-            1 => mul_scsr_t_w::<1>(view, vt, in_rows, out_rows),
-            2 => mul_scsr_t_w::<2>(view, vt, in_rows, out_rows),
-            4 => mul_scsr_t_w::<4>(view, vt, in_rows, out_rows),
-            8 => mul_scsr_t_w::<8>(view, vt, in_rows, out_rows),
-            16 => mul_scsr_t_w::<16>(view, vt, in_rows, out_rows),
-            _ => mul_scsr_t_generic(view, vt, in_rows, out_rows, p),
+            1 => mul_scsr_t_w::<S, 1>(view, vt, in_rows, out_rows),
+            2 => mul_scsr_t_w::<S, 2>(view, vt, in_rows, out_rows),
+            4 => mul_scsr_t_w::<S, 4>(view, vt, in_rows, out_rows),
+            8 => mul_scsr_t_w::<S, 8>(view, vt, in_rows, out_rows),
+            16 => mul_scsr_t_w::<S, 16>(view, vt, in_rows, out_rows),
+            _ => mul_scsr_t_generic::<S>(view, vt, in_rows, out_rows, p),
         }
     } else {
-        mul_scsr_t_generic(view, vt, in_rows, out_rows, p);
+        mul_scsr_t_generic::<S>(view, vt, in_rows, out_rows, p);
     }
 }
 
 /// Width-specialized SCSR scatter: the roles of the row header (now the
 /// gather base) and the column words (now the scatter target) swap
 /// relative to [`mul_scsr_w`]; the stream walk is identical.
-fn mul_scsr_t_w<const P: usize>(
+fn mul_scsr_t_w<S: Semiring, const P: usize>(
     view: &scsr::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
     out_rows: &mut [f32],
 ) {
-    let weighted = vt == ValueType::F32;
-    let mut vi = 0usize;
+    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     let mut in_base = 0usize;
     // SCSR part: the header row becomes the input row to scatter from.
     for wbytes in view.scsr.chunks_exact(2) {
@@ -266,39 +307,37 @@ fn mul_scsr_t_w<const P: usize>(
             in_base = ((w & !scsr::ROW_TAG) as usize) * P;
         } else {
             let out_base = (w as usize) * P;
-            let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
-            vi += 1;
+            let v = vals.next();
             let src = &in_rows[in_base..in_base + P];
             let dst = &mut out_rows[out_base..out_base + P];
             for j in 0..P {
-                dst[j] += v * src[j];
+                dst[j] = S::add(dst[j], S::mul(v, src[j]));
             }
         }
     }
     // COO part: (row, col) scatters row's input into col's output.
-    for (k, pair) in view.coo.chunks_exact(4).enumerate() {
+    for pair in view.coo.chunks_exact(4) {
         let r = u16::from_le_bytes([pair[0], pair[1]]) as usize;
         let c = u16::from_le_bytes([pair[2], pair[3]]) as usize;
-        let v = if weighted { read_f32(view.vals, vi + k) } else { 1.0 };
+        let v = vals.next();
         let src = &in_rows[r * P..r * P + P];
         let dst = &mut out_rows[c * P..c * P + P];
         for j in 0..P {
-            dst[j] += v * src[j];
+            dst[j] = S::add(dst[j], S::mul(v, src[j]));
         }
     }
 }
 
 /// Generic-width scalar transpose fallback (the `Vec = off` ablation).
-fn mul_scsr_t_generic(
+fn mul_scsr_t_generic<S: Semiring>(
     view: &scsr::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
 ) {
-    let weighted = vt == ValueType::F32;
+    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     let words = view.scsr.len() / 2;
-    let mut vi = 0usize;
     let mut in_base = 0usize;
     let mut i = 0usize;
     while i < words {
@@ -307,10 +346,9 @@ fn mul_scsr_t_generic(
             in_base = ((w & !scsr::ROW_TAG) as usize) * p;
         } else {
             let out_base = (w as usize) * p;
-            let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
-            vi += 1;
+            let v = vals.next();
             for j in 0..p {
-                out_rows[out_base + j] += v * in_rows[in_base + j];
+                out_rows[out_base + j] = S::add(out_rows[out_base + j], S::mul(v, in_rows[in_base + j]));
             }
         }
         i += 1;
@@ -318,10 +356,9 @@ fn mul_scsr_t_generic(
     for k in 0..view.n_single {
         let r = read_u16(view.coo, 2 * k) as usize;
         let c = read_u16(view.coo, 2 * k + 1) as usize;
-        let v = if weighted { read_f32(view.vals, vi) } else { 1.0 };
-        vi += 1;
+        let v = vals.next();
         for j in 0..p {
-            out_rows[c * p + j] += v * in_rows[r * p + j];
+            out_rows[c * p + j] = S::add(out_rows[c * p + j], S::mul(v, in_rows[r * p + j]));
         }
     }
 }
@@ -329,7 +366,7 @@ fn mul_scsr_t_generic(
 /// Scatter-multiply one DCSC tile for the transpose direction. DCSC is
 /// column-grouped, so the transpose is actually a *gather* per non-empty
 /// column: the column's entries accumulate into one output row.
-pub fn mul_tile_dcsc_t(
+pub fn mul_tile_dcsc_t<S: Semiring>(
     view: &dcsc::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
@@ -339,60 +376,60 @@ pub fn mul_tile_dcsc_t(
 ) {
     if vectorize {
         match p {
-            1 => mul_dcsc_t_w::<1>(view, vt, in_rows, out_rows),
-            2 => mul_dcsc_t_w::<2>(view, vt, in_rows, out_rows),
-            4 => mul_dcsc_t_w::<4>(view, vt, in_rows, out_rows),
-            8 => mul_dcsc_t_w::<8>(view, vt, in_rows, out_rows),
-            16 => mul_dcsc_t_w::<16>(view, vt, in_rows, out_rows),
-            _ => mul_dcsc_t_generic(view, vt, in_rows, out_rows, p),
+            1 => mul_dcsc_t_w::<S, 1>(view, vt, in_rows, out_rows),
+            2 => mul_dcsc_t_w::<S, 2>(view, vt, in_rows, out_rows),
+            4 => mul_dcsc_t_w::<S, 4>(view, vt, in_rows, out_rows),
+            8 => mul_dcsc_t_w::<S, 8>(view, vt, in_rows, out_rows),
+            16 => mul_dcsc_t_w::<S, 16>(view, vt, in_rows, out_rows),
+            _ => mul_dcsc_t_generic::<S>(view, vt, in_rows, out_rows, p),
         }
     } else {
-        mul_dcsc_t_generic(view, vt, in_rows, out_rows, p);
+        mul_dcsc_t_generic::<S>(view, vt, in_rows, out_rows, p);
     }
 }
 
-fn mul_dcsc_t_w<const P: usize>(
+fn mul_dcsc_t_w<S: Semiring, const P: usize>(
     view: &dcsc::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
     out_rows: &mut [f32],
 ) {
-    let weighted = vt == ValueType::F32;
+    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     for k in 0..view.nnc {
         let (c, s, e) = view.col(k);
-        let mut acc = [0f32; P];
+        let mut acc = [S::ZERO; P];
         for i in s..e {
             let r = view.row(i) as usize;
-            let v = if weighted { view.val(i) } else { 1.0 };
+            let v = vals.next();
             let src = &in_rows[r * P..r * P + P];
             for j in 0..P {
-                acc[j] += v * src[j];
+                acc[j] = S::add(acc[j], S::mul(v, src[j]));
             }
         }
         let out_base = (c as usize) * P;
         let dst = &mut out_rows[out_base..out_base + P];
         for j in 0..P {
-            dst[j] += acc[j];
+            dst[j] = S::add(dst[j], acc[j]);
         }
     }
 }
 
-fn mul_dcsc_t_generic(
+fn mul_dcsc_t_generic<S: Semiring>(
     view: &dcsc::TileView<'_>,
     vt: ValueType,
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
 ) {
-    let weighted = vt == ValueType::F32;
+    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     for k in 0..view.nnc {
         let (c, s, e) = view.col(k);
         let out_base = (c as usize) * p;
         for i in s..e {
             let r = view.row(i) as usize;
-            let v = if weighted { view.val(i) } else { 1.0 };
+            let v = vals.next();
             for j in 0..p {
-                out_rows[out_base + j] += v * in_rows[r * p + j];
+                out_rows[out_base + j] = S::add(out_rows[out_base + j], S::mul(v, in_rows[r * p + j]));
             }
         }
     }
@@ -402,6 +439,7 @@ fn mul_dcsc_t_generic(
 mod tests {
     use super::*;
     use crate::format::{dcsc, scsr, TileEntries, ValueType};
+    use crate::spmm::semiring::{Arith, MinPlus, OrAnd};
     use crate::util::Xoshiro256;
 
     fn random_tile(t: u16, n: usize, seed: u64, weighted: bool) -> TileEntries {
@@ -446,7 +484,7 @@ mod tests {
         let (sv, _) = scsr::parse(&sbuf, 0, vt);
         for vec in [true, false] {
             let mut out = vec![0f32; t as usize * p];
-            mul_tile_scsr(&sv, vt, &x, &mut out, p, vec);
+            mul_tile_scsr::<Arith>(&sv, vt, &x, &mut out, p, vec);
             for (a, b) in out.iter().zip(&expect) {
                 assert!((a - b).abs() < 1e-4, "scsr p={p} vec={vec}");
             }
@@ -457,7 +495,7 @@ mod tests {
         let (dv, _) = dcsc::parse(&dbuf, 0, vt);
         for vec in [true, false] {
             let mut out = vec![0f32; t as usize * p];
-            mul_tile_dcsc(&dv, vt, &x, &mut out, p, vec);
+            mul_tile_dcsc::<Arith>(&dv, vt, &x, &mut out, p, vec);
             for (a, b) in out.iter().zip(&expect) {
                 assert!((a - b).abs() < 1e-4, "dcsc p={p} vec={vec}");
             }
@@ -492,7 +530,7 @@ mod tests {
         let (sv, _) = scsr::parse(&sbuf, 0, vt);
         for vec in [true, false] {
             let mut out = vec![0f32; t as usize * p];
-            mul_tile_scsr_t(&sv, vt, &x, &mut out, p, vec);
+            mul_tile_scsr_t::<Arith>(&sv, vt, &x, &mut out, p, vec);
             for (a, b) in out.iter().zip(&expect) {
                 assert!((a - b).abs() < 1e-4, "scsr_t p={p} vec={vec}");
             }
@@ -503,7 +541,7 @@ mod tests {
         let (dv, _) = dcsc::parse(&dbuf, 0, vt);
         for vec in [true, false] {
             let mut out = vec![0f32; t as usize * p];
-            mul_tile_dcsc_t(&dv, vt, &x, &mut out, p, vec);
+            mul_tile_dcsc_t::<Arith>(&dv, vt, &x, &mut out, p, vec);
             for (a, b) in out.iter().zip(&expect) {
                 assert!((a - b).abs() < 1e-4, "dcsc_t p={p} vec={vec}");
             }
@@ -555,16 +593,16 @@ mod tests {
         let (dv, _) = dcsc::parse(&dbuf, 0, vt);
 
         let k_scsr = |xin: &[f32], out: &mut [f32], w: usize| {
-            mul_tile_scsr(&sv, vt, xin, out, w, true)
+            mul_tile_scsr::<Arith>(&sv, vt, xin, out, w, true)
         };
         let k_dcsc = |xin: &[f32], out: &mut [f32], w: usize| {
-            mul_tile_dcsc(&dv, vt, xin, out, w, true)
+            mul_tile_dcsc::<Arith>(&dv, vt, xin, out, w, true)
         };
         let k_scsr_t = |xin: &[f32], out: &mut [f32], w: usize| {
-            mul_tile_scsr_t(&sv, vt, xin, out, w, true)
+            mul_tile_scsr_t::<Arith>(&sv, vt, xin, out, w, true)
         };
         let k_dcsc_t = |xin: &[f32], out: &mut [f32], w: usize| {
-            mul_tile_dcsc_t(&dv, vt, xin, out, w, true)
+            mul_tile_dcsc_t::<Arith>(&dv, vt, xin, out, w, true)
         };
         let kernels: [(&str, &dyn Fn(&[f32], &mut [f32], usize)); 4] = [
             ("scsr", &k_scsr),
@@ -581,10 +619,10 @@ mod tests {
             kern(&x, &mut generic, p);
             let mut scalar = vec![0f32; t as usize * p];
             match name {
-                "scsr" => mul_tile_scsr(&sv, vt, &x, &mut scalar, p, false),
-                "dcsc" => mul_tile_dcsc(&dv, vt, &x, &mut scalar, p, false),
-                "scsr_t" => mul_tile_scsr_t(&sv, vt, &x, &mut scalar, p, false),
-                _ => mul_tile_dcsc_t(&dv, vt, &x, &mut scalar, p, false),
+                "scsr" => mul_tile_scsr::<Arith>(&sv, vt, &x, &mut scalar, p, false),
+                "dcsc" => mul_tile_dcsc::<Arith>(&dv, vt, &x, &mut scalar, p, false),
+                "scsr_t" => mul_tile_scsr_t::<Arith>(&sv, vt, &x, &mut scalar, p, false),
+                _ => mul_tile_dcsc_t::<Arith>(&dv, vt, &x, &mut scalar, p, false),
             }
             assert_eq!(generic, scalar, "{name} p={p}: dispatch not the generic loop");
 
@@ -648,10 +686,10 @@ mod tests {
         let (v, _) = scsr::parse(&buf, 0, ValueType::F32);
         let x: Vec<f32> = (0..64 * 2).map(|i| i as f32 * 0.25).collect();
         let mut once = vec![0f32; 64 * 2];
-        mul_tile_scsr_t(&v, ValueType::F32, &x, &mut once, 2, true);
+        mul_tile_scsr_t::<Arith>(&v, ValueType::F32, &x, &mut once, 2, true);
         let mut twice = vec![0f32; 64 * 2];
-        mul_tile_scsr_t(&v, ValueType::F32, &x, &mut twice, 2, true);
-        mul_tile_scsr_t(&v, ValueType::F32, &x, &mut twice, 2, true);
+        mul_tile_scsr_t::<Arith>(&v, ValueType::F32, &x, &mut twice, 2, true);
+        mul_tile_scsr_t::<Arith>(&v, ValueType::F32, &x, &mut twice, 2, true);
         for (a, b) in twice.iter().zip(&once) {
             assert!((a - 2.0 * b).abs() < 1e-4);
         }
@@ -683,7 +721,7 @@ mod tests {
         assert_eq!(v.n_single, 0);
         let x = vec![1f32; 16];
         let mut out = vec![0f32; 16];
-        mul_tile_scsr(&v, ValueType::Binary, &x, &mut out, 1, true);
+        mul_tile_scsr::<Arith>(&v, ValueType::Binary, &x, &mut out, 1, true);
         assert!(out.iter().all(|&o| o == 16.0));
     }
 
@@ -702,9 +740,131 @@ mod tests {
         assert_eq!(v.n_single, 64);
         let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
         let mut out = vec![0f32; 64];
-        mul_tile_scsr(&v, ValueType::Binary, &x, &mut out, 1, true);
+        mul_tile_scsr::<Arith>(&v, ValueType::Binary, &x, &mut out, 1, true);
         for i in 0..64 {
             assert_eq!(out[i], (63 - i) as f32);
+        }
+    }
+
+    /// Per-entry fold reference under any semiring.
+    fn ring_reference<S: Semiring>(e: &TileEntries, t: usize, x: &[f32], p: usize) -> Vec<f32> {
+        let mut out = vec![S::ZERO; t * p];
+        for (i, &(r, c)) in e.coords.iter().enumerate() {
+            let v = if e.vals.is_empty() {
+                S::PATTERN
+            } else {
+                e.vals[i]
+            };
+            for j in 0..p {
+                let o = &mut out[r as usize * p + j];
+                *o = S::add(*o, S::mul(v, x[c as usize * p + j]));
+            }
+        }
+        out
+    }
+
+    fn check_ring_kernels<S: Semiring>(p: usize, weighted: bool, seed: u64, x: &[f32]) {
+        let t = 96u16;
+        let e = random_tile(t, 600, seed, weighted);
+        let vt = if weighted {
+            ValueType::F32
+        } else {
+            ValueType::Binary
+        };
+        let expect = ring_reference::<S>(&e, t as usize, x, p);
+        let mut sbuf = Vec::new();
+        scsr::encode(0, &e, vt, &mut sbuf);
+        let (sv, _) = scsr::parse(&sbuf, 0, vt);
+        let mut dbuf = Vec::new();
+        dcsc::encode(0, &e, vt, &mut dbuf);
+        let (dv, _) = dcsc::parse(&dbuf, 0, vt);
+        for vec in [true, false] {
+            let mut s_out = vec![S::ZERO; t as usize * p];
+            mul_tile_scsr::<S>(&sv, vt, x, &mut s_out, p, vec);
+            assert_eq!(s_out, expect, "{} scsr p={p} vec={vec}", S::NAME);
+            let mut d_out = vec![S::ZERO; t as usize * p];
+            mul_tile_dcsc::<S>(&dv, vt, x, &mut d_out, p, vec);
+            assert_eq!(d_out, expect, "{} dcsc p={p} vec={vec}", S::NAME);
+        }
+    }
+
+    #[test]
+    fn minplus_kernels_relax_distances() {
+        // Min-plus gather over an encoded tile equals the per-entry
+        // tropical fold — exactly, in both formats, both dispatch paths.
+        // The dense operand mixes finite "distances" with unreached +∞.
+        let t = 96usize;
+        for p in [1usize, 4, 3] {
+            let mut rng = Xoshiro256::new(0xE1);
+            let x: Vec<f32> = (0..t * p)
+                .map(|_| {
+                    if rng.below(4) == 0 {
+                        f32::INFINITY
+                    } else {
+                        (rng.below(64) as f32) / 4.0
+                    }
+                })
+                .collect();
+            for weighted in [false, true] {
+                check_ring_kernels::<MinPlus>(p, weighted, 0xE2 + p as u64, &x);
+            }
+        }
+    }
+
+    #[test]
+    fn orand_kernels_expand_frontiers() {
+        // Or-and gather over a 0/1 frontier vector equals the boolean
+        // fold exactly; output stays on the {0, 1} carrier.
+        let t = 96usize;
+        for p in [1usize, 2, 5] {
+            let mut rng = Xoshiro256::new(0xE7);
+            let x: Vec<f32> = (0..t * p)
+                .map(|_| (rng.below(3) == 0) as u32 as f32)
+                .collect();
+            for weighted in [false, true] {
+                check_ring_kernels::<OrAnd>(p, weighted, 0xE8 + p as u64, &x);
+            }
+            let mut out = vec![OrAnd::ZERO; t * p];
+            let e = random_tile(96, 600, 0xE8 + p as u64, false);
+            let mut sbuf = Vec::new();
+            scsr::encode(0, &e, ValueType::Binary, &mut sbuf);
+            let (sv, _) = scsr::parse(&sbuf, 0, ValueType::Binary);
+            mul_tile_scsr::<OrAnd>(&sv, ValueType::Binary, &x, &mut out, p, true);
+            assert!(out.iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    #[test]
+    fn minplus_scatter_matches_transposed_fold() {
+        // The scatter (Aᵀ) direction under min-plus: fold per entry into
+        // the column's row, compare exactly.
+        let t = 96u16;
+        let e = random_tile(t, 500, 0xF1, true);
+        let vt = ValueType::F32;
+        let mut rng = Xoshiro256::new(0xF2);
+        let x: Vec<f32> = (0..t as usize * 2)
+            .map(|_| (rng.below(64) as f32) / 4.0)
+            .collect();
+        let mut expect = vec![MinPlus::ZERO; t as usize * 2];
+        for (i, &(r, c)) in e.coords.iter().enumerate() {
+            for j in 0..2 {
+                let o = &mut expect[c as usize * 2 + j];
+                *o = MinPlus::add(*o, MinPlus::mul(e.vals[i], x[r as usize * 2 + j]));
+            }
+        }
+        let mut sbuf = Vec::new();
+        scsr::encode(0, &e, vt, &mut sbuf);
+        let (sv, _) = scsr::parse(&sbuf, 0, vt);
+        let mut dbuf = Vec::new();
+        dcsc::encode(0, &e, vt, &mut dbuf);
+        let (dv, _) = dcsc::parse(&dbuf, 0, vt);
+        for vec in [true, false] {
+            let mut s_out = vec![MinPlus::ZERO; t as usize * 2];
+            mul_tile_scsr_t::<MinPlus>(&sv, vt, &x, &mut s_out, 2, vec);
+            assert_eq!(s_out, expect, "scsr_t vec={vec}");
+            let mut d_out = vec![MinPlus::ZERO; t as usize * 2];
+            mul_tile_dcsc_t::<MinPlus>(&dv, vt, &x, &mut d_out, 2, vec);
+            assert_eq!(d_out, expect, "dcsc_t vec={vec}");
         }
     }
 }

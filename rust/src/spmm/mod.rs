@@ -25,18 +25,31 @@
 //! * [`engine`] — the classic data model ([`Source`], [`OutputSink`],
 //!   [`SpmmStats`]) and the [`spmm`]/[`spmm_out`] entry points, now thin
 //!   wrappers over single-op plans (byte-identical to the old engine).
+//! * [`semiring`] — the `(⊕, ⊗, 0̄, 1̄)` algebra the whole stack is generic
+//!   over: [`Arith`] (the default — classic SpMM), [`MinPlus`] (SSSP),
+//!   [`OrAnd`] (BFS), [`MinSelect`] (label propagation). Kernels, plans
+//!   and the executor take the ring as a zero-sized type parameter
+//!   defaulting to `Arith`, so the arithmetic path monomorphizes to the
+//!   identical pre-semiring code.
+//! * [`spgemm`] — out-of-core sparse × sparse: Gustavson's algorithm over
+//!   the streamed sweep, with sorted intermediate runs written through
+//!   the merging writer onto the store and k-way-merged into a tiled
+//!   sparse product image.
 
 pub mod engine;
 pub mod exec;
 pub mod kernel;
 pub mod plan;
 pub mod scheduler;
+pub mod semiring;
+pub mod spgemm;
 
 pub use engine::{spmm, spmm_out, OutputSink, SemSource, SpmmStats, Source};
-pub use exec::run_pass;
+pub use exec::{run_pass, run_pass_ring};
 pub use plan::{
     ForwardOp, OpKind, OpStats, PassOp, PassResult, RowHook, StreamPass, TransposeOp,
 };
+pub use semiring::{Arith, MinPlus, MinSelect, OrAnd, Semiring};
 
 use crate::DEFAULT_TILE;
 

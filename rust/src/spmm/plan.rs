@@ -27,7 +27,9 @@
 //! single-`ForwardOp` plan and is byte-identical to the pre-plan engine.
 
 use super::engine::OutputSink;
+use super::semiring::{Arith, Semiring};
 use crate::matrix::NumaDense;
+use std::marker::PhantomData;
 
 /// Which direction a pass op multiplies in (carried by per-op stats).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -164,22 +166,41 @@ impl PassOp<'_> {
 
 /// A plan for one streaming sweep of the sparse matrix: every op in
 /// `ops` is computed from the same tile bytes, fetched once.
-#[derive(Default)]
-pub struct StreamPass<'a> {
+///
+/// The [`Semiring`] type parameter fixes the `(⊕, ⊗)` algebra every op in
+/// the pass folds under; it defaults to [`Arith`], so all pre-semiring
+/// call sites (`StreamPass::new()`, PageRank, eigen, NMF, the batcher)
+/// keep compiling unchanged and keep their bit-identical `(+, ×)` code.
+/// Graph-traversal passes name a different ring at the type level, e.g.
+/// `StreamPass::<MinPlus>::new()` for an SSSP relaxation sweep.
+pub struct StreamPass<'a, S: Semiring = Arith> {
     /// The operations to fuse into the sweep, in plan order (the order
     /// ops are evaluated per tile-row group, and the order of
     /// [`PassResult::accs`] / per-op stats).
     pub ops: Vec<PassOp<'a>>,
+    /// Zero-sized witness of the pass algebra.
+    _ring: PhantomData<S>,
 }
 
-impl<'a> StreamPass<'a> {
+// Manual impl: `#[derive(Default)]` would demand `S: Default`, which the
+// ring markers satisfy but nothing requires of future instances.
+impl<S: Semiring> Default for StreamPass<'_, S> {
+    fn default() -> Self {
+        StreamPass {
+            ops: Vec::new(),
+            _ring: PhantomData,
+        }
+    }
+}
+
+impl<'a, S: Semiring> StreamPass<'a, S> {
     /// An empty plan (executing it is an error — add at least one op).
-    pub fn new() -> StreamPass<'a> {
-        StreamPass { ops: Vec::new() }
+    pub fn new() -> StreamPass<'a, S> {
+        StreamPass::default()
     }
 
     /// Add a plain forward op `sink ← A · input`.
-    pub fn forward(self, input: &'a NumaDense, sink: OutputSink<'a>) -> StreamPass<'a> {
+    pub fn forward(self, input: &'a NumaDense, sink: OutputSink<'a>) -> StreamPass<'a, S> {
         self.push(PassOp::Forward(ForwardOp {
             input,
             sink,
@@ -197,7 +218,7 @@ impl<'a> StreamPass<'a> {
         sink: OutputSink<'a>,
         acc_len: usize,
         hook: RowHook<'a>,
-    ) -> StreamPass<'a> {
+    ) -> StreamPass<'a, S> {
         self.push(PassOp::Forward(ForwardOp {
             input,
             sink,
@@ -208,7 +229,7 @@ impl<'a> StreamPass<'a> {
     }
 
     /// Add a plain transpose op `output ← Aᵀ · input`.
-    pub fn transpose(self, input: &'a NumaDense, output: &'a NumaDense) -> StreamPass<'a> {
+    pub fn transpose(self, input: &'a NumaDense, output: &'a NumaDense) -> StreamPass<'a, S> {
         self.push(PassOp::Transpose(TransposeOp {
             input,
             output,
@@ -226,7 +247,7 @@ impl<'a> StreamPass<'a> {
         output: &'a NumaDense,
         acc_len: usize,
         hook: RowHook<'a>,
-    ) -> StreamPass<'a> {
+    ) -> StreamPass<'a, S> {
         self.push(PassOp::Transpose(TransposeOp {
             input,
             output,
@@ -239,7 +260,7 @@ impl<'a> StreamPass<'a> {
     /// Label the most recently added op. The label is carried into that
     /// op's [`OpStats`] and into executor error messages, which is how a
     /// multi-rider pass attributes stats and failures per request.
-    pub fn labeled(mut self, label: impl Into<String>) -> StreamPass<'a> {
+    pub fn labeled(mut self, label: impl Into<String>) -> StreamPass<'a, S> {
         if let Some(op) = self.ops.last_mut() {
             match op {
                 PassOp::Forward(f) => f.label = Some(label.into()),
@@ -250,7 +271,7 @@ impl<'a> StreamPass<'a> {
     }
 
     /// Append an already-built op.
-    pub fn push(mut self, op: PassOp<'a>) -> StreamPass<'a> {
+    pub fn push(mut self, op: PassOp<'a>) -> StreamPass<'a, S> {
         self.ops.push(op);
         self
     }

@@ -1,0 +1,314 @@
+//! Semiring abstraction over the streaming multiply (Buluç & Gilbert).
+//!
+//! The SEM-SpMM sweep is algebra-agnostic: a tile kernel only ever does
+//! `out = out ⊕ (val ⊗ in)` over the non-zeros it streams, and the
+//! executor only ever needs the ⊕-identity `0̄` to initialize buffers and
+//! ⊕ itself to merge partial accumulators. Making `(⊕, ⊗, 0̄, 1̄)` a
+//! compile-time parameter turns the *same* kernels, plans, prefetch
+//! machinery, scatter partials, and tile-row cache into graph-traversal
+//! engines:
+//!
+//! | instance      | ⊕    | ⊗          | 0̄   | 1̄   | unlocks              |
+//! |---------------|------|------------|-----|-----|----------------------|
+//! | [`Arith`]     | `+`  | `×`        | 0   | 1   | PageRank, eigen, NMF |
+//! | [`MinPlus`]   | min  | `+`        | +∞  | 0   | SSSP (Bellman–Ford)  |
+//! | [`OrAnd`]     | ∨    | ∧          | 0   | 1   | BFS frontiers        |
+//! | [`MinSelect`] | min  | select-2nd | +∞  | —   | label propagation    |
+//!
+//! Every instance keeps `f32` as the element type, so dense operands,
+//! sinks, hooks, the NUMA striping, and the on-store image format are
+//! untouched; only the two scalar ops and the two constants change, and
+//! they are `#[inline(always)]` consts/fns on zero-sized marker types —
+//! the [`Arith`] instantiation monomorphizes to exactly the pre-refactor
+//! engine (same `+`/`*` instructions, same `0.0` fills), which is what
+//! keeps the arithmetic path bit-identical in values and stats.
+//!
+//! [`MinSelect`] is semiring-*like*, not a full semiring: ⊗ = "select the
+//! right operand" has no two-sided identity and only annihilates on the
+//! right. That is the standard GraphBLAS `MIN_SECOND` trick — `A·x` under
+//! it computes, per vertex, the minimum of its in-neighbors' `x` values,
+//! which is exactly one round of min-label propagation. The law tests
+//! below assert the full semiring laws for the three true semirings and
+//! the weaker (left-identity / right-annihilator) laws for `MinSelect`.
+//!
+//! Unweighted (binary) adjacency matrices store no values; the kernels
+//! substitute [`Semiring::PATTERN`] (1.0 for every instance) for each
+//! stored pattern entry. Under [`Arith`] that is the usual implicit 1;
+//! under [`MinPlus`] it makes every edge length 1, so SSSP on a binary
+//! graph degrades gracefully to hop counts; under [`OrAnd`] any non-zero
+//! is "true"; [`MinSelect`] ignores the edge value entirely.
+
+/// A semiring `(⊕, ⊗, 0̄, 1̄)` over `f32`, as a zero-sized marker type.
+///
+/// Laws the engine relies on (asserted by the property tests below):
+/// ⊕ is associative and commutative with identity [`Self::ZERO`]; ⊗ is
+/// associative; `ZERO` annihilates ⊗ on the left (`0̄ ⊗ x = 0̄` — the
+/// direction an absent matrix entry takes through the kernels). The
+/// executor initializes every output buffer and scatter partial to
+/// `ZERO` and merges partials with [`Self::add`], so any type satisfying
+/// these laws computes the same result regardless of tile order, worker
+/// count, or cache state.
+pub trait Semiring: Send + Sync + 'static {
+    /// Short lowercase name (used in labels and bench TSV rows).
+    const NAME: &'static str;
+    /// The ⊕-identity `0̄`: buffer fill value and absent-entry value.
+    const ZERO: f32;
+    /// The ⊗-identity `1̄` (for [`MinSelect`]: the conventional stand-in,
+    /// since select-second has no true identity).
+    const ONE: f32;
+    /// The value substituted for entries of a *binary* (pattern-only)
+    /// matrix. 1.0 for every instance — see the module docs.
+    const PATTERN: f32 = 1.0;
+
+    /// `a ⊕ b`.
+    fn add(a: f32, b: f32) -> f32;
+
+    /// `a ⊗ b` — `a` is the matrix entry, `b` the dense operand element.
+    fn mul(a: f32, b: f32) -> f32;
+}
+
+/// The arithmetic semiring `(+, ×, 0, 1)` — the classic engine. Default
+/// instance of every generic entry point; monomorphizes to exactly the
+/// pre-semiring code.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Arith;
+
+impl Semiring for Arith {
+    const NAME: &'static str = "arith";
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+
+    #[inline(always)]
+    fn add(a: f32, b: f32) -> f32 {
+        a + b
+    }
+
+    #[inline(always)]
+    fn mul(a: f32, b: f32) -> f32 {
+        a * b
+    }
+}
+
+/// The tropical (min-plus) semiring `(min, +, +∞, 0)`: one `A·x` sweep
+/// relaxes every edge once — the inner step of Bellman–Ford SSSP.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinPlus;
+
+impl Semiring for MinPlus {
+    const NAME: &'static str = "minplus";
+    const ZERO: f32 = f32::INFINITY;
+    const ONE: f32 = 0.0;
+
+    #[inline(always)]
+    fn add(a: f32, b: f32) -> f32 {
+        // NaN-free inputs by construction (distances are +∞ or finite
+        // sums of edge weights), so the primitive min is exact.
+        if a < b {
+            a
+        } else {
+            b
+        }
+    }
+
+    #[inline(always)]
+    fn mul(a: f32, b: f32) -> f32 {
+        a + b
+    }
+}
+
+/// The boolean (or-and) semiring over `{0, 1} ⊂ f32`: any non-zero is
+/// "true". One `A·x` sweep maps a frontier indicator vector to the
+/// indicator of its out-neighborhood — the BFS expansion step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OrAnd;
+
+impl Semiring for OrAnd {
+    const NAME: &'static str = "orand";
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+
+    #[inline(always)]
+    fn add(a: f32, b: f32) -> f32 {
+        ((a != 0.0) | (b != 0.0)) as u32 as f32
+    }
+
+    #[inline(always)]
+    fn mul(a: f32, b: f32) -> f32 {
+        ((a != 0.0) & (b != 0.0)) as u32 as f32
+    }
+}
+
+/// The min-select structure `(min, select-second, +∞)`: `A·x` computes,
+/// per vertex, `min { x[u] : u an in-neighbor }`, ignoring edge values —
+/// GraphBLAS's `MIN_SECOND`, the one-round kernel of min-label
+/// propagation / connected components.
+///
+/// Not a full semiring: select-second has no two-sided ⊗-identity and
+/// `ZERO ⊗ x = x ≠ ZERO` (no *left* annihilation) — but the engine only
+/// requires left annihilation through the matrix-entry operand, which
+/// holds trivially (`x ⊗ ZERO = ZERO`, the direction an unreachable
+/// neighbor contributes), and the law tests pin the weaker contract.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinSelect;
+
+impl Semiring for MinSelect {
+    const NAME: &'static str = "minselect";
+    const ZERO: f32 = f32::INFINITY;
+    const ONE: f32 = f32::INFINITY;
+
+    #[inline(always)]
+    fn add(a: f32, b: f32) -> f32 {
+        if a < b {
+            a
+        } else {
+            b
+        }
+    }
+
+    #[inline(always)]
+    fn mul(_a: f32, b: f32) -> f32 {
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    /// Random values that are meaningful for every instance: finite
+    /// non-negative floats plus the instance's own ZERO, with exact
+    /// dyadic fractions so Arith's `+`/`×` stay associative in f32 over
+    /// the magnitudes we draw (law tests must not trip on rounding).
+    fn samples(zero: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut v: Vec<f32> = (0..40)
+            .map(|_| (rng.below(64) as f32) / 8.0)
+            .collect();
+        v.push(zero);
+        v.push(0.0);
+        v.push(1.0);
+        v
+    }
+
+    fn check_add_laws<S: Semiring>(seed: u64) {
+        let vals = samples(S::ZERO, seed);
+        for &a in &vals {
+            // Identity: 0̄ ⊕ a = a ⊕ 0̄ = a.
+            assert_eq!(S::add(S::ZERO, a), a, "{}: 0̄⊕{a}", S::NAME);
+            assert_eq!(S::add(a, S::ZERO), a, "{}: {a}⊕0̄", S::NAME);
+            for &b in &vals {
+                // Commutativity.
+                assert_eq!(S::add(a, b), S::add(b, a), "{}: ⊕ comm", S::NAME);
+                for &c in &vals {
+                    // Associativity.
+                    assert_eq!(
+                        S::add(S::add(a, b), c),
+                        S::add(a, S::add(b, c)),
+                        "{}: ⊕ assoc ({a},{b},{c})",
+                        S::NAME
+                    );
+                }
+            }
+        }
+    }
+
+    fn check_full_semiring_laws<S: Semiring>(seed: u64) {
+        check_add_laws::<S>(seed);
+        let vals = samples(S::ZERO, seed ^ 0xA5);
+        for &a in &vals {
+            // ⊗-identity on both sides.
+            assert_eq!(S::mul(S::ONE, a), a, "{}: 1̄⊗{a}", S::NAME);
+            assert_eq!(S::mul(a, S::ONE), a, "{}: {a}⊗1̄", S::NAME);
+            // Annihilation on both sides.
+            assert_eq!(S::mul(S::ZERO, a), S::ZERO, "{}: 0̄⊗{a}", S::NAME);
+            assert_eq!(S::mul(a, S::ZERO), S::ZERO, "{}: {a}⊗0̄", S::NAME);
+            for &b in &vals {
+                for &c in &vals {
+                    // ⊗ associativity.
+                    assert_eq!(
+                        S::mul(S::mul(a, b), c),
+                        S::mul(a, S::mul(b, c)),
+                        "{}: ⊗ assoc ({a},{b},{c})",
+                        S::NAME
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arith_is_a_semiring() {
+        check_full_semiring_laws::<Arith>(0x51);
+    }
+
+    #[test]
+    fn minplus_is_a_semiring() {
+        check_full_semiring_laws::<MinPlus>(0x52);
+    }
+
+    #[test]
+    fn orand_is_a_semiring() {
+        check_full_semiring_laws::<OrAnd>(0x53);
+        // Distributivity holds exactly on the boolean carrier.
+        let vals = [0.0f32, 1.0, 3.5];
+        for a in vals {
+            for b in vals {
+                for c in vals {
+                    assert_eq!(
+                        OrAnd::mul(a, OrAnd::add(b, c)),
+                        OrAnd::add(OrAnd::mul(a, b), OrAnd::mul(a, c))
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn minselect_satisfies_its_weaker_contract() {
+        // ⊕ is a full commutative monoid …
+        check_add_laws::<MinSelect>(0x54);
+        let vals = samples(MinSelect::ZERO, 0x55);
+        for &a in &vals {
+            // … and ⊗ annihilates on the right (the direction the engine
+            // uses: an unreachable neighbor's label stays invisible) …
+            assert_eq!(MinSelect::mul(a, MinSelect::ZERO), MinSelect::ZERO);
+            for &b in &vals {
+                // … and is trivially associative.
+                for &c in &vals {
+                    assert_eq!(
+                        MinSelect::mul(MinSelect::mul(a, b), c),
+                        MinSelect::mul(a, MinSelect::mul(b, c))
+                    );
+                }
+                // select-second really selects.
+                assert_eq!(MinSelect::mul(a, b), b);
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_value_is_one_point_zero_everywhere() {
+        // Binary matrices must behave identically across instances'
+        // kernels: the stored-pattern stand-in is pinned to 1.0 (Arith
+        // bit-identity; MinPlus hop counts; OrAnd truth).
+        assert_eq!(Arith::PATTERN, 1.0);
+        assert_eq!(MinPlus::PATTERN, 1.0);
+        assert_eq!(OrAnd::PATTERN, 1.0);
+        assert_eq!(MinSelect::PATTERN, 1.0);
+    }
+
+    #[test]
+    fn arith_matches_primitive_ops_bitwise() {
+        // The monomorphization guarantee, pinned at the scalar level:
+        // Arith's ⊕/⊗ are *the* f32 ops, bit for bit, including
+        // non-finite and denormal inputs.
+        let mut rng = Xoshiro256::new(0x56);
+        for _ in 0..1000 {
+            let a = f32::from_bits(rng.next_u64() as u32);
+            let b = f32::from_bits(rng.next_u64() as u32);
+            assert_eq!(Arith::add(a, b).to_bits(), (a + b).to_bits());
+            assert_eq!(Arith::mul(a, b).to_bits(), (a * b).to_bits());
+        }
+    }
+}

@@ -1,0 +1,711 @@
+//! Out-of-core sparse × sparse multiplication (SpGEMM) over the SEM
+//! sweep, with storage-resident intermediates.
+//!
+//! `C = A ⊗ B` where `A` streams from its [`Source`] exactly like a
+//! dense-operand pass and the sparse `B` is consulted **one tile row at a
+//! time** — the working set is one tile row of `A`, one decoded tile row
+//! of `B`, and one sparse accumulator row, never a dense panel. The shape
+//! follows Buluç & Gilbert's semiring SpGEMM and SAGE's out-of-core
+//! discipline:
+//!
+//! 1. **Sweep**: workers claim tile rows of `A`. Each tile `(I, K)` of
+//!    `A` is multiplied against tile row `K` of `B` with Gustavson's
+//!    row-by-row algorithm (a sparse accumulator per output row, ⊕ for
+//!    duplicate columns, ⊗ for the products). The partial products of
+//!    one tile form a **sorted run** of `(row, col, val)` triples.
+//! 2. **Spill**: each run is appended to a scratch object on the
+//!    [`ShardedStore`] through the [`MergedWriter`], so intermediates hit
+//!    the SSD array as large merged physical writes — visible in the
+//!    store's write stats, which is the point: the intermediate volume
+//!    (the classic SpGEMM memory cliff) lives on storage, not in RAM.
+//! 3. **Merge**: runs covering the same tile row of `C` (one per `K`
+//!    with products there) are k-way merged; equal `(row, col)` keys are
+//!    combined with ⊕. The merged triples become a CSR and a tiled
+//!    sparse image — ready to be a [`Source`] for further passes (graph
+//!    contraction `A·A`, multi-hop reachability, …).
+//!
+//! Masked helpers ([`masked_sum`], [`triangle_count`]) implement the
+//! `A ⊙ (A·A)` pattern: counting triangles without densifying `C`.
+
+use super::engine::Source;
+use super::semiring::{Arith, Semiring};
+use crate::format::tiled::{TiledImage, TiledMeta};
+use crate::format::{dcsc, scsr, Csr, TileEntries, TileFormat};
+use crate::io::{MergedWriter, ShardedFile, ShardedStore};
+use crate::metrics::Stopwatch;
+use anyhow::{bail, Context, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Bytes per spilled triple: `u32` row, `u32` col, `f32` value.
+const TRIPLE_BYTES: usize = 12;
+
+/// Knobs for one SpGEMM execution.
+#[derive(Debug, Clone)]
+pub struct SpgemmOpts {
+    /// Sweep worker threads.
+    pub threads: usize,
+    /// Flush a run to the store once its buffer exceeds this many bytes
+    /// (checked at output-row boundaries, so every run stays sorted).
+    pub run_flush_bytes: usize,
+    /// Per-worker LRU capacity, in decoded tile rows of `B`.
+    pub b_cache_tile_rows: usize,
+    /// Merge window handed to the [`MergedWriter`] for the run spill.
+    pub merge_window: usize,
+}
+
+impl Default for SpgemmOpts {
+    fn default() -> Self {
+        SpgemmOpts {
+            threads: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(8),
+            run_flush_bytes: 1 << 20,
+            b_cache_tile_rows: 8,
+            merge_window: 1 << 20,
+        }
+    }
+}
+
+impl SpgemmOpts {
+    /// Single-threaded deterministic configuration (tests).
+    pub fn sequential() -> Self {
+        SpgemmOpts {
+            threads: 1,
+            ..Default::default()
+        }
+    }
+}
+
+/// Accounting of one SpGEMM: how much intermediate volume was spilled,
+/// how the writer merged it, and what the product looks like.
+#[derive(Debug, Clone, Default)]
+pub struct SpgemmStats {
+    /// Sorted runs spilled to the store.
+    pub runs: u64,
+    /// Intermediate triples across all runs (pre-merge nnz, ≥ `nnz`).
+    pub run_triples: u64,
+    /// Bytes of run data written through the merging writer.
+    pub run_bytes: u64,
+    /// Physical writes the writer issued after merging extents.
+    pub writes_out: u64,
+    /// Non-zeros of the merged product `C`.
+    pub nnz: u64,
+    /// Seconds in the sweep (Gustavson + spill).
+    pub sweep_secs: f64,
+    /// Seconds in the k-way merge + image build.
+    pub merge_secs: f64,
+}
+
+/// The merged product: a CSR (always with explicit values — entries are
+/// ⊕-combined products, not raw adjacency) plus run accounting.
+pub struct SpgemmProduct {
+    /// The product matrix `C = A ⊗ B`.
+    pub csr: Csr,
+    /// Run/merge accounting.
+    pub stats: SpgemmStats,
+}
+
+impl SpgemmProduct {
+    /// The product as a tiled sparse image (ready to be a pass
+    /// [`Source`] for contraction chains like `(A·A)·A`).
+    pub fn to_image(&self, tile: usize, format: TileFormat) -> TiledImage {
+        TiledImage::build(&self.csr, tile, format)
+    }
+}
+
+/// One spilled run: a sorted `(row, col, val)` segment of the scratch
+/// object, covering output rows of tile row `tile_row` only.
+#[derive(Debug, Clone, Copy)]
+struct RunRec {
+    tile_row: usize,
+    off: u64,
+    len: u64,
+}
+
+/// `C = A · B` under arithmetic `(+, ×)` — the [`Arith`] instantiation
+/// of [`spgemm_ring`].
+pub fn spgemm(
+    a: &Source,
+    b: &TiledImage,
+    store: &Arc<ShardedStore>,
+    scratch: &str,
+    opts: &SpgemmOpts,
+) -> Result<SpgemmProduct> {
+    spgemm_ring::<Arith>(a, b, store, scratch, opts)
+}
+
+/// `C = A ⊗ B` under semiring `S`, with intermediate runs spilled to
+/// `scratch` on `store` (created, then removed after the merge).
+///
+/// `A` streams tile-row-at-a-time from its source (memory or the SEM
+/// store); `B` is decoded tile-row-at-a-time behind a small per-worker
+/// LRU. Binary tiles contribute `S::PATTERN` per entry, exactly like the
+/// dense-operand kernels.
+pub fn spgemm_ring<S: Semiring>(
+    a: &Source,
+    b: &TiledImage,
+    store: &Arc<ShardedStore>,
+    scratch: &str,
+    opts: &SpgemmOpts,
+) -> Result<SpgemmProduct> {
+    let am = a.meta().clone();
+    if am.ncols != b.meta.nrows {
+        bail!(
+            "spgemm shape mismatch: A is {}x{} but B is {}x{}",
+            am.nrows,
+            am.ncols,
+            b.meta.nrows,
+            b.meta.ncols
+        );
+    }
+    let ntr = am.n_tile_rows();
+    let sw = Stopwatch::start();
+    let writer = MergedWriter::new(
+        store.create_file(scratch).context("spgemm scratch object")?,
+        opts.merge_window,
+    );
+    let next_off = AtomicU64::new(0);
+    let next_tr = AtomicUsize::new(0);
+    let recs: Mutex<Vec<RunRec>> = Mutex::new(Vec::new());
+    let run_triples = AtomicU64::new(0);
+    let threads = opts.threads.clamp(1, ntr.max(1));
+    std::thread::scope(|scope| -> Result<()> {
+        let mut hs = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            hs.push(scope.spawn(|| {
+                sweep_worker::<S>(
+                    a,
+                    b,
+                    opts,
+                    ntr,
+                    &writer,
+                    &next_off,
+                    &next_tr,
+                    &recs,
+                    &run_triples,
+                )
+            }));
+        }
+        for h in hs {
+            h.join().expect("spgemm worker panicked")?;
+        }
+        Ok(())
+    })?;
+    let report = writer.finish()?;
+    let sweep_secs = sw.secs();
+
+    // Merge phase: per tile row of C (ascending), k-way merge that row
+    // band's runs with ⊕-combine of equal (row, col) keys.
+    let msw = Stopwatch::start();
+    let file = store.open_file(scratch)?;
+    let mut recs = recs.into_inner().expect("spgemm run records");
+    recs.sort_unstable_by_key(|r| (r.tile_row, r.off));
+    let mut triples: Vec<(u32, u32, f32)> = Vec::new();
+    let mut lo = 0usize;
+    while lo < recs.len() {
+        let mut hi = lo + 1;
+        while hi < recs.len() && recs[hi].tile_row == recs[lo].tile_row {
+            hi += 1;
+        }
+        merge_runs::<S>(&file, &recs[lo..hi], &mut triples)?;
+        lo = hi;
+    }
+    drop(file);
+    store.remove(scratch)?;
+
+    // Triples are globally (row, col)-sorted: record groups were merged
+    // in ascending tile-row order and rows never cross tile rows.
+    let mut indptr = vec![0u64; am.nrows + 1];
+    for &(r, _, _) in &triples {
+        indptr[r as usize + 1] += 1;
+    }
+    for i in 0..am.nrows {
+        indptr[i + 1] += indptr[i];
+    }
+    let csr = Csr {
+        nrows: am.nrows,
+        ncols: b.meta.ncols,
+        indptr,
+        indices: triples.iter().map(|&(_, c, _)| c).collect(),
+        vals: Some(triples.iter().map(|&(_, _, v)| v).collect()),
+    };
+    let stats = SpgemmStats {
+        runs: recs.len() as u64,
+        run_triples: run_triples.load(Ordering::Relaxed),
+        run_bytes: report.bytes,
+        writes_out: report.writes_out,
+        nnz: csr.nnz() as u64,
+        sweep_secs,
+        merge_secs: msw.secs(),
+    };
+    Ok(SpgemmProduct { csr, stats })
+}
+
+/// One decoded tile row of `B`: per local row, its `(global col, val)`
+/// entries, column-sorted (tiles are visited in ascending tile-column
+/// order and each tile's entries are (row, col)-sorted).
+struct BRows {
+    rows: Vec<Vec<(u32, f32)>>,
+}
+
+fn decode_b_tile_row<S: Semiring>(b: &TiledImage, k: usize) -> BRows {
+    let t = b.meta.tile;
+    let row_lo = k * t;
+    let row_hi = ((k + 1) * t).min(b.meta.nrows);
+    let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); row_hi - row_lo];
+    let bytes = b.tile_row(k);
+    let mut off = 0usize;
+    while off < bytes.len() {
+        let (tc, e, next) = decode_tile(bytes, off, &b.meta);
+        let col_base = (tc as usize * t) as u32;
+        for (i, &(lr, lc)) in e.coords.iter().enumerate() {
+            let v = if e.vals.is_empty() {
+                S::PATTERN
+            } else {
+                e.vals[i]
+            };
+            rows[lr as usize].push((col_base + lc as u32, v));
+        }
+        off = next;
+    }
+    BRows { rows }
+}
+
+/// Decode one tile at `off`: `(tile_col, entries, next_off)`.
+/// Parse and decode one tile at `off` in a tile-row byte buffer,
+/// returning `(tile_col, entries, next_off)`. Shared with the streaming
+/// edge visitor ([`super::Source::for_each_edge`]).
+pub(crate) fn decode_tile(bytes: &[u8], off: usize, meta: &TiledMeta) -> (u32, TileEntries, usize) {
+    match meta.format {
+        TileFormat::Scsr => {
+            let (view, next) = scsr::parse(bytes, off, meta.valtype);
+            (view.tile_col, scsr::decode(&view, meta.valtype), next)
+        }
+        TileFormat::Dcsc => {
+            let (view, next) = dcsc::parse(bytes, off, meta.valtype);
+            (view.tile_col, dcsc::decode(&view, meta.valtype), next)
+        }
+    }
+}
+
+/// Tiny move-to-front LRU over decoded tile rows of `B`.
+fn b_rows<S: Semiring>(
+    cache: &mut Vec<(usize, Arc<BRows>)>,
+    b: &TiledImage,
+    k: usize,
+    cap: usize,
+) -> Arc<BRows> {
+    if let Some(i) = cache.iter().position(|(kk, _)| *kk == k) {
+        let hit = cache.remove(i);
+        let rows = hit.1.clone();
+        cache.insert(0, hit);
+        return rows;
+    }
+    let rows = Arc::new(decode_b_tile_row::<S>(b, k));
+    cache.insert(0, (k, rows.clone()));
+    cache.truncate(cap.max(1));
+    rows
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sweep_worker<S: Semiring>(
+    a: &Source,
+    b: &TiledImage,
+    opts: &SpgemmOpts,
+    ntr: usize,
+    writer: &MergedWriter,
+    next_off: &AtomicU64,
+    next_tr: &AtomicUsize,
+    recs: &Mutex<Vec<RunRec>>,
+    run_triples: &AtomicU64,
+) -> Result<()> {
+    let am = a.meta();
+    let t = am.tile;
+    let ncols_out = b.meta.ncols;
+    // Gustavson SPA: value + occupancy + touched list, reused per row.
+    let mut spa = vec![S::ZERO; ncols_out];
+    let mut occ = vec![false; ncols_out];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut cache: Vec<(usize, Arc<BRows>)> = Vec::new();
+    let mut abuf: Vec<u8> = Vec::new();
+    let mut run: Vec<u8> = Vec::new();
+
+    let mut flush = |run: &mut Vec<u8>, tr: usize| {
+        if run.is_empty() {
+            return;
+        }
+        let len = run.len() as u64;
+        let off = next_off.fetch_add(len, Ordering::Relaxed);
+        writer.write(off, std::mem::take(run));
+        run_triples.fetch_add(len / TRIPLE_BYTES as u64, Ordering::Relaxed);
+        recs.lock()
+            .expect("spgemm run records")
+            .push(RunRec { tile_row: tr, off, len });
+    };
+
+    loop {
+        let tr = next_tr.fetch_add(1, Ordering::Relaxed);
+        if tr >= ntr {
+            break;
+        }
+        let bytes: &[u8] = match a {
+            Source::Mem(img) => img.tile_row(tr),
+            Source::Sem(s) => {
+                let (off, len) = s.index[tr];
+                abuf.clear();
+                abuf.resize(len as usize, 0);
+                if len > 0 {
+                    s.file.read_at(s.data_start + off, &mut abuf)?;
+                }
+                &abuf
+            }
+        };
+        let mut off = 0usize;
+        while off < bytes.len() {
+            let (tc, e, next) = decode_tile(bytes, off, am);
+            off = next;
+            let brows = b_rows::<S>(&mut cache, b, tc as usize, opts.b_cache_tile_rows);
+            // Row-by-row over this tile's (row, col)-sorted entries.
+            let n = e.coords.len();
+            let mut i = 0usize;
+            while i < n {
+                let lr = e.coords[i].0;
+                while i < n && e.coords[i].0 == lr {
+                    let lc = e.coords[i].1 as usize;
+                    let av = if e.vals.is_empty() {
+                        S::PATTERN
+                    } else {
+                        e.vals[i]
+                    };
+                    for &(j, bv) in &brows.rows[lc] {
+                        let j = j as usize;
+                        let p = S::mul(av, bv);
+                        if occ[j] {
+                            spa[j] = S::add(spa[j], p);
+                        } else {
+                            occ[j] = true;
+                            spa[j] = p;
+                            touched.push(j as u32);
+                        }
+                    }
+                    i += 1;
+                }
+                touched.sort_unstable();
+                let gr = (tr * t + lr as usize) as u32;
+                for &j in &touched {
+                    run.extend_from_slice(&gr.to_le_bytes());
+                    run.extend_from_slice(&j.to_le_bytes());
+                    run.extend_from_slice(&spa[j as usize].to_le_bytes());
+                    occ[j as usize] = false;
+                    spa[j as usize] = S::ZERO;
+                }
+                touched.clear();
+                // Row boundary: safe split point — the run stays sorted.
+                if run.len() >= opts.run_flush_bytes {
+                    flush(&mut run, tr);
+                }
+            }
+            // Tile boundary: the next tile restarts at this tile row's
+            // first output row, so the run MUST break here to stay
+            // sorted (runs for the same rows merge by ⊕ later).
+            flush(&mut run, tr);
+        }
+    }
+    Ok(())
+}
+
+/// K-way merge one tile-row band's runs into `out`, combining equal
+/// `(row, col)` keys with ⊕. Each run is individually sorted; the heap
+/// interleaves them globally.
+fn merge_runs<S: Semiring>(
+    file: &ShardedFile,
+    group: &[RunRec],
+    out: &mut Vec<(u32, u32, f32)>,
+) -> Result<()> {
+    let mut runs: Vec<Vec<u8>> = Vec::with_capacity(group.len());
+    for r in group {
+        let mut buf = vec![0u8; r.len as usize];
+        file.read_at(r.off, &mut buf)?;
+        runs.push(buf);
+    }
+    let triple = |ri: usize, pos: usize| -> (u32, u32, f32) {
+        let b = &runs[ri][pos * TRIPLE_BYTES..(pos + 1) * TRIPLE_BYTES];
+        (
+            u32::from_le_bytes(b[0..4].try_into().unwrap()),
+            u32::from_le_bytes(b[4..8].try_into().unwrap()),
+            f32::from_le_bytes(b[8..12].try_into().unwrap()),
+        )
+    };
+    let mut pos = vec![0usize; runs.len()];
+    // Heap keys are (row, col, run idx) — values never enter the
+    // ordering, so NaN-free Ord is guaranteed.
+    let mut heap: BinaryHeap<Reverse<(u32, u32, usize)>> = BinaryHeap::new();
+    for (ri, run) in runs.iter().enumerate() {
+        if !run.is_empty() {
+            let (r, c, _) = triple(ri, 0);
+            heap.push(Reverse((r, c, ri)));
+        }
+    }
+    let mut last: Option<(u32, u32)> = None;
+    while let Some(Reverse((r, c, ri))) = heap.pop() {
+        let (_, _, v) = triple(ri, pos[ri]);
+        pos[ri] += 1;
+        if pos[ri] * TRIPLE_BYTES < runs[ri].len() {
+            let (nr, nc, _) = triple(ri, pos[ri]);
+            heap.push(Reverse((nr, nc, ri)));
+        }
+        if last == Some((r, c)) {
+            let slot = &mut out.last_mut().expect("merge combine target").2;
+            *slot = S::add(*slot, v);
+        } else {
+            out.push((r, c, v));
+            last = Some((r, c));
+        }
+    }
+    Ok(())
+}
+
+/// `Σ mask ⊙ C`: the sum of `c`'s values at positions present in `mask`
+/// (two-pointer intersection per row; binary `c` entries count 1each).
+pub fn masked_sum(c: &Csr, mask: &Csr) -> f64 {
+    assert_eq!(c.nrows, mask.nrows, "masked_sum: row mismatch");
+    let mut total = 0f64;
+    for r in 0..c.nrows {
+        let (ci, mi) = (c.row(r), mask.row(r));
+        let cv = c.row_vals(r);
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < ci.len() && j < mi.len() {
+            match ci[i].cmp(&mi[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    total += cv.map(|v| v[i] as f64).unwrap_or(1.0);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Triangles of a simple undirected graph from its symmetric binary
+/// adjacency `adj` and the product `product = adj · adj`: each triangle
+/// contributes 6 to `Σ adj ⊙ (adj·adj)` (3 edges × 2 directions).
+pub fn triangle_count(product: &Csr, adj: &Csr) -> u64 {
+    (masked_sum(product, adj) / 6.0).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat;
+    use crate::io::StoreSpec;
+    use crate::spmm::engine::SemSource;
+    use crate::spmm::semiring::OrAnd;
+    use crate::util::tempdir;
+
+    fn sample_csr(scale: u32, edges: usize, seed: u64) -> Csr {
+        let el = rmat::generate(scale, edges, rmat::RmatParams::default(), seed);
+        Csr::from_edgelist(&el)
+    }
+
+    /// Independent Gustavson oracle in f64, sort-based, no SPA sharing.
+    fn reference_product(a: &Csr, b: &Csr) -> Vec<Vec<(u32, f64)>> {
+        let mut out = Vec::with_capacity(a.nrows);
+        for r in 0..a.nrows {
+            let mut acc: Vec<(u32, f64)> = Vec::new();
+            let avs = a.row_vals(r);
+            for (i, &k) in a.row(r).iter().enumerate() {
+                let av = avs.map(|v| v[i] as f64).unwrap_or(1.0);
+                let bvs = b.row_vals(k as usize);
+                for (j, &c) in b.row(k as usize).iter().enumerate() {
+                    let bv = bvs.map(|v| v[j] as f64).unwrap_or(1.0);
+                    acc.push((c, av * bv));
+                }
+            }
+            acc.sort_unstable_by_key(|&(c, _)| c);
+            let mut merged: Vec<(u32, f64)> = Vec::new();
+            for (c, v) in acc {
+                match merged.last_mut() {
+                    Some((lc, lv)) if *lc == c => *lv += v,
+                    _ => merged.push((c, v)),
+                }
+            }
+            out.push(merged);
+        }
+        out
+    }
+
+    fn assert_matches_reference(got: &Csr, want: &[Vec<(u32, f64)>]) {
+        assert_eq!(got.nrows, want.len());
+        for r in 0..got.nrows {
+            let gi = got.row(r);
+            let gv = got.row_vals(r).expect("product has values");
+            assert_eq!(
+                gi.len(),
+                want[r].len(),
+                "row {r}: nnz {} vs reference {}",
+                gi.len(),
+                want[r].len()
+            );
+            for (i, &(wc, wv)) in want[r].iter().enumerate() {
+                assert_eq!(gi[i], wc, "row {r} entry {i}: column");
+                let g = gv[i] as f64;
+                assert!(
+                    (g - wv).abs() <= 1e-4 * wv.abs().max(1.0),
+                    "row {r} col {wc}: {g} vs {wv}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn a_times_a_matches_csr_reference_from_sem_store() {
+        // The acceptance-criterion path: A·A with A streamed from a
+        // striped SEM store, intermediates spilled to the same store
+        // (physical writes observable), merged product vs the naive
+        // f64 Gustavson oracle — structure exact, values to tolerance.
+        let m = sample_csr(9, 6000, 0xA1);
+        let img = TiledImage::build(&m, 128, TileFormat::Scsr);
+        let dir = tempdir();
+        let store = ShardedStore::open(StoreSpec {
+            dir: dir.path().to_path_buf(),
+            shards: 2,
+            stripe_bytes: 64 << 10,
+            read_gbps: None,
+            write_gbps: None,
+            latency_us: 0,
+            parity: false,
+        })
+        .unwrap();
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("a.tiles", &buf).unwrap();
+        let src = Source::Sem(SemSource::open(&store, "a.tiles").unwrap());
+        let w0 = store.physical_bytes_written();
+        let opts = SpgemmOpts {
+            threads: 3,
+            // Tiny flush budget: force many runs so the k-way merge and
+            // the ⊕-combine across runs actually carry weight.
+            run_flush_bytes: 4 << 10,
+            ..Default::default()
+        };
+        let prod = spgemm(&src, &img, &store, "spgemm-runs", &opts).unwrap();
+        assert!(prod.stats.runs > 1, "expected several runs");
+        assert!(
+            prod.stats.run_triples >= prod.stats.nnz,
+            "pre-merge triples ({}) must cover the product nnz ({})",
+            prod.stats.run_triples,
+            prod.stats.nnz
+        );
+        assert!(
+            store.physical_bytes_written() > w0,
+            "intermediate runs must hit the store as physical writes"
+        );
+        assert!(!store.exists("spgemm-runs"), "scratch object not cleaned");
+        let want = reference_product(&m, &m);
+        assert_matches_reference(&prod.csr, &want);
+        // The product round-trips into a tiled image (contraction-ready).
+        let pimg = prod.to_image(128, TileFormat::Scsr);
+        assert_eq!(pimg.meta.nnz, prod.stats.nnz);
+    }
+
+    #[test]
+    fn weighted_product_in_memory_matches_reference() {
+        // Weighted A (explicit f32 values) against a *different* B, both
+        // formats for A's image.
+        let mut a = sample_csr(8, 3000, 0xB2);
+        let mut rng = crate::util::Xoshiro256::new(0xB3);
+        a.vals = Some((0..a.nnz()).map(|_| rng.next_f32() + 0.5).collect());
+        let b = sample_csr(8, 2500, 0xB4);
+        let want = reference_product(&a, &b);
+        let dir = tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let bimg = TiledImage::build(&b, 64, TileFormat::Scsr);
+        for fmt in [TileFormat::Scsr, TileFormat::Dcsc] {
+            let aimg = TiledImage::build(&a, 64, fmt);
+            let src = Source::Mem(Arc::new(aimg));
+            let prod =
+                spgemm(&src, &bimg, &store, "w-runs", &SpgemmOpts::sequential()).unwrap();
+            assert_matches_reference(&prod.csr, &want);
+        }
+    }
+
+    #[test]
+    fn orand_square_is_the_boolean_reachability_structure() {
+        // Under or-and, A⊗A's values are all 1 and its structure equals
+        // the arithmetic product's structure (2-hop reachability).
+        let m = sample_csr(8, 2500, 0xC5);
+        let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+        let dir = tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let src = Source::Mem(Arc::new(img.clone()));
+        let opts = SpgemmOpts::sequential();
+        let bool_sq = spgemm_ring::<OrAnd>(&src, &img, &store, "b-runs", &opts).unwrap();
+        let arith_sq = spgemm(&src, &img, &store, "a-runs", &opts).unwrap();
+        assert_eq!(bool_sq.csr.indptr, arith_sq.csr.indptr);
+        assert_eq!(bool_sq.csr.indices, arith_sq.csr.indices);
+        assert!(bool_sq
+            .csr
+            .vals
+            .as_ref()
+            .unwrap()
+            .iter()
+            .all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn masked_triangle_count_matches_brute_force() {
+        // Symmetric simple graph; triangles via A⊙(A·A)/6 vs an O(n³)
+        // brute force over the adjacency.
+        let el = rmat::generate(7, 900, rmat::RmatParams::default(), 0xD6).symmetrize();
+        let m = Csr::from_edgelist(&el);
+        let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+        let dir = tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let src = Source::Mem(Arc::new(img.clone()));
+        let prod = spgemm(&src, &img, &store, "t-runs", &SpgemmOpts::sequential()).unwrap();
+        let got = triangle_count(&prod.csr, &m);
+        let mut adj = vec![vec![false; m.ncols]; m.nrows];
+        for r in 0..m.nrows {
+            for &c in m.row(r) {
+                adj[r][c as usize] = true;
+            }
+        }
+        let mut want = 0u64;
+        for u in 0..m.nrows {
+            for v in (u + 1)..m.nrows {
+                if !adj[u][v] {
+                    continue;
+                }
+                for w in (v + 1)..m.nrows {
+                    if adj[u][w] && adj[v][w] {
+                        want += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(got, want, "triangle count");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = sample_csr(7, 800, 0xE7);
+        let mut pairs = vec![(0u32, 0u32)];
+        pairs.dedup();
+        let b = Csr::from_sorted_pairs(a.ncols + 3, 5, &pairs);
+        let aimg = TiledImage::build(&a, 64, TileFormat::Scsr);
+        let bimg = TiledImage::build(&b, 64, TileFormat::Scsr);
+        let dir = tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let src = Source::Mem(Arc::new(aimg));
+        assert!(
+            spgemm(&src, &bimg, &store, "x-runs", &SpgemmOpts::sequential()).is_err(),
+            "inner-dimension mismatch must be rejected"
+        );
+    }
+}

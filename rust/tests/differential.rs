@@ -248,6 +248,79 @@ fn transpose_pass_matches_transposed_image() {
     }
 }
 
+/// Semiring-refactor guard: the streaming engine is generic over the
+/// (⊕, ⊗) ring, and its arithmetic instantiation must be
+/// **bit-identical** to the compat `run_pass` entry point — same fused
+/// forward + transpose pass, same striped SEM store, same thread count,
+/// on an RMAT and an SBM graph. The generic machinery may change where
+/// the adds come from, never what they compute.
+#[test]
+fn arith_ring_instantiation_is_bit_identical() {
+    use sem_spmm::spmm::{run_pass_ring, Arith, OutputSink};
+    let rmat_m = sample();
+    let sbm_m = Csr::from_edgelist(&sbm::generate(
+        sbm::SbmParams {
+            num_verts: 1 << 10,
+            num_edges: 14_000,
+            num_clusters: 16,
+            in_out: 8.0,
+            clustered_order: true,
+        },
+        0xA12E,
+    ));
+    for (name, m) in [("rmat", rmat_m), ("sbm", sbm_m)] {
+        let img = TiledImage::build(&m, 128, TileFormat::Scsr);
+        let dir = sem_spmm::util::tempdir();
+        let store = ShardedStore::open(StoreSpec {
+            dir: dir.path().to_path_buf(),
+            shards: 4,
+            stripe_bytes: 4096,
+            read_gbps: None,
+            write_gbps: None,
+            latency_us: 0,
+            parity: false,
+        })
+        .unwrap();
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("a.semm", &buf).unwrap();
+        let src = Source::Sem(SemSource::open(&store, "a.semm").unwrap());
+
+        let p = 4;
+        let opts = SpmmOpts {
+            threads: 3,
+            ..Default::default()
+        };
+        let ncfg = engine::numa_config(128, m.nrows.max(m.ncols), &opts);
+        let x = NumaDense::from_dense(&DenseMatrix::random(m.ncols, p, 0x51), ncfg);
+        let y = NumaDense::from_dense(&DenseMatrix::random(m.nrows, p, 0x52), ncfg);
+
+        let run = |explicit_ring: bool| {
+            let fwd = NumaDense::zeros(m.nrows, p, ncfg);
+            let tr = NumaDense::zeros(m.ncols, p, ncfg);
+            let pass = StreamPass::new()
+                .forward(&x, OutputSink::Mem(&fwd))
+                .transpose(&y, &tr);
+            let r = if explicit_ring {
+                run_pass_ring::<Arith>(&src, &pass, &opts).unwrap()
+            } else {
+                run_pass(&src, &pass, &opts).unwrap()
+            };
+            assert!(r.stats.bytes_read > 0, "{name}: pass must stream");
+            (fwd.to_dense().data, tr.to_dense().data)
+        };
+        let (fwd_compat, tr_compat) = run(false);
+        let (fwd_ring, tr_ring) = run(true);
+        assert_eq!(fwd_compat, fwd_ring, "{name}: forward op diverged");
+        assert_eq!(tr_compat, tr_ring, "{name}: transpose op diverged");
+
+        // And the numbers are still the engine's numbers: spmm_out over
+        // the same source must reproduce the forward block bit for bit.
+        let (out, _) = engine::spmm_out(&src, &x.to_dense(), &opts).unwrap();
+        assert_eq!(out.data, fwd_compat, "{name}: engine front door diverged");
+    }
+}
+
 /// Weighted matrices take the same differential path (width 4).
 #[test]
 fn weighted_differential_width4() {

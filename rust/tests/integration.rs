@@ -114,6 +114,101 @@ fn catalog_to_all_three_applications() {
 }
 
 #[test]
+fn catalog_to_traversal_apps_and_spgemm() {
+    // One catalog feeds the three semiring traversal apps and the
+    // out-of-core A·A SpGEMM, all streaming from the store.
+    use sem_spmm::apps::{bfs, labelprop, sssp};
+    use sem_spmm::spmm::spgemm;
+    let dir = sem_spmm::util::tempdir();
+    let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+    let catalog = Catalog::new(store.clone(), 512);
+    let opts = SpmmOpts {
+        threads: 3,
+        ..Default::default()
+    };
+
+    // Directed twitter stand-in: BFS levels match the queue reference,
+    // and binary-weight SSSP distances are exactly the BFS hop counts
+    // with a valid shortest-path tree.
+    let spec = registry::by_name("twitter").unwrap().shrunk(10);
+    let el = spec.build();
+    let imgs = catalog.ensure(&spec).unwrap();
+    let root = 0u32;
+    let src = Source::Sem(catalog.open_adj(&imgs).unwrap());
+    let (levels, bstats) = bfs::bfs(
+        &src,
+        root,
+        &bfs::BfsConfig {
+            spmm: opts.clone(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(bstats.bytes_read > 0, "BFS must stream from the store");
+    assert_eq!(levels, bfs::bfs_ref(imgs.num_verts, &el.edges, root));
+
+    let (dists, parents, sstats) = sssp::sssp(
+        &src,
+        root,
+        &sssp::SsspConfig {
+            spmm: opts.clone(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(sstats.converged);
+    for (v, (&d, &l)) in dists.iter().zip(&levels).enumerate() {
+        if l >= 0 {
+            assert_eq!(d, l as f32, "vertex {v}: hop count vs BFS level");
+        } else {
+            assert!(d.is_infinite(), "vertex {v} unreached");
+        }
+    }
+    for v in 0..imgs.num_verts {
+        if levels[v] > 0 {
+            let p = parents[v];
+            assert!(p >= 0, "reached vertex {v} has no tree parent");
+            assert_eq!(levels[p as usize] + 1, levels[v], "vertex {v} parent depth");
+        }
+    }
+
+    // Undirected friendster stand-in: min-label components against
+    // union-find over the same edge list.
+    let spec = registry::by_name("friendster").unwrap().shrunk(10);
+    let el = spec.build();
+    let imgs = catalog.ensure(&spec).unwrap();
+    let src = Source::Sem(catalog.open_adj(&imgs).unwrap());
+    let (labels, cstats) = labelprop::connected_components(
+        &src,
+        &labelprop::LabelPropConfig {
+            spmm: opts.clone(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(cstats.converged);
+    assert_eq!(labels, labelprop::cc_ref(imgs.num_verts, &el.edges));
+
+    // Out-of-core A·A on the twitter stand-in: intermediate runs spill
+    // through the store, and streaming A from the store (SEM) yields the
+    // same product as reading it from memory (IM).
+    let spec = registry::by_name("twitter").unwrap().shrunk(10);
+    let imgs = catalog.ensure(&spec).unwrap();
+    let b_img = catalog.load_adj(&imgs).unwrap();
+    let gopts = spgemm::SpgemmOpts {
+        threads: 2,
+        ..Default::default()
+    };
+    let sem = Source::Sem(catalog.open_adj(&imgs).unwrap());
+    let prod_sem = spgemm::spgemm(&sem, &b_img, &store, "aa.sem.runs", &gopts).unwrap();
+    let im = Source::Mem(Arc::new(catalog.load_adj(&imgs).unwrap()));
+    let prod_im = spgemm::spgemm(&im, &b_img, &store, "aa.im.runs", &gopts).unwrap();
+    assert!(prod_sem.stats.runs > 0, "A·A never spilled a run");
+    assert!(prod_sem.stats.nnz > 0);
+    assert_eq!(prod_sem.csr, prod_im.csr, "SEM product diverged from IM");
+}
+
+#[test]
 fn vertical_partitioning_under_budget_is_exact() {
     let dir = sem_spmm::util::tempdir();
     let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
