@@ -18,7 +18,9 @@
 
 use crate::metrics::Stopwatch;
 use crate::matrix::NumaDense;
-use crate::spmm::{engine, exec, OrAnd, OutputSink, RowHook, Source, SpmmOpts, StreamPass};
+use crate::spmm::{
+    engine, exec, MinPlus, OrAnd, OutputSink, RowHook, Source, SpmmOpts, StreamPass,
+};
 use anyhow::{bail, Result};
 
 /// BFS configuration.
@@ -135,6 +137,113 @@ pub fn bfs(src: &Source, root: u32, cfg: &BfsConfig) -> Result<(Vec<i32>, BfsSta
             levels: level,
             reached,
             frontier,
+            bytes_read,
+        },
+    ))
+}
+
+/// Refresh a previous BFS labeling after **edge insertions** — the
+/// incremental hook for the delta layer. Old levels stay valid upper
+/// bounds (every old path still exists), so unit-weight min-plus
+/// relaxation seeded from them converges to the exact new levels,
+/// usually in a couple of sweeps instead of re-flooding depth-many from
+/// the root. `prev` must come from a BFS at the same `root` over a
+/// subgraph of the current image; **deletions** break the upper-bound
+/// property — rerun [`bfs`] from scratch after removing edges.
+///
+/// In the returned stats, `levels` counts relaxation sweeps (including
+/// the fixpoint-confirming one) and `frontier` the levels improved per
+/// sweep; `cfg.max_levels` caps the sweeps.
+pub fn bfs_refresh(
+    src: &Source,
+    root: u32,
+    prev: &[i32],
+    cfg: &BfsConfig,
+) -> Result<(Vec<i32>, BfsStats)> {
+    let meta = src.meta().clone();
+    let n = meta.nrows;
+    if meta.ncols != n {
+        bail!("bfs needs a square adjacency image");
+    }
+    if root as usize >= n {
+        bail!("bfs root {root} out of range (n = {n})");
+    }
+    if prev.len() != n {
+        bail!("previous levels have {} entries for {n} vertices", prev.len());
+    }
+    if prev[root as usize] != 0 {
+        bail!("previous levels do not come from a BFS rooted at {root}");
+    }
+    let sw = Stopwatch::start();
+    let ncfg = engine::numa_config(meta.tile, n, &cfg.spmm);
+    let mut x = NumaDense::zeros(n, 1, ncfg);
+    let mut x_next = NumaDense::zeros(n, 1, ncfg);
+    let mut dist = NumaDense::zeros(n, 1, ncfg);
+    for v in 0..n {
+        let d = if prev[v] < 0 {
+            f32::INFINITY
+        } else {
+            prev[v] as f32
+        };
+        x.row_mut(v)[0] = d;
+        dist.row_mut(v)[0] = d;
+    }
+
+    let mut sweeps = 0usize;
+    let mut improved = Vec::new();
+    let mut bytes_read = 0u64;
+    while sweeps < cfg.max_levels {
+        let dref = &dist;
+        // dist' = min(dist, min-plus expansion): a binary adjacency
+        // image weighs every edge 1, so the relaxation fixpoint is the
+        // exact hop count. Intervals are disjoint — see the bfs hook.
+        let hook: RowHook = Box::new(move |lo: usize, rows: &mut [f32], acc: &mut [f64]| {
+            let hi = lo + rows.len();
+            let mut dbuf: Vec<f32> = (lo..hi).map(|g| dref.row(g)[0]).collect();
+            for (i, r) in rows.iter_mut().enumerate() {
+                if *r < dbuf[i] {
+                    dbuf[i] = *r;
+                    acc[0] += 1.0;
+                } else {
+                    *r = dbuf[i];
+                }
+            }
+            unsafe { dref.write_rows_unsync(lo, hi, &dbuf) };
+        });
+        let r = {
+            let pass = StreamPass::<MinPlus>::new()
+                .forward_with(&x, OutputSink::Mem(&x_next), 1, hook);
+            exec::run_pass_ring(src, &pass, &cfg.spmm)?
+        };
+        bytes_read += r.stats.bytes_read;
+        sweeps += 1;
+        let delta = r.accs[0][0] as u64;
+        if delta == 0 {
+            break;
+        }
+        improved.push(delta);
+        std::mem::swap(&mut x, &mut x_next);
+    }
+
+    let mut reached = 0u64;
+    let out: Vec<i32> = (0..n)
+        .map(|i| {
+            let d = dist.row(i)[0];
+            if d.is_finite() {
+                reached += 1;
+                d as i32
+            } else {
+                -1
+            }
+        })
+        .collect();
+    Ok((
+        out,
+        BfsStats {
+            secs: sw.secs(),
+            levels: sweeps,
+            reached,
+            frontier: improved,
             bytes_read,
         },
     ))
@@ -263,6 +372,45 @@ mod tests {
                 assert_eq!(got, -1, "vertex {v} beyond the horizon");
             }
         }
+    }
+
+    #[test]
+    fn refresh_after_insertion_matches_cold_bfs_in_fewer_sweeps() {
+        // A directed chain 0→1→…→63, then a shortcut 0→62 near the end:
+        // the cold traversal still floods ~depth levels, but relaxing
+        // from the old labeling touches only the two improved vertices.
+        let mut el = crate::graph::EdgeList::new(64);
+        for v in 0..63u32 {
+            el.edges.push((v + 1, v)); // tuple (dst, src): edge v → v+1
+        }
+        let cfg = BfsConfig {
+            spmm: SpmmOpts::sequential(),
+            ..Default::default()
+        };
+        let img = image(&el, 16, TileFormat::Scsr);
+        let (old, _) = bfs(&Source::Mem(img), 0, &cfg).unwrap();
+        el.edges.push((62, 0)); // shortcut 0 → 62
+        let img = image(&el, 16, TileFormat::Scsr);
+        let (cold, cold_stats) = bfs(&Source::Mem(img.clone()), 0, &cfg).unwrap();
+        let (warm, warm_stats) =
+            bfs_refresh(&Source::Mem(img.clone()), 0, &old, &cfg).unwrap();
+        assert_eq!(warm, cold, "refresh must reach the exact new levels");
+        assert_eq!(warm, bfs_ref(el.num_verts, &el.edges, 0));
+        assert_eq!(warm[62], 1);
+        assert_eq!(warm[63], 2);
+        assert_eq!(warm_stats.reached, cold_stats.reached);
+        assert!(
+            warm_stats.levels < cold_stats.levels,
+            "refresh took {} sweeps vs {} cold levels",
+            warm_stats.levels,
+            cold_stats.levels
+        );
+        // Malformed previous labelings are rejected.
+        assert!(bfs_refresh(&Source::Mem(img.clone()), 0, &old[1..], &cfg).is_err());
+        assert!(
+            bfs_refresh(&Source::Mem(img), 5, &old, &cfg).is_err(),
+            "prev must be rooted at the requested root"
+        );
     }
 
     #[test]

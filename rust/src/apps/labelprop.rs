@@ -69,6 +69,22 @@ pub fn connected_components(
     src: &Source,
     cfg: &LabelPropConfig,
 ) -> Result<(Vec<u32>, LabelPropStats)> {
+    connected_components_warm(src, None, cfg)
+}
+
+/// [`connected_components`] seeded from a previous labeling — the
+/// incremental-refresh hook after delta-layer edge updates. Sound for
+/// **edge insertions**: min-labels only ever decrease, so flooding from
+/// the old fixpoint reaches the new one (usually in a couple of sweeps,
+/// since only merged components move). After **deletions** a component
+/// may split, which can only *raise* labels — warm-starting cannot do
+/// that, so refresh from scratch (`warm = None`) when edges were
+/// removed. `warm[v]` must be a vertex id `< n`.
+pub fn connected_components_warm(
+    src: &Source,
+    warm: Option<&[u32]>,
+    cfg: &LabelPropConfig,
+) -> Result<(Vec<u32>, LabelPropStats)> {
     let meta = src.meta().clone();
     let n = meta.nrows;
     if meta.ncols != n {
@@ -77,14 +93,23 @@ pub fn connected_components(
     if n > (1 << 24) {
         bail!("label propagation labels exceed the f32 exact-integer range (n = {n} > 2^24)");
     }
+    if let Some(w) = warm {
+        if w.len() != n {
+            bail!("warm labeling has {} entries for {n} vertices", w.len());
+        }
+        if let Some(&l) = w.iter().find(|&&l| l as usize >= n) {
+            bail!("warm label {l} is not a vertex id below {n}");
+        }
+    }
     let sw = Stopwatch::start();
     let ncfg = engine::numa_config(meta.tile, n, &cfg.spmm);
     let mut x = NumaDense::zeros(n, 1, ncfg);
     let mut x_next = NumaDense::zeros(n, 1, ncfg);
     let mut label = NumaDense::zeros(n, 1, ncfg);
     for v in 0..n {
-        x.row_mut(v)[0] = v as f32;
-        label.row_mut(v)[0] = v as f32;
+        let l = warm.map_or(v as f32, |w| w[v] as f32);
+        x.row_mut(v)[0] = l;
+        label.row_mut(v)[0] = l;
     }
 
     let mut iters = 0usize;
@@ -256,6 +281,56 @@ mod tests {
         for (v, &l) in l_sem.iter().enumerate() {
             assert_eq!(v / 100, l as usize / 100, "vertex {v} labeled {l}");
         }
+    }
+
+    #[test]
+    fn warm_start_refreshes_after_insertions_in_fewer_sweeps() {
+        // Two long chains; a fresh edge bridges them. Warm-starting from
+        // the pre-insert labeling must converge to the merged components
+        // in far fewer sweeps than relabeling from scratch (only the
+        // absorbed chain's labels move).
+        let half = 40u32;
+        let mut el = EdgeList::new(2 * half as usize);
+        for v in 0..half - 1 {
+            el.edges.push((v, v + 1));
+            el.edges.push((half + v, half + v + 1));
+        }
+        el.symmetrize();
+        let img = image(&el, 16, TileFormat::Scsr);
+        let cfg = LabelPropConfig {
+            spmm: SpmmOpts::sequential(),
+            ..Default::default()
+        };
+        let (old, _) = connected_components(&Source::Mem(img), &cfg).unwrap();
+        assert_eq!(old[half as usize], half, "two components before the edit");
+        // Insert a bridge at the END of chain A: cold relabeling now
+        // floods label 0 across both chains (~2·half sweeps); the warm
+        // restart only reflows the absorbed chain (~half sweeps).
+        el.edges.push((half - 1, half));
+        el.symmetrize();
+        let img = image(&el, 16, TileFormat::Scsr);
+        let (cold, cold_stats) =
+            connected_components(&Source::Mem(img.clone()), &cfg).unwrap();
+        let (warm, warm_stats) =
+            connected_components_warm(&Source::Mem(img.clone()), Some(&old), &cfg).unwrap();
+        assert_eq!(warm, cold, "warm refresh must reach the same fixpoint");
+        assert_eq!(warm, cc_ref(el.num_verts, &el.edges));
+        assert!(warm_stats.converged);
+        assert!(
+            warm_stats.iters < cold_stats.iters,
+            "warm {} vs cold {} sweeps",
+            warm_stats.iters,
+            cold_stats.iters
+        );
+        // Malformed warm labelings are rejected, not propagated.
+        assert!(
+            connected_components_warm(&Source::Mem(img.clone()), Some(&old[1..]), &cfg)
+                .is_err()
+        );
+        let bogus = vec![9999u32; el.num_verts];
+        assert!(
+            connected_components_warm(&Source::Mem(img), Some(&bogus), &cfg).is_err()
+        );
     }
 
     #[test]

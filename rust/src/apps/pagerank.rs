@@ -51,6 +51,11 @@ pub struct PageRankConfig {
     /// Offload the combine step to a dense backend (the AOT PJRT
     /// artifact when available, or the native backend).
     pub combine_backend: Option<Arc<dyn DenseBackend>>,
+    /// Start from a previous PageRank vector instead of the uniform
+    /// `1/N` — the incremental-refresh hook after delta-layer edge
+    /// updates: the fixpoint is unique, so a warm start changes only
+    /// how many iterations convergence takes, never the answer.
+    pub warm_start: Option<Vec<f32>>,
 }
 
 impl Default for PageRankConfig {
@@ -62,6 +67,7 @@ impl Default for PageRankConfig {
             tol: 0.0,
             spmm: SpmmOpts::default(),
             combine_backend: None,
+            warm_start: None,
         }
     }
 }
@@ -116,6 +122,11 @@ pub fn pagerank(
     if !(1..=3).contains(&cfg.vecs_in_mem) {
         bail!("vecs_in_mem must be 1..=3");
     }
+    if let Some(w) = &cfg.warm_start {
+        if w.len() != n {
+            bail!("warm_start has {} entries for {} vertices", w.len(), n);
+        }
+    }
     let read0 = store.stats.bytes_read.get();
     let written0 = store.stats.bytes_written.get();
     let sw = Stopwatch::start();
@@ -144,6 +155,7 @@ pub fn pagerank(
     let cache_usage0 = cache.as_ref().map(|c| c.usage()).unwrap_or_default();
     let phys_store: &Arc<ShardedStore> = match src {
         Source::Sem(s) => s.file.store(),
+        Source::Delta(d) => d.base.file.store(),
         Source::Mem(_) => store,
     };
     let mut phys_reads_mark = phys_store.physical_read_reqs();
@@ -165,9 +177,19 @@ pub fn pagerank(
         let mut x = NumaDense::zeros(n, 1, ncfg);
         let mut x_next = NumaDense::zeros(n, 1, ncfg);
         let mut pr = NumaDense::zeros(n, 1, ncfg);
-        pr.fill(pr0);
-        for i in 0..n {
-            x.row_mut(i)[0] = pr0 * inv_deg[i];
+        match &cfg.warm_start {
+            Some(w) => {
+                for i in 0..n {
+                    pr.row_mut(i)[0] = w[i];
+                    x.row_mut(i)[0] = w[i] * inv_deg[i];
+                }
+            }
+            None => {
+                pr.fill(pr0);
+                for i in 0..n {
+                    x.row_mut(i)[0] = pr0 * inv_deg[i];
+                }
+            }
         }
         vec_mem = x.footprint_bytes() + x_next.footprint_bytes() + pr.footprint_bytes()
             + (n as u64) * 4;
@@ -217,8 +239,13 @@ pub fn pagerank(
         // --- Legacy sweeps: the Fig 14 I/O-ablation modes (vectors on
         // the store) and the offloaded-combine path.
         let mut x = NumaDense::zeros(n, 1, ncfg);
-        x.fill(pr0);
-        let mut prev = vec![pr0; n];
+        let mut prev = match &cfg.warm_start {
+            Some(w) => w.clone(),
+            None => vec![pr0; n],
+        };
+        for i in 0..n {
+            x.row_mut(i)[0] = prev[i];
+        }
         vec_mem = x.footprint_bytes()
             + match cfg.vecs_in_mem {
                 3 => 2 * (n as u64) * 4, // output + degree in memory
@@ -496,6 +523,55 @@ mod tests {
         let usage = warm.cache.expect("cache attached");
         assert!(usage.hits > 0 && usage.bytes_from_cache > 0);
         assert_eq!(usage.bypasses, 0, "full budget admits everything");
+    }
+
+    #[test]
+    fn warm_start_converges_faster_to_the_same_fixpoint() {
+        // The incremental-refresh hook: restarting from a previous
+        // PageRank vector must reach the same fixpoint (it is unique)
+        // in fewer iterations than a cold uniform start.
+        let (el, img, deg) = setup(9, 5000);
+        let _ = el;
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let base = PageRankConfig {
+            iterations: 200,
+            tol: 1e-8,
+            spmm: SpmmOpts {
+                threads: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (pr_cold, cold) =
+            pagerank(&Source::Mem(img.clone()), &deg, &store, &base).unwrap();
+        assert!(cold.converged);
+        // Warm restart from the converged vector: both paths.
+        for vecs in [3, 2] {
+            let cfg = PageRankConfig {
+                vecs_in_mem: vecs,
+                warm_start: Some(pr_cold.clone()),
+                ..base.clone()
+            };
+            let (pr_warm, warm) =
+                pagerank(&Source::Mem(img.clone()), &deg, &store, &cfg).unwrap();
+            assert!(warm.converged, "mode {vecs}");
+            assert!(
+                warm.iters < cold.iters,
+                "mode {vecs}: warm {} vs cold {}",
+                warm.iters,
+                cold.iters
+            );
+            for (a, b) in pr_warm.iter().zip(&pr_cold) {
+                assert!((a - b).abs() < 1e-6, "mode {vecs}");
+            }
+        }
+        // A wrong-length warm vector is rejected.
+        let bad = PageRankConfig {
+            warm_start: Some(vec![0.1; 3]),
+            ..base
+        };
+        assert!(pagerank(&Source::Mem(img), &deg, &store, &bad).is_err());
     }
 
     #[test]

@@ -138,6 +138,7 @@ pub fn sssp(src: &Source, root: u32, cfg: &SsspConfig) -> Result<(Vec<f32>, Vec<
     } else {
         let scan_read0 = match src {
             Source::Sem(s) => s.file.store().stats.bytes_read.get(),
+            Source::Delta(d) => d.base.file.store().stats.bytes_read.get(),
             Source::Mem(_) => 0,
         };
         let mut parent = vec![-1i64; n];
@@ -152,8 +153,14 @@ pub fn sssp(src: &Source, root: u32, cfg: &SsspConfig) -> Result<(Vec<f32>, Vec<
             }
         })?;
         parent[root as usize] = -1;
-        if let Source::Sem(s) = src {
-            bytes_read += s.file.store().stats.bytes_read.get() - scan_read0;
+        match src {
+            Source::Sem(s) => {
+                bytes_read += s.file.store().stats.bytes_read.get() - scan_read0;
+            }
+            Source::Delta(d) => {
+                bytes_read += d.base.file.store().stats.bytes_read.get() - scan_read0;
+            }
+            Source::Mem(_) => {}
         }
         parent
     };

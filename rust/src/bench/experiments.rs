@@ -1284,3 +1284,165 @@ mod tests {
         }
     }
 }
+
+/// -------------------------------------------------------- delta_updates
+/// Dynamic graphs: after each committed batch of edge updates, refresh
+/// PageRank incrementally — stream the delta-merged image (base ⊕ LSM
+/// runs) with the previous vector as warm start — versus the static
+/// alternative of reconverting the mutated graph from scratch and
+/// rerunning cold. Both run on the same throttled 4-shard array. The
+/// incremental SEM sweep must be bit-identical to an in-memory run over
+/// the fully reconverted image (the canonical-merge invariant), and must
+/// read strictly fewer sparse bytes than reconvert-and-rerun.
+pub fn delta_updates(b: &Bench) -> Result<()> {
+    use crate::format::delta::DeltaOp;
+    use crate::io::{DeltaConfig, DeltaStore};
+    use crate::spmm::DeltaSource;
+    use std::collections::BTreeSet;
+
+    let spec = b.dataset("rmat-160").unwrap();
+    let el = spec.build();
+    let m = Csr::from_edgelist(&el);
+    let n = m.nrows;
+    let img = TiledImage::build(&m, b.tile, TileFormat::Scsr);
+    let mut buf = Vec::new();
+    img.write_to(&mut buf)?;
+    // The same deliberately slow 4-shard array as semiring_apps (1 GB/s
+    // aggregate), so byte counts — not page-cache hits — set the cost.
+    let store = crate::io::ShardedStore::open(crate::io::StoreSpec {
+        dir: b.store.spec().dir.join("delta-updates"),
+        shards: 4,
+        stripe_bytes: 256 << 10,
+        read_gbps: Some(0.25),
+        write_gbps: Some(0.25),
+        latency_us: 30,
+        parity: false,
+    })?;
+    store.put("delta.semm", &buf)?;
+    let ds = DeltaStore::open(&store, "delta.semm", DeltaConfig::default())?;
+
+    // Live edge set, mirrored alongside the delta store.
+    let mut edges: BTreeSet<(u32, u32)> = m
+        .indptr
+        .windows(2)
+        .enumerate()
+        .flat_map(|(r, w)| {
+            (w[0] as usize..w[1] as usize).map(move |k| (r as u32, k))
+        })
+        .map(|(r, k)| (r, m.indices[k]))
+        .collect();
+    let degrees = |edges: &BTreeSet<(u32, u32)>| -> Vec<u32> {
+        let mut deg = vec![0u32; n];
+        for &(_, s) in edges {
+            deg[s as usize] += 1;
+        }
+        deg
+    };
+    let pr_cfg = |warm: Option<Vec<f32>>| pagerank::PageRankConfig {
+        iterations: 200,
+        tol: 1e-7,
+        vecs_in_mem: 3,
+        spmm: b.opts.clone(),
+        warm_start: warm,
+        ..Default::default()
+    };
+
+    // Converged baseline on the pristine graph: the state every
+    // incremental refresh starts from.
+    let base_src = Source::Sem(SemSource::open(&store, "delta.semm")?);
+    let (mut prev_pr, st0) =
+        pagerank::pagerank(&base_src, &degrees(&edges), &store, &pr_cfg(None))?;
+    let mut rows = vec![format!(
+        "0\tbaseline-SEM\t{:.3}\t{}\t{:.4}\t-",
+        st0.secs,
+        st0.iters,
+        st0.bytes_read as f64 / 1e9
+    )];
+
+    let mut rng = crate::util::Xoshiro256::new(0xDE17A);
+    let n_ins = (m.nnz() / 200).max(50);
+    for batch in 1..=3usize {
+        // ~0.5% inserts plus half as many deletes of live edges.
+        let live: Vec<(u32, u32)> = edges.iter().copied().collect();
+        for _ in 0..n_ins {
+            let (d, s) = (rng.below(n as u64) as u32, rng.below(n as u64) as u32);
+            ds.stage(DeltaOp::upsert(d, s, 1.0))?;
+            edges.insert((d, s));
+        }
+        for _ in 0..n_ins / 2 {
+            let (d, s) = live[rng.below_usize(live.len())];
+            ds.stage(DeltaOp::delete(d, s))?;
+            edges.remove(&(d, s));
+        }
+        let rep = ds.commit()?;
+        let deg = degrees(&edges);
+
+        // Incremental: warm-started sweep over base ⊕ runs.
+        let src = Source::Delta(DeltaSource::open(&store, "delta.semm")?);
+        let (pr_inc, st_inc) =
+            pagerank::pagerank(&src, &deg, &store, &pr_cfg(Some(prev_pr.clone())))?;
+        anyhow::ensure!(st_inc.converged, "incremental refresh did not converge");
+
+        // Static alternative: reconvert the mutated graph, rerun cold.
+        let pairs: Vec<(u32, u32)> = edges.iter().copied().collect();
+        let t0 = std::time::Instant::now();
+        let full = Csr::from_sorted_pairs(n, n, &pairs);
+        let full_img = TiledImage::build(&full, b.tile, TileFormat::Scsr);
+        let mut fbuf = Vec::new();
+        full_img.write_to(&mut fbuf)?;
+        let fname = format!("delta.full.{batch}.semm");
+        store.put(&fname, &fbuf)?;
+        let conv_secs = t0.elapsed().as_secs_f64();
+        let full_src = Source::Sem(SemSource::open(&store, &fname)?);
+        let (pr_full, st_full) = pagerank::pagerank(&full_src, &deg, &store, &pr_cfg(None))?;
+        anyhow::ensure!(st_full.converged, "cold rerun did not converge");
+
+        // Bit-identity: the delta-merged SEM sweep must equal an
+        // in-memory run over the reconverted image exactly.
+        let (pr_im, _) = pagerank::pagerank(
+            &Source::Mem(Arc::new(full_img)),
+            &deg,
+            &store,
+            &pr_cfg(Some(prev_pr.clone())),
+        )?;
+        anyhow::ensure!(
+            pr_inc == pr_im,
+            "batch {batch}: incremental SEM diverged from IM over the reconverted image"
+        );
+        // Both fixpoints agree to tolerance (different iterates, same answer).
+        let l1: f64 = pr_inc
+            .iter()
+            .zip(&pr_full)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum();
+        anyhow::ensure!(l1 < 1e-3, "batch {batch}: fixpoints diverged (L1 {l1})");
+        anyhow::ensure!(
+            st_inc.bytes_read < st_full.bytes_read,
+            "batch {batch}: incremental read {} B, reconversion rerun read {} B",
+            st_inc.bytes_read,
+            st_full.bytes_read
+        );
+
+        rows.push(format!(
+            "{batch}\tincremental-SEM\t{:.3}\t{}\t{:.4}\truns={} SEM==IM",
+            st_inc.secs,
+            st_inc.iters,
+            st_inc.bytes_read as f64 / 1e9,
+            rep.runs
+        ));
+        rows.push(format!(
+            "{batch}\tfull-reconv-SEM\t{:.3}\t{}\t{:.4}\tL1={l1:.2e}",
+            conv_secs + st_full.secs,
+            st_full.iters,
+            st_full.bytes_read as f64 / 1e9
+        ));
+        store.remove(&fname)?;
+        prev_pr = pr_inc;
+    }
+    rows.push("-\tverdict\t-\t-\t-\tincremental reads < reconversion, bit-identical to IM".into());
+    b.emit(
+        "delta_updates",
+        "batch\tmode\tsecs\titers\tgb_read\tverdict",
+        &rows,
+    )
+}

@@ -126,17 +126,19 @@ impl Bench {
 }
 
 /// All experiment names, in paper order. `scale_shards`, `cache_sweep`,
-/// `fused_ops`, `serve_batch`, `qos_tenants` and `semiring_apps` are
-/// this reproduction's extensions: read throughput vs. simulated device
-/// count, iterative SpMM time vs. tile-row-cache budget, fused
-/// single-sweep vs. two-pass NMF I/O, ride-sharing batched serving vs.
-/// one-engine-call-per-request, multi-tenant QoS with parity
-/// reconstruction through an injected dead shard, and semiring graph
-/// traversals (BFS/SSSP) plus out-of-core A·A SpGEMM, SEM vs. IM.
+/// `fused_ops`, `serve_batch`, `qos_tenants`, `semiring_apps` and
+/// `delta_updates` are this reproduction's extensions: read throughput
+/// vs. simulated device count, iterative SpMM time vs. tile-row-cache
+/// budget, fused single-sweep vs. two-pass NMF I/O, ride-sharing batched
+/// serving vs. one-engine-call-per-request, multi-tenant QoS with parity
+/// reconstruction through an injected dead shard, semiring graph
+/// traversals (BFS/SSSP) plus out-of-core A·A SpGEMM SEM vs. IM, and
+/// incremental PageRank refresh over the LSM delta layer vs. full
+/// reconversion after committed edge-update batches.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig5a", "fig5b", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "tab2", "fig14", "fig15", "fig16", "scale_shards", "cache_sweep", "fused_ops",
-    "serve_batch", "qos_tenants", "semiring_apps",
+    "serve_batch", "qos_tenants", "semiring_apps", "delta_updates",
 ];
 
 /// Run one experiment by name.
@@ -163,6 +165,7 @@ pub fn run(bench: &Bench, exp: &str) -> Result<()> {
         "serve_batch" => serve_batch(bench),
         "qos_tenants" => qos_tenants(bench),
         "semiring_apps" => semiring_apps(bench),
+        "delta_updates" => delta_updates(bench),
         "all" => {
             for e in ALL_EXPERIMENTS {
                 if *e == "fig5b" {

@@ -29,6 +29,9 @@
 //! spgemm.run_flush_kb = 1024      # per-worker sorted-run flush threshold (KiB)
 //! spgemm.b_cache_tile_rows = 8    # decoded B tile rows kept in memory
 //! spgemm.merge_window_kb = 1024   # merge window of the run writer (KiB)
+//! delta.buffer_mb    = 64         # staged edge-edit buffer before auto-commit (MiB)
+//! delta.compact_runs = 4          # fold delta runs once this many accumulate (>= 2)
+//! delta.major_compact_ratio = 0.2 # delta/base byte ratio triggering a base rewrite
 //! ```
 //!
 //! Sections map onto [`crate::io::StoreSpec`], [`crate::spmm::SpmmOpts`],
@@ -288,6 +291,38 @@ impl Config {
             max_inflight: self.get_usize("serve.max_inflight", d.max_inflight)?,
         })
     }
+
+    /// Delta (edge-update) layer knobs:
+    ///
+    /// * `delta.buffer_mb` — staged-edit buffer budget in MiB; staging
+    ///   past it auto-commits a run (default 64).
+    /// * `delta.compact_runs` — run-compaction trigger: fold the live
+    ///   runs into one once this many accumulate (minimum 2 — with one
+    ///   run there is nothing to fold).
+    /// * `delta.major_compact_ratio` — once committed delta bytes exceed
+    ///   this fraction of the base image, rewrite the base (merge all
+    ///   edits in) and swap versions (default 0.2).
+    pub fn delta_config(&self) -> Result<crate::io::DeltaConfig> {
+        let d = crate::io::DeltaConfig::default();
+        let buffer_mb =
+            self.get_f64("delta.buffer_mb", d.buffer_bytes as f64 / (1u64 << 20) as f64)?;
+        if !(buffer_mb > 0.0 && buffer_mb <= 1e9) {
+            bail!("config delta.buffer_mb={buffer_mb}: must be finite and > 0");
+        }
+        let compact_runs = self.get_usize("delta.compact_runs", d.compact_runs)?;
+        if compact_runs < 2 {
+            bail!("config delta.compact_runs={compact_runs}: must be >= 2");
+        }
+        let ratio = self.get_f64("delta.major_compact_ratio", d.major_compact_ratio)?;
+        if !(ratio > 0.0 && ratio.is_finite()) {
+            bail!("config delta.major_compact_ratio={ratio}: must be finite and > 0");
+        }
+        Ok(crate::io::DeltaConfig {
+            buffer_bytes: (buffer_mb * (1u64 << 20) as f64) as u64,
+            compact_runs,
+            major_compact_ratio: ratio,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -430,6 +465,35 @@ mod tests {
             .unwrap()
             .bfs_max_levels()
             .is_err());
+    }
+
+    #[test]
+    fn delta_keys_default_and_parse() {
+        let c = Config::parse("").unwrap();
+        let d = c.delta_config().unwrap();
+        assert_eq!(d.buffer_bytes, 64 << 20, "buffer defaults to 64 MiB");
+        assert_eq!(d.compact_runs, 4);
+        assert!((d.major_compact_ratio - 0.2).abs() < 1e-12);
+        let c = Config::parse(
+            "delta.buffer_mb = 1.5\ndelta.compact_runs = 2\n\
+             delta.major_compact_ratio = 0.5\n",
+        )
+        .unwrap();
+        let d = c.delta_config().unwrap();
+        assert_eq!(d.buffer_bytes, (1.5 * (1u64 << 20) as f64) as u64);
+        assert_eq!(d.compact_runs, 2);
+        assert!((d.major_compact_ratio - 0.5).abs() < 1e-12);
+        for bad in [
+            "delta.buffer_mb = 0",
+            "delta.buffer_mb = -1",
+            "delta.buffer_mb = nan",
+            "delta.compact_runs = 1",
+            "delta.major_compact_ratio = 0",
+            "delta.major_compact_ratio = inf",
+        ] {
+            let c = Config::parse(&format!("{bad}\n")).unwrap();
+            assert!(c.delta_config().is_err(), "'{bad}' must be rejected");
+        }
     }
 
     #[test]

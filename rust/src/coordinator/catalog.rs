@@ -157,6 +157,37 @@ impl Catalog {
             &self.store.read_object_unmetered(&imgs.adj)?,
         )
     }
+
+    /// Open A at its **current delta-layer version**: the manifest's
+    /// base image plus any live edit runs merged on the fly. With no
+    /// committed edits this is exactly [`Catalog::open_adj`]; after a
+    /// major compaction it is a plain SEM source over the swapped base.
+    /// Readers hold whatever version they opened — a concurrent commit
+    /// or compaction never disturbs an in-flight sweep.
+    pub fn open_adj_current(&self, imgs: &DatasetImages) -> Result<crate::spmm::Source> {
+        let man = crate::io::delta::Manifest::load(&self.store, &imgs.adj)?;
+        if man.runs.is_empty() {
+            Ok(crate::spmm::Source::Sem(crate::spmm::SemSource::open(
+                &self.store,
+                &man.base,
+            )?))
+        } else {
+            Ok(crate::spmm::Source::Delta(crate::spmm::DeltaSource::open(
+                &self.store,
+                &imgs.adj,
+            )?))
+        }
+    }
+
+    /// Open the delta (edit) layer of A for staging/committing edge
+    /// updates against this dataset.
+    pub fn delta(
+        &self,
+        imgs: &DatasetImages,
+        cfg: crate::io::delta::DeltaConfig,
+    ) -> Result<crate::io::DeltaStore> {
+        crate::io::DeltaStore::open(&self.store, &imgs.adj, cfg)
+    }
 }
 
 #[cfg(test)]

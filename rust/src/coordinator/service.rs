@@ -22,6 +22,9 @@
 //! BFS <dataset> <root>
 //! SSSP <dataset> <root>
 //! CC <dataset>
+//! UPDATE <dataset> add <src> <dst> [w]
+//! UPDATE <dataset> del <src> <dst>
+//! COMMIT <dataset>
 //! STATS
 //! QUIT
 //! ```
@@ -41,6 +44,18 @@
 //! service-wide batching counters plus the store's degraded-read
 //! counters (parity reconstructions, see `store.parity`).
 //!
+//! `UPDATE` stages edge edits against the dataset's (directed)
+//! adjacency image into its delta layer ([`crate::io::DeltaStore`]);
+//! `COMMIT` durably publishes everything staged as a sorted delta run
+//! and reports any compaction the commit triggered. Reads — every verb
+//! above — always serve the **current committed version** (base image
+//! plus live runs merged on the fly); staged-but-uncommitted edits are
+//! invisible, and a sweep in flight during a commit keeps the version
+//! it opened. `CC` reads the undirected variant's image, which the
+//! delta layer of the directed image does not feed. Batched rides are
+//! keyed by dataset *and* delta version, so requests never share a
+//! sweep across an update boundary.
+//!
 //! `TENANT <name>` attributes the connection's subsequent batched
 //! requests to a tenant for admission control and weighted-fair
 //! dispatch (`serve.queue_depth` / `serve.byte_budget_mb` /
@@ -54,6 +69,7 @@ use super::batcher::{Backpressure, BatchConfig, BatchJob, Batcher};
 use super::catalog::Catalog;
 use crate::apps::{bfs, eigen, labelprop, nmf, pagerank, sssp};
 use crate::config::json::Json;
+use crate::format::delta::DeltaOp;
 use crate::graph::registry;
 use crate::matrix::DenseMatrix;
 use crate::metrics::{BatchStats, Stopwatch};
@@ -83,6 +99,13 @@ pub struct Service {
     /// check-then-build — but one dataset's slow build must not stall
     /// requests for every other dataset, so the serialization is keyed.
     ensure_locks: Mutex<std::collections::HashMap<String, Arc<Mutex<()>>>>,
+    /// Per-dataset delta (edge-update) layers, opened lazily on the
+    /// first `UPDATE` and shared by every connection so staged edits
+    /// accumulate in one buffer. Keyed by adjacency object name.
+    deltas: Mutex<std::collections::HashMap<String, Arc<crate::io::DeltaStore>>>,
+    /// Knobs for lazily-opened delta layers (`delta.*` config keys).
+    /// Set before serving; layers already open keep their config.
+    pub delta_cfg: crate::io::DeltaConfig,
 }
 
 impl Service {
@@ -104,6 +127,8 @@ impl Service {
             stop: Arc::new(AtomicBool::new(false)),
             batcher,
             ensure_locks: Mutex::new(std::collections::HashMap::new()),
+            deltas: Mutex::new(std::collections::HashMap::new()),
+            delta_cfg: crate::io::DeltaConfig::default(),
         })
     }
 
@@ -249,10 +274,10 @@ impl Service {
             }
             ["SPMV", ds] => {
                 let imgs = self.ensure(ds)?;
-                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let (src, vkey) = self.open_current(&imgs)?;
                 let x = DenseMatrix::from_col(&vec![1f32; imgs.num_verts]);
                 let r = self.batcher.run(
-                    &imgs.adj,
+                    &vkey,
                     &src,
                     BatchJob::forward(x, format!("SPMV {ds}")).for_tenant(tenant.clone()),
                 )?;
@@ -267,10 +292,10 @@ impl Service {
             ["SPMM", ds, cols] => {
                 let p: usize = cols.parse()?;
                 let imgs = self.ensure(ds)?;
-                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let (src, vkey) = self.open_current(&imgs)?;
                 let x = DenseMatrix::random(imgs.num_verts, p, 1);
                 let r = self.batcher.run(
-                    &imgs.adj,
+                    &vkey,
                     &src,
                     BatchJob::forward(x, format!("SPMM {ds} p={p}")).for_tenant(tenant.clone()),
                 )?;
@@ -286,7 +311,7 @@ impl Service {
             ["PAGERANK", ds, iters] => {
                 let iters: usize = iters.parse()?;
                 let imgs = self.ensure(ds)?;
-                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let src = self.catalog.open_adj_current(&imgs)?;
                 let cfg = pagerank::PageRankConfig {
                     iterations: iters,
                     spmm: self.opts.clone(),
@@ -303,7 +328,7 @@ impl Service {
             ["EIGEN", ds, nev] => {
                 let nev: usize = nev.parse()?;
                 let imgs = self.ensure(ds)?;
-                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let src = self.catalog.open_adj_current(&imgs)?;
                 let cfg = eigen::EigenConfig {
                     nev,
                     subspace: (4 * nev.max(2)).next_multiple_of(4),
@@ -321,7 +346,7 @@ impl Service {
                 let iters: usize = iters.parse()?;
                 let imgs = self.ensure(ds)?;
                 // Single image of A: the fused pass supplies Aᵀ·W.
-                let a = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let a = self.catalog.open_adj_current(&imgs)?;
                 let cfg = nmf::NmfConfig {
                     k,
                     iterations: iters,
@@ -338,7 +363,7 @@ impl Service {
             ["BFS", ds, root] => {
                 let root: u32 = root.parse()?;
                 let imgs = self.ensure(ds)?;
-                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let src = self.catalog.open_adj_current(&imgs)?;
                 let cfg = bfs::BfsConfig {
                     spmm: self.opts.clone(),
                     ..Default::default()
@@ -353,7 +378,7 @@ impl Service {
             ["SSSP", ds, root] => {
                 let root: u32 = root.parse()?;
                 let imgs = self.ensure(ds)?;
-                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let src = self.catalog.open_adj_current(&imgs)?;
                 let cfg = sssp::SsspConfig {
                     spmm: self.opts.clone(),
                     ..Default::default()
@@ -369,7 +394,7 @@ impl Service {
             }
             ["CC", ds] => {
                 let imgs = self.ensure_undirected(ds)?;
-                let src = Source::Sem(self.catalog.open_adj(&imgs)?);
+                let src = self.catalog.open_adj_current(&imgs)?;
                 let cfg = labelprop::LabelPropConfig {
                     spmm: self.opts.clone(),
                     ..Default::default()
@@ -380,6 +405,40 @@ impl Service {
                     .set("sweeps", stats.iters)
                     .set("converged", stats.converged)
                     .set("secs", stats.secs)
+            }
+            ["UPDATE", ds, op, src_v, dst_v, rest @ ..] if rest.len() <= 1 => {
+                let imgs = self.ensure(ds)?;
+                let delta = self.delta_store(&imgs)?;
+                let s: u32 = src_v.parse()?;
+                let d: u32 = dst_v.parse()?;
+                // Store convention: (row, col) = (dst, src).
+                let op = match (*op, rest.first()) {
+                    ("add", None) => DeltaOp::upsert(d, s, 1.0),
+                    ("add", Some(w)) => DeltaOp::upsert(d, s, w.parse()?),
+                    ("del", None) => DeltaOp::delete(d, s),
+                    _ => anyhow::bail!(
+                        "UPDATE op must be add|del (del takes no weight)"
+                    ),
+                };
+                let staged = delta.stage(op)?;
+                Json::obj().set("dataset", *ds).set("staged", staged)
+            }
+            ["COMMIT", ds] => {
+                let imgs = self.ensure(ds)?;
+                let delta = self.delta_store(&imgs)?;
+                // Serialize with dataset builds: a commit may swap the
+                // base image, which must not race `Catalog::ensure`'s
+                // check-then-build for the same dataset.
+                let lock = self.build_lock(ds);
+                let _build_guard = lock.lock().unwrap_or_else(|p| p.into_inner());
+                let rep = delta.commit()?;
+                Json::obj()
+                    .set("dataset", *ds)
+                    .set("committed_ops", rep.ops)
+                    .set("run_seq", rep.seq.map(|s| s as f64).unwrap_or(-1.0))
+                    .set("runs", rep.runs)
+                    .set("base_version", rep.base_version)
+                    .set("major_compacted", rep.major_compacted)
             }
             _ => Json::obj().set("error", format!("unknown request: {req}")),
         };
@@ -418,15 +477,42 @@ impl Service {
         // Keyed lock, poison-tolerant: a panicking build on one
         // connection thread must neither crash every later request nor
         // block builds of unrelated datasets.
-        let lock = {
-            let mut m = self
-                .ensure_locks
-                .lock()
-                .unwrap_or_else(|p| p.into_inner());
-            m.entry(ds.to_string()).or_default().clone()
-        };
+        let lock = self.build_lock(ds);
         let _build_guard = lock.lock().unwrap_or_else(|p| p.into_inner());
         self.catalog.ensure(&spec)
+    }
+
+    /// The per-dataset build lock (also taken by `COMMIT`, whose base
+    /// swap must not race a concurrent `ensure` of the same dataset).
+    fn build_lock(&self, ds: &str) -> Arc<Mutex<()>> {
+        let mut m = self
+            .ensure_locks
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        m.entry(ds.to_string()).or_default().clone()
+    }
+
+    /// The current-version source plus the batch key that names it.
+    /// Keying rides by `image@version` keeps a request committed after
+    /// an update from sharing a sweep with one admitted before it.
+    fn open_current(&self, imgs: &super::catalog::DatasetImages) -> Result<(Source, String)> {
+        let man = crate::io::delta::Manifest::load(self.catalog.store(), &imgs.adj)?;
+        let src = self.catalog.open_adj_current(imgs)?;
+        Ok((src, format!("{}@{}", imgs.adj, man.version_token())))
+    }
+
+    /// The shared delta layer of a dataset, opened lazily on first use.
+    fn delta_store(
+        &self,
+        imgs: &super::catalog::DatasetImages,
+    ) -> Result<Arc<crate::io::DeltaStore>> {
+        let mut m = self.deltas.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(d) = m.get(&imgs.adj) {
+            return Ok(d.clone());
+        }
+        let d = Arc::new(self.catalog.delta(imgs, self.delta_cfg.clone())?);
+        m.insert(imgs.adj.clone(), d.clone());
+        Ok(d)
     }
 }
 
@@ -531,6 +617,44 @@ mod tests {
         let r = svc.dispatch("CC twitter").unwrap().unwrap();
         assert_eq!(r.get("converged"), Some(&Json::Bool(true)));
         assert!(r.get("components").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn update_and_commit_change_served_results_only_after_commit() {
+        let (_d, svc) = service();
+        let sum = |svc: &Service| {
+            svc.dispatch("SPMV twitter")
+                .unwrap()
+                .unwrap()
+                .get("sum")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        let sum0 = sum(&svc);
+        // Staged but uncommitted: reads serve the old version.
+        let r = svc.dispatch("UPDATE twitter add 1 2").unwrap().unwrap();
+        assert_eq!(r.get("staged").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(sum(&svc), sum0, "uncommitted edits must be invisible");
+        let r = svc.dispatch("COMMIT twitter").unwrap().unwrap();
+        assert_eq!(r.get("committed_ops").unwrap().as_f64().unwrap(), 1.0);
+        assert!(r.get("run_seq").unwrap().as_f64().unwrap() >= 0.0);
+        // SpMV-with-ones sums the edge count: after `add` the edge
+        // exists, after `del` it is gone — whether or not the base
+        // already had it, the two committed states differ by one edge.
+        let sum_added = sum(&svc);
+        svc.dispatch("UPDATE twitter del 1 2").unwrap().unwrap();
+        svc.dispatch("COMMIT twitter").unwrap().unwrap();
+        let sum_deleted = sum(&svc);
+        assert_eq!(sum_added - sum_deleted, 1.0);
+        assert!(sum0 >= sum_deleted && sum0 <= sum_added);
+        // Empty commit is a no-op.
+        let r = svc.dispatch("COMMIT twitter").unwrap().unwrap();
+        assert_eq!(r.get("committed_ops").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(r.get("run_seq").unwrap().as_f64().unwrap(), -1.0);
+        // Bad verbs are rejected, not staged.
+        assert!(svc.dispatch("UPDATE twitter del 1 2 9.0").is_err());
+        assert!(svc.dispatch("UPDATE twitter mul 1 2").is_err());
     }
 
     #[test]

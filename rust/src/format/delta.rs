@@ -1,0 +1,517 @@
+//! Delta-run encoding and the canonical base ⊕ delta tile-row merge.
+//!
+//! A *delta run* ("SEMD") is the on-store unit of the LSM update layer:
+//! a batch of edge edits — inserts, weight updates, and tombstoned
+//! deletes — sorted by `(row, col)` and grouped into the same tile-row
+//! bands as the base image, so a streaming sweep can pair run slices
+//! with base tile rows without any seeking. Runs are tiny next to the
+//! base (13 bytes per edit) and are folded away by compaction
+//! ([`crate::io::delta`]).
+//!
+//! Run layout (little-endian), mirroring the SEMM image shape:
+//!
+//! ```text
+//! [header: 64 bytes]
+//!   magic "SEMD", version u32, nrows u64, ncols u64, tile u32,
+//!   format u8, valtype u8, pad u16, seq u64, n_ops u64, n_tile_rows u32
+//! [index: n_tile_rows × (offset u64, len u64)]   offsets into data area
+//! [data:  13-byte records (row u32, col u32, flags u8, val f32),
+//!         sorted by (row, col), grouped per tile row]
+//! ```
+//!
+//! The correctness heart of the layer is [`merge_tile_row`]: it rewrites
+//! one base tile row with a sorted slice of collapsed edits into
+//! **exactly** the bytes [`super::tiled::TiledImage::build`] would have
+//! produced for the mutated matrix — non-empty tiles in ascending
+//! tile-column order, coordinates `(local row, local col)`-sorted, same
+//! SCSR/DCSC encoder, same value type. Byte-level canonicality is what
+//! lets the differential suite demand *bit-identical* sweep outputs
+//! against a from-scratch reconversion in every semiring, and what makes
+//! major compaction's output a first-class image.
+
+use super::tiled::TiledMeta;
+use super::{dcsc, scsr, TileEntries, TileFormat, ValueType};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Magic bytes of a delta run.
+pub const RUN_MAGIC: [u8; 4] = *b"SEMD";
+/// Run format version.
+pub const RUN_VERSION: u32 = 1;
+/// Fixed run header size (same as the image header).
+pub const RUN_HEADER_LEN: usize = 64;
+/// Bytes per edit record: row u32 + col u32 + flags u8 + val f32.
+pub const OP_BYTES: usize = 13;
+
+/// One edge edit. An upsert (`tombstone = false`) inserts the edge or
+/// replaces its value; a tombstone deletes it (and is a no-op if the
+/// edge does not exist). For binary images the value is ignored — an
+/// upsert is pure pattern.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeltaOp {
+    /// Destination vertex (matrix row; images store `A[dst][src]`).
+    pub row: u32,
+    /// Source vertex (matrix column).
+    pub col: u32,
+    /// `true` = delete this edge.
+    pub tombstone: bool,
+    /// Edge weight for upserts into F32 images.
+    pub val: f32,
+}
+
+impl DeltaOp {
+    /// An insert / weight-update record.
+    pub fn upsert(row: u32, col: u32, val: f32) -> DeltaOp {
+        DeltaOp {
+            row,
+            col,
+            tombstone: false,
+            val,
+        }
+    }
+
+    /// A delete record.
+    pub fn delete(row: u32, col: u32) -> DeltaOp {
+        DeltaOp {
+            row,
+            col,
+            tombstone: true,
+            val: 0.0,
+        }
+    }
+
+    fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.row.to_le_bytes());
+        out.extend_from_slice(&self.col.to_le_bytes());
+        out.push(self.tombstone as u8);
+        out.extend_from_slice(&self.val.to_le_bytes());
+    }
+
+    fn read(b: &[u8]) -> DeltaOp {
+        DeltaOp {
+            row: u32::from_le_bytes(b[0..4].try_into().unwrap()),
+            col: u32::from_le_bytes(b[4..8].try_into().unwrap()),
+            tombstone: b[8] != 0,
+            val: f32::from_le_bytes(b[9..13].try_into().unwrap()),
+        }
+    }
+}
+
+/// Parsed run header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunMeta {
+    /// Shape/encoding of the base image this run applies to.
+    pub image: TiledMeta,
+    /// Commit sequence number (monotone per dataset).
+    pub seq: u64,
+    /// Edit records in the run.
+    pub n_ops: u64,
+}
+
+/// Encode a sorted, coordinate-unique batch of edits as one run.
+pub fn encode_run(meta: &TiledMeta, seq: u64, ops: &[DeltaOp]) -> Vec<u8> {
+    debug_assert!(ops
+        .windows(2)
+        .all(|w| (w[0].row, w[0].col) < (w[1].row, w[1].col)));
+    let ntr = meta.n_tile_rows();
+    let mut out = Vec::with_capacity(RUN_HEADER_LEN + ntr * 16 + ops.len() * OP_BYTES);
+    out.extend_from_slice(&RUN_MAGIC);
+    out.extend_from_slice(&RUN_VERSION.to_le_bytes());
+    out.extend_from_slice(&(meta.nrows as u64).to_le_bytes());
+    out.extend_from_slice(&(meta.ncols as u64).to_le_bytes());
+    out.extend_from_slice(&(meta.tile as u32).to_le_bytes());
+    out.push(meta.format.code());
+    out.push(meta.valtype.code());
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&(ops.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(ntr as u32).to_le_bytes());
+    out.resize(RUN_HEADER_LEN, 0);
+
+    // Per-tile-row index: ops are (row, col)-sorted, so each band is a
+    // contiguous record range.
+    let mut index = Vec::with_capacity(ntr);
+    let mut k = 0usize;
+    for tr in 0..ntr {
+        let hi = ((tr + 1) * meta.tile) as u32;
+        let start = k;
+        while k < ops.len() && ops[k].row < hi {
+            k += 1;
+        }
+        index.push(((start * OP_BYTES) as u64, ((k - start) * OP_BYTES) as u64));
+    }
+    for &(off, len) in &index {
+        out.extend_from_slice(&off.to_le_bytes());
+        out.extend_from_slice(&len.to_le_bytes());
+    }
+    for op in ops {
+        op.write(&mut out);
+    }
+    out
+}
+
+/// Decode a run back into its header and sorted edit list.
+pub fn decode_run(bytes: &[u8]) -> Result<(RunMeta, Vec<DeltaOp>)> {
+    if bytes.len() < RUN_HEADER_LEN || bytes[0..4] != RUN_MAGIC {
+        bail!("bad delta-run magic");
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != RUN_VERSION {
+        bail!("unsupported delta-run version {version}");
+    }
+    let image = TiledMeta {
+        nrows: u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize,
+        ncols: u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize,
+        tile: u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize,
+        format: TileFormat::from_code(bytes[28])?,
+        valtype: ValueType::from_code(bytes[29])?,
+        nnz: 0,
+    };
+    let seq = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+    let n_ops = u64::from_le_bytes(bytes[40..48].try_into().unwrap());
+    let ntr = u32::from_le_bytes(bytes[48..52].try_into().unwrap()) as usize;
+    if ntr != image.n_tile_rows() {
+        bail!("inconsistent delta-run tile-row count");
+    }
+    let data_start = RUN_HEADER_LEN + ntr * 16;
+    let need = data_start + n_ops as usize * OP_BYTES;
+    if bytes.len() < need {
+        bail!("truncated delta run: {} < {need} bytes", bytes.len());
+    }
+    let mut ops = Vec::with_capacity(n_ops as usize);
+    for k in 0..n_ops as usize {
+        let at = data_start + k * OP_BYTES;
+        ops.push(DeltaOp::read(&bytes[at..at + OP_BYTES]));
+    }
+    Ok((RunMeta { image, seq, n_ops }, ops))
+}
+
+/// Fold runs (oldest first) into one coordinate-unique edit list,
+/// newest edit winning per coordinate, sorted by `(row, col)`.
+/// Tombstones survive the fold — they still have base entries to mask.
+pub fn collapse<'a>(runs: impl IntoIterator<Item = &'a [DeltaOp]>) -> Vec<DeltaOp> {
+    let mut m: BTreeMap<(u32, u32), DeltaOp> = BTreeMap::new();
+    for run in runs {
+        for op in run {
+            m.insert((op.row, op.col), *op);
+        }
+    }
+    m.into_values().collect()
+}
+
+/// The in-memory overlay a [`crate::spmm::DeltaSource`] applies during a
+/// sweep: the collapsed edits bucketed per tile row (each bucket
+/// `(row, col)`-sorted and coordinate-unique).
+#[derive(Debug, Default)]
+pub struct DeltaOverlay {
+    /// Collapsed edits of tile row `tr` at `ops_by_tr[tr]`.
+    pub ops_by_tr: Vec<Vec<DeltaOp>>,
+    /// Total edits across all tile rows.
+    pub n_ops: usize,
+}
+
+impl DeltaOverlay {
+    /// Bucket a collapsed, sorted edit list by tile row.
+    pub fn new(meta: &TiledMeta, ops: Vec<DeltaOp>) -> DeltaOverlay {
+        let mut ops_by_tr = vec![Vec::new(); meta.n_tile_rows()];
+        let n_ops = ops.len();
+        for op in ops {
+            ops_by_tr[op.row as usize / meta.tile].push(op);
+        }
+        DeltaOverlay { ops_by_tr, n_ops }
+    }
+
+    /// Whether any edit lands in tile rows `[lo, hi)`.
+    pub fn touches(&self, lo: usize, hi: usize) -> bool {
+        self.ops_by_tr[lo..hi].iter().any(|v| !v.is_empty())
+    }
+
+    /// Whether the overlay holds no edits at all.
+    pub fn is_empty(&self) -> bool {
+        self.n_ops == 0
+    }
+}
+
+fn decode_tile(bytes: &[u8], off: usize, meta: &TiledMeta) -> (u32, TileEntries, usize) {
+    match meta.format {
+        TileFormat::Scsr => {
+            let (view, next) = scsr::parse(bytes, off, meta.valtype);
+            (view.tile_col, scsr::decode(&view, meta.valtype), next)
+        }
+        TileFormat::Dcsc => {
+            let (view, next) = dcsc::parse(bytes, off, meta.valtype);
+            (view.tile_col, dcsc::decode(&view, meta.valtype), next)
+        }
+    }
+}
+
+/// Two-pointer merge of one tile's sorted base entries with its sorted
+/// edits. Upserts replace or insert; tombstones drop (a tombstone for an
+/// absent entry is a no-op). Values are kept only for F32 images.
+fn merge_entries(base: &TileEntries, ops: &[(u16, u16, bool, f32)], vt: ValueType) -> TileEntries {
+    let keep_vals = vt == ValueType::F32;
+    let mut out = TileEntries::default();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < base.coords.len() || j < ops.len() {
+        let take_base = match (base.coords.get(i), ops.get(j)) {
+            (Some(&bc), Some(&(or, oc, _, _))) => bc < (or, oc),
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if take_base {
+            out.coords.push(base.coords[i]);
+            if keep_vals {
+                out.vals.push(base.vals[i]);
+            }
+            i += 1;
+        } else {
+            let (or, oc, tomb, val) = ops[j];
+            let hit = base.coords.get(i) == Some(&(or, oc));
+            if !tomb {
+                out.coords.push((or, oc));
+                if keep_vals {
+                    out.vals.push(val);
+                }
+            }
+            if hit {
+                i += 1;
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Rewrite one base tile row under a sorted, coordinate-unique edit
+/// slice, appending the merged tile row to `out` in the image's
+/// canonical form: the exact bytes [`super::tiled::TiledImage::build`]
+/// emits for the mutated matrix. Returns the merged entry count (the
+/// tile row's contribution to the new `nnz`).
+pub fn merge_tile_row(
+    meta: &TiledMeta,
+    tr: usize,
+    base: &[u8],
+    ops: &[DeltaOp],
+    out: &mut Vec<u8>,
+) -> usize {
+    let t = meta.tile;
+    let row_lo = tr * t;
+    // Bucket edits by tile column, coordinates localized. Buckets keep
+    // the (row, col) order, which localizes to (local row, local col).
+    let mut buckets: BTreeMap<u32, Vec<(u16, u16, bool, f32)>> = BTreeMap::new();
+    for op in ops {
+        debug_assert_eq!(op.row as usize / t, tr, "edit outside its tile row");
+        let tc = op.col as usize / t;
+        buckets.entry(tc as u32).or_default().push((
+            (op.row as usize - row_lo) as u16,
+            (op.col as usize - tc * t) as u16,
+            op.tombstone,
+            op.val,
+        ));
+    }
+
+    let empty = TileEntries::default();
+    let mut nnz = 0usize;
+    let mut off = 0usize;
+    let mut pending = buckets.into_iter().peekable();
+    let mut emit = |tc: u32, e: &TileEntries, out: &mut Vec<u8>| {
+        nnz += e.nnz();
+        if e.nnz() == 0 {
+            return;
+        }
+        match meta.format {
+            TileFormat::Scsr => {
+                scsr::encode(tc, e, meta.valtype, out);
+            }
+            TileFormat::Dcsc => {
+                dcsc::encode(tc, e, meta.valtype, out);
+            }
+        }
+    };
+    while off < base.len() {
+        let (tc, entries, next) = decode_tile(base, off, meta);
+        off = next;
+        // Edit-only tiles left of this base tile come first.
+        while pending.peek().is_some_and(|&(ptc, _)| ptc < tc) {
+            let (ptc, pops) = pending.next().unwrap();
+            emit(ptc, &merge_entries(&empty, &pops, meta.valtype), out);
+        }
+        if pending.peek().is_some_and(|&(ptc, _)| ptc == tc) {
+            let (_, pops) = pending.next().unwrap();
+            emit(tc, &merge_entries(&entries, &pops, meta.valtype), out);
+        } else {
+            emit(tc, &entries, out);
+        }
+    }
+    for (ptc, pops) in pending {
+        emit(ptc, &merge_entries(&empty, &pops, meta.valtype), out);
+    }
+    nnz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::tiled::TiledImage;
+    use crate::format::Csr;
+    use crate::util::Xoshiro256;
+
+    fn sample_csr(weighted: bool, seed: u64) -> Csr {
+        let mut rng = Xoshiro256::new(seed);
+        let n = 300usize;
+        let mut pairs: Vec<(u32, u32)> = (0..2000)
+            .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32))
+            .collect();
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut m = Csr::from_sorted_pairs(n, n, &pairs);
+        if weighted {
+            m.vals = Some(pairs.iter().map(|_| rng.next_f32() + 0.5).collect());
+        }
+        m
+    }
+
+    fn mutate(m: &Csr, ops: &[DeltaOp]) -> Csr {
+        let mut map: BTreeMap<(u32, u32), f32> = BTreeMap::new();
+        let weighted = m.vals.is_some();
+        for r in 0..m.nrows {
+            for k in m.indptr[r] as usize..m.indptr[r + 1] as usize {
+                let v = m.vals.as_ref().map_or(1.0, |v| v[k]);
+                map.insert((r as u32, m.indices[k]), v);
+            }
+        }
+        for op in ops {
+            if op.tombstone {
+                map.remove(&(op.row, op.col));
+            } else {
+                map.insert((op.row, op.col), op.val);
+            }
+        }
+        let pairs: Vec<(u32, u32)> = map.keys().copied().collect();
+        let mut out = Csr::from_sorted_pairs(m.nrows, m.ncols, &pairs);
+        if weighted {
+            out.vals = Some(map.values().copied().collect());
+        }
+        out
+    }
+
+    fn sample_ops(m: &Csr, seed: u64, n: usize) -> Vec<DeltaOp> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut raw: Vec<DeltaOp> = Vec::new();
+        for _ in 0..n {
+            let row = rng.below(m.nrows as u64) as u32;
+            let col = rng.below(m.ncols as u64) as u32;
+            if rng.below(3) == 0 {
+                raw.push(DeltaOp::delete(row, col));
+            } else {
+                raw.push(DeltaOp::upsert(row, col, rng.next_f32() + 0.25));
+            }
+        }
+        collapse([raw.as_slice()])
+    }
+
+    #[test]
+    fn run_roundtrip() {
+        let m = sample_csr(true, 1);
+        let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+        let ops = sample_ops(&m, 2, 500);
+        let bytes = encode_run(&img.meta, 7, &ops);
+        let (rm, got) = decode_run(&bytes).unwrap();
+        assert_eq!(rm.seq, 7);
+        assert_eq!(rm.n_ops as usize, ops.len());
+        assert_eq!(rm.image.tile, 64);
+        assert_eq!(got, ops);
+        // The per-tile-row index tiles the data area exactly.
+        let ntr = img.meta.n_tile_rows();
+        let mut expect = 0u64;
+        for tr in 0..ntr {
+            let at = RUN_HEADER_LEN + tr * 16;
+            let off = u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+            let len = u64::from_le_bytes(bytes[at + 8..at + 16].try_into().unwrap());
+            assert_eq!(off, expect, "tile row {tr}");
+            expect += len;
+        }
+        assert_eq!(expect, (ops.len() * OP_BYTES) as u64);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_run(b"nope").is_err());
+        let m = sample_csr(false, 3);
+        let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+        let mut bytes = encode_run(&img.meta, 0, &sample_ops(&m, 4, 100));
+        bytes.truncate(bytes.len() - 5);
+        assert!(decode_run(&bytes).is_err());
+    }
+
+    #[test]
+    fn merge_is_canonical_per_tile_row() {
+        for (weighted, fmt) in [
+            (false, TileFormat::Scsr),
+            (true, TileFormat::Scsr),
+            (false, TileFormat::Dcsc),
+            (true, TileFormat::Dcsc),
+        ] {
+            let m = sample_csr(weighted, 11);
+            let img = TiledImage::build(&m, 64, fmt);
+            let ops = sample_ops(&m, 12, 600);
+            let want = TiledImage::build(&mutate(&m, &ops), 64, fmt);
+            let overlay = DeltaOverlay::new(&img.meta, ops);
+            let mut nnz = 0usize;
+            for tr in 0..img.meta.n_tile_rows() {
+                let mut merged = Vec::new();
+                nnz += merge_tile_row(
+                    &img.meta,
+                    tr,
+                    img.tile_row(tr),
+                    &overlay.ops_by_tr[tr],
+                    &mut merged,
+                );
+                assert_eq!(
+                    merged,
+                    want.tile_row(tr),
+                    "tile row {tr} weighted={weighted} {fmt:?}"
+                );
+            }
+            assert_eq!(nnz as u64, want.meta.nnz, "weighted={weighted} {fmt:?}");
+        }
+    }
+
+    #[test]
+    fn tombstone_for_absent_edge_is_a_noop_and_all_deleted_empties_the_row() {
+        let m = sample_csr(false, 21);
+        let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+        // Delete every edge of tile row 0 plus some absent coordinates.
+        let mut ops: Vec<DeltaOp> = Vec::new();
+        for r in 0..64usize.min(m.nrows) {
+            for k in m.indptr[r] as usize..m.indptr[r + 1] as usize {
+                ops.push(DeltaOp::delete(r as u32, m.indices[k]));
+            }
+            ops.push(DeltaOp::delete(r as u32, (m.ncols - 1) as u32));
+        }
+        let ops = collapse([ops.as_slice()]);
+        let mut merged = Vec::new();
+        let nnz = merge_tile_row(&img.meta, 0, img.tile_row(0), &ops, &mut merged);
+        assert_eq!(nnz, 0);
+        assert!(merged.is_empty(), "a fully deleted tile row encodes empty");
+    }
+
+    #[test]
+    fn collapse_is_newest_wins() {
+        let older = [
+            DeltaOp::upsert(1, 2, 1.0),
+            DeltaOp::upsert(3, 4, 1.0),
+            DeltaOp::delete(5, 6),
+        ];
+        let newer = [DeltaOp::delete(1, 2), DeltaOp::upsert(5, 6, 9.0)];
+        let got = collapse([older.as_slice(), newer.as_slice()]);
+        assert_eq!(
+            got,
+            vec![
+                DeltaOp::delete(1, 2),
+                DeltaOp::upsert(3, 4, 1.0),
+                DeltaOp::upsert(5, 6, 9.0),
+            ]
+        );
+    }
+}

@@ -12,9 +12,13 @@
 //!   `t × t` cache tiles grouped in tile rows, with a tile-row index so the
 //!   SEM engine can stream tile rows sequentially.
 //! * [`convert`] — CSR → tiled-image conversion (Table 2).
+//! * [`delta`] — sorted edge-update runs ("SEMD") and the canonical
+//!   base ⊕ delta tile-row merge behind the LSM update layer
+//!   ([`crate::io::delta`]).
 
 pub mod convert;
 pub mod dcsc;
+pub mod delta;
 pub mod scsr;
 pub mod tiled;
 

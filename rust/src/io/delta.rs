@@ -1,0 +1,670 @@
+//! The LSM edge-update layer over a [`ShardedStore`] dataset image.
+//!
+//! A frozen SEMM image stays the *base*; edits accumulate in a small
+//! in-memory buffer, commit into sorted on-store delta runs
+//! ([`crate::format::delta`], "SEMD"), and fold away in two tiers of
+//! compaction — classic log-structured-merge shape, sized for graphs
+//! whose base image dwarfs the update rate:
+//!
+//! ```text
+//! stage()            in-memory buffer (newest-wins per edge)
+//!   └─ commit()      one sorted run object  <name>.delta.<seq>.run
+//!        ├─ run compaction    k runs → 1 run          (read runs only)
+//!        └─ major compaction  base ⊕ runs → new base  (read base once)
+//! ```
+//!
+//! A tiny text *manifest* (`<name>.delta.manifest`) names the current
+//! base object, its version, and the live run sequence — one `put`
+//! swaps a whole dataset version, so readers opened before a swap keep
+//! streaming their (still intact) old base while new opens see the new
+//! one: non-stop-the-world refresh. Every mutating entry point first
+//! garbage-collects objects the manifest does not reference, which is
+//! exactly how an aborted compaction's partial output gets reclaimed on
+//! the next attempt.
+//!
+//! Major compaction re-encodes each touched tile row with the canonical
+//! [`crate::format::delta::merge_tile_row`], so the new base is
+//! byte-identical to a from-scratch reconversion of the mutated matrix
+//! — compaction can never perturb sweep results, bit for bit.
+
+use crate::format::delta::{collapse, decode_run, encode_run, DeltaOp, DeltaOverlay};
+use crate::format::tiled::{TiledMeta, HEADER_LEN};
+use crate::io::{MergedWriter, ShardedStore};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Write-merge window for run/base rewrites (matches the other bulk
+/// writers in the tree).
+const MERGE_WINDOW: usize = 4 << 20;
+
+/// Tuning knobs (see `config.delta_config()` for the config-file keys).
+#[derive(Debug, Clone)]
+pub struct DeltaConfig {
+    /// Staged-edit bytes that force an automatic commit.
+    pub buffer_bytes: u64,
+    /// Live run count that triggers run compaction (k runs → 1).
+    pub compact_runs: usize,
+    /// Delta-to-base size ratio that triggers major compaction.
+    pub major_compact_ratio: f64,
+}
+
+impl Default for DeltaConfig {
+    fn default() -> Self {
+        DeltaConfig {
+            buffer_bytes: 64 << 20,
+            compact_runs: 4,
+            major_compact_ratio: 0.2,
+        }
+    }
+}
+
+/// The versioned state of one dataset's delta layer: which object is
+/// the current base and which runs are live. Stored as a tiny text
+/// object whose single-`put` rewrite is the version-swap point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Store object holding the current base image.
+    pub base: String,
+    /// Base version (0 = the original converted image).
+    pub base_version: u64,
+    /// Next unused run sequence number.
+    pub next_seq: u64,
+    /// Live run sequence numbers, oldest first (apply order).
+    pub runs: Vec<u64>,
+}
+
+impl Manifest {
+    /// Manifest object name for dataset image `name`.
+    pub fn object(name: &str) -> String {
+        format!("{name}.delta.manifest")
+    }
+
+    /// Run object name for `(name, seq)`.
+    pub fn run_object(name: &str, seq: u64) -> String {
+        format!("{name}.delta.{seq}.run")
+    }
+
+    /// Base object name for `(name, version)`; version 0 is the
+    /// original image itself.
+    pub fn base_object(name: &str, version: u64) -> String {
+        if version == 0 {
+            name.to_string()
+        } else {
+            format!("{name}.base.v{version}.semm")
+        }
+    }
+
+    /// Load the manifest, or the implicit "no edits yet" state when
+    /// none has been written.
+    pub fn load(store: &Arc<ShardedStore>, name: &str) -> Result<Manifest> {
+        let obj = Self::object(name);
+        if !store.exists(&obj) {
+            return Ok(Manifest {
+                base: name.to_string(),
+                base_version: 0,
+                next_seq: 0,
+                runs: Vec::new(),
+            });
+        }
+        let text = String::from_utf8(store.get(&obj)?).context("delta manifest is not UTF-8")?;
+        let mut lines = text.lines();
+        if lines.next() != Some("semdelta v1") {
+            bail!("bad delta manifest header for {name}");
+        }
+        let mut man = Manifest {
+            base: name.to_string(),
+            base_version: 0,
+            next_seq: 0,
+            runs: Vec::new(),
+        };
+        for line in lines {
+            let mut it = line.splitn(2, ' ');
+            let (key, val) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            match key {
+                "base" => man.base = val.to_string(),
+                "base_version" => man.base_version = val.parse()?,
+                "next_seq" => man.next_seq = val.parse()?,
+                "run" => man.runs.push(val.parse()?),
+                "" => {}
+                other => bail!("unknown delta manifest key '{other}'"),
+            }
+        }
+        Ok(man)
+    }
+
+    /// Persist the manifest — the atomic version-swap point.
+    pub fn store(&self, store: &Arc<ShardedStore>, name: &str) -> Result<()> {
+        let mut text = String::from("semdelta v1\n");
+        text.push_str(&format!("base {}\n", self.base));
+        text.push_str(&format!("base_version {}\n", self.base_version));
+        text.push_str(&format!("next_seq {}\n", self.next_seq));
+        for seq in &self.runs {
+            text.push_str(&format!("run {seq}\n"));
+        }
+        store.put(&Self::object(name), text.as_bytes())
+    }
+
+    /// A short token naming this dataset version (base version + newest
+    /// run) — distinct tokens mean sweeps may see different matrices.
+    pub fn version_token(&self) -> String {
+        format!(
+            "v{}r{}",
+            self.base_version,
+            self.runs.last().map(|s| s + 1).unwrap_or(0)
+        )
+    }
+}
+
+/// Load a dataset's manifest and its runs collapsed into one sorted,
+/// newest-wins edit list (what a [`crate::spmm::DeltaSource`] overlays).
+pub fn load_state(store: &Arc<ShardedStore>, name: &str) -> Result<(Manifest, Vec<DeltaOp>)> {
+    let man = Manifest::load(store, name)?;
+    let mut runs: Vec<Vec<DeltaOp>> = Vec::with_capacity(man.runs.len());
+    for &seq in &man.runs {
+        let bytes = store.get(&Manifest::run_object(name, seq))?;
+        let (_, ops) = decode_run(&bytes)?;
+        runs.push(ops);
+    }
+    Ok((man, collapse(runs.iter().map(|v| v.as_slice()))))
+}
+
+/// What one [`DeltaStore::commit`] did.
+#[derive(Debug, Clone, Default)]
+pub struct CommitReport {
+    /// Sequence of the run this commit wrote (`None` = nothing staged).
+    pub seq: Option<u64>,
+    /// Edits in the written run.
+    pub ops: usize,
+    /// Live runs after the commit and any compaction it triggered.
+    pub runs: usize,
+    /// Base version after the commit.
+    pub base_version: u64,
+    /// Whether the commit triggered a major compaction.
+    pub major_compacted: bool,
+}
+
+/// The write side of one dataset's delta layer: an in-memory staging
+/// buffer plus the commit/compact/GC state machine over the store.
+/// Cheap to construct; all state of record lives in the manifest.
+pub struct DeltaStore {
+    store: Arc<ShardedStore>,
+    name: String,
+    cfg: DeltaConfig,
+    meta: TiledMeta,
+    buf: Mutex<BTreeMap<(u32, u32), DeltaOp>>,
+}
+
+impl DeltaStore {
+    /// Open the delta layer of image object `name` (which must exist).
+    pub fn open(store: &Arc<ShardedStore>, name: &str, cfg: DeltaConfig) -> Result<DeltaStore> {
+        let man = Manifest::load(store, name)?;
+        let mut hdr = vec![0u8; HEADER_LEN];
+        store
+            .open_file(&man.base)
+            .with_context(|| format!("delta base image {} missing", man.base))?
+            .read_at(0, &mut hdr)?;
+        let meta = TiledMeta::from_bytes(&hdr)?;
+        Ok(DeltaStore {
+            store: store.clone(),
+            name: name.to_string(),
+            cfg,
+            meta,
+            buf: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Shape/encoding of the dataset (constant across versions).
+    pub fn meta(&self) -> &TiledMeta {
+        &self.meta
+    }
+
+    /// Image object name this layer updates.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Stage one edit (newest-wins per edge). Auto-commits when the
+    /// staged bytes exceed the configured buffer; returns the staged
+    /// count afterwards.
+    pub fn stage(&self, op: DeltaOp) -> Result<usize> {
+        if (op.row as usize) >= self.meta.nrows || (op.col as usize) >= self.meta.ncols {
+            bail!(
+                "edit ({}, {}) outside the {}×{} matrix",
+                op.row,
+                op.col,
+                self.meta.nrows,
+                self.meta.ncols
+            );
+        }
+        let staged = {
+            let mut buf = self.buf.lock().unwrap();
+            buf.insert((op.row, op.col), op);
+            buf.len()
+        };
+        if (staged * crate::format::delta::OP_BYTES) as u64 >= self.cfg.buffer_bytes {
+            self.commit()?;
+            return Ok(0);
+        }
+        Ok(staged)
+    }
+
+    /// Edits currently staged in memory.
+    pub fn staged(&self) -> usize {
+        self.buf.lock().unwrap().len()
+    }
+
+    /// Flush the staging buffer as one sorted run, then apply the
+    /// compaction triggers. Starts with a GC pass so any partial
+    /// objects an aborted earlier attempt left behind are reclaimed.
+    pub fn commit(&self) -> Result<CommitReport> {
+        self.gc()?;
+        let ops: Vec<DeltaOp> = {
+            let mut buf = self.buf.lock().unwrap();
+            std::mem::take(&mut *buf).into_values().collect()
+        };
+        let mut report = CommitReport::default();
+        if !ops.is_empty() {
+            let mut man = Manifest::load(&self.store, &self.name)?;
+            let seq = man.next_seq;
+            let bytes = encode_run(&self.meta, seq, &ops);
+            let w = MergedWriter::new(
+                self.store.create_file(&Manifest::run_object(&self.name, seq))?,
+                MERGE_WINDOW,
+            );
+            w.write(0, bytes);
+            w.finish()?;
+            // The run is durable; now publish it.
+            man.runs.push(seq);
+            man.next_seq = seq + 1;
+            man.store(&self.store, &self.name)?;
+            report.seq = Some(seq);
+            report.ops = ops.len();
+        }
+        let man = Manifest::load(&self.store, &self.name)?;
+        if man.runs.len() >= self.cfg.compact_runs.max(2) {
+            self.compact_runs()?;
+        }
+        if !man.runs.is_empty() && self.delta_bytes()? as f64
+            >= self.cfg.major_compact_ratio * self.base_bytes()? as f64
+        {
+            report.major_compacted = self.major_compact()?;
+        }
+        let man = Manifest::load(&self.store, &self.name)?;
+        report.runs = man.runs.len();
+        report.base_version = man.base_version;
+        Ok(report)
+    }
+
+    /// Fold all live runs into one (newest-wins), shrinking the read
+    /// amplification of every subsequent sweep. Returns whether
+    /// anything was folded.
+    pub fn compact_runs(&self) -> Result<bool> {
+        self.gc()?;
+        let mut man = Manifest::load(&self.store, &self.name)?;
+        if man.runs.len() < 2 {
+            return Ok(false);
+        }
+        let (_, ops) = load_state(&self.store, &self.name)?;
+        let seq = man.next_seq;
+        let bytes = encode_run(&self.meta, seq, &ops);
+        let w = MergedWriter::new(
+            self.store.create_file(&Manifest::run_object(&self.name, seq))?,
+            MERGE_WINDOW,
+        );
+        w.write(0, bytes);
+        w.finish()?;
+        let old = std::mem::replace(&mut man.runs, vec![seq]);
+        man.next_seq = seq + 1;
+        man.store(&self.store, &self.name)?;
+        for s in old {
+            self.store.remove(&Manifest::run_object(&self.name, s))?;
+        }
+        Ok(true)
+    }
+
+    /// Fold base ⊕ runs into a new canonical base image and swap the
+    /// manifest to it — the version step. The old base is untouched
+    /// until the swap succeeds, so readers of the previous version
+    /// stream on undisturbed; a failure before the swap leaves the
+    /// previous version current and the partial new base to GC.
+    pub fn major_compact(&self) -> Result<bool> {
+        self.gc()?;
+        let man = Manifest::load(&self.store, &self.name)?;
+        if man.runs.is_empty() {
+            return Ok(false);
+        }
+        let (_, ops) = load_state(&self.store, &self.name)?;
+        let overlay = DeltaOverlay::new(&self.meta, ops);
+
+        let base = self.store.open_file(&man.base)?;
+        let ntr = self.meta.n_tile_rows();
+        let mut idx = vec![0u8; ntr * 16];
+        base.read_at(HEADER_LEN as u64, &mut idx)?;
+        let index: Vec<(u64, u64)> = (0..ntr)
+            .map(|tr| {
+                (
+                    u64::from_le_bytes(idx[tr * 16..tr * 16 + 8].try_into().unwrap()),
+                    u64::from_le_bytes(idx[tr * 16 + 8..tr * 16 + 16].try_into().unwrap()),
+                )
+            })
+            .collect();
+        let data_start = (HEADER_LEN + ntr * 16) as u64;
+
+        let version = man.base_version + 1;
+        let new_obj = Manifest::base_object(&self.name, version);
+        let w = MergedWriter::new(self.store.create_file(&new_obj)?, MERGE_WINDOW);
+        let mut new_index = Vec::with_capacity(ntr);
+        let mut cursor = 0u64;
+        let mut nnz = 0u64;
+        let mut rowbuf = Vec::new();
+        for tr in 0..ntr {
+            let (off, len) = index[tr];
+            rowbuf.resize(len as usize, 0);
+            base.read_at(data_start + off, &mut rowbuf)?;
+            let out = if overlay.ops_by_tr[tr].is_empty() {
+                nnz += count_nnz(&rowbuf, &self.meta);
+                rowbuf.clone()
+            } else {
+                let mut merged = Vec::new();
+                nnz += crate::format::delta::merge_tile_row(
+                    &self.meta,
+                    tr,
+                    &rowbuf,
+                    &overlay.ops_by_tr[tr],
+                    &mut merged,
+                ) as u64;
+                merged
+            };
+            new_index.push((cursor, out.len() as u64));
+            if !out.is_empty() {
+                w.write(data_start + cursor, out);
+            }
+            cursor += new_index[tr].1;
+        }
+        let mut head = Vec::with_capacity(HEADER_LEN + ntr * 16);
+        let meta = TiledMeta { nnz, ..self.meta.clone() };
+        head.extend_from_slice(&meta.to_bytes());
+        for &(off, len) in &new_index {
+            head.extend_from_slice(&off.to_le_bytes());
+            head.extend_from_slice(&len.to_le_bytes());
+        }
+        w.write(0, head);
+        w.finish()?;
+
+        // Publish the new version, then reclaim the superseded objects.
+        let swapped = Manifest {
+            base: new_obj,
+            base_version: version,
+            next_seq: man.next_seq,
+            runs: Vec::new(),
+        };
+        swapped.store(&self.store, &self.name)?;
+        for s in &man.runs {
+            self.store.remove(&Manifest::run_object(&self.name, *s))?;
+        }
+        if man.base_version > 0 {
+            // Never remove version 0: it is the catalog's converted
+            // image, which `Catalog::ensure` would otherwise rebuild.
+            self.store.remove(&man.base)?;
+        }
+        Ok(true)
+    }
+
+    /// Remove run/base objects the manifest does not reference — the
+    /// debris of compactions that died between write and swap. Returns
+    /// how many objects were reclaimed.
+    pub fn gc(&self) -> Result<u64> {
+        let man = Manifest::load(&self.store, &self.name)?;
+        let mut removed = 0u64;
+        for seq in 0..=man.next_seq {
+            let obj = Manifest::run_object(&self.name, seq);
+            if !man.runs.contains(&seq) && self.store.exists(&obj) {
+                self.store.remove(&obj)?;
+                removed += 1;
+            }
+        }
+        for v in man.base_version + 1..=man.base_version + 2 {
+            let obj = Manifest::base_object(&self.name, v);
+            if self.store.exists(&obj) {
+                self.store.remove(&obj)?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Bytes across all live run objects.
+    pub fn delta_bytes(&self) -> Result<u64> {
+        let man = Manifest::load(&self.store, &self.name)?;
+        let mut total = 0;
+        for &seq in &man.runs {
+            total += self.store.size_of(&Manifest::run_object(&self.name, seq))?;
+        }
+        Ok(total)
+    }
+
+    /// Bytes of the current base image.
+    pub fn base_bytes(&self) -> Result<u64> {
+        let man = Manifest::load(&self.store, &self.name)?;
+        self.store.size_of(&man.base)
+    }
+
+    /// The current manifest.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.store, &self.name)
+    }
+}
+
+/// Sum the `nnz` fields of the encoded tiles in one tile row (each tile
+/// header carries its count at offset 4, for both SCSR and DCSC).
+fn count_nnz(row: &[u8], meta: &TiledMeta) -> u64 {
+    let mut off = 0usize;
+    let mut nnz = 0u64;
+    while off < row.len() {
+        match meta.format {
+            crate::format::TileFormat::Scsr => {
+                let (v, next) = crate::format::scsr::parse(row, off, meta.valtype);
+                nnz += v.nnz as u64;
+                off = next;
+            }
+            crate::format::TileFormat::Dcsc => {
+                let (v, next) = crate::format::dcsc::parse(row, off, meta.valtype);
+                nnz += v.nnz as u64;
+                off = next;
+            }
+        }
+    }
+    nnz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::tiled::TiledImage;
+    use crate::format::{Csr, TileFormat};
+    use crate::graph::rmat;
+    use crate::io::StoreSpec;
+
+    fn setup(weighted: bool) -> (crate::util::TempDir, Arc<ShardedStore>, TiledImage) {
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let el = rmat::generate(8, 1800, rmat::RmatParams::default(), 99);
+        let mut m = Csr::from_edgelist(&el);
+        if weighted {
+            m.vals = Some((0..m.nnz()).map(|k| 0.5 + (k % 7) as f32).collect());
+        }
+        let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("g.semm", &buf).unwrap();
+        (dir, store, img)
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_implicit_default() {
+        let (_d, store, _) = setup(false);
+        let man = Manifest::load(&store, "g.semm").unwrap();
+        assert_eq!(man.base, "g.semm");
+        assert_eq!(man.version_token(), "v0r0");
+        let man2 = Manifest {
+            base: "g.semm.base.v3.semm".into(),
+            base_version: 3,
+            next_seq: 9,
+            runs: vec![5, 8],
+        };
+        man2.store(&store, "g.semm").unwrap();
+        assert_eq!(Manifest::load(&store, "g.semm").unwrap(), man2);
+        assert_eq!(man2.version_token(), "v3r9");
+    }
+
+    #[test]
+    fn stage_commit_writes_one_sorted_run_and_updates_manifest() {
+        let (_d, store, img) = setup(false);
+        let ds = DeltaStore::open(&store, "g.semm", DeltaConfig::default()).unwrap();
+        assert_eq!(ds.meta(), &img.meta);
+        ds.stage(DeltaOp::upsert(5, 9, 1.0)).unwrap();
+        ds.stage(DeltaOp::delete(1, 2)).unwrap();
+        ds.stage(DeltaOp::upsert(5, 9, 2.0)).unwrap(); // overwrites in place
+        assert_eq!(ds.staged(), 2);
+        let r = ds.commit().unwrap();
+        assert_eq!(r.seq, Some(0));
+        assert_eq!(r.ops, 2);
+        assert_eq!(ds.staged(), 0);
+        let man = ds.manifest().unwrap();
+        assert_eq!(man.runs, vec![0]);
+        assert_eq!(man.next_seq, 1);
+        let (_, ops) = load_state(&store, "g.semm").unwrap();
+        assert_eq!(ops, vec![DeltaOp::delete(1, 2), DeltaOp::upsert(5, 9, 2.0)]);
+        // An empty commit is a no-op.
+        let r2 = ds.commit().unwrap();
+        assert_eq!(r2.seq, None);
+        assert_eq!(ds.manifest().unwrap().runs, vec![0]);
+    }
+
+    #[test]
+    fn stage_rejects_out_of_range_edits() {
+        let (_d, store, img) = setup(false);
+        let ds = DeltaStore::open(&store, "g.semm", DeltaConfig::default()).unwrap();
+        let n = img.meta.nrows as u32;
+        assert!(ds.stage(DeltaOp::upsert(n, 0, 1.0)).is_err());
+        assert!(ds.stage(DeltaOp::delete(0, n)).is_err());
+        assert_eq!(ds.staged(), 0);
+    }
+
+    #[test]
+    fn buffer_budget_forces_auto_commit() {
+        let (_d, store, _) = setup(false);
+        let cfg = DeltaConfig {
+            buffer_bytes: 10 * crate::format::delta::OP_BYTES as u64,
+            compact_runs: usize::MAX,
+            major_compact_ratio: f64::INFINITY,
+        };
+        let ds = DeltaStore::open(&store, "g.semm", cfg).unwrap();
+        for k in 0..25u32 {
+            ds.stage(DeltaOp::upsert(k, k, 1.0)).unwrap();
+        }
+        let man = ds.manifest().unwrap();
+        assert_eq!(man.runs.len(), 2, "two buffer fills auto-committed");
+        assert!(ds.staged() < 10);
+    }
+
+    #[test]
+    fn run_compaction_folds_newest_wins_and_removes_old_runs() {
+        let (_d, store, _) = setup(false);
+        let cfg = DeltaConfig {
+            compact_runs: usize::MAX,
+            major_compact_ratio: f64::INFINITY,
+            ..Default::default()
+        };
+        let ds = DeltaStore::open(&store, "g.semm", cfg).unwrap();
+        ds.stage(DeltaOp::upsert(3, 4, 1.0)).unwrap();
+        ds.commit().unwrap();
+        ds.stage(DeltaOp::delete(3, 4)).unwrap();
+        ds.stage(DeltaOp::upsert(7, 7, 5.0)).unwrap();
+        ds.commit().unwrap();
+        assert_eq!(ds.manifest().unwrap().runs, vec![0, 1]);
+        assert!(ds.compact_runs().unwrap());
+        let man = ds.manifest().unwrap();
+        assert_eq!(man.runs, vec![2]);
+        assert!(!store.exists(&Manifest::run_object("g.semm", 0)));
+        assert!(!store.exists(&Manifest::run_object("g.semm", 1)));
+        let (_, ops) = load_state(&store, "g.semm").unwrap();
+        assert_eq!(ops, vec![DeltaOp::delete(3, 4), DeltaOp::upsert(7, 7, 5.0)]);
+        // Idempotent: a second pass with one run is a no-op.
+        assert!(!ds.compact_runs().unwrap());
+        assert_eq!(ds.manifest().unwrap().runs, vec![2]);
+    }
+
+    #[test]
+    fn major_compaction_writes_canonical_base_and_swaps() {
+        for weighted in [false, true] {
+            let (_d, store, img) = setup(weighted);
+            let ds = DeltaStore::open(&store, "g.semm", DeltaConfig::default()).unwrap();
+            let n = img.meta.nrows as u32;
+            let mut edits = Vec::new();
+            for k in 0..200u32 {
+                let (r, c) = ((k * 7) % n, (k * 13) % n);
+                let op = if k % 3 == 0 {
+                    DeltaOp::delete(r, c)
+                } else {
+                    DeltaOp::upsert(r, c, 1.5 + k as f32)
+                };
+                ds.stage(op).unwrap();
+                edits.push(op);
+            }
+            ds.commit().unwrap();
+            let (_, collapsed) = load_state(&store, "g.semm").unwrap();
+            assert!(ds.major_compact().unwrap());
+            let man = ds.manifest().unwrap();
+            assert_eq!(man.base_version, 1);
+            assert!(man.runs.is_empty());
+            assert!(store.exists("g.semm"), "version 0 stays for the catalog");
+
+            // The swapped base must be byte-identical to reconversion.
+            let (coords, vals) = crate::format::tiled::decode_all(&img);
+            assert_eq!(coords.len() as u64, img.meta.nnz);
+            let mut map: BTreeMap<(u32, u32), f32> = BTreeMap::new();
+            for (i, &(r, c)) in coords.iter().enumerate() {
+                map.insert((r, c), if weighted { vals[i] } else { 1.0 });
+            }
+            for op in &collapsed {
+                if op.tombstone {
+                    map.remove(&(op.row, op.col));
+                } else {
+                    map.insert((op.row, op.col), if weighted { op.val } else { 1.0 });
+                }
+            }
+            let pairs: Vec<(u32, u32)> = map.keys().copied().collect();
+            let mut m = Csr::from_sorted_pairs(img.meta.nrows, img.meta.ncols, &pairs);
+            if weighted {
+                m.vals = Some(map.values().copied().collect());
+            }
+            let want = TiledImage::build(&m, img.meta.tile, img.meta.format);
+            let mut wbytes = Vec::new();
+            want.write_to(&mut wbytes).unwrap();
+            let got = store.read_object_unmetered(&man.base).unwrap();
+            assert_eq!(got, wbytes, "weighted={weighted}");
+        }
+    }
+
+    #[test]
+    fn gc_reclaims_orphan_runs_and_partial_bases() {
+        let (_d, store, _) = setup(false);
+        let ds = DeltaStore::open(&store, "g.semm", DeltaConfig::default()).unwrap();
+        ds.stage(DeltaOp::upsert(1, 1, 1.0)).unwrap();
+        ds.commit().unwrap();
+        // Simulate aborted attempts: an unpublished run and a partial
+        // next-version base.
+        store
+            .put(&Manifest::run_object("g.semm", 1), b"partial run")
+            .unwrap();
+        store
+            .put(&Manifest::base_object("g.semm", 1), b"partial base")
+            .unwrap();
+        assert_eq!(ds.gc().unwrap(), 2);
+        assert!(!store.exists(&Manifest::run_object("g.semm", 1)));
+        assert!(!store.exists(&Manifest::base_object("g.semm", 1)));
+        assert!(store.exists(&Manifest::run_object("g.semm", 0)), "live run kept");
+    }
+}

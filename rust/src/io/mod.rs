@@ -37,8 +37,13 @@
 //! * [`writer`] — merged, sequential, asynchronous writes of the output
 //!   matrix (§3.4), striped: one writer thread per shard merges locally
 //!   adjacent extents so every device sees large sequential writes.
+//! * [`delta`] — the LSM edge-update layer: staged edits commit into
+//!   sorted delta runs on the store, fold through run and major
+//!   compaction, and swap dataset versions through a tiny manifest —
+//!   live graphs without stopping the sweeps.
 
 pub mod cache;
+pub mod delta;
 pub mod engine;
 pub mod pool;
 pub mod sharded;
@@ -46,6 +51,7 @@ pub mod store;
 pub mod writer;
 
 pub use cache::{CacheUsage, FillGuard, FillPlan, GroupFetch, TileRowCache};
+pub use delta::{CommitReport, DeltaConfig, DeltaStore, Manifest};
 pub use engine::{IoEngine, IoTicket};
 pub use pool::BufferPool;
 pub use sharded::{ShardedFile, ShardedStore, StoreSpec, DEFAULT_STRIPE_BYTES};

@@ -15,6 +15,9 @@
 //!   cc      <dataset>                 connected components (min-label)
 //!   spgemm  <dataset> [triangles]     out-of-core A·A (+ triangle count)
 //!   convert <dataset>                 CSR→SCSR conversion timing (Table 2)
+//!   update  <dataset> <edit>...       stage + commit edge edits into the
+//!                                     delta layer; each edit is
+//!                                     add:<src>:<dst>[:w] or del:<src>:<dst>
 //!   serve   <addr>                    request-service loop (TCP)
 //!   datasets                          list registry datasets
 //! ```
@@ -28,6 +31,7 @@ use sem_spmm::apps::{bfs, eigen, labelprop, nmf, pagerank, sssp};
 use sem_spmm::spmm::spgemm;
 use sem_spmm::config::Config;
 use sem_spmm::coordinator::{service::Service, Catalog};
+use sem_spmm::format::delta::DeltaOp;
 use sem_spmm::graph::registry;
 use sem_spmm::io::ShardedStore;
 use sem_spmm::runtime;
@@ -78,7 +82,7 @@ fn run() -> Result<()> {
     };
     if cmd == "--help" || cmd == "help" {
         println!(
-            "commands: info spmv spmm pagerank eigen nmf bfs sssp cc spgemm convert serve datasets"
+            "commands: info spmv spmm pagerank eigen nmf bfs sssp cc spgemm convert update serve datasets"
         );
         return Ok(());
     }
@@ -121,6 +125,7 @@ fn run() -> Result<()> {
         "cc" => cmd_cc(&ctx, &args[1..]),
         "spgemm" => cmd_spgemm(&ctx, &args[1..]),
         "convert" => cmd_convert(&ctx, &args[1..]),
+        "update" => cmd_update(&ctx, &args[1..]),
         "serve" => cmd_serve(&ctx, &args[1..]),
         other => bail!("unknown command '{other}'"),
     }
@@ -153,7 +158,7 @@ fn cmd_info(ctx: &Ctx, args: &[String]) -> Result<()> {
 fn cmd_spmv(ctx: &Ctx, args: &[String]) -> Result<()> {
     let name = args.first().context("spmv <dataset>")?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
-    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let src = ctx.catalog.open_adj_current(&imgs)?;
     let x = vec![1f32; imgs.num_verts];
     let opts = ctx.cfg.spmm_opts()?;
     let (y, stats) = engine::spmv(&src, &x, &opts)?;
@@ -171,7 +176,7 @@ fn cmd_spmm(ctx: &Ctx, args: &[String]) -> Result<()> {
     let name = args.first().context("spmm <dataset> <cols>")?;
     let p: usize = args.get(1).context("spmm <dataset> <cols>")?.parse()?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
-    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let src = ctx.catalog.open_adj_current(&imgs)?;
     let x = sem_spmm::matrix::DenseMatrix::random(imgs.num_verts, p, 1);
     let opts = ctx.cfg.spmm_opts()?;
     let (_, stats) = engine::spmm_out(&src, &x, &opts)?;
@@ -189,7 +194,7 @@ fn cmd_pagerank(ctx: &Ctx, args: &[String]) -> Result<()> {
     let iters: usize = args.get(1).map(|s| s.parse()).unwrap_or(Ok(30))?;
     let vecs: usize = args.get(2).map(|s| s.parse()).unwrap_or(Ok(3))?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
-    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let src = ctx.catalog.open_adj_current(&imgs)?;
     let cfg = pagerank::PageRankConfig {
         iterations: iters,
         vecs_in_mem: vecs,
@@ -244,7 +249,7 @@ fn cmd_eigen(ctx: &Ctx, args: &[String]) -> Result<()> {
     let mut spec = dataset_spec(ctx, name)?;
     spec.directed = false; // eigensolver needs a symmetric matrix
     let imgs = ctx.catalog.ensure(&spec)?;
-    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let src = ctx.catalog.open_adj_current(&imgs)?;
     let cfg = eigen::EigenConfig {
         nev,
         block: 4,
@@ -275,7 +280,7 @@ fn cmd_nmf(ctx: &Ctx, args: &[String]) -> Result<()> {
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
     // One stored image of A only — the fused pass computes Aᵀ·W from the
     // same sweep, so no transpose image is ever materialized.
-    let a = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let a = ctx.catalog.open_adj_current(&imgs)?;
     let cfg = nmf::NmfConfig {
         k,
         iterations: iters,
@@ -309,7 +314,7 @@ fn cmd_bfs(ctx: &Ctx, args: &[String]) -> Result<()> {
     let name = args.first().context("bfs <dataset> [root]")?;
     let root: u32 = args.get(1).map(|s| s.parse()).unwrap_or(Ok(0))?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
-    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let src = ctx.catalog.open_adj_current(&imgs)?;
     let cfg = bfs::BfsConfig {
         max_levels: ctx.cfg.bfs_max_levels()?,
         spmm: ctx.cfg.spmm_opts()?,
@@ -333,7 +338,7 @@ fn cmd_sssp(ctx: &Ctx, args: &[String]) -> Result<()> {
     let name = args.first().context("sssp <dataset> [root]")?;
     let root: u32 = args.get(1).map(|s| s.parse()).unwrap_or(Ok(0))?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
-    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let src = ctx.catalog.open_adj_current(&imgs)?;
     let cfg = sssp::SsspConfig {
         max_iters: ctx.cfg.sssp_max_iters()?,
         spmm: ctx.cfg.spmm_opts()?,
@@ -363,7 +368,7 @@ fn cmd_cc(ctx: &Ctx, args: &[String]) -> Result<()> {
     let mut spec = dataset_spec(ctx, name)?;
     spec.directed = false; // components are defined on the undirected graph
     let imgs = ctx.catalog.ensure(&spec)?;
-    let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
+    let src = ctx.catalog.open_adj_current(&imgs)?;
     let cfg = labelprop::LabelPropConfig {
         max_iters: ctx.cfg.cc_max_iters()?,
         spmm: ctx.cfg.spmm_opts()?,
@@ -397,6 +402,8 @@ fn cmd_spgemm(ctx: &Ctx, args: &[String]) -> Result<()> {
         spec.directed = false; // triangle counting needs a symmetric A
     }
     let imgs = ctx.catalog.ensure(&spec)?;
+    // Base image on both sides: B below is read from the stored object,
+    // so A must stream the same (base) version for a consistent A·A.
     let src = Source::Sem(ctx.catalog.open_adj(&imgs)?);
     // B = A held tile-row-at-a-time in memory (the out-of-core SpGEMM
     // contract); A itself streams from the store.
@@ -450,6 +457,46 @@ fn cmd_convert(ctx: &Ctx, args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_update(ctx: &Ctx, args: &[String]) -> Result<()> {
+    let usage = "update <dataset> <add:src:dst[:w] | del:src:dst>...";
+    let name = args.first().context(usage)?;
+    let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    let delta = ctx.catalog.delta(&imgs, ctx.cfg.delta_config()?)?;
+    let edits = &args[1..];
+    if edits.is_empty() {
+        bail!("update: no edits; {usage}");
+    }
+    for e in edits {
+        let f: Vec<&str> = e.split(':').collect();
+        // Store convention: (row, col) = (dst, src).
+        let op = match f.as_slice() {
+            ["add", s, d] => DeltaOp::upsert(d.parse()?, s.parse()?, 1.0),
+            ["add", s, d, w] => DeltaOp::upsert(d.parse()?, s.parse()?, w.parse()?),
+            ["del", s, d] => DeltaOp::delete(d.parse()?, s.parse()?),
+            _ => bail!("update: bad edit '{e}'; {usage}"),
+        };
+        delta.stage(op)?;
+    }
+    let rep = delta.commit()?;
+    println!(
+        "update {name}: {} edit{} staged, committed {} op{} (run {}), {} live run{}, base v{}{}",
+        edits.len(),
+        if edits.len() == 1 { "" } else { "s" },
+        rep.ops,
+        if rep.ops == 1 { "" } else { "s" },
+        rep.seq.map_or("-".to_string(), |s| s.to_string()),
+        rep.runs,
+        if rep.runs == 1 { "" } else { "s" },
+        rep.base_version,
+        if rep.major_compacted {
+            " (major compaction folded the edits into a new base)"
+        } else {
+            ""
+        }
+    );
+    Ok(())
+}
+
 fn cmd_serve(ctx: &Ctx, args: &[String]) -> Result<()> {
     let addr = args
         .first()
@@ -458,10 +505,11 @@ fn cmd_serve(ctx: &Ctx, args: &[String]) -> Result<()> {
     // Concurrent SPMV/SPMM requests against one dataset coalesce into
     // shared sweeps (`serve.batch_max` / `serve.batch_linger_ms` keys;
     // batch_max=1 restores strict per-request engine calls).
-    let svc = Service::with_batch(
+    let mut svc = Service::with_batch(
         ctx.catalog.clone(),
         ctx.cfg.spmm_opts()?,
         ctx.cfg.batch_config()?,
     )?;
+    svc.delta_cfg = ctx.cfg.delta_config()?;
     svc.serve(addr)
 }

@@ -101,6 +101,48 @@ impl SemSource {
     }
 }
 
+/// A [`SemSource`] with a resident edit overlay from the LSM delta
+/// layer ([`crate::io::delta`]): every sweep merges overlapping
+/// collapsed edits into the streamed base tile rows *after* fetch (and
+/// after any cache fill, which stays pure base bytes), re-encoding the
+/// touched tile rows in the image's canonical form. The merged view is
+/// byte-identical per tile row to a full reconversion of the mutated
+/// matrix, so `StreamPass<S>` output is bit-identical in every semiring
+/// while the base image on the store never changes.
+#[derive(Clone)]
+pub struct DeltaSource {
+    /// The frozen base image of the current dataset version.
+    pub base: SemSource,
+    /// Collapsed, tile-row-bucketed edits from all live delta runs.
+    pub overlay: Arc<crate::format::delta::DeltaOverlay>,
+}
+
+impl DeltaSource {
+    /// Open image object `name` at its current delta-layer version: the
+    /// manifest's base plus all live runs collapsed newest-wins.
+    pub fn open(store: &Arc<ShardedStore>, name: &str) -> Result<DeltaSource> {
+        let (man, ops) = crate::io::delta::load_state(store, name)?;
+        let base = SemSource::open(store, &man.base)?;
+        for op in &ops {
+            if op.row as usize >= base.meta.nrows || op.col as usize >= base.meta.ncols {
+                anyhow::bail!(
+                    "delta run edit ({}, {}) outside the {}×{} base image {}",
+                    op.row,
+                    op.col,
+                    base.meta.nrows,
+                    base.meta.ncols,
+                    man.base
+                );
+            }
+        }
+        let overlay = crate::format::delta::DeltaOverlay::new(&base.meta, ops);
+        Ok(DeltaSource {
+            base,
+            overlay: Arc::new(overlay),
+        })
+    }
+}
+
 /// Where tile-row bytes come from. Cloning is cheap (the image is held
 /// by `Arc`, the SEM handle shares its store, index and tile-row cache)
 /// — the batching coordinator clones one source per dataset so queued
@@ -111,6 +153,8 @@ pub enum Source {
     Mem(Arc<TiledImage>),
     /// Semi-external execution (SEM-SpMM): stream from the store.
     Sem(SemSource),
+    /// SEM execution over base ⊕ delta-overlay (live-updated dataset).
+    Delta(DeltaSource),
 }
 
 impl Source {
@@ -118,28 +162,46 @@ impl Source {
         match self {
             Source::Mem(img) => &img.meta,
             Source::Sem(s) => &s.meta,
+            // The base meta: shape/tile/encoding are version-invariant.
+            // (`nnz` may be stale under an overlay; no compute path
+            // reads it.)
+            Source::Delta(d) => &d.base.meta,
+        }
+    }
+
+    /// The streaming-side SEM source, if any (the base image for a
+    /// delta view — fetch, cache, and I/O paths all run against it).
+    pub(crate) fn sem_base(&self) -> Option<&SemSource> {
+        match self {
+            Source::Mem(_) => None,
+            Source::Sem(s) => Some(s),
+            Source::Delta(d) => Some(&d.base),
         }
     }
 
     /// Logical in-memory footprint of the sparse matrix for this mode
     /// (Fig 8): the full image for IM, only header+index for SEM (plus
-    /// whatever the tile-row cache currently holds).
+    /// whatever the tile-row cache currently holds, plus any resident
+    /// delta overlay).
     pub fn sparse_footprint_bytes(&self) -> u64 {
         match self {
             Source::Mem(img) => img.image_bytes(),
-            Source::Sem(s) => {
+            Source::Sem(s) | Source::Delta(DeltaSource { base: s, .. }) => {
                 let cached = s.cache().map(|c| c.resident_bytes()).unwrap_or(0);
-                (HEADER_LEN + s.index.len() * 16) as u64 + cached
+                let overlay = match self {
+                    Source::Delta(d) => {
+                        (d.overlay.n_ops * crate::format::delta::OP_BYTES) as u64
+                    }
+                    _ => 0,
+                };
+                (HEADER_LEN + s.index.len() * 16) as u64 + cached + overlay
             }
         }
     }
 
     /// The tile-row cache attached to a SEM source, if any.
     pub fn tile_cache(&self) -> Option<Arc<TileRowCache>> {
-        match self {
-            Source::Mem(_) => None,
-            Source::Sem(s) => s.cache(),
-        }
+        self.sem_base().and_then(|s| s.cache())
     }
 
     /// Resolve the tile-row cache this source will use under `opts`,
@@ -148,10 +210,7 @@ impl Source {
     /// call this *before* snapshotting usage baselines so a budget
     /// change between runs cannot skew (or underflow) their deltas.
     pub fn resolve_tile_cache(&self, opts: &SpmmOpts) -> Option<Arc<TileRowCache>> {
-        match self {
-            Source::Mem(_) => None,
-            Source::Sem(s) => s.cache_for(opts.cache_budget_bytes),
-        }
+        self.sem_base().and_then(|s| s.cache_for(opts.cache_budget_bytes))
     }
 
     /// Stream every stored entry as `f(row, col, value)` in tile order —
@@ -165,6 +224,7 @@ impl Source {
         let t = meta.tile as u32;
         let ntr = meta.n_tile_rows();
         let mut sembuf: Vec<u8> = Vec::new();
+        let mut mergebuf: Vec<u8> = Vec::new();
         for tr in 0..ntr {
             let bytes: &[u8] = match self {
                 Source::Mem(img) => img.tile_row(tr),
@@ -173,6 +233,19 @@ impl Source {
                     sembuf.resize(len as usize, 0);
                     s.file.read_at(s.data_start + off, &mut sembuf)?;
                     &sembuf
+                }
+                Source::Delta(d) => {
+                    let (off, len) = d.base.index[tr];
+                    sembuf.resize(len as usize, 0);
+                    d.base.file.read_at(d.base.data_start + off, &mut sembuf)?;
+                    let ops = &d.overlay.ops_by_tr[tr];
+                    if ops.is_empty() {
+                        &sembuf
+                    } else {
+                        mergebuf.clear();
+                        crate::format::delta::merge_tile_row(&meta, tr, &sembuf, ops, &mut mergebuf);
+                        &mergebuf
+                    }
                 }
             };
             let row_base = (tr as u32) * t;

@@ -179,20 +179,19 @@ pub fn run_pass_ring<S: Semiring>(
 
     // SEM plumbing: per-shard async read workers + pooled buffers, plus
     // the (optional) tile-row cache consulted before every group read.
-    let io: Option<Arc<IoEngine>> = match src {
-        Source::Mem(_) => None,
-        Source::Sem(s) => {
+    let io: Option<Arc<IoEngine>> = match src.sem_base() {
+        None => None,
+        Some(s) => {
             let store = s.file.store();
             let pool = BufferPool::with_store(opts.buf_pool, opts.threads * 4, store.clone());
             Some(Arc::new(IoEngine::new(store, opts.io_workers, pool)))
         }
     };
-    let cache: Option<Arc<TileRowCache>> = match src {
-        Source::Mem(_) => None,
-        Source::Sem(s) => s.cache_for(opts.cache_budget_bytes),
-    };
-    let (read0, phys0, deg0, rec0) = match src {
-        Source::Sem(s) => {
+    let cache: Option<Arc<TileRowCache>> = src
+        .sem_base()
+        .and_then(|s| s.cache_for(opts.cache_budget_bytes));
+    let (read0, phys0, deg0, rec0) = match src.sem_base() {
+        Some(s) => {
             let store = s.file.store();
             (
                 store.stats.bytes_read.get(),
@@ -201,7 +200,7 @@ pub fn run_pass_ring<S: Semiring>(
                 store.degraded.reconstructed_bytes.get(),
             )
         }
-        Source::Mem(_) => (0, 0, 0, 0),
+        None => (0, 0, 0, 0),
     };
     let cache0 = cache.as_ref().map(|c| c.usage()).unwrap_or_default();
     let per_op_acc: Vec<OpAccum> = pass.ops.iter().map(|_| OpAccum::new()).collect();
@@ -320,18 +319,19 @@ pub fn run_pass_ring<S: Semiring>(
     }
 
     let secs = sw.secs();
-    let (bytes_read, physical_bytes_read, degraded_reads, reconstructed_bytes) = match src {
-        Source::Sem(s) => {
-            let store = s.file.store();
-            (
-                store.stats.bytes_read.get() - read0,
-                store.physical_bytes_read() - phys0,
-                store.degraded.degraded_reads.get() - deg0,
-                store.degraded.reconstructed_bytes.get() - rec0,
-            )
-        }
-        Source::Mem(_) => (0, 0, 0, 0),
-    };
+    let (bytes_read, physical_bytes_read, degraded_reads, reconstructed_bytes) =
+        match src.sem_base() {
+            Some(s) => {
+                let store = s.file.store();
+                (
+                    store.stats.bytes_read.get() - read0,
+                    store.physical_bytes_read() - phys0,
+                    store.degraded.degraded_reads.get() - deg0,
+                    store.degraded.reconstructed_bytes.get() - rec0,
+                )
+            }
+            None => (0, 0, 0, 0),
+        };
     let cache_use = cache
         .as_ref()
         .map(|c| c.usage().since(&cache0))
@@ -409,7 +409,10 @@ fn worker<S: Semiring>(
     ) -> Fetch<'b> {
         match src {
             Source::Mem(img) => Fetch::Mem(img.tile_rows(task.lo, task.hi)),
-            Source::Sem(s) => {
+            // A delta view fetches (and caches) pure base bytes; the
+            // overlay is applied after fetch, per group, in
+            // `process_group_merged`.
+            Source::Sem(s) | Source::Delta(crate::spmm::DeltaSource { base: s, .. }) => {
                 let off0 = s.index[task.lo].0;
                 let (oe, le) = s.index[task.hi - 1];
                 let len = (oe + le - off0) as usize;
@@ -514,12 +517,12 @@ fn worker<S: Semiring>(
         match f {
             Fetch::Mem(bytes) => {
                 let rows = row_slices(src, task, bytes);
-                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
             }
             Fetch::Ticket(tk) => {
                 let buf = tk.wait(opts.io_polling)?;
                 let rows = row_slices(src, task, &buf);
-                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
                 drop(rows);
                 if let Some(io) = io {
                     io.recycle(buf);
@@ -533,7 +536,7 @@ fn worker<S: Semiring>(
             } => {
                 let buf = tk.wait(opts.io_polling)?;
                 let rows = partial_row_slices(src, task, read_lo, read_hi, &resident, &buf);
-                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
                 drop(rows);
                 if let Some(io) = io {
                     io.recycle(buf);
@@ -541,13 +544,14 @@ fn worker<S: Semiring>(
             }
             Fetch::Frames(frames) => {
                 let rows: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
-                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
             }
             Fetch::Empty => {
                 // No bytes on the store for this group: forward ops still
-                // emit their (all-zero) output rows.
+                // emit their (all-zero) output rows — and an overlay may
+                // still insert edges into the empty base rows.
                 let rows: Vec<&[u8]> = vec![&[]; task.hi - task.lo];
-                process_group_ops::<S>(task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
             }
         }
         tasks_done.fetch_add(1, Ordering::Relaxed);
@@ -556,6 +560,56 @@ fn worker<S: Semiring>(
         accs: states.iter().map(|s| s.acc.clone()).collect(),
         scatters: states.into_iter().map(|s| s.scatter).collect(),
     })
+}
+
+/// Delta-aware front of [`process_group_ops`]: when the source carries
+/// an edit overlay touching this group, rewrite the touched tile rows
+/// with the canonical base ⊕ delta merge and hand the patched slices
+/// down; otherwise (plain sources, or untouched groups) pass the
+/// fetched bytes through untouched. Because each merged tile row is
+/// byte-identical to the same tile row of a reconverted image, the
+/// kernels below cannot tell a delta view from a rebuilt base — which
+/// is the whole bit-identity argument, per semiring.
+#[allow(clippy::too_many_arguments)]
+fn process_group_merged<S: Semiring>(
+    src: &Source,
+    task: Task,
+    rows: &[&[u8]],
+    ops: &[PassOp<'_>],
+    states: &mut [OpState],
+    opts: &SpmmOpts,
+    meta: &TiledMeta,
+    per_op_acc: &[OpAccum],
+) -> Result<()> {
+    if let Source::Delta(d) = src {
+        if d.overlay.touches(task.lo, task.hi) {
+            let patches: Vec<Option<Vec<u8>>> = (task.lo..task.hi)
+                .map(|tr| {
+                    let tr_ops = &d.overlay.ops_by_tr[tr];
+                    if tr_ops.is_empty() {
+                        None
+                    } else {
+                        let mut m = Vec::new();
+                        crate::format::delta::merge_tile_row(
+                            meta,
+                            tr,
+                            rows[tr - task.lo],
+                            tr_ops,
+                            &mut m,
+                        );
+                        Some(m)
+                    }
+                })
+                .collect();
+            let merged: Vec<&[u8]> = rows
+                .iter()
+                .zip(&patches)
+                .map(|(r, p)| p.as_deref().unwrap_or(r))
+                .collect();
+            return process_group_ops::<S>(task, &merged, ops, states, opts, meta, per_op_acc);
+        }
+    }
+    process_group_ops::<S>(task, rows, ops, states, opts, meta, per_op_acc)
 }
 
 /// Run every plan op over one fetched tile-row group. `rows[i]` is tile
@@ -772,14 +826,14 @@ fn sched_block_tcs(opts: &SpmmOpts, p: usize, t: usize) -> usize {
 fn tile_row_base(src: &Source, tr: usize) -> u64 {
     match src {
         Source::Mem(img) => img.index[tr].0,
-        Source::Sem(s) => s.index[tr].0,
+        _ => src.sem_base().expect("SEM-side source").index[tr].0,
     }
 }
 
 fn tile_row_extent(src: &Source, tr: usize) -> (u64, u64) {
     match src {
         Source::Mem(img) => img.index[tr],
-        Source::Sem(s) => s.index[tr],
+        _ => src.sem_base().expect("SEM-side source").index[tr],
     }
 }
 

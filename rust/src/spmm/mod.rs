@@ -25,6 +25,9 @@
 //! * [`engine`] — the classic data model ([`Source`], [`OutputSink`],
 //!   [`SpmmStats`]) and the [`spmm`]/[`spmm_out`] entry points, now thin
 //!   wrappers over single-op plans (byte-identical to the old engine).
+//!   [`DeltaSource`] adds the live-update view: base tile rows streamed
+//!   as usual, LSM edit overlays merged in canonically after fetch, so
+//!   every ring's sweep is bit-identical to a full reconversion.
 //! * [`semiring`] — the `(⊕, ⊗, 0̄, 1̄)` algebra the whole stack is generic
 //!   over: [`Arith`] (the default — classic SpMM), [`MinPlus`] (SSSP),
 //!   [`OrAnd`] (BFS), [`MinSelect`] (label propagation). Kernels, plans
@@ -44,7 +47,7 @@ pub mod scheduler;
 pub mod semiring;
 pub mod spgemm;
 
-pub use engine::{spmm, spmm_out, OutputSink, SemSource, SpmmStats, Source};
+pub use engine::{spmm, spmm_out, DeltaSource, OutputSink, SemSource, SpmmStats, Source};
 pub use exec::{run_pass, run_pass_ring};
 pub use plan::{
     ForwardOp, OpKind, OpStats, PassOp, PassResult, RowHook, StreamPass, TransposeOp,

@@ -331,6 +331,7 @@ fn sweep_worker<S: Semiring>(
     let mut touched: Vec<u32> = Vec::new();
     let mut cache: Vec<(usize, Arc<BRows>)> = Vec::new();
     let mut abuf: Vec<u8> = Vec::new();
+    let mut dbuf: Vec<u8> = Vec::new();
     let mut run: Vec<u8> = Vec::new();
 
     let mut flush = |run: &mut Vec<u8>, tr: usize| {
@@ -361,6 +362,22 @@ fn sweep_worker<S: Semiring>(
                     s.file.read_at(s.data_start + off, &mut abuf)?;
                 }
                 &abuf
+            }
+            Source::Delta(d) => {
+                let (off, len) = d.base.index[tr];
+                abuf.clear();
+                abuf.resize(len as usize, 0);
+                if len > 0 {
+                    d.base.file.read_at(d.base.data_start + off, &mut abuf)?;
+                }
+                let tr_ops = &d.overlay.ops_by_tr[tr];
+                if tr_ops.is_empty() {
+                    &abuf
+                } else {
+                    dbuf.clear();
+                    crate::format::delta::merge_tile_row(am, tr, &abuf, tr_ops, &mut dbuf);
+                    &dbuf
+                }
             }
         };
         let mut off = 0usize;

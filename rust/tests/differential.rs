@@ -3,6 +3,11 @@
 //! (`Csr::spmm_ref`) at dense widths 1, 4 and 32 — the paper's claim
 //! that SEM matches IM from ~4 columns on rests on all four computing
 //! the same numbers.
+//!
+//! The delta-layer battery at the bottom extends the same discipline to
+//! dynamic graphs: a sweep over base-plus-edit-runs must be
+//! **bit-identical** to a full reconversion of the mutated edge list,
+//! at every LSM stage and in every semiring.
 
 use sem_spmm::baselines::{csr_spmm, CsrSchedule, CsrSpmmOpts};
 use sem_spmm::format::tiled::TiledImage;
@@ -319,6 +324,172 @@ fn arith_ring_instantiation_is_bit_identical() {
         let (out, _) = engine::spmm_out(&src, &x.to_dense(), &opts).unwrap();
         assert_eq!(out.data, fwd_compat, "{name}: engine front door diverged");
     }
+}
+
+/// Dynamic-graph differential: a weighted RMAT base on a 4-shard
+/// striped store takes three committed batches of mixed edge edits
+/// (inserts, deletes, weight updates), mirrored into a `BTreeMap`
+/// reference model. At each LSM stage — (1) base + three uncompacted
+/// runs, (2) base + one compacted run, (3) the post-major-compaction
+/// base — a streaming sweep over the merged [`DeltaSource`] view must
+/// be **bit-identical** to an in-memory sweep of the fully reconverted
+/// mutated matrix, in all four semirings, under a partial tile-row
+/// cache budget. Stage 3 additionally proves the swapped base object is
+/// byte-identical to the reconverted image.
+#[test]
+fn delta_source_matches_full_reconversion_at_all_lsm_stages() {
+    use sem_spmm::format::delta::DeltaOp;
+    use sem_spmm::io::{DeltaConfig, DeltaStore};
+    use sem_spmm::spmm::{Arith, DeltaSource, MinPlus, MinSelect, OrAnd};
+    use std::collections::BTreeMap;
+
+    let tile = 128;
+    let mut m = sample();
+    let mut rng = sem_spmm::util::Xoshiro256::new(0xDE17A);
+    m.vals = Some((0..m.nnz()).map(|_| rng.next_f32() * 2.0 + 0.5).collect());
+    let n = m.nrows;
+
+    // Reference model of the live edge set.
+    let mut model: BTreeMap<(u32, u32), f32> = BTreeMap::new();
+    for r in 0..m.nrows {
+        for k in m.indptr[r] as usize..m.indptr[r + 1] as usize {
+            model.insert((r as u32, m.indices[k]), m.vals.as_ref().unwrap()[k]);
+        }
+    }
+
+    let img = TiledImage::build(&m, tile, TileFormat::Scsr);
+    let dir = sem_spmm::util::tempdir();
+    let store = ShardedStore::open(StoreSpec {
+        dir: dir.path().to_path_buf(),
+        shards: 4,
+        stripe_bytes: 4096,
+        read_gbps: None,
+        write_gbps: None,
+        latency_us: 0,
+        parity: false,
+    })
+    .unwrap();
+    let mut buf = Vec::new();
+    img.write_to(&mut buf).unwrap();
+    store.put("g.semm", &buf).unwrap();
+
+    // Triggers disabled: this test drives each compaction stage by hand.
+    let ds = DeltaStore::open(
+        &store,
+        "g.semm",
+        DeltaConfig {
+            buffer_bytes: 64 << 20,
+            compact_runs: 1 << 20,
+            major_compact_ratio: 1e12,
+        },
+    )
+    .unwrap();
+
+    // Three committed batches of mixed edits.
+    for batch in 0..3usize {
+        let keys: Vec<(u32, u32)> = model.keys().copied().collect();
+        for i in 0..150usize {
+            let op = match (batch + i) % 3 {
+                0 => {
+                    // Insert (possibly overwriting an existing edge).
+                    let r = rng.below(n as u64) as u32;
+                    let c = rng.below(n as u64) as u32;
+                    let w = rng.next_f32() + 0.25;
+                    model.insert((r, c), w);
+                    DeltaOp::upsert(r, c, w)
+                }
+                1 => {
+                    // Delete (idempotent when hit twice).
+                    let (r, c) = keys[rng.below_usize(keys.len())];
+                    model.remove(&(r, c));
+                    DeltaOp::delete(r, c)
+                }
+                _ => {
+                    // Weight update (may resurrect a deleted edge).
+                    let (r, c) = keys[rng.below_usize(keys.len())];
+                    let w = rng.next_f32() * 3.0 + 0.1;
+                    model.insert((r, c), w);
+                    DeltaOp::upsert(r, c, w)
+                }
+            };
+            ds.stage(op).unwrap();
+        }
+        let rep = ds.commit().unwrap();
+        assert_eq!(rep.ops, 150);
+        assert_eq!(rep.runs, batch + 1, "no auto-compaction in this test");
+    }
+
+    // Full reconversion of the mutated edge set (the oracle image).
+    let pairs: Vec<(u32, u32)> = model.keys().copied().collect();
+    let mut mutated = Csr::from_sorted_pairs(n, n, &pairs);
+    mutated.vals = Some(model.values().copied().collect());
+    let want_img = Arc::new(TiledImage::build(&mutated, tile, TileFormat::Scsr));
+
+    let opts = SpmmOpts {
+        threads: 3,
+        io_workers: 2,
+        // Partial budget: merged sweeps mix cached and streamed rows.
+        cache_budget_bytes: img.data_bytes() * 2 / 3,
+        ..Default::default()
+    };
+
+    fn sweep<S: sem_spmm::spmm::Semiring>(
+        src: &Source,
+        n: usize,
+        opts: &SpmmOpts,
+    ) -> Vec<f32> {
+        let p = 4;
+        let ncfg = engine::numa_config(128, n, opts);
+        let x = NumaDense::from_dense(&DenseMatrix::random(n, p, 0xBEEF), ncfg);
+        let out = NumaDense::zeros(n, p, ncfg);
+        let pass =
+            StreamPass::<S>::new().forward(&x, sem_spmm::spmm::OutputSink::Mem(&out));
+        sem_spmm::spmm::run_pass_ring::<S>(src, &pass, opts).unwrap();
+        out.to_dense().data
+    }
+
+    let check_stage = |stage: &str| {
+        let dsrc = Source::Delta(DeltaSource::open(&store, "g.semm").unwrap());
+        let msrc = Source::Mem(want_img.clone());
+        assert_eq!(
+            sweep::<Arith>(&dsrc, n, &opts),
+            sweep::<Arith>(&msrc, n, &opts),
+            "{stage}: Arith diverged from reconversion"
+        );
+        assert_eq!(
+            sweep::<MinPlus>(&dsrc, n, &opts),
+            sweep::<MinPlus>(&msrc, n, &opts),
+            "{stage}: MinPlus diverged from reconversion"
+        );
+        assert_eq!(
+            sweep::<OrAnd>(&dsrc, n, &opts),
+            sweep::<OrAnd>(&msrc, n, &opts),
+            "{stage}: OrAnd diverged from reconversion"
+        );
+        assert_eq!(
+            sweep::<MinSelect>(&dsrc, n, &opts),
+            sweep::<MinSelect>(&msrc, n, &opts),
+            "{stage}: MinSelect diverged from reconversion"
+        );
+    };
+
+    check_stage("stage 1 (base + 3 uncompacted runs)");
+    assert!(ds.compact_runs().unwrap());
+    assert_eq!(ds.manifest().unwrap().runs.len(), 1);
+    check_stage("stage 2 (base + compacted run)");
+    assert!(ds.major_compact().unwrap());
+    let man = ds.manifest().unwrap();
+    assert!(man.runs.is_empty());
+    assert_eq!(man.base_version, 1);
+    check_stage("stage 3 (post-major-compaction base)");
+    // The swapped base is byte-identical to the reconverted image.
+    let mut want_bytes = Vec::new();
+    want_img.write_to(&mut want_bytes).unwrap();
+    assert_eq!(
+        store.read_object_unmetered(&man.base).unwrap(),
+        want_bytes,
+        "major compaction must write the canonical reconverted image"
+    );
 }
 
 /// Weighted matrices take the same differential path (width 4).

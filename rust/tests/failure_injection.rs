@@ -3,12 +3,14 @@
 //! cleanly, never hang, never return wrong numbers silently.
 
 use sem_spmm::coordinator::Catalog;
+use sem_spmm::format::delta::DeltaOp;
 use sem_spmm::format::tiled::TiledImage;
 use sem_spmm::format::{convert, Csr, TileFormat};
 use sem_spmm::graph::{registry, rmat};
-use sem_spmm::io::{BufferPool, IoEngine, ShardedStore, StoreSpec};
+use sem_spmm::io::{BufferPool, DeltaConfig, DeltaStore, IoEngine, Manifest, ShardedStore, StoreSpec};
 use sem_spmm::matrix::DenseMatrix;
-use sem_spmm::spmm::{engine, SemSource, Source, SpmmOpts};
+use sem_spmm::spmm::{engine, DeltaSource, SemSource, Source, SpmmOpts};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 fn store(dir: &std::path::Path) -> Arc<ShardedStore> {
@@ -591,4 +593,207 @@ fn catalog_recovers_from_partially_deleted_dataset() {
     let imgs2 = catalog.ensure(&spec).unwrap();
     assert_eq!(imgs2.nnz, imgs.nnz);
     assert!(s.exists(&imgs2.adj));
+}
+
+// ---------------------------------------------------------------------------
+// Delta layer under failure: aborted compactions, crash debris, dead shards.
+// The committed version must stay readable bit-identical through all of it,
+// and retries must GC the wreckage instead of tripping over it.
+// ---------------------------------------------------------------------------
+
+/// Compaction triggers disabled so the tests place every state
+/// transition by hand.
+fn manual_delta_cfg() -> DeltaConfig {
+    DeltaConfig {
+        buffer_bytes: 64 << 20,
+        compact_runs: usize::MAX,
+        major_compact_ratio: f64::INFINITY,
+    }
+}
+
+/// Reference edge map of a binary CSR (every present edge weighs 1.0,
+/// matching what `for_each_edge` yields for Binary images).
+fn csr_edge_map(m: &Csr) -> BTreeMap<(u32, u32), f32> {
+    let mut map = BTreeMap::new();
+    for r in 0..m.nrows {
+        for k in m.indptr[r] as usize..m.indptr[r + 1] as usize {
+            map.insert((r as u32, m.indices[k]), 1.0);
+        }
+    }
+    map
+}
+
+/// The merged (base ⊕ live runs) edge map as the streaming engine sees
+/// it — opened fresh so it always reflects the on-store manifest.
+fn merged_edge_map(s: &Arc<ShardedStore>, name: &str) -> BTreeMap<(u32, u32), f32> {
+    let src = Source::Delta(DeltaSource::open(s, name).unwrap());
+    let mut map = BTreeMap::new();
+    src.for_each_edge(|r, c, v| {
+        assert!(map.insert((r, c), v).is_none(), "edge ({r},{c}) emitted twice");
+    })
+    .unwrap();
+    map
+}
+
+/// Base image + two committed delta runs (an insert and a delete of a
+/// real base edge), plus the model the merged view must equal.
+fn delta_with_two_runs(
+    s: &Arc<ShardedStore>,
+    m: &Csr,
+) -> (DeltaStore, BTreeMap<(u32, u32), f32>) {
+    let ds = DeltaStore::open(s, "m.semm", manual_delta_cfg()).unwrap();
+    let mut model = csr_edge_map(m);
+    let &victim = model.keys().next().unwrap();
+    ds.stage(DeltaOp::upsert(3, 999, 1.0)).unwrap();
+    model.insert((3, 999), 1.0);
+    ds.commit().unwrap();
+    ds.stage(DeltaOp::delete(victim.0, victim.1)).unwrap();
+    model.remove(&victim);
+    ds.commit().unwrap();
+    (ds, model)
+}
+
+#[test]
+fn aborted_major_compaction_leaves_previous_version_readable_and_retry_gcs_debris() {
+    // A crash (or shard failure) mid-major-compaction dies BEFORE the
+    // manifest swap, leaving a partial new base and a partial run on the
+    // store. The committed version must keep reading back bit-identical,
+    // and a retried compaction must GC the debris and succeed.
+    let dir = sem_spmm::util::tempdir();
+    let (s, m) = sharded_store_with_image(dir.path(), false);
+    let (ds, model) = delta_with_two_runs(&s, &m);
+    let man_before = ds.manifest().unwrap();
+    assert_eq!(man_before.runs.len(), 2);
+    assert_eq!(merged_edge_map(&s, "m.semm"), model);
+
+    // Crash debris: garbage where the next base version and the next run
+    // would land, with the manifest untouched (the swap never happened).
+    s.put(&Manifest::base_object("m.semm", 1), &vec![0xCD; 4096]).unwrap();
+    s.put(&Manifest::run_object("m.semm", man_before.next_seq), &[0xAB; 37]).unwrap();
+
+    // No torn swap: the manifest and the merged view are unchanged.
+    assert_eq!(ds.manifest().unwrap(), man_before);
+    assert_eq!(merged_edge_map(&s, "m.semm"), model);
+
+    // Retry compacts through: debris GC'd, version stepped, same edges.
+    assert!(ds.major_compact().unwrap());
+    let man = ds.manifest().unwrap();
+    assert_eq!(man.base_version, 1);
+    assert!(man.runs.is_empty());
+    assert_eq!(man.base, Manifest::base_object("m.semm", 1));
+    assert!(
+        !s.exists(&Manifest::run_object("m.semm", man_before.next_seq)),
+        "partial run from the aborted attempt must be GC'd"
+    );
+    for &seq in &man_before.runs {
+        assert!(
+            !s.exists(&Manifest::run_object("m.semm", seq)),
+            "folded run {seq} must be removed after the swap"
+        );
+    }
+    assert_eq!(merged_edge_map(&s, "m.semm"), model);
+    // The swapped base is a healthy canonical image on its own.
+    SemSource::open(&s, &man.base).unwrap();
+}
+
+#[test]
+fn commit_replaces_an_aborted_partial_run_flush() {
+    // A commit that died after writing part of its run object but before
+    // publishing it in the manifest: the orphan must be invisible, and
+    // the NEXT commit must GC it and reuse the sequence number cleanly.
+    let dir = sem_spmm::util::tempdir();
+    let (s, m) = sharded_store_with_image(dir.path(), false);
+    let (ds, mut model) = delta_with_two_runs(&s, &m);
+    let next = ds.manifest().unwrap().next_seq;
+    s.put(&Manifest::run_object("m.semm", next), &[0x5A; 21]).unwrap();
+    assert_eq!(merged_edge_map(&s, "m.semm"), model, "orphan run must stay invisible");
+
+    ds.stage(DeltaOp::upsert(7, 7, 1.0)).unwrap();
+    model.insert((7, 7), 1.0);
+    let rep = ds.commit().unwrap();
+    assert_eq!(rep.seq, Some(next), "retried flush reuses the unpublished seq");
+    assert_eq!(merged_edge_map(&s, "m.semm"), model);
+}
+
+#[test]
+fn major_compaction_completes_through_a_dead_shard_on_a_parity_store() {
+    // One of four shards dies under the BASE image mid-lifecycle on a
+    // parity store: the merged view keeps serving via reconstruction,
+    // and a major compaction — which streams every base tile row — still
+    // completes and produces a healthy new base with the same edges.
+    let dir = sem_spmm::util::tempdir();
+    let (s, m) = sharded_store_with_image(dir.path(), true);
+    let (ds, model) = delta_with_two_runs(&s, &m);
+    maim_shard(&s, 2, "m.semm");
+
+    assert_eq!(merged_edge_map(&s, "m.semm"), model);
+    assert!(
+        s.degraded.degraded_reads.get() > 0,
+        "dead shard never triggered reconstruction"
+    );
+
+    assert!(ds.major_compact().unwrap());
+    let man = ds.manifest().unwrap();
+    assert_eq!(man.base_version, 1);
+    assert_eq!(merged_edge_map(&s, "m.semm"), model);
+    SemSource::open(&s, &man.base).unwrap();
+}
+
+#[test]
+fn service_keeps_answering_on_the_committed_version_through_refresh_debris() {
+    // Service-level continuity: debris from an in-flight (or crashed)
+    // refresh on the store must not change what SPMV serves — reads pin
+    // to the committed manifest version — and the next COMMIT quietly
+    // GCs the wreckage.
+    let dir = sem_spmm::util::tempdir();
+    let s = store(dir.path());
+    let catalog = Catalog::new(s.clone(), 256);
+    let svc = sem_spmm::coordinator::service::Service::new(
+        catalog,
+        SpmmOpts {
+            threads: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let sum = |svc: &sem_spmm::coordinator::service::Service| -> f64 {
+        svc.dispatch("SPMV rmat-40")
+            .unwrap()
+            .unwrap()
+            .get("sum")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    let sum0 = sum(&svc);
+    svc.dispatch("UPDATE rmat-40 add 7 4090").unwrap().unwrap();
+    let r = svc.dispatch("COMMIT rmat-40").unwrap().unwrap();
+    assert_eq!(r.get("committed_ops").unwrap().as_f64().unwrap(), 1.0);
+    let sum_add = sum(&svc);
+    // +1 if the edge was new, unchanged if the random base had it.
+    assert!(sum_add == sum0 || sum_add == sum0 + 1.0);
+
+    // Debris where a refresh would write, manifest untouched.
+    let spec = registry::by_name("rmat-40").unwrap().shrunk(12);
+    let imgs = Catalog::new(s.clone(), 256).ensure(&spec).unwrap();
+    let next = Manifest::load(&s, &imgs.adj).unwrap().next_seq;
+    s.put(&Manifest::base_object(&imgs.adj, 1), &vec![0xEE; 2048]).unwrap();
+    s.put(&Manifest::run_object(&imgs.adj, next), &[0x11; 9]).unwrap();
+    assert_eq!(
+        sum(&svc),
+        sum_add,
+        "debris must not leak into served results"
+    );
+
+    // Deleting the edge guaranteed present after the add moves the sum
+    // by exactly -1.0 (the adjacency image is binary), and the commit
+    // GCs the debris. (`sum0` itself is not re-asserted: the random
+    // base could have contained the edge already.)
+    svc.dispatch("UPDATE rmat-40 del 7 4090").unwrap().unwrap();
+    svc.dispatch("COMMIT rmat-40").unwrap().unwrap();
+    assert_eq!(sum(&svc), sum_add - 1.0);
+    assert!(!s.exists(&Manifest::base_object(&imgs.adj, 1)));
+    assert!(!s.exists(&Manifest::run_object(&imgs.adj, next)));
+    let r = svc.dispatch("PING").unwrap().unwrap();
+    assert!(r.get("pong").is_some());
 }

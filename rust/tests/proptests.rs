@@ -6,14 +6,17 @@
 
 use sem_spmm::coordinator::batcher::{BatchConfig, BatchJob, Batcher};
 use sem_spmm::coordinator::{MemBudget, PassPlan};
+use sem_spmm::format::delta::DeltaOp;
 use sem_spmm::graph::rmat;
 use sem_spmm::format::tiled::{decode_all, TiledImage};
 use sem_spmm::format::{dcsc, scsr, Csr, TileEntries, TileFormat, ValueType};
+use sem_spmm::io::{DeltaConfig, DeltaStore, ShardedStore, StoreSpec};
 use sem_spmm::matrix::DenseMatrix;
 use sem_spmm::spmm::scheduler::Scheduler;
-use sem_spmm::spmm::{engine, Source, SpmmOpts};
+use sem_spmm::spmm::{engine, DeltaSource, Source, SpmmOpts};
 use sem_spmm::util::proptest::{check, Gen};
 use sem_spmm::VertexId;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 fn random_pairs(g: &mut Gen, nrows: usize, ncols: usize, n: usize) -> Vec<(VertexId, VertexId)> {
@@ -461,6 +464,263 @@ fn prop_spmv_linearity() {
             if (ac[i] - expect).abs() > 1e-2 * expect.abs().max(1.0) {
                 return Err(format!("linearity broke at {i}: {} vs {expect}", ac[i]));
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Delta layer (LSM edge updates): the merged view over base ⊕ runs must be
+// exactly the reference edge set under ANY interleaving of stage / commit /
+// compaction, and compaction must be idempotent and placement-insensitive.
+// ---------------------------------------------------------------------------
+
+/// Triggers disabled: commits and compactions happen only where the
+/// property driver places them, never behind its back.
+fn manual_delta_cfg() -> DeltaConfig {
+    DeltaConfig {
+        buffer_bytes: 64 << 20,
+        compact_runs: usize::MAX,
+        major_compact_ratio: f64::INFINITY,
+    }
+}
+
+/// Random weighted base graph written to a fresh single-directory store
+/// as `g.semm`, plus the matching reference edge map.
+fn delta_fixture(
+    g: &mut Gen,
+) -> Option<(
+    sem_spmm::util::TempDir,
+    Arc<ShardedStore>,
+    BTreeMap<(u32, u32), f32>,
+    Vec<(u32, u32)>,
+)> {
+    let n = g.usize_in(64, 400);
+    let pairs = random_pairs(g, n, n, g.usize_in(20, 1500));
+    if pairs.is_empty() {
+        return None;
+    }
+    let mut m = Csr::from_sorted_pairs(n, n, &pairs);
+    m.vals = Some((0..m.nnz()).map(|_| g.f32_in(0.1, 2.0)).collect());
+    let model: BTreeMap<(u32, u32), f32> = pairs
+        .iter()
+        .map(|&(r, c)| (r, c))
+        .zip(m.vals.as_ref().unwrap().iter().copied())
+        .collect();
+    let img = TiledImage::build(&m, [64usize, 128][g.usize_in(0, 1)], TileFormat::Scsr);
+    let dir = sem_spmm::util::tempdir();
+    let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).ok()?;
+    let mut buf = Vec::new();
+    img.write_to(&mut buf).unwrap();
+    store.put("g.semm", &buf).ok()?;
+    let base_keys: Vec<(u32, u32)> = model.keys().copied().collect();
+    Some((dir, store, model, base_keys))
+}
+
+/// The merged (base ⊕ committed runs) edge map, failing on any edge
+/// emitted twice — a duplicate would double-count in every semiring.
+fn merged_edge_map(
+    store: &Arc<ShardedStore>,
+    name: &str,
+) -> Result<BTreeMap<(u32, u32), f32>, String> {
+    let src = Source::Delta(DeltaSource::open(store, name).map_err(|e| format!("open: {e:#}"))?);
+    let mut map = BTreeMap::new();
+    let mut dup = None;
+    src.for_each_edge(|r, c, v| {
+        if map.insert((r, c), v).is_some() {
+            dup = Some((r, c));
+        }
+    })
+    .map_err(|e| format!("for_each_edge: {e:#}"))?;
+    match dup {
+        Some(k) => Err(format!("edge {k:?} emitted twice by the merged view")),
+        None => Ok(map),
+    }
+}
+
+fn diff_edge_maps(
+    got: &BTreeMap<(u32, u32), f32>,
+    want: &BTreeMap<(u32, u32), f32>,
+) -> Result<(), String> {
+    for (k, v) in want {
+        match got.get(k) {
+            None => return Err(format!("edge {k:?} dropped (model weight {v})")),
+            Some(gv) if gv != v => {
+                return Err(format!("edge {k:?}: weight {gv} != model {v}"));
+            }
+            _ => {}
+        }
+    }
+    for k in got.keys() {
+        if !want.contains_key(k) {
+            return Err(format!("edge {k:?} resurrected/invented (not in model)"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_delta_interleavings_never_drop_duplicate_or_resurrect() {
+    // Arbitrary interleavings of upsert / delete / commit / run-compact /
+    // major-compact, mirrored into a BTreeMap model. After a final
+    // commit, the merged view must equal the model EXACTLY: weights pass
+    // through as raw f32 bits, so equality is `==`, not a tolerance.
+    check("delta-lsm-edge-set", 10, |g| {
+        let Some((_dir, store, mut model, base_keys)) = delta_fixture(g) else {
+            return Ok(());
+        };
+        let n = {
+            let src = DeltaSource::open(&store, "g.semm").map_err(|e| e.to_string())?;
+            src.base.meta.nrows as u32
+        };
+        let ds = DeltaStore::open(&store, "g.semm", manual_delta_cfg())
+            .map_err(|e| format!("open delta: {e:#}"))?;
+
+        // Deterministic delete → commit → resurrect of one base edge, so
+        // every case proves a tombstone masks the base and a later upsert
+        // punches back through it.
+        let victim = base_keys[g.usize_in(0, base_keys.len() - 1)];
+        ds.stage(DeltaOp::delete(victim.0, victim.1)).map_err(|e| e.to_string())?;
+        model.remove(&victim);
+        ds.commit().map_err(|e| e.to_string())?;
+        ds.stage(DeltaOp::upsert(victim.0, victim.1, 9.25)).map_err(|e| e.to_string())?;
+        model.insert(victim, 9.25);
+
+        for _ in 0..g.usize_in(20, 120) {
+            // A coordinate that often collides with a live edge, so
+            // deletes and weight updates hit real targets.
+            let key = if g.bool() {
+                base_keys[g.usize_in(0, base_keys.len() - 1)]
+            } else {
+                (g.usize_in(0, n as usize - 1) as u32, g.usize_in(0, n as usize - 1) as u32)
+            };
+            match g.usize_in(0, 9) {
+                0..=4 => {
+                    let w = g.f32_in(0.1, 4.0);
+                    ds.stage(DeltaOp::upsert(key.0, key.1, w)).map_err(|e| e.to_string())?;
+                    model.insert(key, w);
+                }
+                5..=7 => {
+                    ds.stage(DeltaOp::delete(key.0, key.1)).map_err(|e| e.to_string())?;
+                    model.remove(&key);
+                }
+                8 => {
+                    ds.commit().map_err(|e| e.to_string())?;
+                }
+                _ => {
+                    ds.commit().map_err(|e| e.to_string())?;
+                    if g.bool() {
+                        ds.compact_runs().map_err(|e| e.to_string())?;
+                    } else {
+                        ds.major_compact().map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+        }
+        ds.commit().map_err(|e| e.to_string())?;
+        let got = merged_edge_map(&store, "g.semm")?;
+        diff_edge_maps(&got, &model)
+    });
+}
+
+#[test]
+fn prop_delta_compaction_is_idempotent_and_placement_insensitive() {
+    // Two stores start from byte-identical bases and commit the same
+    // batches; store A compacts aggressively after every commit, store B
+    // never compacts until the end. Both merged views must equal the
+    // model, and after each takes a single major compaction the new base
+    // OBJECTS must be byte-identical (canonical-form bit-identity).
+    // Re-running either compaction must be a no-op.
+    check("delta-compaction-invariance", 8, |g| {
+        let Some((_dir, store_a, mut model, base_keys)) = delta_fixture(g) else {
+            return Ok(());
+        };
+        let dir_b = sem_spmm::util::tempdir();
+        let store_b =
+            ShardedStore::open(StoreSpec::unthrottled(dir_b.path())).map_err(|e| e.to_string())?;
+        let base_bytes = store_a
+            .read_object_unmetered("g.semm")
+            .map_err(|e| e.to_string())?;
+        store_b.put("g.semm", &base_bytes).map_err(|e| e.to_string())?;
+
+        let n = base_keys.iter().map(|k| k.0.max(k.1)).max().unwrap() as usize + 1;
+        let batches: Vec<Vec<DeltaOp>> = (0..g.usize_in(2, 6))
+            .map(|_| {
+                (0..g.usize_in(1, 60))
+                    .map(|_| {
+                        let key = if g.bool() {
+                            base_keys[g.usize_in(0, base_keys.len() - 1)]
+                        } else {
+                            (g.usize_in(0, n - 1) as u32, g.usize_in(0, n - 1) as u32)
+                        };
+                        if g.usize_in(0, 2) == 0 {
+                            DeltaOp::delete(key.0, key.1)
+                        } else {
+                            DeltaOp::upsert(key.0, key.1, g.f32_in(0.1, 4.0))
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let ds_a = DeltaStore::open(&store_a, "g.semm", manual_delta_cfg())
+            .map_err(|e| e.to_string())?;
+        let ds_b = DeltaStore::open(&store_b, "g.semm", manual_delta_cfg())
+            .map_err(|e| e.to_string())?;
+        for batch in &batches {
+            for op in batch {
+                ds_a.stage(*op).map_err(|e| e.to_string())?;
+                ds_b.stage(*op).map_err(|e| e.to_string())?;
+                if op.tombstone {
+                    model.remove(&(op.row, op.col));
+                } else {
+                    model.insert((op.row, op.col), op.val);
+                }
+            }
+            ds_a.commit().map_err(|e| e.to_string())?;
+            ds_b.commit().map_err(|e| e.to_string())?;
+            ds_a.compact_runs().map_err(|e| e.to_string())?; // A compacts every time
+        }
+        let map_a = merged_edge_map(&store_a, "g.semm")?;
+        let map_b = merged_edge_map(&store_b, "g.semm")?;
+        diff_edge_maps(&map_a, &model)?;
+        if map_a != map_b {
+            return Err("compaction placement changed the merged edge set".into());
+        }
+
+        // One major compaction each → canonical bases must be byte-equal.
+        ds_a.major_compact().map_err(|e| e.to_string())?;
+        ds_b.major_compact().map_err(|e| e.to_string())?;
+        let man_a = ds_a.manifest().map_err(|e| e.to_string())?;
+        let man_b = ds_b.manifest().map_err(|e| e.to_string())?;
+        if !man_a.runs.is_empty() || !man_b.runs.is_empty() {
+            return Err("major compaction left live runs".into());
+        }
+        let bytes_a = store_a
+            .read_object_unmetered(&man_a.base)
+            .map_err(|e| e.to_string())?;
+        let bytes_b = store_b
+            .read_object_unmetered(&man_b.base)
+            .map_err(|e| e.to_string())?;
+        if bytes_a != bytes_b {
+            return Err(format!(
+                "compacted bases diverge: {} vs {} bytes (or content)",
+                bytes_a.len(),
+                bytes_b.len()
+            ));
+        }
+        diff_edge_maps(&merged_edge_map(&store_a, "g.semm")?, &model)?;
+
+        // Idempotence: with nothing new staged, both compactions no-op
+        // and the manifest is untouched.
+        if ds_a.compact_runs().map_err(|e| e.to_string())? {
+            return Err("compact_runs re-ran on an already-compacted store".into());
+        }
+        if ds_a.major_compact().map_err(|e| e.to_string())? {
+            return Err("major_compact re-ran with no live runs".into());
+        }
+        if ds_a.manifest().map_err(|e| e.to_string())? != man_a {
+            return Err("no-op compaction mutated the manifest".into());
         }
         Ok(())
     });
