@@ -134,7 +134,19 @@ pub fn nmf(src_a: &Source, store: &Arc<ShardedStore>, cfg: &NmfConfig) -> Result
     }
     let np = k / w_cols;
     let in_mem = np == 1;
-    let nnz = src_a.meta().nnz as f64;
+    // ‖A‖²_F for the residual. For Mem/Sem images every stored entry of
+    // the binary adjacency contributes 1, so `meta().nnz` is exact —
+    // but under a delta overlay that is the stale base count, so stream
+    // the merged view once instead (also exact for weighted overlays:
+    // Σv² is the true Frobenius mass).
+    let a_fro2 = match src_a {
+        Source::Delta(_) => {
+            let mut s = 0f64;
+            src_a.for_each_edge(|_, _, v| s += v as f64 * v as f64)?;
+            s
+        }
+        _ => src_a.meta().nnz as f64,
+    };
     let ncfg = engine::numa_config(src_a.meta().tile, n, &cfg.spmm);
 
     let read0 = store.stats.bytes_read.get();
@@ -224,14 +236,14 @@ pub fn nmf(src_a: &Source, store: &Arc<ShardedStore>, cfg: &NmfConfig) -> Result
         }
 
         // Residual of the iterate the sweep consumed:
-        // ‖A − WH‖² = nnz − 2⟨AᵀW, Hᵀ⟩ + ⟨WᵀW, HHᵀ⟩.
+        // ‖A − WH‖² = ‖A‖²_F − 2⟨AᵀW, Hᵀ⟩ + ⟨WᵀW, HHᵀ⟩.
         let frob_term: f64 = wtw
             .data
             .iter()
             .zip(&hht.data)
             .map(|(&a, &b)| a as f64 * b as f64)
             .sum();
-        let sq = (nnz - 2.0 * inner + frob_term).max(0.0);
+        let sq = (a_fro2 - 2.0 * inner + frob_term).max(0.0);
         residuals.push(sq.sqrt());
         sparse_bytes_per_iter.push(iter_bytes);
 
@@ -449,6 +461,80 @@ mod tests {
                 "plain {n} vs backend {x}"
             );
         }
+    }
+
+    #[test]
+    fn delta_overlay_residual_matches_full_reconversion() {
+        // Under a delta overlay `meta().nnz` is the stale base count;
+        // the residual must use the effective Frobenius mass, so the
+        // trajectory over a DeltaSource equals a from-scratch
+        // reconversion of the mutated matrix exactly.
+        use crate::format::delta::DeltaOp;
+        use crate::io::{DeltaConfig, DeltaStore};
+        let el = rmat::generate(7, 900, rmat::RmatParams::default(), 31);
+        let m = Csr::from_edgelist(&el);
+        let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let mut buf = Vec::new();
+        img.write_to(&mut buf).unwrap();
+        store.put("a.semm", &buf).unwrap();
+
+        // Insert fresh edges and delete existing ones so the effective
+        // count moves both ways off the base nnz. Compaction is held
+        // off so the sweep really runs base ⊕ overlay with a stale
+        // `meta().nnz` — the path under test.
+        let dcfg = DeltaConfig {
+            compact_runs: usize::MAX,
+            major_compact_ratio: f64::INFINITY,
+            ..Default::default()
+        };
+        let ds = DeltaStore::open(&store, "a.semm", dcfg).unwrap();
+        let n = img.meta.nrows as u32;
+        let mut edits = Vec::new();
+        for k in 0..160u32 {
+            let (r, c) = ((k * 11) % n, (k * 29) % n);
+            let op = if k % 4 == 0 {
+                DeltaOp::delete(r, c)
+            } else {
+                DeltaOp::upsert(r, c, 1.0)
+            };
+            ds.stage(op).unwrap();
+            edits.push(op);
+        }
+        ds.commit().unwrap();
+        assert!(!ds.manifest().unwrap().runs.is_empty(), "edits must stay an overlay");
+        let src = Source::Delta(crate::spmm::DeltaSource::open(&store, "a.semm").unwrap());
+
+        // Reference: the mutated edge set converted from scratch.
+        let mut set: std::collections::BTreeSet<(u32, u32)> = std::collections::BTreeSet::new();
+        for r in 0..m.nrows {
+            for k in m.indptr[r] as usize..m.indptr[r + 1] as usize {
+                set.insert((r as u32, m.indices[k]));
+            }
+        }
+        for op in &edits {
+            if op.tombstone {
+                set.remove(&(op.row, op.col));
+            } else {
+                set.insert((op.row, op.col));
+            }
+        }
+        let pairs: Vec<(u32, u32)> = set.into_iter().collect();
+        let m2 = Csr::from_sorted_pairs(m.nrows, m.ncols, &pairs);
+        let ref_img = Arc::new(TiledImage::build(&m2, 64, TileFormat::Scsr));
+        assert_ne!(ref_img.meta.nnz, img.meta.nnz, "edits must change the count");
+
+        let cfg = NmfConfig {
+            k: 4,
+            iterations: 3,
+            cols_in_mem: 4,
+            spmm: SpmmOpts::sequential(),
+            ..Default::default()
+        };
+        let got = nmf(&src, &store, &cfg).unwrap().residuals;
+        let want = nmf(&Source::Mem(ref_img), &store, &cfg).unwrap().residuals;
+        assert_eq!(got, want, "delta residuals must match reconversion exactly");
     }
 
     #[test]

@@ -166,15 +166,29 @@ impl Catalog {
     /// or compaction never disturbs an in-flight sweep.
     pub fn open_adj_current(&self, imgs: &DatasetImages) -> Result<crate::spmm::Source> {
         let man = crate::io::delta::Manifest::load(&self.store, &imgs.adj)?;
+        self.open_adj_at(imgs, &man)
+    }
+
+    /// Open A at the version pinned by a caller-held manifest snapshot.
+    /// Callers that also key state off the snapshot's version token
+    /// (the service's batch ride key) load the manifest once and pass
+    /// it here — loading it twice would let a commit land in between,
+    /// tagging a new-version source with the old token.
+    pub fn open_adj_at(
+        &self,
+        imgs: &DatasetImages,
+        man: &crate::io::delta::Manifest,
+    ) -> Result<crate::spmm::Source> {
         if man.runs.is_empty() {
             Ok(crate::spmm::Source::Sem(crate::spmm::SemSource::open(
                 &self.store,
                 &man.base,
             )?))
         } else {
-            Ok(crate::spmm::Source::Delta(crate::spmm::DeltaSource::open(
+            Ok(crate::spmm::Source::Delta(crate::spmm::DeltaSource::open_at(
                 &self.store,
                 &imgs.adj,
+                man,
             )?))
         }
     }

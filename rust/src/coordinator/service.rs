@@ -494,10 +494,13 @@ impl Service {
 
     /// The current-version source plus the batch key that names it.
     /// Keying rides by `image@version` keeps a request committed after
-    /// an update from sharing a sweep with one admitted before it.
+    /// an update from sharing a sweep with one admitted before it. One
+    /// manifest snapshot feeds both the source and the key: a commit
+    /// landing between two separate loads could tag a new-version
+    /// source with the old token and share a sweep across versions.
     fn open_current(&self, imgs: &super::catalog::DatasetImages) -> Result<(Source, String)> {
         let man = crate::io::delta::Manifest::load(self.catalog.store(), &imgs.adj)?;
-        let src = self.catalog.open_adj_current(imgs)?;
+        let src = self.catalog.open_adj_at(imgs, &man)?;
         Ok((src, format!("{}@{}", imgs.adj, man.version_token())))
     }
 

@@ -170,6 +170,9 @@ pub fn decode_run(bytes: &[u8]) -> Result<(RunMeta, Vec<DeltaOp>)> {
     let seq = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
     let n_ops = u64::from_le_bytes(bytes[40..48].try_into().unwrap());
     let ntr = u32::from_le_bytes(bytes[48..52].try_into().unwrap()) as usize;
+    if image.tile == 0 {
+        bail!("delta-run header has tile size 0");
+    }
     if ntr != image.n_tile_rows() {
         bail!("inconsistent delta-run tile-row count");
     }
@@ -181,7 +184,20 @@ pub fn decode_run(bytes: &[u8]) -> Result<(RunMeta, Vec<DeltaOp>)> {
     let mut ops = Vec::with_capacity(n_ops as usize);
     for k in 0..n_ops as usize {
         let at = data_start + k * OP_BYTES;
-        ops.push(DeltaOp::read(&bytes[at..at + OP_BYTES]));
+        let op = DeltaOp::read(&bytes[at..at + OP_BYTES]);
+        // Corruption that keeps a plausible header (e.g. a truncated
+        // data area padded back out) must fail here, not panic later in
+        // overlay bucketing or the tile-row merge.
+        if op.row as usize >= image.nrows || op.col as usize >= image.ncols {
+            bail!(
+                "delta run (seq {seq}) op {k} at ({}, {}) outside the {}×{} image",
+                op.row,
+                op.col,
+                image.nrows,
+                image.ncols
+            );
+        }
+        ops.push(op);
     }
     Ok((RunMeta { image, seq, n_ops }, ops))
 }
@@ -442,6 +458,21 @@ mod tests {
         let mut bytes = encode_run(&img.meta, 0, &sample_ops(&m, 4, 100));
         bytes.truncate(bytes.len() - 5);
         assert!(decode_run(&bytes).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_ops() {
+        let m = sample_csr(false, 5);
+        let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+        let mut ops = sample_ops(&m, 6, 50);
+        ops.push(DeltaOp::upsert(img.meta.nrows as u32, 0, 1.0));
+        assert!(decode_run(&encode_run(&img.meta, 0, &ops)).is_err());
+        let bad_col = encode_run(
+            &img.meta,
+            0,
+            &[DeltaOp::upsert(0, img.meta.ncols as u32, 1.0)],
+        );
+        assert!(decode_run(&bad_col).is_err());
     }
 
     #[test]

@@ -22,6 +22,13 @@
 //! exactly how an aborted compaction's partial output gets reclaimed on
 //! the next attempt.
 //!
+//! The manifest's read-modify-write (commit, compaction, GC) is
+//! serialized by an internal mutex: one [`DeltaStore`] is shared by
+//! every service connection, and [`DeltaStore::stage`]'s auto-commit
+//! fires on whichever thread fills the buffer — without the lock two
+//! committers could allocate the same run sequence, lose each other's
+//! manifest update, or GC a durable-but-unpublished run.
+//!
 //! Major compaction re-encodes each touched tile row with the canonical
 //! [`crate::format::delta::merge_tile_row`], so the new base is
 //! byte-identical to a from-scratch reconversion of the mutated matrix
@@ -160,13 +167,27 @@ impl Manifest {
 /// newest-wins edit list (what a [`crate::spmm::DeltaSource`] overlays).
 pub fn load_state(store: &Arc<ShardedStore>, name: &str) -> Result<(Manifest, Vec<DeltaOp>)> {
     let man = Manifest::load(store, name)?;
+    let ops = load_ops(store, name, &man)?;
+    Ok((man, ops))
+}
+
+/// Load and collapse the live runs named by a caller-held manifest
+/// snapshot. Callers that also key state off the snapshot's version
+/// token (the service's batch ride key) load the manifest **once** and
+/// pass it here, so the opened source and the token can never straddle
+/// a commit that lands between two loads.
+pub fn load_ops(
+    store: &Arc<ShardedStore>,
+    name: &str,
+    man: &Manifest,
+) -> Result<Vec<DeltaOp>> {
     let mut runs: Vec<Vec<DeltaOp>> = Vec::with_capacity(man.runs.len());
     for &seq in &man.runs {
         let bytes = store.get(&Manifest::run_object(name, seq))?;
         let (_, ops) = decode_run(&bytes)?;
         runs.push(ops);
     }
-    Ok((man, collapse(runs.iter().map(|v| v.as_slice()))))
+    Ok(collapse(runs.iter().map(|v| v.as_slice())))
 }
 
 /// What one [`DeltaStore::commit`] did.
@@ -193,6 +214,11 @@ pub struct DeltaStore {
     cfg: DeltaConfig,
     meta: TiledMeta,
     buf: Mutex<BTreeMap<(u32, u32), DeltaOp>>,
+    /// Serializes the manifest read-modify-write of commit / compaction
+    /// / GC across the threads sharing this store (see module docs).
+    /// Never held while `buf` is locked for staging, so `stage` stays
+    /// concurrent with an in-flight commit.
+    admin: Mutex<()>,
 }
 
 impl DeltaStore {
@@ -211,6 +237,7 @@ impl DeltaStore {
             cfg,
             meta,
             buf: Mutex::new(BTreeMap::new()),
+            admin: Mutex::new(()),
         })
     }
 
@@ -257,8 +284,15 @@ impl DeltaStore {
     /// Flush the staging buffer as one sorted run, then apply the
     /// compaction triggers. Starts with a GC pass so any partial
     /// objects an aborted earlier attempt left behind are reclaimed.
+    /// Safe to call from any thread: the internal mutex serializes it
+    /// against concurrent commits, compactions, and GC.
     pub fn commit(&self) -> Result<CommitReport> {
-        self.gc()?;
+        let _admin = self.admin.lock().unwrap_or_else(|p| p.into_inner());
+        self.commit_locked()
+    }
+
+    fn commit_locked(&self) -> Result<CommitReport> {
+        self.gc_locked()?;
         let ops: Vec<DeltaOp> = {
             let mut buf = self.buf.lock().unwrap();
             std::mem::take(&mut *buf).into_values().collect()
@@ -283,12 +317,12 @@ impl DeltaStore {
         }
         let man = Manifest::load(&self.store, &self.name)?;
         if man.runs.len() >= self.cfg.compact_runs.max(2) {
-            self.compact_runs()?;
+            self.compact_runs_locked()?;
         }
         if !man.runs.is_empty() && self.delta_bytes()? as f64
             >= self.cfg.major_compact_ratio * self.base_bytes()? as f64
         {
-            report.major_compacted = self.major_compact()?;
+            report.major_compacted = self.major_compact_locked()?;
         }
         let man = Manifest::load(&self.store, &self.name)?;
         report.runs = man.runs.len();
@@ -300,7 +334,12 @@ impl DeltaStore {
     /// amplification of every subsequent sweep. Returns whether
     /// anything was folded.
     pub fn compact_runs(&self) -> Result<bool> {
-        self.gc()?;
+        let _admin = self.admin.lock().unwrap_or_else(|p| p.into_inner());
+        self.compact_runs_locked()
+    }
+
+    fn compact_runs_locked(&self) -> Result<bool> {
+        self.gc_locked()?;
         let mut man = Manifest::load(&self.store, &self.name)?;
         if man.runs.len() < 2 {
             return Ok(false);
@@ -329,12 +368,33 @@ impl DeltaStore {
     /// stream on undisturbed; a failure before the swap leaves the
     /// previous version current and the partial new base to GC.
     pub fn major_compact(&self) -> Result<bool> {
-        self.gc()?;
+        let _admin = self.admin.lock().unwrap_or_else(|p| p.into_inner());
+        self.major_compact_locked()
+    }
+
+    fn major_compact_locked(&self) -> Result<bool> {
+        self.gc_locked()?;
         let man = Manifest::load(&self.store, &self.name)?;
         if man.runs.is_empty() {
             return Ok(false);
         }
         let (_, ops) = load_state(&self.store, &self.name)?;
+        for op in &ops {
+            // `decode_run` bounds-checks against the run's own header;
+            // re-check against the layer's meta so a run whose header
+            // disagrees with the base image fails cleanly here instead
+            // of panicking inside the overlay/merge.
+            if op.row as usize >= self.meta.nrows || op.col as usize >= self.meta.ncols {
+                bail!(
+                    "delta run edit ({}, {}) outside the {}×{} image {} — refusing to compact",
+                    op.row,
+                    op.col,
+                    self.meta.nrows,
+                    self.meta.ncols,
+                    self.name
+                );
+            }
+        }
         let overlay = DeltaOverlay::new(&self.meta, ops);
 
         let base = self.store.open_file(&man.base)?;
@@ -415,6 +475,11 @@ impl DeltaStore {
     /// debris of compactions that died between write and swap. Returns
     /// how many objects were reclaimed.
     pub fn gc(&self) -> Result<u64> {
+        let _admin = self.admin.lock().unwrap_or_else(|p| p.into_inner());
+        self.gc_locked()
+    }
+
+    fn gc_locked(&self) -> Result<u64> {
         let man = Manifest::load(&self.store, &self.name)?;
         let mut removed = 0u64;
         for seq in 0..=man.next_seq {
@@ -424,7 +489,15 @@ impl DeltaStore {
                 removed += 1;
             }
         }
-        for v in man.base_version + 1..=man.base_version + 2 {
+        // Unreferenced base versions: above the current one (partial
+        // output of an aborted major compaction) and below it (a major
+        // compaction that died after the swap but before removing the
+        // superseded base). Version 0 is the catalog's converted image
+        // and is never reclaimed.
+        for v in 1..=man.base_version + 2 {
+            if v == man.base_version {
+                continue;
+            }
             let obj = Manifest::base_object(&self.name, v);
             if self.store.exists(&obj) {
                 self.store.remove(&obj)?;
@@ -646,6 +719,69 @@ mod tests {
             let got = store.read_object_unmetered(&man.base).unwrap();
             assert_eq!(got, wbytes, "weighted={weighted}");
         }
+    }
+
+    #[test]
+    fn concurrent_stage_and_commit_lose_no_acknowledged_edits() {
+        // A tiny buffer makes staging auto-commit constantly from both
+        // threads — the exact path that used to race commit's manifest
+        // read-modify-write (same seq allocated twice, lost manifest
+        // updates, GC deleting another commit's unpublished run).
+        let (_d, store, _) = setup(false);
+        let cfg = DeltaConfig {
+            buffer_bytes: 4 * crate::format::delta::OP_BYTES as u64,
+            compact_runs: 3,
+            major_compact_ratio: f64::INFINITY,
+        };
+        let ds = Arc::new(DeltaStore::open(&store, "g.semm", cfg).unwrap());
+        let n = 120u32;
+        std::thread::scope(|s| {
+            for t in 0..2u32 {
+                let ds = ds.clone();
+                s.spawn(move || {
+                    for k in 0..n {
+                        ds.stage(DeltaOp::upsert(t, k, (t * n + k) as f32)).unwrap();
+                    }
+                });
+            }
+        });
+        ds.commit().unwrap();
+        let (_, ops) = load_state(&store, "g.semm").unwrap();
+        assert_eq!(ops.len(), 2 * n as usize, "every acknowledged edit survives");
+        for t in 0..2u32 {
+            for k in 0..n {
+                assert!(
+                    ops.contains(&DeltaOp::upsert(t, k, (t * n + k) as f32)),
+                    "edit ({t}, {k}) lost"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gc_reclaims_superseded_bases_below_the_current_version() {
+        // A major compaction that dies after the manifest swap but
+        // before removing the old base must not leak it forever.
+        let (_d, store, _) = setup(false);
+        let ds = DeltaStore::open(&store, "g.semm", DeltaConfig::default()).unwrap();
+        store
+            .put(&Manifest::base_object("g.semm", 1), b"superseded")
+            .unwrap();
+        store
+            .put(&Manifest::base_object("g.semm", 2), b"current")
+            .unwrap();
+        Manifest {
+            base: Manifest::base_object("g.semm", 2),
+            base_version: 2,
+            next_seq: 0,
+            runs: Vec::new(),
+        }
+        .store(&store, "g.semm")
+        .unwrap();
+        assert_eq!(ds.gc().unwrap(), 1);
+        assert!(!store.exists(&Manifest::base_object("g.semm", 1)));
+        assert!(store.exists(&Manifest::base_object("g.semm", 2)), "current kept");
+        assert!(store.exists("g.semm"), "version 0 is never reclaimed");
     }
 
     #[test]

@@ -121,7 +121,20 @@ impl DeltaSource {
     /// Open image object `name` at its current delta-layer version: the
     /// manifest's base plus all live runs collapsed newest-wins.
     pub fn open(store: &Arc<ShardedStore>, name: &str) -> Result<DeltaSource> {
-        let (man, ops) = crate::io::delta::load_state(store, name)?;
+        let man = crate::io::delta::Manifest::load(store, name)?;
+        Self::open_at(store, name, &man)
+    }
+
+    /// Open the version pinned by a caller-held manifest snapshot.
+    /// Callers that also derive state from the snapshot (the service
+    /// keys batch rides on its version token) use this so the source
+    /// and that state can never straddle a concurrent commit.
+    pub fn open_at(
+        store: &Arc<ShardedStore>,
+        name: &str,
+        man: &crate::io::delta::Manifest,
+    ) -> Result<DeltaSource> {
+        let ops = crate::io::delta::load_ops(store, name, man)?;
         let base = SemSource::open(store, &man.base)?;
         for op in &ops {
             if op.row as usize >= base.meta.nrows || op.col as usize >= base.meta.ncols {
@@ -163,8 +176,9 @@ impl Source {
             Source::Mem(img) => &img.meta,
             Source::Sem(s) => &s.meta,
             // The base meta: shape/tile/encoding are version-invariant.
-            // (`nnz` may be stale under an overlay; no compute path
-            // reads it.)
+            // (`nnz` may be stale under an overlay; compute paths that
+            // need the true count — e.g. nmf's residual — must derive
+            // it from the merged view instead.)
             Source::Delta(d) => &d.base.meta,
         }
     }
