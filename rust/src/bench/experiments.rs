@@ -1446,3 +1446,83 @@ pub fn delta_updates(b: &Bench) -> Result<()> {
         &rows,
     )
 }
+
+/// ------------------------------------------------------ backend_matrix
+/// The dense-backend capability/cost matrix plus the SIMD tile-kernel
+/// ablation. Part 1 probes every available [`crate::runtime::DenseBackend`]
+/// (native always; PJRT when the build and artifacts provide one) across
+/// the op classes and prints the measured GB/s with the per-class routing
+/// a `backend.mode = auto` planner would pick. Part 2 times full `A·X`
+/// sweeps at `p ∈ {8, 16}` with the SIMD arms pinned off vs. forced on,
+/// asserting the forward gather outputs are **bit-identical** — the
+/// speedup column is informational (a loaded single-core box may show
+/// ~1×; the identity assert is the hard check).
+pub fn backend_matrix(b: &Bench) -> Result<()> {
+    use crate::runtime::{self, planner, OpClass};
+    use crate::spmm::SimdMode;
+
+    let mut rows = Vec::new();
+
+    // Part 1: per-op GB/s of each backend + the planner's routing.
+    let native = runtime::default_backend();
+    let mut reports = vec![planner::probe(native.as_ref())];
+    if let Some(accel) = runtime::backend_from_env() {
+        reports.push(planner::probe(accel.as_ref()));
+    }
+    for c in OpClass::ALL {
+        let winner = reports
+            .iter()
+            .max_by(|a, b| {
+                a.gbps[c.index()]
+                    .partial_cmp(&b.gbps[c.index()])
+                    .unwrap()
+            })
+            .unwrap()
+            .backend;
+        let cells: Vec<String> = reports
+            .iter()
+            .map(|r| format!("{}={:.3}", r.backend, r.gbps[c.index()]))
+            .collect();
+        rows.push(format!(
+            "probe\t{}\t{}\t->{winner}",
+            c.name(),
+            cells.join("\t")
+        ));
+    }
+
+    // Part 2: SIMD-off vs SIMD-on sweeps, bit-identity enforced.
+    let spec = b.dataset("rmat-160").unwrap();
+    let imgs = b.catalog.ensure(&spec)?;
+    let src = im_source(b, &imgs)?;
+    let n = src.meta().ncols;
+    for p in [8usize, 16] {
+        let x = DenseMatrix::random(n, p, 31);
+        let run = |mode: SimdMode| -> Result<(DenseMatrix, f64, &'static str)> {
+            let opts = SpmmOpts {
+                simd: mode,
+                ..b.opts.clone()
+            };
+            let (out, stats) = engine::spmm_out(&src, &x, &opts)?;
+            let kernel = stats.per_op.first().map(|o| o.kernel).unwrap_or("?");
+            let secs = b.time3(|| {
+                Ok(engine::spmm_out(&src, &x, &opts)?.1.secs)
+            })?;
+            Ok((out, secs, kernel))
+        };
+        let (out_off, secs_off, k_off) = run(SimdMode::Off)?;
+        let (out_on, secs_on, k_on) = run(SimdMode::On)?;
+        anyhow::ensure!(
+            out_off.data == out_on.data,
+            "p={p}: SIMD-on forward sweep is not bit-identical to scalar"
+        );
+        rows.push(format!(
+            "sweep\tp={p}\t{k_off}={secs_off:.4}s\t{k_on}={secs_on:.4}s\tx{:.2} bit-identical",
+            secs_off / secs_on.max(1e-12)
+        ));
+    }
+    b.emit(
+        "backend_matrix",
+        "part\top\tbaseline\tcandidate\tverdict",
+        &rows,
+    )
+}

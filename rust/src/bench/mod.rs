@@ -134,11 +134,13 @@ impl Bench {
 /// reconstruction through an injected dead shard, semiring graph
 /// traversals (BFS/SSSP) plus out-of-core A·A SpGEMM SEM vs. IM, and
 /// incremental PageRank refresh over the LSM delta layer vs. full
-/// reconversion after committed edge-update batches.
+/// reconversion after committed edge-update batches. `backend_matrix`
+/// prints the dense-backend capability probe (GB/s per op class) and
+/// the SIMD-vs-scalar tile-kernel timings with a bit-identity check.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig5a", "fig5b", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "tab2", "fig14", "fig15", "fig16", "scale_shards", "cache_sweep", "fused_ops",
-    "serve_batch", "qos_tenants", "semiring_apps", "delta_updates",
+    "serve_batch", "qos_tenants", "semiring_apps", "delta_updates", "backend_matrix",
 ];
 
 /// Run one experiment by name.
@@ -166,6 +168,7 @@ pub fn run(bench: &Bench, exp: &str) -> Result<()> {
         "qos_tenants" => qos_tenants(bench),
         "semiring_apps" => semiring_apps(bench),
         "delta_updates" => delta_updates(bench),
+        "backend_matrix" => backend_matrix(bench),
         "all" => {
             for e in ALL_EXPERIMENTS {
                 if *e == "fig5b" {

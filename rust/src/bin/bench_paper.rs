@@ -3,7 +3,8 @@
 //! ```text
 //! bench-paper [--scale N] [--threads N] [--gbps F] [--tile N]
 //!             [--shards N] [--stripe-kb N] [--store-json FILE]
-//!             [--cache-mb N] [--store DIR] [--out DIR] <experiment>|all
+//!             [--cache-mb N] [--store DIR] [--out DIR]
+//!             [--backend-matrix] <experiment>|all
 //! ```
 //!
 //! Experiments: fig2 fig5a fig5b fig6 fig7 fig8 fig9 fig10 fig11 fig12
@@ -25,6 +26,10 @@
 //! then keep their hottest tile rows resident between passes; with a
 //! budget at least the matrix size they stop reading the store entirely
 //! after the first pass. `cache_sweep` sweeps this budget.
+//! `--backend-matrix` is shorthand for the `backend_matrix` experiment:
+//! the dense-backend GB/s probe table plus the SIMD-off vs SIMD-on
+//! sweep timings with their bit-identity check (`SEM_SPMM_SIMD=off`
+//! pins the scalar arms for A/B runs).
 
 use anyhow::{bail, Context, Result};
 use sem_spmm::bench::{Bench, ALL_EXPERIMENTS};
@@ -53,6 +58,7 @@ fn run() -> Result<()> {
     let mut shards = 1usize;
     let mut stripe_kb = (sem_spmm::io::DEFAULT_STRIPE_BYTES >> 10) as u64;
     let mut store_json: Option<PathBuf> = None;
+    let mut forced_exp: Option<String> = None;
 
     let mut i = 0;
     while i < args.len() {
@@ -106,10 +112,14 @@ fn run() -> Result<()> {
                 store_json = Some(PathBuf::from(take(&args, i)?));
                 args.drain(i..=i + 1);
             }
+            "--backend-matrix" => {
+                forced_exp = Some("backend_matrix".to_string());
+                args.drain(i..=i);
+            }
             _ => i += 1,
         }
     }
-    let Some(exp) = args.first() else {
+    let Some(exp) = forced_exp.as_deref().or(args.first().map(String::as_str)) else {
         bail!(
             "usage: bench-paper [flags] <experiment>|all\nexperiments: {}",
             ALL_EXPERIMENTS.join(" ")

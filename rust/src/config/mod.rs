@@ -13,6 +13,9 @@
 //! spmm.threads       = 48
 //! spmm.cache_bytes   = 2097152
 //! spmm.cache_mb      = 2048       # tile-row cache budget (MiB, 0 = off)
+//! spmm.simd          = auto       # SIMD tile-kernel arms: auto | on | off
+//! backend.mode       = auto       # dense-op backend: auto | native | pjrt
+//! backend.probe      = on         # measure per-op GB/s at open time (auto mode)
 //! mem.budget_gb      = 8
 //! nmf.fused          = on         # one sweep computes A·Hᵀ + Aᵀ·W + residual
 //! pagerank.tol       = 1e-7       # in-pass L1 residual early stop (0 = off)
@@ -146,19 +149,51 @@ impl Config {
 
     /// Build the engine options (`spmm.*` keys). `spmm.cache_mb` is the
     /// tile-row cache budget in MiB (0, the default, disables caching).
+    /// `spmm.simd` picks the SIMD kernel policy (`auto`/`on`/`off`; the
+    /// `SEM_SPMM_SIMD` environment variable overrides it at run time).
     pub fn spmm_opts(&self) -> Result<SpmmOpts> {
         let d = SpmmOpts::default();
+        let simd = match self.get("spmm.simd") {
+            None => d.simd,
+            Some(v) => crate::spmm::simd::parse_simd_mode(v)
+                .ok_or_else(|| anyhow::anyhow!("config spmm.simd={v}: expected auto|on|off"))?,
+        };
         Ok(SpmmOpts {
             threads: self.get_usize("spmm.threads", d.threads)?,
             load_balance: self.get_bool("spmm.load_balance", d.load_balance)?,
             cache_blocking: self.get_bool("spmm.cache_blocking", d.cache_blocking)?,
             vectorize: self.get_bool("spmm.vectorize", d.vectorize)?,
+            simd,
             io_polling: self.get_bool("spmm.io_polling", d.io_polling)?,
             buf_pool: self.get_bool("spmm.buf_pool", d.buf_pool)?,
             io_workers: self.get_usize("spmm.io_workers", d.io_workers)?,
             cache_bytes: self.get_usize("spmm.cache_bytes", d.cache_bytes)?,
             cache_budget_bytes: (self.get_f64("spmm.cache_mb", 0.0)? * (1u64 << 20) as f64)
                 as u64,
+        })
+    }
+
+    /// Dense-op backend routing (`backend.*` keys):
+    ///
+    /// * `backend.mode` — `auto` (default) probes the available backends
+    ///   at open time and routes each dense op class (Gram, XᵀY, NMF
+    ///   updates, PageRank combine) to whichever measured faster;
+    ///   `native` pins the in-process CPU kernels (and preserves the
+    ///   fused in-pass paths); `pjrt` pins the accelerator backend for
+    ///   every op it supports.
+    /// * `backend.probe` — default on; `off` skips the open-time GB/s
+    ///   microbenchmarks and falls back to a static preference order
+    ///   (useful for cold-start-sensitive serving).
+    pub fn backend_config(&self) -> Result<crate::runtime::BackendConfig> {
+        let mode = match self.get_or("backend.mode", "auto") {
+            "auto" => crate::runtime::BackendMode::Auto,
+            "native" => crate::runtime::BackendMode::Native,
+            "pjrt" => crate::runtime::BackendMode::Pjrt,
+            v => bail!("config backend.mode={v}: expected auto|native|pjrt"),
+        };
+        Ok(crate::runtime::BackendConfig {
+            mode,
+            probe: self.get_bool("backend.probe", true)?,
         })
     }
 
@@ -494,6 +529,40 @@ mod tests {
             let c = Config::parse(&format!("{bad}\n")).unwrap();
             assert!(c.delta_config().is_err(), "'{bad}' must be rejected");
         }
+    }
+
+    #[test]
+    fn simd_key_default_and_parse() {
+        use crate::spmm::SimdMode;
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.spmm_opts().unwrap().simd, SimdMode::Auto);
+        for (v, want) in [
+            ("auto", SimdMode::Auto),
+            ("on", SimdMode::On),
+            ("off", SimdMode::Off),
+        ] {
+            let c = Config::parse(&format!("spmm.simd = {v}\n")).unwrap();
+            assert_eq!(c.spmm_opts().unwrap().simd, want, "spmm.simd = {v}");
+        }
+        let c = Config::parse("spmm.simd = sideways\n").unwrap();
+        assert!(c.spmm_opts().is_err());
+    }
+
+    #[test]
+    fn backend_keys_default_and_parse() {
+        use crate::runtime::BackendMode;
+        let c = Config::parse("").unwrap();
+        let b = c.backend_config().unwrap();
+        assert_eq!(b.mode, BackendMode::Auto);
+        assert!(b.probe, "probe defaults on");
+        let c = Config::parse("backend.mode = native\nbackend.probe = off\n").unwrap();
+        let b = c.backend_config().unwrap();
+        assert_eq!(b.mode, BackendMode::Native);
+        assert!(!b.probe);
+        let c = Config::parse("backend.mode = pjrt\n").unwrap();
+        assert_eq!(c.backend_config().unwrap().mode, BackendMode::Pjrt);
+        let c = Config::parse("backend.mode = gpu\n").unwrap();
+        assert!(c.backend_config().is_err());
     }
 
     #[test]

@@ -50,6 +50,13 @@ pub struct Catalog {
     store: Arc<ShardedStore>,
     pub tile: usize,
     pub format: TileFormat,
+    /// Open-time dense-backend decision, resolved lazily on first ask
+    /// and shared by every clone of this catalog: the capability/cost
+    /// probe behind [`crate::runtime::planned_backend`] costs real
+    /// milliseconds, so it must run once per opened catalog — not once
+    /// per request — and every app served from the same catalog must
+    /// see the same routing.
+    backend: Arc<std::sync::OnceLock<Option<Arc<dyn crate::runtime::DenseBackend>>>>,
 }
 
 impl Catalog {
@@ -58,7 +65,21 @@ impl Catalog {
             store,
             tile,
             format: TileFormat::Scsr,
+            backend: Arc::new(std::sync::OnceLock::new()),
         }
+    }
+
+    /// The dense backend apps should offload through under `cfg`,
+    /// resolved (probing included) on the first call and cached for the
+    /// catalog's lifetime. `None` means "stay native": keep in-process
+    /// kernels and the fused in-pass hooks.
+    pub fn backend(
+        &self,
+        cfg: &crate::runtime::BackendConfig,
+    ) -> Option<Arc<dyn crate::runtime::DenseBackend>> {
+        self.backend
+            .get_or_init(|| crate::runtime::planned_backend(cfg))
+            .clone()
     }
 
     pub fn store(&self) -> &Arc<ShardedStore> {
@@ -229,6 +250,26 @@ mod tests {
         assert_eq!(a.nnz, b.nnz);
         assert_eq!(a.num_verts, 1024);
         assert_eq!(a.degrees.len(), 1024);
+    }
+
+    #[test]
+    fn backend_decision_is_cached_and_shared_across_clones() {
+        use crate::runtime::{BackendConfig, BackendMode};
+        let dir = crate::util::tempdir();
+        let store = ShardedStore::open(StoreSpec::unthrottled(dir.path())).unwrap();
+        let cat = Catalog::new(store, 256);
+        let first = cat.backend(&BackendConfig::default());
+        // A clone asking with a *different* config still sees the first
+        // resolution — one probe, one routing, per opened catalog.
+        let again = cat.clone().backend(&BackendConfig {
+            mode: BackendMode::Pjrt,
+            probe: false,
+        });
+        match (first, again) {
+            (None, None) => {}
+            (Some(a), Some(b)) => assert!(Arc::ptr_eq(&a, &b)),
+            _ => panic!("clone saw a different backend decision"),
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! ablation baseline, which incurs a context switch per I/O).
 
 use super::cache::FillGuard;
-use super::pool::BufferPool;
+use super::pool::{BufferPool, IoBuf};
 use super::sharded::ShardedFile;
 use crate::io::ShardedStore;
 use anyhow::{anyhow, Error, Result};
@@ -25,7 +25,7 @@ use std::thread::JoinHandle;
 #[derive(Debug, Default)]
 struct Slot {
     /// The assembled logical buffer (present unless an error struck).
-    buf: Option<Vec<u8>>,
+    buf: Option<IoBuf>,
     /// First error among the sub-reads, if any.
     err: Option<Error>,
     /// Tile-row-cache fill to run when the last sub-read lands
@@ -101,7 +101,7 @@ impl IoTicket {
     /// completion flag; `false` parks on a condvar (one context switch).
     /// Any failed sub-read surfaces as an `Err` — including when only one
     /// of N shards failed.
-    pub fn wait(self, polling: bool) -> Result<Vec<u8>> {
+    pub fn wait(self, polling: bool) -> Result<IoBuf> {
         let mut slot = if polling {
             let mut spins = 0u32;
             while !self.is_done() {
@@ -291,7 +291,7 @@ impl IoEngine {
     }
 
     /// Return a consumed buffer to the pool for reuse.
-    pub fn recycle(&self, buf: Vec<u8>) {
+    pub fn recycle(&self, buf: IoBuf) {
         self.pool.put(buf);
     }
 

@@ -53,7 +53,7 @@ pub mod writer;
 pub use cache::{CacheUsage, FillGuard, FillPlan, GroupFetch, TileRowCache};
 pub use delta::{CommitReport, DeltaConfig, DeltaStore, Manifest};
 pub use engine::{IoEngine, IoTicket};
-pub use pool::BufferPool;
+pub use pool::{BufferPool, IoBuf};
 pub use sharded::{ShardedFile, ShardedStore, StoreSpec, DEFAULT_STRIPE_BYTES};
 pub use store::{ExtMemStore, StoreConfig, StoreFile};
 pub use writer::MergedWriter;

@@ -11,9 +11,18 @@
 //! (one giant read must not pin a giant allocation forever), and the pool
 //! refuses buffers once its total retained capacity would exceed
 //! [`BufferPool::max_retained_bytes`].
+//!
+//! Buffers are [`IoBuf`]s — 64-byte-aligned byte buffers — so tile-row
+//! payloads handed to the SIMD kernels start cache-line aligned without
+//! any copy (see [`crate::util::aligned`]).
 
 use crate::metrics::IoStats;
 use std::sync::{Arc, Mutex};
+
+/// The pooled I/O buffer type: a byte buffer whose live window starts
+/// 64-byte aligned. Derefs to `[u8]`, so existing slice-based consumers
+/// are unaffected.
+pub type IoBuf = crate::util::AlignedBuf<u8>;
 
 /// Default per-buffer retained-capacity cap (64 MiB).
 pub const DEFAULT_MAX_BUFFER_BYTES: usize = 64 << 20;
@@ -22,7 +31,7 @@ pub const DEFAULT_MAX_RETAINED_BYTES: usize = 512 << 20;
 
 #[derive(Debug, Default)]
 struct PoolInner {
-    free: Vec<Vec<u8>>,
+    free: Vec<IoBuf>,
     /// Total capacity of the buffers in `free`.
     bytes: usize,
 }
@@ -112,13 +121,13 @@ impl BufferPool {
     /// Get a buffer of length exactly `len` (reusing a pooled allocation
     /// when possible). Contents are unspecified (callers overwrite via
     /// I/O).
-    pub fn get(&self, len: usize) -> Vec<u8> {
+    pub fn get(&self, len: usize) -> IoBuf {
         if self.enabled {
             let reused = {
                 let mut inner = self.inner.lock().unwrap();
                 let buf = inner.free.pop();
                 if let Some(b) = &buf {
-                    inner.bytes -= b.capacity();
+                    inner.bytes -= b.capacity_bytes();
                 }
                 buf
             };
@@ -127,7 +136,7 @@ impl BufferPool {
                     s.pool_hits.inc();
                 }
                 // Resize if too small for the new request (paper §3.5).
-                buf.resize(len, 0);
+                buf.resize_zeroed(len);
                 return buf;
             }
         }
@@ -136,16 +145,16 @@ impl BufferPool {
         }
         // Fresh allocation — zeroing forces the first-touch page faults the
         // ablation is meant to expose.
-        vec![0u8; len]
+        IoBuf::zeroed(len)
     }
 
     /// Return a buffer to the pool. Buffers that would blow the count or
     /// capacity bounds are dropped instead of retained.
-    pub fn put(&self, buf: Vec<u8>) {
+    pub fn put(&self, buf: IoBuf) {
         if !self.enabled {
             return;
         }
-        let cap = buf.capacity();
+        let cap = buf.capacity_bytes();
         if cap > self.max_buffer_bytes {
             return; // one oversized request must not pin memory forever
         }
@@ -174,6 +183,20 @@ mod tests {
     use super::*;
 
     #[test]
+    fn buffers_come_back_aligned() {
+        let pool = BufferPool::new(true, 4);
+        for len in [1usize, 100, 4096, 100_000] {
+            let b = pool.get(len);
+            assert_eq!(b.as_ptr() as usize % crate::util::aligned::ALIGN, 0, "len={len}");
+            pool.put(b);
+            // Reuse path must stay aligned after the resize too.
+            let b = pool.get(len * 2 + 1);
+            assert_eq!(b.as_ptr() as usize % crate::util::aligned::ALIGN, 0);
+            pool.put(b);
+        }
+    }
+
+    #[test]
     fn reuse_grows_capacity() {
         let pool = BufferPool::new(true, 8);
         let b = pool.get(100);
@@ -200,7 +223,7 @@ mod tests {
     fn bounded_retention() {
         let pool = BufferPool::new(true, 2);
         for _ in 0..5 {
-            pool.put(vec![0u8; 16]);
+            pool.put(IoBuf::zeroed(16));
         }
         assert_eq!(pool.retained(), 2);
     }
@@ -209,10 +232,10 @@ mod tests {
     fn oversized_buffers_are_dropped_not_pinned() {
         // Per-buffer cap 1 KiB: a 1 MiB buffer must not be retained.
         let pool = BufferPool::with_caps(true, 8, 1 << 10, 1 << 20, None);
-        pool.put(vec![0u8; 1 << 20]);
+        pool.put(IoBuf::zeroed(1 << 20));
         assert_eq!(pool.retained(), 0);
         assert_eq!(pool.retained_bytes(), 0);
-        pool.put(vec![0u8; 512]);
+        pool.put(IoBuf::zeroed(512));
         assert_eq!(pool.retained(), 1);
     }
 
@@ -239,7 +262,7 @@ mod tests {
     #[test]
     fn get_accounts_retained_bytes_symmetrically() {
         let pool = BufferPool::with_caps(true, 8, 1 << 20, 1 << 20, None);
-        pool.put(Vec::with_capacity(1000));
+        pool.put(IoBuf::with_capacity(1000));
         let before = pool.retained_bytes();
         assert!(before >= 1000);
         let b = pool.get(10);

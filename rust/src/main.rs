@@ -34,7 +34,6 @@ use sem_spmm::coordinator::{service::Service, Catalog};
 use sem_spmm::format::delta::DeltaOp;
 use sem_spmm::graph::registry;
 use sem_spmm::io::ShardedStore;
-use sem_spmm::runtime;
 use sem_spmm::spmm::{engine, Source};
 use std::path::Path;
 
@@ -200,7 +199,10 @@ fn cmd_pagerank(ctx: &Ctx, args: &[String]) -> Result<()> {
         vecs_in_mem: vecs,
         tol: ctx.cfg.pagerank_tol()?,
         spmm: ctx.cfg.spmm_opts()?,
-        combine_backend: runtime::backend_from_env(),
+        // Per-op routed backend (backend.mode/backend.probe config):
+        // None in a native-only environment, which preserves the fused
+        // in-pass combine (the vecs_in_mem == 3 fast path).
+        combine_backend: ctx.catalog.backend(&ctx.cfg.backend_config()?),
         ..Default::default()
     };
     let (pr, stats) = pagerank::pagerank(&src, &imgs.degrees, &ctx.store, &cfg)?;
@@ -286,7 +288,7 @@ fn cmd_nmf(ctx: &Ctx, args: &[String]) -> Result<()> {
         iterations: iters,
         cols_in_mem: cols,
         spmm: ctx.cfg.spmm_opts()?,
-        backend: runtime::backend_from_env(),
+        backend: ctx.catalog.backend(&ctx.cfg.backend_config()?),
         fused: ctx.cfg.nmf_fused()?,
         ..Default::default()
     };

@@ -15,7 +15,7 @@
 //! effects only (see EXPERIMENTS.md).
 
 use super::DenseMatrix;
-use crate::util::next_pow2;
+use crate::util::{next_pow2, AlignedBuf};
 
 /// Striping configuration.
 #[derive(Debug, Clone, Copy)]
@@ -55,8 +55,11 @@ pub struct NumaDense {
     cfg: NumaConfig,
     /// Interval `i` covers rows `[i * interval_rows, ...)` and lives on
     /// node `i % nodes`. Each buffer is `interval_rows * ncols` long
-    /// (the last one sized to the remaining rows).
-    intervals: Vec<Vec<f32>>,
+    /// (the last one sized to the remaining rows) and starts 64-byte
+    /// aligned, so a tile's dense-row panel begins on a cache line
+    /// whenever `tile * ncols * 4` is a multiple of 64 — the common
+    /// power-of-two shapes the SIMD kernels are tuned for.
+    intervals: Vec<AlignedBuf<f32>>,
 }
 
 impl NumaDense {
@@ -68,7 +71,7 @@ impl NumaDense {
             .map(|i| {
                 let lo = i * cfg.interval_rows;
                 let hi = ((i + 1) * cfg.interval_rows).min(nrows);
-                vec![0.0f32; (hi - lo) * ncols]
+                AlignedBuf::zeroed((hi - lo) * ncols)
             })
             .collect();
         NumaDense {

@@ -16,13 +16,21 @@
 //!
 //! [`backend_from_env`] picks the PJRT backend when the crate is built
 //! with `--features pjrt` *and* the artifacts exist; callers fall back to
-//! [`default_backend`] (native) otherwise.
+//! [`default_backend`] (native) otherwise. [`planner::BackendPlanner`]
+//! sits above both: an open-time capability/cost probe measures each
+//! op class's GB/s per backend and routes every call to the winner
+//! (`backend.mode = auto`), so a deployment no longer has to choose one
+//! backend for *all* ops.
 
 pub mod native;
+pub mod planner;
 #[cfg(feature = "pjrt")]
 pub mod xla;
 
 pub use native::NativeDenseBackend;
+pub use planner::{
+    planned_backend, BackendConfig, BackendMode, BackendPlanner, OpClass, ProbeReport,
+};
 #[cfg(feature = "pjrt")]
 pub use xla::{literal_f32, literal_i32, XlaDenseBackend, XlaRuntime};
 

@@ -1,0 +1,553 @@
+//! Per-op backend dispatch: route each dense op class to the backend
+//! that measured fastest for it, instead of picking one backend
+//! globally.
+//!
+//! The PJRT path wins big on the batched matrix work (Gram, XᵀY, the
+//! fused NMF updates) but pays a per-call dispatch-and-transfer tax that
+//! the tiny elementwise ops (PageRank combine) and the scalar-bound COO
+//! tiles rarely amortize. A global native-vs-pjrt switch therefore
+//! leaves throughput on the table in both directions. [`probe`] measures
+//! the achieved GB/s of every [`OpClass`] on a backend with small,
+//! fixed-seed workloads; [`BackendPlanner`] holds one verdict per class
+//! and forwards each [`DenseBackend`] call to the winner, falling back
+//! to the native implementation whenever the accelerated backend cannot
+//! take the call (unsupported rank) or errors at run time.
+//!
+//! [`planned_backend`] is the open-time entry point driven by the
+//! `backend.mode` / `backend.probe` config keys
+//! ([`crate::config::Config::backend_config`]):
+//!
+//! * `native` — `None`: callers keep the in-process kernels **and** the
+//!   fused in-pass paths (e.g. PageRank's fused combine hook, which an
+//!   external backend would force out of the sweep).
+//! * `pjrt` — the accelerated backend for everything it supports, as
+//!   before ([`super::backend_from_env`]).
+//! * `auto` — a [`BackendPlanner`] over {native, pjrt} when a usable
+//!   accelerated backend exists (probing per op unless `backend.probe =
+//!   off`, which keeps the static per-class preference instead), `None`
+//!   otherwise — an auto configuration on a CPU-only build is exactly
+//!   the native path.
+
+use super::{DenseBackend, NativeDenseBackend, COO_T};
+use crate::matrix::DenseMatrix;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The dense op classes the applications offload — one routing decision
+/// each. Indexes into [`ProbeReport::gbps`] via [`OpClass::index`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// `XᵀX` fold (eigensolver, NMF).
+    Gram,
+    /// `XᵀY` fold (eigensolver re-orthogonalization).
+    Xty,
+    /// Fused NMF H multiplicative update.
+    NmfUpdateH,
+    /// Fused NMF W multiplicative update.
+    NmfUpdateW,
+    /// PageRank elementwise combine.
+    PagerankCombine,
+    /// COO sparse-tile multiply.
+    CooSpmm,
+}
+
+impl OpClass {
+    /// Every class, in [`ProbeReport::gbps`] order.
+    pub const ALL: [OpClass; 6] = [
+        OpClass::Gram,
+        OpClass::Xty,
+        OpClass::NmfUpdateH,
+        OpClass::NmfUpdateW,
+        OpClass::PagerankCombine,
+        OpClass::CooSpmm,
+    ];
+
+    /// Position in [`ProbeReport::gbps`].
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Short name for reports and the `backend_matrix` bench table.
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Gram => "gram",
+            OpClass::Xty => "xty",
+            OpClass::NmfUpdateH => "nmf_h",
+            OpClass::NmfUpdateW => "nmf_w",
+            OpClass::PagerankCombine => "pr_combine",
+            OpClass::CooSpmm => "coo_spmm",
+        }
+    }
+}
+
+/// Dense-backend routing policy (`backend.*` config keys).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendConfig {
+    /// Which backend(s) the apps may use.
+    pub mode: BackendMode,
+    /// Measure per-op GB/s at open time (`auto` mode only).
+    pub probe: bool,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig {
+            mode: BackendMode::Auto,
+            probe: true,
+        }
+    }
+}
+
+/// `backend.mode`: global pin or per-op routing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendMode {
+    /// Route each op class to whichever backend measured faster.
+    Auto,
+    /// In-process CPU kernels only (preserves fused in-pass paths).
+    Native,
+    /// The accelerated backend for everything it supports.
+    Pjrt,
+}
+
+/// Measured throughput of one backend across the op classes.
+#[derive(Debug, Clone)]
+pub struct ProbeReport {
+    /// [`DenseBackend::name`] of the probed backend.
+    pub backend: &'static str,
+    /// Achieved GB/s per class, [`OpClass::ALL`] order; `0.0` where the
+    /// backend rejected the workload (unsupported rank).
+    pub gbps: [f64; 6],
+}
+
+impl ProbeReport {
+    /// `class name → GB/s` lines for logs and the bench table.
+    pub fn lines(&self) -> Vec<String> {
+        OpClass::ALL
+            .iter()
+            .map(|c| format!("{:>10}  {:8.3} GB/s", c.name(), self.gbps[c.index()]))
+            .collect()
+    }
+}
+
+/// Rank used by the probe workloads — representative of the apps
+/// (NMF/eigensolver run k in the 8–32 range).
+const PROBE_K: usize = 16;
+/// Rows of the tall-skinny probe matrices.
+const PROBE_N: usize = 8192;
+/// Elements of the PageRank combine probe vector.
+const PROBE_PR_N: usize = 1 << 18;
+/// Entries of the COO probe tile.
+const PROBE_NNZ: usize = 2048;
+
+/// Measure `be` over every [`OpClass`] with small fixed-seed workloads
+/// (best of 3 timed runs each, one warm-up). The report feeds the
+/// per-op routing of [`BackendPlanner`] and the `backend_matrix` bench
+/// experiment; a class the backend rejects scores `0.0` GB/s.
+pub fn probe(be: &dyn DenseBackend) -> ProbeReport {
+    let k = PROBE_K;
+    let x = DenseMatrix::random(PROBE_N, k, 11);
+    let y = DenseMatrix::random(PROBE_N, k, 12);
+    let h = DenseMatrix::random(k, PROBE_N, 13);
+    let wta = DenseMatrix::random(k, PROBE_N, 14);
+    let wtw = DenseMatrix::random(k, k, 15);
+    let w = DenseMatrix::random(PROBE_N, k, 16);
+    let aht = DenseMatrix::random(PROBE_N, k, 17);
+    let hht = DenseMatrix::random(k, k, 18);
+    let contrib: Vec<f32> = (0..PROBE_PR_N).map(|i| (i % 97) as f32 / 97.0).collect();
+    let mut rng = crate::util::Xoshiro256::new(19);
+    let rows: Vec<i32> = (0..PROBE_NNZ)
+        .map(|_| rng.below(COO_T as u64) as i32)
+        .collect();
+    let cols: Vec<i32> = (0..PROBE_NNZ)
+        .map(|_| rng.below(COO_T as u64) as i32)
+        .collect();
+    let vals: Vec<f32> = (0..PROBE_NNZ).map(|_| rng.next_f32() - 0.5).collect();
+    let xt = DenseMatrix::random(COO_T, k, 20);
+
+    // Approximate bytes each op touches — the absolute numbers only
+    // matter relative to the other backend's on the same workload.
+    let fsz = std::mem::size_of::<f32>();
+    let classes: [(OpClass, u64, Box<dyn Fn() -> Result<()> + '_>); 6] = [
+        (
+            OpClass::Gram,
+            (PROBE_N * k * fsz) as u64,
+            Box::new(|| be.gram(&x).map(drop)),
+        ),
+        (
+            OpClass::Xty,
+            (2 * PROBE_N * k * fsz) as u64,
+            Box::new(|| be.xty(&x, &y).map(drop)),
+        ),
+        (
+            OpClass::NmfUpdateH,
+            (3 * PROBE_N * k * fsz) as u64,
+            Box::new(|| be.nmf_update_h(&h, &wta, &wtw).map(drop)),
+        ),
+        (
+            OpClass::NmfUpdateW,
+            (3 * PROBE_N * k * fsz) as u64,
+            Box::new(|| be.nmf_update_w(&w, &aht, &hht).map(drop)),
+        ),
+        (
+            OpClass::PagerankCombine,
+            (2 * PROBE_PR_N * fsz) as u64,
+            Box::new(|| be.pagerank_combine(&contrib, 0.85, PROBE_PR_N).map(drop)),
+        ),
+        (
+            OpClass::CooSpmm,
+            (PROBE_NNZ * (3 * fsz + k * fsz)) as u64,
+            Box::new(|| be.coo_spmm_tile(&rows, &cols, &vals, &xt).map(drop)),
+        ),
+    ];
+
+    let mut gbps = [0f64; 6];
+    for (class, bytes, run) in &classes {
+        if run().is_err() {
+            continue; // unsupported on this backend: 0.0 GB/s
+        }
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            if run().is_err() {
+                best = f64::INFINITY;
+                break;
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        if best.is_finite() && best > 0.0 {
+            gbps[class.index()] = *bytes as f64 / best / 1e9;
+        }
+    }
+    ProbeReport {
+        backend: be.name(),
+        gbps,
+    }
+}
+
+/// A [`DenseBackend`] that routes each op class to the faster of two
+/// backends, per the open-time probe (or a static preference when
+/// probing is disabled). Run-time failures of the accelerated arm fall
+/// back to the native implementation, so a routing decision can degrade
+/// performance but never correctness.
+#[derive(Debug)]
+pub struct BackendPlanner {
+    native: Arc<dyn DenseBackend>,
+    accel: Arc<dyn DenseBackend>,
+    /// Per class: take the accelerated backend?
+    use_accel: [bool; 6],
+    /// The probe reports behind the routing (empty when probing was
+    /// disabled) — kept for logs and the `backend_matrix` table.
+    pub reports: Vec<ProbeReport>,
+}
+
+impl BackendPlanner {
+    /// Probe both backends and route each class to the winner.
+    pub fn probed(native: Arc<dyn DenseBackend>, accel: Arc<dyn DenseBackend>) -> BackendPlanner {
+        let rn = probe(native.as_ref());
+        let ra = probe(accel.as_ref());
+        let mut use_accel = [false; 6];
+        for c in OpClass::ALL {
+            use_accel[c.index()] = ra.gbps[c.index()] > rn.gbps[c.index()];
+        }
+        BackendPlanner {
+            native,
+            accel,
+            use_accel,
+            reports: vec![rn, ra],
+        }
+    }
+
+    /// No-probe construction: the static preference sends the batched
+    /// matrix classes to the accelerated backend and keeps the small
+    /// elementwise / scalar-bound classes native.
+    pub fn unprobed(native: Arc<dyn DenseBackend>, accel: Arc<dyn DenseBackend>) -> BackendPlanner {
+        let mut use_accel = [false; 6];
+        for c in [
+            OpClass::Gram,
+            OpClass::Xty,
+            OpClass::NmfUpdateH,
+            OpClass::NmfUpdateW,
+        ] {
+            use_accel[c.index()] = true;
+        }
+        BackendPlanner {
+            native,
+            accel,
+            use_accel,
+            reports: Vec::new(),
+        }
+    }
+
+    /// Which backend class `c` is routed to (name, for logs/tests).
+    pub fn route(&self, c: OpClass) -> &'static str {
+        if self.use_accel[c.index()] {
+            self.accel.name()
+        } else {
+            self.native.name()
+        }
+    }
+
+    fn accel_for(&self, c: OpClass, k: usize) -> bool {
+        self.use_accel[c.index()] && self.accel.supports_k(k)
+    }
+}
+
+impl DenseBackend for BackendPlanner {
+    fn name(&self) -> &'static str {
+        "planner"
+    }
+
+    fn supports_k(&self, k: usize) -> bool {
+        // The native arm accepts any positive rank, so the planner does.
+        self.native.supports_k(k) || self.accel.supports_k(k)
+    }
+
+    fn gram(&self, x: &DenseMatrix) -> Result<DenseMatrix> {
+        if self.accel_for(OpClass::Gram, x.ncols) {
+            if let Ok(r) = self.accel.gram(x) {
+                return Ok(r);
+            }
+        }
+        self.native.gram(x)
+    }
+
+    fn xty(&self, x: &DenseMatrix, y: &DenseMatrix) -> Result<DenseMatrix> {
+        if self.accel_for(OpClass::Xty, x.ncols) {
+            if let Ok(r) = self.accel.xty(x, y) {
+                return Ok(r);
+            }
+        }
+        self.native.xty(x, y)
+    }
+
+    fn nmf_update_h(
+        &self,
+        h: &DenseMatrix,
+        wta: &DenseMatrix,
+        wtw: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        if self.accel_for(OpClass::NmfUpdateH, h.nrows) {
+            if let Ok(r) = self.accel.nmf_update_h(h, wta, wtw) {
+                return Ok(r);
+            }
+        }
+        self.native.nmf_update_h(h, wta, wtw)
+    }
+
+    fn nmf_update_w(
+        &self,
+        w: &DenseMatrix,
+        aht: &DenseMatrix,
+        hht: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        if self.accel_for(OpClass::NmfUpdateW, w.ncols) {
+            if let Ok(r) = self.accel.nmf_update_w(w, aht, hht) {
+                return Ok(r);
+            }
+        }
+        self.native.nmf_update_w(w, aht, hht)
+    }
+
+    fn pagerank_combine(&self, contrib: &[f32], damping: f32, n: usize) -> Result<Vec<f32>> {
+        if self.use_accel[OpClass::PagerankCombine.index()] {
+            if let Ok(r) = self.accel.pagerank_combine(contrib, damping, n) {
+                return Ok(r);
+            }
+        }
+        self.native.pagerank_combine(contrib, damping, n)
+    }
+
+    fn coo_spmm_tile(
+        &self,
+        rows: &[i32],
+        cols: &[i32],
+        vals: &[f32],
+        x: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        if self.accel_for(OpClass::CooSpmm, x.ncols) {
+            if let Ok(r) = self.accel.coo_spmm_tile(rows, cols, vals, x) {
+                return Ok(r);
+            }
+        }
+        self.native.coo_spmm_tile(rows, cols, vals, x)
+    }
+}
+
+/// Resolve the backend the apps should offload through, per the
+/// `backend.*` config. `None` means "stay native": callers keep their
+/// in-process kernels and fused in-pass hooks (the pre-planner default).
+pub fn planned_backend(cfg: &BackendConfig) -> Option<Arc<dyn DenseBackend>> {
+    match cfg.mode {
+        BackendMode::Native => None,
+        BackendMode::Pjrt => super::backend_from_env(),
+        BackendMode::Auto => {
+            let accel = super::backend_from_env()?;
+            let native: Arc<dyn DenseBackend> = Arc::new(NativeDenseBackend::new());
+            Some(Arc::new(if cfg.probe {
+                BackendPlanner::probed(native, accel)
+            } else {
+                BackendPlanner::unprobed(native, accel)
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::ops;
+
+    /// A backend that rejects everything — forces the fallback arm.
+    #[derive(Debug)]
+    struct Broken;
+
+    impl DenseBackend for Broken {
+        fn name(&self) -> &'static str {
+            "broken"
+        }
+        fn supports_k(&self, _k: usize) -> bool {
+            true
+        }
+        fn gram(&self, _x: &DenseMatrix) -> Result<DenseMatrix> {
+            anyhow::bail!("broken")
+        }
+        fn xty(&self, _x: &DenseMatrix, _y: &DenseMatrix) -> Result<DenseMatrix> {
+            anyhow::bail!("broken")
+        }
+        fn nmf_update_h(
+            &self,
+            _h: &DenseMatrix,
+            _wta: &DenseMatrix,
+            _wtw: &DenseMatrix,
+        ) -> Result<DenseMatrix> {
+            anyhow::bail!("broken")
+        }
+        fn nmf_update_w(
+            &self,
+            _w: &DenseMatrix,
+            _aht: &DenseMatrix,
+            _hht: &DenseMatrix,
+        ) -> Result<DenseMatrix> {
+            anyhow::bail!("broken")
+        }
+        fn pagerank_combine(&self, _c: &[f32], _d: f32, _n: usize) -> Result<Vec<f32>> {
+            anyhow::bail!("broken")
+        }
+        fn coo_spmm_tile(
+            &self,
+            _rows: &[i32],
+            _cols: &[i32],
+            _vals: &[f32],
+            _x: &DenseMatrix,
+        ) -> Result<DenseMatrix> {
+            anyhow::bail!("broken")
+        }
+    }
+
+    #[test]
+    fn probe_scores_every_class() {
+        let be = NativeDenseBackend::new();
+        let r = probe(&be);
+        assert_eq!(r.backend, "native");
+        for c in OpClass::ALL {
+            assert!(
+                r.gbps[c.index()] > 0.0,
+                "{} scored zero on the native backend",
+                c.name()
+            );
+        }
+        assert_eq!(r.lines().len(), OpClass::ALL.len());
+    }
+
+    #[test]
+    fn probe_gives_zero_for_rejected_classes() {
+        let r = probe(&Broken);
+        for c in OpClass::ALL {
+            assert_eq!(r.gbps[c.index()], 0.0, "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn planner_matches_native_results() {
+        // Two native arms: routing either way must reproduce the plain
+        // native results exactly (same code runs on both arms).
+        let native: Arc<dyn DenseBackend> = Arc::new(NativeDenseBackend::new());
+        let accel: Arc<dyn DenseBackend> = Arc::new(NativeDenseBackend::new());
+        let p = BackendPlanner::probed(native.clone(), accel);
+        assert_eq!(p.name(), "planner");
+        assert_eq!(p.reports.len(), 2);
+        let x = DenseMatrix::random(3000, 8, 21);
+        let got = p.gram(&x).unwrap();
+        let want = native.gram(&x).unwrap();
+        assert_eq!(got.data, want.data);
+        let y = DenseMatrix::random(3000, 8, 22);
+        assert_eq!(p.xty(&x, &y).unwrap().data, native.xty(&x, &y).unwrap().data);
+        let c: Vec<f32> = (0..1000).map(|i| i as f32 / 1000.0).collect();
+        assert_eq!(
+            p.pagerank_combine(&c, 0.85, 1000).unwrap(),
+            native.pagerank_combine(&c, 0.85, 1000).unwrap()
+        );
+    }
+
+    #[test]
+    fn broken_accel_arm_falls_back_to_native() {
+        // Even when every class routes to the accelerated arm, run-time
+        // failures degrade to the native result instead of erroring.
+        let native: Arc<dyn DenseBackend> = Arc::new(NativeDenseBackend::new());
+        let p = BackendPlanner {
+            native: native.clone(),
+            accel: Arc::new(Broken),
+            use_accel: [true; 6],
+            reports: Vec::new(),
+        };
+        let x = DenseMatrix::random(2000, 4, 23);
+        let got = p.gram(&x).unwrap();
+        let want = ops::gram(&x);
+        assert!(got.max_abs_diff(&want) < 1e-2);
+        let h = DenseMatrix::random(4, 500, 24);
+        let wta = DenseMatrix::random(4, 500, 25);
+        let wtw = DenseMatrix::random(4, 4, 26);
+        assert_eq!(
+            p.nmf_update_h(&h, &wta, &wtw).unwrap().data,
+            native.nmf_update_h(&h, &wta, &wtw).unwrap().data
+        );
+    }
+
+    #[test]
+    fn unprobed_routing_is_the_static_preference() {
+        let native: Arc<dyn DenseBackend> = Arc::new(NativeDenseBackend::new());
+        let p = BackendPlanner::unprobed(native.clone(), native);
+        for c in [
+            OpClass::Gram,
+            OpClass::Xty,
+            OpClass::NmfUpdateH,
+            OpClass::NmfUpdateW,
+        ] {
+            assert!(p.use_accel[c.index()], "{} should prefer accel", c.name());
+        }
+        for c in [OpClass::PagerankCombine, OpClass::CooSpmm] {
+            assert!(!p.use_accel[c.index()], "{} should stay native", c.name());
+        }
+        assert!(p.reports.is_empty());
+    }
+
+    #[test]
+    fn planned_backend_modes() {
+        // Native mode always stays in-process; auto/pjrt need a usable
+        // accelerated backend, which this build/environment may lack —
+        // in that case both must degrade to None (the native path), not
+        // error.
+        let native_cfg = BackendConfig {
+            mode: BackendMode::Native,
+            probe: true,
+        };
+        assert!(planned_backend(&native_cfg).is_none());
+        for mode in [BackendMode::Auto, BackendMode::Pjrt] {
+            let cfg = BackendConfig { mode, probe: false };
+            if let Some(be) = planned_backend(&cfg) {
+                assert!(be.supports_k(16));
+            }
+        }
+    }
+}

@@ -316,6 +316,10 @@ pub struct SpmmStats {
     /// carry exactly one forward entry; fused multi-op passes one entry
     /// per plan op — kernel seconds, reduce seconds, rows emitted.
     pub per_op: Vec<OpStats>,
+    /// Scheduler grain (tile rows per task) the pass actually used —
+    /// the cache-derived base, possibly scaled up by the autotuner when
+    /// fast kernels would leave tasks shorter than the claim overhead.
+    pub grain: usize,
     /// Shard reads served via parity reconstruction during this run
     /// (SEM mode with `store.parity`; 0 on healthy stores).
     pub degraded_reads: u64,

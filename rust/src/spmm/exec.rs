@@ -32,11 +32,13 @@
 //! one reducer — no atomics anywhere), reduce-time hooks run while the
 //! rows are hot, and the interval is written to the op's output.
 
+use super::autotune;
 use super::engine::{OutputSink, Source, SpmmStats};
 use super::kernel::{mul_tile_dcsc, mul_tile_dcsc_t, mul_tile_scsr, mul_tile_scsr_t};
 use super::plan::{OpStats, PassOp, PassResult, StreamPass};
 use super::semiring::Semiring;
 use super::scheduler::{Scheduler, Task};
+use super::simd::KernelSel;
 use super::SpmmOpts;
 use crate::format::tiled::TiledMeta;
 use crate::format::{dcsc, scsr, TileFormat};
@@ -167,13 +169,17 @@ pub fn run_pass_ring<S: Semiring>(
             }
         }
     }
-    // Grain sized for the widest op (single-op plans: identical to the
-    // classic engine).
+    // Kernel variant + grain resolved once per pass: the tuner starts
+    // from the cache-derived grain for the widest op (single-op plans
+    // with `spmm.simd = off`: identical to the classic engine) and may
+    // scale it up when the selected kernel is fast enough that per-task
+    // time would drop under the scheduler's claim overhead.
     let pmax = pass.ops.iter().map(|o| o.cols()).max().unwrap_or(1);
     let t = meta.tile;
     let ntr = meta.n_tile_rows();
     let ntc = meta.n_tile_cols();
-    let grain = opts.grain_tile_rows(pmax, t);
+    let tuned = autotune::select(opts, pmax, t);
+    let (sel, grain) = (tuned.sel, tuned.grain);
     let sched = Scheduler::new(ntr, grain, opts.threads, opts.load_balance);
     let tasks_done = AtomicU64::new(0);
 
@@ -222,6 +228,7 @@ pub fn run_pass_ring<S: Semiring>(
                     src,
                     ops,
                     opts,
+                    sel,
                     sched,
                     meta,
                     ntc,
@@ -344,6 +351,7 @@ pub fn run_pass_ring<S: Semiring>(
             kind: op.kind(),
             label: op.label().map(str::to_string),
             cols: op.cols(),
+            kernel: sel.arm_name(op.cols(), S::IS_ARITH),
             kernel_secs: a.kernel_time.secs(),
             reduce_secs: a.reduce_time.secs(),
             rows_out: a.rows_out.get(),
@@ -361,6 +369,7 @@ pub fn run_pass_ring<S: Semiring>(
             cache_misses: cache_use.misses,
             bytes_from_cache: cache_use.bytes_from_cache,
             per_op,
+            grain,
             degraded_reads,
             reconstructed_bytes,
         },
@@ -378,6 +387,7 @@ fn worker<S: Semiring>(
     src: &Source,
     ops: &[PassOp<'_>],
     opts: &SpmmOpts,
+    sel: KernelSel,
     sched: &Scheduler,
     meta: &TiledMeta,
     ntc: usize,
@@ -517,12 +527,12 @@ fn worker<S: Semiring>(
         match f {
             Fetch::Mem(bytes) => {
                 let rows = row_slices(src, task, bytes);
-                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, sel, meta, per_op_acc)?;
             }
             Fetch::Ticket(tk) => {
                 let buf = tk.wait(opts.io_polling)?;
                 let rows = row_slices(src, task, &buf);
-                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, sel, meta, per_op_acc)?;
                 drop(rows);
                 if let Some(io) = io {
                     io.recycle(buf);
@@ -536,7 +546,7 @@ fn worker<S: Semiring>(
             } => {
                 let buf = tk.wait(opts.io_polling)?;
                 let rows = partial_row_slices(src, task, read_lo, read_hi, &resident, &buf);
-                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, sel, meta, per_op_acc)?;
                 drop(rows);
                 if let Some(io) = io {
                     io.recycle(buf);
@@ -544,14 +554,14 @@ fn worker<S: Semiring>(
             }
             Fetch::Frames(frames) => {
                 let rows: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
-                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, sel, meta, per_op_acc)?;
             }
             Fetch::Empty => {
                 // No bytes on the store for this group: forward ops still
                 // emit their (all-zero) output rows — and an overlay may
                 // still insert edges into the empty base rows.
                 let rows: Vec<&[u8]> = vec![&[]; task.hi - task.lo];
-                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, meta, per_op_acc)?;
+                process_group_merged::<S>(src, task, &rows, ops, &mut states, opts, sel, meta, per_op_acc)?;
             }
         }
         tasks_done.fetch_add(1, Ordering::Relaxed);
@@ -578,6 +588,7 @@ fn process_group_merged<S: Semiring>(
     ops: &[PassOp<'_>],
     states: &mut [OpState],
     opts: &SpmmOpts,
+    sel: KernelSel,
     meta: &TiledMeta,
     per_op_acc: &[OpAccum],
 ) -> Result<()> {
@@ -606,22 +617,24 @@ fn process_group_merged<S: Semiring>(
                 .zip(&patches)
                 .map(|(r, p)| p.as_deref().unwrap_or(r))
                 .collect();
-            return process_group_ops::<S>(task, &merged, ops, states, opts, meta, per_op_acc);
+            return process_group_ops::<S>(task, &merged, ops, states, opts, sel, meta, per_op_acc);
         }
     }
-    process_group_ops::<S>(task, rows, ops, states, opts, meta, per_op_acc)
+    process_group_ops::<S>(task, rows, ops, states, opts, sel, meta, per_op_acc)
 }
 
 /// Run every plan op over one fetched tile-row group. `rows[i]` is tile
 /// row `task.lo + i`'s encoded bytes — a slice of the group's contiguous
 /// read buffer, or a cached frame; the two are byte-identical, so the
 /// compute path cannot tell where bytes came from.
+#[allow(clippy::too_many_arguments)]
 fn process_group_ops<S: Semiring>(
     task: Task,
     rows: &[&[u8]],
     ops: &[PassOp<'_>],
     states: &mut [OpState],
     opts: &SpmmOpts,
+    sel: KernelSel,
     meta: &TiledMeta,
     per_op_acc: &[OpAccum],
 ) -> Result<()> {
@@ -635,7 +648,7 @@ fn process_group_ops<S: Semiring>(
                 st.outbuf.clear();
                 st.outbuf.resize((rows_hi - rows_lo) * p, S::ZERO);
                 let t0 = Instant::now();
-                process_group_forward::<S>(task, rows, fop.input, opts, meta, &mut st.outbuf)?;
+                process_group_forward::<S>(task, rows, fop.input, opts, sel, meta, &mut st.outbuf)?;
                 acc.kernel_time.add(t0.elapsed().as_nanos() as u64);
                 if let Some(h) = &fop.hook {
                     h(rows_lo, &mut st.outbuf, &mut st.acc);
@@ -665,7 +678,7 @@ fn process_group_ops<S: Semiring>(
                     rows,
                     top.input,
                     meta,
-                    opts,
+                    sel,
                     st.scatter.as_mut().expect("transpose state"),
                 );
                 acc.kernel_time.add(t0.elapsed().as_nanos() as u64);
@@ -682,6 +695,7 @@ fn process_group_forward<S: Semiring>(
     rows: &[&[u8]],
     input: &NumaDense,
     opts: &SpmmOpts,
+    sel: KernelSel,
     meta: &TiledMeta,
     outbuf: &mut [f32],
 ) -> Result<()> {
@@ -701,7 +715,7 @@ fn process_group_forward<S: Semiring>(
                 let c_hi = ((tc + 1) * t).min(meta.ncols);
                 let in_rows = input.rows(tc * t, c_hi);
                 // Output rows of this tile: local to its tile row.
-                mul_tile_scsr::<S>(&view, vt, in_rows, outbuf, p, opts.vectorize);
+                mul_tile_scsr::<S>(&view, vt, in_rows, outbuf, p, sel);
                 next
             }
             TileFormat::Dcsc => {
@@ -709,7 +723,7 @@ fn process_group_forward<S: Semiring>(
                 let tc = view.tile_col as usize;
                 let c_hi = ((tc + 1) * t).min(meta.ncols);
                 let in_rows = input.rows(tc * t, c_hi);
-                mul_tile_dcsc::<S>(&view, vt, in_rows, outbuf, p, opts.vectorize);
+                mul_tile_dcsc::<S>(&view, vt, in_rows, outbuf, p, sel);
                 next
             }
         }
@@ -776,7 +790,7 @@ fn scatter_group<S: Semiring>(
     rows: &[&[u8]],
     input: &NumaDense,
     meta: &TiledMeta,
-    opts: &SpmmOpts,
+    sel: KernelSel,
     blocks: &mut [Option<Box<[f32]>>],
 ) {
     let p = input.ncols;
@@ -800,7 +814,7 @@ fn scatter_group<S: Semiring>(
                     let block = blocks[tc].get_or_insert_with(|| {
                         vec![S::ZERO; (c_hi - tc * t) * p].into_boxed_slice()
                     });
-                    mul_tile_scsr_t::<S>(&view, vt, in_rows, block, p, opts.vectorize);
+                    mul_tile_scsr_t::<S>(&view, vt, in_rows, block, p, sel);
                     off = next;
                 }
                 TileFormat::Dcsc => {
@@ -810,7 +824,7 @@ fn scatter_group<S: Semiring>(
                     let block = blocks[tc].get_or_insert_with(|| {
                         vec![S::ZERO; (c_hi - tc * t) * p].into_boxed_slice()
                     });
-                    mul_tile_dcsc_t::<S>(&view, vt, in_rows, block, p, opts.vectorize);
+                    mul_tile_dcsc_t::<S>(&view, vt, in_rows, block, p, sel);
                     off = next;
                 }
             }

@@ -19,11 +19,26 @@
 //! relaxes shortest-path distances, under [`super::semiring::OrAnd`] it
 //! expands BFS frontiers (see `spmm/semiring.rs`).
 //!
-//! The inner loop over the `p` columns of a dense row is width-specialized
-//! through a const generic: for `p ∈ {1, 2, 4, 8, 16}` the compiler sees a
-//! fixed-trip-count loop and emits vector FMAs (the paper's AVX
-//! optimization, §3.4). `vectorize = false` forces the generic
-//! variable-length loop — the Fig 12 `Vec` ablation baseline.
+//! **Dispatch** (§3.4, the paper's AVX optimization): each entry point
+//! takes a [`KernelSel`] the executor resolves once per pass.
+//! `KernelSel::Generic` is the variable-width scalar loop (the Fig 12
+//! `Vec = off` ablation baseline). `KernelSel::Specialized` routes
+//! `p ∈ {1, 2, 4, 8, 16}` to const-generic loops whose fixed trip count
+//! lets the autovectorizer emit straight-line vector code.
+//! `KernelSel::Simd(level)` additionally routes `p ∈ {4, 8, 16}` under
+//! the [`Arith`] ring to hand-written AVX2 or NEON arms
+//! ([`super::simd`]) with software prefetch of the gathered/scattered
+//! rows; the gather and scsr-scatter arms are bit-identical to the
+//! scalar fold, and only the dcsc transpose accumulator uses FMA (see
+//! the numerical contract in `spmm/simd.rs`). Non-Arith rings never take
+//! a vector arm (`Semiring::IS_ARITH` gates it), so the exact-equality
+//! semantics of min-plus / or-and sweeps are untouched by SIMD.
+//!
+//! The tile's `ValueType` is matched **once per tile** at the entry
+//! point and hoisted into a [`ValStream`] type parameter
+//! ([`WeightedVals`] / [`PatternVals`]), so the inner loops carry no
+//! per-entry weighted-or-binary branch — binary tiles compile to loops
+//! that never touch value memory at all.
 //!
 //! The transpose kernels scatter into a **per-worker column-interval
 //! partial** (one `t × p` block per tile column), never a shared output —
@@ -31,48 +46,65 @@
 //! these loops.
 
 use super::semiring::Semiring;
+use super::simd::{self, KernelSel};
 use crate::format::{dcsc, scsr, ValueType};
 use std::slice::ChunksExact;
 
-/// Sequential decoder over a tile's value bytes.
+/// Sequential source of per-entry values, monomorphized per tile.
 ///
-/// §Perf (EXPERIMENTS.md opt B): the hot loops used to index values as
-/// `f32::from_le_bytes([b[4i], b[4i+1], …])` — four checked byte loads
-/// per non-zero. This cursor walks the same bytes with `chunks_exact(4)`,
-/// so each value costs one pointer bump and a 4-byte conversion with no
-/// per-element bounds checks; both tile formats store values in exactly
-/// the order their entry streams consume them. Binary tiles (no stored
-/// values) yield the semiring's pattern constant without touching memory.
-struct ValCursor<'a> {
-    chunks: ChunksExact<'a, u8>,
-    /// Value substituted per entry when the tile stores no values.
-    pattern: f32,
-    weighted: bool,
+/// §Perf (EXPERIMENTS.md opt B, then the SIMD PR): the hot loops used to
+/// index values as `f32::from_le_bytes([b[4i], …])` — four checked byte
+/// loads per non-zero — and later branched `weighted?` per entry inside
+/// one cursor type. Both costs are gone: the entry points match the
+/// tile's [`ValueType`] once and instantiate the kernels with either
+/// [`WeightedVals`] (a `chunks_exact(4)` walk — one pointer bump and a
+/// 4-byte conversion per value, no per-element bounds checks; both tile
+/// formats store values in exactly the order their entry streams consume
+/// them) or [`PatternVals`] (the semiring's pattern constant, no memory
+/// traffic), so the inner loops — scalar and SIMD alike — are
+/// branch-free with respect to the value source.
+pub(crate) trait ValStream {
+    /// The next entry's value.
+    fn next(&mut self) -> f32;
 }
 
-impl<'a> ValCursor<'a> {
+/// [`ValStream`] over a weighted tile's stored little-endian f32 bytes.
+pub(crate) struct WeightedVals<'a> {
+    chunks: ChunksExact<'a, u8>,
+    /// Fallback if the stream runs dry. Unreachable on well-formed tiles
+    /// (the encoders emit one value per entry); stay total rather than
+    /// panic in the hot loop.
+    pattern: f32,
+}
+
+impl<'a> WeightedVals<'a> {
     #[inline(always)]
-    fn new(vals: &'a [u8], vt: ValueType, pattern: f32) -> ValCursor<'a> {
-        ValCursor {
+    pub(crate) fn new(vals: &'a [u8], pattern: f32) -> WeightedVals<'a> {
+        WeightedVals {
             chunks: vals.chunks_exact(4),
             pattern,
-            weighted: vt == ValueType::F32,
         }
     }
+}
 
-    /// The next stored value, or the pattern constant on binary tiles.
+impl ValStream for WeightedVals<'_> {
     #[inline(always)]
     fn next(&mut self) -> f32 {
-        if self.weighted {
-            match self.chunks.next() {
-                Some(c) => f32::from_le_bytes(c.try_into().unwrap()),
-                // Unreachable on well-formed tiles (the encoders emit one
-                // value per entry); stay total rather than panic here.
-                None => self.pattern,
-            }
-        } else {
-            self.pattern
+        match self.chunks.next() {
+            Some(c) => f32::from_le_bytes(c.try_into().unwrap()),
+            None => self.pattern,
         }
+    }
+}
+
+/// [`ValStream`] for binary tiles: every entry is the semiring's pattern
+/// constant.
+pub(crate) struct PatternVals(pub(crate) f32);
+
+impl ValStream for PatternVals {
+    #[inline(always)]
+    fn next(&mut self) -> f32 {
+        self.0
     }
 }
 
@@ -87,19 +119,65 @@ pub fn mul_tile_scsr<S: Semiring>(
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
-    vectorize: bool,
+    sel: KernelSel,
 ) {
-    if vectorize {
-        match p {
-            1 => mul_scsr_w::<S, 1>(view, vt, in_rows, out_rows),
-            2 => mul_scsr_w::<S, 2>(view, vt, in_rows, out_rows),
-            4 => mul_scsr_w::<S, 4>(view, vt, in_rows, out_rows),
-            8 => mul_scsr_w::<S, 8>(view, vt, in_rows, out_rows),
-            16 => mul_scsr_w::<S, 16>(view, vt, in_rows, out_rows),
-            _ => mul_scsr_generic::<S>(view, vt, in_rows, out_rows, p),
-        }
+    if vt == ValueType::F32 {
+        let mut vals = WeightedVals::new(view.vals, S::PATTERN);
+        scsr_arm::<S, _>(view, &mut vals, in_rows, out_rows, p, sel);
     } else {
-        mul_scsr_generic::<S>(view, vt, in_rows, out_rows, p);
+        let mut vals = PatternVals(S::PATTERN);
+        scsr_arm::<S, _>(view, &mut vals, in_rows, out_rows, p, sel);
+    }
+}
+
+/// Route one SCSR forward multiply to the arm `sel` resolves to.
+fn scsr_arm<S: Semiring, V: ValStream>(
+    view: &scsr::TileView<'_>,
+    vals: &mut V,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+    sel: KernelSel,
+) {
+    let arm = simd::resolve_arm(sel, p, S::IS_ARITH);
+    #[cfg(target_arch = "x86_64")]
+    if arm == simd::Arm::SimdAvx2 {
+        // SAFETY: dispatch yields this arm only after runtime detection of
+        // avx2+fma, and well-formed tile views keep local indices < t with
+        // both dense slices spanning t·P floats.
+        unsafe {
+            match p {
+                4 => simd::x86::mul_scsr::<V, 4>(view, vals, in_rows, out_rows),
+                8 => simd::x86::mul_scsr::<V, 8>(view, vals, in_rows, out_rows),
+                _ => simd::x86::mul_scsr::<V, 16>(view, vals, in_rows, out_rows),
+            }
+        }
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if arm == simd::Arm::SimdNeon {
+        // SAFETY: NEON is baseline on aarch64; view contract as above.
+        unsafe {
+            match p {
+                4 => simd::neon::mul_scsr::<V, 4>(view, vals, in_rows, out_rows),
+                8 => simd::neon::mul_scsr::<V, 8>(view, vals, in_rows, out_rows),
+                _ => simd::neon::mul_scsr::<V, 16>(view, vals, in_rows, out_rows),
+            }
+        }
+        return;
+    }
+    match arm {
+        simd::Arm::Generic => mul_scsr_generic::<S, V>(view, vals, in_rows, out_rows, p),
+        // Specialized — or a vector arm for an ISA this build has no
+        // module for, which degrades to the scalar specialized loops.
+        _ => match p {
+            1 => mul_scsr_w::<S, V, 1>(view, vals, in_rows, out_rows),
+            2 => mul_scsr_w::<S, V, 2>(view, vals, in_rows, out_rows),
+            4 => mul_scsr_w::<S, V, 4>(view, vals, in_rows, out_rows),
+            8 => mul_scsr_w::<S, V, 8>(view, vals, in_rows, out_rows),
+            16 => mul_scsr_w::<S, V, 16>(view, vals, in_rows, out_rows),
+            _ => mul_scsr_generic::<S, V>(view, vals, in_rows, out_rows, p),
+        },
     }
 }
 
@@ -112,19 +190,18 @@ fn read_u16(b: &[u8], i: usize) -> u16 {
 /// straight-line vector code.
 ///
 /// §Perf: the stream walk uses `chunks_exact(2)` so the word loads carry
-/// no per-iteration bounds checks, the value stream is decoded through a
-/// [`ValCursor`], and the dense-row accesses go through `get_unchecked`
+/// no per-iteration bounds checks, the value stream is a monomorphized
+/// [`ValStream`], and the dense-row accesses go through `get_unchecked`
 /// — safe because every local index in a well-formed tile is `< t` and
 /// both slices span `t` rows (debug builds assert it). This removed the
 /// last branchy bounds checks from the hot loop (EXPERIMENTS.md §Perf,
 /// opts A and B).
-fn mul_scsr_w<S: Semiring, const P: usize>(
+fn mul_scsr_w<S: Semiring, V: ValStream, const P: usize>(
     view: &scsr::TileView<'_>,
-    vt: ValueType,
+    vals: &mut V,
     in_rows: &[f32],
     out_rows: &mut [f32],
 ) {
-    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     let mut out_base = 0usize;
     // SCSR part: rows with >= 2 entries.
     for wbytes in view.scsr.chunks_exact(2) {
@@ -159,14 +236,13 @@ fn mul_scsr_w<S: Semiring, const P: usize>(
 }
 
 /// Generic-width scalar fallback (also the `Vec = off` ablation).
-fn mul_scsr_generic<S: Semiring>(
+fn mul_scsr_generic<S: Semiring, V: ValStream>(
     view: &scsr::TileView<'_>,
-    vt: ValueType,
+    vals: &mut V,
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
 ) {
-    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     let words = view.scsr.len() / 2;
     let mut out_base = 0usize;
     let mut i = 0usize;
@@ -200,29 +276,70 @@ pub fn mul_tile_dcsc<S: Semiring>(
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
-    vectorize: bool,
+    sel: KernelSel,
 ) {
-    if vectorize {
-        match p {
-            1 => mul_dcsc_w::<S, 1>(view, vt, in_rows, out_rows),
-            2 => mul_dcsc_w::<S, 2>(view, vt, in_rows, out_rows),
-            4 => mul_dcsc_w::<S, 4>(view, vt, in_rows, out_rows),
-            8 => mul_dcsc_w::<S, 8>(view, vt, in_rows, out_rows),
-            16 => mul_dcsc_w::<S, 16>(view, vt, in_rows, out_rows),
-            _ => mul_dcsc_generic::<S>(view, vt, in_rows, out_rows, p),
-        }
+    if vt == ValueType::F32 {
+        let mut vals = WeightedVals::new(view.vals, S::PATTERN);
+        dcsc_arm::<S, _>(view, &mut vals, in_rows, out_rows, p, sel);
     } else {
-        mul_dcsc_generic::<S>(view, vt, in_rows, out_rows, p);
+        let mut vals = PatternVals(S::PATTERN);
+        dcsc_arm::<S, _>(view, &mut vals, in_rows, out_rows, p, sel);
     }
 }
 
-fn mul_dcsc_w<S: Semiring, const P: usize>(
+/// Route one DCSC forward multiply to the arm `sel` resolves to.
+fn dcsc_arm<S: Semiring, V: ValStream>(
     view: &dcsc::TileView<'_>,
-    vt: ValueType,
+    vals: &mut V,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+    sel: KernelSel,
+) {
+    let arm = simd::resolve_arm(sel, p, S::IS_ARITH);
+    #[cfg(target_arch = "x86_64")]
+    if arm == simd::Arm::SimdAvx2 {
+        // SAFETY: see `scsr_arm`.
+        unsafe {
+            match p {
+                4 => simd::x86::mul_dcsc::<V, 4>(view, vals, in_rows, out_rows),
+                8 => simd::x86::mul_dcsc::<V, 8>(view, vals, in_rows, out_rows),
+                _ => simd::x86::mul_dcsc::<V, 16>(view, vals, in_rows, out_rows),
+            }
+        }
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if arm == simd::Arm::SimdNeon {
+        // SAFETY: see `scsr_arm`.
+        unsafe {
+            match p {
+                4 => simd::neon::mul_dcsc::<V, 4>(view, vals, in_rows, out_rows),
+                8 => simd::neon::mul_dcsc::<V, 8>(view, vals, in_rows, out_rows),
+                _ => simd::neon::mul_dcsc::<V, 16>(view, vals, in_rows, out_rows),
+            }
+        }
+        return;
+    }
+    match arm {
+        simd::Arm::Generic => mul_dcsc_generic::<S, V>(view, vals, in_rows, out_rows, p),
+        _ => match p {
+            1 => mul_dcsc_w::<S, V, 1>(view, vals, in_rows, out_rows),
+            2 => mul_dcsc_w::<S, V, 2>(view, vals, in_rows, out_rows),
+            4 => mul_dcsc_w::<S, V, 4>(view, vals, in_rows, out_rows),
+            8 => mul_dcsc_w::<S, V, 8>(view, vals, in_rows, out_rows),
+            16 => mul_dcsc_w::<S, V, 16>(view, vals, in_rows, out_rows),
+            _ => mul_dcsc_generic::<S, V>(view, vals, in_rows, out_rows, p),
+        },
+    }
+}
+
+fn mul_dcsc_w<S: Semiring, V: ValStream, const P: usize>(
+    view: &dcsc::TileView<'_>,
+    vals: &mut V,
     in_rows: &[f32],
     out_rows: &mut [f32],
 ) {
-    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     for k in 0..view.nnc {
         let (c, s, e) = view.col(k);
         let in_base = (c as usize) * P;
@@ -238,14 +355,13 @@ fn mul_dcsc_w<S: Semiring, const P: usize>(
     }
 }
 
-fn mul_dcsc_generic<S: Semiring>(
+fn mul_dcsc_generic<S: Semiring, V: ValStream>(
     view: &dcsc::TileView<'_>,
-    vt: ValueType,
+    vals: &mut V,
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
 ) {
-    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     for k in 0..view.nnc {
         let (c, s, e) = view.col(k);
         let in_base = (c as usize) * p;
@@ -273,32 +389,73 @@ pub fn mul_tile_scsr_t<S: Semiring>(
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
-    vectorize: bool,
+    sel: KernelSel,
 ) {
-    if vectorize {
-        match p {
-            1 => mul_scsr_t_w::<S, 1>(view, vt, in_rows, out_rows),
-            2 => mul_scsr_t_w::<S, 2>(view, vt, in_rows, out_rows),
-            4 => mul_scsr_t_w::<S, 4>(view, vt, in_rows, out_rows),
-            8 => mul_scsr_t_w::<S, 8>(view, vt, in_rows, out_rows),
-            16 => mul_scsr_t_w::<S, 16>(view, vt, in_rows, out_rows),
-            _ => mul_scsr_t_generic::<S>(view, vt, in_rows, out_rows, p),
-        }
+    if vt == ValueType::F32 {
+        let mut vals = WeightedVals::new(view.vals, S::PATTERN);
+        scsr_t_arm::<S, _>(view, &mut vals, in_rows, out_rows, p, sel);
     } else {
-        mul_scsr_t_generic::<S>(view, vt, in_rows, out_rows, p);
+        let mut vals = PatternVals(S::PATTERN);
+        scsr_t_arm::<S, _>(view, &mut vals, in_rows, out_rows, p, sel);
+    }
+}
+
+/// Route one SCSR transpose multiply to the arm `sel` resolves to.
+fn scsr_t_arm<S: Semiring, V: ValStream>(
+    view: &scsr::TileView<'_>,
+    vals: &mut V,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+    sel: KernelSel,
+) {
+    let arm = simd::resolve_arm(sel, p, S::IS_ARITH);
+    #[cfg(target_arch = "x86_64")]
+    if arm == simd::Arm::SimdAvx2 {
+        // SAFETY: see `scsr_arm`.
+        unsafe {
+            match p {
+                4 => simd::x86::mul_scsr_t::<V, 4>(view, vals, in_rows, out_rows),
+                8 => simd::x86::mul_scsr_t::<V, 8>(view, vals, in_rows, out_rows),
+                _ => simd::x86::mul_scsr_t::<V, 16>(view, vals, in_rows, out_rows),
+            }
+        }
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if arm == simd::Arm::SimdNeon {
+        // SAFETY: see `scsr_arm`.
+        unsafe {
+            match p {
+                4 => simd::neon::mul_scsr_t::<V, 4>(view, vals, in_rows, out_rows),
+                8 => simd::neon::mul_scsr_t::<V, 8>(view, vals, in_rows, out_rows),
+                _ => simd::neon::mul_scsr_t::<V, 16>(view, vals, in_rows, out_rows),
+            }
+        }
+        return;
+    }
+    match arm {
+        simd::Arm::Generic => mul_scsr_t_generic::<S, V>(view, vals, in_rows, out_rows, p),
+        _ => match p {
+            1 => mul_scsr_t_w::<S, V, 1>(view, vals, in_rows, out_rows),
+            2 => mul_scsr_t_w::<S, V, 2>(view, vals, in_rows, out_rows),
+            4 => mul_scsr_t_w::<S, V, 4>(view, vals, in_rows, out_rows),
+            8 => mul_scsr_t_w::<S, V, 8>(view, vals, in_rows, out_rows),
+            16 => mul_scsr_t_w::<S, V, 16>(view, vals, in_rows, out_rows),
+            _ => mul_scsr_t_generic::<S, V>(view, vals, in_rows, out_rows, p),
+        },
     }
 }
 
 /// Width-specialized SCSR scatter: the roles of the row header (now the
 /// gather base) and the column words (now the scatter target) swap
 /// relative to [`mul_scsr_w`]; the stream walk is identical.
-fn mul_scsr_t_w<S: Semiring, const P: usize>(
+fn mul_scsr_t_w<S: Semiring, V: ValStream, const P: usize>(
     view: &scsr::TileView<'_>,
-    vt: ValueType,
+    vals: &mut V,
     in_rows: &[f32],
     out_rows: &mut [f32],
 ) {
-    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     let mut in_base = 0usize;
     // SCSR part: the header row becomes the input row to scatter from.
     for wbytes in view.scsr.chunks_exact(2) {
@@ -329,14 +486,13 @@ fn mul_scsr_t_w<S: Semiring, const P: usize>(
 }
 
 /// Generic-width scalar transpose fallback (the `Vec = off` ablation).
-fn mul_scsr_t_generic<S: Semiring>(
+fn mul_scsr_t_generic<S: Semiring, V: ValStream>(
     view: &scsr::TileView<'_>,
-    vt: ValueType,
+    vals: &mut V,
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
 ) {
-    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     let words = view.scsr.len() / 2;
     let mut in_base = 0usize;
     let mut i = 0usize;
@@ -372,29 +528,75 @@ pub fn mul_tile_dcsc_t<S: Semiring>(
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
-    vectorize: bool,
+    sel: KernelSel,
 ) {
-    if vectorize {
-        match p {
-            1 => mul_dcsc_t_w::<S, 1>(view, vt, in_rows, out_rows),
-            2 => mul_dcsc_t_w::<S, 2>(view, vt, in_rows, out_rows),
-            4 => mul_dcsc_t_w::<S, 4>(view, vt, in_rows, out_rows),
-            8 => mul_dcsc_t_w::<S, 8>(view, vt, in_rows, out_rows),
-            16 => mul_dcsc_t_w::<S, 16>(view, vt, in_rows, out_rows),
-            _ => mul_dcsc_t_generic::<S>(view, vt, in_rows, out_rows, p),
-        }
+    if vt == ValueType::F32 {
+        let mut vals = WeightedVals::new(view.vals, S::PATTERN);
+        dcsc_t_arm::<S, _>(view, &mut vals, in_rows, out_rows, p, sel);
     } else {
-        mul_dcsc_t_generic::<S>(view, vt, in_rows, out_rows, p);
+        let mut vals = PatternVals(S::PATTERN);
+        dcsc_t_arm::<S, _>(view, &mut vals, in_rows, out_rows, p, sel);
     }
 }
 
-fn mul_dcsc_t_w<S: Semiring, const P: usize>(
+/// Route one DCSC transpose multiply to the arm `sel` resolves to.
+///
+/// This is the one kernel whose SIMD arm is **not** bit-identical to the
+/// scalar loop: its per-column accumulator chain uses FMA (one rounding
+/// per entry instead of two), so SIMD-on vs SIMD-off comparisons through
+/// this path carry the documented ≲1-ulp-per-entry tolerance.
+fn dcsc_t_arm<S: Semiring, V: ValStream>(
     view: &dcsc::TileView<'_>,
-    vt: ValueType,
+    vals: &mut V,
+    in_rows: &[f32],
+    out_rows: &mut [f32],
+    p: usize,
+    sel: KernelSel,
+) {
+    let arm = simd::resolve_arm(sel, p, S::IS_ARITH);
+    #[cfg(target_arch = "x86_64")]
+    if arm == simd::Arm::SimdAvx2 {
+        // SAFETY: see `scsr_arm`.
+        unsafe {
+            match p {
+                4 => simd::x86::mul_dcsc_t::<V, 4>(view, vals, in_rows, out_rows),
+                8 => simd::x86::mul_dcsc_t::<V, 8>(view, vals, in_rows, out_rows),
+                _ => simd::x86::mul_dcsc_t::<V, 16>(view, vals, in_rows, out_rows),
+            }
+        }
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if arm == simd::Arm::SimdNeon {
+        // SAFETY: see `scsr_arm`.
+        unsafe {
+            match p {
+                4 => simd::neon::mul_dcsc_t::<V, 4>(view, vals, in_rows, out_rows),
+                8 => simd::neon::mul_dcsc_t::<V, 8>(view, vals, in_rows, out_rows),
+                _ => simd::neon::mul_dcsc_t::<V, 16>(view, vals, in_rows, out_rows),
+            }
+        }
+        return;
+    }
+    match arm {
+        simd::Arm::Generic => mul_dcsc_t_generic::<S, V>(view, vals, in_rows, out_rows, p),
+        _ => match p {
+            1 => mul_dcsc_t_w::<S, V, 1>(view, vals, in_rows, out_rows),
+            2 => mul_dcsc_t_w::<S, V, 2>(view, vals, in_rows, out_rows),
+            4 => mul_dcsc_t_w::<S, V, 4>(view, vals, in_rows, out_rows),
+            8 => mul_dcsc_t_w::<S, V, 8>(view, vals, in_rows, out_rows),
+            16 => mul_dcsc_t_w::<S, V, 16>(view, vals, in_rows, out_rows),
+            _ => mul_dcsc_t_generic::<S, V>(view, vals, in_rows, out_rows, p),
+        },
+    }
+}
+
+fn mul_dcsc_t_w<S: Semiring, V: ValStream, const P: usize>(
+    view: &dcsc::TileView<'_>,
+    vals: &mut V,
     in_rows: &[f32],
     out_rows: &mut [f32],
 ) {
-    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     for k in 0..view.nnc {
         let (c, s, e) = view.col(k);
         let mut acc = [S::ZERO; P];
@@ -414,14 +616,13 @@ fn mul_dcsc_t_w<S: Semiring, const P: usize>(
     }
 }
 
-fn mul_dcsc_t_generic<S: Semiring>(
+fn mul_dcsc_t_generic<S: Semiring, V: ValStream>(
     view: &dcsc::TileView<'_>,
-    vt: ValueType,
+    vals: &mut V,
     in_rows: &[f32],
     out_rows: &mut [f32],
     p: usize,
 ) {
-    let mut vals = ValCursor::new(view.vals, vt, S::PATTERN);
     for k in 0..view.nnc {
         let (c, s, e) = view.col(k);
         let out_base = (c as usize) * p;
@@ -440,7 +641,20 @@ mod tests {
     use super::*;
     use crate::format::{dcsc, scsr, TileEntries, ValueType};
     use crate::spmm::semiring::{Arith, MinPlus, OrAnd};
+    use crate::spmm::simd::SimdLevel;
     use crate::util::Xoshiro256;
+
+    /// Every dispatch path a test should sweep: both scalar arms plus the
+    /// vector arm for whatever this CPU supports (`Simd(None)` — i.e. a
+    /// scalar-only machine — degrades to `Specialized`, so the sweep is
+    /// meaningful everywhere without being able to SIGILL anywhere).
+    fn sels() -> [KernelSel; 3] {
+        [
+            KernelSel::Specialized,
+            KernelSel::Generic,
+            KernelSel::Simd(simd::cpu_level()),
+        ]
+    }
 
     fn random_tile(t: u16, n: usize, seed: u64, weighted: bool) -> TileEntries {
         let mut rng = Xoshiro256::new(seed);
@@ -482,22 +696,22 @@ mod tests {
         let mut sbuf = Vec::new();
         scsr::encode(0, &e, vt, &mut sbuf);
         let (sv, _) = scsr::parse(&sbuf, 0, vt);
-        for vec in [true, false] {
+        for sel in sels() {
             let mut out = vec![0f32; t as usize * p];
-            mul_tile_scsr::<Arith>(&sv, vt, &x, &mut out, p, vec);
+            mul_tile_scsr::<Arith>(&sv, vt, &x, &mut out, p, sel);
             for (a, b) in out.iter().zip(&expect) {
-                assert!((a - b).abs() < 1e-4, "scsr p={p} vec={vec}");
+                assert!((a - b).abs() < 1e-4, "scsr p={p} sel={sel:?}");
             }
         }
 
         let mut dbuf = Vec::new();
         dcsc::encode(0, &e, vt, &mut dbuf);
         let (dv, _) = dcsc::parse(&dbuf, 0, vt);
-        for vec in [true, false] {
+        for sel in sels() {
             let mut out = vec![0f32; t as usize * p];
-            mul_tile_dcsc::<Arith>(&dv, vt, &x, &mut out, p, vec);
+            mul_tile_dcsc::<Arith>(&dv, vt, &x, &mut out, p, sel);
             for (a, b) in out.iter().zip(&expect) {
-                assert!((a - b).abs() < 1e-4, "dcsc p={p} vec={vec}");
+                assert!((a - b).abs() < 1e-4, "dcsc p={p} sel={sel:?}");
             }
         }
     }
@@ -528,22 +742,22 @@ mod tests {
         let mut sbuf = Vec::new();
         scsr::encode(0, &e, vt, &mut sbuf);
         let (sv, _) = scsr::parse(&sbuf, 0, vt);
-        for vec in [true, false] {
+        for sel in sels() {
             let mut out = vec![0f32; t as usize * p];
-            mul_tile_scsr_t::<Arith>(&sv, vt, &x, &mut out, p, vec);
+            mul_tile_scsr_t::<Arith>(&sv, vt, &x, &mut out, p, sel);
             for (a, b) in out.iter().zip(&expect) {
-                assert!((a - b).abs() < 1e-4, "scsr_t p={p} vec={vec}");
+                assert!((a - b).abs() < 1e-4, "scsr_t p={p} sel={sel:?}");
             }
         }
 
         let mut dbuf = Vec::new();
         dcsc::encode(0, &e, vt, &mut dbuf);
         let (dv, _) = dcsc::parse(&dbuf, 0, vt);
-        for vec in [true, false] {
+        for sel in sels() {
             let mut out = vec![0f32; t as usize * p];
-            mul_tile_dcsc_t::<Arith>(&dv, vt, &x, &mut out, p, vec);
+            mul_tile_dcsc_t::<Arith>(&dv, vt, &x, &mut out, p, sel);
             for (a, b) in out.iter().zip(&expect) {
-                assert!((a - b).abs() < 1e-4, "dcsc_t p={p} vec={vec}");
+                assert!((a - b).abs() < 1e-4, "dcsc_t p={p} sel={sel:?}");
             }
         }
     }
@@ -593,16 +807,16 @@ mod tests {
         let (dv, _) = dcsc::parse(&dbuf, 0, vt);
 
         let k_scsr = |xin: &[f32], out: &mut [f32], w: usize| {
-            mul_tile_scsr::<Arith>(&sv, vt, xin, out, w, true)
+            mul_tile_scsr::<Arith>(&sv, vt, xin, out, w, KernelSel::Specialized)
         };
         let k_dcsc = |xin: &[f32], out: &mut [f32], w: usize| {
-            mul_tile_dcsc::<Arith>(&dv, vt, xin, out, w, true)
+            mul_tile_dcsc::<Arith>(&dv, vt, xin, out, w, KernelSel::Specialized)
         };
         let k_scsr_t = |xin: &[f32], out: &mut [f32], w: usize| {
-            mul_tile_scsr_t::<Arith>(&sv, vt, xin, out, w, true)
+            mul_tile_scsr_t::<Arith>(&sv, vt, xin, out, w, KernelSel::Specialized)
         };
         let k_dcsc_t = |xin: &[f32], out: &mut [f32], w: usize| {
-            mul_tile_dcsc_t::<Arith>(&dv, vt, xin, out, w, true)
+            mul_tile_dcsc_t::<Arith>(&dv, vt, xin, out, w, KernelSel::Specialized)
         };
         let kernels: [(&str, &dyn Fn(&[f32], &mut [f32], usize)); 4] = [
             ("scsr", &k_scsr),
@@ -611,18 +825,19 @@ mod tests {
             ("dcsc_t", &k_dcsc_t),
         ];
         for (name, kern) in kernels {
-            // Generic fallback at the full (non-specialized) width. The
-            // `vectorize = true` dispatch has no arm for p ∉ {1,2,4,8,16}
-            // and must take the same generic loop `vectorize = false`
-            // takes explicitly.
+            // Specialized dispatch at the full (non-specialized) width has
+            // no arm for p ∉ {1,2,4,8,16} and must take the same generic
+            // loop `KernelSel::Generic` selects explicitly.
             let mut generic = vec![0f32; t as usize * p];
             kern(&x, &mut generic, p);
             let mut scalar = vec![0f32; t as usize * p];
             match name {
-                "scsr" => mul_tile_scsr::<Arith>(&sv, vt, &x, &mut scalar, p, false),
-                "dcsc" => mul_tile_dcsc::<Arith>(&dv, vt, &x, &mut scalar, p, false),
-                "scsr_t" => mul_tile_scsr_t::<Arith>(&sv, vt, &x, &mut scalar, p, false),
-                _ => mul_tile_dcsc_t::<Arith>(&dv, vt, &x, &mut scalar, p, false),
+                "scsr" => mul_tile_scsr::<Arith>(&sv, vt, &x, &mut scalar, p, KernelSel::Generic),
+                "dcsc" => mul_tile_dcsc::<Arith>(&dv, vt, &x, &mut scalar, p, KernelSel::Generic),
+                "scsr_t" => {
+                    mul_tile_scsr_t::<Arith>(&sv, vt, &x, &mut scalar, p, KernelSel::Generic)
+                }
+                _ => mul_tile_dcsc_t::<Arith>(&dv, vt, &x, &mut scalar, p, KernelSel::Generic),
             }
             assert_eq!(generic, scalar, "{name} p={p}: dispatch not the generic loop");
 
@@ -686,10 +901,10 @@ mod tests {
         let (v, _) = scsr::parse(&buf, 0, ValueType::F32);
         let x: Vec<f32> = (0..64 * 2).map(|i| i as f32 * 0.25).collect();
         let mut once = vec![0f32; 64 * 2];
-        mul_tile_scsr_t::<Arith>(&v, ValueType::F32, &x, &mut once, 2, true);
+        mul_tile_scsr_t::<Arith>(&v, ValueType::F32, &x, &mut once, 2, KernelSel::Specialized);
         let mut twice = vec![0f32; 64 * 2];
-        mul_tile_scsr_t::<Arith>(&v, ValueType::F32, &x, &mut twice, 2, true);
-        mul_tile_scsr_t::<Arith>(&v, ValueType::F32, &x, &mut twice, 2, true);
+        mul_tile_scsr_t::<Arith>(&v, ValueType::F32, &x, &mut twice, 2, KernelSel::Specialized);
+        mul_tile_scsr_t::<Arith>(&v, ValueType::F32, &x, &mut twice, 2, KernelSel::Specialized);
         for (a, b) in twice.iter().zip(&once) {
             assert!((a - 2.0 * b).abs() < 1e-4);
         }
@@ -721,7 +936,7 @@ mod tests {
         assert_eq!(v.n_single, 0);
         let x = vec![1f32; 16];
         let mut out = vec![0f32; 16];
-        mul_tile_scsr::<Arith>(&v, ValueType::Binary, &x, &mut out, 1, true);
+        mul_tile_scsr::<Arith>(&v, ValueType::Binary, &x, &mut out, 1, KernelSel::Specialized);
         assert!(out.iter().all(|&o| o == 16.0));
     }
 
@@ -740,9 +955,106 @@ mod tests {
         assert_eq!(v.n_single, 64);
         let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
         let mut out = vec![0f32; 64];
-        mul_tile_scsr::<Arith>(&v, ValueType::Binary, &x, &mut out, 1, true);
+        mul_tile_scsr::<Arith>(&v, ValueType::Binary, &x, &mut out, 1, KernelSel::Specialized);
         for i in 0..64 {
             assert_eq!(out[i], (63 - i) as f32);
+        }
+    }
+
+    /// The SIMD contract, kernel by kernel: at the panel widths, the
+    /// vector arms for `mul_tile_scsr`, `mul_tile_dcsc` and
+    /// `mul_tile_scsr_t` must be **bit-identical** to the specialized
+    /// scalar loops (their mul-then-add performs the same two roundings
+    /// per element, in the same order), on weighted and binary tiles.
+    /// Vacuously passes on a CPU with no vector arm.
+    #[test]
+    fn simd_gather_and_scsr_scatter_bit_identical_to_scalar() {
+        let level = simd::cpu_level();
+        if level == SimdLevel::None {
+            return;
+        }
+        for p in [4usize, 8, 16] {
+            for weighted in [false, true] {
+                let t = 128u16;
+                let e = random_tile(t, 1100, 0xB00 + p as u64, weighted);
+                let vt = if weighted {
+                    ValueType::F32
+                } else {
+                    ValueType::Binary
+                };
+                let mut rng = Xoshiro256::new(0xB55 ^ p as u64);
+                // Mixed-sign values: sign cancellation is where rounding
+                // differences would show first.
+                let x: Vec<f32> = (0..t as usize * p)
+                    .map(|_| rng.next_f32() * 2.0 - 1.0)
+                    .collect();
+
+                let mut sbuf = Vec::new();
+                scsr::encode(0, &e, vt, &mut sbuf);
+                let (sv, _) = scsr::parse(&sbuf, 0, vt);
+                let mut dbuf = Vec::new();
+                dcsc::encode(0, &e, vt, &mut dbuf);
+                let (dv, _) = dcsc::parse(&dbuf, 0, vt);
+
+                let n = t as usize * p;
+                let (mut a, mut b) = (vec![0f32; n], vec![0f32; n]);
+                mul_tile_scsr::<Arith>(&sv, vt, &x, &mut a, p, KernelSel::Specialized);
+                mul_tile_scsr::<Arith>(&sv, vt, &x, &mut b, p, KernelSel::Simd(level));
+                assert_eq!(a, b, "scsr gather p={p} weighted={weighted}");
+
+                let (mut a, mut b) = (vec![0f32; n], vec![0f32; n]);
+                mul_tile_dcsc::<Arith>(&dv, vt, &x, &mut a, p, KernelSel::Specialized);
+                mul_tile_dcsc::<Arith>(&dv, vt, &x, &mut b, p, KernelSel::Simd(level));
+                assert_eq!(a, b, "dcsc gather p={p} weighted={weighted}");
+
+                let (mut a, mut b) = (vec![0f32; n], vec![0f32; n]);
+                mul_tile_scsr_t::<Arith>(&sv, vt, &x, &mut a, p, KernelSel::Specialized);
+                mul_tile_scsr_t::<Arith>(&sv, vt, &x, &mut b, p, KernelSel::Simd(level));
+                assert_eq!(a, b, "scsr scatter p={p} weighted={weighted}");
+            }
+        }
+    }
+
+    /// `mul_tile_dcsc_t` is the one FMA arm: per-entry fused rounding can
+    /// drift ≲1 ulp from the scalar two-rounding fold, so the comparison
+    /// is a tight relative tolerance (a few f32 ulps per accumulated
+    /// entry), not bit equality. Vacuously passes without a vector arm.
+    #[test]
+    fn simd_dcsc_scatter_within_fma_tolerance_of_scalar() {
+        let level = simd::cpu_level();
+        if level == SimdLevel::None {
+            return;
+        }
+        for p in [4usize, 8, 16] {
+            for weighted in [false, true] {
+                let t = 128u16;
+                let e = random_tile(t, 1100, 0xC00 + p as u64, weighted);
+                let vt = if weighted {
+                    ValueType::F32
+                } else {
+                    ValueType::Binary
+                };
+                let mut rng = Xoshiro256::new(0xC55 ^ p as u64);
+                let x: Vec<f32> = (0..t as usize * p)
+                    .map(|_| rng.next_f32() * 2.0 - 1.0)
+                    .collect();
+                let mut dbuf = Vec::new();
+                dcsc::encode(0, &e, vt, &mut dbuf);
+                let (dv, _) = dcsc::parse(&dbuf, 0, vt);
+                let n = t as usize * p;
+                let (mut a, mut b) = (vec![0f32; n], vec![0f32; n]);
+                mul_tile_dcsc_t::<Arith>(&dv, vt, &x, &mut a, p, KernelSel::Specialized);
+                mul_tile_dcsc_t::<Arith>(&dv, vt, &x, &mut b, p, KernelSel::Simd(level));
+                for (i, (s, v)) in a.iter().zip(&b).enumerate() {
+                    // ~t/t entries land per output row; 2e-6 covers the
+                    // worst-case half-ulp-per-entry accumulation with
+                    // headroom while still being ~20 ulps of f32.
+                    assert!(
+                        (s - v).abs() <= 2e-6 * s.abs().max(1.0),
+                        "dcsc_t p={p} weighted={weighted} idx {i}: scalar {s} vs simd {v}"
+                    );
+                }
+            }
         }
     }
 
@@ -778,20 +1090,23 @@ mod tests {
         let mut dbuf = Vec::new();
         dcsc::encode(0, &e, vt, &mut dbuf);
         let (dv, _) = dcsc::parse(&dbuf, 0, vt);
-        for vec in [true, false] {
+        // Exact equality across every dispatch path — including the
+        // `Simd` selector, which must degrade to scalar on non-Arith
+        // rings (`IS_ARITH` gate) and therefore stay bit-exact.
+        for sel in sels() {
             let mut s_out = vec![S::ZERO; t as usize * p];
-            mul_tile_scsr::<S>(&sv, vt, x, &mut s_out, p, vec);
-            assert_eq!(s_out, expect, "{} scsr p={p} vec={vec}", S::NAME);
+            mul_tile_scsr::<S>(&sv, vt, x, &mut s_out, p, sel);
+            assert_eq!(s_out, expect, "{} scsr p={p} sel={sel:?}", S::NAME);
             let mut d_out = vec![S::ZERO; t as usize * p];
-            mul_tile_dcsc::<S>(&dv, vt, x, &mut d_out, p, vec);
-            assert_eq!(d_out, expect, "{} dcsc p={p} vec={vec}", S::NAME);
+            mul_tile_dcsc::<S>(&dv, vt, x, &mut d_out, p, sel);
+            assert_eq!(d_out, expect, "{} dcsc p={p} sel={sel:?}", S::NAME);
         }
     }
 
     #[test]
     fn minplus_kernels_relax_distances() {
         // Min-plus gather over an encoded tile equals the per-entry
-        // tropical fold — exactly, in both formats, both dispatch paths.
+        // tropical fold — exactly, in both formats, all dispatch paths.
         // The dense operand mixes finite "distances" with unreached +∞.
         let t = 96usize;
         for p in [1usize, 4, 3] {
@@ -829,7 +1144,9 @@ mod tests {
             let mut sbuf = Vec::new();
             scsr::encode(0, &e, ValueType::Binary, &mut sbuf);
             let (sv, _) = scsr::parse(&sbuf, 0, ValueType::Binary);
-            mul_tile_scsr::<OrAnd>(&sv, ValueType::Binary, &x, &mut out, p, true);
+            // A Simd selector on a non-Arith ring runs the scalar arm.
+            let sel = KernelSel::Simd(simd::cpu_level());
+            mul_tile_scsr::<OrAnd>(&sv, ValueType::Binary, &x, &mut out, p, sel);
             assert!(out.iter().all(|&v| v == 0.0 || v == 1.0));
         }
     }
@@ -858,13 +1175,13 @@ mod tests {
         let mut dbuf = Vec::new();
         dcsc::encode(0, &e, vt, &mut dbuf);
         let (dv, _) = dcsc::parse(&dbuf, 0, vt);
-        for vec in [true, false] {
+        for sel in sels() {
             let mut s_out = vec![MinPlus::ZERO; t as usize * 2];
-            mul_tile_scsr_t::<MinPlus>(&sv, vt, &x, &mut s_out, 2, vec);
-            assert_eq!(s_out, expect, "scsr_t vec={vec}");
+            mul_tile_scsr_t::<MinPlus>(&sv, vt, &x, &mut s_out, 2, sel);
+            assert_eq!(s_out, expect, "scsr_t sel={sel:?}");
             let mut d_out = vec![MinPlus::ZERO; t as usize * 2];
-            mul_tile_dcsc_t::<MinPlus>(&dv, vt, &x, &mut d_out, 2, vec);
-            assert_eq!(d_out, expect, "dcsc_t vec={vec}");
+            mul_tile_dcsc_t::<MinPlus>(&dv, vt, &x, &mut d_out, 2, sel);
+            assert_eq!(d_out, expect, "dcsc_t sel={sel:?}");
         }
     }
 }

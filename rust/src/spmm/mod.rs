@@ -34,25 +34,38 @@
 //!   and the executor take the ring as a zero-sized type parameter
 //!   defaulting to `Arith`, so the arithmetic path monomorphizes to the
 //!   identical pre-semiring code.
+//! * [`simd`] — runtime-detected AVX2/NEON arms for the Arith tile
+//!   kernels at panel widths {4, 8, 16}, plus the pure dispatch table
+//!   ([`KernelSel`]) the executor resolves once per pass. Controlled by
+//!   [`SpmmOpts::simd`] (`spmm.simd` config key) and the
+//!   `SEM_SPMM_SIMD` environment override.
+//! * [`autotune`] — open-time kernel selection: a cached per-process
+//!   microbenchmark picks simd-vs-scalar per (ISA level, width) under
+//!   `spmm.simd = auto` and scales the scheduler grain so faster kernels
+//!   keep per-task time above the claim overhead.
 //! * [`spgemm`] — out-of-core sparse × sparse: Gustavson's algorithm over
 //!   the streamed sweep, with sorted intermediate runs written through
 //!   the merging writer onto the store and k-way-merged into a tiled
 //!   sparse product image.
 
+pub mod autotune;
 pub mod engine;
 pub mod exec;
 pub mod kernel;
 pub mod plan;
 pub mod scheduler;
 pub mod semiring;
+pub mod simd;
 pub mod spgemm;
 
+pub use autotune::Tuned;
 pub use engine::{spmm, spmm_out, DeltaSource, OutputSink, SemSource, SpmmStats, Source};
 pub use exec::{run_pass, run_pass_ring};
 pub use plan::{
     ForwardOp, OpKind, OpStats, PassOp, PassResult, RowHook, StreamPass, TransposeOp,
 };
 pub use semiring::{Arith, MinPlus, MinSelect, OrAnd, Semiring};
+pub use simd::{KernelSel, SimdLevel, SimdMode};
 
 use crate::DEFAULT_TILE;
 
@@ -68,7 +81,16 @@ pub struct SpmmOpts {
     /// tile row's tiles in storage order, no s×s regrouping).
     pub cache_blocking: bool,
     /// Width-specialized vectorizable inner loops (off = generic scalar).
+    /// This is the Fig 12 `Vec` ablation toggle; when off it outranks
+    /// [`SpmmOpts::simd`] entirely.
     pub vectorize: bool,
+    /// Explicit SIMD arm policy (`spmm.simd` config key, `SEM_SPMM_SIMD`
+    /// env override): `Auto` (default) lets the open-time microbench
+    /// pick simd-vs-scalar per width, `On` takes the vector arm whenever
+    /// the CPU has one, `Off` pins the scalar loops (the differential
+    /// baseline). Only the Arith ring at `p ∈ {4, 8, 16}` ever takes a
+    /// vector arm regardless of this setting.
+    pub simd: SimdMode,
     /// Poll for async I/O completion instead of blocking (SEM only).
     pub io_polling: bool,
     /// Reuse I/O buffers from a pool (SEM only).
@@ -101,6 +123,7 @@ impl Default for SpmmOpts {
             load_balance: true,
             cache_blocking: true,
             vectorize: true,
+            simd: SimdMode::Auto,
             io_polling: true,
             buf_pool: true,
             io_workers: 4,

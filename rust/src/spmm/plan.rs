@@ -61,6 +61,11 @@ pub struct OpStats {
     pub label: Option<String>,
     /// Dense width `p` of this op.
     pub cols: usize,
+    /// Kernel arm the executor resolved for this op's tile multiplies
+    /// (`"generic"`, `"scalar-w"`, `"avx2"`, `"neon"`): the autotuner's
+    /// per-pass verdict, recorded so benchmarks and the `backend_matrix`
+    /// experiment can attribute timings to the arm that actually ran.
+    pub kernel: &'static str,
     /// Seconds inside this op's tile kernels, summed over workers.
     pub kernel_secs: f64,
     /// Seconds in the op's end-of-pass reduction (transpose partial

@@ -2,7 +2,9 @@
 //!
 //! A single global cursor orders all tile rows; threads claim the next
 //! contiguous group atomically. Early in the computation a claim takes
-//! `grain` tile rows (sized so the group's dense rows fill the CPU cache);
+//! `grain` tile rows (sized so the group's dense rows fill the CPU cache;
+//! [`super::autotune`] may scale it up when fast SIMD kernels would
+//! otherwise leave per-task time under the claim overhead);
 //! once fewer than `threads × grain` tile rows remain, claims shrink to a
 //! single tile row so stragglers on power-law rows cannot unbalance the
 //! tail. Claiming in global order also keeps all threads on *contiguous*

@@ -60,6 +60,13 @@ pub trait Semiring: Send + Sync + 'static {
     /// matrix. 1.0 for every instance — see the module docs.
     const PATTERN: f32 = 1.0;
 
+    /// True only for [`Arith`]: `add`/`mul` are IEEE `+`/`×`, which is
+    /// what licenses the SIMD kernel arms (`_mm256_mul_ps`/`add_ps`
+    /// reproduce the scalar fold lane-for-lane). Every other ring keeps
+    /// this `false` and can never reach a vector arm — the dispatch in
+    /// [`super::kernel`] const-folds the check away per instantiation.
+    const IS_ARITH: bool = false;
+
     /// `a ⊕ b`.
     fn add(a: f32, b: f32) -> f32;
 
@@ -77,6 +84,7 @@ impl Semiring for Arith {
     const NAME: &'static str = "arith";
     const ZERO: f32 = 0.0;
     const ONE: f32 = 1.0;
+    const IS_ARITH: bool = true;
 
     #[inline(always)]
     fn add(a: f32, b: f32) -> f32 {

@@ -1,0 +1,670 @@
+//! Runtime-detected SIMD arms for the Arith tile kernels (§3.4, the
+//! paper's AVX optimization done with real vector intrinsics).
+//!
+//! # Dispatch table
+//!
+//! Kernel selection is a pure function ([`resolve_arm`]) of three inputs,
+//! resolved **once per pass** by the executor and threaded into the tile
+//! loop as a [`KernelSel`] — the hot path never re-detects features:
+//!
+//! | selector                    | p ∈ {4,8,16} + Arith | otherwise          |
+//! |-----------------------------|----------------------|--------------------|
+//! | `KernelSel::Generic`        | generic scalar       | generic scalar     |
+//! | `KernelSel::Specialized`    | const-width scalar   | width or generic   |
+//! | `KernelSel::Simd(level)`    | vector arm for level | width or generic   |
+//!
+//! `level` comes from [`cpu_level`] (`is_x86_feature_detected!` on
+//! x86-64, NEON unconditionally on aarch64 where it is baseline) filtered
+//! through the [`SimdMode`] option and the `SEM_SPMM_SIMD` environment
+//! override. A build without a vector arm for the current architecture,
+//! a CPU without AVX2+FMA, or a forced-off override all degrade to the
+//! width-specialized scalar loops — the always-available fallback.
+//!
+//! # Numerical contract
+//!
+//! Only the [`crate::spmm::Arith`] ring (`Semiring::IS_ARITH`) can reach
+//! a vector arm; every other ring compiles the SIMD branch away. Within
+//! Arith:
+//!
+//! * **Gather and scsr scatter arms are bit-identical** to the scalar
+//!   loops: they use separate multiply-then-add vector ops
+//!   (`mul_ps` + `add_ps` / `vmulq` + `vaddq`), which perform the same
+//!   two IEEE roundings per element, in the same order, as the scalar
+//!   fold `out = out + v * in`.
+//! * **The dcsc transpose arm uses FMA** for its per-column in-register
+//!   accumulator (the one genuinely latency-bound dependent chain); the
+//!   fused single rounding may differ from scalar by ≲1 ulp per entry,
+//!   which is why SIMD-on vs SIMD-off differential tests use exact
+//!   equality everywhere except `mul_tile_dcsc_t`.
+//!
+//! Software prefetch: the x86 arms issue `_mm_prefetch(T0)` one entry
+//! ahead for gathered input rows and scattered output rows (the accesses
+//! the stream order cannot make sequential); tile-row payloads and dense
+//! panels additionally start 64-byte aligned via
+//! [`crate::util::AlignedBuf`], so panels never straddle an extra line.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Vector ISA level a kernel arm may target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimdLevel {
+    /// No vector arm available (or forced off): scalar loops only.
+    None,
+    /// x86-64 AVX2 (+FMA where the contract allows fusing).
+    Avx2,
+    /// AArch64 NEON (baseline on every aarch64 target).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stats label for this level.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::None => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+/// The `spmm.simd` option: how eagerly the engine takes vector arms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Detect, then let the open-time microbench pick simd vs scalar
+    /// per (level, p) — the default.
+    #[default]
+    Auto,
+    /// Use the vector arm whenever the CPU supports one (skip the
+    /// microbench). Still falls back to scalar without hardware support.
+    On,
+    /// Never take a vector arm (the forced-scalar differential baseline).
+    Off,
+}
+
+/// Parse a `spmm.simd` config value / `SEM_SPMM_SIMD` override string.
+/// Unrecognized strings return `None` (callers keep their default).
+pub fn parse_simd_mode(s: &str) -> Option<SimdMode> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "auto" | "" => Some(SimdMode::Auto),
+        "on" | "1" | "true" | "force" => Some(SimdMode::On),
+        "off" | "0" | "false" | "scalar" => Some(SimdMode::Off),
+        _ => None,
+    }
+}
+
+/// The `SEM_SPMM_SIMD` environment override, if set and well-formed.
+/// (CI runs the whole suite with `SEM_SPMM_SIMD=off` to keep the scalar
+/// fallback green on vector hardware.)
+pub fn env_mode() -> Option<SimdMode> {
+    std::env::var("SEM_SPMM_SIMD").ok().and_then(|v| parse_simd_mode(&v))
+}
+
+/// The [`SimdMode`] after applying the environment override.
+pub fn effective_mode(opt: SimdMode) -> SimdMode {
+    env_mode().unwrap_or(opt)
+}
+
+/// Test hook: pretend the CPU has no vector features. Lets the dispatch
+/// tests prove "no SIMD arm is ever selected without hardware support"
+/// without needing a scalar-only machine. Forcing the *presence* of a
+/// feature is deliberately impossible — executing an arm the CPU lacks
+/// would be undefined behavior, so the override only ever downgrades.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Enable/disable the forced-scalar detection override (tests only).
+pub fn force_scalar_for_tests(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// The best vector level this CPU supports (honoring the test override).
+/// Detection is cheap and internally cached by the stdlib macro.
+pub fn cpu_level() -> SimdLevel {
+    if FORCE_SCALAR.load(Ordering::SeqCst) {
+        return SimdLevel::None;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline — no runtime probe needed.
+        return SimdLevel::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdLevel::None
+}
+
+/// The level a pass may actually use under `mode` (env-overridden).
+pub fn effective_level(mode: SimdMode) -> SimdLevel {
+    match effective_mode(mode) {
+        SimdMode::Off => SimdLevel::None,
+        SimdMode::Auto | SimdMode::On => cpu_level(),
+    }
+}
+
+/// Per-pass kernel selector, resolved once by the executor and threaded
+/// through the tile loop (see the module docs for the dispatch table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelSel {
+    /// Generic variable-width scalar loop (the Fig 12 `Vec=off` ablation).
+    Generic,
+    /// Width-specialized const-generic scalar loops.
+    Specialized,
+    /// Width-specialized with vector arms at `p ∈ {4, 8, 16}` for Arith.
+    /// `Simd(SimdLevel::None)` is equivalent to `Specialized`.
+    Simd(SimdLevel),
+}
+
+impl KernelSel {
+    /// Stats label for the arm this selector takes at width `p` under an
+    /// Arith pass (`per_op.kernel` in [`crate::spmm::SpmmStats`]).
+    pub fn arm_name(self, p: usize, is_arith: bool) -> &'static str {
+        match resolve_arm(self, p, is_arith) {
+            Arm::Generic => "generic",
+            Arm::Specialized => "scalar-w",
+            Arm::SimdAvx2 => "avx2",
+            Arm::SimdNeon => "neon",
+        }
+    }
+}
+
+/// A concrete kernel arm (the output of [`resolve_arm`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arm {
+    /// Generic variable-width scalar loop.
+    Generic,
+    /// Width-specialized const-generic scalar loop.
+    Specialized,
+    /// AVX2 vector arm (x86-64, requires avx2+fma detected).
+    SimdAvx2,
+    /// NEON vector arm (aarch64).
+    SimdNeon,
+}
+
+/// The scalar arm for width `p` (specialized widths, else generic).
+fn scalar_arm(p: usize) -> Arm {
+    if matches!(p, 1 | 2 | 4 | 8 | 16) {
+        Arm::Specialized
+    } else {
+        Arm::Generic
+    }
+}
+
+/// The pure dispatch table: which arm `sel` takes at width `p` for a
+/// ring with `is_arith`. Vector arms exist only for Arith at the panel
+/// widths {4, 8, 16}; everything else degrades to the scalar arms, and
+/// `Simd(None)` (no hardware support / forced off) can never yield a
+/// vector arm — the property the probe-override test pins down.
+pub fn resolve_arm(sel: KernelSel, p: usize, is_arith: bool) -> Arm {
+    match sel {
+        KernelSel::Generic => Arm::Generic,
+        KernelSel::Specialized => scalar_arm(p),
+        KernelSel::Simd(level) => {
+            if is_arith && matches!(p, 4 | 8 | 16) {
+                match level {
+                    SimdLevel::Avx2 => return Arm::SimdAvx2,
+                    SimdLevel::Neon => return Arm::SimdNeon,
+                    SimdLevel::None => {}
+                }
+            }
+            scalar_arm(p)
+        }
+    }
+}
+
+/// Expands the four tile-kernel walks over this module's panel helpers
+/// (`axpy_panel` / `fma_panel` / `add_panel` / `prefetch`). One source of
+/// truth for the stream-walk logic; each arch module instantiates it with
+/// its own `#[target_feature]` attribute (x86) or none (NEON baseline).
+///
+/// # Safety (all four generated kernels)
+/// Callers must guarantee the CPU supports the module's ISA (the
+/// dispatcher only routes here when [`cpu_level`] said so) and pass
+/// well-formed tile views whose local indices are `< t` with both dense
+/// slices spanning `t` rows of width `P` (the same contract the scalar
+/// kernels rely on; debug builds assert it).
+macro_rules! define_simd_kernels {
+    ($(#[$attr:meta])*) => {
+        /// Forward (gather) SCSR+COO multiply — bit-identical to the
+        /// scalar fold (mul-then-add per lane).
+        $(#[$attr])*
+        pub unsafe fn mul_scsr<V: ValStream, const P: usize>(
+            view: &scsr::TileView<'_>,
+            vals: &mut V,
+            in_rows: &[f32],
+            out_rows: &mut [f32],
+        ) {
+            debug_assert!(P == 4 || P == 8 || P == 16);
+            let inp = in_rows.as_ptr();
+            let outp = out_rows.as_mut_ptr();
+            let words = view.scsr;
+            let n = words.len() / 2;
+            let mut out_base = 0usize;
+            let mut i = 0usize;
+            while i < n {
+                let w = u16::from_le_bytes([words[2 * i], words[2 * i + 1]]);
+                if w & scsr::ROW_TAG != 0 {
+                    out_base = ((w & !scsr::ROW_TAG) as usize) * P;
+                    unsafe { prefetch(outp.add(out_base) as *const i8) };
+                } else {
+                    // Hide the gather latency of the *next* entry's input
+                    // row behind this entry's arithmetic.
+                    if i + 1 < n {
+                        let wn = u16::from_le_bytes([words[2 * i + 2], words[2 * i + 3]]);
+                        if wn & scsr::ROW_TAG == 0 {
+                            unsafe { prefetch(inp.add((wn as usize) * P) as *const i8) };
+                        }
+                    }
+                    let in_base = (w as usize) * P;
+                    let v = vals.next();
+                    debug_assert!(
+                        in_base + P <= in_rows.len() && out_base + P <= out_rows.len()
+                    );
+                    unsafe { axpy_panel::<P>(v, inp.add(in_base), outp.add(out_base)) };
+                }
+                i += 1;
+            }
+            let coo = view.coo;
+            let m = coo.len() / 4;
+            let mut k = 0usize;
+            while k < m {
+                if k + 2 < m {
+                    let rn = u16::from_le_bytes([coo[4 * (k + 2)], coo[4 * (k + 2) + 1]]);
+                    let cn =
+                        u16::from_le_bytes([coo[4 * (k + 2) + 2], coo[4 * (k + 2) + 3]]);
+                    unsafe {
+                        prefetch(inp.add((cn as usize) * P) as *const i8);
+                        prefetch(outp.add((rn as usize) * P) as *const i8);
+                    }
+                }
+                let r = u16::from_le_bytes([coo[4 * k], coo[4 * k + 1]]) as usize;
+                let c = u16::from_le_bytes([coo[4 * k + 2], coo[4 * k + 3]]) as usize;
+                let v = vals.next();
+                debug_assert!(c * P + P <= in_rows.len() && r * P + P <= out_rows.len());
+                unsafe { axpy_panel::<P>(v, inp.add(c * P), outp.add(r * P)) };
+                k += 1;
+            }
+        }
+
+        /// Transpose (scatter) SCSR+COO multiply — bit-identical to the
+        /// scalar fold (no FMA: scattered accumulation order matches).
+        $(#[$attr])*
+        pub unsafe fn mul_scsr_t<V: ValStream, const P: usize>(
+            view: &scsr::TileView<'_>,
+            vals: &mut V,
+            in_rows: &[f32],
+            out_rows: &mut [f32],
+        ) {
+            debug_assert!(P == 4 || P == 8 || P == 16);
+            let inp = in_rows.as_ptr();
+            let outp = out_rows.as_mut_ptr();
+            let words = view.scsr;
+            let n = words.len() / 2;
+            let mut in_base = 0usize;
+            let mut i = 0usize;
+            while i < n {
+                let w = u16::from_le_bytes([words[2 * i], words[2 * i + 1]]);
+                if w & scsr::ROW_TAG != 0 {
+                    in_base = ((w & !scsr::ROW_TAG) as usize) * P;
+                    unsafe { prefetch(inp.add(in_base) as *const i8) };
+                } else {
+                    if i + 1 < n {
+                        let wn = u16::from_le_bytes([words[2 * i + 2], words[2 * i + 3]]);
+                        if wn & scsr::ROW_TAG == 0 {
+                            unsafe { prefetch(outp.add((wn as usize) * P) as *const i8) };
+                        }
+                    }
+                    let out_base = (w as usize) * P;
+                    let v = vals.next();
+                    debug_assert!(
+                        in_base + P <= in_rows.len() && out_base + P <= out_rows.len()
+                    );
+                    unsafe { axpy_panel::<P>(v, inp.add(in_base), outp.add(out_base)) };
+                }
+                i += 1;
+            }
+            let coo = view.coo;
+            let m = coo.len() / 4;
+            let mut k = 0usize;
+            while k < m {
+                if k + 2 < m {
+                    let rn = u16::from_le_bytes([coo[4 * (k + 2)], coo[4 * (k + 2) + 1]]);
+                    let cn =
+                        u16::from_le_bytes([coo[4 * (k + 2) + 2], coo[4 * (k + 2) + 3]]);
+                    unsafe {
+                        prefetch(inp.add((rn as usize) * P) as *const i8);
+                        prefetch(outp.add((cn as usize) * P) as *const i8);
+                    }
+                }
+                let r = u16::from_le_bytes([coo[4 * k], coo[4 * k + 1]]) as usize;
+                let c = u16::from_le_bytes([coo[4 * k + 2], coo[4 * k + 3]]) as usize;
+                let v = vals.next();
+                debug_assert!(r * P + P <= in_rows.len() && c * P + P <= out_rows.len());
+                unsafe { axpy_panel::<P>(v, inp.add(r * P), outp.add(c * P)) };
+                k += 1;
+            }
+        }
+
+        /// Forward DCSC multiply — bit-identical to the scalar fold.
+        $(#[$attr])*
+        pub unsafe fn mul_dcsc<V: ValStream, const P: usize>(
+            view: &dcsc::TileView<'_>,
+            vals: &mut V,
+            in_rows: &[f32],
+            out_rows: &mut [f32],
+        ) {
+            debug_assert!(P == 4 || P == 8 || P == 16);
+            let inp = in_rows.as_ptr();
+            let outp = out_rows.as_mut_ptr();
+            for k in 0..view.nnc {
+                let (c, s, e) = view.col(k);
+                let in_base = (c as usize) * P;
+                debug_assert!(in_base + P <= in_rows.len());
+                for i in s..e {
+                    let r = view.row(i) as usize;
+                    if i + 1 < e {
+                        unsafe {
+                            prefetch(outp.add((view.row(i + 1) as usize) * P) as *const i8)
+                        };
+                    }
+                    let v = vals.next();
+                    debug_assert!(r * P + P <= out_rows.len());
+                    unsafe { axpy_panel::<P>(v, inp.add(in_base), outp.add(r * P)) };
+                }
+            }
+        }
+
+        /// Transpose DCSC multiply: per-column gather into an in-register
+        /// accumulator. The accumulator chain is the one latency-bound
+        /// dependency in these kernels, so it uses **FMA** — results may
+        /// differ from scalar by ≲1 ulp per entry (the documented
+        /// tolerance case); the final fold into the partial is a plain
+        /// add, matching the scalar kernel.
+        $(#[$attr])*
+        pub unsafe fn mul_dcsc_t<V: ValStream, const P: usize>(
+            view: &dcsc::TileView<'_>,
+            vals: &mut V,
+            in_rows: &[f32],
+            out_rows: &mut [f32],
+        ) {
+            debug_assert!(P == 4 || P == 8 || P == 16);
+            let inp = in_rows.as_ptr();
+            let outp = out_rows.as_mut_ptr();
+            for k in 0..view.nnc {
+                let (c, s, e) = view.col(k);
+                let mut acc = [0f32; P];
+                let accp = acc.as_mut_ptr();
+                for i in s..e {
+                    let r = view.row(i) as usize;
+                    if i + 1 < e {
+                        unsafe {
+                            prefetch(inp.add((view.row(i + 1) as usize) * P) as *const i8)
+                        };
+                    }
+                    let v = vals.next();
+                    debug_assert!(r * P + P <= in_rows.len());
+                    unsafe { fma_panel::<P>(v, inp.add(r * P), accp) };
+                }
+                let out_base = (c as usize) * P;
+                debug_assert!(out_base + P <= out_rows.len());
+                unsafe { add_panel::<P>(accp as *const f32, outp.add(out_base)) };
+            }
+        }
+    };
+}
+
+/// AVX2(+FMA) arms. Only reachable after `is_x86_feature_detected!`
+/// confirmed both features (see [`cpu_level`]); all loads/stores are
+/// unaligned-tolerant (`loadu`/`storeu`) — alignment is a fast path, not
+/// a requirement.
+#[cfg(target_arch = "x86_64")]
+pub mod x86 {
+    use super::super::kernel::ValStream;
+    use crate::format::{dcsc, scsr};
+    use core::arch::x86_64::*;
+
+    /// T0 prefetch (safe for any address — prefetch never faults).
+    #[inline(always)]
+    unsafe fn prefetch(p: *const i8) {
+        unsafe { _mm_prefetch::<_MM_HINT_T0>(p) };
+    }
+
+    /// `dst[j] = dst[j] + v * src[j]` for `j < P`, multiply and add as
+    /// two separately rounded ops — lane-for-lane identical to scalar.
+    #[inline(always)]
+    unsafe fn axpy_panel<const P: usize>(v: f32, src: *const f32, dst: *mut f32) {
+        unsafe {
+            if P == 4 {
+                let prod = _mm_mul_ps(_mm_set1_ps(v), _mm_loadu_ps(src));
+                _mm_storeu_ps(dst, _mm_add_ps(_mm_loadu_ps(dst as *const f32), prod));
+            } else if P == 8 {
+                let prod = _mm256_mul_ps(_mm256_set1_ps(v), _mm256_loadu_ps(src));
+                _mm256_storeu_ps(dst, _mm256_add_ps(_mm256_loadu_ps(dst as *const f32), prod));
+            } else {
+                let vv = _mm256_set1_ps(v);
+                let p0 = _mm256_mul_ps(vv, _mm256_loadu_ps(src));
+                _mm256_storeu_ps(dst, _mm256_add_ps(_mm256_loadu_ps(dst as *const f32), p0));
+                let p1 = _mm256_mul_ps(vv, _mm256_loadu_ps(src.add(8)));
+                _mm256_storeu_ps(
+                    dst.add(8),
+                    _mm256_add_ps(_mm256_loadu_ps(dst.add(8) as *const f32), p1),
+                );
+            }
+        }
+    }
+
+    /// `dst[j] = fma(v, src[j], dst[j])` — single rounding (accumulator
+    /// chains only; see the module's numerical contract).
+    #[inline(always)]
+    unsafe fn fma_panel<const P: usize>(v: f32, src: *const f32, dst: *mut f32) {
+        unsafe {
+            if P == 4 {
+                let o = _mm_fmadd_ps(
+                    _mm_set1_ps(v),
+                    _mm_loadu_ps(src),
+                    _mm_loadu_ps(dst as *const f32),
+                );
+                _mm_storeu_ps(dst, o);
+            } else if P == 8 {
+                let o = _mm256_fmadd_ps(
+                    _mm256_set1_ps(v),
+                    _mm256_loadu_ps(src),
+                    _mm256_loadu_ps(dst as *const f32),
+                );
+                _mm256_storeu_ps(dst, o);
+            } else {
+                let vv = _mm256_set1_ps(v);
+                let o0 = _mm256_fmadd_ps(vv, _mm256_loadu_ps(src), _mm256_loadu_ps(dst as *const f32));
+                _mm256_storeu_ps(dst, o0);
+                let o1 = _mm256_fmadd_ps(
+                    vv,
+                    _mm256_loadu_ps(src.add(8)),
+                    _mm256_loadu_ps(dst.add(8) as *const f32),
+                );
+                _mm256_storeu_ps(dst.add(8), o1);
+            }
+        }
+    }
+
+    /// `dst[j] = dst[j] + src[j]` (the accumulator fold).
+    #[inline(always)]
+    unsafe fn add_panel<const P: usize>(src: *const f32, dst: *mut f32) {
+        unsafe {
+            if P == 4 {
+                _mm_storeu_ps(dst, _mm_add_ps(_mm_loadu_ps(dst as *const f32), _mm_loadu_ps(src)));
+            } else {
+                let mut j = 0usize;
+                while j < P {
+                    _mm256_storeu_ps(
+                        dst.add(j),
+                        _mm256_add_ps(
+                            _mm256_loadu_ps(dst.add(j) as *const f32),
+                            _mm256_loadu_ps(src.add(j)),
+                        ),
+                    );
+                    j += 8;
+                }
+            }
+        }
+    }
+
+    define_simd_kernels!(#[target_feature(enable = "avx2,fma")]);
+}
+
+/// NEON arms (aarch64 — NEON is baseline, no runtime probe or
+/// `#[target_feature]` needed; no portable prefetch intrinsic exists on
+/// stable, so `prefetch` is a no-op there).
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use super::super::kernel::ValStream;
+    use crate::format::{dcsc, scsr};
+    use core::arch::aarch64::*;
+
+    #[inline(always)]
+    unsafe fn prefetch(_p: *const i8) {}
+
+    /// Two-rounding mul+add per lane — bit-identical to scalar.
+    #[inline(always)]
+    unsafe fn axpy_panel<const P: usize>(v: f32, src: *const f32, dst: *mut f32) {
+        unsafe {
+            let vv = vdupq_n_f32(v);
+            let mut j = 0usize;
+            while j < P {
+                let prod = vmulq_f32(vv, vld1q_f32(src.add(j)));
+                vst1q_f32(dst.add(j), vaddq_f32(vld1q_f32(dst.add(j) as *const f32), prod));
+                j += 4;
+            }
+        }
+    }
+
+    /// Fused multiply-add per lane (accumulator chains only).
+    #[inline(always)]
+    unsafe fn fma_panel<const P: usize>(v: f32, src: *const f32, dst: *mut f32) {
+        unsafe {
+            let vv = vdupq_n_f32(v);
+            let mut j = 0usize;
+            while j < P {
+                let o = vfmaq_f32(vld1q_f32(dst.add(j) as *const f32), vv, vld1q_f32(src.add(j)));
+                vst1q_f32(dst.add(j), o);
+                j += 4;
+            }
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn add_panel<const P: usize>(src: *const f32, dst: *mut f32) {
+        unsafe {
+            let mut j = 0usize;
+            while j < P {
+                vst1q_f32(
+                    dst.add(j),
+                    vaddq_f32(vld1q_f32(dst.add(j) as *const f32), vld1q_f32(src.add(j))),
+                );
+                j += 4;
+            }
+        }
+    }
+
+    define_simd_kernels!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_modes() {
+        assert_eq!(parse_simd_mode("auto"), Some(SimdMode::Auto));
+        assert_eq!(parse_simd_mode("ON"), Some(SimdMode::On));
+        assert_eq!(parse_simd_mode(" off "), Some(SimdMode::Off));
+        assert_eq!(parse_simd_mode("0"), Some(SimdMode::Off));
+        assert_eq!(parse_simd_mode("1"), Some(SimdMode::On));
+        assert_eq!(parse_simd_mode("scalar"), Some(SimdMode::Off));
+        assert_eq!(parse_simd_mode("avx9000"), None);
+    }
+
+    #[test]
+    fn dispatch_table_scalar_paths() {
+        for p in [1usize, 2, 3, 4, 8, 16, 32] {
+            assert_eq!(resolve_arm(KernelSel::Generic, p, true), Arm::Generic);
+            let want = if matches!(p, 1 | 2 | 4 | 8 | 16) {
+                Arm::Specialized
+            } else {
+                Arm::Generic
+            };
+            assert_eq!(resolve_arm(KernelSel::Specialized, p, true), want, "p={p}");
+            // Simd(None) can never produce a vector arm.
+            assert_eq!(
+                resolve_arm(KernelSel::Simd(SimdLevel::None), p, true),
+                want,
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn dispatch_table_simd_gated_on_width_and_ring() {
+        for level in [SimdLevel::Avx2, SimdLevel::Neon] {
+            let vec_arm = match level {
+                SimdLevel::Avx2 => Arm::SimdAvx2,
+                SimdLevel::Neon => Arm::SimdNeon,
+                SimdLevel::None => unreachable!(),
+            };
+            for p in [4usize, 8, 16] {
+                // Arith at a panel width: the vector arm.
+                assert_eq!(resolve_arm(KernelSel::Simd(level), p, true), vec_arm);
+                // Any non-Arith ring: never a vector arm.
+                assert_eq!(
+                    resolve_arm(KernelSel::Simd(level), p, false),
+                    Arm::Specialized
+                );
+            }
+            // Non-panel widths: scalar arms even for Arith.
+            for p in [1usize, 2, 3, 7, 32] {
+                let a = resolve_arm(KernelSel::Simd(level), p, true);
+                assert!(matches!(a, Arm::Generic | Arm::Specialized), "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_simd_arm_without_cpu_support() {
+        // Override the probe to report a feature-less CPU: every level
+        // the engine can derive from it must resolve to scalar arms.
+        force_scalar_for_tests(true);
+        let lvl = cpu_level();
+        force_scalar_for_tests(false);
+        assert_eq!(lvl, SimdLevel::None);
+        for p in [4usize, 8, 16] {
+            let arm = resolve_arm(KernelSel::Simd(lvl), p, true);
+            assert!(
+                matches!(arm, Arm::Generic | Arm::Specialized),
+                "p={p}: dispatch selected {arm:?} on a CPU without SIMD"
+            );
+        }
+        // And the mode pipeline degrades the same way.
+        force_scalar_for_tests(true);
+        let eff = effective_level(SimdMode::On);
+        force_scalar_for_tests(false);
+        assert_eq!(eff, SimdLevel::None);
+    }
+
+    #[test]
+    fn off_mode_is_scalar_even_on_vector_hardware() {
+        assert_eq!(effective_level(SimdMode::Off), SimdLevel::None);
+    }
+
+    #[test]
+    fn arm_names_are_stable_labels() {
+        assert_eq!(KernelSel::Generic.arm_name(8, true), "generic");
+        assert_eq!(KernelSel::Specialized.arm_name(8, true), "scalar-w");
+        assert_eq!(KernelSel::Specialized.arm_name(3, true), "generic");
+        assert_eq!(
+            KernelSel::Simd(SimdLevel::Avx2).arm_name(8, false),
+            "scalar-w"
+        );
+    }
+}

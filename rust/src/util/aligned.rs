@@ -1,0 +1,239 @@
+//! Cache-line-aligned buffers for the SIMD fast paths.
+//!
+//! [`AlignedBuf<T>`] is a growable buffer whose first live element always
+//! sits on a 64-byte boundary, so vectorized kernels see cache-line
+//! aligned dense-row panels and I/O buffers. The alignment is achieved
+//! in **safe Rust** by over-allocating a plain `Vec<T>` with one cache
+//! line of slack and exposing the aligned window `[off, off + len)`
+//! through `Deref<Target = [T]>` — no `Layout` juggling, no custom
+//! allocator, and reallocation (which may move the backing storage)
+//! simply recomputes the offset.
+//!
+//! The alignment is a performance contract, not a safety one: the SIMD
+//! kernels use unaligned loads and stay correct on any slice; aligned
+//! panels just avoid split-line traffic on the hot gather/scatter loops.
+
+use std::ops::{Deref, DerefMut};
+
+/// Target alignment in bytes (one x86/aarch64 cache line, and ≥ the
+/// widest vector the kernels use).
+pub const ALIGN: usize = 64;
+
+/// A `Vec`-backed buffer whose live window starts 64-byte aligned.
+pub struct AlignedBuf<T> {
+    /// Backing storage, over-allocated by one line of slack elements.
+    buf: Vec<T>,
+    /// Elements to skip so `buf[off]` is 64-byte aligned.
+    off: usize,
+    /// Live length in elements.
+    len: usize,
+}
+
+impl<T: Copy + Default> AlignedBuf<T> {
+    /// Slack elements needed to guarantee an aligned window exists.
+    #[inline]
+    fn slack() -> usize {
+        // T is f32/u8 here: size divides ALIGN, so ALIGN/size extra
+        // elements always contain an aligned start.
+        debug_assert!(ALIGN % std::mem::size_of::<T>() == 0);
+        ALIGN / std::mem::size_of::<T>()
+    }
+
+    /// Offset (in elements) of the first 64-byte-aligned element.
+    #[inline]
+    fn align_off(ptr: *const T) -> usize {
+        let addr = ptr as usize;
+        let rem = addr % ALIGN;
+        if rem == 0 {
+            0
+        } else {
+            (ALIGN - rem) / std::mem::size_of::<T>()
+        }
+    }
+
+    /// A zero-filled aligned buffer of `len` elements.
+    pub fn zeroed(len: usize) -> AlignedBuf<T> {
+        let mut b = AlignedBuf {
+            buf: Vec::new(),
+            off: 0,
+            len: 0,
+        };
+        b.resize_zeroed(len);
+        b
+    }
+
+    /// An empty buffer with room for `cap` elements (plus slack) so the
+    /// first `resize_zeroed(<= cap)` does not reallocate.
+    pub fn with_capacity(cap: usize) -> AlignedBuf<T> {
+        let mut buf = Vec::with_capacity(cap + Self::slack());
+        let off = Self::align_off(buf.as_ptr());
+        buf.resize(off, T::default());
+        AlignedBuf { buf, off, len: 0 }
+    }
+
+    /// An aligned copy of `src`.
+    pub fn from_slice(src: &[T]) -> AlignedBuf<T> {
+        let mut b = Self::zeroed(src.len());
+        b.as_mut_slice().copy_from_slice(src);
+        b
+    }
+
+    /// Resize the live window to `len` elements. Newly exposed contents
+    /// are unspecified (zero on a fresh buffer, stale bytes on a reused
+    /// one) — exactly the pool-buffer contract the I/O engine relies on:
+    /// every byte is overwritten by the read that claims the buffer.
+    ///
+    /// A reallocation (or a fresh `Vec` whose base moved) may change the
+    /// aligned offset; the window is recomputed, so the alignment holds
+    /// after every call.
+    pub fn resize_zeroed(&mut self, len: usize) {
+        let need = len + Self::slack();
+        if self.buf.len() < need {
+            self.buf.resize(need, T::default());
+        }
+        self.off = Self::align_off(self.buf.as_ptr());
+        self.len = len;
+    }
+
+    /// The live window as a slice (starts 64-byte aligned).
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// The live window as a mutable slice (starts 64-byte aligned).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.buf[self.off..self.off + self.len]
+    }
+
+    /// Live length in elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the live window is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes of backing storage actually allocated (slack included) —
+    /// what a pool's retained-byte accounting must charge.
+    #[inline]
+    pub fn capacity_bytes(&self) -> usize {
+        self.buf.capacity() * std::mem::size_of::<T>()
+    }
+
+    /// Fill the live window with `v`.
+    pub fn fill(&mut self, v: T) {
+        self.as_mut_slice().fill(v);
+    }
+}
+
+impl<T: Copy + Default> Deref for AlignedBuf<T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy + Default> DerefMut for AlignedBuf<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: Copy + Default> Clone for AlignedBuf<T> {
+    fn clone(&self) -> Self {
+        Self::from_slice(self.as_slice())
+    }
+}
+
+impl<T: Copy + Default> Default for AlignedBuf<T> {
+    fn default() -> Self {
+        Self::zeroed(0)
+    }
+}
+
+impl<T: Copy + Default + std::fmt::Debug> std::fmt::Debug for AlignedBuf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedBuf")
+            .field("len", &self.len)
+            .field("aligned", &(self.as_ptr() as usize % ALIGN == 0))
+            .finish()
+    }
+}
+
+impl<T: Copy + Default> From<Vec<T>> for AlignedBuf<T> {
+    fn from(v: Vec<T>) -> Self {
+        Self::from_slice(&v)
+    }
+}
+
+impl<T: Copy + Default + PartialEq> PartialEq for AlignedBuf<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_is_aligned_for_f32_and_u8() {
+        for len in [0usize, 1, 7, 64, 1000, 16 * 1024] {
+            let b: AlignedBuf<f32> = AlignedBuf::zeroed(len);
+            assert_eq!(b.len(), len);
+            assert_eq!(b.as_ptr() as usize % ALIGN, 0, "f32 len={len}");
+            assert!(b.iter().all(|&x| x == 0.0));
+            let b: AlignedBuf<u8> = AlignedBuf::zeroed(len);
+            assert_eq!(b.as_ptr() as usize % ALIGN, 0, "u8 len={len}");
+        }
+    }
+
+    #[test]
+    fn resize_keeps_alignment_across_reallocs() {
+        let mut b: AlignedBuf<u8> = AlignedBuf::zeroed(8);
+        for len in [16usize, 1000, 64 * 1024, 100, 1 << 20] {
+            b.resize_zeroed(len);
+            assert_eq!(b.len(), len);
+            assert_eq!(b.as_ptr() as usize % ALIGN, 0, "len={len}");
+        }
+    }
+
+    #[test]
+    fn clone_and_from_slice_preserve_contents() {
+        let src: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        let a = AlignedBuf::from_slice(&src);
+        assert_eq!(&a[..], &src[..]);
+        let b = a.clone();
+        assert_eq!(&b[..], &src[..]);
+        assert_eq!(b.as_ptr() as usize % ALIGN, 0);
+    }
+
+    #[test]
+    fn deref_mut_writes_stick() {
+        let mut b: AlignedBuf<f32> = AlignedBuf::zeroed(10);
+        b[3] = 7.5;
+        b.as_mut_slice()[4] = 1.25;
+        assert_eq!(b[3], 7.5);
+        assert_eq!(b.as_slice()[4], 1.25);
+        b.fill(2.0);
+        assert!(b.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn with_capacity_then_resize_does_not_move() {
+        let mut b: AlignedBuf<u8> = AlignedBuf::with_capacity(4096);
+        assert!(b.is_empty());
+        b.resize_zeroed(4096);
+        assert_eq!(b.len(), 4096);
+        assert_eq!(b.as_ptr() as usize % ALIGN, 0);
+        assert!(b.capacity_bytes() >= 4096);
+    }
+}

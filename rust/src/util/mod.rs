@@ -1,10 +1,12 @@
 //! Small shared utilities: deterministic PRNG, bit manipulation, human-
 //! readable sizes, and wall-clock helpers.
 
+pub mod aligned;
 pub mod prng;
 pub mod proptest;
 pub mod tempdir;
 
+pub use aligned::AlignedBuf;
 pub use prng::SplitMix64;
 pub use tempdir::{tempdir, TempDir};
 pub use prng::Xoshiro256;

@@ -508,3 +508,104 @@ fn weighted_differential_width4() {
     let base = csr_spmm(&m, &nd, &CsrSpmmOpts::default());
     assert_close("weighted CSR vs oracle", &base.data, &oracle);
 }
+
+/// SIMD differential: forced-on vs forced-off SIMD arms over a 4-shard
+/// striped store, SCSR and DCSC images, weighted and binary matrices,
+/// `p ∈ {1, 2, 4, 8, 16}`. The forward gather and the SCSR scatter use
+/// separate mul-then-add vector math — same IEEE roundings as the
+/// scalar loops — so those paths must be **bit-identical**; only the
+/// DCSC transpose arm keeps an FMA accumulator and is allowed its
+/// documented ≲1-ulp-per-entry drift (2e-6 relative). On a CPU without
+/// a vector arm (or under `SEM_SPMM_SIMD=off`) both runs resolve to the
+/// scalar loops and the identity is trivially exact — the CI off-leg is
+/// supposed to take that branch.
+#[test]
+fn simd_on_vs_off_differential_over_striped_store() {
+    use sem_spmm::spmm::SimdMode;
+
+    let binary = sample();
+    let mut weighted = sample();
+    let mut rng = sem_spmm::util::Xoshiro256::new(0x51D);
+    weighted.vals = Some((0..weighted.nnz()).map(|_| rng.next_f32() * 2.0 - 1.0).collect());
+
+    for (mname, m) in [("binary", &binary), ("weighted", &weighted)] {
+        for fmt in [TileFormat::Scsr, TileFormat::Dcsc] {
+            let img = TiledImage::build(m, 128, fmt);
+            let dir = sem_spmm::util::tempdir();
+            let store = ShardedStore::open(StoreSpec {
+                dir: dir.path().to_path_buf(),
+                shards: 4,
+                stripe_bytes: 4096,
+                read_gbps: None,
+                write_gbps: None,
+                latency_us: 0,
+                parity: false,
+            })
+            .unwrap();
+            let mut buf = Vec::new();
+            img.write_to(&mut buf).unwrap();
+            store.put("s.semm", &buf).unwrap();
+            let src = Source::Sem(SemSource::open(&store, "s.semm").unwrap());
+            let tag = |p: usize| format!("{mname}/{fmt:?} p={p}");
+
+            for p in [1usize, 2, 4, 8, 16] {
+                let opts = |mode: SimdMode| SpmmOpts {
+                    threads: 3,
+                    io_workers: 2,
+                    simd: mode,
+                    ..Default::default()
+                };
+                // Forward gather: bit-identical.
+                let x = DenseMatrix::random(m.ncols, p, 0xF0 + p as u64);
+                let (off, _) = engine::spmm_out(&src, &x, &opts(SimdMode::Off)).unwrap();
+                let (on, _) = engine::spmm_out(&src, &x, &opts(SimdMode::On)).unwrap();
+                assert_eq!(off.data, on.data, "{}: forward gather diverged", tag(p));
+
+                // Transpose scatter: SCSR exact, DCSC within FMA drift.
+                let y = DenseMatrix::random(m.nrows, p, 0x1F0 + p as u64);
+                let scatter = |mode: SimdMode| {
+                    let o = opts(mode);
+                    let ncfg = engine::numa_config(128, m.nrows.max(m.ncols), &o);
+                    let ynd = NumaDense::from_dense(&y, ncfg);
+                    let out = NumaDense::zeros(m.ncols, p, ncfg);
+                    let pass = StreamPass::new().transpose(&ynd, &out);
+                    run_pass(&src, &pass, &o).unwrap();
+                    out.to_dense().data
+                };
+                let t_off = scatter(SimdMode::Off);
+                let t_on = scatter(SimdMode::On);
+                match fmt {
+                    TileFormat::Scsr => {
+                        assert_eq!(t_off, t_on, "{}: SCSR scatter diverged", tag(p));
+                    }
+                    TileFormat::Dcsc => {
+                        for (i, (a, b)) in t_on.iter().zip(&t_off).enumerate() {
+                            assert!(
+                                (a - b).abs() <= 2e-6 * b.abs().max(1.0),
+                                "{}: DCSC scatter index {i}: {a} vs {b}",
+                                tag(p)
+                            );
+                        }
+                    }
+                }
+            }
+            // Guard against a silent fallback: with SIMD forced off, the
+            // engine must report a scalar kernel arm in its stats. An
+            // explicit `SEM_SPMM_SIMD=on` in the environment overrides
+            // the per-run request, so only assert when Off is effective.
+            if sem_spmm::spmm::simd::effective_mode(SimdMode::Off) == SimdMode::Off {
+                let x = DenseMatrix::random(m.ncols, 8, 3);
+                let (_, stats) = engine::spmm_out(&src, &x, &SpmmOpts {
+                    simd: SimdMode::Off,
+                    ..SpmmOpts::sequential()
+                })
+                .unwrap();
+                assert!(
+                    stats.per_op.iter().all(|o| o.kernel == "scalar-w"),
+                    "{mname}/{fmt:?}: forced-off run reported {:?}",
+                    stats.per_op.iter().map(|o| o.kernel).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+}
