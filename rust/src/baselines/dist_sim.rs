@@ -19,6 +19,14 @@ use crate::format::Csr;
 use crate::matrix::{DenseMatrix, NumaConfig, NumaDense};
 use crate::metrics::Stopwatch;
 
+/// EC2 placement-group link bandwidth (Gb/s) — shared with the real
+/// partitioned mode's [`crate::coordinator::ClusterConfig::ec2`] so the
+/// model and the measurement use the same network by construction.
+pub const EC2_NET_GBPS: f64 = 10.0;
+/// EC2 per-message latency (µs) — shared with
+/// [`crate::coordinator::ClusterConfig::ec2`].
+pub const EC2_LATENCY_US: f64 = 50.0;
+
 /// Cluster model.
 #[derive(Debug, Clone)]
 pub struct DistConfig {
@@ -37,8 +45,8 @@ impl DistConfig {
         DistConfig {
             nodes,
             cores_per_node: 16,
-            net_gbps: 10.0,
-            latency_us: 50.0,
+            net_gbps: EC2_NET_GBPS,
+            latency_us: EC2_LATENCY_US,
         }
     }
 }

@@ -9,7 +9,7 @@
 use super::Bench;
 use crate::apps::{eigen, nmf, pagerank};
 use crate::baselines::{csr_spmm, dense_nmf, dist_sim, vertex_engine};
-use crate::coordinator::{spmm_vert, DatasetImages, MemBudget, PassPlan};
+use crate::coordinator::{spmm_vert, Cluster, ClusterConfig, DatasetImages, MemBudget, PassPlan};
 use crate::format::convert;
 use crate::format::tiled::TiledImage;
 use crate::format::{Csr, TileFormat};
@@ -732,6 +732,111 @@ pub fn scale_shards(b: &Bench) -> Result<()> {
     b.emit(
         "scale_shards",
         "shards\tsem_spmv_secs\tread_gbps (0.2 GB/s per shard)",
+        &rows,
+    )
+}
+
+/// --------------------------------------------------------- scale_nodes
+/// Partitioned scale-out (the measured side of Fig 9): the same RMAT
+/// image split across 1/2/4 simulated nodes, each a full engine over
+/// its own throttled store, panels exchanged through the metered EC2
+/// network model. Bit-identity vs the single-node engine is enforced
+/// **inside every timed run**, and the 4-node row must clear ≥ 1.7×
+/// aggregate sweep throughput over 1 node. Per-node compute/comm and
+/// the nnz imbalance are emitted next to `dist_sim`'s allgather-model
+/// prediction for the same network — the honest apples-to-apples row
+/// the simulator alone could not provide.
+pub fn scale_nodes(b: &Bench) -> Result<()> {
+    let spec = b.dataset("rmat-160").unwrap();
+    let m = Csr::from_edgelist(&spec.build());
+    // Enough tile rows that 4 nodes get meaningful slices at smoke scale.
+    let mut tile = b.tile;
+    while tile > 32 && m.nrows.div_ceil(tile) < 8 {
+        tile /= 2;
+    }
+    let img = Arc::new(TiledImage::build(&m, tile, TileFormat::Scsr));
+    let p = 4;
+    let x = DenseMatrix::random(m.ncols, p, 7);
+    // Reference bits: the single-node engine over the in-memory image
+    // (SEM streaming is bit-identical to IM by the differential suite).
+    let ncfg = engine::numa_config(tile, m.ncols, &b.opts);
+    let xs = NumaDense::from_dense(&x, ncfg);
+    let ref_out = NumaDense::zeros(m.nrows, p, ncfg);
+    let mem = Source::Mem(img.clone());
+    crate::spmm::spmm(&mem, &xs, &b.opts, &crate::spmm::OutputSink::Mem(&ref_out))?;
+    let ref_out = ref_out.to_dense();
+    // Throttle each node's array so a 1-node sweep takes ~150 ms: the
+    // scaling is storage-bound (the regime the paper argues), yet the
+    // smoke run stays quick.
+    let gbps = (img.data_bytes() as f64 / 0.15 / 1e9).max(0.005);
+    let cost = dist_sim::calibrate_cost(&m, p, b.opts.threads);
+    let mut rows = Vec::new();
+    let mut t1 = 0.0f64;
+    for nodes in [1usize, 2, 4] {
+        let ccfg = ClusterConfig::ec2(nodes);
+        let base = crate::io::StoreSpec {
+            dir: b.store.spec().dir.join(format!("scale-nodes-{nodes}")),
+            shards: 1,
+            stripe_bytes: 256 << 10,
+            read_gbps: Some(gbps),
+            write_gbps: None,
+            latency_us: 30,
+            parity: false,
+        };
+        let cluster = Cluster::build(&img, &base, &ccfg)?;
+        let mut last = None;
+        let secs = b.time3(|| {
+            let (out, st) = cluster.spmm(&x, &b.opts)?;
+            // Bit-identity vs the single-node engine, on every timed run.
+            anyhow::ensure!(
+                out.data.len() == ref_out.data.len()
+                    && out
+                        .data
+                        .iter()
+                        .zip(&ref_out.data)
+                        .all(|(a, c)| a.to_bits() == c.to_bits()),
+                "cluster output diverged from the single-node engine at nodes={nodes}"
+            );
+            let wall = st.wall_secs;
+            last = Some(st);
+            Ok(wall)
+        })?;
+        if nodes == 1 {
+            t1 = secs;
+        }
+        let speedup = t1 / secs;
+        let st = last.unwrap();
+        let model = dist_sim::dist_spmm_sim(&m, p, &ccfg.dist_config(b.opts.threads.max(1)), cost);
+        let max_comp = st.per_node.iter().map(|n| n.compute_secs).fold(0.0, f64::max);
+        let max_comm = st.per_node.iter().map(|n| n.comm_secs).fold(0.0, f64::max);
+        let agg_gbps = img.data_bytes() as f64 / 1e9 / secs;
+        rows.push(format!(
+            "{nodes}\tall\t{}\t{secs:.4}\t{agg_gbps:.3}\t{speedup:.2}\t{:.3}\t{max_comp:.4}\t{max_comm:.6}\t{}\t{}\t{:.4}\t{:.6}\t{:.3}\t{:.4}",
+            m.nnz(),
+            st.imbalance,
+            st.bytes_sent,
+            st.bytes_received,
+            model.compute_secs,
+            model.comm_secs,
+            model.imbalance,
+            model.total_secs,
+        ));
+        for n in &st.per_node {
+            rows.push(format!(
+                "{nodes}\t{}\t{}\t\t\t\t\t{:.4}\t{:.6}\t{}\t{}",
+                n.node, n.nnz, n.compute_secs, n.comm_secs, n.bytes_in, n.bytes_out
+            ));
+        }
+        if nodes == 4 {
+            anyhow::ensure!(
+                speedup >= 1.7,
+                "scale-out gate: 4-node aggregate sweep throughput is {speedup:.2}x of 1 node (need >= 1.7x)"
+            );
+        }
+    }
+    b.emit(
+        "scale_nodes",
+        "nodes\tnode\tnnz\tsweep_secs\tagg_gbps\tspeedup\timbalance\tcompute_secs\tcomm_secs\tbytes_in\tbytes_out\tmodel_compute\tmodel_comm\tmodel_imbalance\tmodel_total",
         &rows,
     )
 }

@@ -125,22 +125,25 @@ impl Bench {
     }
 }
 
-/// All experiment names, in paper order. `scale_shards`, `cache_sweep`,
-/// `fused_ops`, `serve_batch`, `qos_tenants`, `semiring_apps` and
-/// `delta_updates` are this reproduction's extensions: read throughput
-/// vs. simulated device count, iterative SpMM time vs. tile-row-cache
-/// budget, fused single-sweep vs. two-pass NMF I/O, ride-sharing batched
-/// serving vs. one-engine-call-per-request, multi-tenant QoS with parity
-/// reconstruction through an injected dead shard, semiring graph
-/// traversals (BFS/SSSP) plus out-of-core A·A SpGEMM SEM vs. IM, and
-/// incremental PageRank refresh over the LSM delta layer vs. full
-/// reconversion after committed edge-update batches. `backend_matrix`
-/// prints the dense-backend capability probe (GB/s per op class) and
-/// the SIMD-vs-scalar tile-kernel timings with a bit-identity check.
+/// All experiment names, in paper order. `scale_shards`, `scale_nodes`,
+/// `cache_sweep`, `fused_ops`, `serve_batch`, `qos_tenants`,
+/// `semiring_apps` and `delta_updates` are this reproduction's
+/// extensions: read throughput vs. simulated device count, partitioned
+/// multi-node sweeps (bit-identity-checked against the single-node
+/// engine, measured next to `dist_sim`'s allgather model), iterative
+/// SpMM time vs. tile-row-cache budget, fused single-sweep vs. two-pass
+/// NMF I/O, ride-sharing batched serving vs. one-engine-call-per-request,
+/// multi-tenant QoS with parity reconstruction through an injected dead
+/// shard, semiring graph traversals (BFS/SSSP) plus out-of-core A·A
+/// SpGEMM SEM vs. IM, and incremental PageRank refresh over the LSM
+/// delta layer vs. full reconversion after committed edge-update
+/// batches. `backend_matrix` prints the dense-backend capability probe
+/// (GB/s per op class) and the SIMD-vs-scalar tile-kernel timings with a
+/// bit-identity check.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig5a", "fig5b", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "tab2", "fig14", "fig15", "fig16", "scale_shards", "cache_sweep", "fused_ops",
-    "serve_batch", "qos_tenants", "semiring_apps", "delta_updates", "backend_matrix",
+    "fig13", "tab2", "fig14", "fig15", "fig16", "scale_shards", "scale_nodes", "cache_sweep",
+    "fused_ops", "serve_batch", "qos_tenants", "semiring_apps", "delta_updates", "backend_matrix",
 ];
 
 /// Run one experiment by name.
@@ -162,6 +165,7 @@ pub fn run(bench: &Bench, exp: &str) -> Result<()> {
         "fig15" => fig15(bench),
         "fig16" => fig16(bench),
         "scale_shards" => scale_shards(bench),
+        "scale_nodes" => scale_nodes(bench),
         "cache_sweep" => cache_sweep(bench),
         "fused_ops" => fused_ops(bench),
         "serve_batch" => serve_batch(bench),

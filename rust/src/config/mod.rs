@@ -35,6 +35,10 @@
 //! delta.buffer_mb    = 64         # staged edge-edit buffer before auto-commit (MiB)
 //! delta.compact_runs = 4          # fold delta runs once this many accumulate (>= 2)
 //! delta.major_compact_ratio = 0.2 # delta/base byte ratio triggering a base rewrite
+//! cluster.nodes      = 1          # simulated nodes of the partitioned mode (1 = single-node)
+//! cluster.net_gbps   = 10         # per-link panel-exchange bandwidth (Gb/s)
+//! cluster.latency_us = 50         # per-message network latency (µs)
+//! cluster.partitioner = balanced  # tile-row map: balanced | equal_rows
 //! ```
 //!
 //! Sections map onto [`crate::io::StoreSpec`], [`crate::spmm::SpmmOpts`],
@@ -358,6 +362,46 @@ impl Config {
             major_compact_ratio: ratio,
         })
     }
+
+    /// Partitioned scale-out knobs (`coordinator::cluster`):
+    ///
+    /// * `cluster.nodes` — simulated nodes; 1 (the default) runs the
+    ///   ordinary single-node engine.
+    /// * `cluster.net_gbps` / `cluster.latency_us` — the metered
+    ///   panel-exchange network (defaults are the paper's EC2 placement
+    ///   group: 10 Gb/s, 50 µs — the same constants `DistConfig::ec2`
+    ///   models).
+    /// * `cluster.partitioner` — `balanced` (nnz-aware painter's
+    ///   partition, the default) or `equal_rows` (naive 1D row map).
+    pub fn cluster_config(&self) -> Result<crate::coordinator::ClusterConfig> {
+        let d = crate::coordinator::ClusterConfig::default();
+        let nodes = self.get_usize("cluster.nodes", d.nodes)?;
+        if nodes == 0 {
+            bail!("config cluster.nodes=0: must be >= 1");
+        }
+        let net_gbps = self.get_f64("cluster.net_gbps", d.net_gbps)?;
+        if !(net_gbps > 0.0 && net_gbps.is_finite()) {
+            bail!("config cluster.net_gbps={net_gbps}: must be finite and > 0");
+        }
+        let latency_us = self.get_f64("cluster.latency_us", d.latency_us)?;
+        if !(latency_us >= 0.0 && latency_us.is_finite()) {
+            bail!("config cluster.latency_us={latency_us}: must be finite and >= 0");
+        }
+        let partitioner = match self.get("cluster.partitioner") {
+            None => d.partitioner,
+            Some(s) => crate::coordinator::Partitioner::parse(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "config cluster.partitioner={s}: expected 'balanced' or 'equal_rows'"
+                )
+            })?,
+        };
+        Ok(crate::coordinator::ClusterConfig {
+            nodes,
+            net_gbps,
+            latency_us,
+            partitioner,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -528,6 +572,39 @@ mod tests {
         ] {
             let c = Config::parse(&format!("{bad}\n")).unwrap();
             assert!(c.delta_config().is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn cluster_keys_default_and_parse() {
+        use crate::coordinator::Partitioner;
+        let c = Config::parse("").unwrap();
+        let cl = c.cluster_config().unwrap();
+        assert_eq!(cl.nodes, 1, "cluster mode is off by default");
+        assert!((cl.net_gbps - 10.0).abs() < 1e-12, "EC2 link by default");
+        assert!((cl.latency_us - 50.0).abs() < 1e-12);
+        assert_eq!(cl.partitioner, Partitioner::BalancedNnz);
+        let c = Config::parse(
+            "cluster.nodes = 4\ncluster.net_gbps = 25\ncluster.latency_us = 5\n\
+             cluster.partitioner = equal_rows\n",
+        )
+        .unwrap();
+        let cl = c.cluster_config().unwrap();
+        assert_eq!(cl.nodes, 4);
+        assert!((cl.net_gbps - 25.0).abs() < 1e-12);
+        assert!((cl.latency_us - 5.0).abs() < 1e-12);
+        assert_eq!(cl.partitioner, Partitioner::EqualRows);
+        for bad in [
+            "cluster.nodes = 0",
+            "cluster.nodes = lots",
+            "cluster.net_gbps = 0",
+            "cluster.net_gbps = -10",
+            "cluster.net_gbps = nan",
+            "cluster.latency_us = -1",
+            "cluster.partitioner = arrow",
+        ] {
+            let c = Config::parse(&format!("{bad}\n")).unwrap();
+            assert!(c.cluster_config().is_err(), "'{bad}' must be rejected");
         }
     }
 

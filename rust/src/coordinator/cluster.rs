@@ -1,0 +1,1110 @@
+//! Partitioned scale-out: the cluster control plane (Fig 9, made real).
+//!
+//! `baselines/dist_sim.rs` *models* a Tpetra cluster; this module runs
+//! one. [`Cluster::build`] splits a tiled image into per-node contiguous
+//! **tile-row partitions** (a 1D row map — [`Partitioner::EqualRows`] —
+//! or the default nnz-balanced splitter, [`Partitioner::BalancedNnz`],
+//! which solves the painter's-partition problem over per-tile-row nnz to
+//! tame power-law imbalance), writes each slice as a self-contained
+//! image into that node's **own** [`ShardedStore`] under `dir/node-k/`,
+//! and runs one full engine instance per simulated node. Dense panels
+//! cross a metered "network" (configurable Gb/s + per-message latency,
+//! byte-accounted in both directions, same parameters as
+//! [`DistConfig::ec2`]) — but unlike the simulator's allgather, the
+//! exchange is **communication-avoiding**: each node receives only the
+//! input rows of the tile *columns* its slice actually touches (its
+//! support), and returns only the output rows it owns (forward) or the
+//! support columns it scattered into (transpose).
+//!
+//! ## Equivalence to the single-node engine
+//!
+//! Tile rows are self-contained byte spans (entries carry tile-local
+//! coordinates plus a global `tile_col`), so a node's sub-image streams
+//! the *exact bytes* the single-node engine would stream for those tile
+//! rows, and kernels fold tiles in the same ascending-tile-column order:
+//!
+//! * **Forward** output rows are therefore **bit-identical** to the
+//!   single-node engine at every node count, in every semiring — and so
+//!   is everything riding on forward passes (SpMM/SpMV, fused PageRank).
+//! * **Transpose** reduces per-worker scatter partials with `S::add`.
+//!   The coordinator merges node contributions the same way the engine
+//!   merges worker partials (first contributor copied, later ones
+//!   folded, absent columns left at `S::ZERO`), so in the exact
+//!   semirings (`min`/`or` ⊕ — MinPlus, OrAnd, MinSelect) the result is
+//!   bit-identical at every node count. Under `Arith` (f32 `+`) the
+//!   fold *tree* follows worker/node boundaries, so multi-node results
+//!   match single-node only to rounding — exactly as two single-node
+//!   runs with different thread counts do. `nodes = 1` is the engine
+//!   run (one partition, one store, one copy), bitwise and
+//!   stats-for-stats.
+//!
+//! Failure injection: node stores inherit the base spec's parity
+//! striping, so a dead shard inside one node degrades to reconstructed
+//! reads (visible in that node's [`SpmmStats::degraded_reads`]) without
+//! poisoning the pass; [`Cluster::kill`] downs a node, making the next
+//! pass fail with a structured [`NodeDown`] error naming it — state is
+//! untouched, so after [`Cluster::revive`] the cluster serves the next
+//! request. See DESIGN.md §16 for the life of a partitioned sweep.
+
+use crate::apps::pagerank::PageRankConfig;
+use crate::baselines::dist_sim::{DistConfig, EC2_LATENCY_US, EC2_NET_GBPS};
+use crate::format::tiled::{TiledImage, TiledMeta};
+use crate::format::{dcsc, scsr, TileFormat};
+use crate::io::{ShardedStore, StoreSpec};
+use crate::matrix::{DenseMatrix, NumaDense};
+use crate::metrics::Stopwatch;
+use crate::spmm::engine;
+use crate::spmm::exec;
+use crate::spmm::plan::RowHook;
+use crate::spmm::{
+    Arith, OutputSink, SemSource, Semiring, SpmmOpts, SpmmStats, Source, StreamPass,
+};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Store object name of a node's partition image.
+pub const PART_OBJ: &str = "part.semm";
+
+/// Row-map strategy: how tile rows are split across nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioner {
+    /// Naive 1D row map: every node gets (nearly) the same number of
+    /// tile rows — the decomposition `dist_sim` models, and the one
+    /// power-law graphs punish.
+    EqualRows,
+    /// Minimize the maximum per-node nnz over all contiguous splits
+    /// (painter's partition on per-tile-row nnz). The default.
+    BalancedNnz,
+}
+
+impl Partitioner {
+    /// Parse a config value (`"equal_rows"` or `"balanced"`).
+    pub fn parse(s: &str) -> Option<Partitioner> {
+        match s {
+            "equal_rows" => Some(Partitioner::EqualRows),
+            "balanced" => Some(Partitioner::BalancedNnz),
+            _ => None,
+        }
+    }
+
+    /// The config-surface name of this strategy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partitioner::EqualRows => "equal_rows",
+            Partitioner::BalancedNnz => "balanced",
+        }
+    }
+}
+
+/// Cluster shape + network model (the `cluster.*` config surface).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Simulated nodes. `1` degenerates to the single-node engine.
+    pub nodes: usize,
+    /// Per-link network bandwidth in Gb/s.
+    pub net_gbps: f64,
+    /// Per-message latency in microseconds.
+    pub latency_us: f64,
+    /// Row-map strategy.
+    pub partitioner: Partitioner,
+}
+
+impl ClusterConfig {
+    /// The paper's EC2 placement-group network — **the same constants**
+    /// [`DistConfig::ec2`] uses, so measured cluster rows and the
+    /// allgather model's predictions are apples-to-apples.
+    pub fn ec2(nodes: usize) -> ClusterConfig {
+        ClusterConfig {
+            nodes,
+            net_gbps: EC2_NET_GBPS,
+            latency_us: EC2_LATENCY_US,
+            partitioner: Partitioner::BalancedNnz,
+        }
+    }
+
+    /// The [`DistConfig`] with this cluster's network parameters — what
+    /// the `scale_nodes` experiment feeds the allgather simulator for
+    /// its side of the comparison table.
+    pub fn dist_config(&self, cores_per_node: usize) -> DistConfig {
+        DistConfig {
+            nodes: self.nodes,
+            cores_per_node,
+            net_gbps: self.net_gbps,
+            latency_us: self.latency_us,
+        }
+    }
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig::ec2(1)
+    }
+}
+
+/// Structured failure: a simulated node is down (killed by fault
+/// injection). The pass that hit it fails; cluster state is untouched,
+/// so after [`Cluster::revive`] the next request is served normally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeDown {
+    /// The dead node's index.
+    pub node: usize,
+}
+
+impl fmt::Display for NodeDown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cluster node {} is down", self.node)
+    }
+}
+
+impl std::error::Error for NodeDown {}
+
+/// One node's contiguous tile-row slice of the matrix.
+#[derive(Debug, Clone)]
+pub struct NodePartition {
+    /// Node index (0-based).
+    pub node: usize,
+    /// First tile row (inclusive).
+    pub tr_lo: usize,
+    /// Last tile row (exclusive).
+    pub tr_hi: usize,
+    /// First matrix row.
+    pub row_lo: usize,
+    /// Last matrix row (exclusive; clamped to `nrows` on the tail).
+    pub row_hi: usize,
+    /// Stored non-zeros in the slice.
+    pub nnz: u64,
+    /// Encoded tile bytes of the slice (what the node streams per sweep).
+    pub data_bytes: u64,
+    /// Tile columns with at least one stored entry in this slice: the
+    /// only input-panel rows this node needs (forward), and the only
+    /// output rows it produces (transpose).
+    pub support: Vec<bool>,
+    /// Matrix rows covered by the supported tile columns — the
+    /// communication-avoiding exchange height (vs. `ncols` for the
+    /// allgather the simulator models).
+    pub support_rows: usize,
+}
+
+impl NodePartition {
+    /// Matrix rows owned by this node.
+    pub fn rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+}
+
+/// One simulated node: its partition, its private store, its engine
+/// source over the partition image.
+pub struct ClusterNode {
+    /// The tile-row slice this node owns.
+    pub part: NodePartition,
+    /// The node's private sharded store (`dir/node-k/`).
+    pub store: Arc<ShardedStore>,
+    /// SEM source over the node's partition image.
+    pub src: Source,
+}
+
+/// One dense operand of a partitioned pass. Mirrors the plan ops; the
+/// coordinator re-stripes inputs per node, so operands are plain
+/// matrices rather than pre-placed `NumaDense` panels.
+#[derive(Clone, Copy)]
+pub enum ClusterOp<'a> {
+    /// `A · X`: `input` has `ncols(A)` rows.
+    Forward(&'a DenseMatrix),
+    /// `Aᵀ · Y`: `input` has `nrows(A)` rows.
+    Transpose(&'a DenseMatrix),
+}
+
+/// Per-node accounting of one partitioned pass.
+#[derive(Debug, Clone)]
+pub struct NodeRunStats {
+    /// Node index.
+    pub node: usize,
+    /// Tile rows the node owns.
+    pub tile_rows: usize,
+    /// Non-zeros the node owns.
+    pub nnz: u64,
+    /// Panel bytes received from the coordinator this pass.
+    pub bytes_in: u64,
+    /// Panel bytes returned to the coordinator this pass.
+    pub bytes_out: u64,
+    /// Modeled time on this node's link: `bytes / bw + msgs · latency`.
+    pub comm_secs: f64,
+    /// Measured wall seconds of the node's engine pass.
+    pub compute_secs: f64,
+    /// The node engine's full run statistics.
+    pub spmm: SpmmStats,
+}
+
+/// Whole-cluster accounting of one partitioned pass.
+#[derive(Debug, Clone)]
+pub struct ClusterPassStats {
+    /// Per-node breakdown, in node order.
+    pub per_node: Vec<NodeRunStats>,
+    /// Max node nnz / mean node nnz (1.0 = perfectly balanced).
+    pub imbalance: f64,
+    /// Measured wall seconds of the whole pass (nodes run in parallel).
+    pub wall_secs: f64,
+    /// Modeled step time: `max` over nodes of `comm + compute` — the
+    /// number to put next to [`crate::baselines::dist_sim::DistReport::total_secs`].
+    pub modeled_step_secs: f64,
+    /// Total panel bytes coordinator → nodes.
+    pub bytes_sent: u64,
+    /// Total panel bytes nodes → coordinator.
+    pub bytes_received: u64,
+}
+
+/// Outputs + accounting of one partitioned pass.
+pub struct ClusterPassResult {
+    /// One global output matrix per op, in op order.
+    pub outputs: Vec<DenseMatrix>,
+    /// Hook accumulators per op (node contributions summed in node
+    /// order; empty for the hook-less ops this entry point builds).
+    pub accs: Vec<Vec<f64>>,
+    /// Accounting.
+    pub stats: ClusterPassStats,
+}
+
+/// Statistics of a partitioned PageRank run.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterPageRankStats {
+    /// Wall seconds of the whole run.
+    pub secs: f64,
+    /// Iterations executed.
+    pub iters: usize,
+    /// Per-iteration L1 residuals (node contributions summed in node order).
+    pub residuals: Vec<f64>,
+    /// Per-iteration probability mass.
+    pub mass: Vec<f64>,
+    /// Whether `tol` terminated the run early.
+    pub converged: bool,
+    /// Max node nnz / mean node nnz.
+    pub imbalance: f64,
+    /// Total panel bytes coordinator → nodes over the run.
+    pub bytes_sent: u64,
+    /// Total panel bytes nodes → coordinator over the run.
+    pub bytes_received: u64,
+}
+
+/// What one node's engine pass produced (internal).
+struct NodeRun {
+    outputs: Vec<NumaDense>,
+    stats: SpmmStats,
+    accs: Vec<Vec<f64>>,
+    bytes_in: u64,
+    bytes_out: u64,
+    msgs: u64,
+}
+
+/// The cluster control plane: partitions, per-node stores + engines,
+/// metered panel exchange, assembly. See the module docs.
+pub struct Cluster {
+    /// Shape + network model.
+    pub cfg: ClusterConfig,
+    /// The global matrix metadata.
+    pub meta: TiledMeta,
+    /// The simulated nodes, in partition order.
+    pub nodes: Vec<ClusterNode>,
+    killed: Vec<AtomicBool>,
+    sent: Vec<AtomicU64>,
+    recvd: Vec<AtomicU64>,
+}
+
+impl Cluster {
+    /// Partition `img` across `cfg.nodes` simulated nodes, each with its
+    /// own store derived from `base` (same shards/stripe/throttle/parity,
+    /// rooted at `base.dir/node-k/`), and write every node's slice as a
+    /// self-contained image it can stream independently.
+    pub fn build(img: &TiledImage, base: &StoreSpec, cfg: &ClusterConfig) -> Result<Cluster> {
+        let meta = img.meta.clone();
+        let ntr = meta.n_tile_rows();
+        ensure!(cfg.nodes >= 1, "cluster.nodes must be >= 1");
+        ensure!(
+            cfg.nodes <= ntr,
+            "cannot split {ntr} tile rows across {} nodes (shrink cluster.nodes or the tile)",
+            cfg.nodes
+        );
+        ensure!(cfg.net_gbps > 0.0, "cluster.net_gbps must be > 0");
+        ensure!(cfg.latency_us >= 0.0, "cluster.latency_us must be >= 0");
+        ensure!(meta.nrows > 0 && meta.ncols > 0, "cannot partition an empty matrix");
+
+        let (weights, cols) = scan_tile_rows(img);
+        let ranges = plan_ranges(&weights, cfg.nodes, cfg.partitioner);
+        let ntc = meta.n_tile_cols();
+        let t = meta.tile;
+        let mut nodes = Vec::with_capacity(cfg.nodes);
+        for (k, &(tr_lo, tr_hi)) in ranges.iter().enumerate() {
+            let mut support = vec![false; ntc];
+            for tcs in &cols[tr_lo..tr_hi] {
+                for &tc in tcs {
+                    support[tc as usize] = true;
+                }
+            }
+            let support_rows = support
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| **s)
+                .map(|(j, _)| ((j + 1) * t).min(meta.ncols) - j * t)
+                .sum();
+            let local = partition_image(img, tr_lo, tr_hi);
+            let part = NodePartition {
+                node: k,
+                tr_lo,
+                tr_hi,
+                row_lo: tr_lo * t,
+                row_hi: (tr_hi * t).min(meta.nrows),
+                nnz: weights[tr_lo..tr_hi].iter().sum(),
+                data_bytes: local.data_bytes(),
+                support,
+                support_rows,
+            };
+            let store = ShardedStore::open(base.node_spec(k))
+                .with_context(|| format!("opening cluster node {k}'s store"))?;
+            let mut buf = Vec::new();
+            local.write_to(&mut buf)?;
+            store
+                .put(PART_OBJ, &buf)
+                .with_context(|| format!("writing cluster node {k}'s partition image"))?;
+            let src = Source::Sem(SemSource::open(&store, PART_OBJ)?);
+            nodes.push(ClusterNode { part, store, src });
+        }
+        Ok(Cluster {
+            cfg: cfg.clone(),
+            meta,
+            killed: (0..nodes.len()).map(|_| AtomicBool::new(false)).collect(),
+            sent: (0..nodes.len()).map(|_| AtomicU64::new(0)).collect(),
+            recvd: (0..nodes.len()).map(|_| AtomicU64::new(0)).collect(),
+            nodes,
+        })
+    }
+
+    /// Mark a node dead: the next pass fails with [`NodeDown`].
+    pub fn kill(&self, node: usize) {
+        self.killed[node].store(true, Ordering::SeqCst);
+    }
+
+    /// Bring a killed node back; its store and image are intact.
+    pub fn revive(&self, node: usize) {
+        self.killed[node].store(false, Ordering::SeqCst);
+    }
+
+    /// Whether `node` is currently marked dead.
+    pub fn is_killed(&self, node: usize) -> bool {
+        self.killed[node].load(Ordering::SeqCst)
+    }
+
+    /// Max node nnz / mean node nnz of the chosen partition.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.nodes.iter().map(|n| n.part.nnz).max().unwrap_or(0) as f64;
+        let mean = self.meta.nnz as f64 / self.nodes.len() as f64;
+        max / mean.max(1.0)
+    }
+
+    /// Cumulative metered traffic `(coordinator → nodes, nodes →
+    /// coordinator)` in bytes, across every pass so far.
+    pub fn net_totals(&self) -> (u64, u64) {
+        (
+            self.sent.iter().map(|a| a.load(Ordering::Relaxed)).sum(),
+            self.recvd.iter().map(|a| a.load(Ordering::Relaxed)).sum(),
+        )
+    }
+
+    /// Modeled seconds to move `bytes` + `msgs` over one node link.
+    pub fn link_secs(&self, bytes: u64, msgs: u64) -> f64 {
+        bytes as f64 / (self.cfg.net_gbps * 1e9 / 8.0) + msgs as f64 * self.cfg.latency_us * 1e-6
+    }
+
+    /// Re-read node `k`'s partition image from its store (test tooling).
+    pub fn node_image(&self, k: usize) -> Result<TiledImage> {
+        TiledImage::from_bytes(&self.nodes[k].store.get(PART_OBJ)?)
+    }
+
+    /// Run a multi-op pass across the cluster under semiring `S`: every
+    /// node executes the full plan over its slice in parallel (real
+    /// threads — wall-clock scales with node count on throttled
+    /// stores), panels are exchanged through the metered channels, and
+    /// outputs are assembled in deterministic node order. See the
+    /// module docs for the exact bit-identity contract per op kind.
+    pub fn run_pass<S: Semiring>(
+        &self,
+        ops: &[ClusterOp<'_>],
+        opts: &SpmmOpts,
+    ) -> Result<ClusterPassResult> {
+        ensure!(!ops.is_empty(), "cluster pass has no ops");
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                ClusterOp::Forward(x) => ensure!(
+                    x.nrows == self.meta.ncols,
+                    "op {i}: forward input has {} rows but the matrix has {} cols",
+                    x.nrows,
+                    self.meta.ncols
+                ),
+                ClusterOp::Transpose(y) => ensure!(
+                    y.nrows == self.meta.nrows,
+                    "op {i}: transpose input has {} rows but the matrix has {} rows",
+                    y.nrows,
+                    self.meta.nrows
+                ),
+            }
+        }
+        for k in 0..self.nodes.len() {
+            if self.is_killed(k) {
+                // Bare structured error — callers downcast to `NodeDown`
+                // and its Display already names the node.
+                return Err(anyhow::Error::new(NodeDown { node: k }));
+            }
+        }
+        let sw = Stopwatch::start();
+        let results: Vec<Result<NodeRun>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .nodes
+                .iter()
+                .map(|node| scope.spawn(move || self.node_pass::<S>(node, ops, opts)))
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(k, h)| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("cluster node {k} panicked mid-pass")))
+                })
+                .collect()
+        });
+        let mut runs = Vec::with_capacity(results.len());
+        for (k, r) in results.into_iter().enumerate() {
+            runs.push(r.with_context(|| format!("cluster node {k} pass failed"))?);
+        }
+        let wall = sw.secs();
+
+        // Assemble global outputs in deterministic node order.
+        let mut outputs: Vec<DenseMatrix> = ops
+            .iter()
+            .map(|op| match op {
+                ClusterOp::Forward(x) => DenseMatrix::full(self.meta.nrows, x.ncols, S::ZERO),
+                ClusterOp::Transpose(y) => DenseMatrix::full(self.meta.ncols, y.ncols, S::ZERO),
+            })
+            .collect();
+        let t = self.meta.tile;
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                // Forward rows are owned disjointly: verbatim copies.
+                ClusterOp::Forward(_) => {
+                    for (node, run) in self.nodes.iter().zip(&runs) {
+                        let part = &node.part;
+                        for r in part.row_lo..part.row_hi {
+                            outputs[i]
+                                .row_mut(r)
+                                .copy_from_slice(run.outputs[i].row(r - part.row_lo));
+                        }
+                    }
+                }
+                // Transpose columns may have several contributors: the
+                // first (by node order) is copied, the rest folded with
+                // `S::add` — the same merge the engine applies to its
+                // per-worker partials, with nodes in the worker role.
+                // Columns no node touched stay `S::ZERO`, exactly as
+                // the engine's reduce leaves them.
+                ClusterOp::Transpose(_) => {
+                    for j in 0..self.meta.n_tile_cols() {
+                        let lo = j * t;
+                        let hi = ((j + 1) * t).min(self.meta.ncols);
+                        let mut first = true;
+                        for (node, run) in self.nodes.iter().zip(&runs) {
+                            if !node.part.support[j] {
+                                continue;
+                            }
+                            for r in lo..hi {
+                                let dst = outputs[i].row_mut(r);
+                                let src = run.outputs[i].row(r);
+                                if first {
+                                    dst.copy_from_slice(src);
+                                } else {
+                                    for (d, v) in dst.iter_mut().zip(src) {
+                                        *d = S::add(*d, *v);
+                                    }
+                                }
+                            }
+                            first = false;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Hook accumulators: node contributions summed in node order.
+        let accs: Vec<Vec<f64>> = (0..ops.len())
+            .map(|i| {
+                let len = runs.first().map(|r| r.accs[i].len()).unwrap_or(0);
+                let mut acc = vec![0f64; len];
+                for run in &runs {
+                    for (a, v) in acc.iter_mut().zip(&run.accs[i]) {
+                        *a += v;
+                    }
+                }
+                acc
+            })
+            .collect();
+
+        let mut per_node = Vec::with_capacity(runs.len());
+        let (mut sent, mut recvd, mut modeled) = (0u64, 0u64, 0f64);
+        for (node, run) in self.nodes.iter().zip(&runs) {
+            let k = node.part.node;
+            self.sent[k].fetch_add(run.bytes_in, Ordering::Relaxed);
+            self.recvd[k].fetch_add(run.bytes_out, Ordering::Relaxed);
+            sent += run.bytes_in;
+            recvd += run.bytes_out;
+            let comm = self.link_secs(run.bytes_in + run.bytes_out, run.msgs);
+            modeled = modeled.max(comm + run.stats.secs);
+            per_node.push(NodeRunStats {
+                node: k,
+                tile_rows: node.part.tr_hi - node.part.tr_lo,
+                nnz: node.part.nnz,
+                bytes_in: run.bytes_in,
+                bytes_out: run.bytes_out,
+                comm_secs: comm,
+                compute_secs: run.stats.secs,
+                spmm: run.stats.clone(),
+            });
+        }
+        Ok(ClusterPassResult {
+            outputs,
+            accs,
+            stats: ClusterPassStats {
+                per_node,
+                imbalance: self.imbalance(),
+                wall_secs: wall,
+                modeled_step_secs: modeled,
+                bytes_sent: sent,
+                bytes_received: recvd,
+            },
+        })
+    }
+
+    /// One node's share of a pass: receive panels, run the engine over
+    /// the node's slice, return its outputs (internal; runs on the
+    /// node's thread).
+    fn node_pass<S: Semiring>(
+        &self,
+        node: &ClusterNode,
+        ops: &[ClusterOp<'_>],
+        opts: &SpmmOpts,
+    ) -> Result<NodeRun> {
+        let part = &node.part;
+        let t = self.meta.tile;
+        let in_cfg = engine::numa_config(t, self.meta.ncols, opts);
+        let out_cfg = engine::numa_config(t, part.rows(), opts);
+        let (mut bytes_in, mut bytes_out, mut msgs) = (0u64, 0u64, 0u64);
+
+        // Receive: materialize each op's local input panel. Forward
+        // panels carry only the support rows (the rest of the local
+        // buffer stays zero and never feeds a kernel — the differential
+        // battery keeps this honest); transpose panels carry exactly
+        // the rows the node owns.
+        let mut inputs: Vec<NumaDense> = Vec::with_capacity(ops.len());
+        for op in ops {
+            let local = match op {
+                ClusterOp::Forward(x) => {
+                    let mut local = NumaDense::zeros(self.meta.ncols, x.ncols, in_cfg);
+                    for (j, &s) in part.support.iter().enumerate() {
+                        if !s {
+                            continue;
+                        }
+                        let hi = ((j + 1) * t).min(self.meta.ncols);
+                        for r in j * t..hi {
+                            local.row_mut(r).copy_from_slice(x.row(r));
+                        }
+                    }
+                    bytes_in += (part.support_rows * x.ncols * 4) as u64;
+                    local
+                }
+                ClusterOp::Transpose(y) => {
+                    let mut local = NumaDense::zeros(part.rows(), y.ncols, out_cfg);
+                    for r in part.row_lo..part.row_hi {
+                        local.row_mut(r - part.row_lo).copy_from_slice(y.row(r));
+                    }
+                    bytes_in += (part.rows() * y.ncols * 4) as u64;
+                    local
+                }
+            };
+            msgs += 1;
+            inputs.push(local);
+        }
+        let outputs: Vec<NumaDense> = ops
+            .iter()
+            .map(|op| match op {
+                ClusterOp::Forward(x) => NumaDense::zeros(part.rows(), x.ncols, out_cfg),
+                ClusterOp::Transpose(y) => NumaDense::zeros(self.meta.ncols, y.ncols, in_cfg),
+            })
+            .collect();
+
+        let r = {
+            let mut pass = StreamPass::<S>::new();
+            for ((op, input), output) in ops.iter().zip(&inputs).zip(&outputs) {
+                pass = match op {
+                    ClusterOp::Forward(_) => pass.forward(input, OutputSink::Mem(output)),
+                    ClusterOp::Transpose(_) => pass.transpose(input, output),
+                };
+            }
+            exec::run_pass_ring::<S>(&node.src, &pass, opts)?
+        };
+
+        // Return: forward sends the owned rows, transpose only the
+        // support columns the node scattered into.
+        for op in ops {
+            bytes_out += match op {
+                ClusterOp::Forward(x) => (part.rows() * x.ncols * 4) as u64,
+                ClusterOp::Transpose(y) => (part.support_rows * y.ncols * 4) as u64,
+            };
+            msgs += 1;
+        }
+        Ok(NodeRun {
+            outputs,
+            stats: r.stats,
+            accs: r.accs,
+            bytes_in,
+            bytes_out,
+            msgs,
+        })
+    }
+
+    /// Partitioned SpMM: `out = A · X` under [`Arith`].
+    pub fn spmm(&self, x: &DenseMatrix, opts: &SpmmOpts) -> Result<(DenseMatrix, ClusterPassStats)> {
+        let mut r = self.run_pass::<Arith>(&[ClusterOp::Forward(x)], opts)?;
+        Ok((r.outputs.remove(0), r.stats))
+    }
+
+    /// Partitioned SpMV: `out = A · x` under [`Arith`].
+    pub fn spmv(&self, x: &[f32], opts: &SpmmOpts) -> Result<(Vec<f32>, ClusterPassStats)> {
+        let xm = DenseMatrix::from_col(x);
+        let (out, stats) = self.spmm(&xm, opts)?;
+        Ok((out.data, stats))
+    }
+
+    /// Partitioned PageRank: each node runs the fused single-sweep plan
+    /// over its slice (the same per-row combine the single-node fused
+    /// path applies — see `apps/pagerank.rs`), holding its `pr` shard
+    /// node-resident; only the normalized input panel `x̂` crosses the
+    /// network each iteration (support rows in, owned rows back out).
+    /// Output is bit-identical to the single-node fused run at every
+    /// node count — PageRank rides entirely on forward passes.
+    /// `cfg.vecs_in_mem` and `cfg.combine_backend` are ignored: the
+    /// partitioned path is always fused.
+    pub fn pagerank(
+        &self,
+        out_degrees: &[u32],
+        cfg: &PageRankConfig,
+    ) -> Result<(Vec<f32>, ClusterPageRankStats)> {
+        let n = self.meta.nrows;
+        if self.meta.ncols != n || out_degrees.len() != n {
+            bail!("pagerank needs a square adjacency matrix and n degrees");
+        }
+        if let Some(w) = &cfg.warm_start {
+            if w.len() != n {
+                bail!("warm_start has {} entries for {} vertices", w.len(), n);
+            }
+        }
+        for k in 0..self.nodes.len() {
+            if self.is_killed(k) {
+                return Err(anyhow::Error::new(NodeDown { node: k }));
+            }
+        }
+        let sw = Stopwatch::start();
+        let inv_deg: Vec<f32> = out_degrees
+            .iter()
+            .map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 })
+            .collect();
+        let pr0 = 1.0 / n as f32;
+        let d = cfg.damping;
+        let base = (1.0 - d) / n as f32;
+        // The global normalized input panel (what an allgather would
+        // carry in full; our exchange ships only support slices of it).
+        let mut x: Vec<f32> = match &cfg.warm_start {
+            Some(w) => (0..n).map(|i| w[i] * inv_deg[i]).collect(),
+            None => (0..n).map(|i| pr0 * inv_deg[i]).collect(),
+        };
+        // Node-resident pr shards.
+        let mut node_pr: Vec<NumaDense> = self
+            .nodes
+            .iter()
+            .map(|node| {
+                let ocfg = engine::numa_config(self.meta.tile, node.part.rows(), &cfg.spmm);
+                let mut prk = NumaDense::zeros(node.part.rows(), 1, ocfg);
+                for r in 0..node.part.rows() {
+                    prk.row_mut(r)[0] = match &cfg.warm_start {
+                        Some(w) => w[node.part.row_lo + r],
+                        None => pr0,
+                    };
+                }
+                prk
+            })
+            .collect();
+
+        let mut stats = ClusterPageRankStats {
+            imbalance: self.imbalance(),
+            ..Default::default()
+        };
+        while stats.iters < cfg.iterations {
+            let xr = &x;
+            let invr = &inv_deg;
+            type IterOut = Result<(Vec<f32>, f64, f64, u64, u64)>;
+            let results: Vec<IterOut> = std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .nodes
+                    .iter()
+                    .zip(node_pr.iter_mut())
+                    .map(|(node, prk)| {
+                        scope.spawn(move || {
+                            self.pagerank_node_iter(node, prk, xr, invr, base, d, &cfg.spmm)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .enumerate()
+                    .map(|(k, h)| {
+                        h.join()
+                            .unwrap_or_else(|_| Err(anyhow!("cluster node {k} panicked mid-iteration")))
+                    })
+                    .collect()
+            });
+            let (mut residual, mut mass) = (0f64, 0f64);
+            for (k, res) in results.into_iter().enumerate() {
+                let (rows, res_k, mass_k, bin, bout) =
+                    res.with_context(|| format!("cluster node {k} pagerank iteration failed"))?;
+                let part = &self.nodes[k].part;
+                x[part.row_lo..part.row_hi].copy_from_slice(&rows);
+                residual += res_k;
+                mass += mass_k;
+                self.sent[k].fetch_add(bin, Ordering::Relaxed);
+                self.recvd[k].fetch_add(bout, Ordering::Relaxed);
+                stats.bytes_sent += bin;
+                stats.bytes_received += bout;
+            }
+            stats.residuals.push(residual);
+            stats.mass.push(mass);
+            stats.iters += 1;
+            if cfg.tol > 0.0 && residual < cfg.tol {
+                stats.converged = true;
+                break;
+            }
+        }
+        let mut pr = Vec::with_capacity(n);
+        for (node, prk) in self.nodes.iter().zip(&node_pr) {
+            for r in 0..node.part.rows() {
+                pr.push(prk.row(r)[0]);
+            }
+        }
+        stats.secs = sw.secs();
+        Ok((pr, stats))
+    }
+
+    /// One node's PageRank iteration (internal; runs on the node's
+    /// thread). Replicates the single-node fused hook row for row: the
+    /// forward output is bit-identical, so `pn`, the pr shard, and the
+    /// normalized next panel are too.
+    #[allow(clippy::too_many_arguments)]
+    fn pagerank_node_iter(
+        &self,
+        node: &ClusterNode,
+        prk: &mut NumaDense,
+        x: &[f32],
+        inv_deg: &[f32],
+        base: f32,
+        d: f32,
+        opts: &SpmmOpts,
+    ) -> Result<(Vec<f32>, f64, f64, u64, u64)> {
+        let part = &node.part;
+        let t = self.meta.tile;
+        let in_cfg = engine::numa_config(t, self.meta.ncols, opts);
+        let out_cfg = engine::numa_config(t, part.rows(), opts);
+        let mut lx = NumaDense::zeros(self.meta.ncols, 1, in_cfg);
+        for (j, &s) in part.support.iter().enumerate() {
+            if !s {
+                continue;
+            }
+            let hi = ((j + 1) * t).min(self.meta.ncols);
+            for r in j * t..hi {
+                lx.row_mut(r)[0] = x[r];
+            }
+        }
+        let bytes_in = (part.support_rows * 4) as u64;
+        let x_next = NumaDense::zeros(part.rows(), 1, out_cfg);
+        let inv = &inv_deg[part.row_lo..part.row_hi];
+        let pr_ref: &NumaDense = prk;
+        let hook: RowHook = Box::new(move |rows_lo: usize, rows: &mut [f32], acc: &mut [f64]| {
+            for (i, v) in rows.iter_mut().enumerate() {
+                let g = rows_lo + i;
+                let pn = base + d * *v;
+                let old = pr_ref.row(g)[0];
+                acc[0] += (pn as f64 - old as f64).abs();
+                acc[1] += pn as f64;
+                *v = pn;
+            }
+            // Intervals are finalized exactly once and disjointly.
+            unsafe { pr_ref.write_rows_unsync(rows_lo, rows_lo + rows.len(), rows) };
+            for (i, v) in rows.iter_mut().enumerate() {
+                *v *= inv[rows_lo + i];
+            }
+        });
+        let r = {
+            let pass = StreamPass::new().forward_with(&lx, OutputSink::Mem(&x_next), 2, hook);
+            exec::run_pass(&node.src, &pass, opts)?
+        };
+        let out: Vec<f32> = (0..part.rows()).map(|i| x_next.row(i)[0]).collect();
+        let bytes_out = (part.rows() * 4) as u64;
+        Ok((out, r.accs[0][0], r.accs[0][1], bytes_in, bytes_out))
+    }
+}
+
+/// Per-tile-row stored-nnz weights of an image — the load measure the
+/// balanced splitter partitions (a cheap header-only scan; no decode).
+pub fn tile_row_weights(img: &TiledImage) -> Vec<u64> {
+    scan_tile_rows(img).0
+}
+
+/// Header-scan every tile of `img`: per-tile-row nnz plus the occupied
+/// tile columns (ascending, as stored).
+fn scan_tile_rows(img: &TiledImage) -> (Vec<u64>, Vec<Vec<u32>>) {
+    let ntr = img.meta.n_tile_rows();
+    let mut weights = vec![0u64; ntr];
+    let mut cols: Vec<Vec<u32>> = vec![Vec::new(); ntr];
+    for tr in 0..ntr {
+        scan_tiles(&img.meta, img.tile_row(tr), |tc, nnz| {
+            weights[tr] += nnz as u64;
+            cols[tr].push(tc);
+        });
+    }
+    (weights, cols)
+}
+
+/// Walk the encoded tiles of one tile row, reporting `(tile_col, nnz)`
+/// per tile from the headers alone.
+fn scan_tiles(meta: &TiledMeta, buf: &[u8], mut f: impl FnMut(u32, usize)) {
+    let mut off = 0usize;
+    while off < buf.len() {
+        let (tc, nnz, next) = match meta.format {
+            TileFormat::Scsr => {
+                let (v, next) = scsr::parse(buf, off, meta.valtype);
+                (v.tile_col, v.nnz, next)
+            }
+            TileFormat::Dcsc => {
+                let (v, next) = dcsc::parse(buf, off, meta.valtype);
+                (v.tile_col, v.nnz, next)
+            }
+        };
+        f(tc, nnz);
+        off = next;
+    }
+}
+
+/// Slice tile rows `[tr_lo, tr_hi)` of `img` into a self-contained
+/// image: same tile/format/valtype, `ncols` unchanged (tile columns are
+/// global), `nrows` clamped to the slice, index rebased, tile bytes
+/// copied verbatim — the node streams the exact bytes the single-node
+/// engine would for those tile rows.
+pub fn partition_image(img: &TiledImage, tr_lo: usize, tr_hi: usize) -> TiledImage {
+    let meta = &img.meta;
+    assert!(tr_lo < tr_hi && tr_hi <= meta.n_tile_rows());
+    let row_lo = tr_lo * meta.tile;
+    let row_hi = (tr_hi * meta.tile).min(meta.nrows);
+    let base = img.index[tr_lo].0;
+    let index: Vec<(u64, u64)> = img.index[tr_lo..tr_hi]
+        .iter()
+        .map(|&(off, len)| (off - base, len))
+        .collect();
+    let data = img.tile_rows(tr_lo, tr_hi).to_vec();
+    let mut nnz = 0u64;
+    for tr in tr_lo..tr_hi {
+        scan_tiles(meta, img.tile_row(tr), |_, n| nnz += n as u64);
+    }
+    TiledImage {
+        meta: TiledMeta {
+            nrows: row_hi - row_lo,
+            ncols: meta.ncols,
+            tile: meta.tile,
+            format: meta.format,
+            valtype: meta.valtype,
+            nnz,
+        },
+        index,
+        data,
+    }
+}
+
+/// Split `0..weights.len()` into exactly `nodes` contiguous non-empty
+/// ranges. [`Partitioner::BalancedNnz`] minimizes the maximum per-range
+/// weight — binary search on the cap (painter's partition) followed by
+/// a greedy carve that reserves one tile row per remaining range, which
+/// provably stays within the optimal cap. [`Partitioner::EqualRows`]
+/// hands out (nearly) equal tile-row counts regardless of weight.
+pub fn plan_ranges(weights: &[u64], nodes: usize, p: Partitioner) -> Vec<(usize, usize)> {
+    let ntr = weights.len();
+    assert!(nodes >= 1 && nodes <= ntr, "need 1 <= nodes <= tile rows");
+    match p {
+        Partitioner::EqualRows => {
+            let (chunk, rem) = (ntr / nodes, ntr % nodes);
+            let mut lo = 0;
+            (0..nodes)
+                .map(|k| {
+                    let hi = lo + chunk + usize::from(k < rem);
+                    let r = (lo, hi);
+                    lo = hi;
+                    r
+                })
+                .collect()
+        }
+        Partitioner::BalancedNnz => {
+            let max_w = weights.iter().copied().max().unwrap_or(0);
+            let (mut lo, mut hi) = (max_w, weights.iter().sum::<u64>().max(max_w));
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                if groups_needed(weights, mid) <= nodes {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            let cap = lo;
+            let mut ranges = Vec::with_capacity(nodes);
+            let mut start = 0usize;
+            for k in 0..nodes {
+                let reserve = nodes - 1 - k;
+                let mut end = start + 1;
+                let mut acc = weights[start];
+                while end < ntr - reserve && acc + weights[end] <= cap {
+                    acc += weights[end];
+                    end += 1;
+                }
+                if k == nodes - 1 {
+                    end = ntr;
+                }
+                ranges.push((start, end));
+                start = end;
+            }
+            ranges
+        }
+    }
+}
+
+/// Minimum number of contiguous groups covering `weights` with no group
+/// sum above `cap` (greedy; `cap >= max(weights)`).
+fn groups_needed(weights: &[u64], cap: u64) -> usize {
+    let mut groups = 1usize;
+    let mut acc = 0u64;
+    for &w in weights {
+        if acc + w > cap {
+            groups += 1;
+            acc = w;
+        } else {
+            acc += w;
+        }
+    }
+    groups
+}
+
+/// Max range weight / mean range weight of a proposed split.
+pub fn nnz_imbalance(weights: &[u64], ranges: &[(usize, usize)]) -> f64 {
+    let sums: Vec<u64> = ranges
+        .iter()
+        .map(|&(lo, hi)| weights[lo..hi].iter().sum())
+        .collect();
+    let max = sums.iter().copied().max().unwrap_or(0) as f64;
+    let mean = sums.iter().sum::<u64>() as f64 / ranges.len() as f64;
+    max / mean.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_rows_ranges_cover_exactly_and_nonempty() {
+        for (ntr, nodes) in [(8, 3), (9, 4), (4, 4), (17, 5)] {
+            let w = vec![1u64; ntr];
+            let r = plan_ranges(&w, nodes, Partitioner::EqualRows);
+            assert_eq!(r.len(), nodes);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r[nodes - 1].1, ntr);
+            for k in 0..nodes {
+                assert!(r[k].0 < r[k].1, "empty range {k} for ntr={ntr} nodes={nodes}");
+                if k > 0 {
+                    assert_eq!(r[k].0, r[k - 1].1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_ranges_achieve_painter_optimum() {
+        // Skewed weights: one hot tile row. The optimal 4-way split
+        // isolates the hot row (max 10); equal rows would pair it with
+        // a neighbor (max 11).
+        let w = vec![10u64, 1, 1, 1, 1, 1, 1, 1];
+        let bal = plan_ranges(&w, 4, Partitioner::BalancedNnz);
+        let eq = plan_ranges(&w, 4, Partitioner::EqualRows);
+        let max_of = |ranges: &[(usize, usize)]| {
+            ranges
+                .iter()
+                .map(|&(lo, hi)| w[lo..hi].iter().sum::<u64>())
+                .max()
+                .unwrap()
+        };
+        assert_eq!(max_of(&bal), 10);
+        assert_eq!(max_of(&eq), 11);
+        assert!(nnz_imbalance(&w, &bal) < nnz_imbalance(&w, &eq));
+        // Coverage invariants hold for the balanced carve too.
+        assert_eq!(bal[0].0, 0);
+        assert_eq!(bal[3].1, w.len());
+        for k in 1..4 {
+            assert_eq!(bal[k].0, bal[k - 1].1);
+            assert!(bal[k].0 < bal[k].1);
+        }
+    }
+
+    #[test]
+    fn balanced_never_exceeds_any_contiguous_alternative() {
+        // Pseudo-random weights: the balanced max must lower-bound the
+        // equal-rows max for every feasible node count.
+        let mut s = 0x9e3779b97f4a7c15u64;
+        let w: Vec<u64> = (0..31)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                s >> 58
+            })
+            .collect();
+        for nodes in 1..=8 {
+            let bal = plan_ranges(&w, nodes, Partitioner::BalancedNnz);
+            let eq = plan_ranges(&w, nodes, Partitioner::EqualRows);
+            let max_of = |ranges: &[(usize, usize)]| {
+                ranges
+                    .iter()
+                    .map(|&(lo, hi)| w[lo..hi].iter().sum::<u64>())
+                    .max()
+                    .unwrap()
+            };
+            assert!(max_of(&bal) <= max_of(&eq), "nodes={nodes}");
+            assert_eq!(bal.len(), nodes);
+            assert_eq!(bal.last().unwrap().1, w.len());
+        }
+    }
+
+    #[test]
+    fn node_down_error_is_structured_and_named() {
+        let e = NodeDown { node: 3 };
+        assert_eq!(e.to_string(), "cluster node 3 is down");
+        let any = anyhow::Error::new(e);
+        assert_eq!(any.downcast_ref::<NodeDown>(), Some(&NodeDown { node: 3 }));
+    }
+
+    #[test]
+    fn ec2_config_matches_dist_sim_model_parameters() {
+        let c = ClusterConfig::ec2(4);
+        let d = DistConfig::ec2(4);
+        assert_eq!(c.net_gbps, d.net_gbps);
+        assert_eq!(c.latency_us, d.latency_us);
+        let back = c.dist_config(16);
+        assert_eq!(back.cores_per_node, 16);
+        assert_eq!(back.nodes, 4);
+    }
+}

@@ -6,15 +6,21 @@
 //! many passes over the sparse matrix a multiply needs, and which
 //! placement each application should use — plus, on the serving side,
 //! how many concurrent requests one streaming sweep should carry
-//! ([`batcher`]).
+//! ([`batcher`]), and, on the scale-out side, how a matrix is split
+//! across simulated nodes and their panels exchanged ([`cluster`]).
 
 pub mod batcher;
 pub mod catalog;
+pub mod cluster;
 pub mod service;
 pub mod vert;
 
 pub use batcher::{Backpressure, BatchConfig, BatchJob, Batcher, RideResult, RideStats, Ticket};
 pub use catalog::{Catalog, DatasetImages};
+pub use cluster::{
+    Cluster, ClusterConfig, ClusterOp, ClusterPassResult, ClusterPassStats, NodeDown,
+    NodePartition, NodeRunStats, Partitioner,
+};
 pub use vert::{spmm_vert, VertReport};
 
 use crate::metrics::MemStats;

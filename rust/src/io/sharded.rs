@@ -143,6 +143,17 @@ impl StoreSpec {
         self.read_gbps.map(|g| g * self.shards as f64)
     }
 
+    /// The spec of simulated cluster node `k`'s private store: the same
+    /// shard count, stripe, throttle and parity, rooted at `dir/node-k`
+    /// — so every node of a partitioned run (see `coordinator::cluster`)
+    /// gets its own array with the base spec's device model.
+    pub fn node_spec(&self, k: usize) -> StoreSpec {
+        StoreSpec {
+            dir: self.dir.join(format!("node-{k}")),
+            ..self.clone()
+        }
+    }
+
     /// Directory of shard `k` under this spec's layout.
     pub fn shard_dir(&self, k: usize) -> PathBuf {
         if self.shards == 1 {

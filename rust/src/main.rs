@@ -25,6 +25,12 @@
 //! Datasets are the scaled Table 1 stand-ins from the registry; add
 //! `--set dataset.scale=N` to resize. The store location and throttling
 //! come from the config (`store.*` keys).
+//!
+//! With `cluster.nodes >= 2` (`cluster.*` keys), `spmv`, `spmm` and
+//! `pagerank` run in the partitioned scale-out mode: the adjacency
+//! image is split across per-node stores under the main store's
+//! directory and one engine instance runs per simulated node, with
+//! per-node compute/comm/imbalance reported (`coordinator::cluster`).
 
 use anyhow::{bail, Context, Result};
 use sem_spmm::apps::{bfs, eigen, labelprop, nmf, pagerank, sssp};
@@ -154,12 +160,66 @@ fn cmd_info(ctx: &Ctx, args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The partitioned control plane when `cluster.nodes >= 2` (`None`
+/// otherwise): splits the dataset's *base* adjacency image across
+/// per-node stores under the main store's directory. Delta overlays are
+/// a single-node feature — commit them into the base first.
+fn build_cluster(
+    ctx: &Ctx,
+    imgs: &sem_spmm::coordinator::DatasetImages,
+) -> Result<Option<sem_spmm::coordinator::Cluster>> {
+    let ccfg = ctx.cfg.cluster_config()?;
+    if ccfg.nodes < 2 {
+        return Ok(None);
+    }
+    let img = sem_spmm::format::tiled::TiledImage::from_bytes(&ctx.store.get(&imgs.adj)?)?;
+    Ok(Some(sem_spmm::coordinator::Cluster::build(
+        &img,
+        ctx.store.spec(),
+        &ccfg,
+    )?))
+}
+
+/// Per-node compute/comm/imbalance lines of a partitioned pass.
+fn print_cluster_stats(stats: &sem_spmm::coordinator::ClusterPassStats) {
+    println!(
+        "  cluster: imbalance {:.3}, modeled step {}, panels {} out / {} back",
+        stats.imbalance,
+        sem_spmm::util::human_secs(stats.modeled_step_secs),
+        sem_spmm::util::human_bytes(stats.bytes_sent),
+        sem_spmm::util::human_bytes(stats.bytes_received),
+    );
+    for n in &stats.per_node {
+        println!(
+            "  node {}: {} tile rows, {} nnz, compute {}, comm {} ({} in / {} out)",
+            n.node,
+            n.tile_rows,
+            n.nnz,
+            sem_spmm::util::human_secs(n.compute_secs),
+            sem_spmm::util::human_secs(n.comm_secs),
+            sem_spmm::util::human_bytes(n.bytes_in),
+            sem_spmm::util::human_bytes(n.bytes_out),
+        );
+    }
+}
+
 fn cmd_spmv(ctx: &Ctx, args: &[String]) -> Result<()> {
     let name = args.first().context("spmv <dataset>")?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
-    let src = ctx.catalog.open_adj_current(&imgs)?;
     let x = vec![1f32; imgs.num_verts];
     let opts = ctx.cfg.spmm_opts()?;
+    if let Some(cluster) = build_cluster(ctx, &imgs)? {
+        let (y, cstats) = cluster.spmv(&x, &opts)?;
+        let sum: f64 = y.iter().map(|&v| v as f64).sum();
+        println!(
+            "spmv {name} [cluster x{}]: checksum {sum} in {}",
+            cluster.nodes.len(),
+            sem_spmm::util::human_secs(cstats.wall_secs)
+        );
+        print_cluster_stats(&cstats);
+        return Ok(());
+    }
+    let src = ctx.catalog.open_adj_current(&imgs)?;
     let (y, stats) = engine::spmv(&src, &x, &opts)?;
     let sum: f64 = y.iter().map(|&v| v as f64).sum();
     println!(
@@ -175,9 +235,20 @@ fn cmd_spmm(ctx: &Ctx, args: &[String]) -> Result<()> {
     let name = args.first().context("spmm <dataset> <cols>")?;
     let p: usize = args.get(1).context("spmm <dataset> <cols>")?.parse()?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
-    let src = ctx.catalog.open_adj_current(&imgs)?;
     let x = sem_spmm::matrix::DenseMatrix::random(imgs.num_verts, p, 1);
     let opts = ctx.cfg.spmm_opts()?;
+    if let Some(cluster) = build_cluster(ctx, &imgs)? {
+        let (_, cstats) = cluster.spmm(&x, &opts)?;
+        println!(
+            "spmm {name} p={p} [cluster x{}]: {} pass in {}",
+            cluster.nodes.len(),
+            sem_spmm::util::human_bytes(cstats.per_node.iter().map(|n| n.spmm.bytes_read).sum()),
+            sem_spmm::util::human_secs(cstats.wall_secs)
+        );
+        print_cluster_stats(&cstats);
+        return Ok(());
+    }
+    let src = ctx.catalog.open_adj_current(&imgs)?;
     let (_, stats) = engine::spmm_out(&src, &x, &opts)?;
     println!(
         "spmm {name} p={p}: {} tasks in {} ({:.2} GB/s read)",
@@ -193,6 +264,37 @@ fn cmd_pagerank(ctx: &Ctx, args: &[String]) -> Result<()> {
     let iters: usize = args.get(1).map(|s| s.parse()).unwrap_or(Ok(30))?;
     let vecs: usize = args.get(2).map(|s| s.parse()).unwrap_or(Ok(3))?;
     let imgs = ctx.catalog.ensure(&dataset_spec(ctx, name)?)?;
+    if let Some(cluster) = build_cluster(ctx, &imgs)? {
+        // The partitioned path is always fused (the vecs knob is a
+        // single-node memory ablation) and bit-identical to the
+        // single-node fused run at any node count.
+        let cfg = pagerank::PageRankConfig {
+            iterations: iters,
+            tol: ctx.cfg.pagerank_tol()?,
+            spmm: ctx.cfg.spmm_opts()?,
+            ..Default::default()
+        };
+        let (pr, st) = cluster.pagerank(&imgs.degrees, &cfg)?;
+        let mut top: Vec<(usize, f32)> = pr.iter().copied().enumerate().collect();
+        top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        println!(
+            "pagerank {name} [cluster x{}]: {} iters{} in {} (imbalance {:.3}, panels {} out / {} back)",
+            cluster.nodes.len(),
+            st.iters,
+            if st.converged { " (converged)" } else { "" },
+            sem_spmm::util::human_secs(st.secs),
+            st.imbalance,
+            sem_spmm::util::human_bytes(st.bytes_sent),
+            sem_spmm::util::human_bytes(st.bytes_received),
+        );
+        if let (Some(res), Some(mass)) = (st.residuals.last(), st.mass.last()) {
+            println!("  in-pass residual {res:.3e}, probability mass {mass:.6}");
+        }
+        for (v, score) in top.iter().take(5) {
+            println!("  v{v}\t{score:.6}");
+        }
+        return Ok(());
+    }
     let src = ctx.catalog.open_adj_current(&imgs)?;
     let cfg = pagerank::PageRankConfig {
         iterations: iters,

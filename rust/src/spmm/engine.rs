@@ -327,6 +327,34 @@ pub struct SpmmStats {
     pub reconstructed_bytes: u64,
 }
 
+impl SpmmStats {
+    /// Whether every *deterministic* field of two runs agrees — the
+    /// counters fixed by (image, plan, options): task/grain shape, byte
+    /// and cache accounting, per-op kind/kernel/cols/rows. Timing
+    /// fields (`secs`, `read_gbps`, per-op kernel/reduce seconds) vary
+    /// run to run and are excluded. The partitioned mode's `nodes = 1`
+    /// stats-for-stats acceptance test compares through this.
+    pub fn matches_deterministic(&self, other: &SpmmStats) -> bool {
+        self.tasks == other.tasks
+            && self.bytes_read == other.bytes_read
+            && self.physical_bytes_read == other.physical_bytes_read
+            && self.tile_rows == other.tile_rows
+            && self.cache_hits == other.cache_hits
+            && self.cache_misses == other.cache_misses
+            && self.bytes_from_cache == other.bytes_from_cache
+            && self.grain == other.grain
+            && self.degraded_reads == other.degraded_reads
+            && self.reconstructed_bytes == other.reconstructed_bytes
+            && self.per_op.len() == other.per_op.len()
+            && self.per_op.iter().zip(&other.per_op).all(|(a, b)| {
+                a.kind == b.kind
+                    && a.kernel == b.kernel
+                    && a.cols == b.cols
+                    && a.rows_out == b.rows_out
+            })
+    }
+}
+
 /// Sparse × dense multiply: `out = A · X` with `A` from `src` (n×m tiled
 /// image) and `X` the in-memory (striped) dense operand (m×p).
 ///

@@ -1,0 +1,503 @@
+//! Cross-partition battery for the partitioned scale-out mode
+//! (`coordinator/cluster.rs`): the cluster control plane must be a
+//! *refactoring* of the single-node engine, not a reimplementation.
+//!
+//! * **Differential**: at 1, 2 and 4 nodes, over striped per-node
+//!   stores, with both partitioners, a fused forward + transpose pass
+//!   must reproduce the single-node engine — bit-identical everywhere
+//!   except the documented Arith-transpose-at-many-nodes case (the f32
+//!   ⊕-fold tree follows node boundaries there, exactly as it follows
+//!   worker boundaries on one node). All four semirings, weighted RMAT
+//!   and binary SBM. `nodes = 1` is additionally stats-for-stats.
+//! * **PageRank**: rides entirely on forward passes, so the partitioned
+//!   run is bit-identical to the single-node fused path at every node
+//!   count.
+//! * **Properties**: every stored nonzero lands on exactly one node and
+//!   the concatenated partitions reconstruct the image byte-for-byte;
+//!   the balanced splitter never loses to equal-rows on a power-law
+//!   graph; metered channel bytes equal the analytic panel-exchange
+//!   volume computed independently from the CSR.
+//! * **Failure injection**: a dead shard inside one node's parity store
+//!   degrades to reconstructed reads without changing a bit; a killed
+//!   node fails the pass with a structured [`NodeDown`] naming it, and
+//!   the cluster serves the next request after `revive`.
+
+use sem_spmm::apps::pagerank::{self, PageRankConfig};
+use sem_spmm::coordinator::cluster::{
+    nnz_imbalance, partition_image, plan_ranges, tile_row_weights, PART_OBJ,
+};
+use sem_spmm::coordinator::{Cluster, ClusterConfig, ClusterOp, NodeDown, Partitioner};
+use sem_spmm::format::tiled::{decode_all, TiledImage};
+use sem_spmm::format::{Csr, TileFormat};
+use sem_spmm::graph::{rmat, sbm};
+use sem_spmm::io::{ShardedStore, StoreSpec};
+use sem_spmm::matrix::{DenseMatrix, NumaDense};
+use sem_spmm::spmm::{
+    engine, run_pass_ring, Arith, MinPlus, MinSelect, OrAnd, OutputSink, SemSource, Semiring,
+    Source, SpmmOpts, StreamPass,
+};
+use std::path::Path;
+
+const TILE: usize = 128;
+
+fn rmat_weighted() -> Csr {
+    let el = rmat::generate(10, 12_000, rmat::RmatParams::default(), 0xC1A5);
+    let mut m = Csr::from_edgelist(&el);
+    let mut rng = sem_spmm::util::Xoshiro256::new(0x17);
+    m.vals = Some((0..m.nnz()).map(|_| rng.next_f32() * 2.0 - 1.0).collect());
+    m
+}
+
+fn sbm_binary() -> Csr {
+    Csr::from_edgelist(&sbm::generate(
+        sbm::SbmParams {
+            num_verts: 1 << 10,
+            num_edges: 14_000,
+            num_clusters: 16,
+            in_out: 8.0,
+            clustered_order: true,
+        },
+        0x5B31,
+    ))
+}
+
+/// 4-shard striped spec rooted at `dir` — node stores inherit it under
+/// `dir/node-k/`, so every node really stripes its slice.
+fn striped(dir: &Path, parity: bool) -> StoreSpec {
+    StoreSpec {
+        dir: dir.to_path_buf(),
+        shards: 4,
+        stripe_bytes: 2048,
+        read_gbps: None,
+        write_gbps: None,
+        latency_us: 0,
+        parity,
+    }
+}
+
+/// Deterministic engine options: static partitioning so the worker
+/// ⊕-fold segmentation (and hence Arith-transpose bits and f64 hook
+/// accumulators) is identical run-to-run.
+fn det_opts() -> SpmmOpts {
+    SpmmOpts {
+        threads: 3,
+        io_workers: 2,
+        load_balance: false,
+        ..Default::default()
+    }
+}
+
+fn assert_bits(tag: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{tag}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{tag}: index {i}: {a} vs {b} (bits differ)"
+        );
+    }
+}
+
+fn assert_close(tag: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{tag}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+            "{tag}: index {i}: {a} vs {b}"
+        );
+    }
+}
+
+/// The differential core: one graph, one semiring. The single-node
+/// engine (over its own striped SEM store) sets the reference bits for
+/// a fused forward + transpose pass; every (nodes, partitioner) cluster
+/// must reproduce them per the contract in the cluster module docs.
+fn cluster_vs_engine<S: Semiring>(gname: &str, m: &Csr) {
+    let img = TiledImage::build(m, TILE, TileFormat::Scsr);
+    let p = 4;
+    let x = DenseMatrix::random(m.ncols, p, 0xA1);
+    let y = DenseMatrix::random(m.nrows, p, 0xB2);
+    let opts = det_opts();
+    let dir = sem_spmm::util::tempdir();
+
+    // Reference: the single-node engine streaming the whole image from
+    // an identically-shaped striped store.
+    let rstore = ShardedStore::open(striped(&dir.path().join("ref"), false)).unwrap();
+    let mut buf = Vec::new();
+    img.write_to(&mut buf).unwrap();
+    rstore.put("a.semm", &buf).unwrap();
+    let src = Source::Sem(SemSource::open(&rstore, "a.semm").unwrap());
+    let ncfg = engine::numa_config(TILE, m.nrows.max(m.ncols), &opts);
+    let xs = NumaDense::from_dense(&x, ncfg);
+    let ys = NumaDense::from_dense(&y, ncfg);
+    let fwd = NumaDense::zeros(m.nrows, p, ncfg);
+    let tr = NumaDense::zeros(m.ncols, p, ncfg);
+    let ref_stats = {
+        let pass = StreamPass::<S>::new()
+            .forward(&xs, OutputSink::Mem(&fwd))
+            .transpose(&ys, &tr);
+        run_pass_ring::<S>(&src, &pass, &opts).unwrap().stats
+    };
+    assert!(ref_stats.bytes_read > 0, "{gname}: reference must stream");
+    let want_fwd = fwd.to_dense().data;
+    let want_tr = tr.to_dense().data;
+
+    for nodes in [1usize, 2, 4] {
+        for pt in [Partitioner::BalancedNnz, Partitioner::EqualRows] {
+            let tag = format!("{gname}/{}/n{nodes}/{}", S::NAME, pt.name());
+            let base = striped(&dir.path().join(format!("n{nodes}-{}", pt.name())), false);
+            let ccfg = ClusterConfig {
+                nodes,
+                partitioner: pt,
+                ..ClusterConfig::ec2(nodes)
+            };
+            let cluster = Cluster::build(&img, &base, &ccfg).unwrap();
+            let r = cluster
+                .run_pass::<S>(&[ClusterOp::Forward(&x), ClusterOp::Transpose(&y)], &opts)
+                .unwrap();
+            // Every node streamed its slice from its own store.
+            for n in &r.stats.per_node {
+                assert!(n.spmm.bytes_read > 0, "{tag}: node {} never streamed", n.node);
+            }
+            // Forward: bit-identical at every node count, in every ring.
+            assert_bits(&format!("{tag}: forward"), &r.outputs[0].data, &want_fwd);
+            // Transpose: bit-identical except Arith at nodes > 1, where
+            // the ⊕-fold tree legitimately regroups across nodes.
+            if !S::IS_ARITH || nodes == 1 {
+                assert_bits(&format!("{tag}: transpose"), &r.outputs[1].data, &want_tr);
+            } else {
+                assert_close(&format!("{tag}: transpose"), &r.outputs[1].data, &want_tr);
+            }
+
+            // nodes = 1 is the engine run: same deterministic task/byte/
+            // cache/kernel statistics, not just the same numbers.
+            if nodes == 1 {
+                assert!(
+                    r.stats.per_node[0].spmm.matches_deterministic(&ref_stats),
+                    "{tag}: single-node cluster stats diverged from the engine:\n{:?}\nvs\n{:?}",
+                    r.stats.per_node[0].spmm,
+                    ref_stats
+                );
+            }
+
+            // The fused pass equals separate single-op passes bit for
+            // bit — same partition, same static schedule, same folds.
+            if nodes == 2 && pt == Partitioner::BalancedNnz {
+                let f = cluster
+                    .run_pass::<S>(&[ClusterOp::Forward(&x)], &opts)
+                    .unwrap();
+                let t2 = cluster
+                    .run_pass::<S>(&[ClusterOp::Transpose(&y)], &opts)
+                    .unwrap();
+                assert_bits(
+                    &format!("{tag}: forward-only vs fused"),
+                    &f.outputs[0].data,
+                    &r.outputs[0].data,
+                );
+                assert_bits(
+                    &format!("{tag}: transpose-only vs fused"),
+                    &t2.outputs[0].data,
+                    &r.outputs[1].data,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partitioned_rmat_weighted_matches_single_node_all_rings() {
+    let m = rmat_weighted();
+    cluster_vs_engine::<Arith>("rmat-w", &m);
+    cluster_vs_engine::<MinPlus>("rmat-w", &m);
+    cluster_vs_engine::<OrAnd>("rmat-w", &m);
+    cluster_vs_engine::<MinSelect>("rmat-w", &m);
+}
+
+#[test]
+fn partitioned_sbm_binary_matches_single_node_all_rings() {
+    let m = sbm_binary();
+    cluster_vs_engine::<Arith>("sbm-b", &m);
+    cluster_vs_engine::<MinPlus>("sbm-b", &m);
+    cluster_vs_engine::<OrAnd>("sbm-b", &m);
+    cluster_vs_engine::<MinSelect>("sbm-b", &m);
+}
+
+/// Partitioned PageRank vs the single-node fused path: PageRank rides
+/// entirely on forward passes, so it is bit-identical at every node
+/// count — including the per-iteration residual/mass telemetry at
+/// `nodes = 1`, where the cluster is the engine run.
+#[test]
+fn partitioned_pagerank_bit_identical_to_single_node_fused() {
+    let el = rmat::generate(10, 12_000, rmat::RmatParams::default(), 0x9A17);
+    let deg = el.col_degrees();
+    let m = Csr::from_edgelist(&el);
+    let img = TiledImage::build(&m, TILE, TileFormat::Scsr);
+    let dir = sem_spmm::util::tempdir();
+
+    let store = ShardedStore::open(striped(&dir.path().join("ref"), false)).unwrap();
+    let mut buf = Vec::new();
+    img.write_to(&mut buf).unwrap();
+    store.put("g.semm", &buf).unwrap();
+    let src = Source::Sem(SemSource::open(&store, "g.semm").unwrap());
+    let cfg = PageRankConfig {
+        iterations: 8,
+        spmm: det_opts(),
+        ..Default::default()
+    };
+    let (want, want_st) = pagerank::pagerank(&src, &deg, &store, &cfg).unwrap();
+
+    for nodes in [1usize, 2, 4] {
+        let base = striped(&dir.path().join(format!("n{nodes}")), false);
+        let cluster = Cluster::build(&img, &base, &ClusterConfig::ec2(nodes)).unwrap();
+        let (pr, st) = cluster.pagerank(&deg, &cfg).unwrap();
+        assert_bits(&format!("pagerank n{nodes}"), &pr, &want);
+        assert_eq!(st.iters, want_st.iters, "n{nodes}: iteration count");
+        assert!(!st.converged, "tol = 0 must run all iterations");
+        // Residual/mass: exact at nodes = 1 (same worker fold), within
+        // f64 noise when node boundaries regroup the sums.
+        for (i, (r, w)) in st.residuals.iter().zip(&want_st.residuals).enumerate() {
+            if nodes == 1 {
+                assert_eq!(r, w, "n1: residual iter {i}");
+            } else {
+                assert!((r - w).abs() < 1e-9, "n{nodes}: residual iter {i}: {r} vs {w}");
+            }
+        }
+        for (i, (a, w)) in st.mass.iter().zip(&want_st.mass).enumerate() {
+            assert!((a - w).abs() < 1e-9, "n{nodes}: mass iter {i}: {a} vs {w}");
+        }
+        // x̂ panels crossed the network every iteration, both ways.
+        assert!(st.bytes_sent > 0 && st.bytes_received > 0);
+    }
+}
+
+/// Property: under both partitioners and several node counts, every
+/// stored nonzero lands on exactly one node, and the concatenated
+/// partitions reconstruct the original image — coordinates, values,
+/// per-node nnz totals, and the tile byte stream itself.
+#[test]
+fn every_nonzero_lands_on_exactly_one_node_and_partitions_reconstruct() {
+    let m = rmat_weighted();
+    let img = TiledImage::build(&m, TILE, TileFormat::Scsr);
+    let (want_coords, want_vals) = decode_all(&img);
+    let w = tile_row_weights(&img);
+    assert_eq!(w.iter().sum::<u64>(), img.meta.nnz, "weights must cover all nnz");
+
+    for pt in [Partitioner::BalancedNnz, Partitioner::EqualRows] {
+        for nodes in [2usize, 4, 7] {
+            let ranges = plan_ranges(&w, nodes, pt);
+            assert_eq!(ranges.len(), nodes);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges[nodes - 1].1, img.meta.n_tile_rows());
+            let (mut coords, mut vals) = (Vec::new(), Vec::new());
+            let mut data = Vec::new();
+            let mut total_nnz = 0u64;
+            for (k, &(lo, hi)) in ranges.iter().enumerate() {
+                if k > 0 {
+                    assert_eq!(lo, ranges[k - 1].1, "ranges must abut");
+                }
+                assert!(lo < hi, "node {k} got an empty range");
+                let sub = partition_image(&img, lo, hi);
+                total_nnz += sub.meta.nnz;
+                data.extend_from_slice(&sub.data);
+                let row_off = (lo * TILE) as u32;
+                let (c, v) = decode_all(&sub);
+                coords.extend(c.into_iter().map(|(r, cc)| (r + row_off, cc)));
+                vals.extend(v);
+            }
+            let tag = format!("{}/n{nodes}", pt.name());
+            assert_eq!(total_nnz, img.meta.nnz, "{tag}: nnz not partitioned exactly");
+            assert_eq!(coords, want_coords, "{tag}: nonzeros lost, duplicated or moved");
+            assert_eq!(vals, want_vals, "{tag}: values changed in transit");
+            assert_eq!(data, img.data, "{tag}: tile bytes not sliced verbatim");
+        }
+    }
+}
+
+/// Property: on a power-law graph the balanced splitter's max-node-nnz
+/// never exceeds equal-rows', and is strictly better somewhere.
+#[test]
+fn balanced_splitter_beats_equal_rows_on_power_law() {
+    let m = Csr::from_edgelist(&rmat::generate(11, 40_000, rmat::RmatParams::default(), 0x77));
+    let img = TiledImage::build(&m, 64, TileFormat::Scsr);
+    let w = tile_row_weights(&img);
+    let mut strictly_better = false;
+    for nodes in [2usize, 4, 8] {
+        let bal = nnz_imbalance(&w, &plan_ranges(&w, nodes, Partitioner::BalancedNnz));
+        let eq = nnz_imbalance(&w, &plan_ranges(&w, nodes, Partitioner::EqualRows));
+        assert!(
+            bal <= eq + 1e-12,
+            "nodes={nodes}: balanced {bal} worse than equal-rows {eq}"
+        );
+        strictly_better |= bal < eq - 1e-12;
+    }
+    assert!(
+        strictly_better,
+        "balanced splitter never improved on equal rows for a power-law graph"
+    );
+}
+
+/// Property: metered channel bytes equal the analytic panel-exchange
+/// volume, computed independently from the CSR — per node, per
+/// direction, and cumulatively across passes. Forward ships only each
+/// node's support rows in and its owned rows back; transpose the
+/// reverse.
+#[test]
+fn metered_channel_bytes_equal_analytic_panel_volume() {
+    let m = rmat_weighted();
+    let img = TiledImage::build(&m, TILE, TileFormat::Scsr);
+    let p = 3;
+    let x = DenseMatrix::random(m.ncols, p, 0xE1);
+    let y = DenseMatrix::random(m.nrows, p, 0xE2);
+    let opts = det_opts();
+    let dir = sem_spmm::util::tempdir();
+    let weights = tile_row_weights(&img);
+
+    for nodes in [2usize, 4] {
+        let base = striped(&dir.path().join(format!("n{nodes}")), false);
+        let cluster = Cluster::build(&img, &base, &ClusterConfig::ec2(nodes)).unwrap();
+        let r = cluster
+            .run_pass::<Arith>(&[ClusterOp::Forward(&x), ClusterOp::Transpose(&y)], &opts)
+            .unwrap();
+
+        let ranges = plan_ranges(&weights, nodes, Partitioner::BalancedNnz);
+        let (mut want_sent, mut want_recvd) = (0u64, 0u64);
+        for (k, &(tr_lo, tr_hi)) in ranges.iter().enumerate() {
+            // Independent support computation straight from the CSR.
+            let row_lo = tr_lo * TILE;
+            let row_hi = (tr_hi * TILE).min(m.nrows);
+            let mut support = vec![false; m.ncols.div_ceil(TILE)];
+            for row in row_lo..row_hi {
+                for e in m.indptr[row] as usize..m.indptr[row + 1] as usize {
+                    support[m.indices[e] as usize / TILE] = true;
+                }
+            }
+            let support_rows: usize = support
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| **s)
+                .map(|(j, _)| ((j + 1) * TILE).min(m.ncols) - j * TILE)
+                .sum();
+            let rows = row_hi - row_lo;
+            let part = &cluster.nodes[k].part;
+            assert_eq!((part.row_lo, part.row_hi), (row_lo, row_hi), "n{nodes}/node {k}: rows");
+            assert_eq!(part.support_rows, support_rows, "n{nodes}/node {k}: support");
+
+            let want_in = ((support_rows + rows) * p * 4) as u64;
+            let want_out = ((rows + support_rows) * p * 4) as u64;
+            let ns = &r.stats.per_node[k];
+            assert_eq!(ns.bytes_in, want_in, "n{nodes}/node {k}: bytes in");
+            assert_eq!(ns.bytes_out, want_out, "n{nodes}/node {k}: bytes out");
+            // 2 ops in + 2 ops back = 4 metered messages on the link.
+            let model = cluster.link_secs(want_in + want_out, 4);
+            assert!(
+                (ns.comm_secs - model).abs() < 1e-12,
+                "n{nodes}/node {k}: comm model {} vs {}",
+                ns.comm_secs,
+                model
+            );
+            want_sent += want_in;
+            want_recvd += want_out;
+        }
+        assert_eq!(r.stats.bytes_sent, want_sent, "n{nodes}: total sent");
+        assert_eq!(r.stats.bytes_received, want_recvd, "n{nodes}: total received");
+
+        // Cumulative meters: a second identical pass doubles the totals.
+        cluster
+            .run_pass::<Arith>(&[ClusterOp::Forward(&x), ClusterOp::Transpose(&y)], &opts)
+            .unwrap();
+        assert_eq!(cluster.net_totals(), (2 * want_sent, 2 * want_recvd));
+    }
+}
+
+/// Failure injection: chop one shard of one node's parity-striped store
+/// mid-object. That node's sweeps degrade to reconstructed reads — the
+/// pass still succeeds and the output does not change by a bit; the
+/// other nodes stay clean.
+#[test]
+fn dead_shard_inside_one_node_degrades_to_reconstructed_reads() {
+    let m = rmat_weighted();
+    let img = TiledImage::build(&m, TILE, TileFormat::Scsr);
+    let x = DenseMatrix::random(m.ncols, 4, 0xF1);
+    let opts = det_opts();
+    let dir = sem_spmm::util::tempdir();
+    let cluster = Cluster::build(
+        &img,
+        &striped(dir.path(), true),
+        &ClusterConfig::ec2(3),
+    )
+    .unwrap();
+
+    let (healthy, hstats) = cluster.spmm(&x, &opts).unwrap();
+    for n in &hstats.per_node {
+        assert_eq!(n.spmm.degraded_reads, 0, "healthy run reconstructed on node {}", n.node);
+    }
+
+    // Chop shard 2 of node 1's store to a quarter of its length.
+    let victim = &cluster.nodes[1].store;
+    let path = victim.spec().shard_dir(2).join(PART_OBJ);
+    let len = std::fs::metadata(&path).unwrap().len();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&path)
+        .unwrap()
+        .set_len(len / 4)
+        .unwrap();
+
+    let (degraded, dstats) = cluster.spmm(&x, &opts).unwrap();
+    assert_bits("degraded vs healthy", &degraded.data, &healthy.data);
+    assert!(
+        dstats.per_node[1].spmm.degraded_reads > 0,
+        "dead shard never triggered reconstruction"
+    );
+    assert!(victim.degraded.reconstructed_bytes.get() > 0);
+    for k in [0usize, 2] {
+        assert_eq!(
+            dstats.per_node[k].spmm.degraded_reads, 0,
+            "healthy node {k} reported degraded reads"
+        );
+    }
+}
+
+/// Failure injection: a killed node fails the pass with a structured
+/// error naming it — repeatedly, without corrupting state — and after
+/// `revive` the cluster serves the next request bit-identically.
+#[test]
+fn killed_node_yields_structured_error_and_cluster_recovers_on_revive() {
+    let el = rmat::generate(10, 12_000, rmat::RmatParams::default(), 0x4B1D);
+    let deg = el.col_degrees();
+    let m = Csr::from_edgelist(&el);
+    let img = TiledImage::build(&m, TILE, TileFormat::Scsr);
+    let x = DenseMatrix::random(m.ncols, 2, 0xAB);
+    let opts = det_opts();
+    let dir = sem_spmm::util::tempdir();
+    let cluster = Cluster::build(&img, &striped(dir.path(), false), &ClusterConfig::ec2(3)).unwrap();
+
+    let (want, _) = cluster.spmm(&x, &opts).unwrap();
+
+    cluster.kill(1);
+    assert!(cluster.is_killed(1));
+    let err = cluster.spmm(&x, &opts).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<NodeDown>(),
+        Some(&NodeDown { node: 1 }),
+        "error must be a structured NodeDown"
+    );
+    assert!(err.to_string().contains("node 1"), "error must name the node: {err}");
+    // Every entry point refuses while the node is down, and keeps
+    // refusing on retry — no half-run state accumulates.
+    let err2 = cluster.spmv(&vec![1.0; m.ncols], &opts).unwrap_err();
+    assert_eq!(err2.downcast_ref::<NodeDown>(), Some(&NodeDown { node: 1 }));
+    let cfg = PageRankConfig {
+        iterations: 2,
+        spmm: det_opts(),
+        ..Default::default()
+    };
+    let err3 = cluster.pagerank(&deg, &cfg).unwrap_err();
+    assert_eq!(err3.downcast_ref::<NodeDown>(), Some(&NodeDown { node: 1 }));
+
+    cluster.revive(1);
+    assert!(!cluster.is_killed(1));
+    let (again, _) = cluster.spmm(&x, &opts).unwrap();
+    assert_bits("post-revive vs pre-kill", &again.data, &want.data);
+    let (_, prst) = cluster.pagerank(&deg, &cfg).unwrap();
+    assert_eq!(prst.iters, 2, "revived cluster must serve apps too");
+}
